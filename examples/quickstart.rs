@@ -1,0 +1,72 @@
+//! Quickstart: compress one layer, verify losslessness, print stats.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+use f2f::pipeline::{CompressionConfig, Compressor};
+use f2f::pruning::PruneMethod;
+use f2f::sparse::DecodedLayer;
+
+fn main() {
+    // 1. A layer to compress: synthetic 64×512 Gaussian weights, INT8.
+    let spec = LayerSpec { name: "demo/fc".into(), rows: 64, cols: 512 };
+    let layer = SyntheticLayer::generate(&spec, WeightGen::default(), 42);
+    let (q, scale) = quantize_i8(&layer.weights);
+
+    // 2. Configure the paper's flagship scheme: N_in = 8, S = 0.9
+    //    (→ N_out = 80), N_s = 2 sequential decoding.
+    let cfg = CompressionConfig {
+        sparsity: 0.9,
+        n_s: 2,
+        method: PruneMethod::Magnitude,
+        beam: Some(16), // beam-pruned DP; drop for exact encoding
+        ..Default::default()
+    };
+    println!("decoder spec: {:?}", cfg.decoder_spec());
+
+    // 3. Compress.
+    let compressor = Compressor::new(cfg);
+    let t = std::time::Instant::now();
+    let (compressed, report) =
+        compressor.compress_i8("demo/fc", 64, 512, &q, scale);
+    println!(
+        "compressed in {:?}: E = {:.2}%  memory reduction = {:.2}% (max = S = 90%)",
+        t.elapsed(),
+        report.efficiency,
+        report.memory_reduction,
+    );
+
+    // 4. Decode and verify losslessness on every unpruned weight.
+    let decoded = DecodedLayer::from_compressed(&compressed);
+    let mut checked = 0;
+    for i in 0..q.len() {
+        if compressed.mask.get(i) {
+            assert_eq!(
+                decoded.weights[i],
+                q[i] as f32 * scale,
+                "weight {i} corrupted!"
+            );
+            checked += 1;
+        }
+    }
+    println!("lossless: {checked} unpruned weights bit-exact after decode");
+
+    // 5. Algorithm 2: serve a mat-vec from the compressed form.
+    let x: Vec<f32> = (0..512).map(|i| (i as f32 * 0.01).sin()).collect();
+    let y = f2f::sparse::decode_gemv(&compressed, &x);
+    println!("y[0..4] = {:?}", &y[..4]);
+
+    // 6. Appendix G hardware cost of the decoder this layer ships with.
+    let dec = f2f::decoder::SequentialDecoder::random(
+        compressed.spec,
+        compressed.m_seed,
+    );
+    let hw = dec.hardware_cost();
+    println!(
+        "decoder hardware: {} XOR gates ({} transistors), latency {} cycles, {} bits/cycle",
+        hw.xor_gates, hw.transistors, hw.latency_cycles,
+        hw.throughput_bits_per_cycle
+    );
+}

@@ -1,0 +1,116 @@
+"""AOT lowering: JAX model → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts (default serving config — a 256×512 signed-INT8 layer at
+S = 0.9, N_in = 8 → N_out = 80, N_s = 2):
+
+  artifacts/decode_matvec_b{1,8,32}.hlo.txt   one per batch size
+  artifacts/decode_weights.hlo.txt            decode-only graph
+  artifacts/manifest.txt                      shapes for the Rust side
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import decode_matvec, decode_weights
+
+# Default serving geometry — keep in sync with rust examples
+# (examples/serve_compressed.rs reads manifest.txt).
+ROWS, COLS = 256, 512
+N_IN, N_OUT, N_S = 8, 80, 2
+N_PLANES = 8
+BATCHES = (1, 8, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shapes(batch: int):
+    n = ROWS * COLS
+    l = -(-n // N_OUT)  # ceil
+    k = (N_S + 1) * N_IN
+    return {
+        "encoded_bits": (N_PLANES, l + N_S, N_IN),
+        "m_t": (k, N_OUT),
+        "corr": (N_PLANES, l * N_OUT),
+        "invert": (N_PLANES,),
+        "mask": (n,),
+        "x": (batch, COLS),
+        "scale": (),
+    }
+
+
+def lower_matvec(batch: int) -> str:
+    sh = shapes(batch)
+    f = functools.partial(
+        decode_matvec, n_s=N_S, rows=ROWS, cols=COLS
+    )
+    specs = [
+        jax.ShapeDtypeStruct(sh[name], jnp.float32)
+        for name in [
+            "encoded_bits", "m_t", "corr", "invert", "mask", "x", "scale",
+        ]
+    ]
+    return to_hlo_text(jax.jit(f).lower(*specs))
+
+
+def lower_weights() -> str:
+    sh = shapes(1)
+    f = functools.partial(
+        decode_weights, n_s=N_S, rows=ROWS, cols=COLS
+    )
+    specs = [
+        jax.ShapeDtypeStruct(sh[name], jnp.float32)
+        for name in ["encoded_bits", "m_t", "corr", "invert", "mask", "scale"]
+    ]
+    return to_hlo_text(jax.jit(f).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = [
+        f"rows={ROWS}",
+        f"cols={COLS}",
+        f"n_in={N_IN}",
+        f"n_out={N_OUT}",
+        f"n_s={N_S}",
+        f"n_planes={N_PLANES}",
+        f"batches={','.join(str(b) for b in BATCHES)}",
+    ]
+    for b in BATCHES:
+        text = lower_matvec(b)
+        path = os.path.join(args.out, f"decode_matvec_b{b}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    text = lower_weights()
+    path = os.path.join(args.out, "decode_weights.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+    print("wrote manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

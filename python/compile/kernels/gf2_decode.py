@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: fused GF(2) decode + correct + invert + accumulate.
+
+The hot spot of Algorithm 2 is reconstructing weight bits from encoded
+vectors: for every plane, ``bits = (windows @ M⊕ᵀ) mod 2``. We fuse the
+8 INT8 bit-planes into one kernel that also applies the lossless
+correction stream (XOR), the inverting flags (XOR), and the
+two's-complement accumulation — one kernel invocation turns encoded
+streams into dequantized (pre-mask) weight values.
+
+XOR on {0,1} floats is ``(a + b) mod 2``, exact in f32.
+
+TPU mapping (DESIGN.md §3): the matmul is ``[TL, K] @ [K, n_out]`` with
+``K ≤ 24``, ``n_out ≤ 96`` — one MXU tile; we tile the long ``l``
+dimension into VMEM blocks of ``block_l`` rows via BlockSpec, the
+analogue of the paper's "stream blocks through a fixed XOR array". The
+grid is 1-D over ``l`` tiles; planes ride in a leading block dimension.
+``interpret=True`` is mandatory on CPU (real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile over the block-stream dimension. 256 rows × (24 in + 2·96 out)
+# per plane in f32 ≈ 1.6 MB total ≪ 16 MB VMEM; double-bufferable.
+DEFAULT_BLOCK_L = 256
+
+
+def _decode_acc_kernel(
+    win_ref, m_ref, corr_ref, inv_ref, out_ref, *, n_planes: int
+):
+    """One tile: decode all planes, fix errors, accumulate the byte.
+
+    win_ref:  [n_planes, TL, K]     decoder input windows per plane
+    m_ref:    [K, n_out]            M⊕ transpose (shared by planes)
+    corr_ref: [n_planes, TL, n_out] correction bits (1 = flip)
+    inv_ref:  [n_planes, 1]         inverting flags
+    out_ref:  [TL, n_out]           accumulated signed byte value
+    """
+    m = m_ref[...]
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.float32)
+    for k in range(n_planes):
+        raw = jnp.mod(win_ref[k] @ m, 2.0)
+        fixed = jnp.mod(raw + corr_ref[k] + inv_ref[k, 0], 2.0)
+        weight = -128.0 if k == 0 else 2.0 ** (7 - k)
+        acc = acc + fixed * weight
+    out_ref[...] = acc
+
+
+def gf2_decode_planes(
+    windows, m_t, corr, invert, block_l: int = DEFAULT_BLOCK_L
+):
+    """Decode 8 planes losslessly and accumulate to signed byte values.
+
+    windows: [8, l, K] float 0/1 — decoder inputs per plane
+    m_t:     [K, n_out] float 0/1
+    corr:    [8, l, n_out] float 0/1 — correction bits per plane
+    invert:  [8] float 0/1 — per-plane inverting flags
+    Returns  [l, n_out] float — signed two's-complement value of each
+             decoded byte position (−128 … 127), before mask/scale.
+    """
+    n_planes, l, k_dim = windows.shape
+    n_out = m_t.shape[1]
+    assert m_t.shape[0] == k_dim
+    assert corr.shape == (n_planes, l, n_out)
+    block_l = min(block_l, l)
+    grid = (pl.cdiv(l, block_l),)
+
+    return pl.pallas_call(
+        functools.partial(_decode_acc_kernel, n_planes=n_planes),
+        out_shape=jax.ShapeDtypeStruct((l, n_out), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_planes, block_l, k_dim), lambda i: (0, i, 0)),
+            pl.BlockSpec((k_dim, n_out), lambda i: (0, 0)),
+            pl.BlockSpec((n_planes, block_l, n_out), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_planes, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_l, n_out), lambda i: (i, 0)),
+        interpret=True,  # CPU correctness path; Mosaic on real TPUs.
+    )(windows, m_t, corr, invert.reshape(n_planes, 1))
+
+
+def gf2_decode_single(windows, m_t, block_l: int = DEFAULT_BLOCK_L):
+    """Single-plane GF(2) decode: ``(windows @ m_t) mod 2``.
+
+    windows: [l, K]; returns [l, n_out] float 0/1. Used by the kernel
+    unit tests and by FP32 flows that need raw plane bits.
+    """
+    l, k_dim = windows.shape
+    n_out = m_t.shape[1]
+    block_l = min(block_l, l)
+
+    def kernel(win_ref, m_ref, out_ref):
+        out_ref[...] = jnp.mod(win_ref[...] @ m_ref[...], 2.0)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((l, n_out), jnp.float32),
+        grid=(pl.cdiv(l, block_l),),
+        in_specs=[
+            pl.BlockSpec((block_l, k_dim), lambda i: (i, 0)),
+            pl.BlockSpec((k_dim, n_out), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_l, n_out), lambda i: (i, 0)),
+        interpret=True,
+    )(windows, m_t)

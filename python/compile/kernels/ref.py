@@ -1,0 +1,78 @@
+"""Pure-jnp reference (oracle) for the GF(2) sequential decode.
+
+This is the ground truth the Pallas kernel (`gf2_decode.py`) and the Rust
+decoder are validated against. Everything is float 0/1 arithmetic: a
+GF(2) mat-vec is an ordinary matmul followed by `mod 2`, which is exact
+in f32 for the paper's sizes (row sums ≤ (N_s+1)·N_in ≤ 24 ≪ 2^24).
+"""
+
+import jax.numpy as jnp
+
+
+def sliding_windows(bits, n_s: int, l: int):
+    """Build the decoder input windows from an unpacked bit stream.
+
+    bits: [..., l + n_s, n_in] float 0/1 — encoded vectors, stream index
+          ascending in time; the first ``n_s`` entries are the shift
+          register preload (zeros when produced by the Rust encoder).
+    Returns [..., l, (n_s+1)·n_in] where window ``t`` is the concat
+    ``(w_t, w_{t-1}, …, w_{t-n_s})`` — slot 0 (current input) first,
+    matching the column layout of the Rust ``M⊕``.
+    """
+    slots = [bits[..., n_s - s : n_s - s + l, :] for s in range(n_s + 1)]
+    return jnp.concatenate(slots, axis=-1)
+
+
+def gf2_decode_ref(windows, m_t):
+    """GF(2) decode: ``(windows @ m_t) mod 2``.
+
+    windows: [..., l, K] float 0/1 with K = (n_s+1)·n_in
+    m_t:     [K, n_out] float 0/1 — transpose of the Rust row-major M⊕
+             (``m_t[j, i] = M[i][j]``).
+    Returns [..., l, n_out] float 0/1.
+    """
+    return jnp.mod(windows @ m_t, 2.0)
+
+
+def decode_plane_ref(bits, m_t, n_s: int, n_bits: int):
+    """Decode one plane end-to-end: windows → GF(2) matmul → flat bits.
+
+    bits: [l + n_s, n_in]; returns [n_bits] (tail padding dropped).
+    """
+    l = bits.shape[0] - n_s
+    out = gf2_decode_ref(sliding_windows(bits, n_s, l), m_t)
+    return out.reshape(-1)[:n_bits]
+
+
+def decode_matvec_ref(
+    encoded_bits, m_t, corr, invert, mask, x, scale, n_s: int
+):
+    """Full INT8 decode + masked matvec — the L2 model's oracle.
+
+    encoded_bits: [8, l + n_s, n_in] — one stream per bit-plane, MSB
+                  (sign) plane first.
+    m_t:          [K, n_out]
+    corr:         [8, n]   correction bits to XOR into decoded planes
+    invert:       [8]      per-plane inverting flags (0/1)
+    mask:         [n]      1 = unpruned
+    x:            [batch, cols]
+    scale:        []       INT8 dequantization scale
+    Returns [batch, rows] with rows·cols = n.
+    """
+    n = mask.shape[0]
+    batch, cols = x.shape
+    rows = n // cols
+    l = encoded_bits.shape[1] - n_s
+
+    planes = gf2_decode_ref(
+        sliding_windows(encoded_bits, n_s, l), m_t
+    ).reshape(8, -1)[:, :n]
+    # Lossless correction then optional un-invert: XOR as (a + b) mod 2.
+    planes = jnp.mod(planes + corr, 2.0)
+    planes = jnp.mod(planes + invert[:, None], 2.0)
+    # Two's complement: w = −128·b0 + Σ_{k≥1} 2^(7−k)·b_k.
+    weights_q = -128.0 * planes[0]
+    for k in range(1, 8):
+        weights_q = weights_q + planes[k] * (2.0 ** (7 - k))
+    w = (weights_q * scale * mask).reshape(rows, cols)
+    return x @ w.T

@@ -1,0 +1,68 @@
+"""L2 JAX model: fixed-to-fixed decode + masked matvec (Algorithm 2).
+
+``decode_matvec`` reconstructs a signed-INT8 layer from its encoded
+bit-plane streams through the Pallas kernel (`kernels.gf2_decode`) and
+multiplies the (masked, dequantized) weights with a batch of activation
+vectors. Lowered once by ``aot.py`` to HLO text per batch size; the Rust
+runtime executes the artifacts at request time — Python never touches
+the request path.
+
+Input layout (all f32; bit tensors hold 0.0/1.0):
+  encoded_bits [8, l+n_s, n_in] — per-plane encoded streams, sign plane
+                                   first, first n_s entries = register
+                                   preload
+  m_t          [K, n_out]        — M⊕ transpose, K = (n_s+1)·n_in
+  corr         [8, l·n_out]      — correction bits at decoded positions
+                                   (tail padding zeros)
+  invert       [8]               — per-plane inverting flags
+  mask         [n]               — 1 = unpruned (n = rows·cols)
+  x            [batch, cols]     — activations
+  scale        []                — INT8 dequantization scale
+Output:
+  y            [batch, rows]
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.gf2_decode import gf2_decode_planes
+from compile.kernels.ref import sliding_windows
+
+
+def decode_matvec(
+    encoded_bits,
+    m_t,
+    corr,
+    invert,
+    mask,
+    x,
+    scale,
+    *,
+    n_s: int,
+    rows: int,
+    cols: int,
+):
+    """Decode an INT8 layer and compute ``y = x · Wᵀ`` (Algorithm 2)."""
+    n = rows * cols
+    n_planes, stream_len, _ = encoded_bits.shape
+    l = stream_len - n_s
+    n_out = m_t.shape[1]
+
+    windows = sliding_windows(encoded_bits, n_s, l)
+    corr3 = corr.reshape(n_planes, l, n_out)
+    signed = gf2_decode_planes(windows, m_t, corr3, invert)
+    w = (signed.reshape(-1)[:n] * scale * mask).reshape(rows, cols)
+    return (x @ w.T,)
+
+
+def decode_weights(
+    encoded_bits, m_t, corr, invert, mask, scale, *, n_s, rows, cols
+):
+    """Decode-only variant (returns the dense weight matrix)."""
+    n = rows * cols
+    n_planes, stream_len, _ = encoded_bits.shape
+    l = stream_len - n_s
+    n_out = m_t.shape[1]
+    windows = sliding_windows(encoded_bits, n_s, l)
+    corr3 = corr.reshape(n_planes, l, n_out)
+    signed = gf2_decode_planes(windows, m_t, corr3, invert)
+    return ((signed.reshape(-1)[:n] * scale * mask).reshape(rows, cols),)

@@ -1,0 +1,45 @@
+"""AOT lowering sanity: HLO text generation + manifest consistency.
+
+These run the lowering in-process (no artifact files needed) and verify
+the HLO text has the structure the Rust loader expects.
+"""
+
+import pytest
+
+from compile import aot
+
+
+def test_shapes_are_consistent():
+    sh = aot.shapes(8)
+    n = aot.ROWS * aot.COLS
+    l = -(-n // aot.N_OUT)
+    assert sh["encoded_bits"] == (8, l + aot.N_S, aot.N_IN)
+    assert sh["m_t"] == ((aot.N_S + 1) * aot.N_IN, aot.N_OUT)
+    assert sh["corr"] == (8, l * aot.N_OUT)
+    assert sh["x"] == (8, aot.COLS)
+
+
+@pytest.mark.parametrize("batch", [1, 8])
+def test_lower_matvec_produces_hlo_text(batch):
+    text = aot.lower_matvec(batch)
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # One f32 output of shape [batch, rows] inside a tuple.
+    assert f"f32[{batch},{aot.ROWS}]" in text
+
+
+def test_lower_weights_produces_hlo_text():
+    text = aot.lower_weights()
+    assert "HloModule" in text
+    assert f"f32[{aot.ROWS},{aot.COLS}]" in text
+
+
+def test_hlo_has_no_custom_calls():
+    """interpret=True Pallas must lower to plain HLO ops — a Mosaic
+    custom-call would be unloadable by the CPU PJRT plugin."""
+    text = aot.lower_matvec(1)
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

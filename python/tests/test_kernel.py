@@ -1,0 +1,175 @@
+"""L1 kernel correctness: Pallas `gf2_decode` vs the pure-jnp oracle and
+an independent integer-arithmetic implementation.
+
+Hypothesis sweeps shapes and seeds; `assert_allclose` with zero tolerance
+— GF(2) bits and small-integer accumulations are exact in f32.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.gf2_decode import (
+    gf2_decode_planes,
+    gf2_decode_single,
+)
+from compile.kernels.ref import (
+    decode_matvec_ref,
+    gf2_decode_ref,
+    sliding_windows,
+)
+
+
+def rand_bits(rng, shape):
+    return rng.integers(0, 2, size=shape).astype(np.float32)
+
+
+# ---------- independent integer oracle ----------
+
+
+def int_decode(windows, m_t):
+    """Bitwise-int GF(2) decode, no matmul: XOR of selected columns."""
+    l, k = windows.shape
+    n_out = m_t.shape[1]
+    out = np.zeros((l, n_out), dtype=np.int64)
+    wi = windows.astype(np.int64)
+    mi = m_t.astype(np.int64)
+    for t in range(l):
+        acc = np.zeros(n_out, dtype=np.int64)
+        for j in range(k):
+            if wi[t, j]:
+                acc ^= mi[j]
+        out[t] = acc
+    return out.astype(np.float32)
+
+
+# ---------- single-plane kernel ----------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.integers(1, 40),
+    k=st.integers(1, 24),
+    n_out=st.integers(1, 96),
+    seed=st.integers(0, 2**31),
+)
+def test_single_plane_kernel_matches_ref(l, k, n_out, seed):
+    rng = np.random.default_rng(seed)
+    win = rand_bits(rng, (l, k))
+    m_t = rand_bits(rng, (k, n_out))
+    got = np.asarray(gf2_decode_single(win, m_t, block_l=16))
+    want = np.asarray(gf2_decode_ref(win, m_t))
+    assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    l=st.integers(1, 16),
+    k=st.integers(1, 12),
+    n_out=st.integers(1, 32),
+    seed=st.integers(0, 2**31),
+)
+def test_ref_matches_integer_xor_oracle(l, k, n_out, seed):
+    rng = np.random.default_rng(seed)
+    win = rand_bits(rng, (l, k))
+    m_t = rand_bits(rng, (k, n_out))
+    want = int_decode(win, m_t)
+    got = np.asarray(gf2_decode_ref(win, m_t))
+    assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_kernel_tiling_boundary_cases():
+    """Exercise l not divisible by block_l (grid padding)."""
+    rng = np.random.default_rng(0)
+    for l in [1, 255, 256, 257, 300]:
+        win = rand_bits(rng, (l, 24))
+        m_t = rand_bits(rng, (24, 80))
+        got = np.asarray(gf2_decode_single(win, m_t))
+        want = np.asarray(gf2_decode_ref(win, m_t))
+        assert_allclose(got, want, rtol=0, atol=0)
+
+
+# ---------- fused planes kernel ----------
+
+
+def fused_oracle(windows, m_t, corr, invert):
+    """Numpy reimplementation of the fused kernel semantics."""
+    n_planes, l, _ = windows.shape
+    n_out = m_t.shape[1]
+    acc = np.zeros((l, n_out), dtype=np.float32)
+    for k in range(n_planes):
+        bits = int_decode(windows[k], m_t)
+        fixed = np.mod(bits + corr[k] + invert[k], 2.0)
+        weight = -128.0 if k == 0 else 2.0 ** (7 - k)
+        acc += fixed * weight
+    return acc
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    l=st.integers(1, 24),
+    k=st.integers(1, 24),
+    n_out=st.integers(1, 40),
+    seed=st.integers(0, 2**31),
+)
+def test_fused_planes_kernel(l, k, n_out, seed):
+    rng = np.random.default_rng(seed)
+    win = rand_bits(rng, (8, l, k))
+    m_t = rand_bits(rng, (k, n_out))
+    corr = rand_bits(rng, (8, l, n_out))
+    inv = rand_bits(rng, (8,))
+    got = np.asarray(gf2_decode_planes(win, m_t, corr, inv, block_l=8))
+    want = fused_oracle(win, m_t, corr, inv)
+    assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_fused_planes_value_range():
+    """Accumulated two's-complement bytes stay in [-128, 127]."""
+    rng = np.random.default_rng(1)
+    win = rand_bits(rng, (8, 32, 24))
+    m_t = rand_bits(rng, (24, 80))
+    corr = np.zeros((8, 32, 80), dtype=np.float32)
+    inv = np.zeros(8, dtype=np.float32)
+    out = np.asarray(gf2_decode_planes(win, m_t, corr, inv))
+    assert out.min() >= -128.0
+    assert out.max() <= 127.0
+    assert np.all(out == np.round(out))
+
+
+# ---------- sliding windows ----------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    l=st.integers(1, 20),
+    n_s=st.integers(0, 3),
+    n_in=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_sliding_windows_layout(l, n_s, n_in, seed):
+    rng = np.random.default_rng(seed)
+    bits = rand_bits(rng, (l + n_s, n_in))
+    win = np.asarray(sliding_windows(bits, n_s, l))
+    assert win.shape == (l, (n_s + 1) * n_in)
+    for t in range(l):
+        for s in range(n_s + 1):
+            # slot s of window t = stream entry (t + n_s - s)
+            seg = win[t, s * n_in : (s + 1) * n_in]
+            assert_allclose(seg, bits[t + n_s - s], rtol=0, atol=0)
+
+
+def test_sliding_windows_preload_zeros():
+    """With zero preload, early windows see zero history."""
+    l, n_s, n_in = 4, 2, 3
+    bits = np.ones((l + n_s, n_in), dtype=np.float32)
+    bits[:n_s] = 0.0
+    win = np.asarray(sliding_windows(bits, n_s, l))
+    # Window 0: slots 1, 2 come from preload → zero.
+    assert_allclose(win[0, n_in:], 0.0)
+    # Window 2+: all slots from real inputs → one.
+    assert_allclose(win[2], 1.0)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,156 @@
+"""L2 model correctness: `decode_matvec` (Pallas path) vs the oracle and
+vs directly-constructed ground-truth weights.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.ref import decode_matvec_ref
+from compile.model import decode_matvec, decode_weights
+
+
+def make_case(rng, rows, cols, n_in, n_out, n_s, batch):
+    n = rows * cols
+    l = -(-n // n_out)
+    k = (n_s + 1) * n_in
+    return {
+        "encoded_bits": rng.integers(0, 2, (8, l + n_s, n_in)).astype(
+            np.float32
+        ),
+        "m_t": rng.integers(0, 2, (k, n_out)).astype(np.float32),
+        "corr": rng.integers(0, 2, (8, l * n_out)).astype(np.float32),
+        "invert": rng.integers(0, 2, (8,)).astype(np.float32),
+        "mask": rng.integers(0, 2, (n,)).astype(np.float32),
+        "x": rng.normal(size=(batch, cols)).astype(np.float32),
+        "scale": np.float32(0.03),
+    }
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    rows=st.integers(2, 12),
+    cols=st.integers(2, 24),
+    n_out=st.integers(4, 40),
+    n_s=st.integers(0, 2),
+    batch=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_model_matches_ref(rows, cols, n_out, n_s, batch, seed):
+    rng = np.random.default_rng(seed)
+    n_in = 8
+    case = make_case(rng, rows, cols, n_in, n_out, n_s, batch)
+    n = rows * cols
+    l = -(-n // n_out)
+
+    (got,) = decode_matvec(
+        case["encoded_bits"],
+        case["m_t"],
+        case["corr"],
+        case["invert"],
+        case["mask"],
+        case["x"],
+        case["scale"],
+        n_s=n_s,
+        rows=rows,
+        cols=cols,
+    )
+    want = decode_matvec_ref(
+        case["encoded_bits"],
+        case["m_t"],
+        _corr_flat(case["corr"], n, l, n_out),
+        case["invert"],
+        case["mask"],
+        case["x"],
+        case["scale"],
+        n_s=n_s,
+    )
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def _corr_flat(corr, n, l, n_out):
+    """ref takes corr at flat positions [8, n]; model takes [8, l·n_out]."""
+    return corr.reshape(8, l * n_out)[:, :n]
+
+
+def test_decode_weights_reconstructs_known_bytes():
+    """Build streams whose decode is fully known: M⊕ = I-ish rows.
+
+    With n_s = 0 and m_t = identity (n_in = n_out = 8), the decoded
+    plane bits equal the encoded bits — so we can write arbitrary bytes
+    and check the two's-complement reconstruction against numpy int8.
+    """
+    rows, cols = 4, 16
+    n = rows * cols
+    n_in = n_out = 8
+    l = n // n_out
+    rng = np.random.default_rng(3)
+    target = rng.integers(-128, 128, size=n).astype(np.int8)
+
+    # Plane k bit of weight i = bit (7-k) of the byte (MSB-first planes).
+    bits = ((target.astype(np.uint8)[None, :] >> (7 - np.arange(8))[:, None]) & 1)
+    encoded = bits.reshape(8, l, n_out).astype(np.float32)
+    # identity m_t: window j → output j
+    m_t = np.eye(8, dtype=np.float32)
+
+    (w,) = decode_weights(
+        encoded,
+        m_t,
+        np.zeros((8, l * n_out), np.float32),
+        np.zeros(8, np.float32),
+        np.ones(n, np.float32),
+        np.float32(1.0),
+        n_s=0,
+        rows=rows,
+        cols=cols,
+    )
+    assert_allclose(
+        np.asarray(w).reshape(-1), target.astype(np.float32), rtol=0, atol=0
+    )
+
+
+def test_mask_zeroes_pruned_weights():
+    rng = np.random.default_rng(4)
+    rows, cols, n_out, n_s = 4, 8, 10, 1
+    case = make_case(rng, rows, cols, 8, n_out, n_s, 1)
+    case["mask"] = np.zeros(rows * cols, np.float32)
+    (w,) = decode_weights(
+        case["encoded_bits"],
+        case["m_t"],
+        case["corr"],
+        case["invert"],
+        case["mask"],
+        case["scale"],
+        n_s=n_s,
+        rows=rows,
+        cols=cols,
+    )
+    assert_allclose(np.asarray(w), 0.0)
+
+
+def test_model_is_jittable_and_stable():
+    """jit(decode_matvec) must lower and produce identical values."""
+    rng = np.random.default_rng(5)
+    rows, cols, n_out, n_s, batch = 8, 16, 20, 2, 3
+    case = make_case(rng, rows, cols, 8, n_out, n_s, batch)
+    f = functools.partial(decode_matvec, n_s=n_s, rows=rows, cols=cols)
+    args = [
+        case["encoded_bits"],
+        case["m_t"],
+        case["corr"],
+        case["invert"],
+        case["mask"],
+        case["x"],
+        case["scale"],
+    ]
+    (eager,) = f(*args)
+    (jitted,) = jax.jit(f)(*args)
+    assert_allclose(np.asarray(jitted), np.asarray(eager), rtol=1e-6, atol=1e-5)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

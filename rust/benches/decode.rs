@@ -1,0 +1,57 @@
+//! Decoder throughput: the online path. In hardware this is one cycle
+//! per block; in software the table decode should be memory-bound.
+//! Target (DESIGN.md §7): ≥ 1 Gbit/s reconstructed single-thread.
+
+use f2f::bench_util::{bench_with_result, black_box};
+use f2f::decoder::{DecoderSpec, SequentialDecoder};
+use f2f::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    println!("== decode benchmarks ==");
+    let budget = Duration::from_secs(2);
+    for (n_s, n_out) in [(0usize, 80usize), (1, 80), (2, 80), (2, 26)] {
+        let spec = DecoderSpec::new(8, n_out, n_s);
+        let dec = SequentialDecoder::random(spec, 1);
+        let l = 125_000; // 10 Mbit at N_out = 80
+        let mut rng = Rng::new(2);
+        let encoded: Vec<u32> = (0..l + n_s)
+            .map(|_| rng.below(256) as u32)
+            .collect();
+        let r = bench_with_result(
+            &format!("decode_stream ns{n_s} N_out={n_out} l={l}"),
+            1,
+            budget,
+            50,
+            || dec.decode_stream(black_box(&encoded)),
+        );
+        let bits = (l * n_out) as f64;
+        println!(
+            "  -> {:.2} Gbit/s reconstructed",
+            bits / r.mean.as_secs_f64() / 1e9
+        );
+    }
+
+    // decode straight into a flat bit-plane (includes packing).
+    {
+        let spec = DecoderSpec::new(8, 80, 2);
+        let dec = SequentialDecoder::random(spec, 1);
+        let n_bits = 1_000_000;
+        let l = spec.num_blocks(n_bits);
+        let mut rng = Rng::new(3);
+        let encoded: Vec<u32> = (0..l + 2)
+            .map(|_| rng.below(256) as u32)
+            .collect();
+        let r = bench_with_result(
+            "decode_stream_to_bits 1 Mbit",
+            1,
+            budget,
+            50,
+            || dec.decode_stream_to_bits(black_box(&encoded), n_bits),
+        );
+        println!(
+            "  -> {:.2} Gbit/s into packed plane",
+            n_bits as f64 / r.mean.as_secs_f64() / 1e9
+        );
+    }
+}

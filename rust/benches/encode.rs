@@ -1,0 +1,106 @@
+//! Encoder throughput: the offline cost the paper bounds at
+//! `O(l · 2^{N_in(N_s+1)})`. Reports blocks/s and bits/s per
+//! configuration, plus the beam speedup (EXPERIMENTS.md §Perf tracks
+//! these numbers across optimization iterations).
+
+use f2f::bench_util::{bench_with_result, black_box};
+use f2f::decoder::{DecoderSpec, SequentialDecoder};
+use f2f::encoder::{Encoder, SlicedPlane, ViterbiEncoder};
+use f2f::gf2::BitVecF2;
+use f2f::rng::Rng;
+use std::time::Duration;
+
+fn workload(bits: usize, s: f64, seed: u64) -> (BitVecF2, BitVecF2) {
+    let mut rng = Rng::new(seed);
+    (
+        BitVecF2::random(bits, 0.5, &mut rng),
+        BitVecF2::random(bits, 1.0 - s, &mut rng),
+    )
+}
+
+fn main() {
+    println!("== encode benchmarks (single core) ==");
+    let budget = Duration::from_secs(2);
+
+    // N_s = 0: exhaustive per-block search.
+    {
+        let spec = DecoderSpec::for_sparsity(8, 0.9, 0);
+        let (data, mask) = workload(80_000, 0.9, 1);
+        let plane = SlicedPlane::new(&data, &mask, spec.n_out);
+        let dec = SequentialDecoder::random(spec, 7);
+        let enc = ViterbiEncoder::new(dec);
+        let r = bench_with_result("viterbi ns0 S=0.9 80k bits", 1, budget, 50, || {
+            enc.encode(black_box(&plane))
+        });
+        println!(
+            "  -> {:.1} Mbit/s",
+            80_000.0 / r.mean.as_secs_f64() / 1e6
+        );
+    }
+
+    // N_s = 1.
+    {
+        let spec = DecoderSpec::for_sparsity(8, 0.9, 1);
+        let (data, mask) = workload(80_000, 0.9, 2);
+        let plane = SlicedPlane::new(&data, &mask, spec.n_out);
+        let enc = ViterbiEncoder::new(SequentialDecoder::random(spec, 7));
+        let r = bench_with_result("viterbi ns1 S=0.9 80k bits", 1, budget, 50, || {
+            enc.encode(black_box(&plane))
+        });
+        println!(
+            "  -> {:.1} Mbit/s",
+            80_000.0 / r.mean.as_secs_f64() / 1e6
+        );
+    }
+
+    // N_s = 2 exact vs beam — the §Perf headline.
+    for (label, beam, bits) in [
+        ("viterbi ns2 exact S=0.9", None, 24_000usize),
+        ("viterbi ns2 beam=16 S=0.9", Some(16u32), 24_000),
+        ("viterbi ns2 beam=8  S=0.9", Some(8), 24_000),
+        ("viterbi ns2 beam=4  S=0.9", Some(4), 24_000),
+    ] {
+        let spec = DecoderSpec::for_sparsity(8, 0.9, 2);
+        let (data, mask) = workload(bits, 0.9, 3);
+        let plane = SlicedPlane::new(&data, &mask, spec.n_out);
+        let dec = SequentialDecoder::random(spec, 7);
+        let enc = match beam {
+            None => ViterbiEncoder::new(dec),
+            Some(b) => ViterbiEncoder::with_beam(dec, b),
+        };
+        let r = bench_with_result(
+            &format!("{label} {bits} bits"),
+            0,
+            Duration::from_secs(3),
+            10,
+            || enc.encode(black_box(&plane)),
+        );
+        let blocks = plane.num_blocks() as f64;
+        println!(
+            "  -> {:.0} blocks/s, {:.2} Mbit/s, E = {:.2}%",
+            blocks / r.mean.as_secs_f64(),
+            bits as f64 / r.mean.as_secs_f64() / 1e6,
+            enc.encode(&plane).efficiency(),
+        );
+    }
+
+    // Exact DP per-candidate rate (the popcount-bound inner loop).
+    {
+        let spec = DecoderSpec::for_sparsity(8, 0.9, 2);
+        let (data, mask) = workload(8_000, 0.9, 4);
+        let plane = SlicedPlane::new(&data, &mask, spec.n_out);
+        let enc = ViterbiEncoder::new(SequentialDecoder::random(spec, 7));
+        let r = bench_with_result(
+            "viterbi ns2 exact 8k bits (candidate rate)",
+            0,
+            Duration::from_secs(3),
+            10,
+            || enc.encode(black_box(&plane)),
+        );
+        let cands = plane.num_blocks() as f64 * (1u64 << 24) as f64;
+        println!(
+            "  -> {:.2}e9 candidate evals/s",
+            cands / r.mean.as_secs_f64() / 1e9
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! Whole-pipeline benchmarks: compress + decompress a layer end to end,
+//! and the container codec.
+
+use f2f::bench_util::{bench_with_result, black_box};
+use f2f::container::{read_container, write_container, Container};
+use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+use f2f::pipeline::{CompressionConfig, Compressor};
+use f2f::sparse::DecodedLayer;
+use std::time::Duration;
+
+fn main() {
+    println!("== pipeline benchmarks ==");
+    let budget = Duration::from_secs(3);
+    let spec = LayerSpec { name: "p".into(), rows: 32, cols: 512 };
+    let layer = SyntheticLayer::generate(&spec, WeightGen::default(), 1);
+    let (q, scale) = quantize_i8(&layer.weights);
+
+    for (label, n_s, beam) in [
+        ("compress i8 32x512 ns0", 0usize, None),
+        ("compress i8 32x512 ns1", 1, None),
+        ("compress i8 32x512 ns2 beam8", 2, Some(8u32)),
+    ] {
+        let cfg = CompressionConfig {
+            sparsity: 0.9,
+            n_s,
+            beam,
+            ..Default::default()
+        };
+        let c = Compressor::new(cfg);
+        let r = bench_with_result(label, 0, budget, 20, || {
+            c.compress_i8("p", 32, 512, black_box(&q), scale)
+        });
+        let bits = (32 * 512 * 8) as f64;
+        println!(
+            "  -> {:.2} Mbit/s compressed",
+            bits / r.mean.as_secs_f64() / 1e6
+        );
+    }
+
+    // Decompression (the serving-startup cost).
+    let cfg = CompressionConfig {
+        sparsity: 0.9,
+        n_s: 2,
+        beam: Some(8),
+        ..Default::default()
+    };
+    let (cl, _) =
+        Compressor::new(cfg).compress_i8("p", 32, 512, &q, scale);
+    let r = bench_with_result("decompress i8 32x512", 1, budget, 200, || {
+        DecodedLayer::from_compressed(black_box(&cl))
+    });
+    println!(
+        "  -> {:.2} Mbit/s decompressed",
+        (32.0 * 512.0 * 8.0) / r.mean.as_secs_f64() / 1e6
+    );
+
+    // Container codec.
+    let container = Container { layers: vec![cl] };
+    let bytes = write_container(&container);
+    bench_with_result("container write", 1, budget, 2000, || {
+        write_container(black_box(&container))
+    });
+    bench_with_result("container read", 1, budget, 2000, || {
+        read_container(black_box(&bytes)).unwrap()
+    });
+    println!("  container size: {} bytes", bytes.len());
+}

@@ -1,0 +1,55 @@
+//! Serving benchmarks: coordinator throughput/latency vs batch size —
+//! the L3 perf target (batching ≥ 4× the batch=1 throughput).
+
+use f2f::coordinator::{InferenceServer, NativeBackend, ServerConfig};
+use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+use f2f::pipeline::{CompressionConfig, Compressor};
+use f2f::rng::Rng;
+use std::time::{Duration, Instant};
+
+fn main() {
+    println!("== serving benchmarks ==");
+    let spec = LayerSpec { name: "s".into(), rows: 256, cols: 512 };
+    let layer = SyntheticLayer::generate(&spec, WeightGen::default(), 1);
+    let (q, scale) = quantize_i8(&layer.weights);
+    let (cl, _) = Compressor::new(CompressionConfig {
+        sparsity: 0.9,
+        n_s: 1,
+        ..Default::default()
+    })
+    .compress_i8("s", 256, 512, &q, scale);
+
+    let requests = 4000;
+    for max_batch in [1usize, 4, 16, 64] {
+        let cl2 = cl.clone();
+        let server = InferenceServer::start(
+            ServerConfig {
+                max_batch,
+                batch_timeout: Duration::from_micros(500),
+                queue_capacity: 1 << 14,
+            },
+            move || Box::new(NativeBackend::new(&cl2)),
+        );
+        let mut rng = Rng::new(2);
+        let xs: Vec<Vec<f32>> = (0..64)
+            .map(|_| (0..512).map(|_| rng.next_f32() - 0.5).collect())
+            .collect();
+        let t0 = Instant::now();
+        let pending: Vec<_> = (0..requests)
+            .map(|i| server.infer_async(xs[i % 64].clone()))
+            .collect();
+        for p in pending {
+            p.recv().unwrap().unwrap();
+        }
+        let dt = t0.elapsed();
+        let m = server.metrics();
+        println!(
+            "max_batch={max_batch:<3} {:>8.0} req/s  mean_batch={:<5.1} p50={:?} p99={:?}",
+            requests as f64 / dt.as_secs_f64(),
+            m.mean_batch_size(),
+            m.p50,
+            m.p99,
+        );
+        server.shutdown();
+    }
+}

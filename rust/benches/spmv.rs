@@ -1,0 +1,78 @@
+//! Figure S.10's timing study as a bench target: CSR SpMM vs dense GEMM
+//! vs the fixed-to-fixed decode-then-GEMV path.
+
+use f2f::bench_util::{bench_with_result, black_box};
+use f2f::rng::Rng;
+use f2f::sparse::{gemm, CsrMatrix, DenseMatrix};
+use std::time::Duration;
+
+fn main() {
+    println!("== spmv/spmm benchmarks (Fig. S.10 shape) ==");
+    let n = 1024;
+    let budget = Duration::from_secs(2);
+    let mut rng = Rng::new(1);
+    for &s in &[0.7f64, 0.9, 0.95] {
+        let a = DenseMatrix::random_sparse(n, n, s, &mut rng);
+        let csr = CsrMatrix::from_dense(&a);
+        for &k in &[1usize, 8, 32] {
+            let b = DenseMatrix::random_sparse(n, k, 0.0, &mut rng);
+            let rd = bench_with_result(
+                &format!("dense gemm {n}x{n} k={k} (S={s})"),
+                1,
+                budget,
+                20,
+                || gemm(black_box(&a), black_box(&b)),
+            );
+            let rs = bench_with_result(
+                &format!("csr   spmm {n}x{n} k={k} (S={s})"),
+                1,
+                budget,
+                20,
+                || csr.spmm(black_box(&b)),
+            );
+            println!(
+                "  -> csr/dense time ratio = {:.3} (<1 means CSR wins)",
+                rs.mean.as_secs_f64() / rd.mean.as_secs_f64()
+            );
+        }
+    }
+
+    // Algorithm 2 amortization: decode once, then GEMV many times.
+    {
+        use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+        use f2f::pipeline::{CompressionConfig, Compressor};
+        use f2f::sparse::DecodedLayer;
+        let spec =
+            LayerSpec { name: "b".into(), rows: 256, cols: 1024 };
+        let layer =
+            SyntheticLayer::generate(&spec, WeightGen::default(), 2);
+        let (q, scale) = quantize_i8(&layer.weights);
+        let (cl, _) = Compressor::new(CompressionConfig {
+            sparsity: 0.9,
+            n_s: 1,
+            ..Default::default()
+        })
+        .compress_i8("b", 256, 1024, &q, scale);
+
+        let rd = bench_with_result(
+            "decode 256x1024 INT8 layer (one-time)",
+            1,
+            budget,
+            20,
+            || DecodedLayer::from_compressed(black_box(&cl)),
+        );
+        let decoded = DecodedLayer::from_compressed(&cl);
+        let x: Vec<f32> = (0..1024).map(|i| (i as f32).sin()).collect();
+        let rg = bench_with_result(
+            "gemv on decoded layer (per request)",
+            10,
+            budget,
+            10_000,
+            || decoded.gemv(black_box(&x)),
+        );
+        println!(
+            "  -> decode amortizes over {:.0} requests",
+            rd.mean.as_secs_f64() / rg.mean.as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,191 @@
+//! Memory-bandwidth utilization model — Figure 1 and Appendix A.
+//!
+//! DRAM serves fixed-size bursts. A format whose records have *variable*
+//! length (CSR rows after fine-grained pruning) leaves part of many
+//! bursts unused and adds data-dependent (pointer-chasing) transactions;
+//! a fixed-to-fixed format reads whole bursts of payload back-to-back.
+//!
+//! We model a memory system with burst size `B` bytes and count, for a
+//! workload of per-row records, (a) bytes transferred vs bytes useful and
+//! (b) the coefficient of variation of record length (Eq. 3–5), which
+//! drives the gap. The simulator reproduces Figure 1(a): fixed-to-fixed
+//! sustains flat utilization while CSR utilization decays as sparsity
+//! (and with it CV) grows.
+
+use crate::pruning::MaskStats;
+
+/// Burst-granular memory transaction model.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModel {
+    /// Burst (minimum transaction) size in bytes.
+    pub burst_bytes: usize,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        // 64B: one DDR4 BL8 access / one cache line.
+        MemoryModel { burst_bytes: 64 }
+    }
+}
+
+/// Result of simulating one access pattern.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BandwidthReport {
+    /// Useful payload bytes the consumer needed.
+    pub useful_bytes: usize,
+    /// Bytes actually transferred (burst-aligned).
+    pub transferred_bytes: usize,
+    /// Number of burst transactions issued.
+    pub transactions: usize,
+}
+
+impl BandwidthReport {
+    /// Effective bandwidth utilization `useful / transferred` ∈ (0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.transferred_bytes == 0 {
+            1.0
+        } else {
+            self.useful_bytes as f64 / self.transferred_bytes as f64
+        }
+    }
+}
+
+impl MemoryModel {
+    /// Fixed-to-variable access: each record is fetched individually
+    /// (each compute unit follows its own row pointer, Figure 1(b)), so
+    /// every record pays burst rounding.
+    pub fn variable_records(&self, record_bytes: &[usize]) -> BandwidthReport {
+        let mut useful = 0usize;
+        let mut transferred = 0usize;
+        let mut transactions = 0usize;
+        for &r in record_bytes {
+            useful += r;
+            let bursts = r.div_ceil(self.burst_bytes).max(1);
+            transferred += bursts * self.burst_bytes;
+            transactions += bursts;
+        }
+        BandwidthReport {
+            useful_bytes: useful,
+            transferred_bytes: transferred,
+            transactions,
+        }
+    }
+
+    /// Fixed-to-fixed access: one contiguous stream of equal-size
+    /// records; only the final burst is padded.
+    pub fn fixed_stream(&self, total_bytes: usize) -> BandwidthReport {
+        let bursts = total_bytes.div_ceil(self.burst_bytes);
+        BandwidthReport {
+            useful_bytes: total_bytes,
+            transferred_bytes: bursts * self.burst_bytes,
+            transactions: bursts,
+        }
+    }
+
+    /// Compare CSR-style vs fixed-to-fixed for a pruned layer:
+    /// `row_nnz[i]` unpruned weights per row, `bytes_per_weight` for the
+    /// value payload (CSR also pays a 4-byte index per nonzero), and a
+    /// fixed-to-fixed rate of `rate = N_in/N_out` compressed bits per bit.
+    pub fn compare(
+        &self,
+        row_nnz: &[usize],
+        n_weights: usize,
+        bytes_per_weight: usize,
+        f2f_rate: f64,
+    ) -> (BandwidthReport, BandwidthReport) {
+        let records: Vec<usize> = row_nnz
+            .iter()
+            .map(|&n| n * (bytes_per_weight + 4))
+            .collect();
+        let csr = self.variable_records(&records);
+        let f2f_bytes =
+            (n_weights as f64 * bytes_per_weight as f64 * f2f_rate).ceil()
+                as usize;
+        let f2f = self.fixed_stream(f2f_bytes);
+        (csr, f2f)
+    }
+}
+
+/// Eq. 5 as a standalone helper (re-exported for the Fig. 1 harness).
+pub fn csr_coeff_var(n_w: usize, s: f64) -> f64 {
+    MaskStats::binomial_cv(n_w, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn fixed_stream_is_nearly_perfect() {
+        let m = MemoryModel::default();
+        let r = m.fixed_stream(64 * 1000 + 3);
+        assert_eq!(r.transactions, 1001);
+        assert!(r.utilization() > 0.999);
+    }
+
+    #[test]
+    fn variable_records_waste_grows_with_fragmentation() {
+        let m = MemoryModel::default();
+        // 1000 records of 65 bytes: each needs 2 bursts → ~51% utilization.
+        let r = m.variable_records(&vec![65; 1000]);
+        assert_eq!(r.transactions, 2000);
+        assert!((r.utilization() - 65.0 / 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn short_records_are_the_worst_case() {
+        let m = MemoryModel::default();
+        // 8-byte records in 64B bursts → 12.5%.
+        let r = m.variable_records(&vec![8; 100]);
+        assert!((r.utilization() - 0.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f2f_utilization_is_flat_across_sparsity() {
+        let m = MemoryModel::default();
+        for &s in &[0.5f64, 0.7, 0.9, 0.95] {
+            let f2f = m.fixed_stream(
+                (2048.0 * 2048.0 * 4.0 * (1.0 - s)) as usize,
+            );
+            assert!(f2f.utilization() > 0.999, "S={s}");
+        }
+    }
+
+    #[test]
+    fn csr_utilization_decays_with_sparsity() {
+        // Figure 1(a): CSR utilization decays as S grows (records shrink
+        // toward sub-burst sizes).
+        let m = MemoryModel::default();
+        let mut rng = Rng::new(1);
+        let rows = 2048usize;
+        let cols = 256usize; // short rows: the regime Figure 1 depicts
+        let mut utils = Vec::new();
+        for &s in &[0.5f64, 0.8, 0.95, 0.99] {
+            let row_nnz: Vec<usize> = (0..rows)
+                .map(|_| {
+                    (0..cols).filter(|_| rng.bernoulli(1.0 - s)).count()
+                })
+                .collect();
+            let (csr, _) = m.compare(&row_nnz, rows * cols, 4, 1.0 - s);
+            utils.push(csr.utilization());
+        }
+        for w in utils.windows(2) {
+            assert!(
+                w[1] <= w[0] + 1e-9,
+                "utilization should decay: {utils:?}"
+            );
+        }
+        assert!(utils.last().unwrap() < &0.7);
+    }
+
+    #[test]
+    fn eq5_helper_matches_maskstats() {
+        assert!(
+            (csr_coeff_var(2048, 0.9)
+                - (0.9f64 / (2048.0 * 0.1)).sqrt())
+            .abs()
+                < 1e-12
+        );
+    }
+}

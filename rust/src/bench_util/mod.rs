@@ -1,0 +1,122 @@
+//! Minimal timing harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use [`bench`] / [`bench_with_result`]: warm up,
+//! run timed iterations until a budget is reached, report mean / p50 /
+//! p95 / min. Deterministic workloads + wall-clock medians keep results
+//! stable enough for before/after comparisons in EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+/// Summary of one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    /// Throughput in items/sec given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured iterations, then measured
+/// iterations until `budget` elapses (min 5, max `max_iters`).
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    budget: Duration,
+    max_iters: usize,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < 5 || start.elapsed() < budget)
+        && samples.len() < max_iters
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    let res = summarize(&mut samples);
+    println!(
+        "{name:<48} iters={:<4} mean={:>12?} p50={:>12?} p95={:>12?} min={:>12?}",
+        res.iters, res.mean, res.p50, res.p95, res.min
+    );
+    res
+}
+
+/// Like [`bench`] but the closure returns a value that is black-boxed to
+/// keep the optimizer honest.
+pub fn bench_with_result<T, F: FnMut() -> T>(
+    name: &str,
+    warmup: usize,
+    budget: Duration,
+    max_iters: usize,
+    mut f: F,
+) -> BenchResult {
+    bench(name, warmup, budget, max_iters, || {
+        black_box(f());
+    })
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+fn summarize(samples: &mut Vec<Duration>) -> BenchResult {
+    samples.sort_unstable();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    BenchResult {
+        iters: n,
+        mean,
+        p50: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        min: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_minimum_iterations() {
+        let mut count = 0;
+        let r = bench(
+            "noop",
+            1,
+            Duration::from_millis(1),
+            100,
+            || {
+                count += 1;
+            },
+        );
+        assert!(r.iters >= 5);
+        assert_eq!(count, r.iters + 1); // + warmup
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let r = bench("capped", 0, Duration::from_secs(10), 7, || {});
+        assert_eq!(r.iters, 7);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let r = bench("t", 0, Duration::from_millis(1), 10, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.throughput(1000.0) > 0.0);
+    }
+}

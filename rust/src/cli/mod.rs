@@ -1,0 +1,106 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, and positional arguments, with typed
+//! accessors and defaults. Enough for the `f2f` binary's subcommands.
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments: positionals + `--key [value]` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                match iter.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = iter.next().unwrap();
+                        out.options.insert(key.to_string(), v);
+                    }
+                    _ => out.flags.push(key.to_string()),
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Boolean flag (`--csv`).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.options
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Required positional at index `i`.
+    pub fn pos(&self, i: usize) -> Result<&str> {
+        self.positional
+            .get(i)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing positional argument {i}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("repro table1 --bits 100000 --csv");
+        assert_eq!(a.pos(0).unwrap(), "repro");
+        assert_eq!(a.pos(1).unwrap(), "table1");
+        assert_eq!(a.get("bits", 0usize).unwrap(), 100_000);
+        assert!(a.flag("csv"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.get("seed", 42u64).unwrap(), 42);
+        assert_eq!(a.get_str("out", "art"), "art");
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse("x --bits abc");
+        assert!(a.get("bits", 0usize).is_err());
+    }
+
+    #[test]
+    fn missing_positional_is_error() {
+        let a = parse("only");
+        assert!(a.pos(1).is_err());
+    }
+}

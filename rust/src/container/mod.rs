@@ -1,0 +1,175 @@
+//! Compressed-model container: the on-disk/wire format.
+//!
+//! Stores, per layer: geometry, the decoder spec + `M⊕` seed (the matrix
+//! is re-derived, never stored), the pruning mask, and per bit-plane the
+//! encoded stream, invert flag and correction stream. All fixed-to-fixed
+//! payloads are kept contiguous so a runtime can stream them at full
+//! memory bandwidth (the point of the paper).
+//!
+//! Size accounting follows the paper: `payload_bits` (encoded streams) +
+//! `correction_bits` (Eq. 7 terms 2–3) are reported against the original
+//! dense size; the mask is accounted separately (§3 assumes the binary
+//! mask is stored/compressed independently, citing Lee et al. 2019a).
+
+mod serde;
+
+pub use serde::{read_container, write_container};
+
+use crate::decoder::DecoderSpec;
+
+/// Weight element type of a compressed layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I8,
+}
+
+impl Dtype {
+    /// Bits per weight (`n_w`).
+    pub fn bits(&self) -> usize {
+        match self {
+            Dtype::F32 => 32,
+            Dtype::I8 => 8,
+        }
+    }
+}
+
+/// One encoded bit-plane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedPlane {
+    /// Whether the plane was inverted before encoding.
+    pub inverted: bool,
+    /// Encoded stream (`l + N_s` chunks of `N_in` bits).
+    pub encoded: Vec<u32>,
+    /// Correction stream for lossless reconstruction.
+    pub correction: crate::correction::CorrectionStream,
+}
+
+/// One compressed layer.
+#[derive(Debug, Clone)]
+pub struct CompressedLayer {
+    pub name: String,
+    /// Row-major shape (rows, cols) of the original matrix.
+    pub rows: usize,
+    pub cols: usize,
+    pub dtype: Dtype,
+    /// INT8 dequantization scale (1.0 for F32).
+    pub scale: f32,
+    /// Decoder geometry shared by all planes of this layer.
+    pub spec: DecoderSpec,
+    /// Seed regenerating `M⊕`.
+    pub m_seed: u64,
+    /// Pruning mask (set = unpruned), length `rows·cols`.
+    pub mask: crate::gf2::BitVecF2,
+    /// `n_w` planes, MSB first.
+    pub planes: Vec<CompressedPlane>,
+}
+
+impl CompressedLayer {
+    /// Number of weights.
+    pub fn n_weights(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Original dense size in bits.
+    pub fn original_bits(&self) -> usize {
+        self.n_weights() * self.dtype.bits()
+    }
+
+    /// Encoded payload bits across planes (`(l+N_s)·N_in` each).
+    pub fn payload_bits(&self) -> usize {
+        self.planes.iter().map(|p| p.encoded.len() * self.spec.n_in).sum()
+    }
+
+    /// Correction bits across planes (+1 invert flag bit per plane).
+    pub fn correction_bits(&self) -> usize {
+        self.planes
+            .iter()
+            .map(|p| p.correction.size_bits() + 1)
+            .sum()
+    }
+
+    /// Compressed bits as the paper accounts them (payload + correction).
+    pub fn compressed_bits(&self) -> usize {
+        self.payload_bits() + self.correction_bits()
+    }
+
+    /// Memory reduction percentage vs. dense (Table 1 / Table 2 metric).
+    pub fn memory_reduction(&self) -> f64 {
+        (1.0 - self.compressed_bits() as f64 / self.original_bits() as f64)
+            * 100.0
+    }
+}
+
+/// A whole compressed model.
+#[derive(Debug, Clone, Default)]
+pub struct Container {
+    pub layers: Vec<CompressedLayer>,
+}
+
+impl Container {
+    /// Aggregate original size (bits).
+    pub fn original_bits(&self) -> usize {
+        self.layers.iter().map(|l| l.original_bits()).sum()
+    }
+
+    /// Aggregate compressed size (bits).
+    pub fn compressed_bits(&self) -> usize {
+        self.layers.iter().map(|l| l.compressed_bits()).sum()
+    }
+
+    /// Aggregate memory reduction (%).
+    pub fn memory_reduction(&self) -> f64 {
+        (1.0
+            - self.compressed_bits() as f64 / self.original_bits() as f64)
+            * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::correction::CorrectionStream;
+    use crate::gf2::BitVecF2;
+
+    fn tiny_layer() -> CompressedLayer {
+        let spec = DecoderSpec::new(4, 10, 1);
+        CompressedLayer {
+            name: "test".into(),
+            rows: 4,
+            cols: 8,
+            dtype: Dtype::I8,
+            scale: 0.05,
+            spec,
+            m_seed: 7,
+            mask: BitVecF2::zeros(32),
+            planes: (0..8)
+                .map(|_| CompressedPlane {
+                    inverted: false,
+                    encoded: vec![0, 3, 9, 1],
+                    correction: CorrectionStream::build(&[], 32, 512),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn size_accounting() {
+        let l = tiny_layer();
+        assert_eq!(l.original_bits(), 32 * 8);
+        assert_eq!(l.payload_bits(), 8 * 4 * 4);
+        // Correction per plane: 1 flag vector bit + 1 invert bit = 2.
+        assert_eq!(l.correction_bits(), 8 * 2);
+        assert!(l.memory_reduction() > 0.0);
+    }
+
+    #[test]
+    fn container_aggregates() {
+        let c = Container { layers: vec![tiny_layer(), tiny_layer()] };
+        assert_eq!(c.original_bits(), 2 * 256);
+        assert_eq!(
+            c.compressed_bits(),
+            2 * tiny_layer().compressed_bits()
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! Execution backends for the inference server.
+
+use crate::container::CompressedLayer;
+use crate::sparse::DecodedLayer;
+
+/// Something that can run a batch of mat-vec requests.
+///
+/// `&mut self` so backends may keep scratch buffers / device handles.
+pub trait Backend {
+    /// Compute `y_i = f(x_i)` for every request in the batch.
+    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Vec<Vec<f32>>;
+    /// Expected input length.
+    fn input_dim(&self) -> usize;
+    /// Produced output length.
+    fn output_dim(&self) -> usize;
+}
+
+/// Native Rust backend: decode the compressed layer once at startup
+/// (exactly what the on-chip XOR decompressor does between memory and
+/// compute), then serve batched GEMVs from the decoded weights.
+pub struct NativeBackend {
+    layer: DecodedLayer,
+}
+
+impl NativeBackend {
+    /// Decode a compressed layer into a ready-to-serve backend.
+    pub fn new(compressed: &CompressedLayer) -> Self {
+        NativeBackend { layer: DecodedLayer::from_compressed(compressed) }
+    }
+
+    /// Wrap an already-decoded layer.
+    pub fn from_decoded(layer: DecodedLayer) -> Self {
+        NativeBackend { layer }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        xs.iter().map(|x| self.layer.gemv(x)).collect()
+    }
+
+    fn input_dim(&self) -> usize {
+        self.layer.cols
+    }
+
+    fn output_dim(&self) -> usize {
+        self.layer.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_matches_direct_gemv() {
+        let layer = DecodedLayer {
+            rows: 2,
+            cols: 3,
+            weights: vec![1.0, 0.0, -1.0, 0.5, 2.0, 0.0],
+        };
+        let mut b = NativeBackend::from_decoded(layer.clone());
+        let xs = vec![vec![1.0, 2.0, 3.0], vec![0.0, 1.0, 0.0]];
+        let ys = b.forward_batch(&xs);
+        assert_eq!(ys[0], layer.gemv(&xs[0]));
+        assert_eq!(ys[1], vec![0.0, 2.0]);
+        assert_eq!(b.input_dim(), 3);
+        assert_eq!(b.output_dim(), 2);
+    }
+}

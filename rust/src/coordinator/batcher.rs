@@ -1,0 +1,122 @@
+//! Dynamic batching policy.
+//!
+//! Classic size-or-deadline batching: a batch closes when it reaches
+//! `max_batch` requests or when the oldest queued request has waited
+//! `timeout`. This trades a bounded latency increment for the large
+//! throughput win of batched execution (measured in
+//! `benches/serving.rs`).
+
+use std::time::{Duration, Instant};
+
+/// Batch closing policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub timeout: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 16,
+            timeout: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Incremental batch builder (single consumer).
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    /// New batcher under `policy`.
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, pending: Vec::new(), oldest: None }
+    }
+
+    /// Add a request; returns a full batch if this push closed it.
+    pub fn push(&mut self, item: T) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.policy.max_batch {
+            self.take()
+        } else {
+            None
+        }
+    }
+
+    /// Non-empty and the oldest entry has exceeded the deadline?
+    pub fn expired(&self) -> bool {
+        matches!(self.oldest, Some(t) if t.elapsed() >= self.policy.timeout)
+    }
+
+    /// How long the consumer may sleep before the deadline fires.
+    pub fn time_left(&self) -> Option<Duration> {
+        self.oldest.map(|t| {
+            self.policy.timeout.saturating_sub(t.elapsed())
+        })
+    }
+
+    /// Close and return the current batch (None if empty).
+    pub fn take(&mut self) -> Option<Vec<T>> {
+        self.oldest = None;
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.pending))
+        }
+    }
+
+    /// Current queue length.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Whether no requests are queued.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closes_at_max_batch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            timeout: Duration::from_secs(10),
+        });
+        assert!(b.push(1).is_none());
+        assert!(b.push(2).is_none());
+        let batch = b.push(3).expect("batch closes at 3");
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            timeout: Duration::from_millis(1),
+        });
+        b.push(42);
+        assert!(!b.expired() || b.time_left().unwrap() == Duration::ZERO);
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(b.expired());
+        assert_eq!(b.take().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn take_on_empty_is_none() {
+        let mut b: Batcher<u32> = Batcher::new(BatchPolicy::default());
+        assert!(b.take().is_none());
+        assert!(!b.expired());
+    }
+}

@@ -1,0 +1,125 @@
+//! Serving metrics: counters + latency reservoir.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics sink (interior mutability; cheap under one worker).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    completed: u64,
+    batches: u64,
+    batched_requests: u64,
+    errors: u64,
+    /// Latency samples in µs (bounded reservoir, newest kept).
+    latencies_us: Vec<u64>,
+}
+
+const RESERVOIR: usize = 65_536;
+
+/// Point-in-time copy of the metrics.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub errors: u64,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+impl Metrics {
+    /// Record one executed batch of `n` requests with per-request
+    /// end-to-end latencies.
+    pub fn record_batch(&self, latencies: &[Duration]) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batched_requests += latencies.len() as u64;
+        m.completed += latencies.len() as u64;
+        for l in latencies {
+            if m.latencies_us.len() >= RESERVOIR {
+                let idx = (m.completed as usize) % RESERVOIR;
+                m.latencies_us[idx] = l.as_micros() as u64;
+            } else {
+                m.latencies_us.push(l.as_micros() as u64);
+            }
+        }
+    }
+
+    /// Record a failed request.
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Snapshot with percentile computation.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let mut ls = m.latencies_us.clone();
+        ls.sort_unstable();
+        let pick = |q: f64| -> Duration {
+            if ls.is_empty() {
+                Duration::ZERO
+            } else {
+                let idx = ((ls.len() as f64 * q) as usize).min(ls.len() - 1);
+                Duration::from_micros(ls[idx])
+            }
+        };
+        MetricsSnapshot {
+            completed: m.completed,
+            batches: m.batches,
+            batched_requests: m.batched_requests,
+            errors: m.errors,
+            p50: pick(0.50),
+            p95: pick(0.95),
+            p99: pick(0.99),
+            max: ls.last().copied().map(Duration::from_micros).unwrap_or_default(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Average requests per executed batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::default();
+        m.record_batch(&[
+            Duration::from_micros(100),
+            Duration::from_micros(200),
+        ]);
+        m.record_batch(&[Duration::from_micros(300)]);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.errors, 1);
+        assert!((s.mean_batch_size() - 1.5).abs() < 1e-12);
+        assert_eq!(s.p50, Duration::from_micros(200));
+        assert_eq!(s.max, Duration::from_micros(300));
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.p99, Duration::ZERO);
+    }
+}

@@ -1,0 +1,89 @@
+//! Serving coordinator: request router → dynamic batcher → worker.
+//!
+//! The paper's decoder is a memory-path device; the serving story around
+//! it is a standard inference server. This module provides a compact but
+//! real one: callers submit vectors, a batcher groups them (size- and
+//! deadline-bounded, vLLM-style), a worker thread executes the batch on a
+//! [`Backend`] (native Rust decode+GEMV, or the PJRT executable built
+//! from the JAX/Pallas layers), and metrics record throughput and
+//! latency percentiles.
+//!
+//! PJRT handles are not `Send`, so the worker *constructs* its backend on
+//! its own thread via a `Send` factory closure.
+
+mod backend;
+mod batcher;
+mod metrics;
+mod server;
+
+pub use backend::{Backend, NativeBackend};
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{InferenceServer, ServerConfig};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Echo backend for plumbing tests.
+    struct Echo;
+    impl Backend for Echo {
+        fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+            xs.iter().map(|x| x.iter().map(|v| v * 2.0).collect()).collect()
+        }
+        fn input_dim(&self) -> usize {
+            4
+        }
+        fn output_dim(&self) -> usize {
+            4
+        }
+    }
+
+    #[test]
+    fn end_to_end_single_request() {
+        let server = InferenceServer::start(
+            ServerConfig::default(),
+            || Box::new(Echo),
+        );
+        let y = server.infer(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(y, vec![2.0, 4.0, 6.0, 8.0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests_are_batched() {
+        let cfg = ServerConfig {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let server = InferenceServer::start(cfg, || Box::new(Echo));
+        let handles: Vec<_> = (0..64)
+            .map(|i| server.infer_async(vec![i as f32; 4]))
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let y = h.recv().unwrap().unwrap();
+            assert_eq!(y[0], 2.0 * i as f32);
+        }
+        let m = server.metrics();
+        assert_eq!(m.completed, 64);
+        assert!(m.batches >= 8, "batches = {}", m.batches);
+        assert!(
+            m.mean_batch_size() > 1.0,
+            "batching should group requests (mean {})",
+            m.mean_batch_size()
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_wrong_dimension() {
+        let server = InferenceServer::start(
+            ServerConfig::default(),
+            || Box::new(Echo),
+        );
+        assert!(server.infer(vec![1.0; 3]).is_err());
+        server.shutdown();
+    }
+}

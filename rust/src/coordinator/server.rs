@@ -1,0 +1,218 @@
+//! The inference server: one request queue, one batching worker thread.
+
+use super::{Backend, BatchPolicy, Batcher, Metrics, MetricsSnapshot};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    /// Bound on queued requests (backpressure: submit fails beyond it).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 16,
+            batch_timeout: Duration::from_millis(2),
+            queue_capacity: 4096,
+        }
+    }
+}
+
+struct Request {
+    x: Vec<f32>,
+    enqueued: Instant,
+    resp: Sender<Result<Vec<f32>>>,
+}
+
+/// Handle to a running server.
+pub struct InferenceServer {
+    tx: Sender<Request>,
+    metrics: Arc<Metrics>,
+    input_dim: usize,
+    inflight: Arc<std::sync::atomic::AtomicUsize>,
+    capacity: usize,
+    stop: Arc<AtomicBool>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl InferenceServer {
+    /// Start a server; `factory` builds the backend *on the worker
+    /// thread* (PJRT handles are not `Send`).
+    pub fn start<F>(config: ServerConfig, factory: F) -> Self
+    where
+        F: FnOnce() -> Box<dyn Backend> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let inflight = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+
+        // The worker reports its input dim back once the backend exists.
+        let (dim_tx, dim_rx) = channel::<usize>();
+        let m2 = metrics.clone();
+        let s2 = stop.clone();
+        let inf2 = inflight.clone();
+        let worker = std::thread::Builder::new()
+            .name("f2f-worker".into())
+            .spawn(move || {
+                let mut backend = factory();
+                let _ = dim_tx.send(backend.input_dim());
+                run_worker(rx, &mut *backend, &m2, &s2, &inf2, config);
+            })
+            .expect("spawn worker");
+        let input_dim = dim_rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("backend failed to initialize");
+
+        InferenceServer {
+            tx,
+            metrics,
+            input_dim,
+            inflight,
+            capacity: config.queue_capacity,
+            stop,
+            worker: Some(worker),
+        }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn infer_async(
+        &self,
+        x: Vec<f32>,
+    ) -> Receiver<Result<Vec<f32>>> {
+        let (resp_tx, resp_rx) = channel();
+        if x.len() != self.input_dim {
+            let _ = resp_tx.send(Err(anyhow!(
+                "input dim {} != expected {}",
+                x.len(),
+                self.input_dim
+            )));
+            return resp_rx;
+        }
+        if self.inflight.load(Ordering::Relaxed) >= self.capacity {
+            self.metrics.record_error();
+            let _ = resp_tx.send(Err(anyhow!("queue full (backpressure)")));
+            return resp_rx;
+        }
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        let req = Request { x, enqueued: Instant::now(), resp: resp_tx.clone() };
+        if self.tx.send(req).is_err() {
+            let _ = resp_tx.send(Err(anyhow!("server stopped")));
+        }
+        resp_rx
+    }
+
+    /// Blocking inference.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.infer_async(x)
+            .recv()
+            .map_err(|_| anyhow!("worker dropped response"))?
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Expected input dimension.
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    /// Stop the worker and wait for it.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Drop sender so the worker's recv unblocks.
+        let (dummy_tx, _) = channel();
+        let tx = std::mem::replace(&mut self.tx, dummy_tx);
+        drop(tx);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn run_worker(
+    rx: Receiver<Request>,
+    backend: &mut dyn Backend,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+    inflight: &std::sync::atomic::AtomicUsize,
+    config: ServerConfig,
+) {
+    let mut batcher = Batcher::new(BatchPolicy {
+        max_batch: config.max_batch,
+        timeout: config.batch_timeout,
+    });
+    loop {
+        if stop.load(Ordering::Relaxed) && batcher.is_empty() {
+            // Drain whatever is still queued, then exit.
+            match rx.try_recv() {
+                Ok(req) => {
+                    if let Some(batch) = batcher.push(req) {
+                        execute(backend, batch, metrics, inflight);
+                    }
+                    continue;
+                }
+                Err(_) => break,
+            }
+        }
+        let wait = batcher
+            .time_left()
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(wait) {
+            Ok(req) => {
+                if let Some(batch) = batcher.push(req) {
+                    execute(backend, batch, metrics, inflight);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if batcher.expired() {
+                    if let Some(batch) = batcher.take() {
+                        execute(backend, batch, metrics, inflight);
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if let Some(batch) = batcher.take() {
+                    execute(backend, batch, metrics, inflight);
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn execute(
+    backend: &mut dyn Backend,
+    batch: Vec<Request>,
+    metrics: &Metrics,
+    inflight: &std::sync::atomic::AtomicUsize,
+) {
+    let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
+    let ys = backend.forward_batch(&xs);
+    // Record metrics *before* releasing responses so a caller that
+    // observed its reply always sees itself counted.
+    let latencies: Vec<_> =
+        batch.iter().map(|r| r.enqueued.elapsed()).collect();
+    metrics.record_batch(&latencies);
+    for (req, y) in batch.into_iter().zip(ys) {
+        inflight.fetch_sub(1, Ordering::Relaxed);
+        let _ = req.resp.send(Ok(y));
+    }
+}

@@ -1,0 +1,227 @@
+//! Bit-exact correction stream codec (Figure S.11).
+
+use super::log2_ceil;
+use crate::gf2::BitVecF2;
+
+/// Default correction vector length — the paper's `p = 512`
+/// (`N_c = log2 512 + 1 = 10`).
+pub const DEFAULT_P: usize = 512;
+
+/// An encoded correction stream for one plane.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CorrectionStream {
+    /// Flag bits, one per `p`-vector.
+    flags: BitVecF2,
+    /// Error-location payload: for each flagged vector, a run of
+    /// `(log2 p)`-bit positions each followed by a continuation bit.
+    payload: BitVecF2,
+    /// Vector length `p`.
+    p: usize,
+    /// Plane length in bits.
+    n_bits: usize,
+    /// Number of recorded errors.
+    n_errors: usize,
+}
+
+impl CorrectionStream {
+    /// Build a stream from sorted, deduplicated flat error positions.
+    pub fn build(mismatches: &[usize], n_bits: usize, p: usize) -> Self {
+        assert!(p.is_power_of_two(), "p must be a power of two");
+        debug_assert!(mismatches.windows(2).all(|w| w[0] < w[1]));
+        let k = n_bits.div_ceil(p);
+        let pos_bits = log2_ceil(p);
+        let mut flags = BitVecF2::zeros(k);
+        // Worst case payload size; trimmed below.
+        let mut payload_bits: Vec<bool> = Vec::new();
+        let mut i = 0usize;
+        for v in 0..k {
+            let lo = v * p;
+            let hi = lo + p;
+            let start = i;
+            while i < mismatches.len() && mismatches[i] < hi {
+                assert!(mismatches[i] >= lo);
+                i += 1;
+            }
+            if i > start {
+                flags.set(v, true);
+                for (j, &pos) in mismatches[start..i].iter().enumerate() {
+                    let rel = pos - lo;
+                    for b in (0..pos_bits).rev() {
+                        payload_bits.push((rel >> b) & 1 == 1);
+                    }
+                    // Continuation bit: 1 = another error follows.
+                    payload_bits.push(j + 1 < i - start);
+                }
+            }
+        }
+        CorrectionStream {
+            flags,
+            payload: BitVecF2::from_bools(&payload_bits),
+            p,
+            n_bits,
+            n_errors: mismatches.len(),
+        }
+    }
+
+    /// Apply corrections: flip the recorded positions in `plane`.
+    pub fn apply(&self, plane: &mut BitVecF2) {
+        assert_eq!(plane.len(), self.n_bits);
+        for pos in self.positions() {
+            plane.flip(pos);
+        }
+    }
+
+    /// Decode the flat error positions back out of the stream.
+    pub fn positions(&self) -> Vec<usize> {
+        let pos_bits = log2_ceil(self.p);
+        let mut out = Vec::with_capacity(self.n_errors);
+        let mut cursor = 0usize;
+        for v in 0..self.flags.len() {
+            if !self.flags.get(v) {
+                continue;
+            }
+            loop {
+                let mut rel = 0usize;
+                for _ in 0..pos_bits {
+                    rel = (rel << 1) | (self.payload.get(cursor) as usize);
+                    cursor += 1;
+                }
+                out.push(v * self.p + rel);
+                let more = self.payload.get(cursor);
+                cursor += 1;
+                if !more {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Total stream size in bits: flags + payload (the last two terms of
+    /// Eq. 7).
+    pub fn size_bits(&self) -> usize {
+        self.flags.len() + self.payload.len()
+    }
+
+    /// Number of corrected bits.
+    pub fn n_errors(&self) -> usize {
+        self.n_errors
+    }
+
+    /// Vector length `p`.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Serialize to words for the container format.
+    pub fn to_words(&self) -> (Vec<u64>, usize, Vec<u64>, usize) {
+        (
+            self.flags.words().to_vec(),
+            self.flags.len(),
+            self.payload.words().to_vec(),
+            self.payload.len(),
+        )
+    }
+
+    /// Rebuild from serialized parts.
+    pub fn from_words(
+        flags: (Vec<u64>, usize),
+        payload: (Vec<u64>, usize),
+        p: usize,
+        n_bits: usize,
+        n_errors: usize,
+    ) -> Self {
+        CorrectionStream {
+            flags: BitVecF2::from_words(flags.0, flags.1),
+            payload: BitVecF2::from_words(payload.0, payload.1),
+            p,
+            n_bits,
+            n_errors,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_positions() {
+        let mism = vec![0, 5, 511, 512, 1000, 4095];
+        let cs = CorrectionStream::build(&mism, 4096, 512);
+        assert_eq!(cs.positions(), mism);
+        assert_eq!(cs.n_errors(), 6);
+    }
+
+    #[test]
+    fn empty_stream_is_flags_only() {
+        let cs = CorrectionStream::build(&[], 4096, 512);
+        assert_eq!(cs.positions(), Vec::<usize>::new());
+        assert_eq!(cs.size_bits(), 8); // ⌈4096/512⌉ flag bits, no payload
+    }
+
+    #[test]
+    fn size_matches_eq7_terms() {
+        // 3 errors in distinct vectors, p = 512 → each costs 10 bits.
+        let mism = vec![10, 600, 1500];
+        let cs = CorrectionStream::build(&mism, 4096, 512);
+        assert_eq!(cs.size_bits(), 8 + 3 * 10);
+    }
+
+    #[test]
+    fn multiple_errors_same_vector_share_flag() {
+        let mism = vec![1, 2, 3];
+        let cs = CorrectionStream::build(&mism, 1024, 512);
+        // 2 flags + 3×10 payload bits.
+        assert_eq!(cs.size_bits(), 2 + 30);
+        assert_eq!(cs.positions(), mism);
+    }
+
+    #[test]
+    fn apply_fixes_a_corrupted_plane() {
+        let mut rng = Rng::new(1);
+        let original = BitVecF2::random(8192, 0.5, &mut rng);
+        let mut corrupted = original.clone();
+        let mut mism: Vec<usize> = (0..40).map(|_| rng.below(8192)).collect();
+        mism.sort_unstable();
+        mism.dedup();
+        for &m in &mism {
+            corrupted.flip(m);
+        }
+        let cs = CorrectionStream::build(&mism, 8192, 512);
+        cs.apply(&mut corrupted);
+        assert_eq!(corrupted, original);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mism = vec![3, 700, 701, 2047];
+        let cs = CorrectionStream::build(&mism, 2048, 256);
+        let (fw, fl, pw, pl) = cs.to_words();
+        let back = CorrectionStream::from_words(
+            (fw, fl),
+            (pw, pl),
+            256,
+            2048,
+            4,
+        );
+        assert_eq!(back, cs);
+        assert_eq!(back.positions(), mism);
+    }
+
+    #[test]
+    fn random_roundtrip_stress() {
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let n_bits = 512 + rng.below(20_000);
+            let n_err = rng.below(200);
+            let mut mism: Vec<usize> =
+                (0..n_err).map(|_| rng.below(n_bits)).collect();
+            mism.sort_unstable();
+            mism.dedup();
+            let cs = CorrectionStream::build(&mism, n_bits, 512);
+            assert_eq!(cs.positions(), mism);
+        }
+    }
+}

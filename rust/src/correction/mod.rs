@@ -1,0 +1,99 @@
+//! Lossless correction stream — Appendix F.
+//!
+//! The random-number-generator decoder cannot match every unpruned bit
+//! (`E < 100%`); a separate correction stream records where to flip the
+//! decoded output so the overall scheme is lossless. The decoded plane is
+//! re-sliced into `k = ⌈mn/p⌉` vectors of `p` bits; the stream stores
+//!
+//! 1. one **flag bit** per `p`-vector (1 ⟺ that vector has ≥ 1 error);
+//! 2. for each error, `log2 p` bits of in-vector position plus **one
+//!    continuation bit** ('1' = another error follows in the same
+//!    vector).
+//!
+//! Total compressed size (Eq. 7):
+//! `N_in·⌈mn/N_out⌉ + ⌈mn/p⌉ + (log2 p + 1)·#errors`, and with
+//! `N_c = log2 p + 1` the paper's memory-saving closed form (Eq. 2) is
+//! `1 − (1−S)(1 + (1−E)·N_c)`.
+
+mod format;
+
+pub use format::{CorrectionStream, DEFAULT_P};
+
+/// Eq. 2: memory saving (fraction, not %) for pruning rate `s`, encoding
+/// efficiency `e` (0..=1) and `n_c` correction bits per unmatched bit.
+/// Approaches `s` as `e → 1`.
+pub fn memory_save_eq2(s: f64, e: f64, n_c: f64) -> f64 {
+    1.0 - (1.0 - s) * (1.0 + (1.0 - e) * n_c)
+}
+
+/// Eq. 7: exact compressed size in bits for an `mn`-bit plane.
+pub fn compressed_bits_eq7(
+    mn: usize,
+    n_in: usize,
+    n_out: usize,
+    p: usize,
+    unmatched: usize,
+) -> usize {
+    let payload = n_in * mn.div_ceil(n_out);
+    let flags = mn.div_ceil(p);
+    let corrections = (log2_ceil(p) + 1) * unmatched;
+    payload + flags + corrections
+}
+
+/// ⌈log2 p⌉ (p ≥ 1).
+pub(crate) fn log2_ceil(p: usize) -> usize {
+    assert!(p >= 1);
+    (usize::BITS - (p - 1).leading_zeros()) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_ceil_values() {
+        assert_eq!(log2_ceil(1), 0);
+        assert_eq!(log2_ceil(2), 1);
+        assert_eq!(log2_ceil(512), 9);
+        assert_eq!(log2_ceil(513), 10);
+    }
+
+    #[test]
+    fn eq2_limits() {
+        // E = 1 → memory save = S exactly.
+        assert!((memory_save_eq2(0.9, 1.0, 10.0) - 0.9).abs() < 1e-12);
+        // E = 0, N_c = 10 → save = 1 − (1−S)·11: can go negative (worse
+        // than dense) as the paper notes for poor generators.
+        let v = memory_save_eq2(0.5, 0.0, 10.0);
+        assert!((v - (1.0 - 0.5 * 11.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq7_accounting_with_paper_p512() {
+        // p = 512 → log2 p + 1 = 10 = the paper's "N_c is around 10".
+        let mn = 1_000_000;
+        let bits = compressed_bits_eq7(mn, 8, 80, 512, 100);
+        assert_eq!(bits, 8 * 12_500 + 1954 + 10 * 100);
+    }
+
+    #[test]
+    fn eq7_matches_eq2_asymptotically() {
+        // For large mn, Eq. 7 / mn ≈ (1−S)(1 + (1−E)·N_c) + flag overhead.
+        let mn = 10_000_000usize;
+        let s = 0.9;
+        let e = 0.98;
+        let n_in = 8;
+        let n_out = 80;
+        let unpruned = (mn as f64 * (1.0 - s)) as usize;
+        let unmatched = (unpruned as f64 * (1.0 - e)) as usize;
+        let eq7 = compressed_bits_eq7(mn, n_in, n_out, 512, unmatched)
+            as f64
+            / mn as f64;
+        let eq2 = 1.0 - memory_save_eq2(s, e, 10.0);
+        // flag bits add 1/512 ≈ 0.002
+        assert!(
+            (eq7 - eq2 - 1.0 / 512.0).abs() < 1e-3,
+            "eq7 {eq7} eq2 {eq2}"
+        );
+    }
+}

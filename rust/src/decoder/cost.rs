@@ -1,0 +1,90 @@
+//! Appendix G hardware cost model for the XOR-gate decoder.
+//!
+//! The paper argues the decoder is nearly free in silicon: each 2-input
+//! XOR is 6 transistors, all gates fire in one cycle, shift registers add
+//! `N_s` cycles of latency but no throughput loss under pipelining. We
+//! reproduce that accounting so design-space sweeps can report area and
+//! latency alongside compression.
+
+use super::DecoderSpec;
+use crate::gf2::XorMatrix;
+
+/// Static cost estimate of one decoder instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HardwareCost {
+    /// Exact 2-input XOR gate count (`Σ_i max(taps_i − 1, 0)`).
+    pub xor_gates: usize,
+    /// Appendix G's closed-form estimate `N_out·(N_s+1)·N_in / 2`.
+    pub xor_gates_estimate: usize,
+    /// 6 transistors per XOR gate (Rabaey et al. 2004).
+    pub transistors: usize,
+    /// Flip-flops for the shift registers: `N_s · N_in`.
+    pub register_bits: usize,
+    /// Decode latency in cycles: 1 (XOR array) + `N_s` (register fill).
+    pub latency_cycles: usize,
+    /// Output bits produced per cycle once the pipeline is full.
+    pub throughput_bits_per_cycle: usize,
+}
+
+impl HardwareCost {
+    /// Compute the cost of `matrix` under geometry `spec`.
+    pub fn of(spec: &DecoderSpec, matrix: &XorMatrix) -> Self {
+        let xor_gates = matrix.xor_gate_count();
+        let xor_gates_estimate = spec.n_out * spec.total_inputs() / 2;
+        HardwareCost {
+            xor_gates,
+            xor_gates_estimate,
+            transistors: 6 * xor_gates,
+            register_bits: spec.n_s * spec.n_in,
+            latency_cycles: 1 + spec.n_s,
+            throughput_bits_per_cycle: spec.n_out,
+        }
+    }
+
+    /// Transistors per decoded output bit — the paper's "marginal cost"
+    /// argument in Appendix G.
+    pub fn transistors_per_output_bit(&self) -> f64 {
+        self.transistors as f64 / self.throughput_bits_per_cycle as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoder::SequentialDecoder;
+
+    #[test]
+    fn cost_of_paper_config() {
+        // N_in=8, S=0.9 → N_out=80, N_s=2: App. G estimate
+        // N_out·N_in·(N_s+1)/2 = 80·24/2 = 960 gates ≈ 5760 transistors.
+        let spec = DecoderSpec::new(8, 80, 2);
+        let d = SequentialDecoder::random(spec, 42);
+        let c = d.hardware_cost();
+        assert_eq!(c.xor_gates_estimate, 960);
+        assert_eq!(c.register_bits, 16);
+        assert_eq!(c.latency_cycles, 3);
+        assert_eq!(c.throughput_bits_per_cycle, 80);
+        // Exact count ≈ estimate − N_out (tree of k taps needs k−1 gates).
+        let expect = c.xor_gates_estimate as i64 - 80;
+        assert!(
+            (c.xor_gates as i64 - expect).abs() < 120,
+            "exact={} expected≈{}",
+            c.xor_gates,
+            expect
+        );
+        assert_eq!(c.transistors, 6 * c.xor_gates);
+    }
+
+    #[test]
+    fn latency_grows_with_ns_throughput_does_not() {
+        let a = SequentialDecoder::random(DecoderSpec::new(8, 40, 0), 1)
+            .hardware_cost();
+        let b = SequentialDecoder::random(DecoderSpec::new(8, 40, 2), 1)
+            .hardware_cost();
+        assert!(b.latency_cycles > a.latency_cycles);
+        assert_eq!(
+            a.throughput_bits_per_cycle,
+            b.throughput_bits_per_cycle
+        );
+    }
+}

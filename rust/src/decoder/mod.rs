@@ -1,0 +1,185 @@
+//! The XOR-gate decoder, combinational (`N_s = 0`) and sequential.
+//!
+//! Decoding (Figure 6): encoded vectors stream into the XOR-gate network;
+//! `N_s` shift registers keep the previous `N_s` vectors visible, so block
+//! `t` is a GF(2)-linear function of the input *sequence*
+//! `(w_t^e, w_{t-1}^e, …, w_{t-N_s}^e)`. Registers start at zero (the
+//! paper pre-loads `BIN(0)`; Algorithm 3).
+//!
+//! In hardware this is `N_out·(N_s+1)·N_in/2` XOR gates firing in one
+//! cycle; in software we use the [`ChunkTables`] fast path.
+
+mod cost;
+mod spec;
+
+pub use cost::HardwareCost;
+pub use spec::DecoderSpec;
+
+use crate::gf2::{Block, ChunkTables, XorMatrix};
+
+/// A ready-to-run sequential decoder: spec + matrix + lookup tables.
+#[derive(Debug, Clone)]
+pub struct SequentialDecoder {
+    spec: DecoderSpec,
+    matrix: XorMatrix,
+    tables: ChunkTables,
+}
+
+impl SequentialDecoder {
+    /// Build a decoder with a random `M⊕` derived from `seed`.
+    pub fn random(spec: DecoderSpec, seed: u64) -> Self {
+        let matrix = XorMatrix::random(spec.n_out, spec.total_inputs(), seed);
+        let tables = ChunkTables::new(&matrix, spec.n_in, spec.n_s + 1);
+        SequentialDecoder { spec, matrix, tables }
+    }
+
+    /// Build from an existing matrix (must match the spec's shape).
+    pub fn from_matrix(spec: DecoderSpec, matrix: XorMatrix) -> Self {
+        assert_eq!(matrix.n_out(), spec.n_out);
+        assert_eq!(matrix.n_cols(), spec.total_inputs());
+        let tables = ChunkTables::new(&matrix, spec.n_in, spec.n_s + 1);
+        SequentialDecoder { spec, matrix, tables }
+    }
+
+    /// Decoder geometry.
+    #[inline]
+    pub fn spec(&self) -> DecoderSpec {
+        self.spec
+    }
+
+    /// The underlying `M⊕`.
+    pub fn matrix(&self) -> &XorMatrix {
+        &self.matrix
+    }
+
+    /// Chunk tables (used by the encoder's DP inner loop).
+    pub fn tables(&self) -> &ChunkTables {
+        &self.tables
+    }
+
+    /// Decode one block given the current input and register contents.
+    /// `history[s]` is the input from `s+1` steps ago; missing history
+    /// (start of stream) is zero.
+    #[inline]
+    pub fn decode_step(&self, current: usize, history: &[usize]) -> Block {
+        let mut acc = self.tables.slot(0, current);
+        for s in 0..self.spec.n_s {
+            let h = history.get(s).copied().unwrap_or(0);
+            acc ^= self.tables.slot(s + 1, h);
+        }
+        acc
+    }
+
+    /// Decode a whole stream of encoded vectors into `l` blocks.
+    ///
+    /// `encoded` has length `l + N_s`: the first `N_s` entries are the
+    /// initial register pre-load (all zeros when produced by our encoder,
+    /// mirroring Algorithm 3), and entry `t + N_s` is the fresh input for
+    /// block `t`.
+    pub fn decode_stream(&self, encoded: &[u32]) -> Vec<Block> {
+        let ns = self.spec.n_s;
+        assert!(
+            encoded.len() >= ns,
+            "encoded stream shorter than register depth"
+        );
+        let l = encoded.len() - ns;
+        let mut out = Vec::with_capacity(l);
+        for t in 0..l {
+            // Slot s reads the input from s steps ago = encoded[t + ns - s].
+            let mut acc: Block = 0;
+            for s in 0..=ns {
+                acc ^= self.tables.slot(s, encoded[t + ns - s] as usize);
+            }
+            out.push(acc);
+        }
+        out
+    }
+
+    /// Decode a stream directly into a flat bit vector of `n_bits` bits
+    /// (truncating the final partial block, inverse of slicing).
+    pub fn decode_stream_to_bits(
+        &self,
+        encoded: &[u32],
+        n_bits: usize,
+    ) -> crate::gf2::BitVecF2 {
+        let blocks = self.decode_stream(encoded);
+        let mut v = crate::gf2::BitVecF2::zeros(n_bits);
+        for (t, b) in blocks.iter().enumerate() {
+            let start = t * self.spec.n_out;
+            if start >= n_bits {
+                break;
+            }
+            v.set_block(start, self.spec.n_out.min(n_bits - start), *b);
+        }
+        v
+    }
+
+    /// Hardware cost of this decoder per Appendix G.
+    pub fn hardware_cost(&self) -> HardwareCost {
+        HardwareCost::of(&self.spec, &self.matrix)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(n_in: usize, n_out: usize, n_s: usize) -> DecoderSpec {
+        DecoderSpec { n_in, n_out, n_s }
+    }
+
+    #[test]
+    fn decode_stream_matches_manual_concat() {
+        let s = spec(4, 12, 2);
+        let d = SequentialDecoder::random(s, 99);
+        // encoded stream: 2 preload zeros + 3 inputs
+        let encoded = [0u32, 0, 5, 9, 3];
+        let blocks = d.decode_stream(&encoded);
+        assert_eq!(blocks.len(), 3);
+        // Block 0: current=5, history=[0,0]
+        let m = d.matrix();
+        assert_eq!(blocks[0], m.decode(5));
+        // Block 1: current=9, prev=5, prev2=0 → x = 9 | 5<<4
+        assert_eq!(blocks[1], m.decode(9 | (5 << 4)));
+        // Block 2: current=3, prev=9, prev2=5
+        assert_eq!(blocks[2], m.decode(3 | (9 << 4) | (5 << 8)));
+    }
+
+    #[test]
+    fn nonsequential_decode_is_blockwise() {
+        let s = spec(8, 16, 0);
+        let d = SequentialDecoder::random(s, 1);
+        let encoded = [7u32, 200, 31];
+        let blocks = d.decode_stream(&encoded);
+        for (i, &e) in encoded.iter().enumerate() {
+            assert_eq!(blocks[i], d.matrix().decode(e as u64));
+        }
+    }
+
+    #[test]
+    fn decode_step_equals_stream() {
+        let s = spec(6, 20, 1);
+        let d = SequentialDecoder::random(s, 2);
+        let encoded = [0u32, 11, 45, 60];
+        let blocks = d.decode_stream(&encoded);
+        assert_eq!(blocks[0], d.decode_step(11, &[0]));
+        assert_eq!(blocks[1], d.decode_step(45, &[11]));
+        assert_eq!(blocks[2], d.decode_step(60, &[45]));
+    }
+
+    #[test]
+    fn decode_stream_to_bits_truncates_tail() {
+        let s = spec(4, 10, 0);
+        let d = SequentialDecoder::random(s, 3);
+        let encoded = [1u32, 2, 3];
+        let bits = d.decode_stream_to_bits(&encoded, 25); // 2.5 blocks
+        assert_eq!(bits.len(), 25);
+        let blocks = d.decode_stream(&encoded);
+        for i in 0..10 {
+            assert_eq!(bits.get(i), (blocks[0] >> i) & 1 == 1);
+        }
+        for i in 0..5 {
+            assert_eq!(bits.get(20 + i), (blocks[2] >> i) & 1 == 1);
+        }
+    }
+}

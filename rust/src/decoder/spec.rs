@@ -1,0 +1,121 @@
+//! Decoder geometry: `(N_in, N_out, N_s)`.
+
+/// Shape of a sequential XOR-gate decoder.
+///
+/// * `n_in` — encoded bits consumed per time index (`N_in`; the paper
+///   feeds decoders byte-wise, `N_in = 8`, in all §5 experiments).
+/// * `n_out` — decoded bits produced per time index (`N_out`). The paper
+///   sets `N_out = ⌊N_in / (1−S)⌋` so the code rate matches the pruning
+///   rate.
+/// * `n_s` — number of shift registers; an input is reused for
+///   `N_s + 1` consecutive blocks. `n_s = 0` is the combinational decoder
+///   of Kwon et al. (2020).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DecoderSpec {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub n_s: usize,
+}
+
+impl DecoderSpec {
+    /// Convenience constructor.
+    pub fn new(n_in: usize, n_out: usize, n_s: usize) -> Self {
+        let s = DecoderSpec { n_in, n_out, n_s };
+        s.validate();
+        s
+    }
+
+    /// Paper's rate rule: `N_out = ⌊N_in · 1/(1−S)⌋` for pruning rate `S`.
+    pub fn for_sparsity(n_in: usize, sparsity: f64, n_s: usize) -> Self {
+        assert!((0.0..1.0).contains(&sparsity));
+        let n_out = ((n_in as f64) / (1.0 - sparsity)).floor() as usize;
+        DecoderSpec::new(n_in, n_out, n_s)
+    }
+
+    /// Panics if the shape is outside what the implementation supports.
+    pub fn validate(&self) {
+        assert!(self.n_in >= 1 && self.n_in <= 20, "N_in out of range");
+        assert!(self.n_out >= 1 && self.n_out <= 128, "N_out out of range");
+        assert!(self.n_s <= 4, "N_s > 4 unsupported (state space 2^(N_in*N_s))");
+        assert!(
+            self.n_in * (self.n_s + 1) <= 60,
+            "total input bits must fit in u64 for decode()"
+        );
+    }
+
+    /// Total decoder input width `(N_s + 1) · N_in`.
+    #[inline]
+    pub fn total_inputs(&self) -> usize {
+        (self.n_s + 1) * self.n_in
+    }
+
+    /// Code rate `N_in / N_out` (compressed fraction before correction).
+    pub fn rate(&self) -> f64 {
+        self.n_in as f64 / self.n_out as f64
+    }
+
+    /// Compression ratio `N_out / N_in` of the raw generator.
+    pub fn compression_ratio(&self) -> f64 {
+        self.n_out as f64 / self.n_in as f64
+    }
+
+    /// Number of blocks for an `n_bits`-bit plane: `l = ⌈n_bits/N_out⌉`.
+    pub fn num_blocks(&self, n_bits: usize) -> usize {
+        n_bits.div_ceil(self.n_out)
+    }
+
+    /// Encoded stream length for `l` blocks (`l + N_s`, Algorithm 3).
+    pub fn stream_len(&self, l: usize) -> usize {
+        l + self.n_s
+    }
+
+    /// Number of Viterbi states `2^{N_in·N_s}`.
+    pub fn num_states(&self) -> usize {
+        1usize << (self.n_in * self.n_s)
+    }
+
+    /// Encoded size in bits for an `n_bits` plane (before correction).
+    pub fn encoded_bits(&self, n_bits: usize) -> usize {
+        self.stream_len(self.num_blocks(n_bits)) * self.n_in
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_rule_matches_paper() {
+        // §5: N_in=8, S=0.9 → N_out = 80.
+        let s = DecoderSpec::for_sparsity(8, 0.9, 2);
+        assert_eq!(s.n_out, 80);
+        // S=0.7 → ⌊8/0.3⌋ = 26.
+        let s = DecoderSpec::for_sparsity(8, 0.7, 1);
+        assert_eq!(s.n_out, 26);
+        // S=0.6 → 20, S=0.8 → 40.
+        assert_eq!(DecoderSpec::for_sparsity(8, 0.6, 0).n_out, 20);
+        assert_eq!(DecoderSpec::for_sparsity(8, 0.8, 0).n_out, 40);
+    }
+
+    #[test]
+    fn block_and_stream_accounting() {
+        let s = DecoderSpec::new(8, 80, 2);
+        assert_eq!(s.num_blocks(1_000_000), 12_500);
+        assert_eq!(s.stream_len(12_500), 12_502);
+        assert_eq!(s.encoded_bits(1_000_000), 12_502 * 8);
+        assert_eq!(s.total_inputs(), 24);
+        assert_eq!(s.num_states(), 1 << 16);
+    }
+
+    #[test]
+    fn partial_tail_block_rounds_up() {
+        let s = DecoderSpec::new(4, 10, 0);
+        assert_eq!(s.num_blocks(25), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_oversized_state_space() {
+        DecoderSpec::new(16, 64, 4).validate(); // 16*5 = 80 input bits > 60
+    }
+}

@@ -1,0 +1,126 @@
+//! Combinational (`N_s = 0`) encoder: independent exhaustive search per
+//! block over all `2^{N_in}` decoder inputs (§3.1, the Kwon et al. 2020
+//! baseline and the generator used for Figure 4's efficiency study).
+
+use super::{diff_decoded, EncodeResult, Encoder, SlicedPlane};
+use crate::decoder::SequentialDecoder;
+use crate::encoder::EncodeStats;
+
+/// Per-block exhaustive encoder. Requires `N_s = 0`.
+#[derive(Debug, Clone)]
+pub struct ExhaustiveEncoder {
+    decoder: SequentialDecoder,
+}
+
+impl ExhaustiveEncoder {
+    /// Wrap a combinational decoder.
+    pub fn new(decoder: SequentialDecoder) -> Self {
+        assert_eq!(
+            decoder.spec().n_s,
+            0,
+            "ExhaustiveEncoder requires N_s = 0; use ViterbiEncoder"
+        );
+        ExhaustiveEncoder { decoder }
+    }
+
+    /// Best input for a single (data, mask) block: returns
+    /// `(argmin input, min unmatched bits)`.
+    pub fn encode_block(
+        &self,
+        data: crate::gf2::Block,
+        mask: crate::gf2::Block,
+    ) -> (u32, u32) {
+        let table = self.decoder.tables().slot_table(0);
+        let mut best = (0u32, u32::MAX);
+        for (v, &out) in table.iter().enumerate() {
+            let err = ((out ^ data) & mask).count_ones();
+            if err < best.1 {
+                best = (v as u32, err);
+                if err == 0 {
+                    break;
+                }
+            }
+        }
+        best
+    }
+}
+
+impl Encoder for ExhaustiveEncoder {
+    fn encode(&self, plane: &SlicedPlane) -> EncodeResult {
+        assert_eq!(plane.n_out, self.decoder.spec().n_out);
+        let mut encoded = Vec::with_capacity(plane.num_blocks());
+        for t in 0..plane.num_blocks() {
+            let (v, _) = self.encode_block(plane.data[t], plane.mask[t]);
+            encoded.push(v);
+        }
+        let (matched, mismatches) =
+            diff_decoded(&self.decoder, plane, &encoded);
+        let unpruned = plane.unpruned_bits();
+        let spec = self.decoder.spec();
+        EncodeResult {
+            stats: EncodeStats {
+                total_bits: plane.num_blocks() * plane.n_out,
+                unpruned_bits: unpruned,
+                matched_bits: matched,
+                error_bits: unpruned - matched,
+                encoded_bits: spec.encoded_bits(plane.n_bits),
+            },
+            encoded,
+            mismatches,
+        }
+    }
+
+    fn decoder(&self) -> &SequentialDecoder {
+        &self.decoder
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoder::DecoderSpec;
+    use crate::gf2::BitVecF2;
+    use crate::rng::Rng;
+
+    #[test]
+    fn finds_exact_match_when_target_is_decodable() {
+        // Take a decoder output as data with full mask: error must be 0.
+        let spec = DecoderSpec::new(8, 24, 0);
+        let dec = SequentialDecoder::random(spec, 4);
+        let enc = ExhaustiveEncoder::new(dec.clone());
+        for v in [0u64, 17, 255] {
+            let target = dec.matrix().decode(v);
+            let (_, err) = enc.encode_block(target, crate::gf2::low_mask(24));
+            assert_eq!(err, 0);
+        }
+    }
+
+    #[test]
+    fn unpruned_below_n_in_is_usually_free() {
+        // With n_u ≤ N_in there are ≥ 2^{N_in - n_u} candidate inputs per
+        // target on average; with a random code the match probability is
+        // high (this is Fig. 4a's top-left regime).
+        let spec = DecoderSpec::new(12, 24, 0);
+        let dec = SequentialDecoder::random(spec, 9);
+        let enc = ExhaustiveEncoder::new(dec.clone());
+        let mut rng = Rng::new(5);
+        let mut errs = 0u32;
+        for _ in 0..50 {
+            let data = BitVecF2::random(24, 0.5, &mut rng).block(0, 24);
+            // exactly 6 unpruned bits
+            let mut mask: u128 = 0;
+            while mask.count_ones() < 6 {
+                mask |= 1 << rng.below(24);
+            }
+            errs += enc.encode_block(data, mask).1;
+        }
+        assert_eq!(errs, 0, "n_u=6 ≪ N_in=12 should always match");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_sequential_decoder() {
+        let spec = DecoderSpec::new(8, 24, 1);
+        ExhaustiveEncoder::new(SequentialDecoder::random(spec, 1));
+    }
+}

@@ -1,0 +1,198 @@
+//! Weight encoding: find the input (sequence) whose decoded output best
+//! matches the unpruned bits of each block.
+//!
+//! * [`ExhaustiveEncoder`] — the combinational case (`N_s = 0`): blocks
+//!   are independent, so each block is an exhaustive search over the
+//!   `2^{N_in}` decoder inputs (Kwon et al. 2020 baseline).
+//! * [`ViterbiEncoder`] — the paper's contribution (§4, Algorithm 3):
+//!   with shift registers the decoded output depends on `N_s + 1`
+//!   consecutive inputs, so encoding is a maximum-likelihood sequence
+//!   search on a hidden-Markov trellis with `2^{N_in·N_s}` states and
+//!   `2^{N_in}` transitions, solved by dynamic programming in
+//!   `O(l · 2^{N_in(N_s+1)})` time — minimizing total unmatched bits.
+//!
+//! Pruned positions are don't-cares: the error metric is the Hamming
+//! distance restricted to mask bits (`gf2::masked_hamming`).
+
+mod exhaustive;
+mod plane;
+mod stats;
+mod viterbi;
+
+pub use exhaustive::ExhaustiveEncoder;
+pub use plane::SlicedPlane;
+pub use stats::EncodeStats;
+pub use viterbi::ViterbiEncoder;
+
+use crate::decoder::SequentialDecoder;
+
+/// Output of encoding one bit-plane.
+#[derive(Debug, Clone)]
+pub struct EncodeResult {
+    /// Encoded stream, `l + N_s` chunks of `N_in` bits each (the first
+    /// `N_s` chunks are the zero register pre-load, Algorithm 3).
+    pub encoded: Vec<u32>,
+    /// Match statistics (encoding efficiency `E`, Eq. 1).
+    pub stats: EncodeStats,
+    /// Flat bit positions (within the plane) where the decoded output
+    /// disagrees with an *unpruned* original bit; exactly the bits the
+    /// correction stream must flip for lossless reconstruction.
+    pub mismatches: Vec<usize>,
+}
+
+impl EncodeResult {
+    /// Encoding efficiency `E` in percent (Eq. 1).
+    pub fn efficiency(&self) -> f64 {
+        self.stats.efficiency()
+    }
+}
+
+/// Shared trait so experiments can swap encoders.
+pub trait Encoder {
+    /// Encode a sliced plane, minimizing unmatched unpruned bits.
+    fn encode(&self, plane: &SlicedPlane) -> EncodeResult;
+    /// The decoder this encoder targets.
+    fn decoder(&self) -> &SequentialDecoder;
+}
+
+/// Decode `encoded` with `dec` and diff against the plane: returns
+/// (matched_unpruned_bits, mismatch_positions). Used by both encoders to
+/// produce ground-truth statistics (and by tests to cross-check DP
+/// bookkeeping).
+pub(crate) fn diff_decoded(
+    dec: &SequentialDecoder,
+    plane: &SlicedPlane,
+    encoded: &[u32],
+) -> (usize, Vec<usize>) {
+    let n_out = dec.spec().n_out;
+    let blocks = dec.decode_stream(encoded);
+    assert_eq!(blocks.len(), plane.num_blocks());
+    let mut matched = 0usize;
+    let mut mismatches = Vec::new();
+    for (t, out) in blocks.iter().enumerate() {
+        let diff = (out ^ plane.data[t]) & plane.mask[t];
+        matched += (plane.mask[t].count_ones() - diff.count_ones()) as usize;
+        let mut d = diff;
+        while d != 0 {
+            let b = d.trailing_zeros() as usize;
+            mismatches.push(t * n_out + b);
+            d &= d - 1;
+        }
+    }
+    (matched, mismatches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoder::DecoderSpec;
+    use crate::gf2::BitVecF2;
+    use crate::rng::Rng;
+
+    /// Encoding must be decodable back to within the reported error count,
+    /// for both encoders across several shapes.
+    #[test]
+    fn encode_then_decode_matches_reported_errors() {
+        let mut rng = Rng::new(10);
+        for &(n_in, n_out, n_s) in
+            &[(4usize, 10usize, 0usize), (4, 10, 1), (4, 10, 2), (6, 18, 1)]
+        {
+            let spec = DecoderSpec::new(n_in, n_out, n_s);
+            let dec = SequentialDecoder::random(spec, 123);
+            let n_bits = 400;
+            let data = BitVecF2::random(n_bits, 0.5, &mut rng);
+            let mask = BitVecF2::random(n_bits, 0.4, &mut rng);
+            let plane = SlicedPlane::new(&data, &mask, n_out);
+            let enc = ViterbiEncoder::new(dec.clone());
+            let res = enc.encode(&plane);
+            let (matched, mism) = diff_decoded(&dec, &plane, &res.encoded);
+            assert_eq!(matched, res.stats.matched_bits);
+            assert_eq!(mism, res.mismatches);
+            assert_eq!(
+                res.stats.error_bits,
+                res.mismatches.len(),
+                "spec {spec:?}"
+            );
+        }
+    }
+
+    /// For N_s = 0 the Viterbi DP must agree exactly with exhaustive
+    /// per-block search (same minimal error count).
+    #[test]
+    fn viterbi_ns0_equals_exhaustive() {
+        let mut rng = Rng::new(77);
+        let spec = DecoderSpec::new(6, 16, 0);
+        let dec = SequentialDecoder::random(spec, 5);
+        let data = BitVecF2::random(800, 0.5, &mut rng);
+        let mask = BitVecF2::random(800, 0.3, &mut rng);
+        let plane = SlicedPlane::new(&data, &mask, 16);
+        let ex = ExhaustiveEncoder::new(dec.clone()).encode(&plane);
+        let vit = ViterbiEncoder::new(dec).encode(&plane);
+        assert_eq!(ex.stats.error_bits, vit.stats.error_bits);
+        assert_eq!(ex.stats.matched_bits, vit.stats.matched_bits);
+    }
+
+    /// Sequential encoding (N_s > 0) must never do worse than N_s = 0 on
+    /// average over random planes — the paper's central claim.
+    #[test]
+    fn sequential_beats_combinational_on_average() {
+        // N_in = 6 keeps the debug-mode DP fast (4096 states).
+        let mut rng = Rng::new(3);
+        let n_out = 20;
+        let mut err0 = 0usize;
+        let mut err2 = 0usize;
+        for trial in 0..5 {
+            let data = BitVecF2::random(1_000, 0.5, &mut rng);
+            let mask = BitVecF2::random(1_000, 0.4, &mut rng);
+            let plane = SlicedPlane::new(&data, &mask, n_out);
+            let d0 = SequentialDecoder::random(
+                DecoderSpec::new(6, n_out, 0),
+                trial,
+            );
+            let d2 = SequentialDecoder::random(
+                DecoderSpec::new(6, n_out, 2),
+                trial,
+            );
+            err0 += ViterbiEncoder::new(d0).encode(&plane).stats.error_bits;
+            err2 += ViterbiEncoder::new(d2).encode(&plane).stats.error_bits;
+        }
+        assert!(
+            err2 < err0,
+            "sequential N_s=2 ({err2}) should beat N_s=0 ({err0})"
+        );
+    }
+
+    /// A fully pruned plane encodes with zero errors (everything is a
+    /// don't-care).
+    #[test]
+    fn all_pruned_plane_is_free() {
+        let spec = DecoderSpec::new(4, 12, 1);
+        let dec = SequentialDecoder::random(spec, 8);
+        let data = BitVecF2::random(240, 0.5, &mut Rng::new(1));
+        let mask = BitVecF2::zeros(240);
+        let plane = SlicedPlane::new(&data, &mask, 12);
+        let res = ViterbiEncoder::new(dec).encode(&plane);
+        assert_eq!(res.stats.error_bits, 0);
+        assert_eq!(res.stats.unpruned_bits, 0);
+        assert_eq!(res.efficiency(), 100.0);
+    }
+
+    /// Sparse planes (few unpruned bits per block) should encode near
+    /// perfectly when the rate rule holds.
+    #[test]
+    fn high_sparsity_encodes_nearly_perfectly() {
+        let mut rng = Rng::new(4);
+        let spec = DecoderSpec::for_sparsity(8, 0.9, 1); // N_out = 80
+        let dec = SequentialDecoder::random(spec, 21);
+        let n_bits = 8_000;
+        let data = BitVecF2::random(n_bits, 0.5, &mut rng);
+        let mask = BitVecF2::random(n_bits, 0.1, &mut rng); // S = 0.9
+        let plane = SlicedPlane::new(&data, &mask, 80);
+        let res = ViterbiEncoder::new(dec).encode(&plane);
+        assert!(
+            res.efficiency() > 95.0,
+            "E = {:.2}% too low",
+            res.efficiency()
+        );
+    }
+}

@@ -1,0 +1,110 @@
+//! Sliced bit-plane: the encoder's working form.
+//!
+//! §4 "Weight manipulation": a binary plane (one bit position of every
+//! weight in a layer) is flattened to 1-D and sliced into `l = ⌈mn/N_out⌉`
+//! blocks of `N_out` bits. The pruning mask is sliced identically; tail
+//! padding is masked out (pruned ⇒ don't-care), which matches the paper's
+//! handling of the final partial block.
+
+use crate::gf2::{BitVecF2, Block};
+
+/// A bit-plane sliced into `N_out`-bit blocks with a parallel mask.
+#[derive(Debug, Clone)]
+pub struct SlicedPlane {
+    /// Data blocks (`l` entries), LSB-first bit packing.
+    pub data: Vec<Block>,
+    /// Mask blocks: bit set ⟺ position is *unpruned* (must match).
+    pub mask: Vec<Block>,
+    /// Original plane length in bits (before padding).
+    pub n_bits: usize,
+    /// Block width `N_out`.
+    pub n_out: usize,
+}
+
+impl SlicedPlane {
+    /// Slice `data` and `mask` (same length) into `n_out`-bit blocks.
+    pub fn new(data: &BitVecF2, mask: &BitVecF2, n_out: usize) -> Self {
+        assert_eq!(data.len(), mask.len(), "data/mask length mismatch");
+        assert!(n_out >= 1 && n_out <= 128);
+        let n_bits = data.len();
+        let l = n_bits.div_ceil(n_out);
+        let mut dblocks = Vec::with_capacity(l);
+        let mut mblocks = Vec::with_capacity(l);
+        for t in 0..l {
+            let start = t * n_out;
+            let width = n_out.min(n_bits - start);
+            dblocks.push(data.block(start, width));
+            // Tail bits beyond n_bits stay 0 in the mask: padding is free.
+            mblocks.push(mask.block(start, width));
+        }
+        SlicedPlane { data: dblocks, mask: mblocks, n_bits, n_out }
+    }
+
+    /// Number of blocks `l`.
+    #[inline]
+    pub fn num_blocks(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Total unpruned bits (the denominator of encoding efficiency).
+    pub fn unpruned_bits(&self) -> usize {
+        self.mask.iter().map(|m| m.count_ones() as usize).sum()
+    }
+
+    /// Per-block unpruned counts `n_u` (for coefficient-of-variation
+    /// statistics, §3.2).
+    pub fn n_u(&self) -> Vec<u32> {
+        self.mask.iter().map(|m| m.count_ones()).collect()
+    }
+
+    /// Reconstruct the flat (unsliced) data bits, for round-trip checks.
+    pub fn to_bits(&self) -> BitVecF2 {
+        let mut v = BitVecF2::zeros(self.n_bits);
+        for (t, &b) in self.data.iter().enumerate() {
+            let start = t * self.n_out;
+            let width = self.n_out.min(self.n_bits - start);
+            v.set_block(start, width, b);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn slicing_roundtrip() {
+        let mut rng = Rng::new(1);
+        let data = BitVecF2::random(1003, 0.5, &mut rng);
+        let mask = BitVecF2::random(1003, 0.3, &mut rng);
+        let p = SlicedPlane::new(&data, &mask, 80);
+        assert_eq!(p.num_blocks(), 13);
+        assert_eq!(p.to_bits(), data);
+    }
+
+    #[test]
+    fn unpruned_counts_match_mask() {
+        let mut rng = Rng::new(2);
+        let data = BitVecF2::random(500, 0.5, &mut rng);
+        let mask = BitVecF2::random(500, 0.25, &mut rng);
+        let p = SlicedPlane::new(&data, &mask, 32);
+        assert_eq!(p.unpruned_bits(), mask.count_ones());
+        assert_eq!(
+            p.n_u().iter().map(|&x| x as usize).sum::<usize>(),
+            mask.count_ones()
+        );
+    }
+
+    #[test]
+    fn tail_padding_is_masked_out() {
+        let data = BitVecF2::from_bools(&[true; 10]);
+        let mask = BitVecF2::from_bools(&[true; 10]);
+        let p = SlicedPlane::new(&data, &mask, 8);
+        assert_eq!(p.num_blocks(), 2);
+        // Second block: only 2 real bits → mask has exactly 2 set bits.
+        assert_eq!(p.mask[1].count_ones(), 2);
+        assert_eq!(p.data[1], 0b11);
+    }
+}

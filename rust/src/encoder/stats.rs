@@ -1,0 +1,84 @@
+//! Encoding statistics: efficiency `E` (Eq. 1) and bit accounting.
+
+/// Match bookkeeping for one encoded plane (or an aggregate of planes).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EncodeStats {
+    /// Total bits in the plane (`l · N_out` minus nothing; includes
+    /// pruned positions).
+    pub total_bits: usize,
+    /// Unpruned bits (mask popcount) — denominator of `E`.
+    pub unpruned_bits: usize,
+    /// Unpruned bits the decoder reproduces exactly — numerator of `E`.
+    pub matched_bits: usize,
+    /// Unpruned bits that mismatch (`unpruned − matched`).
+    pub error_bits: usize,
+    /// Encoded payload bits (`(l + N_s) · N_in`).
+    pub encoded_bits: usize,
+}
+
+impl EncodeStats {
+    /// Encoding efficiency `E` in percent (Eq. 1):
+    /// `matched / unpruned × 100`. Defined as 100% for an empty mask.
+    pub fn efficiency(&self) -> f64 {
+        if self.unpruned_bits == 0 {
+            100.0
+        } else {
+            self.matched_bits as f64 / self.unpruned_bits as f64 * 100.0
+        }
+    }
+
+    /// Fold another plane's stats into an aggregate (e.g. across the 32
+    /// bit-planes of an FP32 tensor, or across layers).
+    pub fn merge(&mut self, other: &EncodeStats) {
+        self.total_bits += other.total_bits;
+        self.unpruned_bits += other.unpruned_bits;
+        self.matched_bits += other.matched_bits;
+        self.error_bits += other.error_bits;
+        self.encoded_bits += other.encoded_bits;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_basic() {
+        let s = EncodeStats {
+            total_bits: 100,
+            unpruned_bits: 40,
+            matched_bits: 38,
+            error_bits: 2,
+            encoded_bits: 16,
+        };
+        assert!((s.efficiency() - 95.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_mask_is_perfect() {
+        let s = EncodeStats::default();
+        assert_eq!(s.efficiency(), 100.0);
+    }
+
+    #[test]
+    fn merge_adds_fields() {
+        let mut a = EncodeStats {
+            total_bits: 10,
+            unpruned_bits: 4,
+            matched_bits: 4,
+            error_bits: 0,
+            encoded_bits: 2,
+        };
+        let b = EncodeStats {
+            total_bits: 10,
+            unpruned_bits: 6,
+            matched_bits: 3,
+            error_bits: 3,
+            encoded_bits: 2,
+        };
+        a.merge(&b);
+        assert_eq!(a.unpruned_bits, 10);
+        assert_eq!(a.matched_bits, 7);
+        assert!((a.efficiency() - 70.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,615 @@
+//! Viterbi (maximum-likelihood sequence) encoder — Algorithm 3.
+//!
+//! Sequential decoding makes block `t` depend on inputs
+//! `(w_t^e, …, w_{t-N_s}^e)`; naive encoding would cost
+//! `O(2^{N_in·l})`. Modelling the register contents as a hidden-Markov
+//! state (`2^{N_in·N_s}` states, `2^{N_in}` transitions) reduces it to
+//! `O(l · 2^{N_in(N_s+1)})` time / `O(2^{N_in·N_s})` DP space via dynamic
+//! programming, minimizing the total number of unmatched unpruned bits.
+//!
+//! State packing: the most recent chunk lives in the low `N_in` bits —
+//! `s_t = i_t | i_{t-1} << N_in | …`. Registers pre-load to zero, so the
+//! DP starts with only state 0 reachable (the paper fixes
+//! `w_1^e = w_2^e = BIN(0)`).
+//!
+//! Hot-path layout (per time step, `N_s = 2` specialization):
+//!
+//! * fold `data_t`/`mask_t` into the slot-0 table once:
+//!   `t0md[c] = (T0[c] ⊕ data_t) & mask_t`, `t1m/t2m` similarly;
+//! * the candidate error is then a single XOR + popcount:
+//!   `err = popcount(t0md[c] ⊕ t1m[lo] ⊕ t2m[hi])`;
+//! * loop order `(lo, c, hi)` keeps `dp_old[lo | hi≪N_in]` and `t2m[hi]`
+//!   streaming linearly in the innermost loop.
+//!
+//! An optional **beam** (`with_beam`) prunes source states whose cost
+//! exceeds `current_min + beam`; with a random code the survivor set
+//! collapses quickly, giving order-of-magnitude speedups at (measured —
+//! see EXPERIMENTS.md §Perf) negligible loss in `E`. Exact DP is the
+//! default everywhere results are reported unless stated otherwise.
+
+use super::{diff_decoded, EncodeResult, Encoder, SlicedPlane};
+use crate::decoder::SequentialDecoder;
+use crate::encoder::EncodeStats;
+use crate::gf2::Block;
+
+const INF: u32 = u32::MAX / 2;
+
+/// Gather the bits of `v` selected by `mask` into the low bits of a
+/// `u64` (requires `mask.count_ones() ≤ 64`). The DP's error metric
+/// only involves the `n_u` unpruned positions, so compacting lets the
+/// inner loop work on one `u64` instead of a full 128-bit block —
+/// linear over GF(2), so `compact(a ^ b) = compact(a) ^ compact(b)`.
+#[inline]
+fn compact_bits(v: Block, mask: Block) -> u64 {
+    #[cfg(all(target_arch = "x86_64", target_feature = "bmi2"))]
+    {
+        // Two PEXTs (low/high lane) + shift-merge.
+        let lo = unsafe {
+            std::arch::x86_64::_pext_u64(v as u64, mask as u64)
+        };
+        let hi = unsafe {
+            std::arch::x86_64::_pext_u64((v >> 64) as u64, (mask >> 64) as u64)
+        };
+        lo | (hi << (mask as u64).count_ones())
+    }
+    #[cfg(not(all(target_arch = "x86_64", target_feature = "bmi2")))]
+    {
+        let mut out = 0u64;
+        let mut m = mask;
+        let mut k = 0u32;
+        while m != 0 {
+            let b = m.trailing_zeros();
+            out |= (((v >> b) & 1) as u64) << k;
+            k += 1;
+            m &= m - 1;
+        }
+        out
+    }
+}
+
+/// Sequential DP encoder for any `N_s ≤ 4` (specialized for 0, 1, 2).
+#[derive(Debug, Clone)]
+pub struct ViterbiEncoder {
+    decoder: SequentialDecoder,
+    /// Source states with `dp > min + beam` are skipped when `Some`.
+    beam: Option<u32>,
+}
+
+impl ViterbiEncoder {
+    /// Exact DP encoder.
+    pub fn new(decoder: SequentialDecoder) -> Self {
+        ViterbiEncoder { decoder, beam: None }
+    }
+
+    /// Beam-pruned DP: keep states within `beam` errors of the running
+    /// minimum. `beam = 0` keeps only optimal-so-far states.
+    pub fn with_beam(decoder: SequentialDecoder, beam: u32) -> Self {
+        ViterbiEncoder { decoder, beam: Some(beam) }
+    }
+
+    fn encode_ns0(&self, plane: &SlicedPlane) -> Vec<u32> {
+        let table = self.decoder.tables().slot_table(0);
+        plane
+            .data
+            .iter()
+            .zip(&plane.mask)
+            .map(|(&d, &m)| {
+                let mut best = (0u32, u32::MAX);
+                for (v, &out) in table.iter().enumerate() {
+                    let err = ((out ^ d) & m).count_ones();
+                    if err < best.1 {
+                        best = (v as u32, err);
+                        if err == 0 {
+                            break;
+                        }
+                    }
+                }
+                best.0
+            })
+            .collect()
+    }
+
+    fn encode_ns1(&self, plane: &SlicedPlane) -> Vec<u32> {
+        let spec = self.decoder.spec();
+        let n_in = spec.n_in;
+        let chunks = 1usize << n_in;
+        let l = plane.num_blocks();
+        let t0 = self.decoder.tables().slot_table(0);
+        let t1 = self.decoder.tables().slot_table(1);
+
+        let mut dp = vec![INF; chunks];
+        dp[0] = 0;
+        let mut dp_new = vec![INF; chunks];
+        let mut path = vec![0u16; l * chunks];
+        let mut t0md = vec![0 as Block; chunks];
+        let mut t1m = vec![0 as Block; chunks];
+
+        for t in 0..l {
+            let (d, m) = (plane.data[t], plane.mask[t]);
+            for c in 0..chunks {
+                t0md[c] = (t0[c] ^ d) & m;
+                t1m[c] = t1[c] & m;
+            }
+            let cutoff = self.cutoff(&dp);
+            dp_new.fill(INF);
+            let prow = &mut path[t * chunks..(t + 1) * chunks];
+            for lo in 0..chunks {
+                let base = dp[lo];
+                if base > cutoff {
+                    continue;
+                }
+                let x1 = t1m[lo];
+                for c in 0..chunks {
+                    let cand = base + (t0md[c] ^ x1).count_ones();
+                    if cand < dp_new[c] {
+                        dp_new[c] = cand;
+                        prow[c] = lo as u16;
+                    }
+                }
+            }
+            std::mem::swap(&mut dp, &mut dp_new);
+        }
+        self.backtrack(plane, &dp, &path, chunks)
+    }
+
+    /// `N_s = 2` fast path.
+    ///
+    /// The naive relaxation scans all `2^{N_in}` source `hi` chunks per
+    /// `(c, lo)` — `2^{3·N_in}` candidate evaluations per block. Three
+    /// exact optimizations cut this by ~2 orders of magnitude (measured
+    /// in EXPERIMENTS.md §Perf):
+    ///
+    /// 1. **Tier sort + early exit.** Per `lo`, sources are
+    ///    counting-sorted by `dp_old`. Since `cand = dp_old + err ≥
+    ///    dp_old`, the scan stops as soon as the next source's `dp_old`
+    ///    is ≥ the best candidate found — with a random code at high
+    ///    sparsity an exact match (`err = 0`) in the lowest tier ends
+    ///    most scans after a handful of probes.
+    /// 2. **Contiguous per-`lo` working set.** `dp_old` values and the
+    ///    masked `T2` entries are re-laid-out in sorted order so the
+    ///    inner loop streams flat arrays instead of gathering at stride
+    ///    `2^{N_in}` (which blows L1).
+    /// 3. **Bit compaction.** Only the `n_u` masked bits matter; they
+    ///    are PEXT-gathered into one `u64` (`n_u ≤ 64` in practice), so
+    ///    the error metric is a single XOR + POPCNT.
+    fn encode_ns2(&self, plane: &SlicedPlane) -> Vec<u32> {
+        let spec = self.decoder.spec();
+        let n_in = spec.n_in;
+        let chunks = 1usize << n_in;
+        let n_states = chunks * chunks;
+        let l = plane.num_blocks();
+        let t0 = self.decoder.tables().slot_table(0);
+        let t1 = self.decoder.tables().slot_table(1);
+        let t2 = self.decoder.tables().slot_table(2);
+
+        let mut dp = vec![INF; n_states];
+        dp[0] = 0;
+        let mut dp_new = vec![INF; n_states];
+        let mut path = vec![0u16; l * n_states];
+        let mut t0md = vec![0u64; chunks];
+        let mut t1m = vec![0u64; chunks];
+        let mut t2m = vec![0u64; chunks];
+        let mut t0md_w = vec![0 as Block; chunks];
+        let mut t1m_w = vec![0 as Block; chunks];
+        let mut t2m_w = vec![0 as Block; chunks];
+        let mut scratch = Ns2Scratch::new(chunks);
+
+        for t in 0..l {
+            let (d, m) = (plane.data[t], plane.mask[t]);
+            let cutoff = self.cutoff(&dp);
+            dp_new.fill(INF);
+            let prow = &mut path[t * n_states..(t + 1) * n_states];
+            if m.count_ones() <= 64 {
+                for c in 0..chunks {
+                    t0md[c] = compact_bits((t0[c] ^ d) & m, m);
+                    t1m[c] = compact_bits(t1[c] & m, m);
+                    t2m[c] = compact_bits(t2[c] & m, m);
+                }
+                relax_ns2(
+                    &dp, &mut dp_new, prow, &t0md, &t1m, &t2m, n_in,
+                    cutoff, &mut scratch,
+                );
+            } else {
+                // Rare wide-mask fallback: full-width blocks.
+                for c in 0..chunks {
+                    t0md_w[c] = (t0[c] ^ d) & m;
+                    t1m_w[c] = t1[c] & m;
+                    t2m_w[c] = t2[c] & m;
+                }
+                relax_ns2(
+                    &dp, &mut dp_new, prow, &t0md_w, &t1m_w, &t2m_w,
+                    n_in, cutoff, &mut scratch,
+                );
+            }
+            std::mem::swap(&mut dp, &mut dp_new);
+        }
+        self.backtrack(plane, &dp, &path, n_states)
+    }
+
+    /// Generic fallback for `N_s ≥ 3` (small `N_in` only).
+    fn encode_generic(&self, plane: &SlicedPlane) -> Vec<u32> {
+        let spec = self.decoder.spec();
+        let n_in = spec.n_in;
+        let ns = spec.n_s;
+        let chunks = 1usize << n_in;
+        let n_states = spec.num_states();
+        let chunk_mask = chunks - 1;
+        let l = plane.num_blocks();
+        let tabs = self.decoder.tables();
+
+        // hist[s] = Σ_{k=1..ns} T_k[chunk_{k-1}(s)] (mask applied later).
+        let mut hist = vec![0 as Block; n_states];
+        for (s, h) in hist.iter_mut().enumerate() {
+            for k in 1..=ns {
+                *h ^= tabs.slot(k, (s >> ((k - 1) * n_in)) & chunk_mask);
+            }
+        }
+        let t0 = tabs.slot_table(0);
+
+        let mut dp = vec![INF; n_states];
+        dp[0] = 0;
+        let mut dp_new = vec![INF; n_states];
+        let mut path = vec![0u16; l * n_states];
+        let keep = n_states >> n_in; // states sans oldest chunk
+
+        for t in 0..l {
+            let (d, m) = (plane.data[t], plane.mask[t]);
+            let cutoff = self.cutoff(&dp);
+            dp_new.fill(INF);
+            let prow = &mut path[t * n_states..(t + 1) * n_states];
+            for s_old in 0..n_states {
+                let base = dp[s_old];
+                if base > cutoff {
+                    continue;
+                }
+                let oldest = (s_old / keep.max(1)) & chunk_mask;
+                let carried = (s_old % keep.max(1)) << n_in;
+                let h = (hist[s_old] ^ d) & m;
+                for c in 0..chunks {
+                    let cand = base + ((t0[c] & m) ^ h).count_ones();
+                    let s_new = c | carried;
+                    if cand < dp_new[s_new] {
+                        dp_new[s_new] = cand;
+                        prow[s_new] = oldest as u16;
+                    }
+                }
+            }
+            std::mem::swap(&mut dp, &mut dp_new);
+        }
+        self.backtrack(plane, &dp, &path, n_states)
+    }
+
+    /// Beam cutoff for the current DP front.
+    fn cutoff(&self, dp: &[u32]) -> u32 {
+        match self.beam {
+            None => INF,
+            Some(b) => {
+                let min = dp.iter().copied().min().unwrap_or(0);
+                min.saturating_add(b)
+            }
+        }
+    }
+
+    /// Walk the path array back from the best final state; returns the
+    /// full encoded stream including the `N_s` zero pre-load chunks.
+    fn backtrack(
+        &self,
+        plane: &SlicedPlane,
+        dp: &[u32],
+        path: &[u16],
+        n_states: usize,
+    ) -> Vec<u32> {
+        let spec = self.decoder.spec();
+        let n_in = spec.n_in;
+        let ns = spec.n_s;
+        let chunk_mask = (1usize << n_in) - 1;
+        let l = plane.num_blocks();
+
+        let mut s = dp
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+
+        let mut inputs = vec![0u32; l];
+        for t in (0..l).rev() {
+            inputs[t] = (s & chunk_mask) as u32;
+            let oldest = path[t * n_states + s] as usize;
+            s = (s >> n_in) | (oldest << (n_in * ns.saturating_sub(1)));
+        }
+        let mut encoded = vec![0u32; ns];
+        encoded.extend(inputs);
+        encoded
+    }
+}
+
+/// Word abstraction so the `N_s = 2` relaxation runs on compacted `u64`
+/// patterns (fast path) or full 128-bit blocks (wide-mask fallback).
+trait Word: Copy {
+    fn ham(self, other: Self) -> u32;
+    fn bxor(self, other: Self) -> Self;
+}
+
+impl Word for u64 {
+    #[inline(always)]
+    fn ham(self, other: Self) -> u32 {
+        (self ^ other).count_ones()
+    }
+    #[inline(always)]
+    fn bxor(self, other: Self) -> Self {
+        self ^ other
+    }
+}
+
+impl Word for Block {
+    #[inline(always)]
+    fn ham(self, other: Self) -> u32 {
+        (self ^ other).count_ones()
+    }
+    #[inline(always)]
+    fn bxor(self, other: Self) -> Self {
+        self ^ other
+    }
+}
+
+/// Reusable buffers for [`relax_ns2`].
+struct Ns2Scratch {
+    src_dp: Vec<u32>,
+    src_hi: Vec<u16>,
+}
+
+impl Ns2Scratch {
+    fn new(chunks: usize) -> Self {
+        Ns2Scratch { src_dp: vec![0; chunks], src_hi: vec![0; chunks] }
+    }
+}
+
+/// One DP step of the `N_s = 2` trellis (see `encode_ns2` for the
+/// optimization notes). Exact: early exits never skip an improving
+/// candidate because sources are scanned in ascending `dp_old` order.
+#[allow(clippy::too_many_arguments)]
+fn relax_ns2<W: Word>(
+    dp: &[u32],
+    dp_new: &mut [u32],
+    prow: &mut [u16],
+    t0md: &[W],
+    t1m: &[W],
+    t2m: &[W],
+    n_in: usize,
+    cutoff: u32,
+    scratch: &mut Ns2Scratch,
+) {
+    let chunks = 1usize << n_in;
+    // Unreached states (dp = INF) are never sources.
+    let lim = cutoff.min(INF - 1);
+    let mut src_t2: Vec<W> = Vec::with_capacity(chunks);
+    for lo in 0..chunks {
+        // Collect + counting-sort sources by dp_old (ascending).
+        let mut n_src = 0usize;
+        let mut min_dp = u32::MAX;
+        let mut max_dp = 0u32;
+        for hi in 0..chunks {
+            let v = dp[lo | (hi << n_in)];
+            if v <= lim {
+                min_dp = min_dp.min(v);
+                max_dp = max_dp.max(v);
+                n_src += 1;
+            }
+        }
+        if n_src == 0 {
+            continue;
+        }
+        src_t2.clear();
+        src_t2.resize(n_src, t2m[0]);
+        let span = (max_dp - min_dp) as usize + 1;
+        if span <= 256 {
+            let mut offs = vec![0u32; span + 1];
+            for hi in 0..chunks {
+                let v = dp[lo | (hi << n_in)];
+                if v <= lim {
+                    offs[(v - min_dp) as usize + 1] += 1;
+                }
+            }
+            for i in 0..span {
+                offs[i + 1] += offs[i];
+            }
+            for hi in 0..chunks {
+                let v = dp[lo | (hi << n_in)];
+                if v <= lim {
+                    let slot = &mut offs[(v - min_dp) as usize];
+                    let i = *slot as usize;
+                    *slot += 1;
+                    scratch.src_dp[i] = v;
+                    scratch.src_hi[i] = hi as u16;
+                    src_t2[i] = t2m[hi];
+                }
+            }
+        } else {
+            // Rare wide spread: comparison sort.
+            let mut idx: Vec<usize> = (0..chunks)
+                .filter(|&hi| dp[lo | (hi << n_in)] <= lim)
+                .collect();
+            idx.sort_unstable_by_key(|&hi| dp[lo | (hi << n_in)]);
+            for (i, &hi) in idx.iter().enumerate() {
+                scratch.src_dp[i] = dp[lo | (hi << n_in)];
+                scratch.src_hi[i] = hi as u16;
+                src_t2[i] = t2m[hi];
+            }
+        }
+
+        let row = lo << n_in; // dp_new index base: c | lo << n_in
+        let x1 = t1m[lo];
+        let src_dp = &scratch.src_dp[..n_src];
+        let src_hi = &scratch.src_hi[..n_src];
+        for c in 0..chunks {
+            let x = t0md[c].bxor(x1);
+            let mut best = INF;
+            let mut arg = 0u16;
+            for i in 0..n_src {
+                let dv = src_dp[i];
+                if dv >= best {
+                    break; // sorted: no later source can improve
+                }
+                let cand = dv + x.ham(src_t2[i]);
+                if cand < best {
+                    best = cand;
+                    arg = src_hi[i];
+                }
+            }
+            let idx = c | row;
+            dp_new[idx] = best;
+            prow[idx] = arg;
+        }
+    }
+}
+
+impl Encoder for ViterbiEncoder {
+    fn encode(&self, plane: &SlicedPlane) -> EncodeResult {
+        let spec = self.decoder.spec();
+        assert_eq!(plane.n_out, spec.n_out, "plane/decoder N_out mismatch");
+        let encoded = match spec.n_s {
+            0 => {
+                let mut e = self.encode_ns0(plane);
+                e.splice(0..0, std::iter::empty());
+                e
+            }
+            1 => self.encode_ns1(plane),
+            2 => self.encode_ns2(plane),
+            _ => self.encode_generic(plane),
+        };
+        let (matched, mismatches) =
+            diff_decoded(&self.decoder, plane, &encoded);
+        let unpruned = plane.unpruned_bits();
+        EncodeResult {
+            stats: EncodeStats {
+                total_bits: plane.num_blocks() * plane.n_out,
+                unpruned_bits: unpruned,
+                matched_bits: matched,
+                error_bits: unpruned - matched,
+                encoded_bits: spec.encoded_bits(plane.n_bits),
+            },
+            encoded,
+            mismatches,
+        }
+    }
+
+    fn decoder(&self) -> &SequentialDecoder {
+        &self.decoder
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoder::DecoderSpec;
+    use crate::gf2::BitVecF2;
+    use crate::rng::Rng;
+
+    /// Brute-force optimal sequence error for tiny instances.
+    fn brute_force_min_err(
+        dec: &SequentialDecoder,
+        plane: &SlicedPlane,
+    ) -> u32 {
+        let spec = dec.spec();
+        let l = plane.num_blocks();
+        let chunks = 1u32 << spec.n_in;
+        let total = (chunks as u64).pow(l as u32);
+        assert!(total <= 1 << 24, "instance too large for brute force");
+        let mut best = u32::MAX;
+        for combo in 0..total {
+            let mut inputs = vec![0u32; spec.n_s];
+            let mut c = combo;
+            for _ in 0..l {
+                inputs.push((c % chunks as u64) as u32);
+                c /= chunks as u64;
+            }
+            let blocks = dec.decode_stream(&inputs);
+            let err: u32 = blocks
+                .iter()
+                .zip(plane.data.iter().zip(&plane.mask))
+                .map(|(o, (&d, &m))| ((o ^ d) & m).count_ones())
+                .sum();
+            best = best.min(err);
+        }
+        best
+    }
+
+    #[test]
+    fn dp_is_optimal_vs_brute_force_ns1() {
+        let mut rng = Rng::new(42);
+        let spec = DecoderSpec::new(3, 8, 1);
+        let dec = SequentialDecoder::random(spec, 17);
+        for trial in 0..5 {
+            let data = BitVecF2::random(40, 0.5, &mut rng);
+            let mask = BitVecF2::random(40, 0.5, &mut rng);
+            let plane = SlicedPlane::new(&data, &mask, 8);
+            let res = ViterbiEncoder::new(dec.clone()).encode(&plane);
+            let opt = brute_force_min_err(&dec, &plane);
+            assert_eq!(
+                res.stats.error_bits as u32, opt,
+                "trial {trial}: DP {} vs brute {opt}",
+                res.stats.error_bits
+            );
+        }
+    }
+
+    #[test]
+    fn dp_is_optimal_vs_brute_force_ns2() {
+        let mut rng = Rng::new(43);
+        let spec = DecoderSpec::new(2, 6, 2);
+        let dec = SequentialDecoder::random(spec, 23);
+        for trial in 0..5 {
+            let data = BitVecF2::random(48, 0.5, &mut rng);
+            let mask = BitVecF2::random(48, 0.6, &mut rng);
+            let plane = SlicedPlane::new(&data, &mask, 6);
+            let res = ViterbiEncoder::new(dec.clone()).encode(&plane);
+            let opt = brute_force_min_err(&dec, &plane);
+            assert_eq!(res.stats.error_bits as u32, opt, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn dp_is_optimal_vs_brute_force_ns3_generic_path() {
+        let mut rng = Rng::new(44);
+        let spec = DecoderSpec::new(2, 5, 3);
+        let dec = SequentialDecoder::random(spec, 29);
+        for trial in 0..3 {
+            let data = BitVecF2::random(40, 0.5, &mut rng);
+            let mask = BitVecF2::random(40, 0.5, &mut rng);
+            let plane = SlicedPlane::new(&data, &mask, 5);
+            let res = ViterbiEncoder::new(dec.clone()).encode(&plane);
+            let opt = brute_force_min_err(&dec, &plane);
+            assert_eq!(res.stats.error_bits as u32, opt, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn beam_never_beats_exact_and_wide_beam_matches() {
+        let mut rng = Rng::new(45);
+        let spec = DecoderSpec::new(4, 12, 2);
+        let dec = SequentialDecoder::random(spec, 31);
+        let data = BitVecF2::random(600, 0.5, &mut rng);
+        let mask = BitVecF2::random(600, 0.4, &mut rng);
+        let plane = SlicedPlane::new(&data, &mask, 12);
+        let exact = ViterbiEncoder::new(dec.clone()).encode(&plane);
+        let wide = ViterbiEncoder::with_beam(dec.clone(), 64).encode(&plane);
+        let narrow = ViterbiEncoder::with_beam(dec, 1).encode(&plane);
+        assert_eq!(exact.stats.error_bits, wide.stats.error_bits);
+        assert!(narrow.stats.error_bits >= exact.stats.error_bits);
+    }
+
+    #[test]
+    fn encoded_stream_has_zero_preload() {
+        let spec = DecoderSpec::new(4, 12, 2);
+        let dec = SequentialDecoder::random(spec, 3);
+        let mut rng = Rng::new(46);
+        let data = BitVecF2::random(120, 0.5, &mut rng);
+        let mask = BitVecF2::random(120, 0.5, &mut rng);
+        let plane = SlicedPlane::new(&data, &mask, 12);
+        let res = ViterbiEncoder::new(dec).encode(&plane);
+        assert_eq!(res.encoded.len(), 10 + 2);
+        assert_eq!(res.encoded[0], 0);
+        assert_eq!(res.encoded[1], 0);
+    }
+}

@@ -1,0 +1,304 @@
+//! Fundamental compression limits — Appendix D.
+//!
+//! A block of `n_b` bits with `n_u` unpruned bits (positions vary, pruned
+//! bits are don't-cares) is mapped to a *symbol*: a full `n_b`-bit
+//! assignment consistent with the unpruned bits. A symbol set is valid
+//! when **every** (position-set, value) combination has at least one
+//! consistent symbol — i.e. the projection of the set onto any `n_u`
+//! coordinates covers all `2^{n_u}` patterns (a surjective / covering
+//! array). The entropy of the induced symbol distribution (with the
+//! assignment chosen to skew probabilities) lower-bounds the bits a
+//! fixed-to-variable scheme needs; a fixed-to-fixed scheme needs
+//! `⌈log2 |symbols|⌉` bits.
+//!
+//! The paper's worked examples (`n_b = 4`): `n_u = 1` → 2 symbols, H = 1;
+//! `n_u = 2` → 5 symbols, H ≈ 2.28; `n_u = 3` → 8 symbols, H = 3. We
+//! reproduce these by exhaustive search.
+
+/// Shannon entropy (bits) of a discrete distribution.
+pub fn shannon_entropy(probs: &[f64]) -> f64 {
+    probs
+        .iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| -p * p.log2())
+        .sum()
+}
+
+/// Result of the minimal-symbol-set search.
+#[derive(Debug, Clone)]
+pub struct SymbolSet {
+    /// Block width `n_b`.
+    pub n_b: usize,
+    /// Unpruned bits per block `n_u`.
+    pub n_u: usize,
+    /// A minimal valid symbol set (bit-packed `n_b`-bit values).
+    pub symbols: Vec<u32>,
+    /// Minimal achievable entropy over assignments for this set (bits).
+    pub entropy: f64,
+    /// Bits needed by a fixed-to-fixed scheme: `⌈log2 |symbols|⌉`.
+    pub f2f_bits: usize,
+}
+
+/// Does `symbols` cover every (`n_u` positions, values) combination?
+pub fn covers(symbols: &[u32], n_b: usize, n_u: usize) -> bool {
+    for positions in combinations(n_b, n_u) {
+        // Collect projections of all symbols onto these positions.
+        let mut seen = vec![false; 1 << n_u];
+        for &s in symbols {
+            let mut proj = 0u32;
+            for (k, &p) in positions.iter().enumerate() {
+                proj |= ((s >> p) & 1) << k;
+            }
+            seen[proj as usize] = true;
+        }
+        if !seen.iter().all(|&x| x) {
+            return false;
+        }
+    }
+    true
+}
+
+/// All `n_u`-subsets of `0..n_b`.
+fn combinations(n_b: usize, n_u: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::with_capacity(n_u);
+    fn rec(
+        start: usize,
+        n_b: usize,
+        n_u: usize,
+        cur: &mut Vec<usize>,
+        out: &mut Vec<Vec<usize>>,
+    ) {
+        if cur.len() == n_u {
+            out.push(cur.clone());
+            return;
+        }
+        for i in start..n_b {
+            cur.push(i);
+            rec(i + 1, n_b, n_u, cur, out);
+            cur.pop();
+        }
+    }
+    rec(0, n_b, n_u, &mut cur, &mut out);
+    out
+}
+
+/// Minimal entropy achievable by assigning each masked block to a
+/// consistent symbol, skewing the distribution as much as possible
+/// (assign greedily by symbol priority; try all priority orders for
+/// small sets).
+fn min_entropy_for_set(symbols: &[u32], n_b: usize, n_u: usize) -> f64 {
+    // Enumerate all masked blocks: (position set, values).
+    let blocks: Vec<(Vec<usize>, u32)> = combinations(n_b, n_u)
+        .into_iter()
+        .flat_map(|pos| {
+            (0..(1u32 << n_u)).map(move |v| (pos.clone(), v))
+        })
+        .collect();
+    let consistent = |s: u32, pos: &[usize], v: u32| -> bool {
+        pos.iter()
+            .enumerate()
+            .all(|(k, &p)| ((s >> p) & 1) == ((v >> k) & 1))
+    };
+
+    let k = symbols.len();
+    let mut order: Vec<usize> = (0..k).collect();
+    let mut best = f64::INFINITY;
+    if k > 6 {
+        // For larger sets the assignment is (nearly) forced — e.g. a
+        // covering 8-set for (n_b=4, n_u=3) is bijective, so greedy with
+        // any order yields the same distribution. Use identity order.
+        let mut counts = vec![0usize; k];
+        for (pos, v) in &blocks {
+            for i in 0..k {
+                if consistent(symbols[i], pos, *v) {
+                    counts[i] += 1;
+                    break;
+                }
+            }
+        }
+        let total: usize = counts.iter().sum();
+        let probs: Vec<f64> =
+            counts.iter().map(|&c| c as f64 / total as f64).collect();
+        return shannon_entropy(&probs);
+    }
+    permute(&mut order, 0, &mut |perm: &[usize]| {
+        let mut counts = vec![0usize; k];
+        for (pos, v) in &blocks {
+            for &i in perm {
+                if consistent(symbols[i], pos, *v) {
+                    counts[i] += 1;
+                    break;
+                }
+            }
+        }
+        let total: usize = counts.iter().sum();
+        let probs: Vec<f64> = counts
+            .iter()
+            .map(|&c| c as f64 / total as f64)
+            .collect();
+        let h = shannon_entropy(&probs);
+        if h < best {
+            best = h;
+        }
+    });
+    best
+}
+
+fn permute(xs: &mut Vec<usize>, i: usize, f: &mut impl FnMut(&[usize])) {
+    if i == xs.len() {
+        f(xs);
+        return;
+    }
+    for j in i..xs.len() {
+        xs.swap(i, j);
+        permute(xs, i + 1, f);
+        xs.swap(i, j);
+    }
+}
+
+/// Exhaustive search for a minimal covering symbol set (small `n_b`
+/// only; the paper's Appendix D uses `n_b = 4`). Returns the first
+/// minimal set found together with its minimal entropy.
+pub fn min_symbol_set(n_b: usize, n_u: usize) -> SymbolSet {
+    assert!(n_b <= 5, "exhaustive search only for tiny n_b");
+    assert!(n_u >= 1 && n_u <= n_b);
+    let universe: Vec<u32> = (0..(1u32 << n_b)).collect();
+    for k in 1..=universe.len() {
+        let mut found: Option<Vec<u32>> = None;
+        let mut best_h = f64::INFINITY;
+        subsets_of_size(&universe, k, &mut |set: &[u32]| {
+            if covers(set, n_b, n_u) {
+                let h = min_entropy_for_set(set, n_b, n_u);
+                if h < best_h {
+                    best_h = h;
+                    found = Some(set.to_vec());
+                }
+            }
+        });
+        if let Some(symbols) = found {
+            return SymbolSet {
+                n_b,
+                n_u,
+                f2f_bits: (usize::BITS
+                    - (symbols.len() - 1).leading_zeros())
+                    as usize,
+                symbols,
+                entropy: best_h,
+            };
+        }
+    }
+    unreachable!("full universe always covers");
+}
+
+fn subsets_of_size(
+    universe: &[u32],
+    k: usize,
+    f: &mut impl FnMut(&[u32]),
+) {
+    let mut cur = Vec::with_capacity(k);
+    fn rec(
+        universe: &[u32],
+        start: usize,
+        k: usize,
+        cur: &mut Vec<u32>,
+        f: &mut impl FnMut(&[u32]),
+    ) {
+        if cur.len() == k {
+            f(cur);
+            return;
+        }
+        // Prune: not enough elements left.
+        if universe.len() - start < k - cur.len() {
+            return;
+        }
+        for i in start..universe.len() {
+            cur.push(universe[i]);
+            rec(universe, i + 1, k, cur, f);
+            cur.pop();
+        }
+    }
+    rec(universe, 0, k, &mut cur, f);
+}
+
+/// Maximum compression ratio by entropy: `n_b / H` (the bound a
+/// fixed-to-variable scheme can approach; the paper's §2 rate target
+/// `n_b / n_u` is the `H → n_u` limit).
+pub fn max_compression_ratio(n_b: usize, entropy: f64) -> f64 {
+    n_b as f64 / entropy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_of_uniform() {
+        assert!((shannon_entropy(&[0.5, 0.5]) - 1.0).abs() < 1e-12);
+        assert!((shannon_entropy(&[0.25; 4]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn appendix_d_nu1_two_symbols_h1() {
+        let r = min_symbol_set(4, 1);
+        assert_eq!(r.symbols.len(), 2);
+        assert!((r.entropy - 1.0).abs() < 1e-9, "H = {}", r.entropy);
+        assert_eq!(r.f2f_bits, 1);
+        // The canonical pair {0000, 1111} must be a valid cover.
+        assert!(covers(&[0b0000, 0b1111], 4, 1));
+        // Complementary pairs in general:
+        assert!(covers(&[0b0010, 0b1101], 4, 1));
+        assert!(covers(&[0b1010, 0b0101], 4, 1));
+    }
+
+    #[test]
+    fn appendix_d_nu2_five_symbols() {
+        let r = min_symbol_set(4, 2);
+        assert_eq!(r.symbols.len(), 5, "paper: minimum 5 symbols");
+        assert_eq!(r.f2f_bits, 3, "fixed-to-fixed needs 3 bits");
+        // Paper's example distribution 6/24,6/24,5/24,4/24,3/24 → H≈2.28;
+        // our searched set must do at least as well.
+        assert!(
+            r.entropy <= 2.2855 + 1e-6,
+            "H = {} should be ≤ 2.2855",
+            r.entropy
+        );
+        assert!(r.entropy > 2.0);
+    }
+
+    #[test]
+    fn appendix_d_paper_example_set_validates() {
+        // P(0000), P(1110), P(0101), P(1001), P(0011) from Appendix D.
+        let set = [0b0000u32, 0b0111, 0b1010, 0b1001, 0b1100];
+        // (bit k of our packing = position k+1 in the paper's left-to-
+        // right string notation; the set above is the paper's example
+        // transcribed LSB-first.)
+        assert!(covers(&set, 4, 2));
+        let h =
+            shannon_entropy(&[6.0 / 24.0, 6.0 / 24.0, 5.0 / 24.0, 4.0 / 24.0, 3.0 / 24.0]);
+        assert!((h - 2.28).abs() < 0.01, "paper quotes H ≈ 2.28, got {h}");
+    }
+
+    #[test]
+    fn appendix_d_nu3_eight_symbols() {
+        let r = min_symbol_set(4, 3);
+        assert_eq!(r.symbols.len(), 8, "paper: minimum 8 symbols");
+        assert_eq!(r.f2f_bits, 3, "compressible into 3 bits");
+        // H within [3, slightly above 3] — paper: "H can be equal to or
+        // slightly higher than n_u".
+        assert!(r.entropy >= 3.0 - 1e-9 && r.entropy < 3.3, "H={}", r.entropy);
+    }
+
+    #[test]
+    fn covering_fails_for_too_small_sets() {
+        assert!(!covers(&[0b0000], 4, 1));
+        assert!(!covers(&[0b0000, 0b1110], 4, 1)); // position 0 never 1... bit3
+        assert!(!covers(&[0b0000, 0b1111, 0b0101, 0b1010], 4, 2));
+    }
+
+    #[test]
+    fn max_compression_ratio_examples() {
+        // n_u = 1: ratio = 4 / 1 = 4×.
+        assert!((max_compression_ratio(4, 1.0) - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,293 @@
+//! Arbitrary-length bit-packed vector over GF(2).
+//!
+//! Used for flattened weight bit-planes and pruning masks: a layer of
+//! `m·n` weights becomes `n_w` bit-planes of `m·n` bits each (§4 "weight
+//! manipulation"). Bits are stored LSB-first inside `u64` words, index 0
+//! first.
+
+use super::{low_mask, Block};
+
+/// Bit-packed vector of bits over GF(2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitVecF2 {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVecF2 {
+    /// All-zero vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitVecF2 { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Build from a bool slice.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut v = BitVecF2::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// Build from an iterator of bools with known length.
+    pub fn from_iter_bits<I: IntoIterator<Item = bool>>(iter: I) -> Self {
+        let bits: Vec<bool> = iter.into_iter().collect();
+        Self::from_bools(&bits)
+    }
+
+    /// Random vector where each bit is 1 with probability `p_one`.
+    pub fn random(len: usize, p_one: f64, rng: &mut crate::rng::Rng) -> Self {
+        let mut v = BitVecF2::zeros(len);
+        if (p_one - 0.5).abs() < 1e-12 {
+            // Fast path: fill words directly.
+            for w in v.words.iter_mut() {
+                *w = rng.next_u64();
+            }
+            v.trim();
+        } else {
+            for i in 0..len {
+                if rng.bernoulli(p_one) {
+                    v.set(i, true);
+                }
+            }
+        }
+        v
+    }
+
+    /// Number of bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if the vector holds no bits.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Get bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// Flip bit `i`.
+    #[inline]
+    pub fn flip(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] ^= 1 << (i % 64);
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Number of clear bits.
+    pub fn count_zeros(&self) -> usize {
+        self.len - self.count_ones()
+    }
+
+    /// Ratio of zero bits (the paper's "ratio of zeros", input to the
+    /// inverting decision).
+    pub fn zero_ratio(&self) -> f64 {
+        if self.len == 0 {
+            return 1.0;
+        }
+        self.count_zeros() as f64 / self.len as f64
+    }
+
+    /// Invert every bit in place (the paper's inverting technique).
+    pub fn invert(&mut self) {
+        for w in self.words.iter_mut() {
+            *w = !*w;
+        }
+        self.trim();
+    }
+
+    /// XOR with another vector of equal length.
+    pub fn xor_with(&mut self, other: &BitVecF2) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a ^= b;
+        }
+    }
+
+    /// Extract `width ≤ 128` bits starting at bit offset `start` into a
+    /// [`Block`]. Bits past `len` read as zero (blocks at the tail of a
+    /// sliced plane are implicitly zero-padded, matching the paper's
+    /// `l = ⌈mn / N_out⌉` slicing).
+    pub fn block(&self, start: usize, width: usize) -> Block {
+        debug_assert!(width <= 128);
+        let mut out: Block = 0;
+        let mut got = 0usize;
+        while got < width {
+            let i = start + got;
+            if i >= self.len {
+                break;
+            }
+            let (w, b) = (i / 64, i % 64);
+            let avail = 64 - b;
+            let take = avail.min(width - got);
+            let chunk = (self.words[w] >> b) as u128 & low_mask(take) as Block as u128;
+            out |= (chunk as Block) << got;
+            got += take;
+        }
+        out & low_mask(width)
+    }
+
+    /// Write `width ≤ 128` bits of `val` at bit offset `start` (bits past
+    /// `len` are dropped).
+    pub fn set_block(&mut self, start: usize, width: usize, val: Block) {
+        debug_assert!(width <= 128);
+        for i in 0..width {
+            let idx = start + i;
+            if idx >= self.len {
+                break;
+            }
+            self.set(idx, (val >> i) & 1 == 1);
+        }
+    }
+
+    /// Iterate bits as bools.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// Raw words (LSB-first packing), for serialization.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from raw words + length.
+    pub fn from_words(words: Vec<u64>, len: usize) -> Self {
+        assert!(words.len() == len.div_ceil(64));
+        let mut v = BitVecF2 { words, len };
+        v.trim();
+        v
+    }
+
+    /// Zero any bits beyond `len` in the last word.
+    fn trim(&mut self) {
+        let extra = self.len % 64;
+        if extra != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << extra) - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVecF2::zeros(130);
+        v.set(0, true);
+        v.set(63, true);
+        v.set(64, true);
+        v.set(129, true);
+        assert!(v.get(0) && v.get(63) && v.get(64) && v.get(129));
+        assert!(!v.get(1) && !v.get(65));
+        assert_eq!(v.count_ones(), 4);
+    }
+
+    #[test]
+    fn block_crosses_word_boundary() {
+        let mut v = BitVecF2::zeros(200);
+        // Set bits 60..70.
+        for i in 60..70 {
+            v.set(i, true);
+        }
+        let b = v.block(58, 16);
+        // bits 2..12 of the block should be set.
+        assert_eq!(b, 0b0000_1111_1111_1100);
+    }
+
+    #[test]
+    fn block_tail_zero_padded() {
+        let mut v = BitVecF2::zeros(10);
+        v.set(9, true);
+        let b = v.block(8, 8);
+        assert_eq!(b, 0b10); // bit 9 lands at offset 1; rest zero
+    }
+
+    #[test]
+    fn set_block_roundtrip() {
+        let mut v = BitVecF2::zeros(300);
+        v.set_block(100, 80, 0xDEAD_BEEF_CAFE_1234_5678u128 & super::low_mask(80));
+        assert_eq!(v.block(100, 80), 0xDEAD_BEEF_CAFE_1234_5678u128 & super::low_mask(80));
+    }
+
+    #[test]
+    fn invert_flips_exactly_len_bits() {
+        let mut v = BitVecF2::zeros(70);
+        v.set(3, true);
+        v.invert();
+        assert_eq!(v.count_ones(), 69);
+        assert!(!v.get(3));
+        // trim keeps word padding clean
+        assert_eq!(v.words()[1] >> 6, 0);
+    }
+
+    #[test]
+    fn zero_ratio() {
+        let mut v = BitVecF2::zeros(100);
+        for i in 0..25 {
+            v.set(i, true);
+        }
+        assert!((v.zero_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_half_density() {
+        let mut rng = Rng::new(1);
+        let v = BitVecF2::random(100_000, 0.5, &mut rng);
+        let ones = v.count_ones() as f64 / 100_000.0;
+        assert!((ones - 0.5).abs() < 0.01, "{ones}");
+    }
+
+    #[test]
+    fn random_biased_density() {
+        let mut rng = Rng::new(2);
+        let v = BitVecF2::random(100_000, 0.1, &mut rng);
+        let ones = v.count_ones() as f64 / 100_000.0;
+        assert!((ones - 0.1).abs() < 0.01, "{ones}");
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let mut rng = Rng::new(3);
+        let v = BitVecF2::random(777, 0.5, &mut rng);
+        let w = BitVecF2::from_words(v.words().to_vec(), 777);
+        assert_eq!(v, w);
+    }
+
+    #[test]
+    fn xor_with_self_is_zero() {
+        let mut rng = Rng::new(4);
+        let mut v = BitVecF2::random(500, 0.5, &mut rng);
+        let w = v.clone();
+        v.xor_with(&w);
+        assert_eq!(v.count_ones(), 0);
+    }
+}

@@ -1,0 +1,188 @@
+//! The XOR-gate connectivity matrix `M⊕`.
+//!
+//! `M⊕ ∈ {0,1}^{N_out × N_cols}` where `N_cols = (N_s+1)·N_in`. Row `i`
+//! lists which input bits feed output XOR gate `i`: if row 2 is
+//! `[1 0 1 1]`, then `w₂ = x₁ ⊕ x₃ ⊕ x₄` (§3.1). The paper fills each
+//! element randomly with 0/1 (a random linear code) and, among a pool of
+//! random candidates, keeps the matrix with the highest measured encoding
+//! efficiency (§5.1 "Setup").
+//!
+//! We store the matrix column-major as `N_out`-bit [`Block`]s: decoding is
+//! then "XOR together the columns selected by the set input bits", which
+//! is both the hardware semantics and the fast software path.
+
+use super::{low_mask, Block};
+use crate::rng::Rng;
+
+/// Binary matrix for the XOR-gate decoder, column-major bit-packed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct XorMatrix {
+    /// `cols[j]` holds column `j`; bit `i` set ⟺ `M[i][j] = 1`.
+    cols: Vec<Block>,
+    n_out: usize,
+    /// Seed used for generation, kept so containers can re-derive the
+    /// matrix instead of storing it (`None` for hand-built matrices).
+    seed: Option<u64>,
+}
+
+impl XorMatrix {
+    /// Random matrix: every element i.i.d. Bernoulli(1/2), the paper's
+    /// design rule. Deterministic in `seed`.
+    pub fn random(n_out: usize, n_cols: usize, seed: u64) -> Self {
+        assert!(n_out >= 1 && n_out <= 128, "N_out must be in 1..=128");
+        let mut rng = Rng::new(seed);
+        let mask = low_mask(n_out);
+        let cols = (0..n_cols)
+            .map(|_| {
+                let lo = rng.next_u64() as u128;
+                let hi = (rng.next_u64() as u128) << 64;
+                (hi | lo) & mask
+            })
+            .collect();
+        XorMatrix { cols, n_out, seed: Some(seed) }
+    }
+
+    /// Build from explicit rows (`rows[i][j] = M[i][j]`).
+    pub fn from_rows(rows: &[Vec<bool>]) -> Self {
+        let n_out = rows.len();
+        assert!(n_out >= 1 && n_out <= 128);
+        let n_cols = rows[0].len();
+        assert!(rows.iter().all(|r| r.len() == n_cols));
+        let mut cols = vec![0 as Block; n_cols];
+        for (i, row) in rows.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                if v {
+                    cols[j] |= 1 << i;
+                }
+            }
+        }
+        XorMatrix { cols, n_out, seed: None }
+    }
+
+    /// Output bits per block.
+    #[inline]
+    pub fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    /// Total input columns (`(N_s+1)·N_in`).
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Generation seed, if the matrix was randomly generated.
+    pub fn seed(&self) -> Option<u64> {
+        self.seed
+    }
+
+    /// Column `j` as a bit-packed block.
+    #[inline]
+    pub fn col(&self, j: usize) -> Block {
+        self.cols[j]
+    }
+
+    /// Decode: `M⊕ · x` over GF(2), where bit `j` of `x` selects column
+    /// `j`. `x` must fit in 64 bits (the paper's `(N_s+1)·N_in ≤ 26`).
+    #[inline]
+    pub fn decode(&self, x: u64) -> Block {
+        let mut acc: Block = 0;
+        let mut rem = x & low_mask(self.n_cols().min(64)) as u128 as u64;
+        while rem != 0 {
+            let j = rem.trailing_zeros() as usize;
+            acc ^= self.cols[j];
+            rem &= rem - 1;
+        }
+        acc
+    }
+
+    /// Element access (row `i`, column `j`).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        (self.cols[j] >> i) & 1 == 1
+    }
+
+    /// Number of XOR gates a hardware realization needs:
+    /// `Σ_i max(popcount(row_i) − 1, 0)` (each row of `k` taps is a
+    /// `k−1`-gate XOR tree). Appendix G approximates this as
+    /// `N_out·N_cols/2` for random fill; we compute it exactly.
+    pub fn xor_gate_count(&self) -> usize {
+        (0..self.n_out)
+            .map(|i| {
+                let taps =
+                    self.cols.iter().filter(|c| (*c >> i) & 1 == 1).count();
+                taps.saturating_sub(1)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_is_linear() {
+        let m = XorMatrix::random(16, 8, 42);
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let a = rng.next_u64() & 0xFF;
+            let b = rng.next_u64() & 0xFF;
+            // Linearity over GF(2): M(a ⊕ b) = M(a) ⊕ M(b)
+            assert_eq!(m.decode(a ^ b), m.decode(a) ^ m.decode(b));
+        }
+        assert_eq!(m.decode(0), 0);
+    }
+
+    #[test]
+    fn decode_matches_row_wise_definition() {
+        // Paper's example: row [1 0 1 1] ⇒ w = x1 ⊕ x3 ⊕ x4.
+        let rows = vec![
+            vec![true, false, true, true],
+            vec![false, true, false, false],
+        ];
+        let m = XorMatrix::from_rows(&rows);
+        // x = (1, 1, 1, 0) LSB-first → 0b0111
+        let out = m.decode(0b0111);
+        // row0: x1⊕x3⊕x4 = 1⊕1⊕0 = 0 ; row1: x2 = 1
+        assert_eq!(out & 1, 0);
+        assert_eq!((out >> 1) & 1, 1);
+    }
+
+    #[test]
+    fn decode_single_bit_selects_column() {
+        let m = XorMatrix::random(32, 16, 3);
+        for j in 0..16 {
+            assert_eq!(m.decode(1 << j), m.col(j));
+        }
+    }
+
+    #[test]
+    fn random_is_deterministic_in_seed() {
+        let a = XorMatrix::random(80, 24, 5);
+        let b = XorMatrix::random(80, 24, 5);
+        assert_eq!(a, b);
+        let c = XorMatrix::random(80, 24, 6);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn random_density_is_half() {
+        let m = XorMatrix::random(128, 64, 11);
+        let ones: u32 = (0..64).map(|j| m.col(j).count_ones()).sum();
+        let density = ones as f64 / (128.0 * 64.0);
+        assert!((density - 0.5).abs() < 0.03, "{density}");
+    }
+
+    #[test]
+    fn gate_count_matches_appendix_g_estimate() {
+        let m = XorMatrix::random(96, 24, 9);
+        let approx = 96 * 24 / 2;
+        let exact = m.xor_gate_count();
+        // Exact count is Σ(taps−1) = total_ones − rows_with_taps ≈ N/2 − N_out.
+        assert!(
+            (exact as i64 - (approx as i64 - 96)).abs() < 200,
+            "exact={exact} approx={approx}"
+        );
+    }
+}

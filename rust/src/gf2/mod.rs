@@ -1,0 +1,86 @@
+//! GF(2) primitives: bit-packed vectors, the XOR-gate matrix `M⊕`, and
+//! table-accelerated decoding.
+//!
+//! The paper's decoder is a linear map over the two-element Galois field:
+//! an output block `w ∈ {0,1}^{N_out}` is `M⊕ · x` where
+//! `x ∈ {0,1}^{(N_s+1)·N_in}` is the concatenation of the current encoded
+//! vector with the `N_s` shift-register copies of previous ones. Addition
+//! over GF(2) is XOR, so `M⊕ · x` is the XOR of the columns of `M⊕`
+//! selected by the set bits of `x`.
+//!
+//! Everything here is bit-packed:
+//!
+//! * a whole block (`N_out ≤ 128` covers every configuration in the paper,
+//!   which uses `N_out ≤ 96`) lives in one [`Block`] (`u128`);
+//! * flattened bit-planes live in a [`BitVecF2`] (`Vec<u64>` words);
+//! * decoding uses per-input-byte lookup tables ([`tables::ChunkTables`]),
+//!   reducing a GF(2) mat-vec to a handful of table lookups and XORs —
+//!   this is the software analogue of the paper's single-cycle XOR array.
+
+mod bitvec;
+mod matrix;
+mod tables;
+
+pub use bitvec::BitVecF2;
+pub use matrix::XorMatrix;
+pub use tables::ChunkTables;
+
+/// One decoded/encoded block, bit `i` in the LSB-first position `1 << i`.
+/// `N_out ≤ 128`.
+pub type Block = u128;
+
+/// Mask with the low `n` bits set (`n ≤ 128`).
+#[inline]
+pub fn low_mask(n: usize) -> Block {
+    debug_assert!(n <= 128);
+    if n == 128 {
+        !0
+    } else {
+        (1u128 << n) - 1
+    }
+}
+
+/// Number of mismatching *unpruned* bits between `a` and `b` under `mask`
+/// (mask bit set = position is unpruned and must match).
+#[inline]
+pub fn masked_hamming(a: Block, b: Block, mask: Block) -> u32 {
+    ((a ^ b) & mask).count_ones()
+}
+
+/// Parity (XOR-reduction) of `x & y` — the GF(2) inner product of two
+/// bit-packed vectors.
+#[inline]
+pub fn dot_f2(x: u64, y: u64) -> u8 {
+    ((x & y).count_ones() & 1) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_mask_values() {
+        assert_eq!(low_mask(0), 0);
+        assert_eq!(low_mask(1), 1);
+        assert_eq!(low_mask(8), 0xFF);
+        assert_eq!(low_mask(128), !0u128);
+    }
+
+    #[test]
+    fn masked_hamming_counts_only_masked_positions() {
+        let a = 0b1010u128;
+        let b = 0b0110u128;
+        // differ at bits 2 and 3... a^b = 1100
+        assert_eq!(masked_hamming(a, b, 0b1111), 2);
+        assert_eq!(masked_hamming(a, b, 0b0100), 1);
+        assert_eq!(masked_hamming(a, b, 0b0011), 0);
+        assert_eq!(masked_hamming(a, b, 0), 0);
+    }
+
+    #[test]
+    fn dot_f2_is_parity_of_and() {
+        assert_eq!(dot_f2(0b101, 0b100), 1);
+        assert_eq!(dot_f2(0b101, 0b101), 0);
+        assert_eq!(dot_f2(0, 0xFFFF_FFFF_FFFF_FFFF), 0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Chunked lookup tables for fast decoding.
+//!
+//! The sequential decoder's input at time `t` is the concatenation
+//! `w_t^e ⌢ w_{t-1}^e ⌢ … ⌢ w_{t-N_s}^e` of `N_s+1` chunks of `N_in` bits.
+//! Because decoding is linear over GF(2), the output splits per chunk:
+//!
+//! ```text
+//! M⊕ · (c₀ ⌢ c₁ ⌢ … ⌢ c_{N_s}) = T₀[c₀] ⊕ T₁[c₁] ⊕ … ⊕ T_{N_s}[c_{N_s}]
+//! ```
+//!
+//! where `T_s[v]` precomputes the XOR of slot-`s` columns selected by `v`.
+//! A decode becomes `N_s+1` table lookups + XORs, and — crucially for the
+//! Viterbi encoder — candidate outputs for all `2^{N_in}` transitions from
+//! a state can be enumerated by varying a single table index.
+
+use super::{Block, XorMatrix};
+
+/// Per-slot decode tables: `tables[s][v] = M⊕ · (v placed in slot s)`.
+#[derive(Debug, Clone)]
+pub struct ChunkTables {
+    tables: Vec<Vec<Block>>,
+    n_in: usize,
+    n_out: usize,
+}
+
+impl ChunkTables {
+    /// Build tables from a matrix whose columns are laid out as
+    /// `n_slots` slots of `n_in` bits: slot `s` covers columns
+    /// `[s·n_in, (s+1)·n_in)`.
+    ///
+    /// Each table is built in `O(2^{N_in})` by a Gray-code-free dynamic
+    /// expansion: `T[v] = T[v & (v-1)] ^ col(lowest set bit)`.
+    pub fn new(m: &XorMatrix, n_in: usize, n_slots: usize) -> Self {
+        assert_eq!(m.n_cols(), n_in * n_slots, "matrix/slot shape mismatch");
+        assert!(n_in <= 24, "table size 2^{n_in} too large");
+        let size = 1usize << n_in;
+        let mut tables = Vec::with_capacity(n_slots);
+        for s in 0..n_slots {
+            let base = s * n_in;
+            let mut t = vec![0 as Block; size];
+            for v in 1..size {
+                let low = v.trailing_zeros() as usize;
+                t[v] = t[v & (v - 1)] ^ m.col(base + low);
+            }
+            tables.push(t);
+        }
+        ChunkTables { tables, n_in, n_out: m.n_out() }
+    }
+
+    /// Encoded-vector width `N_in`.
+    #[inline]
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    /// Output width `N_out`.
+    #[inline]
+    pub fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    /// Number of slots (`N_s + 1`).
+    #[inline]
+    pub fn n_slots(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Contribution of chunk value `v` in slot `s`.
+    #[inline]
+    pub fn slot(&self, s: usize, v: usize) -> Block {
+        self.tables[s][v]
+    }
+
+    /// Full table for one slot (hot loops index it directly).
+    #[inline]
+    pub fn slot_table(&self, s: usize) -> &[Block] {
+        &self.tables[s]
+    }
+
+    /// Decode from per-slot chunk values (slot 0 = current input `w_t^e`,
+    /// slot `s` = input from `s` steps ago).
+    #[inline]
+    pub fn decode_chunks(&self, chunks: &[usize]) -> Block {
+        debug_assert_eq!(chunks.len(), self.tables.len());
+        let mut acc: Block = 0;
+        for (s, &v) in chunks.iter().enumerate() {
+            acc ^= self.tables[s][v];
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn tables_match_direct_decode() {
+        let n_in = 6;
+        let n_slots = 3;
+        let m = XorMatrix::random(40, n_in * n_slots, 77);
+        let t = ChunkTables::new(&m, n_in, n_slots);
+        let mut rng = Rng::new(5);
+        for _ in 0..500 {
+            let c0 = rng.below(1 << n_in);
+            let c1 = rng.below(1 << n_in);
+            let c2 = rng.below(1 << n_in);
+            let x = (c0 as u64)
+                | ((c1 as u64) << n_in)
+                | ((c2 as u64) << (2 * n_in));
+            assert_eq!(t.decode_chunks(&[c0, c1, c2]), m.decode(x));
+        }
+    }
+
+    #[test]
+    fn single_slot_table_equals_matrix_decode() {
+        let m = XorMatrix::random(16, 8, 1);
+        let t = ChunkTables::new(&m, 8, 1);
+        for v in 0..256usize {
+            assert_eq!(t.slot(0, v), m.decode(v as u64));
+        }
+    }
+
+    #[test]
+    fn zero_chunks_decode_to_zero() {
+        let m = XorMatrix::random(80, 24, 2);
+        let t = ChunkTables::new(&m, 8, 3);
+        assert_eq!(t.decode_chunks(&[0, 0, 0]), 0);
+    }
+}

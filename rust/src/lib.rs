@@ -1,0 +1,69 @@
+//! # f2f — Fixed-to-Fixed Encoding of Irregularly Sparse Weights
+//!
+//! Reproduction of *"Encoding Weights of Irregular Sparsity for
+//! Fixed-to-Fixed Model Compression"* (Park, Kwon, Oh, Kim, Lee — ICLR 2022).
+//!
+//! Fine-grained (unstructured) pruning achieves high sparsity but classic
+//! sparse formats (CSR) translate fixed-size weight blocks into
+//! variable-size ones, wrecking memory-bandwidth utilization on parallel
+//! hardware. This crate implements the paper's alternative: a **lossless
+//! fixed-to-fixed encoding** where every `N_out`-bit weight block is stored
+//! as exactly `N_in` encoded bits, decoded through a fixed XOR-gate network
+//! (a random linear code over GF(2)) augmented with shift registers so one
+//! encoded vector is reused across `N_s + 1` consecutive blocks
+//! ("sequential" decoding). Encoding is a Viterbi-style dynamic program
+//! that minimizes unmatched bits; residual mismatches are patched by a
+//! compact correction stream, making the scheme lossless.
+//!
+//! ## Layout
+//!
+//! * [`gf2`] — bit-packed blocks and GF(2) linear algebra (the decoder is a
+//!   binary matrix; decoding is a GF(2) mat-vec, table-accelerated).
+//! * [`decoder`] — combinational (`N_s = 0`) and sequential XOR-gate
+//!   decoders, plus the hardware cost model from the paper's Appendix G.
+//! * [`encoder`] — exhaustive and Viterbi-DP encoders with encoding
+//!   efficiency statistics.
+//! * [`weights`] — bit-plane grouping / flattening / slicing of FP32 and
+//!   INT8 tensors, and the inverting technique.
+//! * [`pruning`] — random / magnitude / L0-style / variational-dropout
+//!   style mask generation plus `n_u` statistics (coefficient of variation).
+//! * [`entropy`] — Appendix D entropy bounds on block compression.
+//! * [`correction`] — Appendix F lossless correction (patch) format.
+//! * [`container`] — serialized compressed-model container with lossless
+//!   round-trip.
+//! * [`sparse`] — CSR + SpMV baseline (Algorithm 1) and the
+//!   decode-then-GEMV fixed-to-fixed path (Algorithm 2).
+//! * [`bandwidth`] — memory transaction / bandwidth-utilization simulator
+//!   (Figure 1, Appendix A).
+//! * [`models`] — synthetic Transformer / ResNet-50 model zoo with
+//!   realistic FP32 bit-plane statistics.
+//! * [`pipeline`] — end-to-end compression pipeline over whole models.
+//! * [`coordinator`] — serving stack: router, dynamic batcher, workers.
+//! * [`runtime`] — PJRT (XLA) runtime that loads AOT-compiled artifacts.
+//! * [`report`] — textual table/figure rendering for the repro harness.
+//! * [`repro`] — one entry point per paper table/figure.
+
+pub mod bandwidth;
+pub mod bench_util;
+pub mod cli;
+pub mod container;
+pub mod coordinator;
+pub mod correction;
+pub mod decoder;
+pub mod encoder;
+pub mod entropy;
+pub mod gf2;
+pub mod models;
+pub mod pipeline;
+pub mod pruning;
+pub mod report;
+pub mod repro;
+pub mod rng;
+pub mod runtime;
+pub mod sparse;
+pub mod weights;
+
+pub use decoder::{DecoderSpec, SequentialDecoder};
+pub use encoder::{EncodeResult, ViterbiEncoder};
+pub use gf2::BitVecF2;
+pub use pipeline::{CompressionConfig, Compressor};

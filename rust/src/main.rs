@@ -1,0 +1,223 @@
+//! `f2f` — CLI for the fixed-to-fixed compression library.
+//!
+//! Subcommands:
+//!
+//! * `f2f repro <id> [...]` — regenerate a paper table/figure (see
+//!   DESIGN.md §5 for ids: fig1 fig4a fig4b fig4c fig8 fig9 table1
+//!   table2 table3 s4 s5 s10 s12 s13 entropy beamcheck all).
+//! * `f2f compress --model <transformer|resnet50> [...]` — compress a
+//!   synthetic model to a container file and report per-layer stats.
+//! * `f2f inspect <container>` — print a container's inventory.
+//! * `f2f serve [...]` — start the serving loop on a compressed layer
+//!   and run a self-driven load test.
+//! * `f2f hw --s <S> --nin <N> --ns <N>` — Appendix G hardware cost.
+
+use anyhow::{bail, Result};
+use f2f::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("repro") => f2f::repro::run(args),
+        Some("compress") => cmd_compress(args),
+        Some("inspect") => cmd_inspect(args),
+        Some("serve") => cmd_serve(args),
+        Some("hw") => cmd_hw(args),
+        _ => {
+            eprintln!(
+                "usage: f2f <repro|compress|inspect|serve|hw> [options]\n\
+                 try: f2f repro table1 --bits 100000"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    use f2f::container::Dtype;
+    use f2f::models::{resnet50_layers, transformer_layers, SyntheticLayer, WeightGen};
+    use f2f::pipeline::{CompressionConfig, Compressor};
+    use f2f::pruning::PruneMethod;
+
+    let model = args.get_str("model", "transformer");
+    let sparsity: f64 = args.get("s", 0.9)?;
+    let n_s: usize = args.get("ns", 2)?;
+    let max_w: usize = args.get("weights", 8192)?;
+    let n_layers: usize = args.get("layers", 4)?;
+    let seed: u64 = args.get("seed", 0xF2F)?;
+    let beam: i64 = args.get("beam", 8)?;
+    let out = args.get_str("out", "model.f2f");
+    let dtype = match args.get_str("dtype", "i8").as_str() {
+        "i8" => Dtype::I8,
+        "f32" => Dtype::F32,
+        d => bail!("unknown dtype {d}"),
+    };
+
+    let specs = match model.as_str() {
+        "transformer" => transformer_layers(),
+        "resnet50" => resnet50_layers(),
+        m => bail!("unknown model {m}"),
+    };
+    let layers: Vec<SyntheticLayer> = specs
+        .iter()
+        .step_by((specs.len() / n_layers).max(1))
+        .take(n_layers)
+        .map(|s| {
+            SyntheticLayer::generate(s, WeightGen::default(), seed)
+                .truncated(max_w)
+        })
+        .collect();
+
+    let cfg = CompressionConfig {
+        sparsity,
+        n_s,
+        method: PruneMethod::Magnitude,
+        invert: dtype == Dtype::F32,
+        seed,
+        beam: if beam < 0 { None } else { Some(beam as u32) },
+        ..Default::default()
+    };
+    let compressor = Compressor::new(cfg);
+    let t0 = std::time::Instant::now();
+    let (container, reports) = compressor.compress_model(&layers, dtype);
+    let dt = t0.elapsed();
+
+    let mut table = f2f::report::Table::new(
+        &format!("compress {model} S={sparsity} N_s={n_s} ({dt:?})"),
+        &["layer", "weights", "E%", "mem_reduction%", "coeff_var"],
+    );
+    for r in &reports {
+        table.row(vec![
+            r.name.clone(),
+            r.n_weights.to_string(),
+            format!("{:.2}", r.efficiency),
+            format!("{:.2}", r.memory_reduction),
+            format!("{:.3}", r.coeff_var),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "total: {} -> {} bits ({:.2}% reduction)",
+        container.original_bits(),
+        container.compressed_bits(),
+        container.memory_reduction()
+    );
+    std::fs::write(&out, f2f::container::write_container(&container))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args.pos(1)?;
+    let bytes = std::fs::read(path)?;
+    let c = f2f::container::read_container(&bytes)?;
+    let mut table = f2f::report::Table::new(
+        &format!("{path} ({} bytes)", bytes.len()),
+        &["layer", "shape", "dtype", "spec", "planes", "mem_reduction%"],
+    );
+    for l in &c.layers {
+        table.row(vec![
+            l.name.clone(),
+            format!("{}x{}", l.rows, l.cols),
+            format!("{:?}", l.dtype),
+            format!(
+                "N_in={} N_out={} N_s={}",
+                l.spec.n_in, l.spec.n_out, l.spec.n_s
+            ),
+            l.planes.len().to_string(),
+            format!("{:.2}", l.memory_reduction()),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use f2f::coordinator::{InferenceServer, NativeBackend, ServerConfig};
+    use f2f::models::{transformer_layers, SyntheticLayer, WeightGen};
+    use f2f::pipeline::{CompressionConfig, Compressor};
+
+    let requests: usize = args.get("requests", 2000)?;
+    let max_batch: usize = args.get("batch", 16)?;
+    let seed: u64 = args.get("seed", 7)?;
+
+    // Compress one layer, serve it, self-drive load.
+    let spec = transformer_layers().remove(0);
+    let layer = SyntheticLayer::generate(&spec, WeightGen::default(), seed)
+        .truncated(16384);
+    let compressor = Compressor::new(CompressionConfig {
+        sparsity: 0.9,
+        n_s: 1,
+        ..Default::default()
+    });
+    let (compressed, rep) = compressor.compress_layer(
+        &layer,
+        f2f::container::Dtype::I8,
+    );
+    println!(
+        "layer {} compressed: E={:.2}% mem_reduction={:.2}%",
+        rep.name, rep.efficiency, rep.memory_reduction
+    );
+
+    let cols = compressed.cols;
+    let server = InferenceServer::start(
+        ServerConfig { max_batch, ..Default::default() },
+        move || Box::new(NativeBackend::new(&compressed)),
+    );
+    let mut rng = f2f::rng::Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..requests {
+        let x: Vec<f32> =
+            (0..cols).map(|_| rng.next_f32() - 0.5).collect();
+        pending.push(server.infer_async(x));
+    }
+    for p in pending {
+        p.recv()??;
+    }
+    let dt = t0.elapsed();
+    let m = server.metrics();
+    println!(
+        "{requests} requests in {dt:?} ({:.0} req/s), batches={} mean_batch={:.1}",
+        requests as f64 / dt.as_secs_f64(),
+        m.batches,
+        m.mean_batch_size()
+    );
+    println!("latency p50={:?} p95={:?} p99={:?}", m.p50, m.p95, m.p99);
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_hw(args: &Args) -> Result<()> {
+    use f2f::decoder::{DecoderSpec, SequentialDecoder};
+    let s: f64 = args.get("s", 0.9)?;
+    let n_in: usize = args.get("nin", 8)?;
+    let n_s: usize = args.get("ns", 2)?;
+    let spec = DecoderSpec::for_sparsity(n_in, s, n_s);
+    let dec = SequentialDecoder::random(spec, 0);
+    let c = dec.hardware_cost();
+    println!(
+        "decoder spec: N_in={} N_out={} N_s={}",
+        spec.n_in, spec.n_out, spec.n_s
+    );
+    println!(
+        "xor gates:           {} (estimate {})",
+        c.xor_gates, c.xor_gates_estimate
+    );
+    println!("transistors:         {}", c.transistors);
+    println!("register bits:       {}", c.register_bits);
+    println!("latency (cycles):    {}", c.latency_cycles);
+    println!("throughput (b/cyc):  {}", c.throughput_bits_per_cycle);
+    println!(
+        "transistors/output bit: {:.1}",
+        c.transistors_per_output_bit()
+    );
+    Ok(())
+}

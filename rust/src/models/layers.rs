@@ -1,0 +1,143 @@
+//! Layer tables: exact shapes of the two benchmark networks.
+
+/// One weight matrix (conv kernels flattened to `out × (k·k·in)`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub name: String,
+    /// Output dimension (rows).
+    pub rows: usize,
+    /// Input dimension (cols; `k·k·in_ch` for convs).
+    pub cols: usize,
+}
+
+impl LayerSpec {
+    fn new(name: impl Into<String>, rows: usize, cols: usize) -> Self {
+        LayerSpec { name: name.into(), rows, cols }
+    }
+
+    /// Weight count.
+    pub fn n_weights(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// Transformer base (Vaswani et al. 2017), WMT'14 en-de: 6 encoder and 6
+/// decoder layers, `d_model = 512`, `d_ff = 2048`. Embeddings/softmax are
+/// excluded (the paper prunes the attention/FFN matrices).
+pub fn transformer_layers() -> Vec<LayerSpec> {
+    let mut layers = Vec::new();
+    let d = 512;
+    let ff = 2048;
+    for i in 0..6 {
+        for m in ["q", "k", "v", "output"] {
+            layers.push(LayerSpec::new(
+                format!("enc{i}/self_att/{m}"),
+                d,
+                d,
+            ));
+        }
+        layers.push(LayerSpec::new(format!("enc{i}/ffn1"), ff, d));
+        layers.push(LayerSpec::new(format!("enc{i}/ffn2"), d, ff));
+    }
+    for i in 0..6 {
+        for m in ["q", "k", "v", "output"] {
+            layers.push(LayerSpec::new(
+                format!("dec{i}/self_att/{m}"),
+                d,
+                d,
+            ));
+        }
+        for m in ["q", "k", "v", "output"] {
+            layers.push(LayerSpec::new(
+                format!("dec{i}/enc_att/{m}"),
+                d,
+                d,
+            ));
+        }
+        layers.push(LayerSpec::new(format!("dec{i}/ffn1"), ff, d));
+        layers.push(LayerSpec::new(format!("dec{i}/ffn2"), d, ff));
+    }
+    layers
+}
+
+/// ResNet-50 (He et al. 2016), ImageNet: bottleneck blocks
+/// `[3, 4, 6, 3]`, plus the stem conv and the final FC. Conv kernels are
+/// flattened to `out_ch × (k·k·in_ch)` matrices — the layout the paper's
+/// bit-plane grouping operates on. Names follow the paper's
+/// `GROUPg_LAYERl_…` convention (Table S.5).
+pub fn resnet50_layers() -> Vec<LayerSpec> {
+    let mut layers = Vec::new();
+    layers.push(LayerSpec::new("conv1", 64, 7 * 7 * 3));
+    let blocks = [3usize, 4, 6, 3];
+    let widths = [(64usize, 256usize), (128, 512), (256, 1024), (512, 2048)];
+    let mut in_ch = 64usize;
+    for (g, (&nblocks, &(mid, out))) in
+        blocks.iter().zip(widths.iter()).enumerate()
+    {
+        for l in 0..nblocks {
+            let g1 = g + 1;
+            layers.push(LayerSpec::new(
+                format!("group{g1}_layer{l}_conv1"),
+                mid,
+                in_ch,
+            ));
+            layers.push(LayerSpec::new(
+                format!("group{g1}_layer{l}_conv2"),
+                mid,
+                3 * 3 * mid,
+            ));
+            layers.push(LayerSpec::new(
+                format!("group{g1}_layer{l}_conv3"),
+                out,
+                mid,
+            ));
+            if l == 0 {
+                layers.push(LayerSpec::new(
+                    format!("group{g1}_layer{l}_downsample"),
+                    out,
+                    in_ch,
+                ));
+            }
+            in_ch = out;
+        }
+    }
+    layers.push(LayerSpec::new("fc", 1000, 2048));
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transformer_layer_shapes() {
+        let layers = transformer_layers();
+        let ffn1 = layers.iter().find(|l| l.name == "enc0/ffn1").unwrap();
+        assert_eq!((ffn1.rows, ffn1.cols), (2048, 512));
+        assert!(layers.iter().any(|l| l.name == "dec5/enc_att/v"));
+    }
+
+    #[test]
+    fn resnet_block_structure() {
+        let layers = resnet50_layers();
+        // 1 stem + (3+4+6+3)·3 convs + 4 downsamples + 1 fc = 54.
+        assert_eq!(layers.len(), 1 + 16 * 3 + 4 + 1);
+        let c2 = layers
+            .iter()
+            .find(|l| l.name == "group3_layer3_conv2")
+            .unwrap();
+        assert_eq!((c2.rows, c2.cols), (256, 3 * 3 * 256));
+        let ds = layers
+            .iter()
+            .find(|l| l.name == "group4_layer0_downsample")
+            .unwrap();
+        assert_eq!((ds.rows, ds.cols), (2048, 1024));
+    }
+
+    #[test]
+    fn fc_is_1000_way() {
+        let layers = resnet50_layers();
+        let fc = layers.last().unwrap();
+        assert_eq!((fc.rows, fc.cols), (1000, 2048));
+    }
+}

@@ -1,0 +1,160 @@
+//! Synthetic weight generation with trained-network statistics.
+
+use super::LayerSpec;
+use crate::rng::Rng;
+
+/// Weight generator parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct WeightGen {
+    /// Lognormal σ of the per-output-row scale (trained nets: ~0.2; set
+    /// higher to emulate stronger structure, 0 for i.i.d.).
+    pub row_scale_sigma: f64,
+    /// Global magnitude multiplier on the Xavier std. Trained,
+    /// weight-decayed nets sit well below 1 — this keeps `|w| ≪ 1` so
+    /// FP32 exponent planes show Figure S.12's skew.
+    pub gain: f64,
+}
+
+impl Default for WeightGen {
+    fn default() -> Self {
+        WeightGen { row_scale_sigma: 0.20, gain: 1.0 }
+    }
+}
+
+/// A generated layer: spec + FP32 weights (row-major).
+#[derive(Debug, Clone)]
+pub struct SyntheticLayer {
+    pub spec: LayerSpec,
+    pub weights: Vec<f32>,
+}
+
+impl SyntheticLayer {
+    /// Generate weights: `w[r][c] ~ N(0, (gain·xavier·scale_r)²)` with
+    /// `scale_r ~ LogNormal(0, row_scale_sigma)`.
+    pub fn generate(spec: &LayerSpec, gen: WeightGen, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let xavier = (2.0 / (spec.rows + spec.cols) as f64).sqrt();
+        let std = gen.gain * xavier;
+        let mut weights = Vec::with_capacity(spec.n_weights());
+        for _ in 0..spec.rows {
+            let scale = (gen.row_scale_sigma * rng.normal()).exp() * std;
+            for _ in 0..spec.cols {
+                weights.push((rng.normal() * scale) as f32);
+            }
+        }
+        SyntheticLayer { spec: spec.clone(), weights }
+    }
+
+    /// Truncate to the first `n` weights (whole rows are kept; used to
+    /// subsample very large layers for encoding-statistics runs — `E` is
+    /// a ratio and converges with a few 10⁵ bits, see EXPERIMENTS.md).
+    pub fn truncated(&self, n: usize) -> SyntheticLayer {
+        let rows = (n / self.spec.cols).max(1).min(self.spec.rows);
+        let take = rows * self.spec.cols;
+        SyntheticLayer {
+            spec: LayerSpec {
+                name: self.spec.name.clone(),
+                rows,
+                cols: self.spec.cols,
+            },
+            weights: self.weights[..take].to_vec(),
+        }
+    }
+}
+
+/// Symmetric signed-INT8 quantization: `q = round(w / scale)` with
+/// `scale = max|w| / 127` (Jacob et al. 2018 style, per-tensor).
+pub fn quantize_i8(weights: &[f32]) -> (Vec<i8>, f32) {
+    let max = weights.iter().fold(0.0f32, |m, &w| m.max(w.abs()));
+    let scale = if max == 0.0 { 1.0 } else { max / 127.0 };
+    let q = weights
+        .iter()
+        .map(|&w| (w / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (q, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::weights::BitPlanes;
+
+    fn spec(rows: usize, cols: usize) -> LayerSpec {
+        LayerSpec { name: "t".into(), rows, cols }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let s = spec(16, 32);
+        let a = SyntheticLayer::generate(&s, WeightGen::default(), 1);
+        let b = SyntheticLayer::generate(&s, WeightGen::default(), 1);
+        assert_eq!(
+            a.weights.iter().map(|w| w.to_bits()).collect::<Vec<_>>(),
+            b.weights.iter().map(|w| w.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn weights_are_small_magnitude() {
+        let s = spec(512, 512);
+        let l = SyntheticLayer::generate(&s, WeightGen::default(), 2);
+        let max = l.weights.iter().fold(0.0f32, |m, &w| m.max(w.abs()));
+        assert!(max < 1.0, "max |w| = {max}: exponent skew requires |w|<1");
+    }
+
+    #[test]
+    fn exponent_skew_like_fig_s12() {
+        let s = spec(256, 256);
+        let l = SyntheticLayer::generate(&s, WeightGen::default(), 3);
+        let planes = BitPlanes::from_f32(&l.weights);
+        let mask = crate::gf2::BitVecF2::from_bools(&vec![
+            true;
+            l.weights.len()
+        ]);
+        let zr = planes.zero_ratios(&mask);
+        // sign ~balanced, exponent MSB all-zero, next bits ~all-one.
+        assert!((zr[0] - 0.5).abs() < 0.05);
+        assert!(zr[1] > 0.99);
+        assert!(zr[2] < 0.05);
+    }
+
+    #[test]
+    fn quantize_i8_roundtrip_error_bounded() {
+        let s = spec(64, 64);
+        let l = SyntheticLayer::generate(&s, WeightGen::default(), 4);
+        let (q, scale) = quantize_i8(&l.weights);
+        assert_eq!(q.len(), l.weights.len());
+        for (&w, &qv) in l.weights.iter().zip(&q) {
+            assert!((w - qv as f32 * scale).abs() <= scale * 0.5 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn quantized_bitplanes_are_roughly_balanced() {
+        // Signed INT8 of Gaussian weights: low bits ~uniform — the reason
+        // Table 2's INT8 rows mark inverting "N/A".
+        let s = spec(256, 256);
+        let l = SyntheticLayer::generate(&s, WeightGen::default(), 5);
+        let (q, _) = quantize_i8(&l.weights);
+        let planes = BitPlanes::from_i8(&q);
+        let mask =
+            crate::gf2::BitVecF2::from_bools(&vec![true; q.len()]);
+        let zr = planes.zero_ratios(&mask);
+        for k in 5..8 {
+            assert!(
+                (zr[k] - 0.5).abs() < 0.1,
+                "plane {k} zero-ratio {}",
+                zr[k]
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_keeps_whole_rows() {
+        let s = spec(100, 64);
+        let l = SyntheticLayer::generate(&s, WeightGen::default(), 6);
+        let t = l.truncated(1000);
+        assert_eq!(t.spec.rows, 15);
+        assert_eq!(t.weights.len(), 15 * 64);
+    }
+}

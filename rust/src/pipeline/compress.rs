@@ -1,0 +1,330 @@
+//! The compressor: configuration + per-layer compression.
+
+use super::LayerReport;
+use crate::container::{CompressedLayer, CompressedPlane, Container, Dtype};
+use crate::correction::{CorrectionStream, DEFAULT_P};
+use crate::decoder::{DecoderSpec, SequentialDecoder};
+use crate::encoder::{Encoder, SlicedPlane, ViterbiEncoder};
+use crate::gf2::BitVecF2;
+use crate::models::SyntheticLayer;
+use crate::pruning::{MaskStats, PruneMethod, Pruner};
+use crate::weights::{maybe_invert, BitPlanes};
+
+/// All knobs of the compression pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct CompressionConfig {
+    /// Decoder input width `N_in` (paper: 8 — byte-fed decoders).
+    pub n_in: usize,
+    /// Shift registers `N_s`.
+    pub n_s: usize,
+    /// Pruning rate `S`; also sets `N_out = ⌊N_in/(1−S)⌋`.
+    pub sparsity: f64,
+    /// Mask family.
+    pub method: PruneMethod,
+    /// Apply the inverting technique (§5.1). The paper enables it for
+    /// `N_s ∈ {0,1}` on FP32.
+    pub invert: bool,
+    /// Correction vector length `p` (Appendix F; paper uses 512).
+    pub p: usize,
+    /// Base seed (masks, M⊕ candidates, weights all derive from it).
+    pub seed: u64,
+    /// Number of random `M⊕` candidates to try per layer; the best (by
+    /// error count on a sample) is kept. §5.1: "we try numerous random
+    /// M⊕ matrices and choose a particular M⊕ of the highest E".
+    pub m_candidates: usize,
+    /// Optional Viterbi beam width (None = exact DP).
+    pub beam: Option<u32>,
+}
+
+impl Default for CompressionConfig {
+    fn default() -> Self {
+        CompressionConfig {
+            n_in: 8,
+            n_s: 2,
+            sparsity: 0.9,
+            method: PruneMethod::Random,
+            invert: false,
+            p: DEFAULT_P,
+            seed: 0xF2F0,
+            m_candidates: 1,
+            beam: None,
+        }
+    }
+}
+
+impl CompressionConfig {
+    /// Decoder geometry implied by this config.
+    pub fn decoder_spec(&self) -> DecoderSpec {
+        DecoderSpec::for_sparsity(self.n_in, self.sparsity, self.n_s)
+    }
+}
+
+/// Layer/model compressor.
+#[derive(Debug, Clone)]
+pub struct Compressor {
+    config: CompressionConfig,
+}
+
+impl Compressor {
+    /// Build from a config.
+    pub fn new(config: CompressionConfig) -> Self {
+        Compressor { config }
+    }
+
+    /// Access the config.
+    pub fn config(&self) -> &CompressionConfig {
+        &self.config
+    }
+
+    /// Compress FP32 weights (32 planes).
+    pub fn compress_f32(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        weights: &[f32],
+    ) -> (CompressedLayer, LayerReport) {
+        assert_eq!(weights.len(), rows * cols);
+        let planes = BitPlanes::from_f32(weights);
+        self.compress_planes(name, rows, cols, Dtype::F32, 1.0, planes, weights)
+    }
+
+    /// Compress signed-INT8 weights (8 planes).
+    pub fn compress_i8(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        q: &[i8],
+        scale: f32,
+    ) -> (CompressedLayer, LayerReport) {
+        assert_eq!(q.len(), rows * cols);
+        let planes = BitPlanes::from_i8(q);
+        let weights: Vec<f32> =
+            q.iter().map(|&v| v as f32 * scale).collect();
+        self.compress_planes(name, rows, cols, Dtype::I8, scale, planes, &weights)
+    }
+
+    /// Compress a synthetic layer in the given dtype.
+    pub fn compress_layer(
+        &self,
+        layer: &SyntheticLayer,
+        dtype: Dtype,
+    ) -> (CompressedLayer, LayerReport) {
+        match dtype {
+            Dtype::F32 => self.compress_f32(
+                &layer.spec.name,
+                layer.spec.rows,
+                layer.spec.cols,
+                &layer.weights,
+            ),
+            Dtype::I8 => {
+                let (q, scale) = crate::models::quantize_i8(&layer.weights);
+                self.compress_i8(
+                    &layer.spec.name,
+                    layer.spec.rows,
+                    layer.spec.cols,
+                    &q,
+                    scale,
+                )
+            }
+        }
+    }
+
+    /// Compress a whole model into a container + per-layer reports.
+    pub fn compress_model(
+        &self,
+        layers: &[SyntheticLayer],
+        dtype: Dtype,
+    ) -> (Container, Vec<LayerReport>) {
+        let mut container = Container::default();
+        let mut reports = Vec::with_capacity(layers.len());
+        for layer in layers {
+            let (cl, rep) = self.compress_layer(layer, dtype);
+            container.layers.push(cl);
+            reports.push(rep);
+        }
+        (container, reports)
+    }
+
+    fn compress_planes(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        dtype: Dtype,
+        scale: f32,
+        planes: BitPlanes,
+        weights_f32: &[f32],
+    ) -> (CompressedLayer, LayerReport) {
+        let cfg = &self.config;
+        let spec = cfg.decoder_spec();
+        let n = rows * cols;
+
+        // Mask from the weights (magnitude-family pruners score |w|).
+        let pruner = Pruner::new(
+            cfg.method,
+            cfg.sparsity,
+            cfg.seed ^ hash_name(name),
+        );
+        let mask = pruner.mask(weights_f32, cols);
+        let mask_stats = MaskStats::from_mask(&mask, spec.n_out);
+
+        // M⊕ selection: score candidates on the first plane sample.
+        let m_seed = self.pick_matrix_seed(name, &planes, &mask, spec);
+        let decoder = SequentialDecoder::random(spec, m_seed);
+        let encoder = match cfg.beam {
+            None => ViterbiEncoder::new(decoder.clone()),
+            Some(b) => ViterbiEncoder::with_beam(decoder.clone(), b),
+        };
+
+        let mut out_planes = Vec::with_capacity(planes.n_planes());
+        let mut agg = crate::encoder::EncodeStats::default();
+        let mut per_plane_e = Vec::with_capacity(planes.n_planes());
+        for k in 0..planes.n_planes() {
+            let (bits, inverted) = if cfg.invert {
+                maybe_invert(planes.plane(k), &mask)
+            } else {
+                (planes.plane(k).clone(), false)
+            };
+            let sliced = SlicedPlane::new(&bits, &mask, spec.n_out);
+            let res = encoder.encode(&sliced);
+            agg.merge(&res.stats);
+            per_plane_e.push(res.efficiency());
+            out_planes.push(CompressedPlane {
+                inverted,
+                encoded: res.encoded,
+                correction: CorrectionStream::build(
+                    &res.mismatches,
+                    n,
+                    cfg.p,
+                ),
+            });
+        }
+
+        let layer = CompressedLayer {
+            name: name.to_string(),
+            rows,
+            cols,
+            dtype,
+            scale,
+            spec,
+            m_seed,
+            mask,
+            planes: out_planes,
+        };
+        let report = LayerReport {
+            name: name.to_string(),
+            n_weights: n,
+            sparsity: cfg.sparsity,
+            method: cfg.method,
+            n_s: cfg.n_s,
+            efficiency: agg.efficiency(),
+            per_plane_efficiency: per_plane_e,
+            memory_reduction: layer.memory_reduction(),
+            coeff_var: mask_stats.coeff_var,
+            stats: agg,
+        };
+        (layer, report)
+    }
+
+    /// Paper §5.1: sample a few random `M⊕` and keep the best. We score
+    /// on the sign plane truncated to ≤ 16 blocks-worth of bits with a
+    /// cheap `N_s`-aware encode.
+    fn pick_matrix_seed(
+        &self,
+        name: &str,
+        planes: &BitPlanes,
+        mask: &BitVecF2,
+        spec: DecoderSpec,
+    ) -> u64 {
+        let base = self.config.seed ^ hash_name(name) ^ 0x4D58;
+        if self.config.m_candidates <= 1 {
+            return base;
+        }
+        let sample_bits = (spec.n_out * 64).min(planes.plane(0).len());
+        let mut sample = BitVecF2::zeros(sample_bits);
+        let mut smask = BitVecF2::zeros(sample_bits);
+        for i in 0..sample_bits {
+            sample.set(i, planes.plane(0).get(i));
+            smask.set(i, mask.get(i));
+        }
+        let plane = SlicedPlane::new(&sample, &smask, spec.n_out);
+        (0..self.config.m_candidates as u64)
+            .map(|k| {
+                let seed = base.wrapping_add(k.wrapping_mul(0x9E37));
+                let dec = SequentialDecoder::random(spec, seed);
+                let res = ViterbiEncoder::new(dec).encode(&plane);
+                (res.stats.error_bits, seed)
+            })
+            .min()
+            .map(|(_, seed)| seed)
+            .unwrap_or(base)
+    }
+}
+
+/// Stable name hash for per-layer seed derivation (FNV-1a).
+fn hash_name(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_matches_paper_flagship() {
+        let cfg = CompressionConfig::default();
+        assert_eq!(cfg.n_in, 8);
+        let spec = cfg.decoder_spec();
+        assert_eq!(spec.n_out, 80); // S = 0.9
+        assert_eq!(cfg.p, 512);
+    }
+
+    #[test]
+    fn hash_name_distinguishes_layers() {
+        assert_ne!(hash_name("a"), hash_name("b"));
+        assert_eq!(hash_name("dec3/ffn2"), hash_name("dec3/ffn2"));
+    }
+
+    #[test]
+    fn m_candidates_never_picks_worse_than_first() {
+        // With 4 candidates the chosen seed's sample error must be ≤ the
+        // base seed's sample error by construction (min over a set that
+        // includes it... first candidate IS base). Just smoke-test that
+        // compression still round-trips.
+        let cfg = CompressionConfig {
+            m_candidates: 4,
+            sparsity: 0.8,
+            n_s: 1,
+            ..Default::default()
+        };
+        let c = Compressor::new(cfg);
+        let spec = crate::models::LayerSpec {
+            name: "m".into(),
+            rows: 16,
+            cols: 64,
+        };
+        let layer = SyntheticLayer::generate(
+            &spec,
+            crate::models::WeightGen::default(),
+            9,
+        );
+        let (q, scale) = crate::models::quantize_i8(&layer.weights);
+        let (cl, rep) = c.compress_i8("m", 16, 64, &q, scale);
+        assert!(rep.efficiency > 80.0);
+        let dec = crate::sparse::DecodedLayer::from_compressed(&cl);
+        for i in 0..q.len() {
+            if cl.mask.get(i) {
+                assert!(
+                    (dec.weights[i] - q[i] as f32 * scale).abs() < 1e-6
+                );
+            }
+        }
+    }
+}

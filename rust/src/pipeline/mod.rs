@@ -1,0 +1,129 @@
+//! End-to-end compression pipeline: prune → bit-planes → (invert) →
+//! sequential encode → correction → container, plus lossless
+//! decompression and verification.
+//!
+//! This is the orchestration layer every experiment and the serving
+//! examples go through. One [`Compressor`] handles a layer or a whole
+//! model; the decoder matrix is selected per layer (the paper picks the
+//! best of several random `M⊕` candidates, §5.1 Setup).
+
+mod compress;
+mod report;
+
+pub use compress::{CompressionConfig, Compressor};
+pub use report::LayerReport;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::Dtype;
+    use crate::models::{LayerSpec, SyntheticLayer, WeightGen};
+    use crate::pruning::PruneMethod;
+    use crate::sparse::DecodedLayer;
+
+    fn small_layer(seed: u64) -> SyntheticLayer {
+        let spec = LayerSpec { name: "t/0".into(), rows: 8, cols: 48 };
+        SyntheticLayer::generate(&spec, WeightGen::default(), seed)
+    }
+
+    #[test]
+    fn f32_roundtrip_is_lossless_on_unpruned_weights() {
+        let cfg = CompressionConfig {
+            sparsity: 0.9,
+            n_s: 1,
+            ..CompressionConfig::default()
+        };
+        let c = Compressor::new(cfg);
+        let layer = small_layer(1);
+        let (compressed, report) =
+            c.compress_f32(&layer.spec.name, layer.spec.rows, layer.spec.cols, &layer.weights);
+        assert!(report.efficiency > 50.0);
+        let decoded = DecodedLayer::from_compressed(&compressed);
+        let mask = &compressed.mask;
+        for i in 0..layer.weights.len() {
+            if mask.get(i) {
+                assert_eq!(
+                    decoded.weights[i].to_bits(),
+                    layer.weights[i].to_bits(),
+                    "weight {i} corrupted"
+                );
+            } else {
+                assert_eq!(decoded.weights[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn i8_roundtrip_is_lossless() {
+        let cfg = CompressionConfig {
+            sparsity: 0.7,
+            n_s: 2,
+            method: PruneMethod::Magnitude,
+            beam: Some(8), // keep the debug-mode DP quick
+            ..CompressionConfig::default()
+        };
+        let c = Compressor::new(cfg);
+        let layer = small_layer(2);
+        let (q, scale) = crate::models::quantize_i8(&layer.weights);
+        let (compressed, _) = c.compress_i8(
+            &layer.spec.name,
+            layer.spec.rows,
+            layer.spec.cols,
+            &q,
+            scale,
+        );
+        assert_eq!(compressed.dtype, Dtype::I8);
+        let decoded = DecodedLayer::from_compressed(&compressed);
+        for i in 0..q.len() {
+            if compressed.mask.get(i) {
+                let expect = q[i] as f32 * scale;
+                assert!((decoded.weights[i] - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn memory_reduction_approaches_sparsity_at_high_ns() {
+        let cfg = CompressionConfig {
+            sparsity: 0.9,
+            n_s: 2,
+            method: PruneMethod::Random,
+            beam: Some(8), // keep the debug-mode DP quick
+            ..CompressionConfig::default()
+        };
+        let c = Compressor::new(cfg);
+        let spec = LayerSpec { name: "big".into(), rows: 16, cols: 512 };
+        let layer = SyntheticLayer::generate(&spec, WeightGen::default(), 3);
+        let (q, scale) = crate::models::quantize_i8(&layer.weights);
+        let (compressed, report) =
+            c.compress_i8("big", 16, 512, &q, scale);
+        assert!(
+            report.efficiency > 95.0,
+            "E = {:.1}%",
+            report.efficiency
+        );
+        let mr = compressed.memory_reduction();
+        assert!(mr > 80.0, "memory reduction {mr:.1}% should approach 90%");
+    }
+
+    #[test]
+    fn container_serialization_roundtrip_through_pipeline() {
+        let cfg = CompressionConfig {
+            sparsity: 0.8,
+            n_s: 1,
+            ..CompressionConfig::default()
+        };
+        let c = Compressor::new(cfg);
+        let layer = small_layer(4);
+        let (q, scale) = crate::models::quantize_i8(&layer.weights);
+        let (compressed, _) =
+            c.compress_i8("l0", layer.spec.rows, layer.spec.cols, &q, scale);
+        let container =
+            crate::container::Container { layers: vec![compressed] };
+        let bytes = crate::container::write_container(&container);
+        let back = crate::container::read_container(&bytes).unwrap();
+        let a = DecodedLayer::from_compressed(&container.layers[0]);
+        let b = DecodedLayer::from_compressed(&back.layers[0]);
+        assert_eq!(a.weights, b.weights);
+    }
+}

@@ -1,0 +1,106 @@
+//! Per-layer compression report — the numbers Tables 2/3 and S.4/S.5
+//! are built from.
+
+use crate::encoder::EncodeStats;
+use crate::pruning::PruneMethod;
+
+/// Everything measured while compressing one layer.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    pub n_weights: usize,
+    pub sparsity: f64,
+    pub method: PruneMethod,
+    pub n_s: usize,
+    /// Aggregate encoding efficiency `E` (%) across planes (Eq. 1).
+    pub efficiency: f64,
+    /// Per-plane `E` (%), MSB-first (Figure S.13's series).
+    pub per_plane_efficiency: Vec<f64>,
+    /// Memory reduction (%) incl. correction (Table 2's metric).
+    pub memory_reduction: f64,
+    /// Coefficient of variation of `n_u` (Table 3's statistic).
+    pub coeff_var: f64,
+    /// Raw bit accounting.
+    pub stats: EncodeStats,
+}
+
+impl LayerReport {
+    /// Merge several layer reports into a model-level aggregate
+    /// (efficiency/memory recomputed from summed bit counts, not
+    /// averaged percentages).
+    pub fn aggregate(name: &str, reports: &[LayerReport]) -> LayerReport {
+        assert!(!reports.is_empty());
+        let mut stats = EncodeStats::default();
+        let mut n_weights = 0usize;
+        let mut cv_weighted = 0.0f64;
+        let mut original_bits = 0usize;
+        let mut compressed_bits = 0usize;
+        for r in reports {
+            stats.merge(&r.stats);
+            n_weights += r.n_weights;
+            cv_weighted += r.coeff_var * r.n_weights as f64;
+            let planes = r.per_plane_efficiency.len().max(1);
+            original_bits += r.n_weights * planes;
+            compressed_bits += (r.n_weights as f64
+                * planes as f64
+                * (1.0 - r.memory_reduction / 100.0))
+                .round() as usize;
+        }
+        LayerReport {
+            name: name.to_string(),
+            n_weights,
+            sparsity: reports[0].sparsity,
+            method: reports[0].method,
+            n_s: reports[0].n_s,
+            efficiency: stats.efficiency(),
+            per_plane_efficiency: Vec::new(),
+            memory_reduction: (1.0
+                - compressed_bits as f64 / original_bits as f64)
+                * 100.0,
+            coeff_var: cv_weighted / n_weights as f64,
+            stats,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rep(e_matched: usize, e_unpruned: usize, mr: f64, n: usize) -> LayerReport {
+        LayerReport {
+            name: "x".into(),
+            n_weights: n,
+            sparsity: 0.9,
+            method: PruneMethod::Random,
+            n_s: 2,
+            efficiency: e_matched as f64 / e_unpruned as f64 * 100.0,
+            per_plane_efficiency: vec![0.0; 8],
+            memory_reduction: mr,
+            coeff_var: 0.3,
+            stats: EncodeStats {
+                total_bits: n * 8,
+                unpruned_bits: e_unpruned,
+                matched_bits: e_matched,
+                error_bits: e_unpruned - e_matched,
+                encoded_bits: n,
+            },
+        }
+    }
+
+    #[test]
+    fn aggregate_weights_by_bits_not_percent() {
+        let a = rep(90, 100, 80.0, 1000);
+        let b = rep(450, 500, 88.0, 3000);
+        let agg = LayerReport::aggregate("model", &[a, b]);
+        // E = (90+450)/(100+500) = 90%
+        assert!((agg.efficiency - 90.0).abs() < 1e-9);
+        // memory reduction: (1000·8·0.2 + 3000·8·0.12) compressed
+        let expect = (1.0
+            - (1000.0 * 8.0 * 0.2 + 3000.0 * 8.0 * 0.12)
+                / (4000.0 * 8.0))
+            * 100.0;
+        assert!((agg.memory_reduction - expect).abs() < 0.1);
+        assert_eq!(agg.n_weights, 4000);
+    }
+}

@@ -1,0 +1,42 @@
+//! Fine-grained pruning mask generation and `n_u` statistics.
+//!
+//! The encoder never sees weights directly — only a binary mask (pruned /
+//! unpruned) and bit-planes. What matters for encoding capability is the
+//! *distribution of `n_u`* (unpruned bits per `N_out`-block): random
+//! pruning gives a binomial `n_u`; magnitude and L0 pruning are
+//! overdispersed (higher coefficient of variation) because per-row weight
+//! scales differ (§3.2, Table 3). We implement all four of the paper's
+//! mask families.
+
+mod methods;
+mod stats;
+
+pub use methods::{PruneMethod, Pruner};
+pub use stats::MaskStats;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn all_methods_hit_target_sparsity() {
+        let mut rng = Rng::new(1);
+        let weights: Vec<f32> =
+            (0..40_000).map(|_| rng.normal() as f32).collect();
+        for method in [
+            PruneMethod::Random,
+            PruneMethod::Magnitude,
+            PruneMethod::L0Reg,
+            PruneMethod::VarDropout,
+        ] {
+            let mask = Pruner::new(method, 0.7, 7).mask(&weights, 200);
+            let density =
+                mask.count_ones() as f64 / weights.len() as f64;
+            assert!(
+                (density - 0.3).abs() < 0.02,
+                "{method:?}: density {density}"
+            );
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! `n_u` statistics: mean, variance, coefficient of variation (Eq. 3–5).
+//!
+//! For Bernoulli pruning, `n_u ~ B(N_out, 1−S)` so
+//! `CV = √(Var)/E = √(S / (N_out(1−S)))` — Appendix A, Eq. 5. Structured
+//! fine-grained pruners are overdispersed relative to this; the paper
+//! correlates higher CV with lower encoding efficiency (Table 3).
+
+use crate::gf2::BitVecF2;
+
+/// Distribution summary of per-block unpruned counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskStats {
+    /// Block width used for slicing.
+    pub n_out: usize,
+    /// Number of blocks measured.
+    pub blocks: usize,
+    /// Mean of `n_u`.
+    pub mean: f64,
+    /// Variance of `n_u` (population).
+    pub variance: f64,
+    /// Coefficient of variation `√Var / mean` (0 when mean = 0).
+    pub coeff_var: f64,
+    /// Overall density (unpruned fraction) = `1 − S` measured.
+    pub density: f64,
+    /// Histogram of `n_u` values (index = count).
+    pub histogram: Vec<usize>,
+}
+
+impl MaskStats {
+    /// Slice `mask` into `n_out`-bit blocks and summarize `n_u`.
+    /// Only full blocks are counted (tail excluded) so the binomial
+    /// comparison is clean.
+    pub fn from_mask(mask: &BitVecF2, n_out: usize) -> Self {
+        let full_blocks = mask.len() / n_out;
+        let mut hist = vec![0usize; n_out + 1];
+        let mut sum = 0.0f64;
+        let mut sum2 = 0.0f64;
+        for t in 0..full_blocks {
+            let n_u = mask.block(t * n_out, n_out).count_ones() as usize;
+            hist[n_u] += 1;
+            sum += n_u as f64;
+            sum2 += (n_u * n_u) as f64;
+        }
+        let n = full_blocks.max(1) as f64;
+        let mean = sum / n;
+        let variance = (sum2 / n - mean * mean).max(0.0);
+        let coeff_var =
+            if mean > 0.0 { variance.sqrt() / mean } else { 0.0 };
+        MaskStats {
+            n_out,
+            blocks: full_blocks,
+            mean,
+            variance,
+            coeff_var,
+            density: mean / n_out as f64,
+            histogram: hist,
+        }
+    }
+
+    /// Theoretical binomial coefficient of variation for sparsity `s`
+    /// (Eq. 5 with `n_w = N_out`).
+    pub fn binomial_cv(n_out: usize, s: f64) -> f64 {
+        (s / (n_out as f64 * (1.0 - s))).sqrt()
+    }
+
+    /// Fraction of blocks whose `n_u` exceeds the decoder input width —
+    /// blocks that *cannot* be perfectly encoded by a combinational
+    /// decoder (§3.2's "too many unpruned weight bits").
+    pub fn overflow_fraction(&self, n_in: usize) -> f64 {
+        let over: usize = self
+            .histogram
+            .iter()
+            .enumerate()
+            .filter(|(n_u, _)| *n_u > n_in)
+            .map(|(_, c)| c)
+            .sum();
+        over as f64 / self.blocks.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn exact_stats_on_known_mask() {
+        // Blocks of 4: [1111, 0000, 1100] → n_u = 4, 0, 2.
+        let mask = BitVecF2::from_bools(&[
+            true, true, true, true, false, false, false, false, true, true,
+            false, false,
+        ]);
+        let s = MaskStats::from_mask(&mask, 4);
+        assert_eq!(s.blocks, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        // Var = (16+0+4)/3 − 4 = 8/3
+        assert!((s.variance - 8.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.histogram[4], 1);
+        assert_eq!(s.histogram[0], 1);
+        assert_eq!(s.histogram[2], 1);
+    }
+
+    #[test]
+    fn binomial_cv_formula() {
+        // Paper §3.2: CV = √(S/(N_out(1−S))).
+        let cv = MaskStats::binomial_cv(80, 0.9);
+        assert!((cv - (0.9f64 / 8.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bernoulli_mask_matches_binomial_cv() {
+        let mut rng = Rng::new(1);
+        let mask = BitVecF2::random(2_000_000, 0.1, &mut rng); // S=0.9
+        let s = MaskStats::from_mask(&mask, 80);
+        let expect = MaskStats::binomial_cv(80, 0.9);
+        assert!(
+            (s.coeff_var - expect).abs() < 0.02,
+            "cv {} vs {}",
+            s.coeff_var,
+            expect
+        );
+        assert!((s.density - 0.1).abs() < 0.005);
+    }
+
+    #[test]
+    fn overflow_fraction_counts_blocks_above_n_in() {
+        let mask = BitVecF2::from_bools(&[
+            true, true, true, false, // n_u = 3
+            true, false, false, false, // n_u = 1
+        ]);
+        let s = MaskStats::from_mask(&mask, 4);
+        assert!((s.overflow_fraction(2) - 0.5).abs() < 1e-12);
+        assert_eq!(s.overflow_fraction(3), 0.0);
+    }
+
+    #[test]
+    fn cv_increases_with_sparsity() {
+        // Appendix A: CV grows with S — the reason fixed-to-variable
+        // formats waste more bandwidth at higher sparsity.
+        let mut rng = Rng::new(2);
+        let lo = MaskStats::from_mask(
+            &BitVecF2::random(500_000, 0.5, &mut rng),
+            64,
+        );
+        let hi = MaskStats::from_mask(
+            &BitVecF2::random(500_000, 0.05, &mut rng),
+            64,
+        );
+        assert!(hi.coeff_var > lo.coeff_var);
+    }
+}

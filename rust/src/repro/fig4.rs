@@ -1,0 +1,258 @@
+//! Figure 4 — encoding efficiency of random XOR-gate decoders
+//! (`N_s = 0`) under three `n_u` regimes.
+//!
+//! Grid: `N_in ∈ {4, 8, 12, 16, 20}` × `S ∈ {0.5 … 0.9}` with
+//! `N_out = ⌊N_in/(1−S)⌋`; cells report `E%` mean (± sd) over trials,
+//! each trial using a fresh random `M⊕` and fresh blocks.
+//!
+//! * 4a — `n_u` fixed to `N_in` per block (`Var[n_u] = 0`);
+//! * 4b — Bernoulli pruning: `n_u ~ B(N_out, 1−S)`;
+//! * 4c — empirical `n_u` from magnitude-pruning the first decoder FFN
+//!   layer of the (synthetic) Transformer.
+//!
+//! Expected shape: E grows with `N_in` (4a: 90 → 98 down the rows);
+//! 4b/4c sit a few points below 4a at the same `N_in` (variation hurts);
+//! 4c ≈ 4b (magnitude ≈ Bernoulli — the paper's justification for
+//! synthetic studies).
+
+use super::ExpOptions;
+use crate::cli::Args;
+use crate::decoder::DecoderSpec;
+use crate::gf2::BitVecF2;
+use crate::models::{transformer_layers, SyntheticLayer, WeightGen};
+use crate::pruning::{PruneMethod, Pruner};
+use crate::report::{fmt_mean_sd, mean_sd, Table};
+use crate::rng::Rng;
+use anyhow::Result;
+
+const N_INS: [usize; 5] = [4, 8, 12, 16, 20];
+const SPARSITIES: [f64; 5] = [0.5, 0.6, 0.7, 0.8, 0.9];
+
+enum NuRegime {
+    Fixed,
+    Binomial,
+    Empirical,
+}
+
+pub fn fig4a(args: &Args) -> Result<()> {
+    grid("Figure 4a: E%, n_u fixed = N_in (Var[n_u]=0)", args, NuRegime::Fixed)
+}
+
+pub fn fig4b(args: &Args) -> Result<()> {
+    grid(
+        "Figure 4b: E%, n_u ~ B(N_out, 1-S) (Bernoulli pruning)",
+        args,
+        NuRegime::Binomial,
+    )
+}
+
+pub fn fig4c(args: &Args) -> Result<()> {
+    grid(
+        "Figure 4c: E%, empirical n_u (magnitude-pruned Transformer dec0/ffn1)",
+        args,
+        NuRegime::Empirical,
+    )
+}
+
+fn grid(title: &str, args: &Args, regime: NuRegime) -> Result<()> {
+    let opt = ExpOptions::from_args(args, 40_000)?;
+    let mut rng = Rng::new(opt.seed);
+
+    // Empirical masks: magnitude-prune the synthetic dec0/ffn1 layer once
+    // per sparsity, reuse its mask bits across trials (fresh offsets).
+    let empirical_masks: Vec<BitVecF2> = match regime {
+        NuRegime::Empirical => SPARSITIES
+            .iter()
+            .map(|&s| {
+                let spec = transformer_layers()
+                    .into_iter()
+                    .find(|l| l.name == "dec0/ffn1")
+                    .unwrap();
+                let layer = SyntheticLayer::generate(
+                    &spec,
+                    WeightGen::default(),
+                    opt.seed ^ 0xEE,
+                );
+                Pruner::new(PruneMethod::Magnitude, s, opt.seed ^ 0xAA)
+                    .mask(&layer.weights, layer.spec.cols)
+            })
+            .collect(),
+        _ => Vec::new(),
+    };
+
+    let mut headers: Vec<String> = vec!["N_in".into()];
+    headers.extend(SPARSITIES.iter().map(|s| format!("S={s}")));
+    let mut table = Table::new(
+        title,
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    for &n_in in &N_INS {
+        let mut cells = vec![n_in.to_string()];
+        for (si, &s) in SPARSITIES.iter().enumerate() {
+            let n_out = ((n_in as f64) / (1.0 - s)).floor() as usize;
+            // Cap per-trial bits so the 2^20-entry N_in=20 search stays
+            // tractable; E converges with few blocks.
+            let blocks = (opt.bits / n_out).clamp(16, 64);
+            let bits = blocks * n_out;
+            let mut es = Vec::with_capacity(opt.trials);
+            for t in 0..opt.trials {
+                let data = BitVecF2::random(bits, 0.5, &mut rng);
+                let mask = match regime {
+                    NuRegime::Fixed => super::fixed_nu_mask(
+                        bits, n_out, n_in, &mut rng,
+                    ),
+                    NuRegime::Binomial => {
+                        super::random_mask(bits, s, &mut rng)
+                    }
+                    NuRegime::Empirical => {
+                        // Random window into the empirical mask.
+                        let src = &empirical_masks[si];
+                        let start =
+                            rng.below(src.len().saturating_sub(bits).max(1));
+                        let mut m = BitVecF2::zeros(bits);
+                        for i in 0..bits {
+                            m.set(i, src.get(start + i));
+                        }
+                        m
+                    }
+                };
+                let seed = opt.seed ^ ((t as u64) << 8) ^ n_in as u64;
+                let e = if n_out <= 128 {
+                    let spec = DecoderSpec::new(n_in, n_out, 0);
+                    super::encode_with(spec, seed, &data, &mask, None)
+                        .efficiency()
+                } else {
+                    wide_exhaustive_e(n_in, n_out, &data, &mask, seed)
+                };
+                es.push(e);
+            }
+            let (m, sd) = mean_sd(&es);
+            cells.push(fmt_mean_sd(m, sd));
+        }
+        table.row(cells);
+    }
+    print_table(&table, opt.csv);
+    Ok(())
+}
+
+/// Exhaustive (`N_s = 0`) encoding efficiency for blocks wider than 128
+/// bits (Figure 4's `N_in = 16, 20` × `S = 0.9` cells, `N_out` up to
+/// 200). The decoder matrix is two independently-random stacked halves —
+/// statistically identical to one random `N_out`-row matrix. Returns E%.
+fn wide_exhaustive_e(
+    n_in: usize,
+    n_out: usize,
+    data: &BitVecF2,
+    mask: &BitVecF2,
+    seed: u64,
+) -> f64 {
+    use crate::gf2::XorMatrix;
+    assert!(n_out > 128 && n_out <= 256);
+    let hi_width = n_out - 128;
+    let m_lo = XorMatrix::random(128, n_in, seed);
+    let m_hi = XorMatrix::random(hi_width, n_in, seed ^ 0x9E37);
+    // Dynamic-expansion tables, as in ChunkTables.
+    let size = 1usize << n_in;
+    let mut t_lo = vec![0u128; size];
+    let mut t_hi = vec![0u128; size];
+    for v in 1..size {
+        let low = v.trailing_zeros() as usize;
+        t_lo[v] = t_lo[v & (v - 1)] ^ m_lo.col(low);
+        t_hi[v] = t_hi[v & (v - 1)] ^ m_hi.col(low);
+    }
+    let blocks = data.len() / n_out;
+    let mut matched = 0usize;
+    let mut unpruned = 0usize;
+    for b in 0..blocks {
+        let start = b * n_out;
+        let d_lo = data.block(start, 128);
+        let d_hi = data.block(start + 128, hi_width);
+        let k_lo = mask.block(start, 128);
+        let k_hi = mask.block(start + 128, hi_width);
+        let n_u = (k_lo.count_ones() + k_hi.count_ones()) as usize;
+        unpruned += n_u;
+        let mut best = u32::MAX;
+        for v in 0..size {
+            let err = ((t_lo[v] ^ d_lo) & k_lo).count_ones()
+                + ((t_hi[v] ^ d_hi) & k_hi).count_ones();
+            if err < best {
+                best = err;
+                if err == 0 {
+                    break;
+                }
+            }
+        }
+        matched += n_u - best as usize;
+    }
+    if unpruned == 0 {
+        100.0
+    } else {
+        matched as f64 / unpruned as f64 * 100.0
+    }
+}
+
+pub(crate) fn print_table(table: &Table, csv: bool) {
+    if csv {
+        print!("{}", table.to_csv());
+    } else {
+        print!("{}", table.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smoke: the 4a grid's headline trend (E rises with N_in) holds on a
+    /// tiny budget.
+    #[test]
+    fn efficiency_rises_with_n_in_fixed_nu() {
+        let mut rng = Rng::new(3);
+        let mut means = Vec::new();
+        for &n_in in &[4usize, 12] {
+            let spec = DecoderSpec::for_sparsity(n_in, 0.5, 0);
+            let bits = spec.n_out * 32;
+            let mut es = Vec::new();
+            for t in 0..4 {
+                let data = BitVecF2::random(bits, 0.5, &mut rng);
+                let mask = crate::repro::fixed_nu_mask(
+                    bits, spec.n_out, n_in, &mut rng,
+                );
+                es.push(
+                    crate::repro::encode_with(spec, t, &data, &mask, None)
+                        .efficiency(),
+                );
+            }
+            means.push(mean_sd(&es).0);
+        }
+        assert!(
+            means[1] > means[0],
+            "E(N_in=12) {} should beat E(N_in=4) {}",
+            means[1],
+            means[0]
+        );
+    }
+
+    /// 4b sits below 4a at the same geometry (variation hurts).
+    #[test]
+    fn binomial_nu_is_harder_than_fixed() {
+        let mut rng = Rng::new(4);
+        let spec = DecoderSpec::for_sparsity(8, 0.8, 0);
+        let bits = spec.n_out * 64;
+        let (mut e_fixed, mut e_binom) = (0.0, 0.0);
+        for t in 0..6 {
+            let data = BitVecF2::random(bits, 0.5, &mut rng);
+            let fm = crate::repro::fixed_nu_mask(bits, spec.n_out, 8, &mut rng);
+            let bm = crate::repro::random_mask(bits, 0.8, &mut rng);
+            e_fixed += crate::repro::encode_with(spec, t, &data, &fm, None)
+                .efficiency();
+            e_binom += crate::repro::encode_with(spec, t, &data, &bm, None)
+                .efficiency();
+        }
+        assert!(
+            e_fixed > e_binom,
+            "fixed {e_fixed} should beat binomial {e_binom}"
+        );
+    }
+}

@@ -1,0 +1,174 @@
+//! Reproduction harness: one entry point per table/figure of the paper.
+//!
+//! Each command prints the same rows/series the paper reports (values
+//! differ — our substrate is synthetic, see DESIGN.md §2 — but the
+//! *shape* must hold: who wins, by what factor, where the crossovers
+//! fall). `f2f repro <id> [--bits N] [--seed N] [--trials N] [--beam W]
+//! [--csv]`.
+//!
+//! Workload sizes default to CPU-friendly values; EXPERIMENTS.md records
+//! the sizes used for the checked-in runs. The `--beam` option switches
+//! the `N_s = 2` cells to beam-pruned DP (validated against exact DP in
+//! `f2f repro beamcheck`).
+
+mod appendix;
+mod fig4;
+mod fig8;
+mod tables;
+
+use crate::cli::Args;
+use anyhow::{bail, Result};
+
+/// Options shared by every experiment.
+#[derive(Debug, Clone, Copy)]
+pub struct ExpOptions {
+    /// Bits per measured plane/stream.
+    pub bits: usize,
+    /// Base seed.
+    pub seed: u64,
+    /// Independent trials (where the paper reports mean ± sd).
+    pub trials: usize,
+    /// Beam width for `N_s = 2` cells (None = exact DP).
+    pub beam: Option<u32>,
+    /// Emit CSV instead of the text table.
+    pub csv: bool,
+}
+
+impl ExpOptions {
+    /// Pull the shared options out of parsed args, with per-experiment
+    /// default bit budget.
+    pub fn from_args(args: &Args, default_bits: usize) -> Result<Self> {
+        let beam: i64 = args.get("beam", -1)?;
+        Ok(ExpOptions {
+            bits: args.get("bits", default_bits)?,
+            seed: args.get("seed", 0xF2F_2022)?,
+            trials: args.get("trials", 10)?,
+            beam: if beam < 0 { None } else { Some(beam as u32) },
+            csv: args.flag("csv"),
+        })
+    }
+}
+
+/// Dispatch `f2f repro <id>`.
+pub fn run(args: &Args) -> Result<()> {
+    let id = args.pos(1)?;
+    match id {
+        "fig1" => appendix::fig1(args),
+        "fig4a" => fig4::fig4a(args),
+        "fig4b" => fig4::fig4b(args),
+        "fig4c" => fig4::fig4c(args),
+        "fig8" => fig8::fig8(args),
+        "fig9" => fig8::fig9(args),
+        "table1" => fig8::table1(args),
+        "table2" => tables::table2(args),
+        "table3" => tables::table3(args),
+        "s4" => tables::s4(args),
+        "s5" => tables::s5(args),
+        "s10" => appendix::s10(args),
+        "s12" => appendix::s12(args),
+        "s13" => tables::s13(args),
+        "entropy" => appendix::entropy(args),
+        "beamcheck" => fig8::beamcheck(args),
+        "all" => {
+            // Everything at reduced sizes — the CI smoke pass.
+            for id in [
+                "fig1", "fig4a", "fig4b", "fig4c", "fig8", "fig9",
+                "table1", "table2", "table3", "s4", "s5", "s10", "s12",
+                "s13", "entropy",
+            ] {
+                let mut forwarded = vec!["repro".to_string(), id.to_string()];
+                forwarded.extend(args.positional.iter().skip(2).cloned());
+                let sub = Args::parse(forwarded.into_iter());
+                run(&sub)?;
+                println!();
+            }
+            Ok(())
+        }
+        other => bail!(
+            "unknown experiment {other:?}; see DESIGN.md §5 for the list"
+        ),
+    }
+}
+
+// ---------- shared measurement helpers ----------
+
+use crate::decoder::{DecoderSpec, SequentialDecoder};
+use crate::encoder::{Encoder, EncodeResult, SlicedPlane, ViterbiEncoder};
+use crate::gf2::BitVecF2;
+use crate::rng::Rng;
+
+/// Encode a (data, mask) pair with a fresh random decoder; `beam` applies
+/// only when `N_s ≥ 2` (exact DP is cheap below that).
+pub(crate) fn encode_with(
+    spec: DecoderSpec,
+    m_seed: u64,
+    data: &BitVecF2,
+    mask: &BitVecF2,
+    beam: Option<u32>,
+) -> EncodeResult {
+    let dec = SequentialDecoder::random(spec, m_seed);
+    let enc = match beam {
+        Some(b) if spec.n_s >= 2 => ViterbiEncoder::with_beam(dec, b),
+        _ => ViterbiEncoder::new(dec),
+    };
+    enc.encode(&SlicedPlane::new(data, mask, spec.n_out))
+}
+
+/// Bernoulli mask of sparsity `s`.
+pub(crate) fn random_mask(bits: usize, s: f64, rng: &mut Rng) -> BitVecF2 {
+    BitVecF2::random(bits, 1.0 - s, rng)
+}
+
+/// Mask with *exactly* `n_u` unpruned bits per `n_out` block (Fig. 4a's
+/// `Var[n_u] = 0` setting).
+pub(crate) fn fixed_nu_mask(
+    bits: usize,
+    n_out: usize,
+    n_u: usize,
+    rng: &mut Rng,
+) -> BitVecF2 {
+    let mut mask = BitVecF2::zeros(bits);
+    let blocks = bits / n_out;
+    let mut perm: Vec<usize> = (0..n_out).collect();
+    for t in 0..blocks {
+        rng.shuffle(&mut perm);
+        for &p in perm.iter().take(n_u) {
+            mask.set(t * n_out + p, true);
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_nu_mask_has_exact_counts() {
+        let mut rng = Rng::new(1);
+        let m = fixed_nu_mask(800, 20, 7, &mut rng);
+        for t in 0..40 {
+            assert_eq!(m.block(t * 20, 20).count_ones(), 7);
+        }
+    }
+
+    #[test]
+    fn dispatch_rejects_unknown() {
+        let args = Args::parse(
+            ["repro", "nope"].iter().map(|s| s.to_string()),
+        );
+        assert!(run(&args).is_err());
+    }
+
+    #[test]
+    fn encode_with_runs_all_ns() {
+        let mut rng = Rng::new(2);
+        let data = BitVecF2::random(400, 0.5, &mut rng);
+        let mask = random_mask(400, 0.8, &mut rng);
+        for n_s in 0..=2 {
+            let spec = DecoderSpec::new(4, 20, n_s);
+            let r = encode_with(spec, 7, &data, &mask, Some(4));
+            assert!(r.stats.unpruned_bits > 0);
+        }
+    }
+}

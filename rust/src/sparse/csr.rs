@@ -1,0 +1,150 @@
+//! Compressed Sparse Row — the fixed-to-variable baseline (Algorithm 1).
+//!
+//! `dat/col` store the nonzeros row-contiguously, `row_ptr[i]..row_ptr[i+1]`
+//! brackets row `i`. The SpMV inner loop `y_i += dat[j] · x[col[j]]` makes
+//! a data-dependent gather on `x` — the irregular access pattern the
+//! paper's Figure 1(b) blames for bandwidth loss.
+
+use super::DenseMatrix;
+
+/// CSR matrix (f32 values).
+#[derive(Debug, Clone)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub dat: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Compress a dense matrix (zeros are pruned entries).
+    pub fn from_dense(a: &DenseMatrix) -> Self {
+        let mut row_ptr = Vec::with_capacity(a.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut dat = Vec::new();
+        row_ptr.push(0);
+        for r in 0..a.rows {
+            for (c, &v) in a.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(c as u32);
+                    dat.push(v);
+                }
+            }
+            row_ptr.push(dat.len());
+        }
+        CsrMatrix { rows: a.rows, cols: a.cols, row_ptr, col_idx, dat }
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.dat.len()
+    }
+
+    /// Storage bits: values (32b) + column indices (32b) + row pointers.
+    /// The fixed-to-variable representation the paper compares against.
+    pub fn storage_bits(&self) -> usize {
+        self.dat.len() * 32
+            + self.col_idx.len() * 32
+            + self.row_ptr.len() * 32
+    }
+
+    /// Algorithm 1: SpMV with irregular, data-dependent access.
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            let mut acc = 0.0f32;
+            for j in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.dat[j] * x[self.col_idx[j] as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// SpMM against a dense `cols × k` matrix (Fig. S.10's workload).
+    pub fn spmm(&self, b: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, b.rows);
+        let k = b.cols;
+        let mut y = DenseMatrix::zeros(self.rows, k);
+        for i in 0..self.rows {
+            let yrow = &mut y.data[i * k..(i + 1) * k];
+            for j in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let v = self.dat[j];
+                let brow = b.row(self.col_idx[j] as usize);
+                for c in 0..k {
+                    yrow[c] += v * brow[c];
+                }
+            }
+        }
+        y
+    }
+
+    /// Per-row nonzero counts — the variable record lengths that break
+    /// fixed-burst memory access (Appendix A's `n_b` random variable).
+    pub fn row_lengths(&self) -> Vec<usize> {
+        self.row_ptr.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sparse::{gemm, gemv};
+
+    #[test]
+    fn from_dense_roundtrip_structure() {
+        let a = DenseMatrix::from_vec(
+            2,
+            3,
+            vec![1.0, 0.0, 2.0, 0.0, 0.0, 3.0],
+        );
+        let c = CsrMatrix::from_dense(&a);
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.row_ptr, vec![0, 2, 3]);
+        assert_eq!(c.col_idx, vec![0, 2, 2]);
+        assert_eq!(c.dat, vec![1.0, 2.0, 3.0]);
+        assert_eq!(c.row_lengths(), vec![2, 1]);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let mut rng = Rng::new(4);
+        let a = DenseMatrix::random_sparse(64, 96, 0.9, &mut rng);
+        let c = CsrMatrix::from_dense(&a);
+        let x: Vec<f32> = (0..96).map(|_| rng.next_f32()).collect();
+        let yd = gemv(&a, &x);
+        let yc = c.spmv(&x);
+        for (p, q) in yd.iter().zip(&yc) {
+            assert!((p - q).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn spmm_matches_dense_gemm() {
+        let mut rng = Rng::new(5);
+        let a = DenseMatrix::random_sparse(32, 48, 0.7, &mut rng);
+        let b = DenseMatrix::random_sparse(48, 4, 0.0, &mut rng);
+        let c = CsrMatrix::from_dense(&a);
+        let y1 = gemm(&a, &b);
+        let y2 = c.spmm(&b);
+        for (p, q) in y1.data.iter().zip(&y2.data) {
+            assert!((p - q).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn storage_shrinks_with_sparsity_but_has_overhead() {
+        let mut rng = Rng::new(6);
+        let dense_bits = 256 * 256 * 32;
+        let a50 = DenseMatrix::random_sparse(256, 256, 0.5, &mut rng);
+        let a95 = DenseMatrix::random_sparse(256, 256, 0.95, &mut rng);
+        let s50 = CsrMatrix::from_dense(&a50).storage_bits();
+        let s95 = CsrMatrix::from_dense(&a95).storage_bits();
+        assert!(s95 < s50);
+        // At 50% sparsity CSR is ~as large as dense (2× per nnz).
+        assert!(s50 as f64 > 0.9 * dense_bits as f64);
+    }
+}

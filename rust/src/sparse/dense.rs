@@ -1,0 +1,135 @@
+//! Row-major dense matrix + GEMV/GEMM baselines.
+//!
+//! Deliberately straightforward loops (unit-stride inner loop, no
+//! blocking): the Figure S.10 comparison is about *relative* cost of
+//! irregular CSR access vs regular dense access, which survives any
+//! uniform constant factor.
+
+use crate::rng::Rng;
+
+/// Row-major `rows × cols` f32 matrix.
+#[derive(Debug, Clone)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// From a row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// Gaussian entries with a `sparsity` fraction set to exactly zero.
+    pub fn random_sparse(
+        rows: usize,
+        cols: usize,
+        sparsity: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        let data = (0..rows * cols)
+            .map(|_| {
+                if rng.bernoulli(sparsity) {
+                    0.0
+                } else {
+                    rng.normal() as f32
+                }
+            })
+            .collect();
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Number of exact zeros (the pruned count).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+}
+
+/// Dense mat-vec `y = A·x`.
+pub fn gemv(a: &DenseMatrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    (0..a.rows)
+        .map(|r| {
+            a.row(r)
+                .iter()
+                .zip(x)
+                .map(|(&w, &xv)| w * xv)
+                .sum::<f32>()
+        })
+        .collect()
+}
+
+/// Dense mat-mat `Y = A·B` where `B` is `cols × k` (column-major layout
+/// `b[j*k + col]`? no — row-major `cols × k`). Output row-major
+/// `rows × k`. This is the `(2048×2048)·(2048×k)` shape of Fig. S.10.
+pub fn gemm(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.cols, b.rows);
+    let mut y = DenseMatrix::zeros(a.rows, b.cols);
+    for r in 0..a.rows {
+        let arow = a.row(r);
+        let yrow = &mut y.data[r * b.cols..(r + 1) * b.cols];
+        // Deliberately no zero-skipping: the dense baseline pays for
+        // every element, as a dense GEMM kernel would.
+        for (j, &av) in arow.iter().enumerate() {
+            let brow = b.row(j);
+            for c in 0..b.cols {
+                yrow[c] += av * brow[c];
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemv_known_values() {
+        let a = DenseMatrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let y = gemv(&a, &[1., 0., -1.]);
+        assert_eq!(y, vec![-2., -2.]);
+    }
+
+    #[test]
+    fn gemm_matches_gemv_per_column() {
+        let mut rng = Rng::new(2);
+        let a = DenseMatrix::random_sparse(8, 12, 0.5, &mut rng);
+        let b = DenseMatrix::random_sparse(12, 3, 0.0, &mut rng);
+        let y = gemm(&a, &b);
+        for c in 0..3 {
+            let col: Vec<f32> = (0..12).map(|r| b.get(r, c)).collect();
+            let yc = gemv(&a, &col);
+            for r in 0..8 {
+                assert!((y.get(r, c) - yc[r]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn random_sparse_hits_target() {
+        let mut rng = Rng::new(3);
+        let a = DenseMatrix::random_sparse(100, 100, 0.9, &mut rng);
+        let density = a.nnz() as f64 / 10_000.0;
+        assert!((density - 0.1).abs() < 0.02);
+    }
+}

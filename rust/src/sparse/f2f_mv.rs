@@ -1,0 +1,155 @@
+//! Algorithm 2: SpMV using fixed-to-fixed encoded weights.
+//!
+//! `W_i ← w_i^e × M⊕` over GF(2) (regular, fixed-size accesses), then
+//! `y = W · x` with the mask zeroing pruned positions. Decoded planes are
+//! corrected (lossless) and reassembled into the original number format;
+//! pruned weights decode to arbitrary bits (the paper: "pruned weights
+//! are filled by random values during weight decoding") and are nulled by
+//! the mask before the multiply.
+
+use crate::container::{CompressedLayer, Dtype};
+use crate::decoder::SequentialDecoder;
+use crate::gf2::BitVecF2;
+#[cfg(test)]
+use crate::weights::BitPlanes;
+
+/// A layer reconstructed from its fixed-to-fixed streams.
+#[derive(Debug, Clone)]
+pub struct DecodedLayer {
+    pub rows: usize,
+    pub cols: usize,
+    /// Dense row-major weights, zeros at pruned positions.
+    pub weights: Vec<f32>,
+}
+
+impl DecodedLayer {
+    /// Decode + correct + reassemble a compressed layer. Lossless: the
+    /// unpruned weights are bit-exact.
+    pub fn from_compressed(layer: &CompressedLayer) -> Self {
+        let n = layer.n_weights();
+        let dec = SequentialDecoder::random(layer.spec, layer.m_seed);
+        let mut planes: Vec<BitVecF2> = Vec::with_capacity(layer.planes.len());
+        for p in &layer.planes {
+            let mut bits = dec.decode_stream_to_bits(&p.encoded, n);
+            p.correction.apply(&mut bits);
+            if p.inverted {
+                bits.invert();
+            }
+            planes.push(bits);
+        }
+        let weights = match layer.dtype {
+            Dtype::F32 => reassemble_f32(&planes, &layer.mask, n),
+            Dtype::I8 => reassemble_i8(&planes, &layer.mask, n, layer.scale),
+        };
+        DecodedLayer { rows: layer.rows, cols: layer.cols, weights }
+    }
+
+    /// `y = W · x` (Algorithm 2's multiply; pruned entries are already
+    /// zero so no gather is needed — every access is unit-stride).
+    pub fn gemv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|r| {
+                self.weights[r * self.cols..(r + 1) * self.cols]
+                    .iter()
+                    .zip(x)
+                    .map(|(&w, &xv)| w * xv)
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+/// One-call Algorithm 2: decode a compressed layer and multiply.
+pub fn decode_gemv(layer: &CompressedLayer, x: &[f32]) -> Vec<f32> {
+    DecodedLayer::from_compressed(layer).gemv(x)
+}
+
+fn reassemble_f32(planes: &[BitVecF2], mask: &BitVecF2, n: usize) -> Vec<f32> {
+    assert_eq!(planes.len(), 32);
+    (0..n)
+        .map(|i| {
+            if !mask.get(i) {
+                return 0.0;
+            }
+            let mut bits = 0u32;
+            for (k, p) in planes.iter().enumerate() {
+                if p.get(i) {
+                    bits |= 1 << (31 - k);
+                }
+            }
+            f32::from_bits(bits)
+        })
+        .collect()
+}
+
+fn reassemble_i8(
+    planes: &[BitVecF2],
+    mask: &BitVecF2,
+    n: usize,
+    scale: f32,
+) -> Vec<f32> {
+    assert_eq!(planes.len(), 8);
+    (0..n)
+        .map(|i| {
+            if !mask.get(i) {
+                return 0.0;
+            }
+            let mut bits = 0u8;
+            for (k, p) in planes.iter().enumerate() {
+                if p.get(i) {
+                    bits |= 1 << (7 - k);
+                }
+            }
+            (bits as i8) as f32 * scale
+        })
+        .collect()
+}
+
+// Integration tests with real compressed layers live in
+// `rust/tests/pipeline_roundtrip.rs` (they need the pipeline to build
+// containers); unit tests here exercise the reassembly helpers.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn reassemble_f32_respects_mask() {
+        let w = vec![1.5f32, -2.25, 0.75, 3.0];
+        let planes_src = BitPlanes::from_f32(&w);
+        let planes: Vec<BitVecF2> =
+            (0..32).map(|k| planes_src.plane(k).clone()).collect();
+        let mask = BitVecF2::from_bools(&[true, false, true, false]);
+        let out = reassemble_f32(&planes, &mask, 4);
+        assert_eq!(out, vec![1.5, 0.0, 0.75, 0.0]);
+    }
+
+    #[test]
+    fn reassemble_i8_scales() {
+        let w = vec![10i8, -20, 127, -128];
+        let planes_src = BitPlanes::from_i8(&w);
+        let planes: Vec<BitVecF2> =
+            (0..8).map(|k| planes_src.plane(k).clone()).collect();
+        let mask = BitVecF2::from_bools(&[true, true, true, true]);
+        let out = reassemble_i8(&planes, &mask, 4, 0.5);
+        assert_eq!(out, vec![5.0, -10.0, 63.5, -64.0]);
+    }
+
+    #[test]
+    fn gemv_on_decoded_layer() {
+        let mut rng = Rng::new(1);
+        let weights: Vec<f32> =
+            (0..12).map(|_| rng.normal() as f32).collect();
+        let layer =
+            DecodedLayer { rows: 3, cols: 4, weights: weights.clone() };
+        let x = vec![1.0, 2.0, -1.0, 0.5];
+        let y = layer.gemv(&x);
+        for r in 0..3 {
+            let expect: f32 = (0..4)
+                .map(|c| weights[r * 4 + c] * x[c])
+                .sum();
+            assert!((y[r] - expect).abs() < 1e-5);
+        }
+    }
+}

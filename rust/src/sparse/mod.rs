@@ -1,0 +1,38 @@
+//! Sparse/dense matrix kernels: the CSR baseline (Algorithm 1), dense
+//! GEMM/GEMV, and the paper's decode-then-multiply path (Algorithm 2).
+//!
+//! These back two artifacts:
+//! * Appendix B / Figure S.10 — CSR SpMM vs dense GEMM timing (the paper's
+//!   motivation: CSR can be *slower* than dense below a sparsity
+//!   threshold, especially at small batch `k`);
+//! * Algorithm 1 vs Algorithm 2 equivalence — decoding the fixed-to-fixed
+//!   stream and multiplying with zero-skipping must produce the same `y`
+//!   as CSR SpMV.
+
+mod csr;
+mod dense;
+mod f2f_mv;
+
+pub use csr::CsrMatrix;
+pub use dense::{gemm, gemv, DenseMatrix};
+pub use f2f_mv::{decode_gemv, DecodedLayer};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn csr_spmv_equals_dense_gemv() {
+        let mut rng = Rng::new(1);
+        let (m, n) = (37, 53);
+        let dense = DenseMatrix::random_sparse(m, n, 0.8, &mut rng);
+        let csr = CsrMatrix::from_dense(&dense);
+        let x: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let y_dense = gemv(&dense, &x);
+        let y_csr = csr.spmv(&x);
+        for (a, b) in y_dense.iter().zip(&y_csr) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

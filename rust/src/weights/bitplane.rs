@@ -1,0 +1,202 @@
+//! Bit-plane grouping of FP32 / signed-INT8 tensors.
+
+use crate::gf2::BitVecF2;
+
+/// A tensor decomposed into `n_w` bit-planes (plane 0 = MSB/sign).
+#[derive(Debug, Clone)]
+pub struct BitPlanes {
+    planes: Vec<BitVecF2>,
+    n_weights: usize,
+}
+
+impl BitPlanes {
+    /// Decompose FP32 weights into 32 planes. Plane `k` holds IEEE-754
+    /// bit `31 − k` of each weight (so plane 0 = sign, planes 1–8 =
+    /// exponent, planes 9–31 = mantissa — Figure S.12's indexing shifted
+    /// to 0-based).
+    pub fn from_f32(weights: &[f32]) -> Self {
+        let n = weights.len();
+        let mut planes = vec![BitVecF2::zeros(n); 32];
+        for (i, &w) in weights.iter().enumerate() {
+            let bits = w.to_bits();
+            for (k, plane) in planes.iter_mut().enumerate() {
+                if (bits >> (31 - k)) & 1 == 1 {
+                    plane.set(i, true);
+                }
+            }
+        }
+        BitPlanes { planes, n_weights: n }
+    }
+
+    /// Decompose signed INT8 weights into 8 planes (plane 0 = sign bit of
+    /// the two's-complement byte).
+    pub fn from_i8(weights: &[i8]) -> Self {
+        let n = weights.len();
+        let mut planes = vec![BitVecF2::zeros(n); 8];
+        for (i, &w) in weights.iter().enumerate() {
+            let bits = w as u8;
+            for (k, plane) in planes.iter_mut().enumerate() {
+                if (bits >> (7 - k)) & 1 == 1 {
+                    plane.set(i, true);
+                }
+            }
+        }
+        BitPlanes { planes, n_weights: n }
+    }
+
+    /// Number of planes (`n_w`: 32 for FP32, 8 for INT8).
+    pub fn n_planes(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// Number of weights per plane.
+    pub fn n_weights(&self) -> usize {
+        self.n_weights
+    }
+
+    /// Plane `k` (0 = MSB).
+    pub fn plane(&self, k: usize) -> &BitVecF2 {
+        &self.planes[k]
+    }
+
+    /// Mutable plane access (inverting, reconstruction-time correction).
+    pub fn plane_mut(&mut self, k: usize) -> &mut BitVecF2 {
+        &mut self.planes[k]
+    }
+
+    /// Iterate planes MSB-first.
+    pub fn iter(&self) -> impl Iterator<Item = &BitVecF2> {
+        self.planes.iter()
+    }
+
+    /// Reassemble FP32 weights (requires 32 planes).
+    pub fn to_f32(&self) -> Vec<f32> {
+        assert_eq!(self.planes.len(), 32);
+        (0..self.n_weights)
+            .map(|i| {
+                let mut bits = 0u32;
+                for (k, plane) in self.planes.iter().enumerate() {
+                    if plane.get(i) {
+                        bits |= 1 << (31 - k);
+                    }
+                }
+                f32::from_bits(bits)
+            })
+            .collect()
+    }
+
+    /// Reassemble signed INT8 weights (requires 8 planes).
+    pub fn to_i8(&self) -> Vec<i8> {
+        assert_eq!(self.planes.len(), 8);
+        (0..self.n_weights)
+            .map(|i| {
+                let mut bits = 0u8;
+                for (k, plane) in self.planes.iter().enumerate() {
+                    if plane.get(i) {
+                        bits |= 1 << (7 - k);
+                    }
+                }
+                bits as i8
+            })
+            .collect()
+    }
+
+    /// Zero-ratio of each plane's *unpruned* bits under `mask` —
+    /// the statistic plotted in Figure S.12.
+    pub fn zero_ratios(&self, mask: &BitVecF2) -> Vec<f64> {
+        self.planes
+            .iter()
+            .map(|p| {
+                let mut zeros = 0usize;
+                let mut total = 0usize;
+                for i in 0..self.n_weights {
+                    if mask.get(i) {
+                        total += 1;
+                        if !p.get(i) {
+                            zeros += 1;
+                        }
+                    }
+                }
+                if total == 0 {
+                    1.0
+                } else {
+                    zeros as f64 / total as f64
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..257)
+            .map(|_| (rng.normal() * 0.05) as f32)
+            .collect();
+        let planes = BitPlanes::from_f32(&w);
+        assert_eq!(planes.n_planes(), 32);
+        let back = planes.to_f32();
+        assert_eq!(
+            w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            back.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn i8_roundtrip_exact() {
+        let w: Vec<i8> = (-128..=127).collect();
+        let planes = BitPlanes::from_i8(&w);
+        assert_eq!(planes.n_planes(), 8);
+        assert_eq!(planes.to_i8(), w);
+    }
+
+    #[test]
+    fn plane0_is_sign_bit() {
+        let w = vec![-1.0f32, 2.0, -3.0, 4.0];
+        let planes = BitPlanes::from_f32(&w);
+        let signs: Vec<bool> = planes.plane(0).iter().collect();
+        assert_eq!(signs, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn i8_plane0_is_sign_bit() {
+        let w = vec![-5i8, 5, -100, 100];
+        let planes = BitPlanes::from_i8(&w);
+        let signs: Vec<bool> = planes.plane(0).iter().collect();
+        assert_eq!(signs, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn exponent_planes_are_skewed_for_small_gaussian_weights() {
+        // Weight-decayed DNN weights are ≪ 1, so high exponent bits have
+        // strongly skewed 0/1 ratios (Fig. S.12's observation).
+        let mut rng = Rng::new(2);
+        let w: Vec<f32> = (0..4096)
+            .map(|_| (rng.normal() * 0.05) as f32)
+            .collect();
+        let planes = BitPlanes::from_f32(&w);
+        let mask = BitVecF2::from_bools(&vec![true; w.len()]);
+        let zr = planes.zero_ratios(&mask);
+        // Exponent MSB (plane 1): |w| < 2 ⇒ exponent < 128 ⇒ bit is 0.
+        assert!(zr[1] > 0.99, "plane1 zero-ratio {}", zr[1]);
+        // Next exponent bits ~all ones for 2^-64 < |w| < 1.
+        assert!(zr[2] < 0.01, "plane2 zero-ratio {}", zr[2]);
+        // Deep mantissa bits are ~uniform.
+        assert!((zr[28] - 0.5).abs() < 0.05, "plane28 zero-ratio {}", zr[28]);
+    }
+
+    #[test]
+    fn zero_ratio_respects_mask() {
+        let w = vec![-1.0f32, 1.0, -1.0, 1.0];
+        let planes = BitPlanes::from_f32(&w);
+        // Only positions 0 and 2 unpruned → sign plane all ones → ratio 0.
+        let mask = BitVecF2::from_bools(&[true, false, true, false]);
+        let zr = planes.zero_ratios(&mask);
+        assert_eq!(zr[0], 0.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! The inverting technique (§5.1, Figure 9).
+//!
+//! A random XOR-gate decoder finds zero outputs "for free" (the all-zero
+//! input always decodes to the all-zero block), so encoding efficiency
+//! rises when unpruned weight bits skew toward zero. FP32 exponent planes
+//! skew heavily (Figure S.12); when a plane's unpruned bits hold *more
+//! ones than zeros*, flipping the whole plane (and remembering one flag
+//! bit) converts the skew into the favourable direction. The paper
+//! applies this for `N_s ∈ {0, 1}`, where the gain is noticeable; INT8
+//! planes are near-balanced so inverting is a no-op ("N/A" in Table 2).
+
+use crate::gf2::BitVecF2;
+
+/// Outcome of the inverting decision for one plane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InvertDecision {
+    /// Whether the plane should be flipped before encoding.
+    pub apply: bool,
+    /// Zero-ratio of the unpruned bits before flipping.
+    pub zero_ratio: f64,
+}
+
+/// Decide whether to invert: flip when the ratio of zeros among
+/// *unpruned* bits is below 50%.
+pub fn decide_invert(plane: &BitVecF2, mask: &BitVecF2) -> InvertDecision {
+    assert_eq!(plane.len(), mask.len());
+    let mut zeros = 0usize;
+    let mut total = 0usize;
+    for i in 0..plane.len() {
+        if mask.get(i) {
+            total += 1;
+            if !plane.get(i) {
+                zeros += 1;
+            }
+        }
+    }
+    let zero_ratio =
+        if total == 0 { 1.0 } else { zeros as f64 / total as f64 };
+    InvertDecision { apply: zero_ratio < 0.5, zero_ratio }
+}
+
+/// Apply the decision: returns a (possibly flipped) copy plus the flag to
+/// store alongside the encoded stream.
+pub fn maybe_invert(
+    plane: &BitVecF2,
+    mask: &BitVecF2,
+) -> (BitVecF2, bool) {
+    let d = decide_invert(plane, mask);
+    if d.apply {
+        let mut p = plane.clone();
+        p.invert();
+        (p, true)
+    } else {
+        (plane.clone(), false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn skewed_to_ones_gets_inverted() {
+        let mut rng = Rng::new(1);
+        let plane = BitVecF2::random(1000, 0.9, &mut rng); // 90% ones
+        let mask = BitVecF2::random(1000, 0.5, &mut rng);
+        let d = decide_invert(&plane, &mask);
+        assert!(d.apply);
+        assert!(d.zero_ratio < 0.2);
+    }
+
+    #[test]
+    fn skewed_to_zeros_left_alone() {
+        let mut rng = Rng::new(2);
+        let plane = BitVecF2::random(1000, 0.1, &mut rng);
+        let mask = BitVecF2::random(1000, 0.5, &mut rng);
+        assert!(!decide_invert(&plane, &mask).apply);
+    }
+
+    #[test]
+    fn decision_uses_only_unpruned_bits() {
+        // Plane: ones where pruned, zeros where unpruned → no invert.
+        let n = 100;
+        let mask = BitVecF2::from_iter_bits((0..n).map(|i| i % 2 == 0));
+        let plane = BitVecF2::from_iter_bits((0..n).map(|i| i % 2 == 1));
+        let d = decide_invert(&plane, &mask);
+        assert!(!d.apply);
+        assert_eq!(d.zero_ratio, 1.0);
+    }
+
+    #[test]
+    fn maybe_invert_roundtrip() {
+        let mut rng = Rng::new(3);
+        let plane = BitVecF2::random(500, 0.8, &mut rng);
+        let mask = BitVecF2::random(500, 0.5, &mut rng);
+        let (flipped, flag) = maybe_invert(&plane, &mask);
+        assert!(flag);
+        let mut back = flipped;
+        back.invert();
+        assert_eq!(back, plane);
+    }
+
+    #[test]
+    fn empty_mask_means_no_invert() {
+        let plane = BitVecF2::random(100, 0.9, &mut Rng::new(4));
+        let mask = BitVecF2::zeros(100);
+        assert!(!decide_invert(&plane, &mask).apply);
+    }
+}

@@ -1,0 +1,36 @@
+//! Weight manipulation: bit-plane grouping, flattening, slicing (§4,
+//! Figure 6) and the inverting technique (§5.1).
+//!
+//! A tensor in an `n_w`-bit number format is split into `n_w` binary
+//! planes: plane `k` concatenates the `k`-th bit of every weight. Bit
+//! indices follow the paper's Figure S.12 convention — **k = 0 is the
+//! sign/most-significant bit**, `k = n_w − 1` the least-significant
+//! mantissa bit. Every plane shares the layer's pruning mask.
+//!
+//! Planes are encoded independently; the inverting technique flips an
+//! entire plane when unpruned bits contain fewer zeros than ones, because
+//! a random XOR decoder has a slight bias toward producing zeros from
+//! sparse inputs (Figure 9).
+
+mod bitplane;
+mod invert;
+
+pub use bitplane::BitPlanes;
+pub use invert::{decide_invert, maybe_invert, InvertDecision};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf2::BitVecF2;
+    use crate::rng::Rng;
+
+    #[test]
+    fn module_reexports_work() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let planes = BitPlanes::from_f32(&w);
+        let mask = BitVecF2::from_iter_bits((0..64).map(|i| i % 2 == 0));
+        let d = decide_invert(planes.plane(0), &mask);
+        let _ = d.apply;
+    }
+}

@@ -1,0 +1,168 @@
+//! Integration: full pipeline losslessness across dtypes, pruning
+//! methods and decoder geometries, plus Algorithm 1 ≡ Algorithm 2.
+
+use f2f::container::{read_container, write_container, Container, Dtype};
+use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+use f2f::pipeline::{CompressionConfig, Compressor};
+use f2f::pruning::PruneMethod;
+use f2f::rng::Rng;
+use f2f::sparse::{decode_gemv, CsrMatrix, DecodedLayer, DenseMatrix};
+
+fn layer(rows: usize, cols: usize, seed: u64) -> SyntheticLayer {
+    SyntheticLayer::generate(
+        &LayerSpec { name: format!("L{seed}"), rows, cols },
+        WeightGen::default(),
+        seed,
+    )
+}
+
+#[test]
+fn lossless_across_configs_i8() {
+    let mut case = 0u64;
+    for &s in &[0.6, 0.9] {
+        for n_s in [0usize, 1, 2] {
+            for method in [PruneMethod::Random, PruneMethod::Magnitude] {
+                case += 1;
+                let l = layer(8, 64, case);
+                let (q, scale) = quantize_i8(&l.weights);
+                let cfg = CompressionConfig {
+                    sparsity: s,
+                    n_s,
+                    method,
+                    beam: if n_s >= 2 { Some(8) } else { None },
+                    seed: case,
+                    ..Default::default()
+                };
+                let (cl, _) = Compressor::new(cfg)
+                    .compress_i8(&l.spec.name, 8, 64, &q, scale);
+                let dec = DecodedLayer::from_compressed(&cl);
+                for i in 0..q.len() {
+                    if cl.mask.get(i) {
+                        assert_eq!(
+                            dec.weights[i],
+                            q[i] as f32 * scale,
+                            "case {case} weight {i}"
+                        );
+                    } else {
+                        assert_eq!(dec.weights[i], 0.0);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lossless_f32_with_inverting() {
+    let l = layer(6, 64, 99);
+    let cfg = CompressionConfig {
+        sparsity: 0.8,
+        n_s: 1,
+        method: PruneMethod::Magnitude,
+        invert: true,
+        ..Default::default()
+    };
+    let (cl, rep) = Compressor::new(cfg).compress_f32(
+        &l.spec.name,
+        6,
+        64,
+        &l.weights,
+    );
+    // FP32 exponent planes are heavily skewed → inverting must fire on
+    // at least one plane.
+    assert!(
+        cl.planes.iter().any(|p| p.inverted),
+        "no plane inverted despite exponent skew"
+    );
+    assert!(rep.efficiency > 50.0);
+    let dec = DecodedLayer::from_compressed(&cl);
+    for i in 0..l.weights.len() {
+        if cl.mask.get(i) {
+            assert_eq!(dec.weights[i].to_bits(), l.weights[i].to_bits());
+        }
+    }
+}
+
+#[test]
+fn container_file_roundtrip_multi_layer() {
+    let layers = vec![layer(8, 32, 1), layer(4, 64, 2)];
+    let cfg = CompressionConfig {
+        sparsity: 0.7,
+        n_s: 1,
+        ..Default::default()
+    };
+    let (container, _) =
+        Compressor::new(cfg).compress_model(&layers, Dtype::I8);
+    let bytes = write_container(&container);
+    let back: Container = read_container(&bytes).unwrap();
+    assert_eq!(back.layers.len(), 2);
+    for (a, b) in container.layers.iter().zip(&back.layers) {
+        let da = DecodedLayer::from_compressed(a);
+        let db = DecodedLayer::from_compressed(b);
+        assert_eq!(da.weights, db.weights);
+    }
+    assert_eq!(container.compressed_bits(), back.compressed_bits());
+}
+
+/// Algorithm 1 (CSR SpMV on the pruned weights) and Algorithm 2 (decode
+/// the fixed-to-fixed stream, masked GEMV) must agree.
+#[test]
+fn algorithm1_equals_algorithm2() {
+    let l = layer(16, 96, 7);
+    let (q, scale) = quantize_i8(&l.weights);
+    let cfg = CompressionConfig {
+        sparsity: 0.85,
+        n_s: 1,
+        method: PruneMethod::Magnitude,
+        ..Default::default()
+    };
+    let (cl, _) =
+        Compressor::new(cfg).compress_i8(&l.spec.name, 16, 96, &q, scale);
+
+    // Algorithm 1 path: build the pruned dense matrix, CSR-ify.
+    let pruned: Vec<f32> = (0..q.len())
+        .map(|i| {
+            if cl.mask.get(i) {
+                q[i] as f32 * scale
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let dense = DenseMatrix::from_vec(16, 96, pruned);
+    let csr = CsrMatrix::from_dense(&dense);
+
+    let mut rng = Rng::new(3);
+    for _ in 0..5 {
+        let x: Vec<f32> =
+            (0..96).map(|_| rng.next_f32() - 0.5).collect();
+        let y1 = csr.spmv(&x);
+        let y2 = decode_gemv(&cl, &x);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-4, "alg1 {a} vs alg2 {b}");
+        }
+    }
+}
+
+/// Compression ratio sanity at the flagship setting: encoded payload is
+/// `N_in/N_out` of the original, end to end through the container.
+#[test]
+fn payload_matches_rate_rule() {
+    let l = layer(16, 160, 11);
+    let (q, scale) = quantize_i8(&l.weights);
+    let cfg = CompressionConfig {
+        sparsity: 0.9,
+        n_s: 1,
+        ..Default::default()
+    };
+    let (cl, _) =
+        Compressor::new(cfg).compress_i8(&l.spec.name, 16, 160, &q, scale);
+    let n_bits = 16 * 160 * 8; // total weight bits
+    let payload = cl.payload_bits();
+    // 8/80 of the original + (l + N_s) rounding per plane.
+    let expect = n_bits / 10;
+    assert!(
+        payload >= expect && payload < expect + 8 * 8 * 2,
+        "payload {payload} vs rate-rule {expect}"
+    );
+}

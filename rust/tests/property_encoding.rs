@@ -1,0 +1,179 @@
+//! Property tests (seeded-random, proptest-style) on encoder/decoder
+//! invariants across random configurations.
+
+use f2f::correction::CorrectionStream;
+use f2f::decoder::{DecoderSpec, SequentialDecoder};
+use f2f::encoder::{Encoder, SlicedPlane, ViterbiEncoder};
+use f2f::gf2::BitVecF2;
+use f2f::rng::Rng;
+
+/// Random small decoder spec + workload.
+fn random_case(
+    rng: &mut Rng,
+) -> (DecoderSpec, BitVecF2, BitVecF2) {
+    let n_in = 2 + rng.below(5); // 2..=6
+    let n_s = rng.below(3); // 0..=2
+    let n_out = n_in + 1 + rng.below(24);
+    let spec = DecoderSpec::new(n_in, n_out, n_s);
+    let bits = n_out * (2 + rng.below(30));
+    let data = BitVecF2::random(bits, rng.next_f64() * 0.8 + 0.1, rng);
+    let mask = BitVecF2::random(bits, rng.next_f64() * 0.9, rng);
+    (spec, data, mask)
+}
+
+/// INVARIANT: decode(encode(x)) differs from x on exactly the reported
+/// mismatch positions, and nowhere else among unpruned bits.
+#[test]
+fn prop_reported_mismatches_are_exact() {
+    let mut rng = Rng::new(0xB0B);
+    for case in 0..40 {
+        let (spec, data, mask) = random_case(&mut rng);
+        let dec = SequentialDecoder::random(spec, case);
+        let enc = ViterbiEncoder::new(dec.clone());
+        let plane = SlicedPlane::new(&data, &mask, spec.n_out);
+        let res = enc.encode(&plane);
+
+        let decoded = dec.decode_stream_to_bits(&res.encoded, data.len());
+        let mut mismatch_set = res.mismatches.clone();
+        mismatch_set.sort_unstable();
+        let mut found = Vec::new();
+        for i in 0..data.len() {
+            if mask.get(i) && decoded.get(i) != data.get(i) {
+                found.push(i);
+            }
+        }
+        assert_eq!(found, mismatch_set, "case {case} ({spec:?})");
+    }
+}
+
+/// INVARIANT: encode → decode → correct reproduces every unpruned bit
+/// (lossless end to end), for any p that is a power of two.
+#[test]
+fn prop_correction_makes_roundtrip_lossless() {
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..40 {
+        let (spec, data, mask) = random_case(&mut rng);
+        let dec = SequentialDecoder::random(spec, case * 7 + 1);
+        let enc = ViterbiEncoder::new(dec.clone());
+        let plane = SlicedPlane::new(&data, &mask, spec.n_out);
+        let res = enc.encode(&plane);
+
+        let p = [64usize, 128, 512][rng.below(3)];
+        let cs = CorrectionStream::build(&res.mismatches, data.len(), p);
+        let mut decoded =
+            dec.decode_stream_to_bits(&res.encoded, data.len());
+        cs.apply(&mut decoded);
+        for i in 0..data.len() {
+            if mask.get(i) {
+                assert_eq!(
+                    decoded.get(i),
+                    data.get(i),
+                    "case {case} bit {i} ({spec:?}, p={p})"
+                );
+            }
+        }
+    }
+}
+
+/// INVARIANT: the DP error count is monotonically non-increasing in N_s
+/// when the same M⊕ prefix... (strictly: a larger-N_s decoder is a
+/// different code, so we assert the *statistical* version: averaged over
+/// cases, higher N_s never does worse by more than noise, and wins
+/// overall — the paper's §4 claim.)
+#[test]
+fn prop_sequential_wins_in_aggregate() {
+    let mut rng = Rng::new(0xF00D);
+    let mut total = [0usize; 3];
+    for case in 0..15 {
+        let n_out = 12 + rng.below(20);
+        let bits = n_out * 24;
+        let data = BitVecF2::random(bits, 0.5, &mut rng);
+        let mask = BitVecF2::random(bits, 0.3, &mut rng);
+        for n_s in 0..3usize {
+            let spec = DecoderSpec::new(4, n_out, n_s);
+            let dec = SequentialDecoder::random(spec, case);
+            let plane = SlicedPlane::new(&data, &mask, n_out);
+            let res = ViterbiEncoder::new(dec).encode(&plane);
+            total[n_s] += res.stats.error_bits;
+        }
+    }
+    assert!(
+        total[1] < total[0],
+        "N_s=1 ({}) should beat N_s=0 ({})",
+        total[1],
+        total[0]
+    );
+    assert!(
+        total[2] <= total[1],
+        "N_s=2 ({}) should not lose to N_s=1 ({})",
+        total[2],
+        total[1]
+    );
+}
+
+/// INVARIANT: beam search with any width is never better than exact DP
+/// (it explores a subset of the trellis), and a wide beam recovers the
+/// exact optimum on these small instances.
+#[test]
+fn prop_beam_is_bounded_by_exact() {
+    let mut rng = Rng::new(0xBEA);
+    for case in 0..10 {
+        let n_out = 10 + rng.below(12);
+        let spec = DecoderSpec::new(4, n_out, 2);
+        let bits = n_out * 20;
+        let data = BitVecF2::random(bits, 0.5, &mut rng);
+        let mask = BitVecF2::random(bits, 0.4, &mut rng);
+        let plane = SlicedPlane::new(&data, &mask, n_out);
+        let dec = SequentialDecoder::random(spec, case + 100);
+        let exact = ViterbiEncoder::new(dec.clone())
+            .encode(&plane)
+            .stats
+            .error_bits;
+        for beam in [0u32, 2, 8] {
+            let e = ViterbiEncoder::with_beam(dec.clone(), beam)
+                .encode(&plane)
+                .stats
+                .error_bits;
+            assert!(e >= exact, "beam {beam} beat exact: {e} < {exact}");
+        }
+        let wide = ViterbiEncoder::with_beam(dec, 1000)
+            .encode(&plane)
+            .stats
+            .error_bits;
+        assert_eq!(wide, exact, "case {case}: wide beam must be exact");
+    }
+}
+
+/// INVARIANT: container serialization is a bijection on the wire bytes
+/// (write → read → write is byte-identical).
+#[test]
+fn prop_container_write_read_write_fixpoint() {
+    use f2f::container::{read_container, write_container};
+    use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+    use f2f::pipeline::{CompressionConfig, Compressor};
+
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..5 {
+        let rows = 4 + rng.below(8);
+        let cols = 16 * (1 + rng.below(4));
+        let layer = SyntheticLayer::generate(
+            &LayerSpec { name: format!("c{case}"), rows, cols },
+            WeightGen::default(),
+            case,
+        );
+        let (q, scale) = quantize_i8(&layer.weights);
+        let cfg = CompressionConfig {
+            sparsity: [0.6, 0.8, 0.9][rng.below(3)],
+            n_s: rng.below(2),
+            seed: case,
+            ..Default::default()
+        };
+        let (cl, _) = Compressor::new(cfg)
+            .compress_i8(&format!("c{case}"), rows, cols, &q, scale);
+        let c = f2f::container::Container { layers: vec![cl] };
+        let b1 = write_container(&c);
+        let c2 = read_container(&b1).unwrap();
+        let b2 = write_container(&c2);
+        assert_eq!(b1, b2, "case {case}");
+    }
+}

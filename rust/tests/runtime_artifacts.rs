@@ -1,0 +1,183 @@
+//! Integration: PJRT runtime executing the AOT artifacts.
+//!
+//! Requires `make artifacts`; tests skip (pass trivially with a notice)
+//! when the artifacts directory is absent so `cargo test` works in a
+//! fresh checkout.
+
+use f2f::decoder::SequentialDecoder;
+use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+use f2f::pipeline::{CompressionConfig, Compressor};
+use f2f::pruning::PruneMethod;
+use f2f::runtime::{Input, Runtime};
+use f2f::sparse::DecodedLayer;
+use std::path::{Path, PathBuf};
+
+const ROWS: usize = 256;
+const COLS: usize = 512;
+const N_S: usize = 2;
+const N_OUT: usize = 80;
+
+fn artifacts() -> Option<PathBuf> {
+    // Tests run from the crate root.
+    let dir = Path::new("artifacts");
+    if dir.join("decode_matvec_b1.hlo.txt").exists() {
+        Some(dir.to_path_buf())
+    } else {
+        eprintln!("artifacts/ not built — skipping PJRT integration test");
+        None
+    }
+}
+
+#[test]
+fn pjrt_decode_matvec_matches_native() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let model = rt
+        .load_hlo_text(&dir.join("decode_matvec_b1.hlo.txt"))
+        .expect("load artifact");
+
+    // Compress the same geometry the artifact was lowered for.
+    let spec = LayerSpec { name: "rt".into(), rows: ROWS, cols: COLS };
+    let layer = SyntheticLayer::generate(&spec, WeightGen::default(), 3);
+    let (q, scale) = quantize_i8(&layer.weights);
+    let cfg = CompressionConfig {
+        sparsity: 0.9,
+        n_s: N_S,
+        method: PruneMethod::Magnitude,
+        beam: Some(8),
+        ..Default::default()
+    };
+    let (cl, _) =
+        Compressor::new(cfg).compress_i8("rt", ROWS, COLS, &q, scale);
+
+    // Marshal inputs (mirrors examples/serve_compressed.rs).
+    let n = ROWS * COLS;
+    let l = cl.spec.num_blocks(n);
+    let stream = l + N_S;
+    let mut encoded_bits = vec![0f32; 8 * stream * 8];
+    let mut corr = vec![0f32; 8 * l * N_OUT];
+    let mut invert = vec![0f32; 8];
+    for (p, plane) in cl.planes.iter().enumerate() {
+        for (t, &chunk) in plane.encoded.iter().enumerate() {
+            for b in 0..8 {
+                encoded_bits[(p * stream + t) * 8 + b] =
+                    ((chunk >> b) & 1) as f32;
+            }
+        }
+        for pos in plane.correction.positions() {
+            corr[p * l * N_OUT + pos] = 1.0;
+        }
+        invert[p] = plane.inverted as u8 as f32;
+    }
+    let dec = SequentialDecoder::random(cl.spec, cl.m_seed);
+    let k = cl.spec.total_inputs();
+    let mut m_t = vec![0f32; k * N_OUT];
+    for j in 0..k {
+        for i in 0..N_OUT {
+            if dec.matrix().get(i, j) {
+                m_t[j * N_OUT + i] = 1.0;
+            }
+        }
+    }
+    let mask: Vec<f32> =
+        (0..n).map(|i| cl.mask.get(i) as u8 as f32).collect();
+    let x: Vec<f32> = (0..COLS).map(|i| (i as f32 * 0.017).cos()).collect();
+
+    let out = model
+        .run(&[
+            Input::F32(&encoded_bits, &[8, stream as i64, 8]),
+            Input::F32(&m_t, &[k as i64, N_OUT as i64]),
+            Input::F32(&corr, &[8, (l * N_OUT) as i64]),
+            Input::F32(&invert, &[8]),
+            Input::F32(&mask, &[n as i64]),
+            Input::F32(&x, &[1, COLS as i64]),
+            Input::F32(&[cl.scale], &[]),
+        ])
+        .expect("execute");
+    let y = &out[0];
+    assert_eq!(y.len(), ROWS);
+
+    let native = DecodedLayer::from_compressed(&cl);
+    let want = native.gemv(&x);
+    for (i, (a, b)) in y.iter().zip(&want).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+            "row {i}: PJRT {a} vs native {b}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_decode_weights_is_lossless() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let model = rt
+        .load_hlo_text(&dir.join("decode_weights.hlo.txt"))
+        .expect("load artifact");
+
+    let spec = LayerSpec { name: "rtw".into(), rows: ROWS, cols: COLS };
+    let layer = SyntheticLayer::generate(&spec, WeightGen::default(), 8);
+    let (q, scale) = quantize_i8(&layer.weights);
+    let cfg = CompressionConfig {
+        sparsity: 0.9,
+        n_s: N_S,
+        beam: Some(8),
+        ..Default::default()
+    };
+    let (cl, _) =
+        Compressor::new(cfg).compress_i8("rtw", ROWS, COLS, &q, scale);
+
+    let n = ROWS * COLS;
+    let l = cl.spec.num_blocks(n);
+    let stream = l + N_S;
+    let mut encoded_bits = vec![0f32; 8 * stream * 8];
+    let mut corr = vec![0f32; 8 * l * N_OUT];
+    let mut invert = vec![0f32; 8];
+    for (p, plane) in cl.planes.iter().enumerate() {
+        for (t, &chunk) in plane.encoded.iter().enumerate() {
+            for b in 0..8 {
+                encoded_bits[(p * stream + t) * 8 + b] =
+                    ((chunk >> b) & 1) as f32;
+            }
+        }
+        for pos in plane.correction.positions() {
+            corr[p * l * N_OUT + pos] = 1.0;
+        }
+        invert[p] = plane.inverted as u8 as f32;
+    }
+    let dec = SequentialDecoder::random(cl.spec, cl.m_seed);
+    let k = cl.spec.total_inputs();
+    let mut m_t = vec![0f32; k * N_OUT];
+    for j in 0..k {
+        for i in 0..N_OUT {
+            if dec.matrix().get(i, j) {
+                m_t[j * N_OUT + i] = 1.0;
+            }
+        }
+    }
+    let mask: Vec<f32> =
+        (0..n).map(|i| cl.mask.get(i) as u8 as f32).collect();
+
+    let out = model
+        .run(&[
+            Input::F32(&encoded_bits, &[8, stream as i64, 8]),
+            Input::F32(&m_t, &[k as i64, N_OUT as i64]),
+            Input::F32(&corr, &[8, (l * N_OUT) as i64]),
+            Input::F32(&invert, &[8]),
+            Input::F32(&mask, &[n as i64]),
+            Input::F32(&[cl.scale], &[]),
+        ])
+        .expect("execute");
+    let w = &out[0];
+    assert_eq!(w.len(), n);
+    // Lossless: every unpruned weight equals the quantized original.
+    for i in 0..n {
+        let want = if cl.mask.get(i) { q[i] as f32 * scale } else { 0.0 };
+        assert!(
+            (w[i] - want).abs() <= 1e-5 * (1.0 + want.abs()),
+            "weight {i}: PJRT {} vs {}",
+            w[i],
+            want
+        );
+    }
+}

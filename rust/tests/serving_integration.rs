@@ -1,0 +1,130 @@
+//! Integration: coordinator serving a real compressed layer end to end
+//! (native backend — the PJRT path is covered by
+//! `runtime_artifacts.rs` + `examples/serve_compressed.rs`).
+
+use f2f::coordinator::{InferenceServer, NativeBackend, ServerConfig};
+use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+use f2f::pipeline::{CompressionConfig, Compressor};
+use f2f::rng::Rng;
+use f2f::sparse::DecodedLayer;
+use std::time::Duration;
+
+fn compressed_layer() -> (f2f::container::CompressedLayer, Vec<i8>, f32) {
+    let spec = LayerSpec { name: "srv".into(), rows: 32, cols: 128 };
+    let layer = SyntheticLayer::generate(&spec, WeightGen::default(), 5);
+    let (q, scale) = quantize_i8(&layer.weights);
+    let cfg = CompressionConfig {
+        sparsity: 0.9,
+        n_s: 1,
+        ..Default::default()
+    };
+    let (cl, _) =
+        Compressor::new(cfg).compress_i8("srv", 32, 128, &q, scale);
+    (cl, q, scale)
+}
+
+#[test]
+fn served_outputs_match_reference() {
+    let (cl, q, scale) = compressed_layer();
+    let reference = DecodedLayer::from_compressed(&cl);
+    // Sanity: the reference itself must be the masked dequantized layer.
+    for i in 0..q.len() {
+        if cl.mask.get(i) {
+            assert_eq!(reference.weights[i], q[i] as f32 * scale);
+        }
+    }
+    let cl2 = cl.clone();
+    let server = InferenceServer::start(
+        ServerConfig {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        },
+        move || Box::new(NativeBackend::new(&cl2)),
+    );
+    let mut rng = Rng::new(9);
+    for _ in 0..20 {
+        let x: Vec<f32> =
+            (0..128).map(|_| rng.next_f32() - 0.5).collect();
+        let y = server.infer(x.clone()).unwrap();
+        let want = reference.gemv(&x);
+        assert_eq!(y.len(), 32);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, 20);
+    assert_eq!(m.errors, 0);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_load_is_batched_and_complete() {
+    let (cl, _, _) = compressed_layer();
+    let server = InferenceServer::start(
+        ServerConfig {
+            max_batch: 16,
+            batch_timeout: Duration::from_millis(2),
+            ..Default::default()
+        },
+        move || Box::new(NativeBackend::new(&cl)),
+    );
+    let n = 200;
+    let handles: Vec<_> = (0..n)
+        .map(|i| server.infer_async(vec![i as f32 * 0.01; 128]))
+        .collect();
+    for h in handles {
+        h.recv().unwrap().unwrap();
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, n as u64);
+    assert!(
+        (m.batches as usize) < n,
+        "expected batching: {} batches for {n} requests",
+        m.batches
+    );
+    assert!(m.p99 >= m.p50);
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    // A tiny queue plus a slow backend forces rejections.
+    struct Slow;
+    impl f2f::coordinator::Backend for Slow {
+        fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+            std::thread::sleep(Duration::from_millis(20));
+            xs.iter().map(|x| vec![x[0]]).collect()
+        }
+        fn input_dim(&self) -> usize {
+            2
+        }
+        fn output_dim(&self) -> usize {
+            1
+        }
+    }
+    let server = InferenceServer::start(
+        ServerConfig {
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(1),
+            queue_capacity: 8,
+        },
+        || Box::new(Slow),
+    );
+    let handles: Vec<_> =
+        (0..64).map(|_| server.infer_async(vec![1.0, 2.0])).collect();
+    let (mut ok, mut rejected) = (0, 0);
+    for h in handles {
+        match h.recv().unwrap() {
+            Ok(_) => ok += 1,
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(ok >= 8, "some requests must succeed (ok={ok})");
+    assert!(
+        rejected > 0,
+        "queue of 8 must reject part of a 64-burst (ok={ok})"
+    );
+    server.shutdown();
+}
