@@ -1,189 +1,41 @@
-//! END-TO-END DRIVER: all three layers composed.
+//! END-TO-END DRIVER: compress a whole model, serve it under a budget.
 //!
-//! 1. (build time, `make artifacts`) Python lowers the JAX decode+matvec
-//!    model — whose hot spot is the Pallas GF(2) kernel — to HLO text,
-//!    one executable per batch size.
-//! 2. This binary compresses a real 256×512 signed-INT8 layer with the
-//!    paper's sequential fixed-to-fixed scheme (Rust encoder).
-//! 3. The compressed streams are marshalled into the PJRT executables'
-//!    input layout; the serving coordinator batches incoming requests
-//!    and routes each batch to the right executable (1/8/32, padded).
-//! 4. Outputs are cross-checked against the native Rust decode path
-//!    (bit-exact weights ⇒ identical mat-vec up to f32 accumulation
-//!    order), then a load test reports throughput + latency percentiles.
+//! 1. A 3-layer synthetic INT8 MLP is compressed with the paper's
+//!    sequential fixed-to-fixed scheme (Rust encoder) into the indexed
+//!    container v2 (`F2F2`).
+//! 2. A `ModelStore` opens the bytes with a decoded-weight budget
+//!    *smaller than the decoded model*, so serving exercises
+//!    decode-on-miss (parallel per-plane `DecodePool`) and evict-cold.
+//! 3. A `ModelBackend` chains the layers (GEMV + ReLU) behind the
+//!    batching `InferenceServer`; outputs are cross-checked against the
+//!    serially-decoded native path (bit-exact weights ⇒ identical
+//!    forward up to f32 accumulation order).
+//! 4. A load test reports throughput, latency percentiles, and store
+//!    cache metrics.
+//!
+//! With `--features pjrt` (requires the external `xla` bindings and
+//! `make artifacts`), an additional single-layer cross-check runs the
+//! AOT-compiled PJRT decode+matvec executable first.
 //!
 //! ```text
-//! make artifacts && cargo run --release --example serve_compressed
+//! cargo run --release --example serve_compressed
 //! ```
 
-use anyhow::{bail, Context, Result};
-use f2f::container::CompressedLayer;
-use f2f::coordinator::{Backend, InferenceServer, ServerConfig};
-use f2f::decoder::SequentialDecoder;
+use anyhow::Result;
+use f2f::container::{write_container_v2, Container};
+use f2f::coordinator::{InferenceServer, ServerConfig};
 use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
 use f2f::pipeline::{CompressionConfig, Compressor};
 use f2f::pruning::PruneMethod;
-use f2f::runtime::{Input, LoadedModel, Runtime};
 use f2f::sparse::DecodedLayer;
-use std::path::PathBuf;
+use f2f::store::{ModelBackend, ModelStore, StoreConfig};
+use std::sync::Arc;
 
-const ROWS: usize = 256;
-const COLS: usize = 512;
+/// Layer widths of the demo MLP: 512 → 256 → 256 → 128.
+const DIMS: [usize; 4] = [512, 256, 256, 128];
 const N_S: usize = 2;
-const N_OUT: usize = 80;
 
-fn artifacts_dir() -> PathBuf {
-    std::env::var("F2F_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("artifacts"))
-}
-
-/// Marshalled PJRT inputs shared by every request (the weights).
-struct StaticInputs {
-    encoded_bits: Vec<f32>, // [8, l+N_s, 8]
-    m_t: Vec<f32>,          // [K, N_out]
-    corr: Vec<f32>,         // [8, l*N_out]
-    invert: Vec<f32>,       // [8]
-    mask: Vec<f32>,         // [n]
-    scale: f32,
-    l: usize,
-}
-
-fn marshal(layer: &CompressedLayer) -> StaticInputs {
-    let n = layer.n_weights();
-    let spec = layer.spec;
-    let l = spec.num_blocks(n);
-    let k = spec.total_inputs();
-    let stream = l + spec.n_s;
-
-    let mut encoded_bits = vec![0f32; 8 * stream * spec.n_in];
-    let mut corr = vec![0f32; 8 * l * spec.n_out];
-    let mut invert = vec![0f32; 8];
-    for (p, plane) in layer.planes.iter().enumerate() {
-        assert_eq!(plane.encoded.len(), stream);
-        for (t, &chunk) in plane.encoded.iter().enumerate() {
-            for b in 0..spec.n_in {
-                encoded_bits[(p * stream + t) * spec.n_in + b] =
-                    ((chunk >> b) & 1) as f32;
-            }
-        }
-        for pos in plane.correction.positions() {
-            corr[p * l * spec.n_out + pos] = 1.0;
-        }
-        invert[p] = plane.inverted as u8 as f32;
-    }
-    // m_t[j][i] = M[i][j] (transpose of the row-major decoder matrix).
-    let dec = SequentialDecoder::random(spec, layer.m_seed);
-    let mut m_t = vec![0f32; k * spec.n_out];
-    for j in 0..k {
-        for i in 0..spec.n_out {
-            if dec.matrix().get(i, j) {
-                m_t[j * spec.n_out + i] = 1.0;
-            }
-        }
-    }
-    let mask: Vec<f32> =
-        (0..n).map(|i| layer.mask.get(i) as u8 as f32).collect();
-    StaticInputs {
-        encoded_bits,
-        m_t,
-        corr,
-        invert,
-        mask,
-        scale: layer.scale,
-        l,
-    }
-}
-
-/// PJRT backend: one executable per batch size; requests are padded to
-/// the smallest size that fits.
-struct PjrtBackend {
-    models: Vec<(usize, LoadedModel)>, // ascending batch sizes
-    inputs: StaticInputs,
-    #[allow(dead_code)]
-    spec: f2f::decoder::DecoderSpec,
-}
-
-impl PjrtBackend {
-    fn load(layer: &CompressedLayer) -> Result<Self> {
-        let rt = Runtime::cpu()?;
-        println!("PJRT platform: {}", rt.platform());
-        let dir = artifacts_dir();
-        let mut models = Vec::new();
-        for b in [1usize, 8, 32] {
-            let path = dir.join(format!("decode_matvec_b{b}.hlo.txt"));
-            if !path.exists() {
-                bail!(
-                    "artifact {} missing — run `make artifacts` first",
-                    path.display()
-                );
-            }
-            models.push((b, rt.load_hlo_text(&path)?));
-        }
-        Ok(PjrtBackend {
-            models,
-            inputs: marshal(layer),
-            spec: layer.spec,
-        })
-    }
-
-    fn run_padded(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let (cap, model) = self
-            .models
-            .iter()
-            .find(|(b, _)| *b >= xs.len())
-            .or_else(|| self.models.last())
-            .map(|(b, m)| (*b, m))
-            .context("no executable")?;
-        // Chunk if the batch exceeds the largest executable.
-        if xs.len() > cap {
-            let mut out = Vec::with_capacity(xs.len());
-            for chunk in xs.chunks(cap) {
-                out.extend(self.run_padded(chunk)?);
-            }
-            return Ok(out);
-        }
-        let mut xbuf = vec![0f32; cap * COLS];
-        for (i, x) in xs.iter().enumerate() {
-            xbuf[i * COLS..(i + 1) * COLS].copy_from_slice(x);
-        }
-        let si = &self.inputs;
-        let stream = (si.l + N_S) as i64;
-        let outputs = model.run(&[
-            Input::F32(&si.encoded_bits, &[8, stream, 8]),
-            Input::F32(&si.m_t, &[((N_S + 1) * 8) as i64, N_OUT as i64]),
-            Input::F32(&si.corr, &[8, (si.l * N_OUT) as i64]),
-            Input::F32(&si.invert, &[8]),
-            Input::F32(&si.mask, &[(ROWS * COLS) as i64]),
-            Input::F32(&xbuf, &[cap as i64, COLS as i64]),
-            Input::F32(std::slice::from_ref(&si.scale), &[]),
-        ])?;
-        let y = &outputs[0];
-        Ok(xs
-            .iter()
-            .enumerate()
-            .map(|(i, _)| y[i * ROWS..(i + 1) * ROWS].to_vec())
-            .collect())
-    }
-}
-
-impl Backend for PjrtBackend {
-    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        self.run_padded(xs).expect("PJRT execution failed")
-    }
-    fn input_dim(&self) -> usize {
-        COLS
-    }
-    fn output_dim(&self) -> usize {
-        ROWS
-    }
-}
-
-fn main() -> Result<()> {
-    // --- compress a layer (the paper's flagship config) ---
-    let spec = LayerSpec { name: "serve/fc".into(), rows: ROWS, cols: COLS };
-    let layer = SyntheticLayer::generate(&spec, WeightGen::default(), 0x5E);
-    let (q, scale) = quantize_i8(&layer.weights);
+fn compress_model() -> Container {
     let compressor = Compressor::new(CompressionConfig {
         sparsity: 0.9,
         n_s: N_S,
@@ -191,58 +43,108 @@ fn main() -> Result<()> {
         beam: Some(8),
         ..Default::default()
     });
-    let t0 = std::time::Instant::now();
-    let (compressed, report) =
-        compressor.compress_i8("serve/fc", ROWS, COLS, &q, scale);
+    let mut c = Container::default();
+    for i in 0..DIMS.len() - 1 {
+        let (rows, cols) = (DIMS[i + 1], DIMS[i]);
+        let name = format!("mlp/fc{i}");
+        let spec = LayerSpec { name: name.clone(), rows, cols };
+        let layer =
+            SyntheticLayer::generate(&spec, WeightGen::default(), 0x5E + i as u64);
+        let (q, scale) = quantize_i8(&layer.weights);
+        let t0 = std::time::Instant::now();
+        let (cl, rep) = compressor.compress_i8(&name, rows, cols, &q, scale);
+        println!(
+            "compressed {name} ({rows}x{cols} INT8) in {:?}: E={:.2}% \
+             mem_reduction={:.2}%",
+            t0.elapsed(),
+            rep.efficiency,
+            rep.memory_reduction
+        );
+        c.layers.push(cl);
+    }
+    c
+}
+
+/// Reference forward pass from serially-decoded layers.
+fn reference_forward(c: &Container, x: &[f32]) -> Vec<f32> {
+    let mut a = x.to_vec();
+    for (i, l) in c.layers.iter().enumerate() {
+        let dec = DecodedLayer::from_compressed(l);
+        let mut y = dec.gemv(&a);
+        if i + 1 < c.layers.len() {
+            for v in &mut y {
+                *v = v.max(0.0);
+            }
+        }
+        a = y;
+    }
+    a
+}
+
+fn main() -> Result<()> {
+    #[cfg(feature = "pjrt")]
+    pjrt_check::run()?;
+
+    let model = compress_model();
+    let bytes = write_container_v2(&model);
     println!(
-        "compressed {}x{} INT8 layer in {:?}: E={:.2}% mem_reduction={:.2}%",
-        ROWS, COLS, t0.elapsed(), report.efficiency, report.memory_reduction
+        "container v2: {} bytes ({:.2}% total memory reduction)",
+        bytes.len(),
+        model.memory_reduction()
     );
 
-    // --- correctness: PJRT output == native Rust decode ---
-    let pjrt = PjrtBackend::load(&compressed)?;
-    let native = DecodedLayer::from_compressed(&compressed);
-    let mut rng = f2f::rng::Rng::new(1);
-    let xs: Vec<Vec<f32>> = (0..4)
-        .map(|_| (0..COLS).map(|_| rng.next_f32() - 0.5).collect())
-        .collect();
-    let ys = pjrt.run_padded(&xs)?;
-    for (x, y) in xs.iter().zip(&ys) {
-        let want = native.gemv(x);
-        for (a, b) in y.iter().zip(&want) {
-            assert!(
-                (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
-                "PJRT {a} vs native {b}"
-            );
-        }
-    }
-    println!("PJRT decode+matvec matches native Rust decode (4 probes)");
-    drop(pjrt); // PJRT handles are !Send — the worker builds its own.
+    // Budget below the decoded model size: eviction is guaranteed.
+    let decoded_total: usize =
+        model.layers.iter().map(|l| l.n_weights() * 4).sum();
+    let budget = decoded_total * 2 / 3;
+    let store = Arc::new(ModelStore::open_bytes(
+        bytes,
+        StoreConfig { cache_budget_bytes: budget, decode_workers: 0 },
+    )?);
+    println!(
+        "store: decoded model {} KiB, cache budget {} KiB, {} decode workers",
+        decoded_total >> 10,
+        budget >> 10,
+        store.decode_workers()
+    );
 
-    // --- serve: batched load test through the coordinator ---
-    let requests: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(512);
-    let layer_for_worker = compressed.clone();
+    // --- correctness: served output == serially decoded chain ---
+    let backend = ModelBackend::sequential(store.clone())?;
     let server = InferenceServer::start(
         ServerConfig {
             max_batch: 32,
             batch_timeout: std::time::Duration::from_millis(2),
             ..Default::default()
         },
-        move || {
-            Box::new(
-                PjrtBackend::load(&layer_for_worker)
-                    .expect("worker backend init"),
-            ) as Box<dyn Backend>
-        },
+        move || Box::new(backend),
     );
+    let mut rng = f2f::rng::Rng::new(1);
+    for probe in 0..4 {
+        let x: Vec<f32> =
+            (0..DIMS[0]).map(|_| rng.next_f32() - 0.5).collect();
+        let y = server.infer(x.clone())?;
+        let want = reference_forward(&model, &x);
+        assert_eq!(y.len(), *DIMS.last().unwrap());
+        for (a, b) in y.iter().zip(&want) {
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                "probe {probe}: served {a} vs native {b}"
+            );
+        }
+    }
+    println!("served outputs match native serial decode (4 probes)");
+
+    // --- load test ---
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
     let t0 = std::time::Instant::now();
     let pending: Vec<_> = (0..requests)
         .map(|i| {
-            let x: Vec<f32> =
-                (0..COLS).map(|j| ((i * j) as f32 * 1e-3).sin()).collect();
+            let x: Vec<f32> = (0..DIMS[0])
+                .map(|j| ((i * j) as f32 * 1e-3).sin())
+                .collect();
             server.infer_async(x)
         })
         .collect();
@@ -252,7 +154,8 @@ fn main() -> Result<()> {
     let dt = t0.elapsed();
     let m = server.metrics();
     println!(
-        "served {requests} requests in {dt:?}: {:.0} req/s, batches={} (mean size {:.1})",
+        "served {requests} requests in {dt:?}: {:.0} req/s, batches={} \
+         (mean size {:.1})",
         requests as f64 / dt.as_secs_f64(),
         m.batches,
         m.mean_batch_size(),
@@ -261,7 +164,165 @@ fn main() -> Result<()> {
         "latency p50={:?} p95={:?} p99={:?} max={:?}",
         m.p50, m.p95, m.p99, m.max
     );
+    let sm = store.metrics();
+    println!(
+        "store: hits={} misses={} decodes={} evictions={} cached {} KiB \
+         ({} layers)",
+        sm.hits,
+        sm.misses,
+        sm.decodes,
+        sm.evictions,
+        sm.cached_bytes >> 10,
+        sm.cached_layers
+    );
+    assert!(sm.evictions > 0, "budget below model size must evict");
     server.shutdown();
     println!("serve_compressed OK");
     Ok(())
+}
+
+/// Single-layer PJRT cross-check (original end-to-end driver): the
+/// AOT-compiled decode+matvec executable must match the native decode.
+#[cfg(feature = "pjrt")]
+mod pjrt_check {
+    use anyhow::{bail, Context, Result};
+    use f2f::container::CompressedLayer;
+    use f2f::decoder::SequentialDecoder;
+    use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+    use f2f::pipeline::{CompressionConfig, Compressor};
+    use f2f::pruning::PruneMethod;
+    use f2f::runtime::{Input, LoadedModel, Runtime};
+    use f2f::sparse::DecodedLayer;
+    use std::path::PathBuf;
+
+    const ROWS: usize = 256;
+    const COLS: usize = 512;
+    const N_S: usize = 2;
+    const N_OUT: usize = 80;
+
+    fn artifacts_dir() -> PathBuf {
+        std::env::var("F2F_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Marshalled PJRT inputs shared by every request (the weights).
+    struct StaticInputs {
+        encoded_bits: Vec<f32>, // [8, l+N_s, 8]
+        m_t: Vec<f32>,          // [K, N_out]
+        corr: Vec<f32>,         // [8, l*N_out]
+        invert: Vec<f32>,       // [8]
+        mask: Vec<f32>,         // [n]
+        scale: f32,
+        l: usize,
+    }
+
+    fn marshal(layer: &CompressedLayer) -> StaticInputs {
+        let n = layer.n_weights();
+        let spec = layer.spec;
+        let l = spec.num_blocks(n);
+        let k = spec.total_inputs();
+        let stream = l + spec.n_s;
+
+        let mut encoded_bits = vec![0f32; 8 * stream * spec.n_in];
+        let mut corr = vec![0f32; 8 * l * spec.n_out];
+        let mut invert = vec![0f32; 8];
+        for (p, plane) in layer.planes.iter().enumerate() {
+            assert_eq!(plane.encoded.len(), stream);
+            for (t, &chunk) in plane.encoded.iter().enumerate() {
+                for b in 0..spec.n_in {
+                    encoded_bits[(p * stream + t) * spec.n_in + b] =
+                        ((chunk >> b) & 1) as f32;
+                }
+            }
+            for pos in plane.correction.positions() {
+                corr[p * l * spec.n_out + pos] = 1.0;
+            }
+            invert[p] = plane.inverted as u8 as f32;
+        }
+        // m_t[j][i] = M[i][j] (transpose of the row-major decoder matrix).
+        let dec = SequentialDecoder::random(spec, layer.m_seed);
+        let mut m_t = vec![0f32; k * spec.n_out];
+        for j in 0..k {
+            for i in 0..spec.n_out {
+                if dec.matrix().get(i, j) {
+                    m_t[j * spec.n_out + i] = 1.0;
+                }
+            }
+        }
+        let mask: Vec<f32> =
+            (0..n).map(|i| layer.mask.get(i) as u8 as f32).collect();
+        StaticInputs {
+            encoded_bits,
+            m_t,
+            corr,
+            invert,
+            mask,
+            scale: layer.scale,
+            l,
+        }
+    }
+
+    fn run_one(
+        model: &LoadedModel,
+        si: &StaticInputs,
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let stream = (si.l + N_S) as i64;
+        let outputs = model.run(&[
+            Input::F32(&si.encoded_bits, &[8, stream, 8]),
+            Input::F32(&si.m_t, &[((N_S + 1) * 8) as i64, N_OUT as i64]),
+            Input::F32(&si.corr, &[8, (si.l * N_OUT) as i64]),
+            Input::F32(&si.invert, &[8]),
+            Input::F32(&si.mask, &[(ROWS * COLS) as i64]),
+            Input::F32(x, &[1, COLS as i64]),
+            Input::F32(std::slice::from_ref(&si.scale), &[]),
+        ])?;
+        Ok(outputs[0][..ROWS].to_vec())
+    }
+
+    pub fn run() -> Result<()> {
+        let rt = Runtime::cpu()?;
+        println!("PJRT platform: {}", rt.platform());
+        let path = artifacts_dir().join("decode_matvec_b1.hlo.txt");
+        if !path.exists() {
+            bail!(
+                "artifact {} missing — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let model = rt.load_hlo_text(&path).context("load artifact")?;
+
+        let spec =
+            LayerSpec { name: "serve/fc".into(), rows: ROWS, cols: COLS };
+        let layer =
+            SyntheticLayer::generate(&spec, WeightGen::default(), 0x5E);
+        let (q, scale) = quantize_i8(&layer.weights);
+        let compressor = Compressor::new(CompressionConfig {
+            sparsity: 0.9,
+            n_s: N_S,
+            method: PruneMethod::Magnitude,
+            beam: Some(8),
+            ..Default::default()
+        });
+        let (compressed, _) =
+            compressor.compress_i8("serve/fc", ROWS, COLS, &q, scale);
+        let si = marshal(&compressed);
+        let native = DecodedLayer::from_compressed(&compressed);
+        let mut rng = f2f::rng::Rng::new(1);
+        for _ in 0..4 {
+            let x: Vec<f32> =
+                (0..COLS).map(|_| rng.next_f32() - 0.5).collect();
+            let y = run_one(&model, &si, &x)?;
+            let want = native.gemv(&x);
+            for (a, b) in y.iter().zip(&want) {
+                assert!(
+                    (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                    "PJRT {a} vs native {b}"
+                );
+            }
+        }
+        println!("PJRT decode+matvec matches native Rust decode (4 probes)");
+        Ok(())
+    }
 }

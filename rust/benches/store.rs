@@ -1,0 +1,190 @@
+//! Model-store benchmarks: serial vs pooled decode throughput, and
+//! cold vs warm serve latency through the `ModelStore`/`ModelBackend`
+//! path. Emits machine-readable `BENCH_store.json` next to the human
+//! output to start the perf trajectory.
+
+use f2f::bench_util::{bench_with_result, black_box, JsonReport};
+use f2f::container::{write_container_v2, CompressedLayer, Container};
+use f2f::coordinator::Backend;
+use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+use f2f::pipeline::{CompressionConfig, Compressor};
+use f2f::pruning::PruneMethod;
+use f2f::sparse::DecodedLayer;
+use f2f::store::{DecodePool, ModelBackend, ModelStore, StoreConfig};
+use std::sync::Arc;
+use std::time::Duration;
+
+const LAYERS: usize = 4;
+const WIDTH: usize = 256;
+
+fn build_model() -> Container {
+    let compressor = Compressor::new(CompressionConfig {
+        sparsity: 0.9,
+        n_s: 1,
+        method: PruneMethod::Magnitude,
+        beam: Some(8),
+        ..Default::default()
+    });
+    let mut c = Container::default();
+    for i in 0..LAYERS {
+        let name = format!("fc{i}");
+        let spec =
+            LayerSpec { name: name.clone(), rows: WIDTH, cols: WIDTH };
+        let layer =
+            SyntheticLayer::generate(&spec, WeightGen::default(), 77 + i as u64);
+        let (q, scale) = quantize_i8(&layer.weights);
+        let (cl, _) =
+            compressor.compress_i8(&name, WIDTH, WIDTH, &q, scale);
+        c.layers.push(cl);
+    }
+    c
+}
+
+fn main() {
+    println!("== model store benchmarks ==");
+    let budget = Duration::from_secs(2);
+    let mut json = JsonReport::new("store: decode pool + LRU serving");
+
+    let t0 = std::time::Instant::now();
+    let model = build_model();
+    println!(
+        "model: {LAYERS} layers of {WIDTH}x{WIDTH} INT8 (compressed in {:?})",
+        t0.elapsed()
+    );
+    let refs: Vec<&CompressedLayer> = model.layers.iter().collect();
+    let decoded_bits = (LAYERS * WIDTH * WIDTH * 8) as f64;
+
+    // --- serial vs pooled decode ---
+    let serial = bench_with_result(
+        "decode serial (from_compressed per layer)",
+        1,
+        budget,
+        50,
+        || {
+            refs.iter()
+                .map(|l| DecodedLayer::from_compressed(l))
+                .collect::<Vec<_>>()
+        },
+    );
+    json.add("decode_serial", &serial);
+    json.metric(
+        "decode_serial",
+        "gbit_per_s",
+        decoded_bits / serial.mean.as_secs_f64() / 1e9,
+    );
+
+    let mut best_pooled = serial;
+    for workers in [2usize, 4, 8] {
+        let pool = DecodePool::new(workers);
+        let r = bench_with_result(
+            &format!("decode pooled workers={workers}"),
+            1,
+            budget,
+            50,
+            || pool.decode_many(black_box(&refs)),
+        );
+        let case = format!("decode_pooled_w{workers}");
+        json.add(&case, &r);
+        json.metric(
+            &case,
+            "gbit_per_s",
+            decoded_bits / r.mean.as_secs_f64() / 1e9,
+        );
+        json.metric(
+            &case,
+            "speedup_vs_serial",
+            serial.mean.as_secs_f64() / r.mean.as_secs_f64(),
+        );
+        if r.mean < best_pooled.mean {
+            best_pooled = r;
+        }
+    }
+    println!(
+        "  -> best pooled speedup {:.2}x over serial",
+        serial.mean.as_secs_f64() / best_pooled.mean.as_secs_f64()
+    );
+
+    // --- cold vs warm serve through the store ---
+    let bytes = write_container_v2(&model);
+    let x: Vec<f32> = (0..WIDTH).map(|i| (i as f32 * 0.01).sin()).collect();
+
+    let cold = bench_with_result(
+        "serve cold (fresh store, full chain decode)",
+        1,
+        budget,
+        50,
+        || {
+            let store = Arc::new(
+                ModelStore::open_bytes(
+                    bytes.clone(),
+                    StoreConfig::default(),
+                )
+                .expect("open store"),
+            );
+            let mut backend =
+                ModelBackend::sequential(store).expect("backend");
+            backend.forward_batch(std::slice::from_ref(&x))
+        },
+    );
+    json.add("serve_cold", &cold);
+
+    let store = Arc::new(
+        ModelStore::open_bytes(bytes.clone(), StoreConfig::default())
+            .expect("open store"),
+    );
+    let mut backend =
+        ModelBackend::sequential(store.clone()).expect("backend");
+    backend.prefetch_all().expect("prefetch");
+    let warm = bench_with_result(
+        "serve warm (cached decoded layers)",
+        1,
+        budget,
+        200,
+        || backend.forward_batch(black_box(std::slice::from_ref(&x))),
+    );
+    json.add("serve_warm", &warm);
+    json.metric(
+        "serve_warm",
+        "cold_over_warm",
+        cold.mean.as_secs_f64() / warm.mean.as_secs_f64(),
+    );
+    let m = store.metrics();
+    println!(
+        "  -> warm cache: hits={} misses={} (cold/warm = {:.1}x)",
+        m.hits,
+        m.misses,
+        cold.mean.as_secs_f64() / warm.mean.as_secs_f64()
+    );
+
+    // --- budgeted serve: eviction-heavy traffic pattern ---
+    let tight = WIDTH * WIDTH * 4 * 2; // two of four layers fit
+    let store = Arc::new(
+        ModelStore::open_bytes(
+            bytes,
+            StoreConfig {
+                cache_budget_bytes: tight,
+                decode_workers: 0,
+            },
+        )
+        .expect("open store"),
+    );
+    let mut backend =
+        ModelBackend::sequential(store.clone()).expect("backend");
+    let budgeted = bench_with_result(
+        "serve budgeted (cache holds 2/4 layers)",
+        1,
+        budget,
+        50,
+        || backend.forward_batch(black_box(std::slice::from_ref(&x))),
+    );
+    json.add("serve_budgeted", &budgeted);
+    let m = store.metrics();
+    json.metric("serve_budgeted", "evictions", m.evictions as f64);
+    println!(
+        "  -> budgeted cache: decodes={} evictions={}",
+        m.decodes, m.evictions
+    );
+
+    json.write("BENCH_store.json").expect("write BENCH_store.json");
+    println!("wrote BENCH_store.json");
+}

@@ -73,6 +73,91 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Machine-readable benchmark report: flat `case → {metric: number}`
+/// JSON, hand-rolled (no serde offline). Start of the perf trajectory —
+/// a driver can diff `BENCH_*.json` files across commits.
+#[derive(Debug, Clone, Default)]
+pub struct JsonReport {
+    title: String,
+    cases: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl JsonReport {
+    /// New report with a title.
+    pub fn new(title: &str) -> Self {
+        JsonReport { title: title.to_string(), cases: Vec::new() }
+    }
+
+    /// Record a [`BenchResult`] under `case` (seconds-based metrics).
+    pub fn add(&mut self, case: &str, r: &BenchResult) {
+        self.metric(case, "iters", r.iters as f64);
+        self.metric(case, "mean_s", r.mean.as_secs_f64());
+        self.metric(case, "p50_s", r.p50.as_secs_f64());
+        self.metric(case, "p95_s", r.p95.as_secs_f64());
+        self.metric(case, "min_s", r.min.as_secs_f64());
+    }
+
+    /// Record one named metric under `case` (creates the case on first
+    /// use; non-finite values are stored as 0 to keep the JSON valid).
+    pub fn metric(&mut self, case: &str, key: &str, value: f64) {
+        let value = if value.is_finite() { value } else { 0.0 };
+        let entry = match self.cases.iter_mut().find(|(c, _)| c.as_str() == case) {
+            Some(e) => e,
+            None => {
+                self.cases.push((case.to_string(), Vec::new()));
+                self.cases.last_mut().unwrap()
+            }
+        };
+        entry.1.push((key.to_string(), value));
+    }
+
+    /// Render the report as a JSON object string.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!(
+            "  \"title\": \"{}\",\n  \"cases\": {{\n",
+            escape_json(&self.title)
+        ));
+        for (ci, (case, metrics)) in self.cases.iter().enumerate() {
+            out.push_str(&format!("    \"{}\": {{", escape_json(case)));
+            for (mi, (key, value)) in metrics.iter().enumerate() {
+                out.push_str(&format!("\"{}\": {}", escape_json(key), value));
+                if mi + 1 < metrics.len() {
+                    out.push_str(", ");
+                }
+            }
+            out.push('}');
+            if ci + 1 < self.cases.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    /// Write the JSON to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 fn summarize(samples: &mut Vec<Duration>) -> BenchResult {
     samples.sort_unstable();
     let n = samples.len();
@@ -110,6 +195,25 @@ mod tests {
     fn respects_max_iters() {
         let r = bench("capped", 0, Duration::from_secs(10), 7, || {});
         assert_eq!(r.iters, 7);
+    }
+
+    #[test]
+    fn json_report_renders_valid_shape() {
+        let mut rep = JsonReport::new("unit \"test\"");
+        let r = bench("j", 0, Duration::from_millis(1), 5, || {});
+        rep.add("case_a", &r);
+        rep.metric("case_a", "throughput", 123.5);
+        rep.metric("case_b", "bad", f64::NAN);
+        let json = rep.to_json();
+        assert!(json.contains("\"title\": \"unit \\\"test\\\"\""));
+        assert!(json.contains("\"case_a\""));
+        assert!(json.contains("\"throughput\": 123.5"));
+        assert!(json.contains("\"bad\": 0"));
+        // Balanced braces — cheap structural sanity.
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count()
+        );
     }
 
     #[test]

@@ -10,10 +10,19 @@
 //! `correction_bits` (Eq. 7 terms 2–3) are reported against the original
 //! dense size; the mask is accounted separately (§3 assumes the binary
 //! mask is stored/compressed independently, citing Lee et al. 2019a).
+//!
+//! Two wire layouts exist: legacy v1 (`F2F1`, parse front-to-back) and
+//! the indexed v2 (`F2F2`, per-layer offset index for random access —
+//! see [`ContainerIndex`]). [`read_container`] accepts both;
+//! [`write_container_v2`] is the default writer for new files.
 
 mod serde;
+mod v2;
 
 pub use serde::{read_container, write_container};
+pub use v2::{
+    is_v2, read_layer_at, write_container_v2, ContainerIndex, LayerEntry,
+};
 
 use crate::decoder::DecoderSpec;
 

@@ -1,61 +1,90 @@
 //! Byte-level (de)serialization of [`Container`] — no external crates.
 //!
-//! Layout: little-endian, length-prefixed. Magic `F2F1`.
+//! Layout: little-endian, length-prefixed. Two wire versions share one
+//! per-layer record codec ([`write_layer`] / [`read_layer`]):
+//!
+//! * **v1** (magic `F2F1`): header + layer records back to back; the
+//!   whole file must be parsed front-to-back.
+//! * **v2** (magic `F2F2`, see [`super::v2`]): a layer-offset index up
+//!   front so any record is addressable without touching the others.
+//!
+//! [`read_container`] accepts both.
 
 use super::{CompressedLayer, CompressedPlane, Container, Dtype};
 use crate::correction::CorrectionStream;
 use crate::decoder::DecoderSpec;
 use crate::gf2::BitVecF2;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 const MAGIC: &[u8; 4] = b"F2F1";
 
-struct Writer {
-    buf: Vec<u8>,
+pub(super) fn dtype_code(d: Dtype) -> u8 {
+    match d {
+        Dtype::F32 => 0,
+        Dtype::I8 => 1,
+    }
+}
+
+pub(super) fn dtype_from_code(code: u8) -> Result<Dtype> {
+    match code {
+        0 => Ok(Dtype::F32),
+        1 => Ok(Dtype::I8),
+        d => bail!("unknown dtype {d}"),
+    }
+}
+
+pub(super) struct Writer {
+    pub(super) buf: Vec<u8>,
 }
 
 impl Writer {
-    fn u8(&mut self, v: u8) {
+    pub(super) fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+    pub(super) fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
-    fn u32(&mut self, v: u32) {
+    pub(super) fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn u64(&mut self, v: u64) {
+    pub(super) fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn f32(&mut self, v: f32) {
+    pub(super) fn f32(&mut self, v: f32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn bytes(&mut self, v: &[u8]) {
+    pub(super) fn bytes(&mut self, v: &[u8]) {
         self.u32(v.len() as u32);
         self.buf.extend_from_slice(v);
     }
-    fn u32s_vec(&mut self, v: &[u32]) {
+    pub(super) fn u32s_vec(&mut self, v: &[u32]) {
         self.u32(v.len() as u32);
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
     }
-    fn words(&mut self, v: &[u64]) {
+    pub(super) fn words(&mut self, v: &[u64]) {
         self.u32(v.len() as u32);
         for &x in v {
             self.u64(x);
         }
     }
-    fn bitvec(&mut self, v: &BitVecF2) {
+    pub(super) fn bitvec(&mut self, v: &BitVecF2) {
         self.u64(v.len() as u64);
         self.words(v.words());
     }
 }
 
-struct Reader<'a> {
-    buf: &'a [u8],
-    pos: usize,
+pub(super) struct Reader<'a> {
+    pub(super) buf: &'a [u8],
+    pub(super) pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(super) fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+    pub(super) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
             bail!("container truncated at offset {}", self.pos);
         }
@@ -63,23 +92,23 @@ impl<'a> Reader<'a> {
         self.pos += n;
         Ok(s)
     }
-    fn u8(&mut self) -> Result<u8> {
+    pub(super) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
-    fn u32(&mut self) -> Result<u32> {
+    pub(super) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn u64(&mut self) -> Result<u64> {
+    pub(super) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
-    fn f32(&mut self) -> Result<f32> {
+    pub(super) fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn bytes(&mut self) -> Result<Vec<u8>> {
+    pub(super) fn bytes(&mut self) -> Result<Vec<u8>> {
         let n = self.u32()? as usize;
         Ok(self.take(n)?.to_vec())
     }
-    fn u32s_vec(&mut self) -> Result<Vec<u32>> {
+    pub(super) fn u32s_vec(&mut self) -> Result<Vec<u32>> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 4)?;
         Ok(raw
@@ -87,7 +116,7 @@ impl<'a> Reader<'a> {
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
-    fn words(&mut self) -> Result<Vec<u64>> {
+    pub(super) fn words(&mut self) -> Result<Vec<u64>> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 8)?;
         Ok(raw
@@ -95,7 +124,7 @@ impl<'a> Reader<'a> {
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
-    fn bitvec(&mut self) -> Result<BitVecF2> {
+    pub(super) fn bitvec(&mut self) -> Result<BitVecF2> {
         let len = self.u64()? as usize;
         let words = self.words()?;
         if words.len() != len.div_ceil(64) {
@@ -105,46 +134,105 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Serialize a container to bytes.
+/// Serialize one layer record (shared by the v1 body and v2 payload).
+pub(super) fn write_layer(w: &mut Writer, layer: &CompressedLayer) {
+    w.bytes(layer.name.as_bytes());
+    w.u32(layer.rows as u32);
+    w.u32(layer.cols as u32);
+    w.u8(dtype_code(layer.dtype));
+    w.f32(layer.scale);
+    w.u32(layer.spec.n_in as u32);
+    w.u32(layer.spec.n_out as u32);
+    w.u32(layer.spec.n_s as u32);
+    w.u64(layer.m_seed);
+    w.bitvec(&layer.mask);
+    w.u32(layer.planes.len() as u32);
+    for p in &layer.planes {
+        w.u8(p.inverted as u8);
+        w.u32s_vec(&p.encoded);
+        let (fw, fl, pw, pl) = p.correction.to_words();
+        w.u32(p.correction.p() as u32);
+        w.u64(layer.n_weights() as u64);
+        w.u32(p.correction.n_errors() as u32);
+        w.u64(fl as u64);
+        w.words(&fw);
+        w.u64(pl as u64);
+        w.words(&pw);
+    }
+}
+
+/// Parse one layer record (shared by the v1 body and v2 payload).
+pub(super) fn read_layer(r: &mut Reader) -> Result<CompressedLayer> {
+    let name = match String::from_utf8(r.bytes()?) {
+        Ok(n) => n,
+        Err(_) => bail!("layer name not utf8"),
+    };
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let dtype = dtype_from_code(r.u8()?)?;
+    let scale = r.f32()?;
+    let n_in = r.u32()? as usize;
+    let n_out = r.u32()? as usize;
+    let n_s = r.u32()? as usize;
+    let m_seed = r.u64()?;
+    let mask = r.bitvec()?;
+    let n_planes = r.u32()? as usize;
+    // Never pre-reserve attacker-controlled sizes (failure_injection.rs).
+    let mut planes = Vec::with_capacity(n_planes.min(1024));
+    for _ in 0..n_planes {
+        let inverted = r.u8()? != 0;
+        let encoded = r.u32s_vec()?;
+        let p = r.u32()? as usize;
+        let n_bits = r.u64()? as usize;
+        let n_errors = r.u32()? as usize;
+        let fl = r.u64()? as usize;
+        let fw = r.words()?;
+        let pl = r.u64()? as usize;
+        let pw = r.words()?;
+        planes.push(CompressedPlane {
+            inverted,
+            encoded,
+            correction: CorrectionStream::from_words(
+                (fw, fl),
+                (pw, pl),
+                p,
+                n_bits,
+                n_errors,
+            ),
+        });
+    }
+    Ok(CompressedLayer {
+        name,
+        rows,
+        cols,
+        dtype,
+        scale,
+        spec: DecoderSpec::new(n_in, n_out, n_s),
+        m_seed,
+        mask,
+        planes,
+    })
+}
+
+/// Serialize a container to bytes in the legacy v1 layout.
 pub fn write_container(c: &Container) -> Vec<u8> {
-    let mut w = Writer { buf: Vec::new() };
+    let mut w = Writer::new();
     w.buf.extend_from_slice(MAGIC);
     w.u32(1); // version
     w.u32(c.layers.len() as u32);
     for layer in &c.layers {
-        w.bytes(layer.name.as_bytes());
-        w.u32(layer.rows as u32);
-        w.u32(layer.cols as u32);
-        w.u8(match layer.dtype {
-            Dtype::F32 => 0,
-            Dtype::I8 => 1,
-        });
-        w.f32(layer.scale);
-        w.u32(layer.spec.n_in as u32);
-        w.u32(layer.spec.n_out as u32);
-        w.u32(layer.spec.n_s as u32);
-        w.u64(layer.m_seed);
-        w.bitvec(&layer.mask);
-        w.u32(layer.planes.len() as u32);
-        for p in &layer.planes {
-            w.u8(p.inverted as u8);
-            w.u32s_vec(&p.encoded);
-            let (fw, fl, pw, pl) = p.correction.to_words();
-            w.u32(p.correction.p() as u32);
-            w.u64(layer.n_weights() as u64);
-            w.u32(p.correction.n_errors() as u32);
-            w.u64(fl as u64);
-            w.words(&fw);
-            w.u64(pl as u64);
-            w.words(&pw);
-        }
+        write_layer(&mut w, layer);
     }
     w.buf
 }
 
-/// Parse a container from bytes.
+/// Parse a container from bytes. Accepts both the v1 (`F2F1`) and the
+/// indexed v2 (`F2F2`) layouts.
 pub fn read_container(bytes: &[u8]) -> Result<Container> {
-    let mut r = Reader { buf: bytes, pos: 0 };
+    if bytes.len() >= 4 && &bytes[..4] == super::v2::MAGIC_V2 {
+        return super::v2::read_container_v2(bytes);
+    }
+    let mut r = Reader::new(bytes);
     if r.take(4)? != MAGIC {
         bail!("bad magic: not an F2F container");
     }
@@ -155,57 +243,8 @@ pub fn read_container(bytes: &[u8]) -> Result<Container> {
     let n_layers = r.u32()? as usize;
     // Never pre-reserve attacker-controlled sizes (failure_injection.rs).
     let mut layers = Vec::with_capacity(n_layers.min(1024));
-    for li in 0..n_layers {
-        let name = String::from_utf8(r.bytes()?)
-            .with_context(|| format!("layer {li} name not utf8"))?;
-        let rows = r.u32()? as usize;
-        let cols = r.u32()? as usize;
-        let dtype = match r.u8()? {
-            0 => Dtype::F32,
-            1 => Dtype::I8,
-            d => bail!("unknown dtype {d}"),
-        };
-        let scale = r.f32()?;
-        let n_in = r.u32()? as usize;
-        let n_out = r.u32()? as usize;
-        let n_s = r.u32()? as usize;
-        let m_seed = r.u64()?;
-        let mask = r.bitvec()?;
-        let n_planes = r.u32()? as usize;
-        let mut planes = Vec::with_capacity(n_planes.min(1024));
-        for _ in 0..n_planes {
-            let inverted = r.u8()? != 0;
-            let encoded = r.u32s_vec()?;
-            let p = r.u32()? as usize;
-            let n_bits = r.u64()? as usize;
-            let n_errors = r.u32()? as usize;
-            let fl = r.u64()? as usize;
-            let fw = r.words()?;
-            let pl = r.u64()? as usize;
-            let pw = r.words()?;
-            planes.push(CompressedPlane {
-                inverted,
-                encoded,
-                correction: CorrectionStream::from_words(
-                    (fw, fl),
-                    (pw, pl),
-                    p,
-                    n_bits,
-                    n_errors,
-                ),
-            });
-        }
-        layers.push(CompressedLayer {
-            name,
-            rows,
-            cols,
-            dtype,
-            scale,
-            spec: DecoderSpec::new(n_in, n_out, n_s),
-            m_seed,
-            mask,
-            planes,
-        });
+    for _ in 0..n_layers {
+        layers.push(read_layer(&mut r)?);
     }
     if r.pos != bytes.len() {
         bail!("{} trailing bytes after container", bytes.len() - r.pos);
@@ -213,73 +252,81 @@ pub fn read_container(bytes: &[u8]) -> Result<Container> {
     Ok(Container { layers })
 }
 
+/// Deterministic multi-layer container for serialization tests (shared
+/// with the v2 tests).
+#[cfg(test)]
+pub(super) fn sample_container(seed: u64) -> Container {
+    use crate::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let spec = DecoderSpec::new(8, 40, 2);
+    let layers = (0..3)
+        .map(|i| {
+            let rows = 8 + i;
+            let cols = 16;
+            let n = rows * cols;
+            CompressedLayer {
+                name: format!("layer{i}"),
+                rows,
+                cols,
+                dtype: if i == 0 { Dtype::F32 } else { Dtype::I8 },
+                scale: 0.01 * (i as f32 + 1.0),
+                spec,
+                m_seed: rng.next_u64(),
+                mask: BitVecF2::random(n, 0.3, &mut rng),
+                planes: (0..if i == 0 { 32 } else { 8 })
+                    .map(|_| {
+                        let mism: Vec<usize> = {
+                            let mut v: Vec<usize> =
+                                (0..5).map(|_| rng.below(n)).collect();
+                            v.sort_unstable();
+                            v.dedup();
+                            v
+                        };
+                        CompressedPlane {
+                            inverted: rng.bernoulli(0.5),
+                            encoded: (0..spec
+                                .stream_len(spec.num_blocks(n)))
+                                .map(|_| rng.below(256) as u32)
+                                .collect(),
+                            correction: CorrectionStream::build(
+                                &mism, n, 512,
+                            ),
+                        }
+                    })
+                    .collect(),
+            }
+        })
+        .collect();
+    Container { layers }
+}
+
+/// Assert two containers hold identical layers, field by field.
+#[cfg(test)]
+pub(super) fn assert_layers_eq(a: &Container, b: &Container) {
+    assert_eq!(a.layers.len(), b.layers.len());
+    for (x, y) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.rows, y.rows);
+        assert_eq!(x.cols, y.cols);
+        assert_eq!(x.dtype, y.dtype);
+        assert_eq!(x.scale, y.scale);
+        assert_eq!(x.spec, y.spec);
+        assert_eq!(x.m_seed, y.m_seed);
+        assert_eq!(x.mask, y.mask);
+        assert_eq!(x.planes, y.planes);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::rng::Rng;
-
-    fn sample_container(seed: u64) -> Container {
-        let mut rng = Rng::new(seed);
-        let spec = DecoderSpec::new(8, 40, 2);
-        let layers = (0..3)
-            .map(|i| {
-                let rows = 8 + i;
-                let cols = 16;
-                let n = rows * cols;
-                CompressedLayer {
-                    name: format!("layer{i}"),
-                    rows,
-                    cols,
-                    dtype: if i == 0 { Dtype::F32 } else { Dtype::I8 },
-                    scale: 0.01 * (i as f32 + 1.0),
-                    spec,
-                    m_seed: rng.next_u64(),
-                    mask: BitVecF2::random(n, 0.3, &mut rng),
-                    planes: (0..if i == 0 { 32 } else { 8 })
-                        .map(|_| {
-                            let mism: Vec<usize> = {
-                                let mut v: Vec<usize> = (0..5)
-                                    .map(|_| rng.below(n))
-                                    .collect();
-                                v.sort_unstable();
-                                v.dedup();
-                                v
-                            };
-                            CompressedPlane {
-                                inverted: rng.bernoulli(0.5),
-                                encoded: (0..spec
-                                    .stream_len(spec.num_blocks(n)))
-                                    .map(|_| rng.below(256) as u32)
-                                    .collect(),
-                                correction: CorrectionStream::build(
-                                    &mism, n, 512,
-                                ),
-                            }
-                        })
-                        .collect(),
-                }
-            })
-            .collect();
-        Container { layers }
-    }
 
     #[test]
     fn roundtrip_exact() {
         let c = sample_container(1);
         let bytes = write_container(&c);
         let back = read_container(&bytes).unwrap();
-        assert_eq!(back.layers.len(), c.layers.len());
-        for (a, b) in c.layers.iter().zip(&back.layers) {
-            assert_eq!(a.name, b.name);
-            assert_eq!(a.rows, b.rows);
-            assert_eq!(a.cols, b.cols);
-            assert_eq!(a.dtype, b.dtype);
-            assert_eq!(a.scale, b.scale);
-            assert_eq!(a.spec, b.spec);
-            assert_eq!(a.m_seed, b.m_seed);
-            assert_eq!(a.mask, b.mask);
-            assert_eq!(a.planes, b.planes);
-        }
+        assert_layers_eq(&c, &back);
     }
 
     #[test]

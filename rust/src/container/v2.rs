@@ -1,0 +1,379 @@
+//! Container **v2**: the indexed layout (magic `F2F2`).
+//!
+//! v1 must be parsed front-to-back, so serving one layer of a big model
+//! costs a full-file parse. v2 prefixes the same per-layer records with a
+//! layer-offset index:
+//!
+//! ```text
+//! "F2F2" | u32 version=2 | u32 n_layers
+//! n_layers × { name, u32 rows, u32 cols, u8 dtype, u32 n_planes,
+//!              u64 offset, u64 len }          // the index
+//! n_layers × <layer record>                   // v1-identical records
+//! ```
+//!
+//! Offsets are absolute file offsets; records are contiguous and in index
+//! order, so the index doubles as an integrity check (no gaps, no
+//! trailing bytes). Any layer is addressable in `O(index)` without
+//! touching the other records — the enabling property for the
+//! [`crate::store::ModelStore`] streaming-decode path.
+
+use super::serde::{
+    dtype_code, dtype_from_code, read_layer, write_layer, Reader, Writer,
+};
+use super::{CompressedLayer, Container, Dtype};
+use anyhow::{bail, Result};
+
+pub(super) const MAGIC_V2: &[u8; 4] = b"F2F2";
+
+/// Index entry: where one layer's record lives and its summary geometry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerEntry {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub dtype: Dtype,
+    pub n_planes: usize,
+    /// Absolute byte offset of the layer record.
+    pub offset: usize,
+    /// Byte length of the layer record.
+    pub len: usize,
+}
+
+impl LayerEntry {
+    /// Weight count.
+    pub fn n_weights(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Decoded (dense f32) size in bytes — what a cache entry costs.
+    pub fn decoded_bytes(&self) -> usize {
+        self.n_weights() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Parsed v2 index: layer directory without any payload parsing.
+#[derive(Debug, Clone)]
+pub struct ContainerIndex {
+    entries: Vec<LayerEntry>,
+}
+
+impl ContainerIndex {
+    /// Parse the index of a v2 container. Validates magic, version,
+    /// bounds and contiguity of the records; does not touch payloads.
+    pub fn parse(bytes: &[u8]) -> Result<ContainerIndex> {
+        let mut r = Reader::new(bytes);
+        if r.take(4)? != MAGIC_V2 {
+            bail!("bad magic: not an F2F v2 container");
+        }
+        let version = r.u32()?;
+        if version != 2 {
+            bail!("unsupported v2 container version {version}");
+        }
+        let n_layers = r.u32()? as usize;
+        // Never pre-reserve attacker-controlled sizes.
+        let mut entries: Vec<LayerEntry> =
+            Vec::with_capacity(n_layers.min(1024));
+        for li in 0..n_layers {
+            let name = match String::from_utf8(r.bytes()?) {
+                Ok(n) => n,
+                Err(_) => bail!("index entry {li}: name not utf8"),
+            };
+            let rows = r.u32()? as usize;
+            let cols = r.u32()? as usize;
+            let dtype = dtype_from_code(r.u8()?)?;
+            let n_planes = r.u32()? as usize;
+            let offset = r.u64()? as usize;
+            let len = r.u64()? as usize;
+            let end = offset
+                .checked_add(len)
+                .filter(|&e| e <= bytes.len());
+            if end.is_none() {
+                bail!(
+                    "index entry {li} ({name}): record [{offset}, +{len}) \
+                     out of bounds ({} bytes)",
+                    bytes.len()
+                );
+            }
+            entries.push(LayerEntry {
+                name,
+                rows,
+                cols,
+                dtype,
+                n_planes,
+                offset,
+                len,
+            });
+        }
+        // Records must be contiguous: first right after the index, each
+        // next at the previous end, last ending at EOF. This catches both
+        // truncation and trailing garbage.
+        let mut expect = r.pos;
+        for (li, e) in entries.iter().enumerate() {
+            if e.offset != expect {
+                bail!(
+                    "index entry {li}: record at {} but expected {expect}",
+                    e.offset
+                );
+            }
+            expect += e.len;
+        }
+        if expect != bytes.len() {
+            bail!(
+                "container length {} != indexed payload end {expect}",
+                bytes.len()
+            );
+        }
+        Ok(ContainerIndex { entries })
+    }
+
+    /// All entries, in container order.
+    pub fn entries(&self) -> &[LayerEntry] {
+        &self.entries
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the container holds no layers.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look an entry up by layer name.
+    pub fn find(&self, name: &str) -> Option<&LayerEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Total decoded (dense f32) size of every layer in bytes.
+    pub fn total_decoded_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.decoded_bytes()).sum()
+    }
+}
+
+/// Serialize a container in the indexed v2 layout.
+pub fn write_container_v2(c: &Container) -> Vec<u8> {
+    // Serialize every record first so offsets are known.
+    let records: Vec<Vec<u8>> = c
+        .layers
+        .iter()
+        .map(|l| {
+            let mut w = Writer::new();
+            write_layer(&mut w, l);
+            w.buf
+        })
+        .collect();
+    let index_size: usize = 4 + 4 + 4
+        + c.layers
+            .iter()
+            .map(|l| 4 + l.name.len() + 4 + 4 + 1 + 4 + 8 + 8)
+            .sum::<usize>();
+    let payload: usize = records.iter().map(Vec::len).sum();
+
+    let mut w = Writer::new();
+    w.buf.reserve(index_size + payload);
+    w.buf.extend_from_slice(MAGIC_V2);
+    w.u32(2); // version
+    w.u32(c.layers.len() as u32);
+    let mut offset = index_size;
+    for (layer, rec) in c.layers.iter().zip(&records) {
+        w.bytes(layer.name.as_bytes());
+        w.u32(layer.rows as u32);
+        w.u32(layer.cols as u32);
+        w.u8(dtype_code(layer.dtype));
+        w.u32(layer.planes.len() as u32);
+        w.u64(offset as u64);
+        w.u64(rec.len() as u64);
+        offset += rec.len();
+    }
+    debug_assert_eq!(w.buf.len(), index_size);
+    for rec in &records {
+        w.buf.extend_from_slice(rec);
+    }
+    w.buf
+}
+
+/// Parse a single layer record addressed by an index entry, without
+/// touching any other byte of the container.
+pub fn read_layer_at(
+    bytes: &[u8],
+    entry: &LayerEntry,
+) -> Result<CompressedLayer> {
+    let end = entry
+        .offset
+        .checked_add(entry.len)
+        .filter(|&e| e <= bytes.len());
+    let Some(end) = end else {
+        bail!(
+            "layer {}: record [{}, +{}) out of bounds",
+            entry.name,
+            entry.offset,
+            entry.len
+        );
+    };
+    let mut r = Reader::new(&bytes[entry.offset..end]);
+    let layer = read_layer(&mut r)?;
+    if r.pos != entry.len {
+        bail!(
+            "layer {}: {} trailing bytes in record",
+            entry.name,
+            entry.len - r.pos
+        );
+    }
+    if layer.name != entry.name {
+        bail!(
+            "index/record name mismatch: {:?} vs {:?}",
+            entry.name,
+            layer.name
+        );
+    }
+    if layer.rows != entry.rows
+        || layer.cols != entry.cols
+        || layer.dtype != entry.dtype
+        || layer.planes.len() != entry.n_planes
+    {
+        bail!(
+            "index/record geometry mismatch for layer {}: index says \
+             {}x{} {:?} ({} planes), record says {}x{} {:?} ({} planes)",
+            entry.name,
+            entry.rows,
+            entry.cols,
+            entry.dtype,
+            entry.n_planes,
+            layer.rows,
+            layer.cols,
+            layer.dtype,
+            layer.planes.len()
+        );
+    }
+    Ok(layer)
+}
+
+/// True when `bytes` carry the v2 (`F2F2`) magic.
+pub fn is_v2(bytes: &[u8]) -> bool {
+    bytes.len() >= 4 && &bytes[..4] == MAGIC_V2
+}
+
+/// Parse a whole v2 container eagerly (the [`read_container`] fallback
+/// for callers that want every layer).
+///
+/// [`read_container`]: super::read_container
+pub(super) fn read_container_v2(bytes: &[u8]) -> Result<Container> {
+    let index = ContainerIndex::parse(bytes)?;
+    let layers = index
+        .entries()
+        .iter()
+        .map(|e| read_layer_at(bytes, e))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Container { layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::serde::{assert_layers_eq, sample_container};
+    use super::super::{read_container, write_container};
+    use super::*;
+
+    #[test]
+    fn v2_roundtrip_exact() {
+        let c = sample_container(11);
+        let bytes = write_container_v2(&c);
+        let back = read_container(&bytes).unwrap();
+        assert_layers_eq(&c, &back);
+    }
+
+    #[test]
+    fn index_matches_layers_without_payload_parse() {
+        let c = sample_container(12);
+        let bytes = write_container_v2(&c);
+        let idx = ContainerIndex::parse(&bytes).unwrap();
+        assert_eq!(idx.len(), c.layers.len());
+        for (e, l) in idx.entries().iter().zip(&c.layers) {
+            assert_eq!(e.name, l.name);
+            assert_eq!(e.rows, l.rows);
+            assert_eq!(e.cols, l.cols);
+            assert_eq!(e.dtype, l.dtype);
+            assert_eq!(e.n_planes, l.planes.len());
+        }
+        assert_eq!(
+            idx.total_decoded_bytes(),
+            c.layers.iter().map(|l| l.n_weights() * 4).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn random_access_reads_one_layer() {
+        let c = sample_container(13);
+        let bytes = write_container_v2(&c);
+        let idx = ContainerIndex::parse(&bytes).unwrap();
+        let e = idx.find("layer2").expect("layer2 indexed");
+        let layer = read_layer_at(&bytes, e).unwrap();
+        assert_eq!(layer.name, "layer2");
+        assert_eq!(layer.rows, c.layers[2].rows);
+        assert_eq!(layer.planes, c.layers[2].planes);
+        assert!(idx.find("nope").is_none());
+    }
+
+    #[test]
+    fn v1_still_reads_through_versioned_reader() {
+        let c = sample_container(14);
+        let v1 = write_container(&c);
+        let back = read_container(&v1).unwrap();
+        assert_layers_eq(&c, &back);
+    }
+
+    #[test]
+    fn rejects_truncation_and_garbage() {
+        let c = sample_container(15);
+        let bytes = write_container_v2(&c);
+        for cut in [3usize, 8, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                read_container(&bytes[..cut]).is_err(),
+                "cut at {cut} should fail"
+            );
+        }
+        let mut garbage = bytes.clone();
+        garbage.push(0);
+        assert!(read_container(&garbage).is_err());
+    }
+
+    #[test]
+    fn rejects_index_out_of_bounds() {
+        let c = sample_container(16);
+        let mut bytes = write_container_v2(&c);
+        // First entry's offset field sits after magic+version+count and
+        // the name record (4-byte len + "layer0") + rows/cols/dtype/planes.
+        let off_pos = 4 + 4 + 4 + (4 + 6) + 4 + 4 + 1 + 4;
+        bytes[off_pos..off_pos + 8]
+            .copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        assert!(ContainerIndex::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_index_geometry_mismatch() {
+        let c = sample_container(17);
+        let mut bytes = write_container_v2(&c);
+        // Corrupt entry 0's rows field (right after the name record).
+        let rows_pos = 4 + 4 + 4 + (4 + 6);
+        let rows = u32::from_le_bytes(
+            bytes[rows_pos..rows_pos + 4].try_into().unwrap(),
+        );
+        bytes[rows_pos..rows_pos + 4]
+            .copy_from_slice(&(rows + 1).to_le_bytes());
+        // The index itself still parses (payload untouched) but the
+        // record read must reject the lie instead of serving wrong dims.
+        let idx = ContainerIndex::parse(&bytes).unwrap();
+        let err = read_layer_at(&bytes, &idx.entries()[0]).unwrap_err();
+        assert!(format!("{err}").contains("geometry mismatch"));
+        assert!(read_container(&bytes).is_err());
+    }
+
+    #[test]
+    fn is_v2_detects_magic() {
+        let c = sample_container(18);
+        assert!(is_v2(&write_container_v2(&c)));
+        assert!(!is_v2(&write_container(&c)));
+        assert!(!is_v2(b"F2"));
+    }
+}

@@ -18,6 +18,10 @@ pub trait Backend {
 /// Native Rust backend: decode the compressed layer once at startup
 /// (exactly what the on-chip XOR decompressor does between memory and
 /// compute), then serve batched GEMVs from the decoded weights.
+///
+/// Single-layer only — multi-layer models are served by
+/// [`crate::store::ModelBackend`] over a budgeted
+/// [`crate::store::ModelStore`].
 pub struct NativeBackend {
     layer: DecodedLayer,
 }

@@ -10,6 +10,11 @@
 //!
 //! PJRT handles are not `Send`, so the worker *constructs* its backend on
 //! its own thread via a `Send` factory closure.
+//!
+//! Backends: [`NativeBackend`] serves one decoded layer; whole models go
+//! through [`crate::store::ModelBackend`], which chains every layer of a
+//! compressed container from a byte-budgeted
+//! [`crate::store::ModelStore`].
 
 mod backend;
 mod batcher;

@@ -30,9 +30,15 @@
 //! * [`entropy`] — Appendix D entropy bounds on block compression.
 //! * [`correction`] — Appendix F lossless correction (patch) format.
 //! * [`container`] — serialized compressed-model container with lossless
-//!   round-trip.
+//!   round-trip; legacy v1 (`F2F1`) plus the indexed v2 (`F2F2`) layout
+//!   whose layer-offset index makes any layer addressable without
+//!   parsing the whole file.
 //! * [`sparse`] — CSR + SpMV baseline (Algorithm 1) and the
 //!   decode-then-GEMV fixed-to-fixed path (Algorithm 2).
+//! * [`store`] — model store + streaming decode engine: parallel
+//!   per-plane decode ([`store::DecodePool`]), a byte-budgeted LRU of
+//!   decoded layers ([`store::ModelStore`]), and the multi-layer
+//!   [`store::ModelBackend`].
 //! * [`bandwidth`] — memory transaction / bandwidth-utilization simulator
 //!   (Figure 1, Appendix A).
 //! * [`models`] — synthetic Transformer / ResNet-50 model zoo with
@@ -42,6 +48,41 @@
 //! * [`runtime`] — PJRT (XLA) runtime that loads AOT-compiled artifacts.
 //! * [`report`] — textual table/figure rendering for the repro harness.
 //! * [`repro`] — one entry point per paper table/figure.
+//!
+//! ## Serving a whole model
+//!
+//! A compressed multi-layer network serves end to end without ever
+//! materializing all of its decoded weights at once:
+//!
+//! ```no_run
+//! use f2f::container::write_container_v2;
+//! use f2f::coordinator::{InferenceServer, ServerConfig};
+//! use f2f::store::{ModelBackend, ModelStore, StoreConfig};
+//! use std::sync::Arc;
+//!
+//! # fn demo(container: f2f::container::Container) -> anyhow::Result<()> {
+//! // Compress with `Compressor::compress_model`, then write the indexed
+//! // v2 layout so any layer is addressable on its own.
+//! let bytes = write_container_v2(&container);
+//!
+//! // A store with a decoded-weight budget smaller than the model:
+//! // layers decode on miss (parallel, per bit-plane) and cold layers
+//! // are evicted.
+//! let store = Arc::new(ModelStore::open_bytes(
+//!     bytes,
+//!     StoreConfig { cache_budget_bytes: 64 << 20, decode_workers: 4 },
+//! )?);
+//!
+//! // A multi-layer GEMV chain behind the batching inference server.
+//! let backend = ModelBackend::sequential(store.clone())?;
+//! let server = InferenceServer::start(ServerConfig::default(), move || {
+//!     Box::new(backend)
+//! });
+//! let y = server.infer(vec![0.0; server.input_dim()])?;
+//! # let _ = y;
+//! # Ok(())
+//! # }
+//! ```
 
 pub mod bandwidth;
 pub mod bench_util;
@@ -61,9 +102,11 @@ pub mod repro;
 pub mod rng;
 pub mod runtime;
 pub mod sparse;
+pub mod store;
 pub mod weights;
 
 pub use decoder::{DecoderSpec, SequentialDecoder};
 pub use encoder::{EncodeResult, ViterbiEncoder};
 pub use gf2::BitVecF2;
 pub use pipeline::{CompressionConfig, Compressor};
+pub use store::{DecodePool, ModelBackend, ModelStore, StoreConfig};

@@ -6,10 +6,13 @@
 //!   DESIGN.md §5 for ids: fig1 fig4a fig4b fig4c fig8 fig9 table1
 //!   table2 table3 s4 s5 s10 s12 s13 entropy beamcheck all).
 //! * `f2f compress --model <transformer|resnet50> [...]` — compress a
-//!   synthetic model to a container file and report per-layer stats.
-//! * `f2f inspect <container>` — print a container's inventory.
-//! * `f2f serve [...]` — start the serving loop on a compressed layer
-//!   and run a self-driven load test.
+//!   synthetic model to a container file (indexed v2 by default; pass
+//!   `--v1` for the legacy layout) and report per-layer stats.
+//! * `f2f inspect <container>` — print a container's inventory (v1/v2).
+//! * `f2f serve [...]` — compress a multi-layer model, serve it through
+//!   the model store (`--cache-kb <n>` decoded-weight budget,
+//!   `--decode-threads <n>` pool width, `--layers`, `--width`) and run a
+//!   self-driven load test.
 //! * `f2f hw --s <S> --nin <N> --ns <N>` — Appendix G hardware cost.
 
 use anyhow::{bail, Result};
@@ -109,17 +112,30 @@ fn cmd_compress(args: &Args) -> Result<()> {
         container.compressed_bits(),
         container.memory_reduction()
     );
-    std::fs::write(&out, f2f::container::write_container(&container))?;
-    println!("wrote {out}");
+    let bytes = if args.flag("v1") {
+        f2f::container::write_container(&container)
+    } else {
+        f2f::container::write_container_v2(&container)
+    };
+    std::fs::write(&out, bytes)?;
+    println!(
+        "wrote {out} ({})",
+        if args.flag("v1") { "legacy v1" } else { "indexed v2" }
+    );
     Ok(())
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     let path = args.pos(1)?;
     let bytes = std::fs::read(path)?;
+    let layout = if bytes.len() >= 4 && &bytes[..4] == b"F2F2" {
+        "v2 indexed"
+    } else {
+        "v1"
+    };
     let c = f2f::container::read_container(&bytes)?;
     let mut table = f2f::report::Table::new(
-        &format!("{path} ({} bytes)", bytes.len()),
+        &format!("{path} ({} bytes, {layout})", bytes.len()),
         &["layer", "shape", "dtype", "spec", "planes", "mem_reduction%"],
     );
     for l in &c.layers {
@@ -140,43 +156,89 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use f2f::coordinator::{InferenceServer, NativeBackend, ServerConfig};
-    use f2f::models::{transformer_layers, SyntheticLayer, WeightGen};
+    use f2f::container::Container;
+    use f2f::coordinator::{InferenceServer, ServerConfig};
+    use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
     use f2f::pipeline::{CompressionConfig, Compressor};
+    use f2f::pruning::PruneMethod;
+    use f2f::store::{ModelBackend, ModelStore, StoreConfig};
+    use std::sync::Arc;
 
     let requests: usize = args.get("requests", 2000)?;
     let max_batch: usize = args.get("batch", 16)?;
     let seed: u64 = args.get("seed", 7)?;
+    let n_layers: usize = args.get("layers", 4)?;
+    let width: usize = args.get("width", 256)?;
+    // Decoded-weight cache budget; 0 = unbounded. Set it below the
+    // model's decoded size to exercise decode-on-miss / evict-cold.
+    let cache_kb: usize = args.get("cache-kb", 0)?;
+    // Decode pool width; 0 = size to the host.
+    let decode_threads: usize = args.get("decode-threads", 0)?;
 
-    // Compress one layer, serve it, self-drive load.
-    let spec = transformer_layers().remove(0);
-    let layer = SyntheticLayer::generate(&spec, WeightGen::default(), seed)
-        .truncated(16384);
+    // Compress a multi-layer MLP-shaped model into an indexed container.
     let compressor = Compressor::new(CompressionConfig {
         sparsity: 0.9,
         n_s: 1,
+        method: PruneMethod::Magnitude,
+        beam: Some(8),
+        seed,
         ..Default::default()
     });
-    let (compressed, rep) = compressor.compress_layer(
-        &layer,
-        f2f::container::Dtype::I8,
-    );
+    let t0 = std::time::Instant::now();
+    let mut container = Container::default();
+    for i in 0..n_layers {
+        let name = format!("mlp/fc{i}");
+        let spec =
+            LayerSpec { name: name.clone(), rows: width, cols: width };
+        let layer = SyntheticLayer::generate(
+            &spec,
+            WeightGen::default(),
+            seed.wrapping_add(i as u64),
+        );
+        let (q, scale) = quantize_i8(&layer.weights);
+        let (cl, rep) =
+            compressor.compress_i8(&name, width, width, &q, scale);
+        println!(
+            "compressed {name} ({width}x{width}): E={:.2}% \
+             mem_reduction={:.2}%",
+            rep.efficiency, rep.memory_reduction
+        );
+        container.layers.push(cl);
+    }
+    println!("model compressed in {:?}", t0.elapsed());
+    let bytes = f2f::container::write_container_v2(&container);
+
+    let budget = if cache_kb == 0 { usize::MAX } else { cache_kb << 10 };
+    let store = Arc::new(ModelStore::open_bytes(
+        bytes,
+        StoreConfig {
+            cache_budget_bytes: budget,
+            decode_workers: decode_threads,
+        },
+    )?);
     println!(
-        "layer {} compressed: E={:.2}% mem_reduction={:.2}%",
-        rep.name, rep.efficiency, rep.memory_reduction
+        "store: {} layers, decoded size {} KiB, budget {}, {} decode workers",
+        n_layers,
+        store.total_decoded_bytes() >> 10,
+        if budget == usize::MAX {
+            "unbounded".to_string()
+        } else {
+            format!("{} KiB", budget >> 10)
+        },
+        store.decode_workers(),
     );
 
-    let cols = compressed.cols;
+    let backend = ModelBackend::sequential(store.clone())?;
     let server = InferenceServer::start(
         ServerConfig { max_batch, ..Default::default() },
-        move || Box::new(NativeBackend::new(&compressed)),
+        move || Box::new(backend),
     );
     let mut rng = f2f::rng::Rng::new(seed);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for _ in 0..requests {
         let x: Vec<f32> =
-            (0..cols).map(|_| rng.next_f32() - 0.5).collect();
+            (0..width).map(|_| rng.next_f32() - 0.5).collect();
         pending.push(server.infer_async(x));
     }
     for p in pending {
@@ -191,6 +253,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.mean_batch_size()
     );
     println!("latency p50={:?} p95={:?} p99={:?}", m.p50, m.p95, m.p99);
+    let sm = store.metrics();
+    println!(
+        "store: hits={} misses={} decodes={} evictions={} cached={} KiB \
+         ({} layers)",
+        sm.hits,
+        sm.misses,
+        sm.decodes,
+        sm.evictions,
+        sm.cached_bytes >> 10,
+        sm.cached_layers,
+    );
     server.shutdown();
     Ok(())
 }

@@ -147,6 +147,18 @@ impl Compressor {
         (container, reports)
     }
 
+    /// Compress a whole model and serialize it in the indexed v2
+    /// container layout — the default on-disk format, ready for
+    /// [`crate::store::ModelStore::open_bytes`].
+    pub fn compress_model_to_bytes(
+        &self,
+        layers: &[SyntheticLayer],
+        dtype: Dtype,
+    ) -> (Vec<u8>, Vec<LayerReport>) {
+        let (container, reports) = self.compress_model(layers, dtype);
+        (crate::container::write_container_v2(&container), reports)
+    }
+
     fn compress_planes(
         &self,
         name: &str,

@@ -126,4 +126,25 @@ mod tests {
         let b = DecodedLayer::from_compressed(&back.layers[0]);
         assert_eq!(a.weights, b.weights);
     }
+
+    #[test]
+    fn compress_model_to_bytes_emits_indexed_v2() {
+        let cfg = CompressionConfig {
+            sparsity: 0.8,
+            n_s: 1,
+            beam: Some(8),
+            ..CompressionConfig::default()
+        };
+        let c = Compressor::new(cfg);
+        let layers = vec![small_layer(5), small_layer(6)];
+        let (bytes, reports) =
+            c.compress_model_to_bytes(&layers, Dtype::I8);
+        assert_eq!(reports.len(), 2);
+        assert_eq!(&bytes[..4], b"F2F2", "default layout is indexed v2");
+        let index =
+            crate::container::ContainerIndex::parse(&bytes).unwrap();
+        assert_eq!(index.len(), 2);
+        let back = crate::container::read_container(&bytes).unwrap();
+        assert_eq!(back.layers.len(), 2);
+    }
 }

@@ -1,59 +1,18 @@
 //! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
 //!
 //! The build-time Python layer (`python/compile/aot.py`) lowers the JAX
-//! decode+matvec model to **HLO text** (xla_extension 0.5.1 rejects
-//! jax ≥ 0.5 serialized protos — 64-bit instruction ids; the text parser
-//! reassigns ids). This module loads those files, compiles them once on
-//! the PJRT CPU client, and executes them from the serving hot path. No
-//! Python at request time.
-
-use anyhow::{Context, Result};
-use std::path::Path;
-
-/// A PJRT client plus the executables loaded into it.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-/// One compiled model artifact.
-pub struct LoadedModel {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-}
-
-impl Runtime {
-    /// CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
-    }
-
-    /// Platform string (for logs).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(LoadedModel {
-            exe,
-            name: path
-                .file_stem()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-        })
-    }
-}
+//! decode+matvec model — whose hot spot is the Pallas GF(2) kernel — to
+//! **HLO text** (xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos —
+//! 64-bit instruction ids; the text parser reassigns ids). This module
+//! loads those files, compiles them once on the PJRT CPU client, and
+//! executes them from the serving hot path. No Python at request time.
+//!
+//! The PJRT path needs the external `xla` bindings, which are not part of
+//! the offline build. It is therefore gated behind the `pjrt` cargo
+//! feature: without it, [`Runtime`] and [`LoadedModel`] are uninhabited
+//! stubs whose constructors return a descriptive error, so everything
+//! downstream (tests, examples, the serving stack) still compiles and
+//! falls back to the native Rust decode path.
 
 /// A typed input tensor for execution.
 pub enum Input<'a> {
@@ -61,47 +20,157 @@ pub enum Input<'a> {
     I32(&'a [i32], &'a [i64]),
 }
 
-impl LoadedModel {
-    /// Artifact name (file stem).
-    pub fn name(&self) -> &str {
-        &self.name
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::Input;
+    use anyhow::{Context, Result};
+    use std::path::Path;
+
+    /// A PJRT client plus the executables loaded into it.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    /// Execute with the given inputs; returns every output tensor as a
-    /// flat `f32` vector (the jax side lowers with `return_tuple=True`).
-    pub fn run(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|inp| -> Result<xla::Literal> {
-                Ok(match inp {
-                    Input::F32(data, dims) => xla::Literal::vec1(data)
-                        .reshape(dims)
-                        .context("reshape f32 input")?,
-                    Input::I32(data, dims) => xla::Literal::vec1(data)
-                        .reshape(dims)
-                        .context("reshape i32 input")?,
-                })
-            })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .context("executing PJRT computation")?;
-        let first = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let parts = first.to_tuple().context("untupling result")?;
-        parts
-            .into_iter()
-            .map(|lit| {
-                // Convert whatever numeric type came back to f32.
-                let lit = lit
-                    .convert(xla::PrimitiveType::F32)
-                    .context("converting output to f32")?;
-                lit.to_vec::<f32>().context("reading output")
-            })
-            .collect()
+    /// One compiled model artifact.
+    pub struct LoadedModel {
+        exe: xla::PjRtLoadedExecutable,
+        name: String,
     }
+
+    impl Runtime {
+        /// CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .context("creating PJRT CPU client")?;
+            Ok(Runtime { client })
+        }
+
+        /// Platform string (for logs).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(LoadedModel {
+                exe,
+                name: path
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
+            })
+        }
+    }
+
+    impl LoadedModel {
+        /// Artifact name (file stem).
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        /// Execute with the given inputs; returns every output tensor as
+        /// a flat `f32` vector (the jax side lowers with
+        /// `return_tuple=True`).
+        pub fn run(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|inp| -> Result<xla::Literal> {
+                    Ok(match inp {
+                        Input::F32(data, dims) => xla::Literal::vec1(data)
+                            .reshape(dims)
+                            .context("reshape f32 input")?,
+                        Input::I32(data, dims) => xla::Literal::vec1(data)
+                            .reshape(dims)
+                            .context("reshape i32 input")?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .context("executing PJRT computation")?;
+            let first = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            let parts = first.to_tuple().context("untupling result")?;
+            parts
+                .into_iter()
+                .map(|lit| {
+                    // Convert whatever numeric type came back to f32.
+                    let lit = lit
+                        .convert(xla::PrimitiveType::F32)
+                        .context("converting output to f32")?;
+                    lit.to_vec::<f32>().context("reading output")
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{LoadedModel, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::Input;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// Uninhabited stand-in: constructing one always fails, so methods
+    /// taking `&self` are statically unreachable.
+    pub enum Runtime {}
+
+    /// Uninhabited stand-in for a compiled artifact.
+    pub enum LoadedModel {}
+
+    impl Runtime {
+        /// Always fails: the crate was built without the `pjrt` feature.
+        pub fn cpu() -> Result<Self> {
+            bail!(
+                "PJRT runtime unavailable: rebuild with `--features pjrt` \
+                 (requires the external `xla` bindings)"
+            )
+        }
+
+        /// Unreachable (no `Runtime` value can exist).
+        pub fn platform(&self) -> String {
+            match *self {}
+        }
+
+        /// Unreachable (no `Runtime` value can exist).
+        pub fn load_hlo_text(&self, _path: &Path) -> Result<LoadedModel> {
+            match *self {}
+        }
+    }
+
+    impl LoadedModel {
+        /// Unreachable (no `LoadedModel` value can exist).
+        pub fn name(&self) -> &str {
+            match *self {}
+        }
+
+        /// Unreachable (no `LoadedModel` value can exist).
+        pub fn run(&self, _inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+            match *self {}
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{LoadedModel, Runtime};
+
+/// True when the real PJRT runtime is compiled in.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
 }
 
 // Runtime tests that need a real artifact live in
@@ -111,9 +180,27 @@ impl LoadedModel {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn cpu_client_boots() {
         let rt = Runtime::cpu().expect("PJRT CPU client");
         assert!(!rt.platform().is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = Runtime::cpu().err().expect("stub must fail");
+        assert!(format!("{err}").contains("pjrt"));
+        assert!(!pjrt_available());
+    }
+
+    #[test]
+    fn input_variants_construct() {
+        let data = [1.0f32];
+        let dims = [1i64];
+        let _ = Input::F32(&data, &dims);
+        let idata = [1i32];
+        let _ = Input::I32(&idata, &dims);
     }
 }

@@ -22,26 +22,52 @@ pub struct DecodedLayer {
     pub weights: Vec<f32>,
 }
 
+/// Decode one bit-plane of a compressed layer: decode-stream →
+/// correction → invert. The per-plane work item of the decode path,
+/// shared with [`crate::store::DecodePool`]'s parallel workers.
+pub(crate) fn decode_plane(
+    layer: &CompressedLayer,
+    dec: &SequentialDecoder,
+    k: usize,
+) -> BitVecF2 {
+    let p = &layer.planes[k];
+    let mut bits = dec.decode_stream_to_bits(&p.encoded, layer.n_weights());
+    p.correction.apply(&mut bits);
+    if p.inverted {
+        bits.invert();
+    }
+    bits
+}
+
+/// Reassemble decoded bit-planes into the dense f32 layer (mask-gated,
+/// dtype-dispatched). Shared with [`crate::store::DecodePool`].
+pub(crate) fn assemble(
+    layer: &CompressedLayer,
+    planes: &[BitVecF2],
+) -> DecodedLayer {
+    let n = layer.n_weights();
+    let weights = match layer.dtype {
+        Dtype::F32 => reassemble_f32(planes, &layer.mask, n),
+        Dtype::I8 => reassemble_i8(planes, &layer.mask, n, layer.scale),
+    };
+    DecodedLayer { rows: layer.rows, cols: layer.cols, weights }
+}
+
 impl DecodedLayer {
     /// Decode + correct + reassemble a compressed layer. Lossless: the
     /// unpruned weights are bit-exact.
     pub fn from_compressed(layer: &CompressedLayer) -> Self {
-        let n = layer.n_weights();
         let dec = SequentialDecoder::random(layer.spec, layer.m_seed);
-        let mut planes: Vec<BitVecF2> = Vec::with_capacity(layer.planes.len());
-        for p in &layer.planes {
-            let mut bits = dec.decode_stream_to_bits(&p.encoded, n);
-            p.correction.apply(&mut bits);
-            if p.inverted {
-                bits.invert();
-            }
-            planes.push(bits);
-        }
-        let weights = match layer.dtype {
-            Dtype::F32 => reassemble_f32(&planes, &layer.mask, n),
-            Dtype::I8 => reassemble_i8(&planes, &layer.mask, n, layer.scale),
-        };
-        DecodedLayer { rows: layer.rows, cols: layer.cols, weights }
+        let planes: Vec<BitVecF2> = (0..layer.planes.len())
+            .map(|k| decode_plane(layer, &dec, k))
+            .collect();
+        assemble(layer, &planes)
+    }
+
+    /// Decoded dense size in bytes (what this layer costs in a
+    /// [`crate::store::ModelStore`] cache).
+    pub fn decoded_bytes(&self) -> usize {
+        self.weights.len() * std::mem::size_of::<f32>()
     }
 
     /// `y = W · x` (Algorithm 2's multiply; pruned entries are already

@@ -16,6 +16,7 @@ mod f2f_mv;
 pub use csr::CsrMatrix;
 pub use dense::{gemm, gemv, DenseMatrix};
 pub use f2f_mv::{decode_gemv, DecodedLayer};
+pub(crate) use f2f_mv::{assemble, decode_plane};
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,201 @@
+//! Multi-layer serving backend over a [`ModelStore`].
+//!
+//! Replaces the single-layer-only `NativeBackend` story: a forward pass
+//! chains GEMVs through every layer of the compressed model (ReLU between
+//! hidden layers, identity on the output layer), fetching each layer's
+//! decoded weights from the store as it goes. Under a tight cache budget
+//! the store decodes-on-miss and evicts cold layers, so models larger
+//! than the decoded-weight budget still serve.
+
+use super::ModelStore;
+use crate::coordinator::Backend;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// A sequential GEMV chain (`x → L₀ → ReLU → L₁ → … → L_{n−1}`) served
+/// from a [`ModelStore`]; implements the coordinator's [`Backend`].
+pub struct ModelBackend {
+    store: Arc<ModelStore>,
+    chain: Vec<String>,
+    input_dim: usize,
+    output_dim: usize,
+}
+
+impl ModelBackend {
+    /// Build a backend running `chain` in order. Validates that every
+    /// layer exists and consecutive dimensions line up
+    /// (`rows(Lᵢ) == cols(Lᵢ₊₁)`) using the index only — nothing is
+    /// decoded here.
+    pub fn new(store: Arc<ModelStore>, chain: Vec<String>) -> Result<Self> {
+        if chain.is_empty() {
+            bail!("model chain is empty");
+        }
+        let mut dims = Vec::with_capacity(chain.len());
+        for name in &chain {
+            let Some(d) = store.layer_dims(name) else {
+                bail!("layer {name:?} not in the model store");
+            };
+            dims.push(d);
+        }
+        for (i, w) in dims.windows(2).enumerate() {
+            let ((rows_a, _), (_, cols_b)) = (w[0], w[1]);
+            if rows_a != cols_b {
+                bail!(
+                    "chain mismatch: {} outputs {rows_a} but {} expects \
+                     {cols_b}",
+                    chain[i],
+                    chain[i + 1]
+                );
+            }
+        }
+        Ok(ModelBackend {
+            input_dim: dims[0].1,
+            output_dim: dims[dims.len() - 1].0,
+            store,
+            chain,
+        })
+    }
+
+    /// Chain every layer of the store in container order.
+    pub fn sequential(store: Arc<ModelStore>) -> Result<Self> {
+        let chain = store.layer_names();
+        Self::new(store, chain)
+    }
+
+    /// The underlying store (e.g. to read cache metrics).
+    pub fn store(&self) -> &Arc<ModelStore> {
+        &self.store
+    }
+
+    /// Layer names in forward order.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+
+    /// Warm the whole chain (first layers first, so under a tight budget
+    /// the *early* layers are hot when traffic arrives).
+    pub fn prefetch_all(&self) -> Result<()> {
+        for name in &self.chain {
+            self.store.prefetch(name)?;
+        }
+        Ok(())
+    }
+}
+
+impl Backend for ModelBackend {
+    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut acts: Vec<Vec<f32>> = xs.to_vec();
+        let last = self.chain.len() - 1;
+        for (i, name) in self.chain.iter().enumerate() {
+            // One fetch per layer per batch: every request in the batch
+            // reuses the Arc, and the LRU sees layer-granular traffic.
+            let layer = self
+                .store
+                .get(name)
+                .expect("validated layer must decode");
+            for a in acts.iter_mut() {
+                let mut y = layer.gemv(a);
+                if i < last {
+                    for v in &mut y {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                *a = y;
+            }
+        }
+        acts
+    }
+
+    fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    fn output_dim(&self) -> usize {
+        self.output_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::Container;
+    use crate::sparse::DecodedLayer;
+    use crate::store::{test_model as model, StoreConfig};
+
+    /// Reference forward pass from serially-decoded layers.
+    fn reference(c: &Container, x: &[f32]) -> Vec<f32> {
+        let mut a = x.to_vec();
+        for (i, l) in c.layers.iter().enumerate() {
+            let dec = DecodedLayer::from_compressed(l);
+            let mut y = dec.gemv(&a);
+            if i + 1 < c.layers.len() {
+                for v in &mut y {
+                    *v = v.max(0.0);
+                }
+            }
+            a = y;
+        }
+        a
+    }
+
+    #[test]
+    fn forward_matches_reference_chain() {
+        let c = model(&[20, 16, 12, 8], 7);
+        let store = Arc::new(ModelStore::from_container(
+            c.clone(),
+            StoreConfig::default(),
+        ));
+        let mut b = ModelBackend::sequential(store).unwrap();
+        assert_eq!(b.input_dim(), 20);
+        assert_eq!(b.output_dim(), 8);
+        assert_eq!(b.chain().join(","), "fc0,fc1,fc2");
+        let xs: Vec<Vec<f32>> = (0..3)
+            .map(|i| (0..20).map(|j| ((i * j) as f32 * 0.1).sin()).collect())
+            .collect();
+        let ys = b.forward_batch(&xs);
+        for (x, y) in xs.iter().zip(&ys) {
+            let want = reference(&c, x);
+            assert_eq!(y.len(), 8);
+            for (a, w) in y.iter().zip(&want) {
+                assert!((a - w).abs() < 1e-4, "{a} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_incompatible_chain() {
+        let c = model(&[20, 16, 12], 8);
+        let store = Arc::new(ModelStore::from_container(
+            c,
+            StoreConfig::default(),
+        ));
+        // Reversed order: fc1 outputs 12 but fc0 expects 20.
+        let err = ModelBackend::new(
+            store.clone(),
+            vec!["fc1".into(), "fc0".into()],
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("chain mismatch"));
+        let err = ModelBackend::new(store.clone(), vec![]).unwrap_err();
+        assert!(format!("{err}").contains("empty"));
+        let err =
+            ModelBackend::new(store, vec!["ghost".into()]).unwrap_err();
+        assert!(format!("{err}").contains("ghost"));
+    }
+
+    #[test]
+    fn prefetch_all_warms_chain() {
+        let c = model(&[16, 12, 8], 9);
+        let store = Arc::new(ModelStore::from_container(
+            c,
+            StoreConfig::default(),
+        ));
+        let b = ModelBackend::sequential(store.clone()).unwrap();
+        b.prefetch_all().unwrap();
+        assert!(store.is_cached("fc0") && store.is_cached("fc1"));
+        let m = store.metrics();
+        assert_eq!(m.decodes, 2);
+    }
+}

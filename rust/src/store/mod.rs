@@ -1,0 +1,88 @@
+//! Model store + streaming decode engine: the layer between
+//! [`crate::container`] and [`crate::coordinator`].
+//!
+//! The paper's fixed-to-fixed encoding exists so sparse weights keep a
+//! *regular* memory layout and the memory path stays fast; this module is
+//! the serving-side counterpart. A compressed model (indexed container
+//! v2) is held in memory in compressed form; decoded layers materialize
+//! on demand:
+//!
+//! * [`DecodePool`] — decodes layers across worker threads, one
+//!   `(layer, bit-plane)` work item at a time (decode-stream → correction
+//!   → invert, then a parallel reassemble phase).
+//! * [`ModelStore`] — byte-budgeted LRU cache of decoded layers with
+//!   explicit [`ModelStore::prefetch`]; models larger than the decoded
+//!   budget serve by decode-on-miss / evict-cold.
+//! * [`ModelBackend`] — a multi-layer forward pass (sequential GEMV
+//!   chain, ReLU between hidden layers) that plugs into the
+//!   coordinator's [`crate::coordinator::InferenceServer`].
+
+mod backend;
+mod model_store;
+mod pool;
+
+pub use backend::ModelBackend;
+pub use model_store::{ModelStore, StoreConfig, StoreMetrics};
+pub use pool::DecodePool;
+
+/// Build a small compressed INT8 layer chain (`dims[i+1] × dims[i]`,
+/// named `fc0..`) — shared scaffolding for the store unit tests.
+#[cfg(test)]
+pub(crate) fn test_model(
+    dims: &[usize],
+    seed: u64,
+) -> crate::container::Container {
+    use crate::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+    use crate::pipeline::{CompressionConfig, Compressor};
+    let cfg = CompressionConfig {
+        sparsity: 0.75,
+        n_s: 0,
+        ..Default::default()
+    };
+    let comp = Compressor::new(cfg);
+    let mut c = crate::container::Container::default();
+    for i in 0..dims.len() - 1 {
+        let (rows, cols) = (dims[i + 1], dims[i]);
+        let name = format!("fc{i}");
+        let spec = LayerSpec { name: name.clone(), rows, cols };
+        let layer = SyntheticLayer::generate(
+            &spec,
+            WeightGen::default(),
+            seed + i as u64,
+        );
+        let (q, scale) = quantize_i8(&layer.weights);
+        let (cl, _) = comp.compress_i8(&name, rows, cols, &q, scale);
+        c.layers.push(cl);
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::write_container_v2;
+    use std::sync::Arc;
+
+    #[test]
+    fn store_backend_pool_compose() {
+        // Smoke test across the three pieces; deeper coverage lives in
+        // the submodules and `rust/tests/store_serving.rs`.
+        let c = test_model(&[16, 12, 8], 40);
+        let bytes = write_container_v2(&c);
+        let store = Arc::new(
+            ModelStore::open_bytes(
+                bytes,
+                StoreConfig { cache_budget_bytes: usize::MAX, decode_workers: 2 },
+            )
+            .unwrap(),
+        );
+        assert_eq!(store.decode_workers(), 2);
+        assert_eq!(store.total_decoded_bytes(), (12 * 16 + 8 * 12) * 4);
+        let mut backend = ModelBackend::sequential(store.clone()).unwrap();
+        use crate::coordinator::Backend;
+        let ys = backend.forward_batch(&[vec![0.5; 16]]);
+        assert_eq!(ys.len(), 1);
+        assert_eq!(ys[0].len(), 8);
+        assert!(store.metrics().decodes == 2);
+    }
+}

@@ -1,0 +1,376 @@
+//! Byte-budgeted model store: decode-on-miss, evict-cold.
+//!
+//! Holds a compressed model (ideally an indexed v2 container, so a miss
+//! parses exactly one layer record) plus an LRU cache of decoded layers
+//! bounded by `cache_budget_bytes` of dense f32 weights. Models whose
+//! decoded size exceeds the budget still serve: a miss decodes through
+//! the [`DecodePool`], inserts, and evicts the coldest layers until the
+//! budget holds again. [`ModelStore::prefetch`] warms a layer ahead of
+//! traffic without handing the caller the weights.
+
+use super::DecodePool;
+use crate::container::{
+    read_container, read_layer_at, CompressedLayer, Container,
+    ContainerIndex,
+};
+use crate::sparse::DecodedLayer;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Store knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct StoreConfig {
+    /// Decoded-weight cache budget in bytes (`usize::MAX` = unbounded).
+    pub cache_budget_bytes: usize,
+    /// Worker threads for the decode pool (0 = size to the host).
+    pub decode_workers: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig { cache_budget_bytes: usize::MAX, decode_workers: 0 }
+    }
+}
+
+/// Cache / decode counters (monotonic since open).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreMetrics {
+    /// `get`/`prefetch` calls served from cache.
+    pub hits: u64,
+    /// Calls that had to decode.
+    pub misses: u64,
+    /// Layers decoded (== misses unless a concurrent get raced).
+    pub decodes: u64,
+    /// Layers evicted to respect the budget.
+    pub evictions: u64,
+    /// Decoded bytes currently cached.
+    pub cached_bytes: usize,
+    /// Layers currently cached.
+    pub cached_layers: usize,
+}
+
+/// Where the compressed records come from.
+enum Source {
+    /// Indexed v2 bytes: a miss parses exactly one layer record.
+    Indexed { bytes: Vec<u8>, index: ContainerIndex },
+    /// Pre-parsed layers (v1 files or in-memory containers).
+    Parsed { layers: Vec<CompressedLayer> },
+}
+
+struct CacheEntry {
+    layer: Arc<DecodedLayer>,
+    bytes: usize,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct CacheState {
+    entries: HashMap<String, CacheEntry>,
+    clock: u64,
+    cached_bytes: usize,
+    hits: u64,
+    misses: u64,
+    decodes: u64,
+    evictions: u64,
+}
+
+/// A compressed model ready to serve under a decoded-byte budget.
+pub struct ModelStore {
+    source: Source,
+    pool: DecodePool,
+    budget: usize,
+    state: Mutex<CacheState>,
+}
+
+impl ModelStore {
+    /// Open serialized container bytes (v2 stays indexed — random
+    /// access per miss; v1 is parsed eagerly but still decodes lazily).
+    pub fn open_bytes(bytes: Vec<u8>, config: StoreConfig) -> Result<Self> {
+        let source = if crate::container::is_v2(&bytes) {
+            let index = ContainerIndex::parse(&bytes)?;
+            Source::Indexed { bytes, index }
+        } else {
+            let c = read_container(&bytes)?;
+            Source::Parsed { layers: c.layers }
+        };
+        Ok(Self::from_source(source, config))
+    }
+
+    /// Wrap an in-memory container (no serialization round-trip).
+    pub fn from_container(c: Container, config: StoreConfig) -> Self {
+        Self::from_source(Source::Parsed { layers: c.layers }, config)
+    }
+
+    fn from_source(source: Source, config: StoreConfig) -> Self {
+        let pool = if config.decode_workers == 0 {
+            DecodePool::default_for_host()
+        } else {
+            DecodePool::new(config.decode_workers)
+        };
+        ModelStore {
+            source,
+            pool,
+            budget: config.cache_budget_bytes,
+            state: Mutex::new(CacheState::default()),
+        }
+    }
+
+    /// Layer names in container order (the natural forward chain).
+    pub fn layer_names(&self) -> Vec<String> {
+        match &self.source {
+            Source::Indexed { index, .. } => {
+                index.entries().iter().map(|e| e.name.clone()).collect()
+            }
+            Source::Parsed { layers } => {
+                layers.iter().map(|l| l.name.clone()).collect()
+            }
+        }
+    }
+
+    /// `(rows, cols)` of a layer, without decoding it.
+    pub fn layer_dims(&self, name: &str) -> Option<(usize, usize)> {
+        match &self.source {
+            Source::Indexed { index, .. } => {
+                index.find(name).map(|e| (e.rows, e.cols))
+            }
+            Source::Parsed { layers } => layers
+                .iter()
+                .find(|l| l.name == name)
+                .map(|l| (l.rows, l.cols)),
+        }
+    }
+
+    /// Total decoded size of the whole model in bytes.
+    pub fn total_decoded_bytes(&self) -> usize {
+        match &self.source {
+            Source::Indexed { index, .. } => index.total_decoded_bytes(),
+            Source::Parsed { layers } => layers
+                .iter()
+                .map(|l| l.n_weights() * std::mem::size_of::<f32>())
+                .sum(),
+        }
+    }
+
+    /// Cache budget in bytes.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// True if `name` is currently decoded in cache (does not touch
+    /// recency).
+    pub fn is_cached(&self, name: &str) -> bool {
+        self.state.lock().unwrap().entries.contains_key(name)
+    }
+
+    /// Fetch a decoded layer: cache hit bumps recency; miss decodes via
+    /// the pool, inserts, and evicts cold layers down to the budget.
+    pub fn get(&self, name: &str) -> Result<Arc<DecodedLayer>> {
+        {
+            let mut guard = self.state.lock().unwrap();
+            let st = &mut *guard;
+            st.clock += 1;
+            let clock = st.clock;
+            if let Some(e) = st.entries.get_mut(name) {
+                e.last_used = clock;
+                st.hits += 1;
+                return Ok(e.layer.clone());
+            }
+            st.misses += 1;
+        }
+        // Decode outside the lock so other layers keep serving.
+        let decoded = Arc::new(self.decode_miss(name)?);
+        let bytes = decoded.decoded_bytes();
+
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        st.clock += 1;
+        let clock = st.clock;
+        if let Some(e) = st.entries.get_mut(name) {
+            // A concurrent get decoded it first; keep that copy.
+            e.last_used = clock;
+            return Ok(e.layer.clone());
+        }
+        st.decodes += 1;
+        st.cached_bytes += bytes;
+        st.entries.insert(
+            name.to_string(),
+            CacheEntry { layer: decoded.clone(), bytes, last_used: clock },
+        );
+        self.evict_over_budget(st, name);
+        Ok(decoded)
+    }
+
+    /// Warm a layer into cache ahead of traffic.
+    pub fn prefetch(&self, name: &str) -> Result<()> {
+        self.get(name).map(|_| ())
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> StoreMetrics {
+        let st = self.state.lock().unwrap();
+        StoreMetrics {
+            hits: st.hits,
+            misses: st.misses,
+            decodes: st.decodes,
+            evictions: st.evictions,
+            cached_bytes: st.cached_bytes,
+            cached_layers: st.entries.len(),
+        }
+    }
+
+    /// Decode pool width (for logs).
+    pub fn decode_workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    fn decode_miss(&self, name: &str) -> Result<DecodedLayer> {
+        match &self.source {
+            Source::Indexed { bytes, index } => {
+                let Some(entry) = index.find(name) else {
+                    bail!("layer {name:?} not in container index");
+                };
+                let compressed = read_layer_at(bytes, entry)?;
+                Ok(self.pool.decode(&compressed))
+            }
+            Source::Parsed { layers } => {
+                let Some(compressed) =
+                    layers.iter().find(|l| l.name == name)
+                else {
+                    bail!("layer {name:?} not in container");
+                };
+                Ok(self.pool.decode(compressed))
+            }
+        }
+    }
+
+    /// Evict least-recently-used entries until the budget holds. The
+    /// just-inserted `keep` layer is never evicted — a single layer
+    /// bigger than the whole budget must still serve.
+    fn evict_over_budget(&self, st: &mut CacheState, keep: &str) {
+        while st.cached_bytes > self.budget && st.entries.len() > 1 {
+            let victim = st
+                .entries
+                .iter()
+                .filter(|(n, _)| n.as_str() != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(n, _)| n.clone());
+            let Some(victim) = victim else { break };
+            if let Some(e) = st.entries.remove(&victim) {
+                st.cached_bytes -= e.bytes;
+                st.evictions += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::write_container_v2;
+    use crate::store::test_model as model;
+
+    fn layer_bytes(dims: &[usize], i: usize) -> usize {
+        dims[i + 1] * dims[i] * 4
+    }
+
+    #[test]
+    fn get_matches_serial_decode() {
+        let c = model(&[16, 12, 8], 1);
+        let want: Vec<Vec<f32>> = c
+            .layers
+            .iter()
+            .map(|l| DecodedLayer::from_compressed(l).weights)
+            .collect();
+        let bytes = write_container_v2(&c);
+        let store =
+            ModelStore::open_bytes(bytes, StoreConfig::default()).unwrap();
+        assert_eq!(store.layer_names(), vec!["fc0", "fc1"]);
+        assert_eq!(store.layer_dims("fc1"), Some((8, 12)));
+        for (i, name) in ["fc0", "fc1"].iter().enumerate() {
+            assert_eq!(store.get(name).unwrap().weights, want[i]);
+        }
+        assert!(store.get("nope").is_err());
+    }
+
+    #[test]
+    fn v1_bytes_also_open() {
+        let c = model(&[16, 12], 2);
+        let want = DecodedLayer::from_compressed(&c.layers[0]).weights;
+        let bytes = crate::container::write_container(&c);
+        let store =
+            ModelStore::open_bytes(bytes, StoreConfig::default()).unwrap();
+        assert_eq!(store.get("fc0").unwrap().weights, want);
+    }
+
+    #[test]
+    fn lru_evicts_coldest_under_tight_budget() {
+        let dims = [16usize, 16, 16, 16];
+        let c = model(&dims, 3);
+        // Budget: exactly two decoded layers.
+        let budget = layer_bytes(&dims, 0) * 2;
+        let store = ModelStore::from_container(
+            c,
+            StoreConfig { cache_budget_bytes: budget, decode_workers: 1 },
+        );
+        store.get("fc0").unwrap();
+        store.get("fc1").unwrap();
+        assert!(store.is_cached("fc0") && store.is_cached("fc1"));
+        // Touch fc0 so fc1 is the coldest, then insert fc2.
+        store.get("fc0").unwrap();
+        store.get("fc2").unwrap();
+        assert!(store.is_cached("fc0"), "recently-used survives");
+        assert!(!store.is_cached("fc1"), "coldest evicted");
+        assert!(store.is_cached("fc2"));
+        let m = store.metrics();
+        assert_eq!(m.evictions, 1);
+        assert_eq!(m.cached_layers, 2);
+        assert_eq!(m.cached_bytes, budget);
+    }
+
+    #[test]
+    fn hit_and_miss_metrics() {
+        let c = model(&[16, 12, 8], 4);
+        let store = ModelStore::from_container(c, StoreConfig::default());
+        store.get("fc0").unwrap();
+        store.get("fc0").unwrap();
+        store.get("fc1").unwrap();
+        store.get("fc0").unwrap();
+        let m = store.metrics();
+        assert_eq!(m.misses, 2);
+        assert_eq!(m.hits, 2);
+        assert_eq!(m.decodes, 2);
+        assert_eq!(m.evictions, 0);
+        assert_eq!(m.cached_layers, 2);
+    }
+
+    #[test]
+    fn prefetch_then_infer_decodes_once() {
+        let c = model(&[16, 12], 5);
+        let store = ModelStore::from_container(c, StoreConfig::default());
+        store.prefetch("fc0").unwrap();
+        assert!(store.is_cached("fc0"));
+        let m = store.metrics();
+        assert_eq!(m.decodes, 1);
+        // Serving path: repeated gets never decode again.
+        for _ in 0..5 {
+            store.get("fc0").unwrap();
+        }
+        let m = store.metrics();
+        assert_eq!(m.decodes, 1, "prefetch + gets must decode exactly once");
+        assert_eq!(m.hits, 5);
+    }
+
+    #[test]
+    fn oversized_layer_still_serves() {
+        let c = model(&[16, 12], 6);
+        let store = ModelStore::from_container(
+            c,
+            StoreConfig { cache_budget_bytes: 8, decode_workers: 1 },
+        );
+        let l = store.get("fc0").unwrap();
+        assert_eq!(l.rows * l.cols, 12 * 16);
+        // Bigger than budget but it is the only entry: kept.
+        assert!(store.is_cached("fc0"));
+    }
+}

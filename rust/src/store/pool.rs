@@ -1,0 +1,248 @@
+//! Parallel streaming decode: per-plane work items over a worker pool.
+//!
+//! `DecodedLayer::from_compressed` walks a layer's planes on one thread.
+//! Planes are independent GF(2) streams, though — the paper's hardware
+//! decoder exploits exactly this with one XOR network per plane — so the
+//! software path can too. [`DecodePool`] flattens `(layer, plane)` pairs
+//! into a work queue, drains it from `workers` scoped `std::thread`s
+//! (dynamic stealing via an atomic cursor, so a 32-plane FP32 layer next
+//! to an 8-plane INT8 layer balances), then reassembles each layer's
+//! planes into dense weights in a second parallel phase.
+
+use crate::container::{CompressedLayer, Container};
+use crate::decoder::SequentialDecoder;
+use crate::gf2::BitVecF2;
+use crate::sparse::{assemble, decode_plane, DecodedLayer};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A configurable-width parallel decoder for compressed layers.
+#[derive(Debug, Clone)]
+pub struct DecodePool {
+    workers: usize,
+}
+
+impl DecodePool {
+    /// A pool with `workers` decode threads (clamped to ≥ 1).
+    pub fn new(workers: usize) -> Self {
+        DecodePool { workers: workers.max(1) }
+    }
+
+    /// A pool sized to the machine (`available_parallelism`, capped at 8
+    /// — plane decode is memory-bound and scaling flattens beyond that).
+    pub fn default_for_host() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        DecodePool::new(n.min(8))
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Decode one layer, its planes spread across the pool.
+    pub fn decode(&self, layer: &CompressedLayer) -> DecodedLayer {
+        self.decode_many(&[layer]).pop().expect("one layer in, one out")
+    }
+
+    /// Decode a batch of layers; all `(layer, plane)` pairs share one
+    /// work queue. Returns decoded layers in input order.
+    pub fn decode_many(
+        &self,
+        layers: &[&CompressedLayer],
+    ) -> Vec<DecodedLayer> {
+        if layers.is_empty() {
+            return Vec::new();
+        }
+        let decoders: Vec<SequentialDecoder> = layers
+            .iter()
+            .map(|l| SequentialDecoder::random(l.spec, l.m_seed))
+            .collect();
+        let items: Vec<(usize, usize)> = layers
+            .iter()
+            .enumerate()
+            .flat_map(|(li, l)| (0..l.planes.len()).map(move |k| (li, k)))
+            .collect();
+
+        // Serial fast path: no thread setup for a single worker.
+        if self.workers == 1 || items.len() <= 1 {
+            let mut planes: Vec<Vec<BitVecF2>> =
+                layers.iter().map(|_| Vec::new()).collect();
+            for &(li, k) in &items {
+                planes[li].push(decode_plane(layers[li], &decoders[li], k));
+            }
+            return layers
+                .iter()
+                .zip(&planes)
+                .map(|(l, p)| assemble(l, p))
+                .collect();
+        }
+
+        // Phase 1: decode planes (dynamic work stealing). Threads are
+        // scoped per call — simple and borrow-friendly; spawn cost is
+        // amortized by plane decode time, and never more threads than
+        // work items.
+        let spawn = self.workers.min(items.len());
+        let cursor = AtomicUsize::new(0);
+        let worker_outputs: Vec<Vec<(usize, BitVecF2)>> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..spawn)
+                    .map(|_| {
+                        let cursor = &cursor;
+                        let items = &items;
+                        let decoders = &decoders;
+                        s.spawn(move || {
+                            let mut out = Vec::new();
+                            loop {
+                                let i =
+                                    cursor.fetch_add(1, Ordering::Relaxed);
+                                if i >= items.len() {
+                                    break;
+                                }
+                                let (li, k) = items[i];
+                                let bits = decode_plane(
+                                    layers[li],
+                                    &decoders[li],
+                                    k,
+                                );
+                                out.push((i, bits));
+                            }
+                            out
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("decode worker panicked"))
+                    .collect()
+            });
+
+        // Collect planes back into per-layer, plane-ordered slots.
+        let mut planes: Vec<Vec<Option<BitVecF2>>> = layers
+            .iter()
+            .map(|l| vec![None; l.planes.len()])
+            .collect();
+        for (i, bits) in worker_outputs.into_iter().flatten() {
+            let (li, k) = items[i];
+            planes[li][k] = Some(bits);
+        }
+        let planes: Vec<Vec<BitVecF2>> = planes
+            .into_iter()
+            .map(|ps| {
+                ps.into_iter()
+                    .map(|p| p.expect("every plane decoded"))
+                    .collect()
+            })
+            .collect();
+
+        // Phase 2: reassemble layers in parallel (independent per layer).
+        let cursor = AtomicUsize::new(0);
+        let assembled: Vec<Vec<(usize, DecodedLayer)>> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..self.workers.min(layers.len()))
+                    .map(|_| {
+                        let cursor = &cursor;
+                        let planes = &planes;
+                        s.spawn(move || {
+                            let mut out = Vec::new();
+                            loop {
+                                let li =
+                                    cursor.fetch_add(1, Ordering::Relaxed);
+                                if li >= layers.len() {
+                                    break;
+                                }
+                                out.push((
+                                    li,
+                                    assemble(layers[li], &planes[li]),
+                                ));
+                            }
+                            out
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("assemble worker panicked"))
+                    .collect()
+            });
+        let mut result: Vec<Option<DecodedLayer>> =
+            layers.iter().map(|_| None).collect();
+        for (li, dl) in assembled.into_iter().flatten() {
+            result[li] = Some(dl);
+        }
+        result
+            .into_iter()
+            .map(|d| d.expect("every layer assembled"))
+            .collect()
+    }
+
+    /// Decode every layer of a container.
+    pub fn decode_container(&self, c: &Container) -> Vec<DecodedLayer> {
+        let refs: Vec<&CompressedLayer> = c.layers.iter().collect();
+        self.decode_many(&refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+    use crate::pipeline::{CompressionConfig, Compressor};
+
+    fn compress(name: &str, rows: usize, cols: usize, seed: u64) -> CompressedLayer {
+        let spec = LayerSpec { name: name.into(), rows, cols };
+        let layer = SyntheticLayer::generate(&spec, WeightGen::default(), seed);
+        let (q, scale) = quantize_i8(&layer.weights);
+        let cfg = CompressionConfig {
+            sparsity: 0.75,
+            n_s: 0,
+            ..Default::default()
+        };
+        let (cl, _) =
+            Compressor::new(cfg).compress_i8(name, rows, cols, &q, scale);
+        cl
+    }
+
+    #[test]
+    fn pooled_decode_matches_serial() {
+        let layers =
+            vec![compress("a", 8, 32, 1), compress("b", 6, 24, 2)];
+        let refs: Vec<&CompressedLayer> = layers.iter().collect();
+        for workers in [1, 2, 4, 7] {
+            let pool = DecodePool::new(workers);
+            let pooled = pool.decode_many(&refs);
+            assert_eq!(pooled.len(), layers.len());
+            for (p, l) in pooled.iter().zip(&layers) {
+                let serial = DecodedLayer::from_compressed(l);
+                assert_eq!(p.rows, serial.rows);
+                assert_eq!(p.cols, serial.cols);
+                assert_eq!(
+                    p.weights, serial.weights,
+                    "workers={workers} diverged on {}",
+                    l.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_layer_decode_matches_serial() {
+        let cl = compress("solo", 8, 40, 3);
+        let pool = DecodePool::new(3);
+        let pooled = pool.decode(&cl);
+        let serial = DecodedLayer::from_compressed(&cl);
+        assert_eq!(pooled.weights, serial.weights);
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        assert_eq!(DecodePool::new(0).workers(), 1);
+        assert!(DecodePool::default_for_host().workers() >= 1);
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        assert!(DecodePool::new(4).decode_many(&[]).is_empty());
+    }
+}

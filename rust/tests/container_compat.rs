@@ -1,0 +1,132 @@
+//! Container format compatibility: the v1 (`F2F1`) path must stay
+//! bit-exact through the versioned reader while v2 (`F2F2`) lands, and
+//! the two layouts must decode identically.
+
+use f2f::container::{
+    read_container, read_layer_at, write_container, write_container_v2,
+    Container, ContainerIndex,
+};
+use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+use f2f::pipeline::{CompressionConfig, Compressor};
+use f2f::sparse::DecodedLayer;
+
+/// A real 3-layer compressed model (mixed dtypes).
+fn compressed_model(seed: u64) -> Container {
+    let comp = Compressor::new(CompressionConfig {
+        sparsity: 0.8,
+        n_s: 1,
+        beam: Some(8),
+        ..Default::default()
+    });
+    let mut c = Container::default();
+    for (i, (rows, cols)) in
+        [(8usize, 40usize), (6, 32), (4, 24)].iter().enumerate()
+    {
+        let name = format!("l{i}");
+        let spec =
+            LayerSpec { name: name.clone(), rows: *rows, cols: *cols };
+        let layer = SyntheticLayer::generate(
+            &spec,
+            WeightGen::default(),
+            seed + i as u64,
+        );
+        if i == 0 {
+            let (cl, _) =
+                comp.compress_f32(&name, *rows, *cols, &layer.weights);
+            c.layers.push(cl);
+        } else {
+            let (q, scale) = quantize_i8(&layer.weights);
+            let (cl, _) =
+                comp.compress_i8(&name, *rows, *cols, &q, scale);
+            c.layers.push(cl);
+        }
+    }
+    c
+}
+
+fn decoded_bits(c: &Container) -> Vec<Vec<u32>> {
+    c.layers
+        .iter()
+        .map(|l| {
+            DecodedLayer::from_compressed(l)
+                .weights
+                .iter()
+                .map(|w| w.to_bits())
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn v1_reads_bit_exact_through_versioned_reader() {
+    // The satellite guarantee: a container written by the *existing v1
+    // writer* read through the new version-dispatching reader decodes to
+    // bit-identical weights.
+    let c = compressed_model(1);
+    let want = decoded_bits(&c);
+    let v1_bytes = write_container(&c);
+    let back = read_container(&v1_bytes).expect("v1 must stay readable");
+    assert_eq!(decoded_bits(&back), want);
+}
+
+#[test]
+fn v2_decodes_identically_to_v1() {
+    let c = compressed_model(2);
+    let v1 = read_container(&write_container(&c)).unwrap();
+    let v2 = read_container(&write_container_v2(&c)).unwrap();
+    assert_eq!(decoded_bits(&v1), decoded_bits(&v2));
+}
+
+#[test]
+fn v2_random_access_matches_full_parse() {
+    let c = compressed_model(3);
+    let bytes = write_container_v2(&c);
+    let index = ContainerIndex::parse(&bytes).unwrap();
+    // Read layers back to front — order independence is the point.
+    for name in ["l2", "l0", "l1"] {
+        let entry = index.find(name).expect("indexed");
+        let layer = read_layer_at(&bytes, entry).unwrap();
+        let full = read_container(&bytes).unwrap();
+        let want = full
+            .layers
+            .iter()
+            .find(|l| l.name == name)
+            .expect("present");
+        assert_eq!(
+            DecodedLayer::from_compressed(&layer).weights,
+            DecodedLayer::from_compressed(want).weights
+        );
+    }
+}
+
+#[test]
+fn v2_header_corruption_fails_loudly() {
+    let c = compressed_model(4);
+    let bytes = write_container_v2(&c);
+    // Magic / version / count flips must never parse as a valid model
+    // with the same inventory.
+    for i in 0..12 {
+        let mut b = bytes.clone();
+        b[i] ^= 0xFF;
+        if let Ok(parsed) = read_container(&b) {
+            assert!(
+                parsed.layers.len() != c.layers.len()
+                    || parsed.layers[0].name != c.layers[0].name,
+                "flip at byte {i} silently accepted"
+            );
+        }
+    }
+}
+
+#[test]
+fn v2_every_truncation_point_fails_cleanly() {
+    let c = compressed_model(5);
+    let bytes = write_container_v2(&c);
+    for cut in (0..bytes.len()).step_by(7) {
+        assert!(
+            read_container(&bytes[..cut]).is_err(),
+            "truncation at {cut} parsed"
+        );
+    }
+    assert!(read_container(&bytes[..bytes.len() - 1]).is_err());
+}

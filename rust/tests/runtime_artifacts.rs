@@ -18,6 +18,10 @@ const N_S: usize = 2;
 const N_OUT: usize = 80;
 
 fn artifacts() -> Option<PathBuf> {
+    if !f2f::runtime::pjrt_available() {
+        eprintln!("built without `pjrt` — skipping PJRT integration test");
+        return None;
+    }
     // Tests run from the crate root.
     let dir = Path::new("artifacts");
     if dir.join("decode_matvec_b1.hlo.txt").exists() {

@@ -1,0 +1,166 @@
+//! Integration: a whole compressed multi-layer model served end to end
+//! through container v2 + `ModelStore` + `ModelBackend` under a decoded
+//! byte budget smaller than the full model (eviction exercised), with
+//! outputs matching the serially-decoded native path.
+
+use f2f::container::{write_container_v2, Container};
+use f2f::coordinator::{InferenceServer, ServerConfig};
+use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+use f2f::pipeline::{CompressionConfig, Compressor};
+use f2f::rng::Rng;
+use f2f::sparse::DecodedLayer;
+use f2f::store::{DecodePool, ModelBackend, ModelStore, StoreConfig};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Widths of the synthetic MLP: 4 layers, decoded total 4.5 KiB.
+const DIMS: [usize; 5] = [32, 24, 16, 12, 8];
+
+fn compressed_model(seed: u64) -> Container {
+    let comp = Compressor::new(CompressionConfig {
+        sparsity: 0.75,
+        n_s: 1,
+        beam: Some(8),
+        ..Default::default()
+    });
+    let mut c = Container::default();
+    for i in 0..DIMS.len() - 1 {
+        let (rows, cols) = (DIMS[i + 1], DIMS[i]);
+        let name = format!("fc{i}");
+        let spec = LayerSpec { name: name.clone(), rows, cols };
+        let layer = SyntheticLayer::generate(
+            &spec,
+            WeightGen::default(),
+            seed + i as u64,
+        );
+        let (q, scale) = quantize_i8(&layer.weights);
+        let (cl, _) = comp.compress_i8(&name, rows, cols, &q, scale);
+        c.layers.push(cl);
+    }
+    c
+}
+
+fn reference_forward(c: &Container, x: &[f32]) -> Vec<f32> {
+    let mut a = x.to_vec();
+    for (i, l) in c.layers.iter().enumerate() {
+        let dec = DecodedLayer::from_compressed(l);
+        let mut y = dec.gemv(&a);
+        if i + 1 < c.layers.len() {
+            for v in &mut y {
+                *v = v.max(0.0);
+            }
+        }
+        a = y;
+    }
+    a
+}
+
+#[test]
+fn whole_model_serves_under_tight_budget_with_eviction() {
+    let model = compressed_model(21);
+    let decoded_total: usize =
+        model.layers.iter().map(|l| l.n_weights() * 4).sum();
+    let bytes = write_container_v2(&model);
+
+    // Budget: under half the decoded model — the LRU must evict while
+    // every request still walks all four layers.
+    let budget = decoded_total / 2;
+    let store = Arc::new(
+        ModelStore::open_bytes(
+            bytes,
+            StoreConfig {
+                cache_budget_bytes: budget,
+                decode_workers: 2,
+            },
+        )
+        .unwrap(),
+    );
+    assert!(store.total_decoded_bytes() == decoded_total);
+
+    let backend = ModelBackend::sequential(store.clone()).unwrap();
+    let server = InferenceServer::start(
+        ServerConfig {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        },
+        move || Box::new(backend),
+    );
+
+    let mut rng = Rng::new(33);
+    for _ in 0..12 {
+        let x: Vec<f32> =
+            (0..DIMS[0]).map(|_| rng.next_f32() - 0.5).collect();
+        let y = server.infer(x.clone()).unwrap();
+        let want = reference_forward(&model, &x);
+        assert_eq!(y.len(), DIMS[DIMS.len() - 1]);
+        for (a, b) in y.iter().zip(&want) {
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                "served {a} vs reference {b}"
+            );
+        }
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.errors, 0);
+    server.shutdown();
+
+    let sm = store.metrics();
+    assert!(
+        sm.evictions > 0,
+        "budget {budget} < decoded {decoded_total} must evict"
+    );
+    assert!(sm.cached_bytes <= budget, "cache respects the budget");
+    assert!(sm.decodes > 4, "cold re-decodes under eviction pressure");
+}
+
+#[test]
+fn generous_budget_decodes_each_layer_once() {
+    let model = compressed_model(22);
+    let bytes = write_container_v2(&model);
+    let store = Arc::new(
+        ModelStore::open_bytes(bytes, StoreConfig::default()).unwrap(),
+    );
+    let backend = ModelBackend::sequential(store.clone()).unwrap();
+    backend.prefetch_all().unwrap();
+    assert_eq!(store.metrics().decodes, 4);
+
+    let server = InferenceServer::start(
+        ServerConfig::default(),
+        move || Box::new(backend),
+    );
+    for i in 0..20 {
+        let x = vec![0.01 * i as f32; DIMS[0]];
+        server.infer(x).unwrap();
+    }
+    server.shutdown();
+    let sm = store.metrics();
+    assert_eq!(
+        sm.decodes, 4,
+        "prefetch + serving must never decode a layer twice"
+    );
+    assert_eq!(sm.evictions, 0);
+    assert!(sm.hits >= 20 * 4, "every layer fetch after warmup is a hit");
+}
+
+#[test]
+fn pooled_decode_equals_serial_on_served_model() {
+    let model = compressed_model(23);
+    let refs: Vec<&f2f::container::CompressedLayer> =
+        model.layers.iter().collect();
+    let pooled = DecodePool::new(4).decode_many(&refs);
+    for (p, l) in pooled.iter().zip(&model.layers) {
+        let s = DecodedLayer::from_compressed(l);
+        assert_eq!(p.weights, s.weights, "pool diverged on {}", l.name);
+    }
+}
+
+#[test]
+fn store_rejects_garbage_bytes() {
+    assert!(ModelStore::open_bytes(
+        b"not a container".to_vec(),
+        StoreConfig::default()
+    )
+    .is_err());
+}

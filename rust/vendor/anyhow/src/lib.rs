@@ -1,0 +1,177 @@
+//! Minimal, dependency-free shim of the `anyhow` 1.x API surface used by
+//! the `f2f` crate, so the workspace builds fully offline.
+//!
+//! Provides [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] macros and
+//! the [`Context`] extension trait. Error values carry a flattened
+//! context/source chain of messages: `Display` prints the outermost
+//! message, `{:#}` joins the chain with `": "` (matching anyhow), and
+//! `Debug` prints the chain as a `Caused by:` list.
+
+use std::fmt;
+
+/// A flattened error: context messages first, root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root-cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    /// Attach a context message to the error.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily-built context message to the error.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "root cause")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Error::from(io_err()).context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("bad value {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "bad value 7");
+        assert_eq!(f(false).unwrap(), 1);
+    }
+
+    #[test]
+    fn chain_is_preserved() {
+        let e = Error::from(io_err()).context("mid").context("top");
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["top", "mid", "root cause"]);
+        assert_eq!(e.root_cause(), "root cause");
+    }
+}
