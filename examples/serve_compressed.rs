@@ -9,9 +9,13 @@
 //! 3. A `ModelBackend` chains the layers (GEMV + ReLU) behind the
 //!    batching `InferenceServer`; outputs are cross-checked against the
 //!    serially-decoded native path (bit-exact weights ⇒ identical
-//!    forward up to f32 accumulation order).
-//! 4. A load test reports throughput, latency percentiles, and store
-//!    cache metrics.
+//!    forward up to f32 accumulation order). The forward pass runs the
+//!    readahead pipeline: layer `i+1` decodes on the persistent
+//!    `DecodeService` while layer `i`'s GEMV runs, and the executing
+//!    layer is pinned so readahead installs can never evict it.
+//! 4. A cold-pass comparison times decode-on-miss (readahead off)
+//!    against the overlapped pipeline, then a load test reports
+//!    throughput, latency percentiles, and store cache metrics.
 //!
 //! With `--features pjrt` (requires the external `xla` bindings and
 //! `make artifacts`), an additional single-layer cross-check runs the
@@ -28,7 +32,7 @@ use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
 use f2f::pipeline::{CompressionConfig, Compressor};
 use f2f::pruning::PruneMethod;
 use f2f::sparse::DecodedLayer;
-use f2f::store::{ModelBackend, ModelStore, StoreConfig};
+use f2f::store::{ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig};
 use std::sync::Arc;
 
 /// Layer widths of the demo MLP: 512 → 256 → 256 → 128.
@@ -93,6 +97,31 @@ fn main() -> Result<()> {
         model.memory_reduction()
     );
 
+    // --- cold-pass comparison: decode-on-miss vs readahead overlap ---
+    let probe: Vec<f32> =
+        (0..DIMS[0]).map(|j| (j as f32 * 1e-2).sin()).collect();
+    let mut cold = Vec::new();
+    for policy in [ReadaheadPolicy::off(), ReadaheadPolicy::layers(1)] {
+        use f2f::coordinator::Backend;
+        let store = Arc::new(ModelStore::open_bytes(
+            bytes.clone(),
+            StoreConfig::default(),
+        )?);
+        let mut backend = ModelBackend::sequential(store.clone())?
+            .with_readahead(policy);
+        let t0 = std::time::Instant::now();
+        backend.forward_batch(&[probe.clone()])?;
+        cold.push(t0.elapsed());
+        store.wait_for_idle();
+        assert_eq!(store.metrics().redundant_decodes, 0);
+    }
+    println!(
+        "cold pass: decode-on-miss {:?} vs readahead {:?} ({:.2}x)",
+        cold[0],
+        cold[1],
+        cold[0].as_secs_f64() / cold[1].as_secs_f64().max(1e-9),
+    );
+
     // Budget below the decoded model size: eviction is guaranteed.
     let decoded_total: usize =
         model.layers.iter().map(|l| l.n_weights() * 4).sum();
@@ -109,7 +138,8 @@ fn main() -> Result<()> {
     );
 
     // --- correctness: served output == serially decoded chain ---
-    let backend = ModelBackend::sequential(store.clone())?;
+    let backend = ModelBackend::sequential(store.clone())?
+        .with_readahead(ReadaheadPolicy::layers(1));
     let server = InferenceServer::start(
         ServerConfig {
             max_batch: 32,
@@ -175,7 +205,15 @@ fn main() -> Result<()> {
         sm.cached_bytes >> 10,
         sm.cached_layers
     );
+    println!(
+        "readahead: prefetches={} skips={} redundant_decodes={}",
+        sm.prefetches, sm.readahead_skips, sm.redundant_decodes,
+    );
     assert!(sm.evictions > 0, "budget below model size must evict");
+    assert_eq!(
+        sm.redundant_decodes, 0,
+        "in-flight dedup: a get and a readahead never double-decode"
+    );
     server.shutdown();
     println!("serve_compressed OK");
     Ok(())

@@ -1,7 +1,9 @@
-//! Model-store benchmarks: serial vs pooled decode throughput, and
-//! cold vs warm serve latency through the `ModelStore`/`ModelBackend`
-//! path. Emits machine-readable `BENCH_store.json` next to the human
-//! output to start the perf trajectory.
+//! Model-store benchmarks: serial vs pooled decode throughput, cold vs
+//! warm serve latency through the `ModelStore`/`ModelBackend` path, and
+//! the readahead pipeline (decode of layer `i+1` overlapping layer
+//! `i`'s GEMV) against the decode-on-miss serial baseline. Emits
+//! machine-readable `BENCH_store.json` next to the human output to keep
+//! the perf trajectory moving.
 
 use f2f::bench_util::{bench_with_result, black_box, JsonReport};
 use f2f::container::{write_container_v2, CompressedLayer, Container};
@@ -10,7 +12,9 @@ use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
 use f2f::pipeline::{CompressionConfig, Compressor};
 use f2f::pruning::PruneMethod;
 use f2f::sparse::DecodedLayer;
-use f2f::store::{DecodePool, ModelBackend, ModelStore, StoreConfig};
+use f2f::store::{
+    DecodePool, ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig,
+};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -109,7 +113,7 @@ fn main() {
     let x: Vec<f32> = (0..WIDTH).map(|i| (i as f32 * 0.01).sin()).collect();
 
     let cold = bench_with_result(
-        "serve cold (fresh store, full chain decode)",
+        "serve cold (fresh store, decode on miss)",
         1,
         budget,
         50,
@@ -121,26 +125,129 @@ fn main() {
                 )
                 .expect("open store"),
             );
-            let mut backend =
-                ModelBackend::sequential(store).expect("backend");
-            backend.forward_batch(std::slice::from_ref(&x))
+            let mut backend = ModelBackend::sequential(store)
+                .expect("backend")
+                .with_readahead(ReadaheadPolicy::off());
+            backend
+                .forward_batch(std::slice::from_ref(&x))
+                .expect("serve")
         },
     );
     json.add("serve_cold", &cold);
+
+    // --- cold serve, readahead pipeline vs decode-on-miss serial ---
+    // A small batch gives each layer's GEMV phase enough weight for the
+    // next layer's background decode to overlap with.
+    let batch: Vec<Vec<f32>> = (0..8)
+        .map(|i| {
+            (0..WIDTH)
+                .map(|j| ((i * WIDTH + j) as f32 * 0.01).sin())
+                .collect()
+        })
+        .collect();
+    let cold_serial = bench_with_result(
+        "serve cold serial (1 decode worker, no readahead)",
+        1,
+        budget,
+        50,
+        || {
+            let store = Arc::new(
+                ModelStore::open_bytes(
+                    bytes.clone(),
+                    StoreConfig {
+                        cache_budget_bytes: usize::MAX,
+                        decode_workers: 1,
+                    },
+                )
+                .expect("open store"),
+            );
+            let mut backend = ModelBackend::sequential(store)
+                .expect("backend")
+                .with_readahead(ReadaheadPolicy::off());
+            backend.forward_batch(black_box(&batch)).expect("serve")
+        },
+    );
+    json.add("serve_cold_serial", &cold_serial);
+    // Same worker count as the readahead series, readahead off: the
+    // honest control that isolates the overlap win from plain
+    // decode-worker parallelism.
+    let cold_parallel = bench_with_result(
+        "serve cold parallel (host workers, no readahead)",
+        1,
+        budget,
+        50,
+        || {
+            let store = Arc::new(
+                ModelStore::open_bytes(
+                    bytes.clone(),
+                    StoreConfig::default(),
+                )
+                .expect("open store"),
+            );
+            let mut backend = ModelBackend::sequential(store)
+                .expect("backend")
+                .with_readahead(ReadaheadPolicy::off());
+            backend.forward_batch(black_box(&batch)).expect("serve")
+        },
+    );
+    json.add("serve_cold_parallel", &cold_parallel);
+    let cold_readahead = bench_with_result(
+        "serve cold readahead (decode i+1 overlaps GEMV of i)",
+        1,
+        budget,
+        50,
+        || {
+            let store = Arc::new(
+                ModelStore::open_bytes(
+                    bytes.clone(),
+                    StoreConfig::default(),
+                )
+                .expect("open store"),
+            );
+            let mut backend = ModelBackend::sequential(store)
+                .expect("backend")
+                .with_readahead(ReadaheadPolicy::layers(1));
+            backend.forward_batch(black_box(&batch)).expect("serve")
+        },
+    );
+    json.add("serve_cold_readahead", &cold_readahead);
+    json.metric(
+        "serve_cold_readahead",
+        "speedup_vs_serial",
+        cold_serial.mean.as_secs_f64() / cold_readahead.mean.as_secs_f64(),
+    );
+    json.metric(
+        "serve_cold_readahead",
+        "speedup_vs_parallel_miss",
+        cold_parallel.mean.as_secs_f64()
+            / cold_readahead.mean.as_secs_f64(),
+    );
+    println!(
+        "  -> readahead cold serve {:.2}x over decode-on-miss serial, \
+         {:.2}x over same-width decode-on-miss",
+        cold_serial.mean.as_secs_f64() / cold_readahead.mean.as_secs_f64(),
+        cold_parallel.mean.as_secs_f64()
+            / cold_readahead.mean.as_secs_f64()
+    );
 
     let store = Arc::new(
         ModelStore::open_bytes(bytes.clone(), StoreConfig::default())
             .expect("open store"),
     );
-    let mut backend =
-        ModelBackend::sequential(store.clone()).expect("backend");
+    let mut backend = ModelBackend::sequential(store.clone())
+        .expect("backend")
+        .with_readahead(ReadaheadPolicy::off());
     backend.prefetch_all().expect("prefetch");
     let warm = bench_with_result(
         "serve warm (cached decoded layers)",
         1,
         budget,
         200,
-        || backend.forward_batch(black_box(std::slice::from_ref(&x))),
+        || {
+            backend
+                .forward_batch(black_box(std::slice::from_ref(&x)))
+                .expect("serve")
+        },
     );
     json.add("serve_warm", &warm);
     json.metric(
@@ -156,7 +263,7 @@ fn main() {
         cold.mean.as_secs_f64() / warm.mean.as_secs_f64()
     );
 
-    // --- budgeted serve: eviction-heavy traffic pattern ---
+    // --- budgeted serve: eviction-heavy traffic, production policy ---
     let tight = WIDTH * WIDTH * 4 * 2; // two of four layers fit
     let store = Arc::new(
         ModelStore::open_bytes(
@@ -168,21 +275,34 @@ fn main() {
         )
         .expect("open store"),
     );
-    let mut backend =
-        ModelBackend::sequential(store.clone()).expect("backend");
+    let mut backend = ModelBackend::sequential(store.clone())
+        .expect("backend")
+        .with_readahead(ReadaheadPolicy::layers(1));
     let budgeted = bench_with_result(
-        "serve budgeted (cache holds 2/4 layers)",
+        "serve budgeted (cache holds 2/4 layers, readahead on)",
         1,
         budget,
         50,
-        || backend.forward_batch(black_box(std::slice::from_ref(&x))),
+        || {
+            backend
+                .forward_batch(black_box(std::slice::from_ref(&x)))
+                .expect("serve")
+        },
     );
     json.add("serve_budgeted", &budgeted);
+    store.wait_for_idle();
     let m = store.metrics();
     json.metric("serve_budgeted", "evictions", m.evictions as f64);
+    json.metric(
+        "serve_budgeted",
+        "redundant_decodes",
+        m.redundant_decodes as f64,
+    );
     println!(
-        "  -> budgeted cache: decodes={} evictions={}",
-        m.decodes, m.evictions
+        "  -> budgeted cache: decodes={} evictions={} prefetches={} \
+         skips={} redundant={}",
+        m.decodes, m.evictions, m.prefetches, m.readahead_skips,
+        m.redundant_decodes
     );
 
     json.write("BENCH_store.json").expect("write BENCH_store.json");

@@ -169,13 +169,52 @@ pub(super) fn read_layer(r: &mut Reader) -> Result<CompressedLayer> {
     };
     let rows = r.u32()? as usize;
     let cols = r.u32()? as usize;
+    // `rows`/`cols` are untrusted: reject geometry whose decoded size
+    // would overflow `usize` (mirrors `ContainerIndex::parse`, but also
+    // covers v1 containers, which have no index) so `n_weights()`
+    // arithmetic is safe on every successfully parsed layer.
+    let decoded = (rows as u64)
+        .checked_mul(cols as u64)
+        .and_then(|n| n.checked_mul(4));
+    let sane = matches!(
+        decoded,
+        Some(d)
+            if d <= super::v2::MAX_LAYER_DECODED_BYTES
+                && usize::try_from(d).is_ok()
+    );
+    if !sane {
+        bail!(
+            "layer {name}: absurd geometry {rows}x{cols} (decoded size \
+             overflows or exceeds the per-layer cap)"
+        );
+    }
     let dtype = dtype_from_code(r.u8()?)?;
     let scale = r.f32()?;
     let n_in = r.u32()? as usize;
     let n_out = r.u32()? as usize;
     let n_s = r.u32()? as usize;
+    // `DecoderSpec::new` *asserts* these bounds; corrupt bytes must
+    // surface as an error, never a panic on the serving thread.
+    if !(1..=20).contains(&n_in)
+        || !(1..=128).contains(&n_out)
+        || n_s > 4
+        || n_in * (n_s + 1) > 60
+    {
+        bail!(
+            "layer {name}: decoder spec out of range \
+             (N_in={n_in} N_out={n_out} N_s={n_s})"
+        );
+    }
     let m_seed = r.u64()?;
     let mask = r.bitvec()?;
+    if mask.len() != rows * cols {
+        bail!(
+            "layer {name}: mask has {} bits but geometry {rows}x{cols} \
+             needs {}",
+            mask.len(),
+            rows * cols
+        );
+    }
     let n_planes = r.u32()? as usize;
     // Never pre-reserve attacker-controlled sizes (failure_injection.rs).
     let mut planes = Vec::with_capacity(n_planes.min(1024));
@@ -189,6 +228,14 @@ pub(super) fn read_layer(r: &mut Reader) -> Result<CompressedLayer> {
         let fw = r.words()?;
         let pl = r.u64()? as usize;
         let pw = r.words()?;
+        // `BitVecF2::from_words` asserts this consistency; corrupt
+        // word counts must be an error, not a panic.
+        if fw.len() != fl.div_ceil(64) || pw.len() != pl.div_ceil(64) {
+            bail!(
+                "layer {name}: correction stream word count disagrees \
+                 with its bit length"
+            );
+        }
         planes.push(CompressedPlane {
             inverted,
             encoded,
@@ -351,6 +398,48 @@ mod tests {
     fn rejects_trailing_garbage() {
         let mut bytes = write_container(&sample_container(4));
         bytes.push(0);
+        assert!(read_container(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_absurd_v1_geometry() {
+        // v1 has no index, so the record reader itself must reject
+        // rows/cols whose decoded size overflows (u32::MAX × u32::MAX).
+        let mut bytes = write_container(&sample_container(5));
+        // Layer 0's rows/cols sit after magic+version+count and the
+        // name record (4-byte len + "layer0").
+        let rows_pos = 4 + 4 + 4 + (4 + 6);
+        bytes[rows_pos..rows_pos + 8].copy_from_slice(&[0xFF; 8]);
+        let err = read_container(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("absurd geometry"), "{err}");
+    }
+
+    #[test]
+    fn rejects_corrupt_decoder_spec_without_panicking() {
+        // `DecoderSpec::new` asserts its bounds; the reader must turn a
+        // corrupt spec field into an error before reaching it.
+        let mut bytes = write_container(&sample_container(7));
+        // Layer 0's n_in sits after the name record, rows, cols, dtype
+        // and scale.
+        let n_in_pos = 4 + 4 + 4 + (4 + 6) + 4 + 4 + 1 + 4;
+        bytes[n_in_pos..n_in_pos + 4]
+            .copy_from_slice(&0u32.to_le_bytes());
+        let err = read_container(&bytes).unwrap_err();
+        assert!(
+            format!("{err}").contains("decoder spec out of range"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn rejects_mask_geometry_mismatch() {
+        // Shrinking `cols` keeps the decoded size sane but makes the
+        // (length-prefixed) mask disagree with the geometry — the
+        // reader must reject it instead of serving out-of-bounds reads.
+        let mut bytes = write_container(&sample_container(6));
+        let cols_pos = 4 + 4 + 4 + (4 + 6) + 4;
+        bytes[cols_pos..cols_pos + 4]
+            .copy_from_slice(&1u32.to_le_bytes());
         assert!(read_container(&bytes).is_err());
     }
 }

@@ -25,6 +25,12 @@ use anyhow::{bail, Result};
 
 pub(super) const MAGIC_V2: &[u8; 4] = b"F2F2";
 
+/// Hard cap on one layer's decoded (dense f32) size: 1 TiB. Anything
+/// larger in an index or record is corruption or an attack, not a
+/// model. Shared with the record reader so v1 layers get the same
+/// protection as v2 index entries.
+pub(super) const MAX_LAYER_DECODED_BYTES: u64 = 1 << 40;
+
 /// Index entry: where one layer's record lives and its summary geometry.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerEntry {
@@ -40,7 +46,8 @@ pub struct LayerEntry {
 }
 
 impl LayerEntry {
-    /// Weight count.
+    /// Weight count. Plain multiplication is safe: [`ContainerIndex::parse`]
+    /// rejects geometry whose decoded size would overflow `usize`.
     pub fn n_weights(&self) -> usize {
         self.rows * self.cols
     }
@@ -84,6 +91,28 @@ impl ContainerIndex {
             let n_planes = r.u32()? as usize;
             let offset = r.u64()? as usize;
             let len = r.u64()? as usize;
+            // `rows`/`cols` are untrusted: `n_weights`/`decoded_bytes`
+            // arithmetic downstream must never overflow `usize` (panic
+            // in debug, silent wraparound corrupting cache-budget
+            // accounting in release). Checked multiplication here, and
+            // absurd geometry is rejected outright, so plain `*` is
+            // safe everywhere after a successful parse.
+            let decoded = (rows as u64)
+                .checked_mul(cols as u64)
+                .and_then(|n| n.checked_mul(4));
+            let sane = matches!(
+                decoded,
+                Some(d)
+                    if d <= MAX_LAYER_DECODED_BYTES
+                        && usize::try_from(d).is_ok()
+            );
+            if !sane {
+                bail!(
+                    "index entry {li} ({name}): absurd geometry \
+                     {rows}x{cols} (decoded size overflows or exceeds \
+                     {MAX_LAYER_DECODED_BYTES} bytes)"
+                );
+            }
             let end = offset
                 .checked_add(len)
                 .filter(|&e| e <= bytes.len());
@@ -122,6 +151,18 @@ impl ContainerIndex {
                 "container length {} != indexed payload end {expect}",
                 bytes.len()
             );
+        }
+        // The whole-model decoded size must also stay addressable, so
+        // `total_decoded_bytes` can sum with plain arithmetic.
+        let mut total: u64 = 0;
+        for e in &entries {
+            total = match total.checked_add(e.decoded_bytes() as u64) {
+                Some(t) if usize::try_from(t).is_ok() => t,
+                _ => bail!(
+                    "index: total decoded size overflows ({} layers)",
+                    entries.len()
+                ),
+            };
         }
         Ok(ContainerIndex { entries })
     }
@@ -367,6 +408,53 @@ mod tests {
         let err = read_layer_at(&bytes, &idx.entries()[0]).unwrap_err();
         assert!(format!("{err}").contains("geometry mismatch"));
         assert!(read_container(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_geometry_whose_decoded_size_overflows() {
+        let c = sample_container(19);
+        let template = write_container_v2(&c);
+        // Entry 0's rows field sits after magic+version+count and the
+        // name record (4-byte len + "layer0"); cols follows rows.
+        let rows_pos = 4 + 4 + 4 + (4 + 6);
+        // u32::MAX × u32::MAX × 4 overflows u64: must be rejected.
+        let mut bytes = template.clone();
+        bytes[rows_pos..rows_pos + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        bytes[rows_pos + 4..rows_pos + 8]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = ContainerIndex::parse(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("absurd geometry"), "{err}");
+        // 2^20 × 2^20 × 4 = 4 TiB: no overflow, but absurd — rejected.
+        let mut bytes = template.clone();
+        bytes[rows_pos..rows_pos + 4]
+            .copy_from_slice(&(1u32 << 20).to_le_bytes());
+        bytes[rows_pos + 4..rows_pos + 8]
+            .copy_from_slice(&(1u32 << 20).to_le_bytes());
+        let err = ContainerIndex::parse(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("absurd geometry"), "{err}");
+    }
+
+    #[test]
+    fn fuzzed_index_corruption_never_panics() {
+        // Fuzz-style sweep: every byte of the index region forced to a
+        // handful of adversarial values. Parsing must reject or succeed
+        // cleanly — never panic, overflow, or over-allocate.
+        let c = sample_container(20);
+        let bytes = write_container_v2(&c);
+        let index_end = ContainerIndex::parse(&bytes).unwrap().entries()[0]
+            .offset;
+        for pos in 0..index_end {
+            for val in [0x00u8, 0x01, 0x7F, 0xFF] {
+                if bytes[pos] == val {
+                    continue;
+                }
+                let mut corrupt = bytes.clone();
+                corrupt[pos] = val;
+                let _ = ContainerIndex::parse(&corrupt);
+                let _ = read_container(&corrupt);
+            }
+        }
     }
 
     #[test]

@@ -2,13 +2,16 @@
 
 use crate::container::CompressedLayer;
 use crate::sparse::DecodedLayer;
+use anyhow::Result;
 
 /// Something that can run a batch of mat-vec requests.
 ///
 /// `&mut self` so backends may keep scratch buffers / device handles.
 pub trait Backend {
-    /// Compute `y_i = f(x_i)` for every request in the batch.
-    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Vec<Vec<f32>>;
+    /// Compute `y_i = f(x_i)` for every request in the batch. Fallible:
+    /// a store/decode failure is reported to the callers of the batch
+    /// (the server keeps serving), never a panic in the worker.
+    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
     /// Expected input length.
     fn input_dim(&self) -> usize;
     /// Produced output length.
@@ -39,8 +42,8 @@ impl NativeBackend {
 }
 
 impl Backend for NativeBackend {
-    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        xs.iter().map(|x| self.layer.gemv(x)).collect()
+    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(xs.iter().map(|x| self.layer.gemv(x)).collect())
     }
 
     fn input_dim(&self) -> usize {
@@ -65,7 +68,7 @@ mod tests {
         };
         let mut b = NativeBackend::from_decoded(layer.clone());
         let xs = vec![vec![1.0, 2.0, 3.0], vec![0.0, 1.0, 0.0]];
-        let ys = b.forward_batch(&xs);
+        let ys = b.forward_batch(&xs).unwrap();
         assert_eq!(ys[0], layer.gemv(&xs[0]));
         assert_eq!(ys[1], vec![0.0, 2.0]);
         assert_eq!(b.input_dim(), 3);

@@ -29,13 +29,17 @@ pub use server::{InferenceServer, ServerConfig};
 #[cfg(test)]
 mod tests {
     use super::*;
+    use anyhow::{bail, Result};
     use std::time::Duration;
 
     /// Echo backend for plumbing tests.
     struct Echo;
     impl Backend for Echo {
-        fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
-            xs.iter().map(|x| x.iter().map(|v| v * 2.0).collect()).collect()
+        fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Ok(xs
+                .iter()
+                .map(|x| x.iter().map(|v| v * 2.0).collect())
+                .collect())
         }
         fn input_dim(&self) -> usize {
             4
@@ -89,6 +93,49 @@ mod tests {
             || Box::new(Echo),
         );
         assert!(server.infer(vec![1.0; 3]).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn backend_errors_propagate_without_killing_the_worker() {
+        /// Errors whenever the first element of any request is negative.
+        struct Flaky;
+        impl Backend for Flaky {
+            fn forward_batch(
+                &mut self,
+                xs: &[Vec<f32>],
+            ) -> Result<Vec<Vec<f32>>> {
+                if xs.iter().any(|x| x[0] < 0.0) {
+                    bail!("poisoned batch");
+                }
+                Ok(xs.to_vec())
+            }
+            fn input_dim(&self) -> usize {
+                2
+            }
+            fn output_dim(&self) -> usize {
+                2
+            }
+        }
+        let server = InferenceServer::start(
+            ServerConfig {
+                max_batch: 1,
+                batch_timeout: Duration::from_millis(1),
+                ..Default::default()
+            },
+            || Box::new(Flaky),
+        );
+        assert_eq!(server.infer(vec![1.0, 2.0]).unwrap(), vec![1.0, 2.0]);
+        let err = server.infer(vec![-1.0, 2.0]).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("poisoned batch"),
+            "caller sees the backend's error: {err:#}"
+        );
+        // The worker survived the failed batch and keeps serving.
+        assert_eq!(server.infer(vec![3.0, 4.0]).unwrap(), vec![3.0, 4.0]);
+        let m = server.metrics();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.errors, 1);
         server.shutdown();
     }
 }

@@ -205,14 +205,27 @@ fn execute(
     inflight: &std::sync::atomic::AtomicUsize,
 ) {
     let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
-    let ys = backend.forward_batch(&xs);
-    // Record metrics *before* releasing responses so a caller that
-    // observed its reply always sees itself counted.
-    let latencies: Vec<_> =
-        batch.iter().map(|r| r.enqueued.elapsed()).collect();
-    metrics.record_batch(&latencies);
-    for (req, y) in batch.into_iter().zip(ys) {
-        inflight.fetch_sub(1, Ordering::Relaxed);
-        let _ = req.resp.send(Ok(y));
+    match backend.forward_batch(&xs) {
+        Ok(ys) => {
+            // Record metrics *before* releasing responses so a caller
+            // that observed its reply always sees itself counted.
+            let latencies: Vec<_> =
+                batch.iter().map(|r| r.enqueued.elapsed()).collect();
+            metrics.record_batch(&latencies);
+            for (req, y) in batch.into_iter().zip(ys) {
+                inflight.fetch_sub(1, Ordering::Relaxed);
+                let _ = req.resp.send(Ok(y));
+            }
+        }
+        Err(e) => {
+            // A failed batch fails its requests, not the process: every
+            // caller gets the error, the worker keeps serving.
+            let msg = format!("backend error: {e:#}");
+            for req in batch {
+                metrics.record_error();
+                inflight.fetch_sub(1, Ordering::Relaxed);
+                let _ = req.resp.send(Err(anyhow!("{msg}")));
+            }
+        }
     }
 }

@@ -35,9 +35,14 @@
 //!   parsing the whole file.
 //! * [`sparse`] — CSR + SpMV baseline (Algorithm 1) and the
 //!   decode-then-GEMV fixed-to-fixed path (Algorithm 2).
-//! * [`store`] — model store + streaming decode engine: parallel
-//!   per-plane decode ([`store::DecodePool`]), a byte-budgeted LRU of
-//!   decoded layers ([`store::ModelStore`]), and the multi-layer
+//! * [`store`] — model store + streaming decode engine: a persistent
+//!   background decode service with async submit/wait handles
+//!   ([`store::DecodeService`]; [`store::DecodePool`] remains for
+//!   one-shot bulk decodes), a byte-budgeted LRU of decoded layers as a
+//!   concurrent subsystem — in-flight decode dedup, async
+//!   `prefetch_async`, pin-while-executing ([`store::ModelStore`]) — a
+//!   [`store::ReadaheadPolicy`] that warms layer `i+1` while layer `i`
+//!   executes, and the readahead-driven multi-layer
 //!   [`store::ModelBackend`].
 //! * [`bandwidth`] — memory transaction / bandwidth-utilization simulator
 //!   (Figure 1, Appendix A).
@@ -52,12 +57,13 @@
 //! ## Serving a whole model
 //!
 //! A compressed multi-layer network serves end to end without ever
-//! materializing all of its decoded weights at once:
+//! materializing all of its decoded weights at once, with decode
+//! overlapping compute:
 //!
 //! ```no_run
 //! use f2f::container::write_container_v2;
 //! use f2f::coordinator::{InferenceServer, ServerConfig};
-//! use f2f::store::{ModelBackend, ModelStore, StoreConfig};
+//! use f2f::store::{ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig};
 //! use std::sync::Arc;
 //!
 //! # fn demo(container: f2f::container::Container) -> anyhow::Result<()> {
@@ -66,15 +72,19 @@
 //! let bytes = write_container_v2(&container);
 //!
 //! // A store with a decoded-weight budget smaller than the model:
-//! // layers decode on miss (parallel, per bit-plane) and cold layers
-//! // are evicted.
+//! // layers decode on miss (persistent workers, per bit-plane) and cold
+//! // layers are evicted; in-flight dedup means a get racing a readahead
+//! // never decodes twice.
 //! let store = Arc::new(ModelStore::open_bytes(
 //!     bytes,
 //!     StoreConfig { cache_budget_bytes: 64 << 20, decode_workers: 4 },
 //! )?);
 //!
 //! // A multi-layer GEMV chain behind the batching inference server.
-//! let backend = ModelBackend::sequential(store.clone())?;
+//! // While layer i executes (pinned — readahead installs cannot evict
+//! // it), layer i+1 decodes in the background.
+//! let backend = ModelBackend::sequential(store.clone())?
+//!     .with_readahead(ReadaheadPolicy::layers(1));
 //! let server = InferenceServer::start(ServerConfig::default(), move || {
 //!     Box::new(backend)
 //! });
@@ -109,4 +119,7 @@ pub use decoder::{DecoderSpec, SequentialDecoder};
 pub use encoder::{EncodeResult, ViterbiEncoder};
 pub use gf2::BitVecF2;
 pub use pipeline::{CompressionConfig, Compressor};
-pub use store::{DecodePool, ModelBackend, ModelStore, StoreConfig};
+pub use store::{
+    DecodePool, DecodeService, ModelBackend, ModelStore, ReadaheadPolicy,
+    StoreConfig,
+};

@@ -11,7 +11,8 @@
 //! * `f2f inspect <container>` — print a container's inventory (v1/v2).
 //! * `f2f serve [...]` — compress a multi-layer model, serve it through
 //!   the model store (`--cache-kb <n>` decoded-weight budget,
-//!   `--decode-threads <n>` pool width, `--layers`, `--width`) and run a
+//!   `--decode-threads <n>` decode-service width, `--layers`, `--width`,
+//!   `--readahead on|off|<depth>` async warm-ahead) and run a
 //!   self-driven load test.
 //! * `f2f hw --s <S> --nin <N> --ns <N>` — Appendix G hardware cost.
 
@@ -161,7 +162,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
     use f2f::pipeline::{CompressionConfig, Compressor};
     use f2f::pruning::PruneMethod;
-    use f2f::store::{ModelBackend, ModelStore, StoreConfig};
+    use f2f::store::{
+        ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig,
+    };
     use std::sync::Arc;
 
     let requests: usize = args.get("requests", 2000)?;
@@ -172,8 +175,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Decoded-weight cache budget; 0 = unbounded. Set it below the
     // model's decoded size to exercise decode-on-miss / evict-cold.
     let cache_kb: usize = args.get("cache-kb", 0)?;
-    // Decode pool width; 0 = size to the host.
+    // Decode service width; 0 = size to the host.
     let decode_threads: usize = args.get("decode-threads", 0)?;
+    // Warm layer i+1 while layer i executes: on | off | <depth>.
+    let readahead: ReadaheadPolicy =
+        args.get_str("readahead", "on").parse()?;
 
     // Compress a multi-layer MLP-shaped model into an indexed container.
     let compressor = Compressor::new(CompressionConfig {
@@ -217,7 +223,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     )?);
     println!(
-        "store: {} layers, decoded size {} KiB, budget {}, {} decode workers",
+        "store: {} layers, decoded size {} KiB, budget {}, {} decode \
+         workers, readahead depth {}",
         n_layers,
         store.total_decoded_bytes() >> 10,
         if budget == usize::MAX {
@@ -226,9 +233,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             format!("{} KiB", budget >> 10)
         },
         store.decode_workers(),
+        readahead.depth,
     );
 
-    let backend = ModelBackend::sequential(store.clone())?;
+    let backend =
+        ModelBackend::sequential(store.clone())?.with_readahead(readahead);
     let server = InferenceServer::start(
         ServerConfig { max_batch, ..Default::default() },
         move || Box::new(backend),
@@ -263,6 +272,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sm.evictions,
         sm.cached_bytes >> 10,
         sm.cached_layers,
+    );
+    println!(
+        "readahead: prefetches={} skips={} redundant_decodes={}",
+        sm.prefetches, sm.readahead_skips, sm.redundant_decodes,
     );
     server.shutdown();
     Ok(())

@@ -6,10 +6,17 @@
 //! decoded weights from the store as it goes. Under a tight cache budget
 //! the store decodes-on-miss and evicts cold layers, so models larger
 //! than the decoded-weight budget still serve.
+//!
+//! The forward pass is readahead-driven: while layer `i` executes, the
+//! layers named by the [`ReadaheadPolicy`] (by default, `i+1`, wrapping
+//! at the chain end) are warmed asynchronously, so their decode
+//! overlaps layer `i`'s GEMVs instead of following them. The executing
+//! layer is fetched *pinned* — a readahead install can never evict the
+//! layer mid-GEMV, and readahead admission counts the pinned bytes.
 
-use super::ModelStore;
+use super::{ModelStore, ReadaheadPolicy};
 use crate::coordinator::Backend;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
 /// A sequential GEMV chain (`x → L₀ → ReLU → L₁ → … → L_{n−1}`) served
@@ -17,13 +24,15 @@ use std::sync::Arc;
 pub struct ModelBackend {
     store: Arc<ModelStore>,
     chain: Vec<String>,
+    readahead: ReadaheadPolicy,
     input_dim: usize,
     output_dim: usize,
 }
 
 impl ModelBackend {
-    /// Build a backend running `chain` in order. Validates that every
-    /// layer exists and consecutive dimensions line up
+    /// Build a backend running `chain` in order, with the default
+    /// one-layer-ahead [`ReadaheadPolicy`]. Validates that every layer
+    /// exists and consecutive dimensions line up
     /// (`rows(Lᵢ) == cols(Lᵢ₊₁)`) using the index only — nothing is
     /// decoded here.
     pub fn new(store: Arc<ModelStore>, chain: Vec<String>) -> Result<Self> {
@@ -53,6 +62,7 @@ impl ModelBackend {
             output_dim: dims[dims.len() - 1].0,
             store,
             chain,
+            readahead: ReadaheadPolicy::default(),
         })
     }
 
@@ -60,6 +70,22 @@ impl ModelBackend {
     pub fn sequential(store: Arc<ModelStore>) -> Result<Self> {
         let chain = store.layer_names();
         Self::new(store, chain)
+    }
+
+    /// Replace the readahead policy (builder style).
+    pub fn with_readahead(mut self, policy: ReadaheadPolicy) -> Self {
+        self.readahead = policy;
+        self
+    }
+
+    /// Replace the readahead policy in place.
+    pub fn set_readahead(&mut self, policy: ReadaheadPolicy) {
+        self.readahead = policy;
+    }
+
+    /// The active readahead policy.
+    pub fn readahead(&self) -> ReadaheadPolicy {
+        self.readahead
     }
 
     /// The underlying store (e.g. to read cache metrics).
@@ -72,10 +98,21 @@ impl ModelBackend {
         &self.chain
     }
 
-    /// Warm the whole chain (first layers first, so under a tight budget
-    /// the *early* layers are hot when traffic arrives).
+    /// Warm the *front* of the chain: layers are fetched in forward
+    /// order but only while they fit in the budget together, so under a
+    /// tight budget the first layers — the ones traffic needs first —
+    /// are hot when it arrives. (Warming the whole chain would let the
+    /// LRU evict exactly those early layers just before traffic.) The
+    /// first layer is always warmed, budget or not.
     pub fn prefetch_all(&self) -> Result<()> {
-        for name in &self.chain {
+        let budget = self.store.budget_bytes();
+        let mut used = 0usize;
+        for (i, name) in self.chain.iter().enumerate() {
+            let bytes = self.store.layer_decoded_bytes(name).unwrap_or(0);
+            if i > 0 && used.saturating_add(bytes) > budget {
+                break;
+            }
+            used = used.saturating_add(bytes);
             self.store.prefetch(name)?;
         }
         Ok(())
@@ -83,16 +120,24 @@ impl ModelBackend {
 }
 
 impl Backend for ModelBackend {
-    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let mut acts: Vec<Vec<f32>> = xs.to_vec();
         let last = self.chain.len() - 1;
         for (i, name) in self.chain.iter().enumerate() {
-            // One fetch per layer per batch: every request in the batch
-            // reuses the Arc, and the LRU sees layer-granular traffic.
+            // One pinned fetch per layer per batch: every request in the
+            // batch reuses the Arc, the LRU sees layer-granular traffic,
+            // and readahead installs cannot evict the executing layer.
             let layer = self
                 .store
-                .get(name)
-                .expect("validated layer must decode");
+                .get_pinned(name)
+                .with_context(|| format!("fetching layer {name:?}"))?;
+            // Warm upcoming layers *while this one executes*: their
+            // decode overlaps the GEMVs below, and — because the pin is
+            // already held — readahead admission correctly accounts for
+            // the executing layer's bytes.
+            for t in self.readahead.targets(i, self.chain.len()) {
+                self.store.prefetch_async(&self.chain[t]);
+            }
             for a in acts.iter_mut() {
                 let mut y = layer.gemv(a);
                 if i < last {
@@ -105,7 +150,7 @@ impl Backend for ModelBackend {
                 *a = y;
             }
         }
-        acts
+        Ok(acts)
     }
 
     fn input_dim(&self) -> usize {
@@ -154,7 +199,7 @@ mod tests {
         let xs: Vec<Vec<f32>> = (0..3)
             .map(|i| (0..20).map(|j| ((i * j) as f32 * 0.1).sin()).collect())
             .collect();
-        let ys = b.forward_batch(&xs);
+        let ys = b.forward_batch(&xs).unwrap();
         for (x, y) in xs.iter().zip(&ys) {
             let want = reference(&c, x);
             assert_eq!(y.len(), 8);
@@ -162,6 +207,27 @@ mod tests {
                 assert!((a - w).abs() < 1e-4, "{a} vs {w}");
             }
         }
+    }
+
+    #[test]
+    fn readahead_off_matches_readahead_on() {
+        let c = model(&[20, 16, 12, 8], 17);
+        let x: Vec<f32> = (0..20).map(|j| (j as f32 * 0.2).cos()).collect();
+        let mut outs = Vec::new();
+        for policy in [ReadaheadPolicy::off(), ReadaheadPolicy::layers(2)] {
+            let store = Arc::new(ModelStore::from_container(
+                c.clone(),
+                StoreConfig::default(),
+            ));
+            let mut b = ModelBackend::sequential(store.clone())
+                .unwrap()
+                .with_readahead(policy);
+            assert_eq!(b.readahead(), policy);
+            outs.push(b.forward_batch(&[x.clone()]).unwrap());
+            store.wait_for_idle();
+            assert_eq!(store.metrics().redundant_decodes, 0);
+        }
+        assert_eq!(outs[0], outs[1], "policy must not change outputs");
     }
 
     #[test]
@@ -197,5 +263,28 @@ mod tests {
         assert!(store.is_cached("fc0") && store.is_cached("fc1"));
         let m = store.metrics();
         assert_eq!(m.decodes, 2);
+    }
+
+    #[test]
+    fn prefetch_all_keeps_early_layers_hot_under_tight_budget() {
+        // Regression: the old prefetch_all warmed the whole chain in
+        // forward order, so a tight budget evicted the *early* layers
+        // right before traffic arrived — the opposite of its contract.
+        let dims = [16usize, 16, 16, 16, 16];
+        let c = model(&dims, 10);
+        let budget = 16 * 16 * 4 * 2; // two of four layers fit
+        let store = Arc::new(ModelStore::from_container(
+            c,
+            StoreConfig { cache_budget_bytes: budget, decode_workers: 1 },
+        ));
+        let b = ModelBackend::sequential(store.clone()).unwrap();
+        b.prefetch_all().unwrap();
+        assert!(store.is_cached("fc0"), "first layer must be hot");
+        assert!(store.is_cached("fc1"));
+        assert!(!store.is_cached("fc2"), "beyond-budget layers skipped");
+        assert!(!store.is_cached("fc3"));
+        let m = store.metrics();
+        assert_eq!(m.decodes, 2, "no wasted decode-then-evict churn");
+        assert_eq!(m.evictions, 0);
     }
 }

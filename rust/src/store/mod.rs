@@ -5,25 +5,36 @@
 //! *regular* memory layout and the memory path stays fast; this module is
 //! the serving-side counterpart. A compressed model (indexed container
 //! v2) is held in memory in compressed form; decoded layers materialize
-//! on demand:
+//! on demand and *ahead of* demand:
 //!
-//! * [`DecodePool`] — decodes layers across worker threads, one
-//!   `(layer, bit-plane)` work item at a time (decode-stream → correction
-//!   → invert, then a parallel reassemble phase).
-//! * [`ModelStore`] — byte-budgeted LRU cache of decoded layers with
-//!   explicit [`ModelStore::prefetch`]; models larger than the decoded
-//!   budget serve by decode-on-miss / evict-cold.
-//! * [`ModelBackend`] — a multi-layer forward pass (sequential GEMV
-//!   chain, ReLU between hidden layers) that plugs into the
-//!   coordinator's [`crate::coordinator::InferenceServer`].
+//! * [`DecodeService`] — persistent background decode workers with
+//!   async submit/wait handles, one `(layer, bit-plane)` job at a time
+//!   (decode-stream → correction → invert, assembled by the finishing
+//!   worker). The serving hot path never spawns a thread.
+//! * [`DecodePool`] — the synchronous scoped-thread batch decoder, for
+//!   one-shot bulk decodes (benches, offline tools).
+//! * [`ModelStore`] — byte-budgeted LRU cache of decoded layers as a
+//!   concurrent subsystem: in-flight decode dedup (a get and a
+//!   readahead never double-decode), async
+//!   [`ModelStore::prefetch_async`] warming, and pin-while-executing
+//!   ([`ModelStore::get_pinned`] → [`PinnedLayer`]) so installs never
+//!   evict a layer mid-GEMV. Models larger than the decoded budget
+//!   serve by decode-on-miss / evict-cold.
+//! * [`ReadaheadPolicy`] — which layers to warm while layer `i`
+//!   executes (default: `i+1`, wrapping at the chain end).
+//! * [`ModelBackend`] — a readahead-driven multi-layer forward pass
+//!   (sequential GEMV chain, ReLU between hidden layers) that plugs
+//!   into the coordinator's [`crate::coordinator::InferenceServer`].
 
 mod backend;
 mod model_store;
 mod pool;
+mod readahead;
 
 pub use backend::ModelBackend;
-pub use model_store::{ModelStore, StoreConfig, StoreMetrics};
-pub use pool::DecodePool;
+pub use model_store::{ModelStore, PinnedLayer, StoreConfig, StoreMetrics};
+pub use pool::{DecodeHandle, DecodeOutcome, DecodePool, DecodeService};
+pub use readahead::ReadaheadPolicy;
 
 /// Build a small compressed INT8 layer chain (`dims[i+1] × dims[i]`,
 /// named `fc0..`) — shared scaffolding for the store unit tests.
@@ -80,9 +91,11 @@ mod tests {
         assert_eq!(store.total_decoded_bytes(), (12 * 16 + 8 * 12) * 4);
         let mut backend = ModelBackend::sequential(store.clone()).unwrap();
         use crate::coordinator::Backend;
-        let ys = backend.forward_batch(&[vec![0.5; 16]]);
+        let ys = backend.forward_batch(&[vec![0.5; 16]]).unwrap();
         assert_eq!(ys.len(), 1);
         assert_eq!(ys[0].len(), 8);
+        store.wait_for_idle();
         assert!(store.metrics().decodes == 2);
+        assert_eq!(store.metrics().redundant_decodes, 0);
     }
 }

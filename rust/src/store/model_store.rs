@@ -1,29 +1,45 @@
-//! Byte-budgeted model store: decode-on-miss, evict-cold.
+//! Byte-budgeted model store: decode-on-miss, evict-cold, warm-ahead.
 //!
 //! Holds a compressed model (ideally an indexed v2 container, so a miss
 //! parses exactly one layer record) plus an LRU cache of decoded layers
 //! bounded by `cache_budget_bytes` of dense f32 weights. Models whose
 //! decoded size exceeds the budget still serve: a miss decodes through
-//! the [`DecodePool`], inserts, and evicts the coldest layers until the
-//! budget holds again. [`ModelStore::prefetch`] warms a layer ahead of
-//! traffic without handing the caller the weights.
+//! the persistent [`DecodeService`], installs, and evicts the coldest
+//! layers until the budget holds again.
+//!
+//! The store is a concurrent subsystem, not just a cache:
+//!
+//! * **In-flight dedup** — every decode is registered before it starts;
+//!   a `get` racing a readahead (or another `get`) for the same layer
+//!   waits on the registered decode instead of starting a second one,
+//!   so `redundant_decodes` stays 0 by construction.
+//! * **Async readahead** — [`ModelStore::prefetch_async`] queues a
+//!   decode on the background service and returns immediately; the
+//!   finishing worker installs the layer into the cache. This is how
+//!   layer `i+1` decodes while layer `i`'s GEMV runs.
+//! * **Pin-while-executing** — [`ModelStore::get_pinned`] returns a
+//!   [`PinnedLayer`] guard; pinned entries are never chosen as eviction
+//!   victims, so a readahead install can never evict the layer that is
+//!   currently executing its GEMV. `prefetch_async` also declines
+//!   layers that cannot fit in the budget alongside the pinned working
+//!   set (`readahead_skips`).
 
-use super::DecodePool;
+use super::pool::{DecodeOutcome, DecodeService};
 use crate::container::{
     read_container, read_layer_at, CompressedLayer, Container,
     ContainerIndex,
 };
 use crate::sparse::DecodedLayer;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Store knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct StoreConfig {
     /// Decoded-weight cache budget in bytes (`usize::MAX` = unbounded).
     pub cache_budget_bytes: usize,
-    /// Worker threads for the decode pool (0 = size to the host).
+    /// Persistent decode-service worker threads (0 = size to the host).
     pub decode_workers: usize,
 }
 
@@ -38,49 +54,297 @@ impl Default for StoreConfig {
 pub struct StoreMetrics {
     /// `get`/`prefetch` calls served from cache.
     pub hits: u64,
-    /// Calls that had to decode.
+    /// `get`/`prefetch` calls that could not be served from cache
+    /// (waiting on an in-flight decode also counts as a miss).
     pub misses: u64,
-    /// Layers decoded (== misses unless a concurrent get raced).
+    /// Layers decoded and installed into the cache.
     pub decodes: u64,
     /// Layers evicted to respect the budget.
     pub evictions: u64,
+    /// Async readahead decodes issued via `prefetch_async`.
+    pub prefetches: u64,
+    /// Decodes whose result was discarded because the layer was already
+    /// cached when they finished. In-flight dedup keeps this at 0.
+    pub redundant_decodes: u64,
+    /// Readaheads declined because the layer cannot fit in the budget
+    /// alongside the currently pinned working set.
+    pub readahead_skips: u64,
     /// Decoded bytes currently cached.
     pub cached_bytes: usize,
     /// Layers currently cached.
     pub cached_layers: usize,
+    /// Decoded bytes currently pinned by executing layers.
+    pub pinned_bytes: usize,
 }
 
 /// Where the compressed records come from.
 enum Source {
     /// Indexed v2 bytes: a miss parses exactly one layer record.
     Indexed { bytes: Vec<u8>, index: ContainerIndex },
-    /// Pre-parsed layers (v1 files or in-memory containers).
-    Parsed { layers: Vec<CompressedLayer> },
+    /// Pre-parsed layers (v1 files or in-memory containers), shared
+    /// with decode jobs by refcount rather than deep copy.
+    Parsed { layers: Vec<Arc<CompressedLayer>> },
 }
 
 struct CacheEntry {
     layer: Arc<DecodedLayer>,
     bytes: usize,
     last_used: u64,
+    /// Active [`PinnedLayer`] guards; a pinned entry is never evicted.
+    pins: usize,
+}
+
+/// A decode that has been registered but not yet installed. Waiters
+/// block on the condvar; the installing worker completes it with a
+/// [`DecodeOutcome`] (errors travel as strings so every waiter shares
+/// them — `anyhow::Error` is not `Clone`).
+#[derive(Default)]
+struct InFlight {
+    done: Mutex<Option<DecodeOutcome>>,
+    cv: Condvar,
+}
+
+impl InFlight {
+    fn complete(&self, result: DecodeOutcome) {
+        *self.done.lock().unwrap() = Some(result);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> DecodeOutcome {
+        let mut done = self.done.lock().unwrap();
+        loop {
+            if let Some(r) = done.as_ref() {
+                return r.clone();
+            }
+            done = self.cv.wait(done).unwrap();
+        }
+    }
 }
 
 #[derive(Default)]
 struct CacheState {
     entries: HashMap<String, CacheEntry>,
+    in_flight: HashMap<String, Arc<InFlight>>,
     clock: u64,
     cached_bytes: usize,
+    pinned_bytes: usize,
+    /// Decoded bytes of registered-but-uninstalled decodes; readahead
+    /// admission counts these so depth ≥ 2 warms cannot be admitted
+    /// past the budget and evict each other before use.
+    in_flight_bytes: usize,
     hits: u64,
     misses: u64,
     decodes: u64,
     evictions: u64,
+    prefetches: u64,
+    redundant_decodes: u64,
+    readahead_skips: u64,
+}
+
+/// Shared core: the compressed source plus the cache state. Completion
+/// callbacks running on decode workers hold their own `Arc` of this, so
+/// installs outlive any particular caller.
+struct StoreInner {
+    source: Source,
+    budget: usize,
+    state: Mutex<CacheState>,
+    /// Signalled whenever an in-flight registration is removed, so
+    /// [`ModelStore::wait_for_idle`] can block instead of polling.
+    idle: Condvar,
+}
+
+impl StoreInner {
+    /// Parse (or refcount-share) the compressed record for `name`.
+    fn compressed_layer(&self, name: &str) -> Result<Arc<CompressedLayer>> {
+        match &self.source {
+            Source::Indexed { bytes, index } => {
+                let Some(entry) = index.find(name) else {
+                    bail!("layer {name:?} not in container index");
+                };
+                read_layer_at(bytes, entry).map(Arc::new)
+            }
+            Source::Parsed { layers } => {
+                let Some(compressed) =
+                    layers.iter().find(|l| l.name == name)
+                else {
+                    bail!("layer {name:?} not in container");
+                };
+                Ok(compressed.clone())
+            }
+        }
+    }
+
+    /// Decoded (dense f32) size of a layer, from the index only.
+    fn layer_decoded_bytes(&self, name: &str) -> Option<usize> {
+        match &self.source {
+            Source::Indexed { index, .. } => {
+                index.find(name).map(|e| e.decoded_bytes())
+            }
+            Source::Parsed { layers } => layers
+                .iter()
+                .find(|l| l.name == name)
+                .map(|l| l.n_weights() * std::mem::size_of::<f32>()),
+        }
+    }
+
+    /// Install a finished decode, then release its waiters. Runs on the
+    /// decode worker that finished the layer's last plane.
+    fn install(
+        &self,
+        name: &str,
+        decoded: Arc<DecodedLayer>,
+        flight: &InFlight,
+    ) {
+        let bytes = decoded.decoded_bytes();
+        let result = {
+            let mut guard = self.state.lock().unwrap();
+            let st = &mut *guard;
+            st.clock += 1;
+            let clock = st.clock;
+            if st.in_flight.remove(name).is_some() {
+                st.in_flight_bytes =
+                    st.in_flight_bytes.saturating_sub(bytes);
+            }
+            if let Some(e) = st.entries.get_mut(name) {
+                // Someone installed this layer while we decoded. With
+                // in-flight dedup this path is unreachable; count it so
+                // a regression is visible in metrics.
+                e.last_used = clock;
+                st.redundant_decodes += 1;
+                e.layer.clone()
+            } else {
+                st.decodes += 1;
+                st.cached_bytes += bytes;
+                st.entries.insert(
+                    name.to_string(),
+                    CacheEntry {
+                        layer: decoded.clone(),
+                        bytes,
+                        last_used: clock,
+                        pins: 0,
+                    },
+                );
+                self.evict_over_budget(st, Some(name));
+                decoded
+            }
+        };
+        self.idle.notify_all();
+        flight.complete(Ok(result));
+    }
+
+    /// A decode failed (unparseable record, or a worker job panicked on
+    /// malformed data): release every waiter with the error and clear
+    /// the registration so a later fetch can retry from scratch.
+    fn abort(&self, name: &str, msg: String, flight: &InFlight) {
+        {
+            let mut guard = self.state.lock().unwrap();
+            let st = &mut *guard;
+            if st.in_flight.remove(name).is_some() {
+                let need = self.layer_decoded_bytes(name).unwrap_or(0);
+                st.in_flight_bytes =
+                    st.in_flight_bytes.saturating_sub(need);
+            }
+        }
+        self.idle.notify_all();
+        flight.complete(Err(msg));
+    }
+
+    /// Evict least-recently-used entries until the budget holds. The
+    /// just-inserted `keep` layer (if any), all pinned layers, and the
+    /// last remaining entry are never evicted — a single layer bigger
+    /// than the whole budget must still serve (and stay resident
+    /// between batches, not re-decode every pass), and a layer mid-GEMV
+    /// must never vanish under readahead install pressure.
+    fn evict_over_budget(&self, st: &mut CacheState, keep: Option<&str>) {
+        while st.cached_bytes > self.budget && st.entries.len() > 1 {
+            let victim = st
+                .entries
+                .iter()
+                .filter(|(n, e)| {
+                    Some(n.as_str()) != keep && e.pins == 0
+                })
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(n, _)| n.clone());
+            let Some(victim) = victim else { break };
+            if let Some(e) = st.entries.remove(&victim) {
+                st.cached_bytes -= e.bytes;
+                st.evictions += 1;
+            }
+        }
+    }
+}
+
+/// A decoded layer held hot for the duration of a use (e.g. one layer's
+/// GEMVs over a batch). Dropping the guard unpins.
+pub struct PinnedLayer {
+    inner: Arc<StoreInner>,
+    name: String,
+    layer: Arc<DecodedLayer>,
+    /// Whether this guard actually took a pin on the cache entry (the
+    /// eviction-window race can hand out an unpinned guard); only a
+    /// taken pin may be released on drop.
+    pinned: bool,
+}
+
+impl PinnedLayer {
+    /// The pinned decoded layer.
+    pub fn layer(&self) -> &Arc<DecodedLayer> {
+        &self.layer
+    }
+
+    /// The layer's name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+impl std::ops::Deref for PinnedLayer {
+    type Target = DecodedLayer;
+
+    fn deref(&self) -> &DecodedLayer {
+        &self.layer
+    }
+}
+
+impl Drop for PinnedLayer {
+    fn drop(&mut self) {
+        if !self.pinned {
+            // This guard never took a pin; decrementing here would
+            // steal a pin another caller still holds.
+            return;
+        }
+        let mut guard = self.inner.state.lock().unwrap();
+        let st = &mut *guard;
+        let mut released = false;
+        if let Some(e) = st.entries.get_mut(&self.name) {
+            if e.pins > 0 {
+                e.pins -= 1;
+                if e.pins == 0 {
+                    st.pinned_bytes -= e.bytes;
+                    released = true;
+                }
+            }
+        }
+        if released {
+            // Budget overshoot tolerated while the layer executed is
+            // repaid the moment its last pin releases — the cache may
+            // not sit over budget between batches.
+            self.inner.evict_over_budget(st, None);
+        }
+    }
+}
+
+/// How a fetch resolves under the state lock.
+enum Fetch {
+    Hit(Arc<DecodedLayer>),
+    Wait(Arc<InFlight>),
+    Decode(Arc<InFlight>),
 }
 
 /// A compressed model ready to serve under a decoded-byte budget.
 pub struct ModelStore {
-    source: Source,
-    pool: DecodePool,
-    budget: usize,
-    state: Mutex<CacheState>,
+    inner: Arc<StoreInner>,
+    service: DecodeService,
 }
 
 impl ModelStore {
@@ -92,33 +356,43 @@ impl ModelStore {
             Source::Indexed { bytes, index }
         } else {
             let c = read_container(&bytes)?;
-            Source::Parsed { layers: c.layers }
+            Source::Parsed {
+                layers: c.layers.into_iter().map(Arc::new).collect(),
+            }
         };
         Ok(Self::from_source(source, config))
     }
 
     /// Wrap an in-memory container (no serialization round-trip).
     pub fn from_container(c: Container, config: StoreConfig) -> Self {
-        Self::from_source(Source::Parsed { layers: c.layers }, config)
+        Self::from_source(
+            Source::Parsed {
+                layers: c.layers.into_iter().map(Arc::new).collect(),
+            },
+            config,
+        )
     }
 
     fn from_source(source: Source, config: StoreConfig) -> Self {
-        let pool = if config.decode_workers == 0 {
-            DecodePool::default_for_host()
+        let service = if config.decode_workers == 0 {
+            DecodeService::default_for_host()
         } else {
-            DecodePool::new(config.decode_workers)
+            DecodeService::new(config.decode_workers)
         };
         ModelStore {
-            source,
-            pool,
-            budget: config.cache_budget_bytes,
-            state: Mutex::new(CacheState::default()),
+            inner: Arc::new(StoreInner {
+                source,
+                budget: config.cache_budget_bytes,
+                state: Mutex::new(CacheState::default()),
+                idle: Condvar::new(),
+            }),
+            service,
         }
     }
 
     /// Layer names in container order (the natural forward chain).
     pub fn layer_names(&self) -> Vec<String> {
-        match &self.source {
+        match &self.inner.source {
             Source::Indexed { index, .. } => {
                 index.entries().iter().map(|e| e.name.clone()).collect()
             }
@@ -130,7 +404,7 @@ impl ModelStore {
 
     /// `(rows, cols)` of a layer, without decoding it.
     pub fn layer_dims(&self, name: &str) -> Option<(usize, usize)> {
-        match &self.source {
+        match &self.inner.source {
             Source::Indexed { index, .. } => {
                 index.find(name).map(|e| (e.rows, e.cols))
             }
@@ -141,9 +415,14 @@ impl ModelStore {
         }
     }
 
+    /// Decoded (dense f32) size of one layer in bytes, without decoding.
+    pub fn layer_decoded_bytes(&self, name: &str) -> Option<usize> {
+        self.inner.layer_decoded_bytes(name)
+    }
+
     /// Total decoded size of the whole model in bytes.
     pub fn total_decoded_bytes(&self) -> usize {
-        match &self.source {
+        match &self.inner.source {
             Source::Indexed { index, .. } => index.total_decoded_bytes(),
             Source::Parsed { layers } => layers
                 .iter()
@@ -154,113 +433,198 @@ impl ModelStore {
 
     /// Cache budget in bytes.
     pub fn budget_bytes(&self) -> usize {
-        self.budget
+        self.inner.budget
     }
 
     /// True if `name` is currently decoded in cache (does not touch
     /// recency).
     pub fn is_cached(&self, name: &str) -> bool {
-        self.state.lock().unwrap().entries.contains_key(name)
+        self.inner.state.lock().unwrap().entries.contains_key(name)
     }
 
-    /// Fetch a decoded layer: cache hit bumps recency; miss decodes via
-    /// the pool, inserts, and evicts cold layers down to the budget.
+    /// Fetch a decoded layer: cache hit bumps recency; miss joins the
+    /// in-flight decode if one is running, else starts one on the
+    /// background service and waits for its install.
     pub fn get(&self, name: &str) -> Result<Arc<DecodedLayer>> {
-        {
-            let mut guard = self.state.lock().unwrap();
-            let st = &mut *guard;
-            st.clock += 1;
-            let clock = st.clock;
-            if let Some(e) = st.entries.get_mut(name) {
-                e.last_used = clock;
-                st.hits += 1;
-                return Ok(e.layer.clone());
+        match self.lookup(name) {
+            Fetch::Hit(layer) => Ok(layer),
+            Fetch::Wait(flight) => {
+                flight.wait().map_err(|e| anyhow!("{e}"))
             }
-            st.misses += 1;
+            Fetch::Decode(flight) => {
+                self.start_decode(name, flight.clone());
+                flight.wait().map_err(|e| anyhow!("{e}"))
+            }
         }
-        // Decode outside the lock so other layers keep serving.
-        let decoded = Arc::new(self.decode_miss(name)?);
-        let bytes = decoded.decoded_bytes();
+    }
 
-        let mut guard = self.state.lock().unwrap();
+    /// Fetch a layer and pin it for the duration of the returned guard:
+    /// while pinned it is never an eviction victim, so background
+    /// readahead installs cannot evict the layer mid-execution.
+    pub fn get_pinned(&self, name: &str) -> Result<PinnedLayer> {
+        let layer = self.get(name)?;
+        let mut guard = self.inner.state.lock().unwrap();
         let st = &mut *guard;
         st.clock += 1;
         let clock = st.clock;
-        if let Some(e) = st.entries.get_mut(name) {
-            // A concurrent get decoded it first; keep that copy.
+        let pinned = if let Some(e) = st.entries.get_mut(name) {
             e.last_used = clock;
-            return Ok(e.layer.clone());
-        }
-        st.decodes += 1;
-        st.cached_bytes += bytes;
-        st.entries.insert(
-            name.to_string(),
-            CacheEntry { layer: decoded.clone(), bytes, last_used: clock },
-        );
-        self.evict_over_budget(st, name);
-        Ok(decoded)
+            e.pins += 1;
+            if e.pins == 1 {
+                st.pinned_bytes += e.bytes;
+            }
+            true
+        } else if st.in_flight.contains_key(name) {
+            // Evicted in the window since `get` returned, and another
+            // caller has already registered a fresh decode: let that
+            // install own the cache slot rather than race it with a
+            // reinstatement (keeps `redundant_decodes` at 0). The Arc
+            // we hold still serves this batch; only residency differs.
+            false
+        } else {
+            // Evicted in the window since `get` returned: reinstate it
+            // pinned — it is about to execute, the hottest possible use.
+            let bytes = layer.decoded_bytes();
+            st.cached_bytes += bytes;
+            st.pinned_bytes += bytes;
+            st.entries.insert(
+                name.to_string(),
+                CacheEntry {
+                    layer: layer.clone(),
+                    bytes,
+                    last_used: clock,
+                    pins: 1,
+                },
+            );
+            self.inner.evict_over_budget(st, Some(name));
+            true
+        };
+        drop(guard);
+        Ok(PinnedLayer {
+            inner: self.inner.clone(),
+            name: name.to_string(),
+            layer,
+            pinned,
+        })
     }
 
-    /// Warm a layer into cache ahead of traffic.
+    /// Warm a layer into cache ahead of traffic, blocking until decoded.
     pub fn prefetch(&self, name: &str) -> Result<()> {
         self.get(name).map(|_| ())
     }
 
+    /// Warm a layer *asynchronously*: queue a decode on the background
+    /// service and return immediately. Returns `true` when the layer is
+    /// already warm, already decoding, or a decode was started; `false`
+    /// when the readahead was declined (unknown layer, or it cannot fit
+    /// in the budget alongside the pinned working set).
+    pub fn prefetch_async(&self, name: &str) -> bool {
+        let flight = {
+            let mut guard = self.inner.state.lock().unwrap();
+            let st = &mut *guard;
+            if st.entries.contains_key(name)
+                || st.in_flight.contains_key(name)
+            {
+                return true; // warm or already decoding: dedup
+            }
+            let Some(need) = self.inner.layer_decoded_bytes(name) else {
+                return false; // unknown layer: a blocking get reports it
+            };
+            // Admission: the layer must fit in the budget alongside the
+            // pinned working set *and* every decode already in flight —
+            // otherwise deep readahead admits warms that evict each
+            // other before use.
+            let committed =
+                st.pinned_bytes.saturating_add(st.in_flight_bytes);
+            if need.saturating_add(committed) > self.inner.budget {
+                st.readahead_skips += 1;
+                return false;
+            }
+            st.prefetches += 1;
+            let flight = Arc::new(InFlight::default());
+            st.in_flight.insert(name.to_string(), flight.clone());
+            st.in_flight_bytes = st.in_flight_bytes.saturating_add(need);
+            flight
+        };
+        self.start_decode(name, flight);
+        true
+    }
+
+    /// Register-then-submit: the caller must already hold the in-flight
+    /// registration for `name` (see [`Self::lookup`] /
+    /// [`Self::prefetch_async`]).
+    fn start_decode(&self, name: &str, flight: Arc<InFlight>) {
+        match self.inner.compressed_layer(name) {
+            Err(e) => {
+                self.inner.abort(name, format!("{e:#}"), &flight);
+            }
+            Ok(layer) => {
+                let inner = self.inner.clone();
+                let key = name.to_string();
+                let _handle =
+                    self.service.decode_async_then(layer, move |outcome| {
+                        match outcome {
+                            Ok(decoded) => {
+                                inner.install(&key, decoded, &flight)
+                            }
+                            Err(msg) => inner.abort(&key, msg, &flight),
+                        }
+                    });
+            }
+        }
+    }
+
+    fn lookup(&self, name: &str) -> Fetch {
+        let mut guard = self.inner.state.lock().unwrap();
+        let st = &mut *guard;
+        st.clock += 1;
+        let clock = st.clock;
+        if let Some(e) = st.entries.get_mut(name) {
+            e.last_used = clock;
+            st.hits += 1;
+            return Fetch::Hit(e.layer.clone());
+        }
+        st.misses += 1;
+        if let Some(flight) = st.in_flight.get(name) {
+            Fetch::Wait(flight.clone())
+        } else {
+            let flight = Arc::new(InFlight::default());
+            st.in_flight.insert(name.to_string(), flight.clone());
+            st.in_flight_bytes = st.in_flight_bytes.saturating_add(
+                self.inner.layer_decoded_bytes(name).unwrap_or(0),
+            );
+            Fetch::Decode(flight)
+        }
+    }
+
+    /// Block until no decode is in flight (test / drain aid).
+    pub fn wait_for_idle(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        while !st.in_flight.is_empty() {
+            st = self.inner.idle.wait(st).unwrap();
+        }
+    }
+
     /// Metrics snapshot.
     pub fn metrics(&self) -> StoreMetrics {
-        let st = self.state.lock().unwrap();
+        let st = self.inner.state.lock().unwrap();
         StoreMetrics {
             hits: st.hits,
             misses: st.misses,
             decodes: st.decodes,
             evictions: st.evictions,
+            prefetches: st.prefetches,
+            redundant_decodes: st.redundant_decodes,
+            readahead_skips: st.readahead_skips,
             cached_bytes: st.cached_bytes,
             cached_layers: st.entries.len(),
+            pinned_bytes: st.pinned_bytes,
         }
     }
 
-    /// Decode pool width (for logs).
+    /// Decode service width (for logs).
     pub fn decode_workers(&self) -> usize {
-        self.pool.workers()
-    }
-
-    fn decode_miss(&self, name: &str) -> Result<DecodedLayer> {
-        match &self.source {
-            Source::Indexed { bytes, index } => {
-                let Some(entry) = index.find(name) else {
-                    bail!("layer {name:?} not in container index");
-                };
-                let compressed = read_layer_at(bytes, entry)?;
-                Ok(self.pool.decode(&compressed))
-            }
-            Source::Parsed { layers } => {
-                let Some(compressed) =
-                    layers.iter().find(|l| l.name == name)
-                else {
-                    bail!("layer {name:?} not in container");
-                };
-                Ok(self.pool.decode(compressed))
-            }
-        }
-    }
-
-    /// Evict least-recently-used entries until the budget holds. The
-    /// just-inserted `keep` layer is never evicted — a single layer
-    /// bigger than the whole budget must still serve.
-    fn evict_over_budget(&self, st: &mut CacheState, keep: &str) {
-        while st.cached_bytes > self.budget && st.entries.len() > 1 {
-            let victim = st
-                .entries
-                .iter()
-                .filter(|(n, _)| n.as_str() != keep)
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(n, _)| n.clone());
-            let Some(victim) = victim else { break };
-            if let Some(e) = st.entries.remove(&victim) {
-                st.cached_bytes -= e.bytes;
-                st.evictions += 1;
-            }
-        }
+        self.service.workers()
     }
 }
 
@@ -287,9 +651,12 @@ mod tests {
             ModelStore::open_bytes(bytes, StoreConfig::default()).unwrap();
         assert_eq!(store.layer_names(), vec!["fc0", "fc1"]);
         assert_eq!(store.layer_dims("fc1"), Some((8, 12)));
+        assert_eq!(store.layer_decoded_bytes("fc0"), Some(12 * 16 * 4));
         for (i, name) in ["fc0", "fc1"].iter().enumerate() {
             assert_eq!(store.get(name).unwrap().weights, want[i]);
         }
+        // Misses on unknown layers error, clean up, and keep erroring.
+        assert!(store.get("nope").is_err());
         assert!(store.get("nope").is_err());
     }
 
@@ -342,6 +709,7 @@ mod tests {
         assert_eq!(m.decodes, 2);
         assert_eq!(m.evictions, 0);
         assert_eq!(m.cached_layers, 2);
+        assert_eq!(m.redundant_decodes, 0);
     }
 
     #[test]
@@ -372,5 +740,150 @@ mod tests {
         assert_eq!(l.rows * l.cols, 12 * 16);
         // Bigger than budget but it is the only entry: kept.
         assert!(store.is_cached("fc0"));
+    }
+
+    #[test]
+    fn concurrent_gets_decode_once() {
+        let c = model(&[16, 12], 30);
+        let store = Arc::new(ModelStore::from_container(
+            c,
+            StoreConfig::default(),
+        ));
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let threads: Vec<_> = (0..2)
+            .map(|_| {
+                let store = store.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    store.get("fc0").unwrap().weights.clone()
+                })
+            })
+            .collect();
+        let results: Vec<Vec<f32>> = threads
+            .into_iter()
+            .map(|t| t.join().expect("getter thread"))
+            .collect();
+        assert_eq!(results[0], results[1]);
+        let m = store.metrics();
+        assert_eq!(m.decodes, 1, "in-flight dedup must decode once");
+        assert_eq!(m.redundant_decodes, 0);
+        assert_eq!(m.hits + m.misses, 2);
+    }
+
+    #[test]
+    fn prefetch_async_installs_and_dedups() {
+        let c = model(&[16, 12], 33);
+        let store = ModelStore::from_container(c, StoreConfig::default());
+        assert!(store.prefetch_async("fc0"));
+        assert!(store.prefetch_async("fc0"), "warm/in-flight is a no-op");
+        store.wait_for_idle();
+        assert!(store.is_cached("fc0"));
+        let m = store.metrics();
+        assert_eq!(m.decodes, 1);
+        assert_eq!(m.prefetches, 1);
+        assert_eq!(m.redundant_decodes, 0);
+        // Async warming is not caller traffic: no hit/miss accounting.
+        assert_eq!(m.hits + m.misses, 0);
+        let l = store.get("fc0").unwrap();
+        assert_eq!(l.rows * l.cols, 12 * 16);
+        assert_eq!(store.metrics().hits, 1);
+    }
+
+    #[test]
+    fn pinned_layer_survives_install_pressure() {
+        let dims = [16usize, 16, 16, 16];
+        let c = model(&dims, 31);
+        let budget = layer_bytes(&dims, 0) * 2; // two layers fit
+        let store = ModelStore::from_container(
+            c,
+            StoreConfig { cache_budget_bytes: budget, decode_workers: 1 },
+        );
+        let pinned = store.get_pinned("fc0").unwrap();
+        assert_eq!(pinned.rows * pinned.cols, 16 * 16);
+        // Warm fc1 (fits beside the pin), then fc2: its install must
+        // evict fc1 — never the pinned fc0, although fc0 is LRU-oldest.
+        assert!(store.prefetch_async("fc1"));
+        store.wait_for_idle();
+        assert!(store.prefetch_async("fc2"));
+        store.wait_for_idle();
+        assert!(store.is_cached("fc0"), "pinned layer never evicted");
+        assert!(!store.is_cached("fc1"), "unpinned LRU evicted instead");
+        assert!(store.is_cached("fc2"));
+        assert_eq!(store.metrics().pinned_bytes, layer_bytes(&dims, 0));
+        drop(pinned);
+        assert_eq!(store.metrics().pinned_bytes, 0);
+        // Unpinned again: the next install may evict fc0 normally.
+        store.get("fc1").unwrap();
+        assert!(!store.is_cached("fc0"), "oldest unpinned layer evicts");
+    }
+
+    #[test]
+    fn panicking_decode_surfaces_as_error_not_hang() {
+        // A malformed plane makes the decode job panic; the store must
+        // turn that into an error for every waiter (never a hang, never
+        // a dead worker) and keep serving other layers.
+        let mut c = model(&[16, 12, 8], 34);
+        c.layers[0].planes[0].encoded[0] = u32::MAX;
+        let store = ModelStore::from_container(
+            c,
+            StoreConfig {
+                cache_budget_bytes: usize::MAX,
+                decode_workers: 1,
+            },
+        );
+        assert!(store.get("fc0").is_err(), "decode panic must surface");
+        store.wait_for_idle();
+        assert!(!store.is_cached("fc0"));
+        // The single worker survived: the healthy layer still decodes.
+        assert!(store.get("fc1").is_ok());
+        assert!(store.is_cached("fc1"));
+    }
+
+    #[test]
+    fn pin_overshoot_is_repaid_on_unpin() {
+        let dims = [16usize, 16, 16];
+        let c = model(&dims, 35);
+        let budget = layer_bytes(&dims, 0); // exactly one layer
+        let store = ModelStore::from_container(
+            c,
+            StoreConfig { cache_budget_bytes: budget, decode_workers: 1 },
+        );
+        let pin = store.get_pinned("fc0").unwrap();
+        // A demand fetch while fc0 is pinned finds no eviction victim:
+        // the budget is overshot rather than evicting mid-GEMV...
+        store.get("fc1").unwrap();
+        let m = store.metrics();
+        assert_eq!(m.cached_bytes, budget * 2, "overshoot while pinned");
+        assert_eq!(m.evictions, 0);
+        // ...and repaid the moment the last pin releases.
+        drop(pin);
+        let m = store.metrics();
+        assert_eq!(m.cached_bytes, budget);
+        assert!(!store.is_cached("fc0"), "stale layer evicted to repay");
+        assert!(store.is_cached("fc1"));
+        assert_eq!(m.pinned_bytes, 0);
+    }
+
+    #[test]
+    fn readahead_skipped_when_it_cannot_fit_beside_pins() {
+        let dims = [16usize, 16, 16];
+        let c = model(&dims, 32);
+        let budget = layer_bytes(&dims, 0); // exactly one layer
+        let store = ModelStore::from_container(
+            c,
+            StoreConfig { cache_budget_bytes: budget, decode_workers: 1 },
+        );
+        let _pin = store.get_pinned("fc0").unwrap();
+        assert!(
+            !store.prefetch_async("fc1"),
+            "fc1 cannot fit beside the pin"
+        );
+        let m = store.metrics();
+        assert_eq!(m.readahead_skips, 1);
+        assert_eq!(m.prefetches, 0);
+        assert!(store.is_cached("fc0") && !store.is_cached("fc1"));
+        // Unknown layers are declined too (a blocking get reports them).
+        assert!(!store.prefetch_async("ghost"));
     }
 }

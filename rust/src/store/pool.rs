@@ -1,19 +1,31 @@
-//! Parallel streaming decode: per-plane work items over a worker pool.
+//! Parallel streaming decode: per-plane work items over worker threads.
 //!
 //! `DecodedLayer::from_compressed` walks a layer's planes on one thread.
 //! Planes are independent GF(2) streams, though — the paper's hardware
 //! decoder exploits exactly this with one XOR network per plane — so the
-//! software path can too. [`DecodePool`] flattens `(layer, plane)` pairs
-//! into a work queue, drains it from `workers` scoped `std::thread`s
-//! (dynamic stealing via an atomic cursor, so a 32-plane FP32 layer next
-//! to an 8-plane INT8 layer balances), then reassembles each layer's
-//! planes into dense weights in a second parallel phase.
+//! software path can too. Two engines share that plane-granular split:
+//!
+//! * [`DecodePool`] — synchronous batch decode over *scoped* threads
+//!   spawned per call (dynamic stealing via an atomic cursor). Right for
+//!   one-shot bulk decodes (benches, offline tools).
+//! * [`DecodeService`] — a *persistent* pool of worker threads with an
+//!   async submit/wait interface. The serving hot path uses this one:
+//!   submitting a layer costs a queue push (no thread spawn), a
+//!   [`DecodeHandle`] waits for the result, and an optional completion
+//!   callback lets the model store install decoded layers into its cache
+//!   the moment the last plane lands — the mechanism behind readahead
+//!   (decode of layer `i+1` overlapping layer `i`'s GEMV).
 
 use crate::container::{CompressedLayer, Container};
 use crate::decoder::SequentialDecoder;
 use crate::gf2::BitVecF2;
 use crate::sparse::{assemble, decode_plane, DecodedLayer};
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 /// A configurable-width parallel decoder for compressed layers.
 #[derive(Debug, Clone)]
@@ -184,6 +196,282 @@ impl DecodePool {
     }
 }
 
+/// A queued unit of background work (one plane decode, or the assembly
+/// of a plane-less layer).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// How a layer decode ended: the assembled layer, or the panic message
+/// of the job that died (`String`, so every waiter can share it).
+pub type DecodeOutcome = std::result::Result<Arc<DecodedLayer>, String>;
+
+/// Completion callback invoked by the finishing worker.
+type OnDone = Box<dyn FnOnce(DecodeOutcome) + Send + 'static>;
+
+struct ServiceState {
+    queue: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct ServiceShared {
+    state: Mutex<ServiceState>,
+    cv: Condvar,
+}
+
+/// One in-flight layer decode: plane slots filled by workers, assembled
+/// by whichever worker finishes last. A panic in any job (malformed
+/// plane data) completes the task with an error instead of hanging its
+/// waiters or killing the worker.
+struct LayerTask {
+    layer: Arc<CompressedLayer>,
+    /// Built lazily by the first worker job (tables are up to
+    /// `(N_s+1)·2^N_in` entries — too heavy for the submitting thread).
+    decoder: std::sync::OnceLock<SequentialDecoder>,
+    planes: Mutex<Vec<Option<BitVecF2>>>,
+    remaining: AtomicUsize,
+    done: Mutex<Option<DecodeOutcome>>,
+    cv: Condvar,
+    on_done: Mutex<Option<OnDone>>,
+}
+
+impl LayerTask {
+    fn new(layer: Arc<CompressedLayer>, on_done: Option<OnDone>) -> Self {
+        let n_planes = layer.planes.len();
+        LayerTask {
+            decoder: std::sync::OnceLock::new(),
+            planes: Mutex::new(vec![None; n_planes]),
+            // A plane-less layer still runs one (assembly-only) job.
+            remaining: AtomicUsize::new(n_planes.max(1)),
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+            on_done: Mutex::new(on_done),
+            layer,
+        }
+    }
+
+    fn run_plane(&self, k: usize) {
+        if self.done.lock().unwrap().is_some() {
+            // A sibling plane already failed the task: don't burn the
+            // worker on dead work that can never be assembled.
+            return;
+        }
+        // No lock is held during the decode, so a panic cannot poison
+        // shared state; it becomes this task's error outcome.
+        let decoded = catch_unwind(AssertUnwindSafe(|| {
+            let decoder = self.decoder.get_or_init(|| {
+                SequentialDecoder::random(self.layer.spec, self.layer.m_seed)
+            });
+            decode_plane(&self.layer, decoder, k)
+        }));
+        match decoded {
+            Ok(bits) => {
+                self.planes.lock().unwrap()[k] = Some(bits);
+                // Only successful planes decrement, so `finish` runs
+                // iff every slot is filled.
+                if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    self.finish();
+                }
+            }
+            Err(_) => self.complete(Err(format!(
+                "decode of layer {:?} plane {k} panicked \
+                 (malformed plane data?)",
+                self.layer.name
+            ))),
+        }
+    }
+
+    fn finish(&self) {
+        let assembled = catch_unwind(AssertUnwindSafe(|| {
+            let planes: Vec<BitVecF2> = {
+                let mut slots = self.planes.lock().unwrap();
+                slots
+                    .iter_mut()
+                    .map(|p| p.take().expect("every plane decoded"))
+                    .collect()
+            };
+            assemble(&self.layer, &planes)
+        }));
+        match assembled {
+            Ok(layer) => self.complete(Ok(Arc::new(layer))),
+            Err(_) => self.complete(Err(format!(
+                "assembly of layer {:?} panicked (malformed layer?)",
+                self.layer.name
+            ))),
+        }
+    }
+
+    /// Publish the outcome (first writer wins), wake waiters, then run
+    /// the completion callback outside every lock.
+    fn complete(&self, outcome: DecodeOutcome) {
+        let cb = {
+            let mut done = self.done.lock().unwrap();
+            if done.is_some() {
+                return;
+            }
+            *done = Some(outcome.clone());
+            self.on_done.lock().unwrap().take()
+        };
+        self.cv.notify_all();
+        if let Some(cb) = cb {
+            cb(outcome);
+        }
+    }
+
+    fn wait(&self) -> DecodeOutcome {
+        let mut done = self.done.lock().unwrap();
+        loop {
+            if let Some(d) = done.as_ref() {
+                return d.clone();
+            }
+            done = self.cv.wait(done).unwrap();
+        }
+    }
+}
+
+/// Waitable handle to a layer decode submitted to a [`DecodeService`].
+pub struct DecodeHandle {
+    task: Arc<LayerTask>,
+}
+
+impl DecodeHandle {
+    /// Block until the layer is fully decoded and assembled. A decode
+    /// job that panicked surfaces here as an error, not a hang.
+    pub fn wait(&self) -> Result<Arc<DecodedLayer>> {
+        self.task.wait().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// True once the outcome is available without blocking.
+    pub fn is_done(&self) -> bool {
+        self.task.done.lock().unwrap().is_some()
+    }
+}
+
+/// Persistent background decode workers with async submit/wait handles.
+///
+/// Unlike [`DecodePool`], which spawns scoped threads on every call, the
+/// service keeps `workers` long-lived threads draining one shared queue
+/// of plane-granular jobs. Submitting a decode never blocks and never
+/// spawns: the caller gets a [`DecodeHandle`] back immediately, so a
+/// readahead can warm layer `i+1` while layer `i`'s GEMV runs on the
+/// caller's thread. Plane jobs of concurrently submitted layers
+/// interleave, so two cold layers decode together instead of in turn.
+///
+/// Dropping the service drains queued jobs (no in-flight decode is
+/// abandoned), then joins the workers.
+pub struct DecodeService {
+    shared: Arc<ServiceShared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl DecodeService {
+    /// A service with `workers` persistent threads (clamped to ≥ 1).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(ServiceShared {
+            state: Mutex::new(ServiceState {
+                queue: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let threads = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("f2f-decode-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn decode worker")
+            })
+            .collect();
+        DecodeService { shared, threads }
+    }
+
+    /// A service sized like [`DecodePool::default_for_host`].
+    pub fn default_for_host() -> Self {
+        DecodeService::new(DecodePool::default_for_host().workers())
+    }
+
+    /// Number of persistent worker threads.
+    pub fn workers(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Queue a decode; the handle's [`DecodeHandle::wait`] blocks until
+    /// all planes are decoded and assembled. Takes an `Arc` so callers
+    /// holding pre-parsed layers share them with the workers instead of
+    /// deep-copying plane streams on every miss.
+    pub fn decode_async(&self, layer: Arc<CompressedLayer>) -> DecodeHandle {
+        self.decode_async_then(layer, |_| {})
+    }
+
+    /// Queue a decode and run `on_done` (on the finishing worker) with
+    /// the outcome — the assembled layer, or the error of a job that
+    /// panicked. The callback fires exactly once, after the outcome has
+    /// been published to the handle.
+    pub fn decode_async_then<F>(
+        &self,
+        layer: Arc<CompressedLayer>,
+        on_done: F,
+    ) -> DecodeHandle
+    where
+        F: FnOnce(DecodeOutcome) + Send + 'static,
+    {
+        let n_planes = layer.planes.len();
+        let task = Arc::new(LayerTask::new(layer, Some(Box::new(on_done))));
+        if n_planes == 0 {
+            let t = task.clone();
+            self.submit(Box::new(move || t.finish()));
+        } else {
+            for k in 0..n_planes {
+                let t = task.clone();
+                self.submit(Box::new(move || t.run_plane(k)));
+            }
+        }
+        DecodeHandle { task }
+    }
+
+    fn submit(&self, job: Job) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.queue.push_back(job);
+        }
+        self.shared.cv.notify_one();
+    }
+}
+
+impl Drop for DecodeService {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &ServiceShared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.queue.pop_front() {
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        // Belt and braces: `LayerTask` already converts decode panics
+        // into error outcomes; this keeps the worker itself alive even
+        // if a completion callback panics.
+        let _ = catch_unwind(AssertUnwindSafe(job));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,5 +532,99 @@ mod tests {
     #[test]
     fn empty_batch_is_empty() {
         assert!(DecodePool::new(4).decode_many(&[]).is_empty());
+    }
+
+    #[test]
+    fn service_decode_matches_serial() {
+        let cl = compress("svc", 8, 40, 9);
+        let serial = DecodedLayer::from_compressed(&cl);
+        for workers in [1usize, 2, 4] {
+            let svc = DecodeService::new(workers);
+            let h = svc.decode_async(Arc::new(cl.clone()));
+            let decoded = h.wait().unwrap();
+            assert_eq!(
+                decoded.weights, serial.weights,
+                "service workers={workers} diverged"
+            );
+            assert!(h.is_done());
+        }
+    }
+
+    #[test]
+    fn service_overlapping_submissions_all_complete() {
+        let layers: Vec<CompressedLayer> = (0..6)
+            .map(|i| compress(&format!("l{i}"), 6, 24, 10 + i as u64))
+            .collect();
+        let svc = DecodeService::new(3);
+        let handles: Vec<DecodeHandle> = layers
+            .iter()
+            .map(|l| svc.decode_async(Arc::new(l.clone())))
+            .collect();
+        for (h, l) in handles.iter().zip(&layers) {
+            let serial = DecodedLayer::from_compressed(l);
+            assert_eq!(
+                h.wait().unwrap().weights,
+                serial.weights,
+                "{}",
+                l.name
+            );
+        }
+    }
+
+    #[test]
+    fn service_completion_callback_fires_once() {
+        let cl = compress("cb", 8, 32, 20);
+        let svc = DecodeService::new(2);
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = fired.clone();
+        let h = svc.decode_async_then(Arc::new(cl.clone()), move |outcome| {
+            let decoded = outcome.expect("well-formed layer decodes");
+            assert_eq!(decoded.rows * decoded.cols, 8 * 32);
+            f2.fetch_add(1, Ordering::SeqCst);
+        });
+        h.wait().unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn panicking_decode_fails_the_handle_instead_of_hanging() {
+        // Malform one plane so its decode job panics (a chunk value far
+        // beyond the 2^N_in table range): the panic must surface as
+        // this layer's error outcome — never a hung waiter, never a
+        // dead worker.
+        let mut bad = compress("boom", 8, 32, 50);
+        bad.planes[0].encoded[0] = u32::MAX;
+        let svc = DecodeService::new(2);
+        let err = svc.decode_async(Arc::new(bad)).wait();
+        assert!(err.is_err(), "panicked decode must report an error");
+        // The workers survived: a well-formed decode still succeeds.
+        let ok = compress("fine", 8, 32, 51);
+        let want = DecodedLayer::from_compressed(&ok);
+        let got = svc.decode_async(Arc::new(ok)).wait().unwrap();
+        assert_eq!(got.weights, want.weights);
+    }
+
+    #[test]
+    fn service_drop_drains_queued_jobs() {
+        // Submit then drop immediately: the callback must still fire for
+        // every queued layer (no abandoned decode).
+        let done = Arc::new(AtomicUsize::new(0));
+        {
+            let svc = DecodeService::new(1);
+            for i in 0..4 {
+                let cl = compress(&format!("d{i}"), 6, 24, 30 + i as u64);
+                let d2 = done.clone();
+                svc.decode_async_then(Arc::new(cl), move |_| {
+                    d2.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop joins after draining
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn service_clamps_workers() {
+        assert_eq!(DecodeService::new(0).workers(), 1);
+        assert!(DecodeService::default_for_host().workers() >= 1);
     }
 }

@@ -1,0 +1,124 @@
+//! Readahead policy: warm layer `i+1` while layer `i`'s GEMV runs.
+//!
+//! The paper's fixed-to-fixed format exists so irregular-sparsity
+//! weights decode through a highly regular, parallel structure; a
+//! serving path that only decodes layer `i+1` *after* layer `i`'s GEMV
+//! finishes serializes that parallelism away. The policy here is the
+//! scheduling half of the fix: while layer `i` executes, the layers it
+//! names are warmed asynchronously through
+//! [`ModelStore::prefetch_async`](super::ModelStore::prefetch_async),
+//! which dedups against in-flight decodes and skips layers that cannot
+//! fit in the budget alongside the pinned working set.
+
+use anyhow::anyhow;
+
+/// How far ahead of the executing layer the store should warm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadaheadPolicy {
+    /// Number of layers ahead to warm (0 = readahead off).
+    pub depth: usize,
+}
+
+impl Default for ReadaheadPolicy {
+    /// Warm one layer ahead — decode of `i+1` overlaps `i`'s GEMV.
+    fn default() -> Self {
+        ReadaheadPolicy::layers(1)
+    }
+}
+
+impl ReadaheadPolicy {
+    /// Readahead disabled: decode strictly on miss.
+    pub fn off() -> Self {
+        ReadaheadPolicy { depth: 0 }
+    }
+
+    /// Warm `depth` layers ahead of the executing one.
+    pub fn layers(depth: usize) -> Self {
+        ReadaheadPolicy { depth }
+    }
+
+    /// True when any readahead is issued.
+    pub fn enabled(&self) -> bool {
+        self.depth > 0
+    }
+
+    /// Chain indices to warm when layer `i` of a `len`-layer chain
+    /// starts executing. Wraps at the chain end so the next request's
+    /// first layers warm during the tail of this one; never names `i`
+    /// itself (depth is clamped to `len - 1`).
+    pub fn targets(self, i: usize, len: usize) -> impl Iterator<Item = usize> {
+        let depth = if len == 0 { 0 } else { self.depth.min(len - 1) };
+        (1..=depth).map(move |d| (i + d) % len)
+    }
+}
+
+impl std::str::FromStr for ReadaheadPolicy {
+    type Err = anyhow::Error;
+
+    /// Parse the CLI form: `on` (depth 1), `off`, or a depth number.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "on" => Ok(ReadaheadPolicy::layers(1)),
+            "off" => Ok(ReadaheadPolicy::off()),
+            n => n.parse::<usize>().map(ReadaheadPolicy::layers).map_err(
+                |_| anyhow!("--readahead: expected on|off|<depth>, got {n:?}"),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn targets(p: ReadaheadPolicy, i: usize, len: usize) -> Vec<usize> {
+        p.targets(i, len).collect()
+    }
+
+    #[test]
+    fn depth_one_warms_next_and_wraps() {
+        let p = ReadaheadPolicy::default();
+        assert_eq!(p.depth, 1);
+        assert!(p.enabled());
+        assert_eq!(targets(p, 0, 4), vec![1]);
+        assert_eq!(targets(p, 2, 4), vec![3]);
+        assert_eq!(targets(p, 3, 4), vec![0], "wraps at the chain end");
+    }
+
+    #[test]
+    fn off_names_nothing() {
+        let p = ReadaheadPolicy::off();
+        assert!(!p.enabled());
+        assert_eq!(targets(p, 0, 4), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn deep_readahead_clamps_to_chain() {
+        let p = ReadaheadPolicy::layers(2);
+        assert_eq!(targets(p, 1, 4), vec![2, 3]);
+        assert_eq!(targets(p, 3, 4), vec![0, 1]);
+        // Depth beyond the chain never names the executing layer.
+        let p = ReadaheadPolicy::layers(10);
+        assert_eq!(targets(p, 1, 3), vec![2, 0]);
+        // Degenerate chains.
+        assert_eq!(targets(p, 0, 1), Vec::<usize>::new());
+        assert_eq!(targets(p, 0, 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn parses_cli_forms() {
+        assert_eq!(
+            "on".parse::<ReadaheadPolicy>().unwrap(),
+            ReadaheadPolicy::layers(1)
+        );
+        assert_eq!(
+            "off".parse::<ReadaheadPolicy>().unwrap(),
+            ReadaheadPolicy::off()
+        );
+        assert_eq!(
+            "3".parse::<ReadaheadPolicy>().unwrap(),
+            ReadaheadPolicy::layers(3)
+        );
+        assert!("sideways".parse::<ReadaheadPolicy>().is_err());
+    }
+}

@@ -93,9 +93,12 @@ fn backpressure_rejects_when_queue_full() {
     // A tiny queue plus a slow backend forces rejections.
     struct Slow;
     impl f2f::coordinator::Backend for Slow {
-        fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        fn forward_batch(
+            &mut self,
+            xs: &[Vec<f32>],
+        ) -> anyhow::Result<Vec<Vec<f32>>> {
             std::thread::sleep(Duration::from_millis(20));
-            xs.iter().map(|x| vec![x[0]]).collect()
+            Ok(xs.iter().map(|x| vec![x[0]]).collect())
         }
         fn input_dim(&self) -> usize {
             2

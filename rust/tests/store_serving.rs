@@ -9,7 +9,9 @@ use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
 use f2f::pipeline::{CompressionConfig, Compressor};
 use f2f::rng::Rng;
 use f2f::sparse::DecodedLayer;
-use f2f::store::{DecodePool, ModelBackend, ModelStore, StoreConfig};
+use f2f::store::{
+    DecodePool, ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig,
+};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -106,6 +108,7 @@ fn whole_model_serves_under_tight_budget_with_eviction() {
     assert_eq!(m.errors, 0);
     server.shutdown();
 
+    store.wait_for_idle();
     let sm = store.metrics();
     assert!(
         sm.evictions > 0,
@@ -113,6 +116,11 @@ fn whole_model_serves_under_tight_budget_with_eviction() {
     );
     assert!(sm.cached_bytes <= budget, "cache respects the budget");
     assert!(sm.decodes > 4, "cold re-decodes under eviction pressure");
+    assert_eq!(
+        sm.redundant_decodes, 0,
+        "in-flight dedup: no decode result may be discarded"
+    );
+    assert_eq!(sm.pinned_bytes, 0, "all pins released after serving");
 }
 
 #[test]
@@ -142,6 +150,77 @@ fn generous_budget_decodes_each_layer_once() {
     );
     assert_eq!(sm.evictions, 0);
     assert!(sm.hits >= 20 * 4, "every layer fetch after warmup is a hit");
+}
+
+#[test]
+fn sequential_scan_thrash_is_bounded_by_readahead_pinning() {
+    // The classic LRU worst case: a chain whose decoded size is one
+    // layer over budget, scanned in order, evicts every layer on every
+    // pass. The readahead pipeline cannot beat the capacity miss rate,
+    // but in-flight dedup plus pin-while-executing must bound the work
+    // at one decode per layer per pass — never decode-evict-redecode
+    // churn within a pass, never a discarded decode.
+    use f2f::coordinator::Backend;
+
+    let dims = [16usize, 16, 16, 16, 16]; // 4 layers, 1 KiB decoded each
+    let comp = Compressor::new(CompressionConfig {
+        sparsity: 0.75,
+        n_s: 1,
+        beam: Some(8),
+        ..Default::default()
+    });
+    let mut model = Container::default();
+    for i in 0..dims.len() - 1 {
+        let name = format!("fc{i}");
+        let spec = LayerSpec { name: name.clone(), rows: 16, cols: 16 };
+        let layer =
+            SyntheticLayer::generate(&spec, WeightGen::default(), 40 + i as u64);
+        let (q, scale) = quantize_i8(&layer.weights);
+        let (cl, _) = comp.compress_i8(&name, 16, 16, &q, scale);
+        model.layers.push(cl);
+    }
+    let layers = model.layers.len();
+    let layer_bytes = 16 * 16 * 4;
+    let budget = layer_bytes * (layers - 1); // budget + 1 layer of model
+
+    let store = Arc::new(ModelStore::from_container(
+        model.clone(),
+        StoreConfig { cache_budget_bytes: budget, decode_workers: 2 },
+    ));
+    let mut backend = ModelBackend::sequential(store.clone())
+        .unwrap()
+        .with_readahead(ReadaheadPolicy::layers(1));
+
+    let x: Vec<f32> = (0..16).map(|j| (j as f32 * 0.3).sin()).collect();
+    let want = reference_forward(&model, &x);
+    let passes = 5;
+    for _ in 0..passes {
+        let ys = backend.forward_batch(&[x.clone()]).unwrap();
+        for (a, b) in ys[0].iter().zip(&want) {
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                "thrash pass diverged: {a} vs {b}"
+            );
+        }
+    }
+    store.wait_for_idle();
+    let sm = store.metrics();
+    // Bound: one decode per layer per pass, plus at most one wrap
+    // readahead per pass that eviction wastes before the next pass
+    // reaches it. Without dedup + pinning this would be up to 2x.
+    assert!(
+        sm.decodes as usize <= (layers + 1) * passes,
+        "decodes-per-pass must stay bounded at one per layer \
+         (got {} over {passes} passes of {layers} layers)",
+        sm.decodes
+    );
+    assert_eq!(
+        sm.redundant_decodes, 0,
+        "readahead dedup must never discard a decode"
+    );
+    assert!(sm.evictions > 0, "budget+1 scan still evicts");
+    assert!(sm.cached_bytes <= budget);
+    assert_eq!(sm.pinned_bytes, 0);
 }
 
 #[test]
