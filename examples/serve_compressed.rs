@@ -16,6 +16,9 @@
 //! 4. A cold-pass comparison times decode-on-miss (readahead off)
 //!    against the overlapped pipeline, then a load test reports
 //!    throughput, latency percentiles, and store cache metrics.
+//! 5. The same container is split across 2 shards (`ShardMap` +
+//!    `ShardRouter`): the multi-store forward pass must be bit-exact
+//!    vs the single store, with each shard decoding only its layers.
 //!
 //! With `--features pjrt` (requires the external `xla` bindings and
 //! `make artifacts`), an additional single-layer cross-check runs the
@@ -26,11 +29,12 @@
 //! ```
 
 use anyhow::Result;
-use f2f::container::{write_container_v2, Container};
+use f2f::container::{
+    write_container_v2, write_sharded, Container, ShardAssignment,
+};
 use f2f::coordinator::{InferenceServer, ServerConfig};
-use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
-use f2f::pipeline::{CompressionConfig, Compressor};
-use f2f::pruning::PruneMethod;
+use f2f::models::{compressed_mlp, MlpConfig};
+use f2f::shard::ShardRouter;
 use f2f::sparse::DecodedLayer;
 use f2f::store::{ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig};
 use std::sync::Arc;
@@ -40,32 +44,20 @@ const DIMS: [usize; 4] = [512, 256, 256, 128];
 const N_S: usize = 2;
 
 fn compress_model() -> Container {
-    let compressor = Compressor::new(CompressionConfig {
-        sparsity: 0.9,
+    let t0 = std::time::Instant::now();
+    let (c, reports) = compressed_mlp(&MlpConfig {
+        seed: 0x5E,
         n_s: N_S,
-        method: PruneMethod::Magnitude,
-        beam: Some(8),
-        ..Default::default()
+        name_prefix: "mlp/fc".into(),
+        ..MlpConfig::new(&DIMS)
     });
-    let mut c = Container::default();
-    for i in 0..DIMS.len() - 1 {
-        let (rows, cols) = (DIMS[i + 1], DIMS[i]);
-        let name = format!("mlp/fc{i}");
-        let spec = LayerSpec { name: name.clone(), rows, cols };
-        let layer =
-            SyntheticLayer::generate(&spec, WeightGen::default(), 0x5E + i as u64);
-        let (q, scale) = quantize_i8(&layer.weights);
-        let t0 = std::time::Instant::now();
-        let (cl, rep) = compressor.compress_i8(&name, rows, cols, &q, scale);
+    for (rep, l) in reports.iter().zip(&c.layers) {
         println!(
-            "compressed {name} ({rows}x{cols} INT8) in {:?}: E={:.2}% \
-             mem_reduction={:.2}%",
-            t0.elapsed(),
-            rep.efficiency,
-            rep.memory_reduction
+            "compressed {} ({}x{} INT8): E={:.2}% mem_reduction={:.2}%",
+            rep.name, l.rows, l.cols, rep.efficiency, rep.memory_reduction
         );
-        c.layers.push(cl);
     }
+    println!("model compressed in {:?}", t0.elapsed());
     c
 }
 
@@ -121,6 +113,51 @@ fn main() -> Result<()> {
         cold[1],
         cold[0].as_secs_f64() / cold[1].as_secs_f64().max(1e-9),
     );
+
+    // --- sharded: the same model behind 2 independent stores ---
+    {
+        use f2f::coordinator::Backend;
+        let single_store = Arc::new(ModelStore::open_bytes(
+            bytes.clone(),
+            StoreConfig::default(),
+        )?);
+        let mut single = ModelBackend::sequential(single_store)?;
+        let want = single.forward_batch(&[probe.clone()])?;
+
+        let (map, shard_bytes) =
+            write_sharded(&model, 2, ShardAssignment::ByBytes)?;
+        let stores = shard_bytes
+            .into_iter()
+            .map(|b| {
+                ModelStore::open_bytes(b, StoreConfig::default())
+                    .map(Arc::new)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        for (i, s) in stores.iter().enumerate() {
+            println!(
+                "shard {i}: layers [{}], decoded {} KiB",
+                map.layers_of(i).collect::<Vec<_>>().join(","),
+                s.total_decoded_bytes() >> 10
+            );
+        }
+        let mut router = ShardRouter::new(stores, &map)?
+            .with_readahead(ReadaheadPolicy::layers(1));
+        let t0 = std::time::Instant::now();
+        let got = router.forward_batch(&[probe.clone()])?;
+        let dt = t0.elapsed();
+        assert_eq!(
+            got, want,
+            "2-shard router must be bit-exact vs single store"
+        );
+        router.wait_for_idle();
+        let sm = router.metrics();
+        assert_eq!(sm.total.redundant_decodes, 0);
+        println!(
+            "2-shard cold pass {dt:?}: output bit-exact vs single store \
+             (decodes per shard: {:?})",
+            sm.per_shard.iter().map(|m| m.decodes).collect::<Vec<_>>()
+        );
+    }
 
     // Budget below the decoded model size: eviction is guaranteed.
     let decoded_total: usize =

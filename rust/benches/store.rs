@@ -1,16 +1,19 @@
 //! Model-store benchmarks: serial vs pooled decode throughput, cold vs
-//! warm serve latency through the `ModelStore`/`ModelBackend` path, and
-//! the readahead pipeline (decode of layer `i+1` overlapping layer
-//! `i`'s GEMV) against the decode-on-miss serial baseline. Emits
-//! machine-readable `BENCH_store.json` next to the human output to keep
-//! the perf trajectory moving.
+//! warm serve latency through the `ModelStore`/`ModelBackend` path, the
+//! readahead pipeline (decode of layer `i+1` overlapping layer `i`'s
+//! GEMV) against the decode-on-miss serial baseline, and the sharded
+//! cold serve (the same model behind 1/2/4 stores through a
+//! `ShardRouter`). Emits machine-readable `BENCH_store.json` next to
+//! the human output to keep the perf trajectory moving.
 
 use f2f::bench_util::{bench_with_result, black_box, JsonReport};
-use f2f::container::{write_container_v2, CompressedLayer, Container};
+use f2f::container::{
+    split_container, write_container_v2, CompressedLayer, Container,
+    ShardAssignment,
+};
 use f2f::coordinator::Backend;
-use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
-use f2f::pipeline::{CompressionConfig, Compressor};
-use f2f::pruning::PruneMethod;
+use f2f::models::{compressed_mlp, MlpConfig};
+use f2f::shard::ShardRouter;
 use f2f::sparse::DecodedLayer;
 use f2f::store::{
     DecodePool, ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig,
@@ -22,26 +25,11 @@ const LAYERS: usize = 4;
 const WIDTH: usize = 256;
 
 fn build_model() -> Container {
-    let compressor = Compressor::new(CompressionConfig {
-        sparsity: 0.9,
-        n_s: 1,
-        method: PruneMethod::Magnitude,
-        beam: Some(8),
-        ..Default::default()
-    });
-    let mut c = Container::default();
-    for i in 0..LAYERS {
-        let name = format!("fc{i}");
-        let spec =
-            LayerSpec { name: name.clone(), rows: WIDTH, cols: WIDTH };
-        let layer =
-            SyntheticLayer::generate(&spec, WeightGen::default(), 77 + i as u64);
-        let (q, scale) = quantize_i8(&layer.weights);
-        let (cl, _) =
-            compressor.compress_i8(&name, WIDTH, WIDTH, &q, scale);
-        c.layers.push(cl);
-    }
-    c
+    compressed_mlp(&MlpConfig {
+        seed: 77,
+        ..MlpConfig::uniform(LAYERS, WIDTH)
+    })
+    .0
 }
 
 fn main() {
@@ -229,6 +217,52 @@ fn main() {
         cold_parallel.mean.as_secs_f64()
             / cold_readahead.mean.as_secs_f64()
     );
+
+    // --- sharded cold serve: the same model behind 1/2/4 stores ---
+    // Baseline is the single-store readahead pipeline above (same
+    // batch, same policy): `speedup_vs_single_store` isolates what the
+    // multi-store router adds (per-shard decode services warming in
+    // parallel) from what readahead already bought.
+    for n_shards in [1usize, 2, 4] {
+        let (map, shard_bytes) =
+            split_container(&bytes, n_shards, ShardAssignment::ByBytes)
+                .expect("split container");
+        let r = bench_with_result(
+            &format!("serve cold sharded ({n_shards} shards, readahead on)"),
+            1,
+            budget,
+            50,
+            || {
+                let stores: Vec<Arc<ModelStore>> = shard_bytes
+                    .iter()
+                    .map(|b| {
+                        Arc::new(
+                            ModelStore::open_bytes(
+                                b.clone(),
+                                StoreConfig::default(),
+                            )
+                            .expect("open shard"),
+                        )
+                    })
+                    .collect();
+                let mut router = ShardRouter::new(stores, &map)
+                    .expect("router")
+                    .with_readahead(ReadaheadPolicy::layers(1));
+                router.forward_batch(black_box(&batch)).expect("serve")
+            },
+        );
+        let case = format!("serve_cold_sharded_s{n_shards}");
+        json.add(&case, &r);
+        json.metric(
+            &case,
+            "speedup_vs_single_store",
+            cold_readahead.mean.as_secs_f64() / r.mean.as_secs_f64(),
+        );
+        println!(
+            "  -> {n_shards}-shard cold serve {:.2}x vs single store",
+            cold_readahead.mean.as_secs_f64() / r.mean.as_secs_f64()
+        );
+    }
 
     let store = Arc::new(
         ModelStore::open_bytes(bytes.clone(), StoreConfig::default())

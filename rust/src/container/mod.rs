@@ -14,12 +14,21 @@
 //! Two wire layouts exist: legacy v1 (`F2F1`, parse front-to-back) and
 //! the indexed v2 (`F2F2`, per-layer offset index for random access —
 //! see [`ContainerIndex`]). [`read_container`] accepts both;
-//! [`write_container_v2`] is the default writer for new files.
+//! [`write_container_v2`] is the default writer for new files. A v2
+//! container can additionally be partitioned across N stores: the
+//! `F2F3` [`ShardMap`] sidecar records the layer → shard assignment and
+//! [`split_container`] emits one self-contained v2 file per shard (see
+//! [`crate::shard`] for the serving side).
 
 mod serde;
+mod shard;
 mod v2;
 
 pub use serde::{read_container, write_container};
+pub use shard::{
+    is_shard_map, split_container, write_sharded, ShardAssignment,
+    ShardMap,
+};
 pub use v2::{
     is_v2, read_layer_at, write_container_v2, ContainerIndex, LayerEntry,
 };

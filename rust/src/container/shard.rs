@@ -1,0 +1,393 @@
+//! Shard map (magic `F2F3`): partitioning a v2 container across stores.
+//!
+//! A v2 container already makes every layer record independently
+//! addressable; the shard map is the missing piece for serving one
+//! compressed model from N independent stores. It is a *sidecar* record
+//! rather than an embedded section, deliberately: each shard file stays
+//! a plain v2 container that any [`crate::store::ModelStore`] can open
+//! on its own, and the map travels next to them as a tiny directory of
+//! `layer → shard` assignments in original container order (which is
+//! also the forward-chain order a router executes).
+//!
+//! ```text
+//! "F2F3" | u32 version=1 | u32 n_shards | u32 n_layers
+//! n_layers × { name, u32 shard }
+//! ```
+//!
+//! Assignment is deterministic ([`ShardAssignment`]): round-robin, or
+//! greedy by-record-bytes balancing (each layer goes to the currently
+//! lightest shard, measured in compressed record bytes — the quantity
+//! that drives per-shard file size and mmap paging).
+
+use super::serde::{Reader, Writer};
+use super::v2::{read_layer_at, write_container_v2};
+use super::{Container, ContainerIndex};
+use anyhow::{bail, Result};
+use std::collections::HashSet;
+
+pub(super) const MAGIC_SHARD: &[u8; 4] = b"F2F3";
+
+/// Deterministic layer → shard assignment strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardAssignment {
+    /// Layer `i` goes to shard `i % n_shards`.
+    RoundRobin,
+    /// Each layer (in container order) goes to the shard with the
+    /// fewest assigned record bytes so far (ties break to the lowest
+    /// shard id).
+    ByBytes,
+}
+
+/// Which shard owns each layer, in original container (= chain) order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMap {
+    n_shards: usize,
+    /// `(layer name, shard id)` in container order.
+    assignments: Vec<(String, usize)>,
+}
+
+impl ShardMap {
+    /// Assign every indexed layer to one of `n_shards` shards.
+    pub fn assign(
+        index: &ContainerIndex,
+        n_shards: usize,
+        strategy: ShardAssignment,
+    ) -> Result<ShardMap> {
+        if n_shards == 0 {
+            bail!("shard map needs at least one shard");
+        }
+        let mut load = vec![0u64; n_shards];
+        let mut assignments = Vec::with_capacity(index.len());
+        for (i, e) in index.entries().iter().enumerate() {
+            let shard = match strategy {
+                ShardAssignment::RoundRobin => i % n_shards,
+                ShardAssignment::ByBytes => {
+                    load.iter()
+                        .enumerate()
+                        .min_by_key(|&(_, &bytes)| bytes)
+                        .map(|(sid, _)| sid)
+                        .expect("n_shards >= 1")
+                }
+            };
+            load[shard] += e.len as u64;
+            assignments.push((e.name.clone(), shard));
+        }
+        Ok(ShardMap { n_shards, assignments })
+    }
+
+    /// Serialize the map (the `F2F3` sidecar record).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.buf.extend_from_slice(MAGIC_SHARD);
+        w.u32(1); // version
+        w.u32(self.n_shards as u32);
+        w.u32(self.assignments.len() as u32);
+        for (name, shard) in &self.assignments {
+            w.bytes(name.as_bytes());
+            w.u32(*shard as u32);
+        }
+        w.buf
+    }
+
+    /// Parse a serialized shard map. Rejects — as errors, never panics —
+    /// truncation, trailing bytes, a zero shard count, assignments to
+    /// shards that do not exist, and duplicate layer assignments.
+    pub fn parse(bytes: &[u8]) -> Result<ShardMap> {
+        let mut r = Reader::new(bytes);
+        if r.take(4)? != MAGIC_SHARD {
+            bail!("bad magic: not an F2F shard map");
+        }
+        let version = r.u32()?;
+        if version != 1 {
+            bail!("unsupported shard-map version {version}");
+        }
+        let n_shards = r.u32()? as usize;
+        if n_shards == 0 {
+            bail!("shard map declares zero shards");
+        }
+        let n_layers = r.u32()? as usize;
+        // Never pre-reserve attacker-controlled sizes.
+        let mut assignments: Vec<(String, usize)> =
+            Vec::with_capacity(n_layers.min(1024));
+        let mut seen = HashSet::new();
+        for li in 0..n_layers {
+            let name = match String::from_utf8(r.bytes()?) {
+                Ok(n) => n,
+                Err(_) => bail!("shard-map entry {li}: name not utf8"),
+            };
+            let shard = r.u32()? as usize;
+            if shard >= n_shards {
+                bail!(
+                    "shard-map entry {li} ({name}): assigned to shard \
+                     {shard} but only {n_shards} shards exist"
+                );
+            }
+            if !seen.insert(name.clone()) {
+                bail!(
+                    "shard-map entry {li}: layer {name:?} assigned twice"
+                );
+            }
+            assignments.push((name, shard));
+        }
+        if r.pos != bytes.len() {
+            bail!(
+                "{} trailing bytes after shard map",
+                bytes.len() - r.pos
+            );
+        }
+        Ok(ShardMap { n_shards, assignments })
+    }
+
+    /// Number of shards the map partitions across.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Number of layers assigned.
+    pub fn len(&self) -> usize {
+        self.assignments.len()
+    }
+
+    /// True when no layers are assigned.
+    pub fn is_empty(&self) -> bool {
+        self.assignments.is_empty()
+    }
+
+    /// `(layer name, shard id)` pairs in container (= chain) order.
+    pub fn assignments(&self) -> &[(String, usize)] {
+        &self.assignments
+    }
+
+    /// The shard owning `name`, if assigned.
+    pub fn shard_of(&self, name: &str) -> Option<usize> {
+        self.assignments
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+    }
+
+    /// Names of the layers assigned to `shard`, in chain order.
+    pub fn layers_of(&self, shard: usize) -> impl Iterator<Item = &str> {
+        self.assignments
+            .iter()
+            .filter(move |(_, s)| *s == shard)
+            .map(|(n, _)| n.as_str())
+    }
+}
+
+/// True when `bytes` carry the shard-map (`F2F3`) magic.
+pub fn is_shard_map(bytes: &[u8]) -> bool {
+    bytes.len() >= 4 && &bytes[..4] == MAGIC_SHARD
+}
+
+/// Split serialized v2 container bytes into per-shard v2 containers plus
+/// the map describing the partition. Each output is a self-contained v2
+/// file holding that shard's layers (in original relative order); the
+/// per-layer records round-trip bit-exactly.
+pub fn split_container(
+    bytes: &[u8],
+    n_shards: usize,
+    strategy: ShardAssignment,
+) -> Result<(ShardMap, Vec<Vec<u8>>)> {
+    let index = ContainerIndex::parse(bytes)?;
+    let map = ShardMap::assign(&index, n_shards, strategy)?;
+    let mut per: Vec<Container> =
+        (0..n_shards).map(|_| Container::default()).collect();
+    for (entry, (_, shard)) in
+        index.entries().iter().zip(map.assignments())
+    {
+        per[*shard].layers.push(read_layer_at(bytes, entry)?);
+    }
+    Ok((map, per.iter().map(write_container_v2).collect()))
+}
+
+/// Partition an in-memory container: serialize to the indexed v2 layout
+/// and [`split_container`] it.
+///
+/// This deliberately routes through the serialized form even though the
+/// layers are already in memory: by-bytes assignment needs real record
+/// sizes (known only after serialization), and funneling every split
+/// through the one parse-validated path keeps CLI-split and in-memory
+/// shard files byte-identical. The extra encode/parse is a one-time
+/// startup cost, never on the serving path.
+pub fn write_sharded(
+    c: &Container,
+    n_shards: usize,
+    strategy: ShardAssignment,
+) -> Result<(ShardMap, Vec<Vec<u8>>)> {
+    split_container(&write_container_v2(c), n_shards, strategy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::read_container;
+    use super::super::serde::sample_container;
+    use super::*;
+
+    fn sample_bytes(seed: u64) -> Vec<u8> {
+        write_container_v2(&sample_container(seed))
+    }
+
+    /// Hand-built map bytes (for shapes `assign` can never produce).
+    fn raw_map(entries: &[(&str, u32)], n_shards: u32) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC_SHARD);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&n_shards.to_le_bytes());
+        b.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+        for (name, shard) in entries {
+            b.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            b.extend_from_slice(name.as_bytes());
+            b.extend_from_slice(&shard.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn round_robin_interleaves_in_order() {
+        let bytes = sample_bytes(30);
+        let index = ContainerIndex::parse(&bytes).unwrap();
+        let map =
+            ShardMap::assign(&index, 2, ShardAssignment::RoundRobin)
+                .unwrap();
+        assert_eq!(map.n_shards(), 2);
+        assert_eq!(map.len(), 3);
+        assert_eq!(map.shard_of("layer0"), Some(0));
+        assert_eq!(map.shard_of("layer1"), Some(1));
+        assert_eq!(map.shard_of("layer2"), Some(0));
+        assert_eq!(map.shard_of("ghost"), None);
+        assert_eq!(
+            map.layers_of(0).collect::<Vec<_>>(),
+            vec!["layer0", "layer2"]
+        );
+    }
+
+    #[test]
+    fn by_bytes_balances_record_sizes() {
+        // sample_container's layer0 is FP32 (32 planes) — by far the
+        // largest record — so greedy balancing must put layer1 on the
+        // other shard instead of round-robin's blind interleave.
+        let bytes = sample_bytes(31);
+        let index = ContainerIndex::parse(&bytes).unwrap();
+        let map = ShardMap::assign(&index, 2, ShardAssignment::ByBytes)
+            .unwrap();
+        assert_eq!(map.shard_of("layer0"), Some(0));
+        assert_eq!(map.shard_of("layer1"), Some(1));
+        // Deterministic: the same input maps identically every time.
+        let again = ShardMap::assign(&index, 2, ShardAssignment::ByBytes)
+            .unwrap();
+        assert_eq!(map, again);
+    }
+
+    #[test]
+    fn map_serialization_round_trips() {
+        let bytes = sample_bytes(32);
+        let index = ContainerIndex::parse(&bytes).unwrap();
+        for strategy in
+            [ShardAssignment::RoundRobin, ShardAssignment::ByBytes]
+        {
+            let map = ShardMap::assign(&index, 3, strategy).unwrap();
+            let wire = map.to_bytes();
+            assert!(is_shard_map(&wire));
+            assert!(!is_shard_map(&bytes));
+            assert_eq!(ShardMap::parse(&wire).unwrap(), map);
+        }
+    }
+
+    #[test]
+    fn split_produces_bit_exact_shard_records() {
+        let c = sample_container(33);
+        let bytes = write_container_v2(&c);
+        let (map, shards) =
+            split_container(&bytes, 2, ShardAssignment::RoundRobin)
+                .unwrap();
+        assert_eq!(shards.len(), 2);
+        let index = ContainerIndex::parse(&bytes).unwrap();
+        for (name, shard) in map.assignments() {
+            let e = index.find(name).expect("layer indexed");
+            let sidx = ContainerIndex::parse(&shards[*shard]).unwrap();
+            let se = sidx.find(name).expect("layer in its shard");
+            assert_eq!(
+                &bytes[e.offset..e.offset + e.len],
+                &shards[*shard][se.offset..se.offset + se.len],
+                "record of {name} must survive the split bit-exactly"
+            );
+        }
+        // Each shard is a self-contained, readable v2 container.
+        let union: usize = shards
+            .iter()
+            .map(|s| read_container(s).unwrap().layers.len())
+            .sum();
+        assert_eq!(union, c.layers.len());
+    }
+
+    #[test]
+    fn more_shards_than_layers_leaves_valid_empty_shards() {
+        let c = sample_container(34);
+        let (map, shards) =
+            write_sharded(&c, 5, ShardAssignment::RoundRobin).unwrap();
+        assert_eq!(map.n_shards(), 5);
+        assert_eq!(shards.len(), 5);
+        for s in &shards[3..] {
+            assert!(read_container(s).unwrap().layers.is_empty());
+        }
+    }
+
+    #[test]
+    fn zero_shards_is_an_error_everywhere() {
+        let bytes = sample_bytes(35);
+        let index = ContainerIndex::parse(&bytes).unwrap();
+        assert!(ShardMap::assign(&index, 0, ShardAssignment::RoundRobin)
+            .is_err());
+        assert!(
+            split_container(&bytes, 0, ShardAssignment::ByBytes).is_err()
+        );
+        let err = ShardMap::parse(&raw_map(&[], 0)).unwrap_err();
+        assert!(format!("{err}").contains("zero shards"), "{err}");
+    }
+
+    #[test]
+    fn parse_rejects_missing_shard_and_duplicates() {
+        let err = ShardMap::parse(&raw_map(&[("a", 0), ("b", 7)], 2))
+            .unwrap_err();
+        assert!(
+            format!("{err}").contains("only 2 shards exist"),
+            "{err}"
+        );
+        let err = ShardMap::parse(&raw_map(&[("a", 0), ("a", 1)], 2))
+            .unwrap_err();
+        assert!(format!("{err}").contains("assigned twice"), "{err}");
+    }
+
+    #[test]
+    fn parse_rejects_truncation_and_trailing_bytes() {
+        let wire = raw_map(&[("layer0", 0), ("layer1", 1)], 2);
+        for cut in 0..wire.len() {
+            assert!(
+                ShardMap::parse(&wire[..cut]).is_err(),
+                "cut at {cut} should fail"
+            );
+        }
+        let mut garbage = wire.clone();
+        garbage.push(0);
+        assert!(ShardMap::parse(&garbage).is_err());
+    }
+
+    #[test]
+    fn fuzzed_shard_map_corruption_never_panics() {
+        // Counterpart of the container-index fuzz sweep: every byte of
+        // the map forced to adversarial values must parse cleanly or
+        // reject cleanly — never panic or over-allocate.
+        let wire = raw_map(&[("layer0", 0), ("layer1", 1)], 2);
+        for pos in 0..wire.len() {
+            for val in [0x00u8, 0x01, 0x7F, 0xFF] {
+                if wire[pos] == val {
+                    continue;
+                }
+                let mut corrupt = wire.clone();
+                corrupt[pos] = val;
+                let _ = ShardMap::parse(&corrupt);
+            }
+        }
+    }
+}

@@ -14,7 +14,10 @@
 //! Backends: [`NativeBackend`] serves one decoded layer; whole models go
 //! through [`crate::store::ModelBackend`], which chains every layer of a
 //! compressed container from a byte-budgeted
-//! [`crate::store::ModelStore`].
+//! [`crate::store::ModelStore`]; split models go through
+//! [`crate::shard::ShardRouter`], which routes the same chain across N
+//! independent stores (bit-identical outputs, per-shard decode
+//! services).
 
 mod backend;
 mod batcher;

@@ -32,18 +32,27 @@
 //! * [`container`] — serialized compressed-model container with lossless
 //!   round-trip; legacy v1 (`F2F1`) plus the indexed v2 (`F2F2`) layout
 //!   whose layer-offset index makes any layer addressable without
-//!   parsing the whole file.
+//!   parsing the whole file, and the `F2F3` shard-map sidecar that
+//!   partitions a v2 container into per-shard files
+//!   ([`container::ShardMap`], [`container::split_container`]).
 //! * [`sparse`] — CSR + SpMV baseline (Algorithm 1) and the
 //!   decode-then-GEMV fixed-to-fixed path (Algorithm 2).
 //! * [`store`] — model store + streaming decode engine: a persistent
-//!   background decode service with async submit/wait handles
-//!   ([`store::DecodeService`]; [`store::DecodePool`] remains for
-//!   one-shot bulk decodes), a byte-budgeted LRU of decoded layers as a
-//!   concurrent subsystem — in-flight decode dedup, async
-//!   `prefetch_async`, pin-while-executing ([`store::ModelStore`]) — a
+//!   background decode service with async submit/wait handles and a
+//!   worker-side record-parse stage ([`store::DecodeService`];
+//!   [`store::DecodePool`] remains for one-shot bulk decodes), a
+//!   byte-budgeted LRU of decoded layers as a concurrent subsystem —
+//!   in-flight decode dedup, async `prefetch_async`,
+//!   pin-while-executing ([`store::ModelStore`]) — a
 //!   [`store::ReadaheadPolicy`] that warms layer `i+1` while layer `i`
-//!   executes, and the readahead-driven multi-layer
-//!   [`store::ModelBackend`].
+//!   executes, the readahead-driven multi-layer
+//!   [`store::ModelBackend`], and a [`store::RecordSource`] that holds
+//!   the compressed bytes as owned memory or (with the `mmap` feature)
+//!   a read-only file mapping paged in on demand.
+//! * [`shard`] — horizontal scale-out: a [`shard::ShardRouter`] serving
+//!   one split model from N independent stores (per-shard decode
+//!   services and budgets, cross-shard readahead, aggregated metrics),
+//!   bit-identical to the single-store path.
 //! * [`bandwidth`] — memory transaction / bandwidth-utilization simulator
 //!   (Figure 1, Appendix A).
 //! * [`models`] — synthetic Transformer / ResNet-50 model zoo with
@@ -93,6 +102,13 @@
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! To scale out horizontally, split the same container across N shards
+//! ([`container::write_sharded`] / the `f2f shard` CLI) and serve it
+//! with a [`shard::ShardRouter`] — the same [`coordinator::Backend`]
+//! surface and bit-identical outputs, but per-shard decode services,
+//! per-shard cache budgets, cross-shard readahead, and (with the `mmap`
+//! feature, on by default) per-shard container files paged in lazily.
 
 pub mod bandwidth;
 pub mod bench_util;
@@ -111,6 +127,7 @@ pub mod report;
 pub mod repro;
 pub mod rng;
 pub mod runtime;
+pub mod shard;
 pub mod sparse;
 pub mod store;
 pub mod weights;
@@ -119,6 +136,7 @@ pub use decoder::{DecoderSpec, SequentialDecoder};
 pub use encoder::{EncodeResult, ViterbiEncoder};
 pub use gf2::BitVecF2;
 pub use pipeline::{CompressionConfig, Compressor};
+pub use shard::{ShardMetrics, ShardRouter};
 pub use store::{
     DecodePool, DecodeService, ModelBackend, ModelStore, ReadaheadPolicy,
     StoreConfig,

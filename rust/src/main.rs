@@ -9,11 +9,15 @@
 //!   synthetic model to a container file (indexed v2 by default; pass
 //!   `--v1` for the legacy layout) and report per-layer stats.
 //! * `f2f inspect <container>` — print a container's inventory (v1/v2).
+//! * `f2f shard <container> --shards <n> [--by-bytes] [--out prefix]` —
+//!   split a v2 container into per-shard v2 files plus the `F2F3`
+//!   shard-map sidecar.
 //! * `f2f serve [...]` — compress a multi-layer model, serve it through
 //!   the model store (`--cache-kb <n>` decoded-weight budget,
 //!   `--decode-threads <n>` decode-service width, `--layers`, `--width`,
-//!   `--readahead on|off|<depth>` async warm-ahead) and run a
-//!   self-driven load test.
+//!   `--readahead on|off|<depth>` async warm-ahead, `--shards <n>`
+//!   split across a multi-store shard router) and run a self-driven
+//!   load test.
 //! * `f2f hw --s <S> --nin <N> --ns <N>` — Appendix G hardware cost.
 
 use anyhow::{bail, Result};
@@ -32,11 +36,13 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("repro") => f2f::repro::run(args),
         Some("compress") => cmd_compress(args),
         Some("inspect") => cmd_inspect(args),
+        Some("shard") => cmd_shard(args),
         Some("serve") => cmd_serve(args),
         Some("hw") => cmd_hw(args),
         _ => {
             eprintln!(
-                "usage: f2f <repro|compress|inspect|serve|hw> [options]\n\
+                "usage: f2f <repro|compress|inspect|shard|serve|hw> \
+                 [options]\n\
                  try: f2f repro table1 --bits 100000"
             );
             Ok(())
@@ -156,14 +162,53 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_shard(args: &Args) -> Result<()> {
+    use f2f::container::{split_container, ShardAssignment};
+
+    let path = args.pos(1)?;
+    let n_shards: usize = args.get("shards", 2)?;
+    let strategy = if args.flag("by-bytes") {
+        ShardAssignment::ByBytes
+    } else {
+        ShardAssignment::RoundRobin
+    };
+    let out = args.get_str("out", path);
+    let bytes = std::fs::read(path)?;
+    let (map, shards) = split_container(&bytes, n_shards, strategy)?;
+
+    let mut table = f2f::report::Table::new(
+        &format!("{path} -> {n_shards} shards ({strategy:?})"),
+        &["shard", "file", "layers", "bytes"],
+    );
+    for (i, shard_bytes) in shards.iter().enumerate() {
+        let shard_path = format!("{out}.shard{i}.f2f");
+        std::fs::write(&shard_path, shard_bytes)?;
+        let layers: Vec<&str> = map.layers_of(i).collect();
+        table.row(vec![
+            i.to_string(),
+            shard_path,
+            layers.join(","),
+            shard_bytes.len().to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    let map_path = format!("{out}.shardmap");
+    std::fs::write(&map_path, map.to_bytes())?;
+    println!(
+        "wrote {map_path} ({} layers across {n_shards} shards)",
+        map.len()
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    use f2f::container::Container;
+    use f2f::container::{write_sharded, ShardAssignment};
     use f2f::coordinator::{InferenceServer, ServerConfig};
-    use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
-    use f2f::pipeline::{CompressionConfig, Compressor};
-    use f2f::pruning::PruneMethod;
+    use f2f::models::{compressed_mlp, MlpConfig};
+    use f2f::shard::ShardRouter;
     use f2f::store::{
         ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig,
+        StoreMetrics,
     };
     use std::sync::Arc;
 
@@ -172,76 +217,136 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seed: u64 = args.get("seed", 7)?;
     let n_layers: usize = args.get("layers", 4)?;
     let width: usize = args.get("width", 256)?;
-    // Decoded-weight cache budget; 0 = unbounded. Set it below the
-    // model's decoded size to exercise decode-on-miss / evict-cold.
+    // Decoded-weight cache budget (per store); 0 = unbounded. Set it
+    // below the model's decoded size to exercise decode-on-miss /
+    // evict-cold.
     let cache_kb: usize = args.get("cache-kb", 0)?;
-    // Decode service width; 0 = size to the host.
+    // Decode service width (per store); 0 = size to the host.
     let decode_threads: usize = args.get("decode-threads", 0)?;
     // Warm layer i+1 while layer i executes: on | off | <depth>.
     let readahead: ReadaheadPolicy =
         args.get_str("readahead", "on").parse()?;
+    // Split the model across this many stores behind a shard router.
+    let n_shards: usize = args.get("shards", 1)?;
 
     // Compress a multi-layer MLP-shaped model into an indexed container.
-    let compressor = Compressor::new(CompressionConfig {
-        sparsity: 0.9,
-        n_s: 1,
-        method: PruneMethod::Magnitude,
-        beam: Some(8),
-        seed,
-        ..Default::default()
-    });
     let t0 = std::time::Instant::now();
-    let mut container = Container::default();
-    for i in 0..n_layers {
-        let name = format!("mlp/fc{i}");
-        let spec =
-            LayerSpec { name: name.clone(), rows: width, cols: width };
-        let layer = SyntheticLayer::generate(
-            &spec,
-            WeightGen::default(),
-            seed.wrapping_add(i as u64),
-        );
-        let (q, scale) = quantize_i8(&layer.weights);
-        let (cl, rep) =
-            compressor.compress_i8(&name, width, width, &q, scale);
+    let (container, reports) = compressed_mlp(&MlpConfig {
+        seed,
+        name_prefix: "mlp/fc".into(),
+        ..MlpConfig::uniform(n_layers, width)
+    });
+    for rep in &reports {
         println!(
-            "compressed {name} ({width}x{width}): E={:.2}% \
+            "compressed {} ({width}x{width}): E={:.2}% \
              mem_reduction={:.2}%",
-            rep.efficiency, rep.memory_reduction
+            rep.name, rep.efficiency, rep.memory_reduction
         );
-        container.layers.push(cl);
     }
     println!("model compressed in {:?}", t0.elapsed());
-    let bytes = f2f::container::write_container_v2(&container);
 
     let budget = if cache_kb == 0 { usize::MAX } else { cache_kb << 10 };
-    let store = Arc::new(ModelStore::open_bytes(
-        bytes,
-        StoreConfig {
-            cache_budget_bytes: budget,
-            decode_workers: decode_threads,
-        },
-    )?);
-    println!(
-        "store: {} layers, decoded size {} KiB, budget {}, {} decode \
-         workers, readahead depth {}",
-        n_layers,
-        store.total_decoded_bytes() >> 10,
-        if budget == usize::MAX {
-            "unbounded".to_string()
-        } else {
-            format!("{} KiB", budget >> 10)
-        },
-        store.decode_workers(),
-        readahead.depth,
-    );
+    let store_config = StoreConfig {
+        cache_budget_bytes: budget,
+        decode_workers: decode_threads,
+    };
+    let budget_label = if budget == usize::MAX {
+        "unbounded".to_string()
+    } else {
+        format!("{} KiB", budget >> 10)
+    };
 
-    let backend =
-        ModelBackend::sequential(store.clone())?.with_readahead(readahead);
-    let server = InferenceServer::start(
-        ServerConfig { max_batch, ..Default::default() },
-        move || Box::new(backend),
-    );
+    let print_store_metrics = |label: &str, sm: &StoreMetrics| {
+        println!(
+            "{label}: hits={} misses={} decodes={} evictions={} \
+             cached={} KiB ({} layers)",
+            sm.hits,
+            sm.misses,
+            sm.decodes,
+            sm.evictions,
+            sm.cached_bytes >> 10,
+            sm.cached_layers,
+        );
+        println!(
+            "{label} readahead: prefetches={} skips={} \
+             redundant_decodes={}",
+            sm.prefetches, sm.readahead_skips, sm.redundant_decodes,
+        );
+    };
+
+    if n_shards <= 1 {
+        let bytes = f2f::container::write_container_v2(&container);
+        let store = Arc::new(ModelStore::open_bytes(bytes, store_config)?);
+        println!(
+            "store: {} layers, decoded size {} KiB, budget \
+             {budget_label}, {} decode workers, readahead depth {}",
+            n_layers,
+            store.total_decoded_bytes() >> 10,
+            store.decode_workers(),
+            readahead.depth,
+        );
+        let backend = ModelBackend::sequential(store.clone())?
+            .with_readahead(readahead);
+        let server = InferenceServer::start(
+            ServerConfig { max_batch, ..Default::default() },
+            move || Box::new(backend),
+        );
+        run_load(&server, requests, width, seed)?;
+        // Let trailing readahead decodes land so the printed counters
+        // are stable run to run.
+        store.wait_for_idle();
+        print_store_metrics("store", &store.metrics());
+        server.shutdown();
+    } else {
+        let (map, shard_bytes) =
+            write_sharded(&container, n_shards, ShardAssignment::ByBytes)?;
+        let stores = shard_bytes
+            .into_iter()
+            .map(|b| ModelStore::open_bytes(b, store_config).map(Arc::new))
+            .collect::<Result<Vec<_>>>()?;
+        for (i, s) in stores.iter().enumerate() {
+            let layers: Vec<&str> = map.layers_of(i).collect();
+            println!(
+                "shard {i}: layers [{}], decoded size {} KiB, budget \
+                 {budget_label}, {} decode workers",
+                layers.join(","),
+                s.total_decoded_bytes() >> 10,
+                s.decode_workers(),
+            );
+        }
+        let router = ShardRouter::new(stores.clone(), &map)?
+            .with_readahead(readahead);
+        let server = InferenceServer::start(
+            ServerConfig { max_batch, ..Default::default() },
+            move || Box::new(router),
+        );
+        run_load(&server, requests, width, seed)?;
+        // Let trailing cross-shard readahead decodes land so the
+        // printed counters are stable run to run.
+        for s in &stores {
+            s.wait_for_idle();
+        }
+        let mut total = StoreMetrics::default();
+        for (i, s) in stores.iter().enumerate() {
+            let sm = s.metrics();
+            print_store_metrics(&format!("shard {i}"), &sm);
+            total.merge(&sm);
+        }
+        print_store_metrics("all shards", &total);
+        server.shutdown();
+    }
+    Ok(())
+}
+
+/// Fire `requests` random vectors at the server and report throughput
+/// plus latency percentiles (shared by the single-store and sharded
+/// serve paths).
+fn run_load(
+    server: &f2f::coordinator::InferenceServer,
+    requests: usize,
+    width: usize,
+    seed: u64,
+) -> Result<()> {
     let mut rng = f2f::rng::Rng::new(seed);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
@@ -256,28 +361,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dt = t0.elapsed();
     let m = server.metrics();
     println!(
-        "{requests} requests in {dt:?} ({:.0} req/s), batches={} mean_batch={:.1}",
+        "{requests} requests in {dt:?} ({:.0} req/s), batches={} \
+         mean_batch={:.1}",
         requests as f64 / dt.as_secs_f64(),
         m.batches,
         m.mean_batch_size()
     );
     println!("latency p50={:?} p95={:?} p99={:?}", m.p50, m.p95, m.p99);
-    let sm = store.metrics();
-    println!(
-        "store: hits={} misses={} decodes={} evictions={} cached={} KiB \
-         ({} layers)",
-        sm.hits,
-        sm.misses,
-        sm.decodes,
-        sm.evictions,
-        sm.cached_bytes >> 10,
-        sm.cached_layers,
-    );
-    println!(
-        "readahead: prefetches={} skips={} redundant_decodes={}",
-        sm.prefetches, sm.readahead_skips, sm.redundant_decodes,
-    );
-    server.shutdown();
     Ok(())
 }
 

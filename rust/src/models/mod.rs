@@ -15,7 +15,9 @@ mod layers;
 mod synth;
 
 pub use layers::{resnet50_layers, transformer_layers, LayerSpec};
-pub use synth::{quantize_i8, SyntheticLayer, WeightGen};
+pub use synth::{
+    compressed_mlp, quantize_i8, MlpConfig, SyntheticLayer, WeightGen,
+};
 
 #[cfg(test)]
 mod tests {

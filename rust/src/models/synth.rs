@@ -1,6 +1,12 @@
-//! Synthetic weight generation with trained-network statistics.
+//! Synthetic weight generation with trained-network statistics, plus
+//! the shared compressed-MLP builder every serving-path consumer
+//! (benches, examples, CLI, integration tests) parameterizes instead of
+//! hand-rolling.
 
 use super::LayerSpec;
+use crate::container::Container;
+use crate::pipeline::{CompressionConfig, Compressor, LayerReport};
+use crate::pruning::PruneMethod;
 use crate::rng::Rng;
 
 /// Weight generator parameters.
@@ -72,6 +78,84 @@ pub fn quantize_i8(weights: &[f32]) -> (Vec<i8>, f32) {
         .map(|&w| (w / scale).round().clamp(-127.0, 127.0) as i8)
         .collect();
     (q, scale)
+}
+
+/// Parameters for [`compressed_mlp`]. Start from [`MlpConfig::new`] (or
+/// [`MlpConfig::uniform`]) and override fields with struct-update
+/// syntax: `MlpConfig { seed: 21, sparsity: 0.75, ..MlpConfig::new(&dims) }`.
+#[derive(Debug, Clone)]
+pub struct MlpConfig {
+    /// Layer widths: layer `i` is `dims[i+1] × dims[i]` (≥ 2 entries).
+    pub dims: Vec<usize>,
+    /// Base seed — layer `i`'s weights use `seed + i`, and the
+    /// compressor (masks, `M⊕` candidates) derives from `seed` too.
+    pub seed: u64,
+    /// Layer-name prefix: layer `i` is named `{name_prefix}{i}`.
+    pub name_prefix: String,
+    /// Pruning rate `S`.
+    pub sparsity: f64,
+    /// Decoder shift registers `N_s`.
+    pub n_s: usize,
+    /// Viterbi beam width (`None` = exact DP).
+    pub beam: Option<u32>,
+}
+
+impl MlpConfig {
+    /// Defaults shared by the serving demos: magnitude pruning at
+    /// `S = 0.9`, `N_s = 1`, beam 8, layers named `fc0..`.
+    pub fn new(dims: &[usize]) -> Self {
+        MlpConfig {
+            dims: dims.to_vec(),
+            seed: 7,
+            name_prefix: "fc".into(),
+            sparsity: 0.9,
+            n_s: 1,
+            beam: Some(8),
+        }
+    }
+
+    /// An `n_layers`-deep MLP of constant `width`.
+    pub fn uniform(n_layers: usize, width: usize) -> Self {
+        Self::new(&vec![width; n_layers + 1])
+    }
+}
+
+/// Build a compressed synthetic INT8 MLP: generate each layer's weights
+/// ([`SyntheticLayer::generate`]), quantize ([`quantize_i8`]), compress
+/// with the paper's fixed-to-fixed scheme, and return the container
+/// alongside the per-layer compression reports (for callers that print
+/// efficiency / memory-reduction summaries).
+pub fn compressed_mlp(cfg: &MlpConfig) -> (Container, Vec<LayerReport>) {
+    assert!(
+        cfg.dims.len() >= 2,
+        "an MLP needs at least input and output dims"
+    );
+    let compressor = Compressor::new(CompressionConfig {
+        sparsity: cfg.sparsity,
+        n_s: cfg.n_s,
+        method: PruneMethod::Magnitude,
+        beam: cfg.beam,
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let mut container = Container::default();
+    let mut reports = Vec::with_capacity(cfg.dims.len() - 1);
+    for (i, w) in cfg.dims.windows(2).enumerate() {
+        let (rows, cols) = (w[1], w[0]);
+        let name = format!("{}{i}", cfg.name_prefix);
+        let spec = LayerSpec { name: name.clone(), rows, cols };
+        let layer = SyntheticLayer::generate(
+            &spec,
+            WeightGen::default(),
+            cfg.seed.wrapping_add(i as u64),
+        );
+        let (q, scale) = quantize_i8(&layer.weights);
+        let (cl, rep) =
+            compressor.compress_i8(&name, rows, cols, &q, scale);
+        container.layers.push(cl);
+        reports.push(rep);
+    }
+    (container, reports)
 }
 
 #[cfg(test)]
@@ -156,5 +240,40 @@ mod tests {
         let t = l.truncated(1000);
         assert_eq!(t.spec.rows, 15);
         assert_eq!(t.weights.len(), 15 * 64);
+    }
+
+    #[test]
+    fn compressed_mlp_builds_the_named_chain() {
+        let cfg = MlpConfig {
+            seed: 11,
+            sparsity: 0.75,
+            name_prefix: "mlp/fc".into(),
+            ..MlpConfig::new(&[32, 24, 16])
+        };
+        let (c, reports) = compressed_mlp(&cfg);
+        assert_eq!(c.layers.len(), 2);
+        assert_eq!(reports.len(), 2);
+        assert_eq!(c.layers[0].name, "mlp/fc0");
+        assert_eq!(c.layers[1].name, "mlp/fc1");
+        assert_eq!((c.layers[0].rows, c.layers[0].cols), (24, 32));
+        assert_eq!((c.layers[1].rows, c.layers[1].cols), (16, 24));
+        // Deterministic in the seed.
+        let (again, _) = compressed_mlp(&cfg);
+        for (a, b) in c.layers.iter().zip(&again.layers) {
+            assert_eq!(a.planes, b.planes);
+            assert_eq!(a.mask, b.mask);
+        }
+        // Lossless: unpruned weights round-trip through decode.
+        let dec =
+            crate::sparse::DecodedLayer::from_compressed(&c.layers[0]);
+        assert_eq!(dec.rows * dec.cols, 24 * 32);
+    }
+
+    #[test]
+    fn uniform_mlp_dims() {
+        let cfg = MlpConfig::uniform(3, 16);
+        assert_eq!(cfg.dims, vec![16, 16, 16, 16]);
+        let (c, _) = compressed_mlp(&cfg);
+        assert_eq!(c.layers.len(), 3);
     }
 }

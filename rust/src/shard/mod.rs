@@ -1,0 +1,27 @@
+//! Sharded serving: one compressed model, N independent stores.
+//!
+//! The paper's fixed-to-fixed format makes every layer's compressed
+//! record a fixed, independently addressable unit — which is exactly
+//! what lets a model scale *horizontally*: split the v2 container with
+//! a [`crate::container::ShardMap`] (magic `F2F3`), open one
+//! byte-budgeted [`crate::store::ModelStore`] per shard file (each with
+//! its own persistent decode service, and — under the `mmap` feature —
+//! its own lazily-paged file mapping), and let a [`ShardRouter`] drive
+//! the forward chain across them:
+//!
+//! * each layer's pinned fetch goes to the store that owns it;
+//! * readahead is *cross-shard*: while layer `i`'s GEMV runs, layer
+//!   `i+1` warms on **its** shard's decode workers, so cold decode
+//!   parallelism multiplies with the shard count instead of queueing
+//!   on one service;
+//! * per-shard metrics fold into one aggregate [`ShardMetrics`]
+//!   snapshot.
+//!
+//! The router implements the coordinator's [`crate::coordinator::Backend`],
+//! so it drops behind an [`crate::coordinator::InferenceServer`] exactly
+//! like the single-store [`crate::store::ModelBackend`] — and produces
+//! bit-identical outputs (same decode, same GEMV order).
+
+mod router;
+
+pub use router::{ShardMetrics, ShardRouter};

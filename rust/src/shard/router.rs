@@ -1,0 +1,379 @@
+//! The shard router: a multi-store [`Backend`] for split models.
+
+use crate::container::ShardMap;
+use crate::coordinator::Backend;
+use crate::store::{
+    forward_chain, validate_chain, ModelStore, ReadaheadPolicy,
+    StoreConfig, StoreMetrics,
+};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// One step of the forward chain: the layer and the shard that owns it.
+struct ChainLink {
+    name: String,
+    shard: usize,
+}
+
+/// Aggregated router metrics: one snapshot per shard store, plus their
+/// field-wise sum (see [`StoreMetrics::merge`]).
+#[derive(Debug, Clone)]
+pub struct ShardMetrics {
+    /// Per-shard snapshots, indexed by shard id.
+    pub per_shard: Vec<StoreMetrics>,
+    /// Field-wise sum across shards.
+    pub total: StoreMetrics,
+}
+
+/// A sequential GEMV chain served from N independent [`ModelStore`]s,
+/// routed layer-by-layer through a [`ShardMap`]. Implements the
+/// coordinator's [`Backend`]; outputs are bit-identical to the
+/// single-store [`crate::store::ModelBackend`] on the same container.
+pub struct ShardRouter {
+    shards: Vec<Arc<ModelStore>>,
+    chain: Vec<ChainLink>,
+    readahead: ReadaheadPolicy,
+    input_dim: usize,
+    output_dim: usize,
+}
+
+impl ShardRouter {
+    /// Build a router over already-open stores (`shards[i]` serves
+    /// shard `i` of `map`). Validates that the store count matches the
+    /// map, that every assigned layer exists in its owning store, and
+    /// that consecutive chain dimensions line up — all from the
+    /// indexes; nothing is decoded here.
+    pub fn new(
+        shards: Vec<Arc<ModelStore>>,
+        map: &ShardMap,
+    ) -> Result<Self> {
+        if map.n_shards() != shards.len() {
+            bail!(
+                "shard map names {} shards but {} stores were supplied",
+                map.n_shards(),
+                shards.len()
+            );
+        }
+        if map.is_empty() {
+            bail!("shard map assigns no layers");
+        }
+        let mut chain = Vec::with_capacity(map.len());
+        let mut dims = Vec::with_capacity(map.len());
+        for (name, shard) in map.assignments() {
+            let Some(d) = shards[*shard].layer_dims(name) else {
+                bail!(
+                    "layer {name:?} assigned to shard {shard} but \
+                     missing from that store"
+                );
+            };
+            dims.push(d);
+            chain.push(ChainLink { name: name.clone(), shard: *shard });
+        }
+        let names: Vec<&str> =
+            chain.iter().map(|l| l.name.as_str()).collect();
+        let (input_dim, output_dim) = validate_chain(&names, &dims)?;
+        Ok(ShardRouter {
+            input_dim,
+            output_dim,
+            shards,
+            chain,
+            readahead: ReadaheadPolicy::default(),
+        })
+    }
+
+    /// Parse a serialized shard map and open one store per shard's
+    /// serialized v2 bytes (all with the same `config`).
+    pub fn from_bytes(
+        map_bytes: &[u8],
+        shard_bytes: Vec<Vec<u8>>,
+        config: StoreConfig,
+    ) -> Result<Self> {
+        let map = ShardMap::parse(map_bytes)?;
+        let shards = shard_bytes
+            .into_iter()
+            .enumerate()
+            .map(|(i, b)| {
+                ModelStore::open_bytes(b, config)
+                    .map(Arc::new)
+                    .with_context(|| format!("opening shard {i}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Self::new(shards, &map)
+    }
+
+    /// Open a sharded model from disk: the `F2F3` map file plus one v2
+    /// container file per shard (in shard-id order). With the `mmap`
+    /// feature each shard store maps its file, so a shard pages in only
+    /// the records it decodes.
+    pub fn open_paths<P: AsRef<Path>>(
+        map_path: impl AsRef<Path>,
+        shard_paths: &[P],
+        config: StoreConfig,
+    ) -> Result<Self> {
+        let map_path = map_path.as_ref();
+        let map_bytes = std::fs::read(map_path).with_context(|| {
+            format!("reading shard map {}", map_path.display())
+        })?;
+        let map = ShardMap::parse(&map_bytes)?;
+        let shards = shard_paths
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                ModelStore::open_path(p.as_ref(), config)
+                    .map(Arc::new)
+                    .with_context(|| format!("opening shard {i}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Self::new(shards, &map)
+    }
+
+    /// Replace the readahead policy (builder style).
+    pub fn with_readahead(mut self, policy: ReadaheadPolicy) -> Self {
+        self.readahead = policy;
+        self
+    }
+
+    /// Replace the readahead policy in place.
+    pub fn set_readahead(&mut self, policy: ReadaheadPolicy) {
+        self.readahead = policy;
+    }
+
+    /// The active readahead policy.
+    pub fn readahead(&self) -> ReadaheadPolicy {
+        self.readahead
+    }
+
+    /// The per-shard stores, indexed by shard id.
+    pub fn shards(&self) -> &[Arc<ModelStore>] {
+        &self.shards
+    }
+
+    /// Layer names in forward order.
+    pub fn chain(&self) -> Vec<&str> {
+        self.chain.iter().map(|l| l.name.as_str()).collect()
+    }
+
+    /// Warm the front of the chain, stopping once any shard's budget
+    /// would be exceeded by its own share of the warmed prefix (the
+    /// per-shard counterpart of `ModelBackend::prefetch_all`: early
+    /// layers — the ones traffic needs first — end up hot, never
+    /// decode-then-evict churn). The first layer is always warmed.
+    pub fn prefetch_all(&self) -> Result<()> {
+        let mut used = vec![0usize; self.shards.len()];
+        for (i, link) in self.chain.iter().enumerate() {
+            let store = &self.shards[link.shard];
+            let bytes =
+                store.layer_decoded_bytes(&link.name).unwrap_or(0);
+            if i > 0
+                && used[link.shard].saturating_add(bytes)
+                    > store.budget_bytes()
+            {
+                break;
+            }
+            used[link.shard] = used[link.shard].saturating_add(bytes);
+            store.prefetch(&link.name)?;
+        }
+        Ok(())
+    }
+
+    /// Block until no shard has a decode in flight (test / drain aid).
+    pub fn wait_for_idle(&self) {
+        for s in &self.shards {
+            s.wait_for_idle();
+        }
+    }
+
+    /// Aggregate metrics snapshot across every shard store.
+    pub fn metrics(&self) -> ShardMetrics {
+        let per_shard: Vec<StoreMetrics> =
+            self.shards.iter().map(|s| s.metrics()).collect();
+        let mut total = StoreMetrics::default();
+        for m in &per_shard {
+            total.merge(m);
+        }
+        ShardMetrics { per_shard, total }
+    }
+}
+
+impl Backend for ShardRouter {
+    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        // Resolve each chain step to its owning shard's store and run
+        // the exact same inner loop as the single-store `ModelBackend`
+        // (bit-identical outputs by construction). Readahead targets
+        // resolve to *their* shard, so upcoming layers warm on their
+        // own decode workers while this shard's GEMVs run — cold
+        // decode parallelism scales with the shard count.
+        let links: Vec<(&ModelStore, &str)> = self
+            .chain
+            .iter()
+            .map(|l| (self.shards[l.shard].as_ref(), l.name.as_str()))
+            .collect();
+        forward_chain(&links, self.readahead, xs)
+    }
+
+    fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    fn output_dim(&self) -> usize {
+        self.output_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::{
+        write_container_v2, write_sharded, ShardAssignment,
+    };
+    use crate::store::{test_model as model, ModelBackend};
+
+    fn open_all(
+        shard_bytes: Vec<Vec<u8>>,
+        config: StoreConfig,
+    ) -> Vec<Arc<ModelStore>> {
+        shard_bytes
+            .into_iter()
+            .map(|b| Arc::new(ModelStore::open_bytes(b, config).unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn router_matches_single_store_bit_exact() {
+        let c = model(&[20, 16, 12, 8], 60);
+        let xs: Vec<Vec<f32>> = (0..3)
+            .map(|i| {
+                (0..20).map(|j| ((i * j) as f32 * 0.1).sin()).collect()
+            })
+            .collect();
+        let single = Arc::new(ModelStore::from_container(
+            c.clone(),
+            StoreConfig::default(),
+        ));
+        let want = ModelBackend::sequential(single)
+            .unwrap()
+            .forward_batch(&xs)
+            .unwrap();
+        for strategy in
+            [ShardAssignment::RoundRobin, ShardAssignment::ByBytes]
+        {
+            let (map, shard_bytes) =
+                write_sharded(&c, 2, strategy).unwrap();
+            let mut router = ShardRouter::new(
+                open_all(shard_bytes, StoreConfig::default()),
+                &map,
+            )
+            .unwrap();
+            assert_eq!(router.input_dim(), 20);
+            assert_eq!(router.output_dim(), 8);
+            assert_eq!(router.chain(), vec!["fc0", "fc1", "fc2"]);
+            let got = router.forward_batch(&xs).unwrap();
+            assert_eq!(got, want, "{strategy:?} must be bit-exact");
+            router.wait_for_idle();
+            let m = router.metrics();
+            assert_eq!(m.per_shard.len(), 2);
+            assert_eq!(m.total.decodes, 3, "each layer decodes once");
+            assert_eq!(m.total.redundant_decodes, 0);
+            assert_eq!(m.total.pinned_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn from_bytes_round_trips_the_sidecar() {
+        let c = model(&[16, 12, 8], 61);
+        let (map, shard_bytes) =
+            write_sharded(&c, 2, ShardAssignment::ByBytes).unwrap();
+        let mut router = ShardRouter::from_bytes(
+            &map.to_bytes(),
+            shard_bytes,
+            StoreConfig::default(),
+        )
+        .unwrap()
+        .with_readahead(ReadaheadPolicy::off());
+        assert!(!router.readahead().enabled());
+        let ys = router.forward_batch(&[vec![0.25; 16]]).unwrap();
+        assert_eq!(ys[0].len(), 8);
+    }
+
+    #[test]
+    fn rejects_mismatched_store_count_and_missing_layers() {
+        let c = model(&[16, 12, 8], 62);
+        let (map, shard_bytes) =
+            write_sharded(&c, 2, ShardAssignment::RoundRobin).unwrap();
+        // One store short of the map's shard count.
+        let one = open_all(
+            vec![shard_bytes[0].clone()],
+            StoreConfig::default(),
+        );
+        let err = ShardRouter::new(one, &map).unwrap_err();
+        assert!(format!("{err}").contains("2 shards but 1 stores"));
+        // Stores swapped: every layer is missing from its mapped store.
+        let mut swapped = shard_bytes;
+        swapped.reverse();
+        let err = ShardRouter::new(
+            open_all(swapped, StoreConfig::default()),
+            &map,
+        )
+        .unwrap_err();
+        assert!(
+            format!("{err}").contains("missing from that store"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn rejects_incompatible_chain_dims() {
+        // Two containers whose maps collide: build a model whose chain
+        // dims don't line up by splitting a valid model and then
+        // serving shard files from a *different* geometry under the
+        // original map — simplest is a 1-shard map over a reversed
+        // chain, which new() must reject via the dim check.
+        let c = model(&[20, 16, 12], 63);
+        let mut rev = c.clone();
+        rev.layers.reverse();
+        let bytes = write_container_v2(&rev);
+        let (map, shard_bytes) = crate::container::split_container(
+            &bytes,
+            1,
+            ShardAssignment::RoundRobin,
+        )
+        .unwrap();
+        let err = ShardRouter::new(
+            open_all(shard_bytes, StoreConfig::default()),
+            &map,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("chain mismatch"), "{err}");
+    }
+
+    #[test]
+    fn prefetch_all_warms_front_within_per_shard_budgets() {
+        let dims = [16usize, 16, 16, 16, 16];
+        let c = model(&dims, 64);
+        let layer_bytes = 16 * 16 * 4;
+        let (map, shard_bytes) =
+            write_sharded(&c, 2, ShardAssignment::RoundRobin).unwrap();
+        // Each shard holds 2 layers; budget one layer per shard.
+        let router = ShardRouter::new(
+            open_all(
+                shard_bytes,
+                StoreConfig {
+                    cache_budget_bytes: layer_bytes,
+                    decode_workers: 1,
+                },
+            ),
+            &map,
+        )
+        .unwrap();
+        router.prefetch_all().unwrap();
+        // fc0 (shard 0) and fc1 (shard 1) fit; fc2 would overflow
+        // shard 0's budget, so warming stops before churn.
+        assert!(router.shards()[0].is_cached("fc0"));
+        assert!(router.shards()[1].is_cached("fc1"));
+        assert!(!router.shards()[0].is_cached("fc2"));
+        let m = router.metrics();
+        assert_eq!(m.total.decodes, 2);
+        assert_eq!(m.total.evictions, 0);
+    }
+}

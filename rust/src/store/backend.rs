@@ -19,6 +19,74 @@ use crate::coordinator::Backend;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
+/// Validate a forward chain's dimensions (`rows(Lᵢ) == cols(Lᵢ₊₁)`)
+/// and return `(input_dim, output_dim)`. Shared by [`ModelBackend`]
+/// and the multi-store [`crate::shard::ShardRouter`].
+pub(crate) fn validate_chain(
+    names: &[&str],
+    dims: &[(usize, usize)],
+) -> Result<(usize, usize)> {
+    debug_assert_eq!(names.len(), dims.len());
+    for (i, w) in dims.windows(2).enumerate() {
+        let ((rows_a, _), (_, cols_b)) = (w[0], w[1]);
+        if rows_a != cols_b {
+            bail!(
+                "chain mismatch: {} outputs {rows_a} but {} expects \
+                 {cols_b}",
+                names[i],
+                names[i + 1]
+            );
+        }
+    }
+    Ok((dims[0].1, dims[dims.len() - 1].0))
+}
+
+/// THE serving inner loop: `links[i]` is the store owning layer `i`
+/// plus the layer's name. Per layer: one *pinned* fetch (every request
+/// in the batch reuses the Arc, the LRU sees layer-granular traffic,
+/// and a readahead install can never evict the executing layer), then
+/// the readahead policy's targets warm asynchronously *on their own
+/// store* while this layer's GEMVs run, ReLU between hidden layers.
+///
+/// The single-store [`ModelBackend`] and the multi-store
+/// [`crate::shard::ShardRouter`] both run exactly this function —
+/// which is what makes their outputs bit-identical by construction.
+pub(crate) fn forward_chain(
+    links: &[(&ModelStore, &str)],
+    readahead: ReadaheadPolicy,
+    xs: &[Vec<f32>],
+) -> Result<Vec<Vec<f32>>> {
+    let mut acts: Vec<Vec<f32>> = xs.to_vec();
+    let Some(last) = links.len().checked_sub(1) else {
+        return Ok(acts); // empty chain: constructors reject this
+    };
+    for (i, (store, name)) in links.iter().enumerate() {
+        let layer = store
+            .get_pinned(name)
+            .with_context(|| format!("fetching layer {name:?}"))?;
+        // Warm upcoming layers *while this one executes*: their decode
+        // overlaps the GEMVs below, and — because the pin is already
+        // held — readahead admission correctly accounts for the
+        // executing layer's bytes.
+        for t in readahead.targets(i, links.len()) {
+            let (ahead_store, ahead_name) = links[t];
+            ahead_store.prefetch_async(ahead_name);
+        }
+        for a in acts.iter_mut() {
+            let mut y = layer.gemv(a);
+            if i < last {
+                for v in &mut y {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            *a = y;
+        }
+    }
+    Ok(acts)
+}
+
 /// A sequential GEMV chain (`x → L₀ → ReLU → L₁ → … → L_{n−1}`) served
 /// from a [`ModelStore`]; implements the coordinator's [`Backend`].
 pub struct ModelBackend {
@@ -46,20 +114,11 @@ impl ModelBackend {
             };
             dims.push(d);
         }
-        for (i, w) in dims.windows(2).enumerate() {
-            let ((rows_a, _), (_, cols_b)) = (w[0], w[1]);
-            if rows_a != cols_b {
-                bail!(
-                    "chain mismatch: {} outputs {rows_a} but {} expects \
-                     {cols_b}",
-                    chain[i],
-                    chain[i + 1]
-                );
-            }
-        }
+        let names: Vec<&str> = chain.iter().map(String::as_str).collect();
+        let (input_dim, output_dim) = validate_chain(&names, &dims)?;
         Ok(ModelBackend {
-            input_dim: dims[0].1,
-            output_dim: dims[dims.len() - 1].0,
+            input_dim,
+            output_dim,
             store,
             chain,
             readahead: ReadaheadPolicy::default(),
@@ -121,36 +180,12 @@ impl ModelBackend {
 
 impl Backend for ModelBackend {
     fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let mut acts: Vec<Vec<f32>> = xs.to_vec();
-        let last = self.chain.len() - 1;
-        for (i, name) in self.chain.iter().enumerate() {
-            // One pinned fetch per layer per batch: every request in the
-            // batch reuses the Arc, the LRU sees layer-granular traffic,
-            // and readahead installs cannot evict the executing layer.
-            let layer = self
-                .store
-                .get_pinned(name)
-                .with_context(|| format!("fetching layer {name:?}"))?;
-            // Warm upcoming layers *while this one executes*: their
-            // decode overlaps the GEMVs below, and — because the pin is
-            // already held — readahead admission correctly accounts for
-            // the executing layer's bytes.
-            for t in self.readahead.targets(i, self.chain.len()) {
-                self.store.prefetch_async(&self.chain[t]);
-            }
-            for a in acts.iter_mut() {
-                let mut y = layer.gemv(a);
-                if i < last {
-                    for v in &mut y {
-                        if *v < 0.0 {
-                            *v = 0.0;
-                        }
-                    }
-                }
-                *a = y;
-            }
-        }
-        Ok(acts)
+        let links: Vec<(&ModelStore, &str)> = self
+            .chain
+            .iter()
+            .map(|name| (self.store.as_ref(), name.as_str()))
+            .collect();
+        forward_chain(&links, self.readahead, xs)
     }
 
     fn input_dim(&self) -> usize {

@@ -25,47 +25,41 @@
 //! * [`ModelBackend`] — a readahead-driven multi-layer forward pass
 //!   (sequential GEMV chain, ReLU between hidden layers) that plugs
 //!   into the coordinator's [`crate::coordinator::InferenceServer`].
+//! * [`RecordSource`] — where the compressed bytes live: owned memory,
+//!   or (with the `mmap` feature) a read-only file mapping that pages
+//!   in only the records this store decodes. One store per shard of a
+//!   [`crate::container::ShardMap`]-split model is the intended
+//!   deployment; [`crate::shard::ShardRouter`] chains them.
 
 mod backend;
 mod model_store;
 mod pool;
 mod readahead;
+mod source;
 
 pub use backend::ModelBackend;
+pub(crate) use backend::{forward_chain, validate_chain};
 pub use model_store::{ModelStore, PinnedLayer, StoreConfig, StoreMetrics};
 pub use pool::{DecodeHandle, DecodeOutcome, DecodePool, DecodeService};
 pub use readahead::ReadaheadPolicy;
+pub use source::RecordSource;
 
 /// Build a small compressed INT8 layer chain (`dims[i+1] × dims[i]`,
-/// named `fc0..`) — shared scaffolding for the store unit tests.
+/// named `fc0..`) — shared scaffolding for the store unit tests, a thin
+/// preset over [`crate::models::compressed_mlp`].
 #[cfg(test)]
 pub(crate) fn test_model(
     dims: &[usize],
     seed: u64,
 ) -> crate::container::Container {
-    use crate::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
-    use crate::pipeline::{CompressionConfig, Compressor};
-    let cfg = CompressionConfig {
+    crate::models::compressed_mlp(&crate::models::MlpConfig {
+        seed,
         sparsity: 0.75,
         n_s: 0,
-        ..Default::default()
-    };
-    let comp = Compressor::new(cfg);
-    let mut c = crate::container::Container::default();
-    for i in 0..dims.len() - 1 {
-        let (rows, cols) = (dims[i + 1], dims[i]);
-        let name = format!("fc{i}");
-        let spec = LayerSpec { name: name.clone(), rows, cols };
-        let layer = SyntheticLayer::generate(
-            &spec,
-            WeightGen::default(),
-            seed + i as u64,
-        );
-        let (q, scale) = quantize_i8(&layer.weights);
-        let (cl, _) = comp.compress_i8(&name, rows, cols, &q, scale);
-        c.layers.push(cl);
-    }
-    c
+        beam: None,
+        ..crate::models::MlpConfig::new(dims)
+    })
+    .0
 }
 
 #[cfg(test)]

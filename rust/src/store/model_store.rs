@@ -23,8 +23,18 @@
 //!   currently executing its GEMV. `prefetch_async` also declines
 //!   layers that cannot fit in the budget alongside the pinned working
 //!   set (`readahead_skips`).
+//! * **Parse off the hot path** — the compressed-record parse of a miss
+//!   or readahead runs as the decode task's first worker job
+//!   ([`DecodeService::decode_parse_then`]), so the serving thread pays
+//!   one queue push per warm, independent of record size.
+//! * **Record source** — the container bytes sit behind a
+//!   [`RecordSource`]: owned bytes ([`ModelStore::open_bytes`]) or a
+//!   read-only mmap ([`ModelStore::open_path`], `mmap` feature), under
+//!   which only the records this store decodes are ever paged in — the
+//!   substrate for running one shard of a split model per store.
 
 use super::pool::{DecodeOutcome, DecodeService};
+use super::source::RecordSource;
 use crate::container::{
     read_container, read_layer_at, CompressedLayer, Container,
     ContainerIndex,
@@ -32,6 +42,7 @@ use crate::container::{
 use crate::sparse::DecodedLayer;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Store knobs.
@@ -77,10 +88,30 @@ pub struct StoreMetrics {
     pub pinned_bytes: usize,
 }
 
+impl StoreMetrics {
+    /// Accumulate another store's counters into this snapshot — how a
+    /// [`crate::shard::ShardRouter`] folds its per-shard stores into
+    /// one aggregate view.
+    pub fn merge(&mut self, other: &StoreMetrics) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.decodes += other.decodes;
+        self.evictions += other.evictions;
+        self.prefetches += other.prefetches;
+        self.redundant_decodes += other.redundant_decodes;
+        self.readahead_skips += other.readahead_skips;
+        self.cached_bytes += other.cached_bytes;
+        self.cached_layers += other.cached_layers;
+        self.pinned_bytes += other.pinned_bytes;
+    }
+}
+
 /// Where the compressed records come from.
 enum Source {
-    /// Indexed v2 bytes: a miss parses exactly one layer record.
-    Indexed { bytes: Vec<u8>, index: ContainerIndex },
+    /// Indexed v2 bytes behind a [`RecordSource`] (owned bytes or a
+    /// read-only mmap): a miss parses exactly one layer record, and
+    /// under an mmap only the touched records ever page in.
+    Indexed { source: RecordSource, index: ContainerIndex },
     /// Pre-parsed layers (v1 files or in-memory containers), shared
     /// with decode jobs by refcount rather than deep copy.
     Parsed { layers: Vec<Arc<CompressedLayer>> },
@@ -155,13 +186,15 @@ struct StoreInner {
 
 impl StoreInner {
     /// Parse (or refcount-share) the compressed record for `name`.
+    /// Runs on a decode worker (the parse stage of
+    /// [`ModelStore::start_decode`]), never on the serving thread.
     fn compressed_layer(&self, name: &str) -> Result<Arc<CompressedLayer>> {
         match &self.source {
-            Source::Indexed { bytes, index } => {
+            Source::Indexed { source, index } => {
                 let Some(entry) = index.find(name) else {
                     bail!("layer {name:?} not in container index");
                 };
-                read_layer_at(bytes, entry).map(Arc::new)
+                read_layer_at(source.as_slice(), entry).map(Arc::new)
             }
             Source::Parsed { layers } => {
                 let Some(compressed) =
@@ -351,11 +384,33 @@ impl ModelStore {
     /// Open serialized container bytes (v2 stays indexed — random
     /// access per miss; v1 is parsed eagerly but still decodes lazily).
     pub fn open_bytes(bytes: Vec<u8>, config: StoreConfig) -> Result<Self> {
-        let source = if crate::container::is_v2(&bytes) {
-            let index = ContainerIndex::parse(&bytes)?;
-            Source::Indexed { bytes, index }
+        Self::open_record_source(RecordSource::from_bytes(bytes), config)
+    }
+
+    /// Open a container file. With the `mmap` feature (unix) the file
+    /// is memory-mapped read-only, so only the layer records this store
+    /// actually decodes are ever paged in — the natural fit for one
+    /// shard of a split model. Without the feature the file is read
+    /// eagerly; behavior is identical either way.
+    pub fn open_path(
+        path: impl AsRef<Path>,
+        config: StoreConfig,
+    ) -> Result<Self> {
+        Self::open_record_source(
+            RecordSource::open(path.as_ref())?,
+            config,
+        )
+    }
+
+    fn open_record_source(
+        source: RecordSource,
+        config: StoreConfig,
+    ) -> Result<Self> {
+        let source = if crate::container::is_v2(source.as_slice()) {
+            let index = ContainerIndex::parse(source.as_slice())?;
+            Source::Indexed { source, index }
         } else {
-            let c = read_container(&bytes)?;
+            let c = read_container(source.as_slice())?;
             Source::Parsed {
                 layers: c.layers.into_iter().map(Arc::new).collect(),
             }
@@ -434,6 +489,15 @@ impl ModelStore {
     /// Cache budget in bytes.
     pub fn budget_bytes(&self) -> usize {
         self.inner.budget
+    }
+
+    /// True when the compressed records live behind a file mapping
+    /// (paged in on demand) rather than owned in-memory bytes.
+    pub fn source_mapped(&self) -> bool {
+        matches!(
+            &self.inner.source,
+            Source::Indexed { source, .. } if source.is_mapped()
+        )
     }
 
     /// True if `name` is currently decoded in cache (does not touch
@@ -552,26 +616,26 @@ impl ModelStore {
 
     /// Register-then-submit: the caller must already hold the in-flight
     /// registration for `name` (see [`Self::lookup`] /
-    /// [`Self::prefetch_async`]).
+    /// [`Self::prefetch_async`]). The compressed-record parse runs on a
+    /// decode worker too (not here), so submitting — a readahead from
+    /// the serving thread, in particular — costs one queue push
+    /// regardless of how large the layer record is.
     fn start_decode(&self, name: &str, flight: Arc<InFlight>) {
-        match self.inner.compressed_layer(name) {
-            Err(e) => {
-                self.inner.abort(name, format!("{e:#}"), &flight);
-            }
-            Ok(layer) => {
-                let inner = self.inner.clone();
-                let key = name.to_string();
-                let _handle =
-                    self.service.decode_async_then(layer, move |outcome| {
-                        match outcome {
-                            Ok(decoded) => {
-                                inner.install(&key, decoded, &flight)
-                            }
-                            Err(msg) => inner.abort(&key, msg, &flight),
-                        }
-                    });
-            }
-        }
+        let parse_inner = self.inner.clone();
+        let parse_key = name.to_string();
+        let inner = self.inner.clone();
+        let key = name.to_string();
+        let _handle = self.service.decode_parse_then(
+            move || {
+                parse_inner
+                    .compressed_layer(&parse_key)
+                    .map_err(|e| format!("{e:#}"))
+            },
+            move |outcome| match outcome {
+                Ok(decoded) => inner.install(&key, decoded, &flight),
+                Err(msg) => inner.abort(&key, msg, &flight),
+            },
+        );
     }
 
     fn lookup(&self, name: &str) -> Fetch {
@@ -658,6 +722,27 @@ mod tests {
         // Misses on unknown layers error, clean up, and keep erroring.
         assert!(store.get("nope").is_err());
         assert!(store.get("nope").is_err());
+    }
+
+    #[test]
+    fn open_path_serves_from_disk() {
+        let c = model(&[16, 12], 36);
+        let want = DecodedLayer::from_compressed(&c.layers[0]).weights;
+        let path = std::env::temp_dir().join(format!(
+            "f2f-store-open-path-{}.f2f",
+            std::process::id()
+        ));
+        std::fs::write(&path, write_container_v2(&c)).unwrap();
+        let store =
+            ModelStore::open_path(&path, StoreConfig::default()).unwrap();
+        #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+        assert!(
+            store.source_mapped(),
+            "unix + mmap feature must map container files"
+        );
+        assert_eq!(store.get("fc0").unwrap().weights, want);
+        drop(store);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

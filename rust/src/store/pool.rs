@@ -14,7 +14,10 @@
 //!   [`DecodeHandle`] waits for the result, and an optional completion
 //!   callback lets the model store install decoded layers into its cache
 //!   the moment the last plane lands — the mechanism behind readahead
-//!   (decode of layer `i+1` overlapping layer `i`'s GEMV).
+//!   (decode of layer `i+1` overlapping layer `i`'s GEMV). Via
+//!   [`DecodeService::decode_parse_then`] even the compressed-record
+//!   *parse* runs as the task's first worker job, so a readahead submit
+//!   costs the caller one queue push regardless of record size.
 
 use crate::container::{CompressedLayer, Container};
 use crate::decoder::SequentialDecoder;
@@ -221,8 +224,16 @@ struct ServiceShared {
 /// by whichever worker finishes last. A panic in any job (malformed
 /// plane data) completes the task with an error instead of hanging its
 /// waiters or killing the worker.
+///
+/// The compressed layer itself may arrive in two ways: pre-parsed at
+/// submit time ([`DecodeService::decode_async_then`]), or produced by a
+/// *parse stage* that runs as the task's first worker job
+/// ([`DecodeService::decode_parse_then`]) — so the submitting thread
+/// never pays the record parse. [`LayerTask::begin`] arms the task with
+/// the layer in both cases, always before any plane job can run.
 struct LayerTask {
-    layer: Arc<CompressedLayer>,
+    /// Set once by [`LayerTask::begin`] before any plane job runs.
+    layer: std::sync::OnceLock<Arc<CompressedLayer>>,
     /// Built lazily by the first worker job (tables are up to
     /// `(N_s+1)·2^N_in` entries — too heavy for the submitting thread).
     decoder: std::sync::OnceLock<SequentialDecoder>,
@@ -234,18 +245,37 @@ struct LayerTask {
 }
 
 impl LayerTask {
-    fn new(layer: Arc<CompressedLayer>, on_done: Option<OnDone>) -> Self {
-        let n_planes = layer.planes.len();
+    fn new(on_done: Option<OnDone>) -> Self {
         LayerTask {
+            layer: std::sync::OnceLock::new(),
             decoder: std::sync::OnceLock::new(),
-            planes: Mutex::new(vec![None; n_planes]),
-            // A plane-less layer still runs one (assembly-only) job.
-            remaining: AtomicUsize::new(n_planes.max(1)),
+            planes: Mutex::new(Vec::new()),
+            remaining: AtomicUsize::new(0),
             done: Mutex::new(None),
             cv: Condvar::new(),
             on_done: Mutex::new(on_done),
-            layer,
         }
+    }
+
+    /// Arm the task with its parsed layer. Must be called exactly once,
+    /// strictly before any plane job is queued; returns the plane count.
+    fn begin(&self, layer: Arc<CompressedLayer>) -> usize {
+        let n_planes = layer.planes.len();
+        *self.planes.lock().unwrap() = vec![None; n_planes];
+        // A plane-less layer still runs one (assembly-only) job.
+        self.remaining.store(n_planes.max(1), Ordering::Release);
+        assert!(
+            self.layer.set(layer).is_ok(),
+            "LayerTask::begin called twice"
+        );
+        n_planes
+    }
+
+    fn layer_name(&self) -> String {
+        self.layer
+            .get()
+            .map(|l| l.name.clone())
+            .unwrap_or_default()
     }
 
     fn run_plane(&self, k: usize) {
@@ -257,10 +287,12 @@ impl LayerTask {
         // No lock is held during the decode, so a panic cannot poison
         // shared state; it becomes this task's error outcome.
         let decoded = catch_unwind(AssertUnwindSafe(|| {
+            let layer =
+                self.layer.get().expect("plane job before begin");
             let decoder = self.decoder.get_or_init(|| {
-                SequentialDecoder::random(self.layer.spec, self.layer.m_seed)
+                SequentialDecoder::random(layer.spec, layer.m_seed)
             });
-            decode_plane(&self.layer, decoder, k)
+            decode_plane(layer, decoder, k)
         }));
         match decoded {
             Ok(bits) => {
@@ -274,13 +306,15 @@ impl LayerTask {
             Err(_) => self.complete(Err(format!(
                 "decode of layer {:?} plane {k} panicked \
                  (malformed plane data?)",
-                self.layer.name
+                self.layer_name()
             ))),
         }
     }
 
     fn finish(&self) {
         let assembled = catch_unwind(AssertUnwindSafe(|| {
+            let layer =
+                self.layer.get().expect("assembly before begin");
             let planes: Vec<BitVecF2> = {
                 let mut slots = self.planes.lock().unwrap();
                 slots
@@ -288,13 +322,13 @@ impl LayerTask {
                     .map(|p| p.take().expect("every plane decoded"))
                     .collect()
             };
-            assemble(&self.layer, &planes)
+            assemble(layer, &planes)
         }));
         match assembled {
             Ok(layer) => self.complete(Ok(Arc::new(layer))),
             Err(_) => self.complete(Err(format!(
                 "assembly of layer {:?} panicked (malformed layer?)",
-                self.layer.name
+                self.layer_name()
             ))),
         }
     }
@@ -415,27 +449,80 @@ impl DecodeService {
     where
         F: FnOnce(DecodeOutcome) + Send + 'static,
     {
-        let n_planes = layer.planes.len();
-        let task = Arc::new(LayerTask::new(layer, Some(Box::new(on_done))));
-        if n_planes == 0 {
-            let t = task.clone();
-            self.submit(Box::new(move || t.finish()));
-        } else {
-            for k in 0..n_planes {
-                let t = task.clone();
-                self.submit(Box::new(move || t.run_plane(k)));
+        let task = Arc::new(LayerTask::new(Some(Box::new(on_done))));
+        let n_planes = task.begin(layer);
+        spawn_plane_jobs(&self.shared, &task, n_planes);
+        DecodeHandle { task }
+    }
+
+    /// Queue a decode whose compressed record is *parsed on a worker*:
+    /// `parse` runs as the task's first background job, then the plane
+    /// jobs fan out from there. The submitting thread pays one queue
+    /// push, never the record parse — for a serving thread issuing
+    /// readahead this keeps the overlap window intact even for very
+    /// large layer records. A `parse` error (or panic) becomes the
+    /// task's outcome, exactly like a plane-decode failure.
+    pub fn decode_parse_then<P, F>(
+        &self,
+        parse: P,
+        on_done: F,
+    ) -> DecodeHandle
+    where
+        P: FnOnce() -> std::result::Result<Arc<CompressedLayer>, String>
+            + Send
+            + 'static,
+        F: FnOnce(DecodeOutcome) + Send + 'static,
+    {
+        let task = Arc::new(LayerTask::new(Some(Box::new(on_done))));
+        let t = task.clone();
+        let shared = self.shared.clone();
+        self.submit(Box::new(move || {
+            match catch_unwind(AssertUnwindSafe(parse)) {
+                Err(_) => t.complete(Err(
+                    "compressed-record parse panicked".to_string(),
+                )),
+                Ok(Err(msg)) => t.complete(Err(msg)),
+                Ok(Ok(layer)) => {
+                    let n_planes = t.begin(layer);
+                    spawn_plane_jobs(&shared, &t, n_planes);
+                }
             }
-        }
+        }));
         DecodeHandle { task }
     }
 
     fn submit(&self, job: Job) {
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.queue.push_back(job);
-        }
-        self.shared.cv.notify_one();
+        submit_job(&self.shared, job);
     }
+}
+
+/// Queue the plane jobs (or the assembly-only job) of an armed task.
+fn spawn_plane_jobs(
+    shared: &Arc<ServiceShared>,
+    task: &Arc<LayerTask>,
+    n_planes: usize,
+) {
+    if n_planes == 0 {
+        let t = task.clone();
+        submit_job(shared, Box::new(move || t.finish()));
+    } else {
+        for k in 0..n_planes {
+            let t = task.clone();
+            submit_job(shared, Box::new(move || t.run_plane(k)));
+        }
+    }
+}
+
+/// Push one job and wake a worker (also callable from *inside* a worker
+/// job — the parse stage queues its plane jobs this way; during drain
+/// the submitting worker itself keeps popping until the queue is empty,
+/// so mid-shutdown submissions still run).
+fn submit_job(shared: &Arc<ServiceShared>, job: Job) {
+    {
+        let mut st = shared.state.lock().unwrap();
+        st.queue.push_back(job);
+    }
+    shared.cv.notify_one();
 }
 
 impl Drop for DecodeService {
@@ -599,6 +686,55 @@ mod tests {
         assert!(err.is_err(), "panicked decode must report an error");
         // The workers survived: a well-formed decode still succeeds.
         let ok = compress("fine", 8, 32, 51);
+        let want = DecodedLayer::from_compressed(&ok);
+        let got = svc.decode_async(Arc::new(ok)).wait().unwrap();
+        assert_eq!(got.weights, want.weights);
+    }
+
+    #[test]
+    fn parse_stage_runs_on_a_worker_thread() {
+        let cl = compress("lazy", 8, 32, 40);
+        let want = DecodedLayer::from_compressed(&cl);
+        let svc = DecodeService::new(2);
+        let submitter = std::thread::current().id();
+        let parse_thread =
+            Arc::new(Mutex::new(None::<std::thread::ThreadId>));
+        let pt = parse_thread.clone();
+        let h = svc.decode_parse_then(
+            move || {
+                *pt.lock().unwrap() = Some(std::thread::current().id());
+                Ok(Arc::new(cl))
+            },
+            |_| {},
+        );
+        let decoded = h.wait().unwrap();
+        assert_eq!(decoded.weights, want.weights);
+        let ran_on = parse_thread.lock().unwrap().expect("parse ran");
+        assert_ne!(
+            ran_on, submitter,
+            "the record parse must run on a decode worker, \
+             not the submitting thread"
+        );
+    }
+
+    #[test]
+    fn parse_stage_errors_and_panics_fail_the_handle() {
+        let svc = DecodeService::new(1);
+        let err = svc
+            .decode_parse_then(|| Err("record rotted".into()), |_| {})
+            .wait()
+            .unwrap_err();
+        assert!(format!("{err}").contains("record rotted"));
+        let err = svc
+            .decode_parse_then(
+                || panic!("hostile bytes"),
+                |_| {},
+            )
+            .wait()
+            .unwrap_err();
+        assert!(format!("{err}").contains("parse panicked"));
+        // The worker survived both failures.
+        let ok = compress("after", 8, 32, 41);
         let want = DecodedLayer::from_compressed(&ok);
         let got = svc.decode_async(Arc::new(ok)).wait().unwrap();
         assert_eq!(got.weights, want.weights);

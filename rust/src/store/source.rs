@@ -1,0 +1,236 @@
+//! Record source: where a store's compressed container bytes live.
+//!
+//! [`crate::store::ModelStore`] used to hold the whole serialized
+//! container in an eagerly-loaded `Vec<u8>`. For a sharded serving tier
+//! that is waste twice over: every shard store pays resident memory for
+//! records it never decodes, and startup reads the full file front to
+//! back. A [`RecordSource`] abstracts "bytes the record reader can
+//! slice":
+//!
+//! * **Owned bytes** — the in-memory path (`open_bytes`, tests,
+//!   benches). Always available.
+//! * **Memory-mapped file** (`mmap` feature, unix) —
+//!   [`RecordSource::open`] maps the container read-only and the OS
+//!   pages in only the records decode actually touches, which for one
+//!   shard is just its own slice of the layer index.
+//!
+//! The mapping is implemented against raw `mmap(2)`/`munmap(2)` with a
+//! local extern declaration (no external crate, so the build stays
+//! fully offline). The extern signature assumes LP64 (`off_t` = `i64`),
+//! so the mapped path is additionally gated on
+//! `target_pointer_width = "64"`; builds without the feature, non-unix
+//! targets, and non-LP64 targets all transparently fall back to reading
+//! the file into owned bytes — nothing above this module ever branches
+//! on the feature.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Container bytes behind a uniform read-only slice view.
+pub struct RecordSource(Repr);
+
+enum Repr {
+    Bytes(Vec<u8>),
+    #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+    Mapped(mapped::MmapRegion),
+}
+
+impl RecordSource {
+    /// Wrap owned in-memory bytes.
+    pub fn from_bytes(bytes: Vec<u8>) -> Self {
+        RecordSource(Repr::Bytes(bytes))
+    }
+
+    /// Open a file: memory-mapped when the `mmap` feature is enabled on
+    /// unix; otherwise (or for empty files, or if the mapping fails)
+    /// read eagerly into owned bytes.
+    pub fn open(path: &Path) -> Result<Self> {
+        #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+        if let Ok(Some(region)) = mapped::MmapRegion::map_file(path) {
+            return Ok(RecordSource(Repr::Mapped(region)));
+        }
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(RecordSource(Repr::Bytes(bytes)))
+    }
+
+    /// The full byte view (record readers slice into this).
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.0 {
+            Repr::Bytes(b) => b,
+            #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+            Repr::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// Length in bytes.
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    /// True when no bytes are held.
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+
+    /// True when the bytes are a live file mapping (paged in on demand)
+    /// rather than an owned in-memory copy.
+    pub fn is_mapped(&self) -> bool {
+        match &self.0 {
+            Repr::Bytes(_) => false,
+            #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+            Repr::Mapped(_) => true,
+        }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+mod mapped {
+    use anyhow::{bail, Result};
+    use std::os::unix::io::AsRawFd;
+    use std::path::Path;
+    use std::ptr::NonNull;
+
+    /// Minimal libc surface, declared locally so no crate is needed.
+    mod sys {
+        use std::os::raw::{c_int, c_void};
+
+        pub const PROT_READ: c_int = 1;
+        pub const MAP_PRIVATE: c_int = 2;
+
+        extern "C" {
+            /// `off_t` declared as `i64`: correct on every LP64 unix
+            /// target this crate builds for.
+            pub fn mmap(
+                addr: *mut c_void,
+                len: usize,
+                prot: c_int,
+                flags: c_int,
+                fd: c_int,
+                offset: i64,
+            ) -> *mut c_void;
+            pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        }
+    }
+
+    /// A read-only private mapping of a whole file.
+    ///
+    /// The backing file must not be truncated while the region is alive
+    /// (the usual mmap caveat: reads through a shrunk mapping fault).
+    /// Model containers are immutable artifacts, so the store's
+    /// contract — open, serve, drop — never rewrites them in place.
+    pub struct MmapRegion {
+        ptr: NonNull<u8>,
+        len: usize,
+    }
+
+    // SAFETY: the region is `PROT_READ`/`MAP_PRIVATE` and never written
+    // through for its whole lifetime, so shared references may cross
+    // threads freely; the pointer is exclusively owned until `Drop`.
+    unsafe impl Send for MmapRegion {}
+    unsafe impl Sync for MmapRegion {}
+
+    impl MmapRegion {
+        /// Map `path` read-only. Returns `Ok(None)` for an empty file
+        /// (zero-length mappings are invalid; the caller keeps owned
+        /// empty bytes instead).
+        pub fn map_file(path: &Path) -> Result<Option<MmapRegion>> {
+            let file = std::fs::File::open(path)?;
+            let len = usize::try_from(file.metadata()?.len())?;
+            if len == 0 {
+                return Ok(None);
+            }
+            // SAFETY: a fresh read-only private mapping of `len` bytes
+            // of an open fd; the fd may close right after — the mapping
+            // stays valid until `munmap`.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            // MAP_FAILED is (void*)-1.
+            if ptr as usize == usize::MAX {
+                bail!("mmap of {} failed", path.display());
+            }
+            let Some(ptr) = NonNull::new(ptr as *mut u8) else {
+                bail!("mmap of {} returned null", path.display());
+            };
+            Ok(Some(MmapRegion { ptr, len }))
+        }
+
+        /// The mapped bytes.
+        pub fn as_slice(&self) -> &[u8] {
+            // SAFETY: `ptr` is a live `len`-byte read-only mapping for
+            // as long as `self` exists.
+            unsafe {
+                std::slice::from_raw_parts(self.ptr.as_ptr(), self.len)
+            }
+        }
+    }
+
+    impl Drop for MmapRegion {
+        fn drop(&mut self) {
+            // SAFETY: unmapping the exact region this value mapped;
+            // no slice of it can outlive `self` (lifetime-tied).
+            unsafe {
+                let _ = sys::munmap(
+                    self.ptr.as_ptr().cast(),
+                    self.len,
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_file(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir()
+            .join(format!("f2f-source-{tag}-{}", std::process::id()));
+        std::fs::write(&path, bytes).expect("write temp file");
+        path
+    }
+
+    #[test]
+    fn owned_bytes_view() {
+        let s = RecordSource::from_bytes(vec![1, 2, 3]);
+        assert_eq!(s.as_slice(), &[1, 2, 3]);
+        assert_eq!(s.len(), 3);
+        assert!(!s.is_empty());
+        assert!(!s.is_mapped());
+    }
+
+    #[test]
+    fn open_reads_file_contents() {
+        let want: Vec<u8> = (0..200u8).collect();
+        let path = temp_file("contents", &want);
+        let s = RecordSource::open(&path).unwrap();
+        assert_eq!(s.as_slice(), &want[..]);
+        #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+        assert!(s.is_mapped(), "unix + mmap feature must map files");
+        drop(s);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_file_falls_back_to_owned_bytes() {
+        let path = temp_file("empty", &[]);
+        let s = RecordSource::open(&path).unwrap();
+        assert!(s.is_empty());
+        assert!(!s.is_mapped(), "zero-length files cannot be mapped");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let path = std::env::temp_dir().join("f2f-source-missing-nope");
+        assert!(RecordSource::open(&path).is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! Sharded serving end to end: `split_container` + `ShardRouter` must
+//! reproduce the single-store `ModelBackend` bit-exactly across shard
+//! counts and assignment strategies, survive per-shard cache budgets
+//! behind the batching `InferenceServer`, open shard files from disk
+//! (mmap-backed when the feature is on), and reject corrupt shard maps
+//! with errors — never panics.
+
+use f2f::container::{
+    split_container, write_container_v2, ShardAssignment, ShardMap,
+};
+use f2f::coordinator::{Backend, InferenceServer, ServerConfig};
+use f2f::models::{compressed_mlp, MlpConfig};
+use f2f::shard::ShardRouter;
+use f2f::store::{ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Widths of the synthetic MLP: 4 layers of distinct sizes, so
+/// by-bytes balancing differs from round-robin.
+const DIMS: [usize; 5] = [32, 24, 16, 12, 8];
+
+fn model_bytes(seed: u64) -> Vec<u8> {
+    let (c, _) = compressed_mlp(&MlpConfig {
+        seed,
+        sparsity: 0.75,
+        ..MlpConfig::new(&DIMS)
+    });
+    write_container_v2(&c)
+}
+
+fn probes(n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            (0..DIMS[0])
+                .map(|j| ((i * j) as f32 * 0.1).sin())
+                .collect()
+        })
+        .collect()
+}
+
+fn single_store_outputs(bytes: &[u8], xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let store = Arc::new(
+        ModelStore::open_bytes(bytes.to_vec(), StoreConfig::default())
+            .unwrap(),
+    );
+    ModelBackend::sequential(store)
+        .unwrap()
+        .forward_batch(xs)
+        .unwrap()
+}
+
+#[test]
+fn sharded_round_trip_is_bit_exact_for_1_2_4_shards() {
+    let bytes = model_bytes(51);
+    let xs = probes(5);
+    let want = single_store_outputs(&bytes, &xs);
+    for n_shards in [1usize, 2, 4] {
+        for strategy in
+            [ShardAssignment::RoundRobin, ShardAssignment::ByBytes]
+        {
+            let (map, shard_bytes) =
+                split_container(&bytes, n_shards, strategy).unwrap();
+            assert_eq!(map.n_shards(), n_shards);
+            let mut router = ShardRouter::from_bytes(
+                &map.to_bytes(),
+                shard_bytes,
+                StoreConfig {
+                    cache_budget_bytes: usize::MAX,
+                    decode_workers: 2,
+                },
+            )
+            .unwrap()
+            .with_readahead(ReadaheadPolicy::layers(1));
+            let got = router.forward_batch(&xs).unwrap();
+            assert_eq!(
+                got, want,
+                "{n_shards} shards ({strategy:?}) must serve outputs \
+                 bit-identical to the single store"
+            );
+            router.wait_for_idle();
+            let m = router.metrics();
+            assert_eq!(m.per_shard.len(), n_shards);
+            assert_eq!(
+                m.total.decodes,
+                DIMS.len() as u64 - 1,
+                "each layer decodes exactly once across all shards"
+            );
+            assert_eq!(m.total.redundant_decodes, 0);
+            assert_eq!(m.total.pinned_bytes, 0);
+        }
+    }
+}
+
+#[test]
+fn more_shards_than_layers_still_serves_exactly() {
+    let bytes = model_bytes(52);
+    let xs = probes(3);
+    let want = single_store_outputs(&bytes, &xs);
+    let (map, shard_bytes) =
+        split_container(&bytes, 6, ShardAssignment::RoundRobin).unwrap();
+    let mut router = ShardRouter::from_bytes(
+        &map.to_bytes(),
+        shard_bytes,
+        StoreConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(router.forward_batch(&xs).unwrap(), want);
+}
+
+#[test]
+fn sharded_server_under_tight_budgets_with_eviction() {
+    let bytes = model_bytes(53);
+    let want = single_store_outputs(&bytes, &probes(12));
+    let (map, shard_bytes) =
+        split_container(&bytes, 2, ShardAssignment::RoundRobin).unwrap();
+    // Per-shard budget below each shard's decoded share: the LRUs must
+    // evict while every request still walks all four layers.
+    let stores: Vec<Arc<ModelStore>> = shard_bytes
+        .into_iter()
+        .map(|b| {
+            let store = ModelStore::open_bytes(
+                b,
+                StoreConfig {
+                    cache_budget_bytes: 2048,
+                    decode_workers: 2,
+                },
+            )
+            .unwrap();
+            Arc::new(store)
+        })
+        .collect();
+    let router = ShardRouter::new(stores.clone(), &map)
+        .unwrap()
+        .with_readahead(ReadaheadPolicy::layers(1));
+    let server = InferenceServer::start(
+        ServerConfig {
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        },
+        move || Box::new(router),
+    );
+    for (i, x) in probes(12).into_iter().enumerate() {
+        let y = server.infer(x).unwrap();
+        assert_eq!(
+            y, want[i],
+            "request {i} diverged from the single-store reference"
+        );
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.errors, 0);
+    server.shutdown();
+    for s in &stores {
+        s.wait_for_idle();
+    }
+    let evictions: u64 = stores.iter().map(|s| s.metrics().evictions).sum();
+    let redundant: u64 =
+        stores.iter().map(|s| s.metrics().redundant_decodes).sum();
+    assert!(evictions > 0, "tight per-shard budgets must evict");
+    assert_eq!(redundant, 0, "cross-shard readahead never double-decodes");
+    for s in &stores {
+        let sm = s.metrics();
+        // Budget respected, modulo the store's keep-one rule (a single
+        // layer bigger than the whole budget still serves).
+        assert!(
+            sm.cached_bytes <= 2048 || sm.cached_layers == 1,
+            "per-shard budget violated: {} bytes in {} layers",
+            sm.cached_bytes,
+            sm.cached_layers
+        );
+        assert_eq!(sm.pinned_bytes, 0, "all pins released after serving");
+    }
+}
+
+#[test]
+fn shards_open_from_disk_and_serve() {
+    let bytes = model_bytes(54);
+    let xs = probes(4);
+    let want = single_store_outputs(&bytes, &xs);
+    let (map, shard_bytes) =
+        split_container(&bytes, 2, ShardAssignment::ByBytes).unwrap();
+
+    let dir = std::env::temp_dir();
+    let tag = format!("f2f-shard-serving-{}", std::process::id());
+    let map_path = dir.join(format!("{tag}.shardmap"));
+    std::fs::write(&map_path, map.to_bytes()).unwrap();
+    let mut shard_paths = Vec::new();
+    for (i, b) in shard_bytes.iter().enumerate() {
+        let p = dir.join(format!("{tag}.shard{i}.f2f"));
+        std::fs::write(&p, b).unwrap();
+        shard_paths.push(p);
+    }
+
+    let mut router = ShardRouter::open_paths(
+        &map_path,
+        &shard_paths,
+        StoreConfig::default(),
+    )
+    .unwrap();
+    #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+    for s in router.shards() {
+        assert!(
+            s.source_mapped(),
+            "disk-opened shard stores must be mmap-backed"
+        );
+    }
+    assert_eq!(router.forward_batch(&xs).unwrap(), want);
+    router.wait_for_idle();
+    drop(router);
+
+    let _ = std::fs::remove_file(&map_path);
+    for p in &shard_paths {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn corrupt_shard_maps_error_and_never_panic() {
+    let bytes = model_bytes(55);
+    let (map, shard_bytes) =
+        split_container(&bytes, 2, ShardAssignment::RoundRobin).unwrap();
+    let wire = map.to_bytes();
+
+    // Truncation at every byte boundary must fail cleanly.
+    for cut in 0..wire.len() {
+        assert!(
+            ShardMap::parse(&wire[..cut]).is_err(),
+            "truncated shard map (cut {cut}) parsed"
+        );
+    }
+
+    // Shard count forced to zero (offset 8..12 after magic+version).
+    let mut zero = wire.clone();
+    zero[8..12].copy_from_slice(&0u32.to_le_bytes());
+    let err = ShardMap::parse(&zero).unwrap_err();
+    assert!(format!("{err}").contains("zero shards"), "{err}");
+
+    // First entry's shard id (after magic+version+counts and the
+    // 4-byte-length-prefixed name "fc0") pointed at a missing shard.
+    let id_pos = 4 + 4 + 4 + 4 + (4 + 3);
+    let mut missing = wire.clone();
+    missing[id_pos..id_pos + 4].copy_from_slice(&9u32.to_le_bytes());
+    let err = ShardMap::parse(&missing).unwrap_err();
+    assert!(format!("{err}").contains("only 2 shards exist"), "{err}");
+
+    // A map that parses but disagrees with the opened stores is a
+    // router error, not a panic: 3-shard map over 2 stores.
+    let (map3, _) =
+        split_container(&bytes, 3, ShardAssignment::RoundRobin).unwrap();
+    assert!(ShardRouter::from_bytes(
+        &map3.to_bytes(),
+        shard_bytes,
+        StoreConfig::default()
+    )
+    .is_err());
+
+    // Byte-flip fuzz: every position forced to adversarial values must
+    // parse or reject — never panic.
+    for pos in 0..wire.len() {
+        for val in [0x00u8, 0x01, 0x7F, 0xFF] {
+            if wire[pos] == val {
+                continue;
+            }
+            let mut corrupt = wire.clone();
+            corrupt[pos] = val;
+            let _ = ShardMap::parse(&corrupt);
+        }
+    }
+}

@@ -5,8 +5,7 @@
 
 use f2f::container::{write_container_v2, Container};
 use f2f::coordinator::{InferenceServer, ServerConfig};
-use f2f::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
-use f2f::pipeline::{CompressionConfig, Compressor};
+use f2f::models::{compressed_mlp, MlpConfig};
 use f2f::rng::Rng;
 use f2f::sparse::DecodedLayer;
 use f2f::store::{
@@ -19,27 +18,12 @@ use std::time::Duration;
 const DIMS: [usize; 5] = [32, 24, 16, 12, 8];
 
 fn compressed_model(seed: u64) -> Container {
-    let comp = Compressor::new(CompressionConfig {
+    compressed_mlp(&MlpConfig {
+        seed,
         sparsity: 0.75,
-        n_s: 1,
-        beam: Some(8),
-        ..Default::default()
-    });
-    let mut c = Container::default();
-    for i in 0..DIMS.len() - 1 {
-        let (rows, cols) = (DIMS[i + 1], DIMS[i]);
-        let name = format!("fc{i}");
-        let spec = LayerSpec { name: name.clone(), rows, cols };
-        let layer = SyntheticLayer::generate(
-            &spec,
-            WeightGen::default(),
-            seed + i as u64,
-        );
-        let (q, scale) = quantize_i8(&layer.weights);
-        let (cl, _) = comp.compress_i8(&name, rows, cols, &q, scale);
-        c.layers.push(cl);
-    }
-    c
+        ..MlpConfig::new(&DIMS)
+    })
+    .0
 }
 
 fn reference_forward(c: &Container, x: &[f32]) -> Vec<f32> {
@@ -162,23 +146,13 @@ fn sequential_scan_thrash_is_bounded_by_readahead_pinning() {
     // churn within a pass, never a discarded decode.
     use f2f::coordinator::Backend;
 
-    let dims = [16usize, 16, 16, 16, 16]; // 4 layers, 1 KiB decoded each
-    let comp = Compressor::new(CompressionConfig {
+    // 4 layers, 1 KiB decoded each.
+    let model = compressed_mlp(&MlpConfig {
+        seed: 40,
         sparsity: 0.75,
-        n_s: 1,
-        beam: Some(8),
-        ..Default::default()
-    });
-    let mut model = Container::default();
-    for i in 0..dims.len() - 1 {
-        let name = format!("fc{i}");
-        let spec = LayerSpec { name: name.clone(), rows: 16, cols: 16 };
-        let layer =
-            SyntheticLayer::generate(&spec, WeightGen::default(), 40 + i as u64);
-        let (q, scale) = quantize_i8(&layer.weights);
-        let (cl, _) = comp.compress_i8(&name, 16, 16, &q, scale);
-        model.layers.push(cl);
-    }
+        ..MlpConfig::uniform(4, 16)
+    })
+    .0;
     let layers = model.layers.len();
     let layer_bytes = 16 * 16 * 4;
     let budget = layer_bytes * (layers - 1); // budget + 1 layer of model
