@@ -14,8 +14,11 @@
 //!    `DecodeService` while layer `i`'s GEMV runs, and the executing
 //!    layer is pinned so readahead installs can never evict it.
 //! 4. A cold-pass comparison times decode-on-miss (readahead off)
-//!    against the overlapped pipeline, then a load test reports
-//!    throughput, latency percentiles, and store cache metrics.
+//!    against the overlapped pipeline and the cost-model `auto`
+//!    planner (`bench_util::timed_pass` does the timing, the same
+//!    primitive the benches use), then a load test reports throughput,
+//!    latency percentiles, store cache metrics, and the per-layer
+//!    observed cost table the planner reads.
 //! 5. The same container is split across 2 shards (`ShardMap` +
 //!    `ShardRouter`): the multi-store forward pass must be bit-exact
 //!    vs the single store, with each shard decoding only its layers.
@@ -29,6 +32,7 @@
 //! ```
 
 use anyhow::Result;
+use f2f::bench_util::timed_pass;
 use f2f::container::{
     write_container_v2, write_sharded, Container, ShardAssignment,
 };
@@ -89,29 +93,49 @@ fn main() -> Result<()> {
         model.memory_reduction()
     );
 
-    // --- cold-pass comparison: decode-on-miss vs readahead overlap ---
+    // --- cold-pass comparison: decode-on-miss vs readahead overlap
+    // vs the cost-model auto planner (seeded from the previous pass's
+    // observed costs, so it plans instead of falling back to depth 1).
     let probe: Vec<f32> =
         (0..DIMS[0]).map(|j| (j as f32 * 1e-2).sin()).collect();
     let mut cold = Vec::new();
-    for policy in [ReadaheadPolicy::off(), ReadaheadPolicy::layers(1)] {
-        use f2f::coordinator::Backend;
+    let mut outputs = Vec::new();
+    let mut cost_snapshot = Vec::new();
+    for policy in [
+        ReadaheadPolicy::off(),
+        ReadaheadPolicy::layers(1),
+        ReadaheadPolicy::auto(),
+    ] {
         let store = Arc::new(ModelStore::open_bytes(
             bytes.clone(),
             StoreConfig::default(),
         )?);
+        store.seed_costs(cost_snapshot.iter().cloned());
         let mut backend = ModelBackend::sequential(store.clone())?
             .with_readahead(policy);
-        let t0 = std::time::Instant::now();
-        backend.forward_batch(&[probe.clone()])?;
-        cold.push(t0.elapsed());
+        let (ys, dt) = timed_pass(&mut backend, &[probe.clone()])?;
+        cold.push(dt);
+        outputs.push(ys);
         store.wait_for_idle();
         assert_eq!(store.metrics().redundant_decodes, 0);
+        cost_snapshot = store.costs().snapshot();
     }
+    assert_eq!(
+        outputs[0], outputs[1],
+        "readahead must never change outputs"
+    );
+    assert_eq!(
+        outputs[0], outputs[2],
+        "the auto planner must never change outputs"
+    );
     println!(
-        "cold pass: decode-on-miss {:?} vs readahead {:?} ({:.2}x)",
+        "cold pass: decode-on-miss {:?} vs readahead {:?} ({:.2}x) vs \
+         auto-planned {:?} ({:.2}x)",
         cold[0],
         cold[1],
         cold[0].as_secs_f64() / cold[1].as_secs_f64().max(1e-9),
+        cold[2],
+        cold[0].as_secs_f64() / cold[2].as_secs_f64().max(1e-9),
     );
 
     // --- sharded: the same model behind 2 independent stores ---
@@ -142,9 +166,7 @@ fn main() -> Result<()> {
         }
         let mut router = ShardRouter::new(stores, &map)?
             .with_readahead(ReadaheadPolicy::layers(1));
-        let t0 = std::time::Instant::now();
-        let got = router.forward_batch(&[probe.clone()])?;
-        let dt = t0.elapsed();
+        let (got, dt) = timed_pass(&mut router, &[probe.clone()])?;
         assert_eq!(
             got, want,
             "2-shard router must be bit-exact vs single store"
@@ -245,6 +267,21 @@ fn main() -> Result<()> {
     println!(
         "readahead: prefetches={} skips={} redundant_decodes={}",
         sm.prefetches, sm.readahead_skips, sm.redundant_decodes,
+    );
+    // The telemetry the auto planner (and `f2f rebalance`) consumes.
+    for (name, c) in store.costs().snapshot() {
+        println!(
+            "cost[{name}]: decode {:.1}us ({} samples), gemv \
+             {:.2}us/item ({} samples)",
+            c.decode_ns / 1e3,
+            c.decode_samples,
+            c.gemv_ns / 1e3,
+            c.gemv_samples,
+        );
+    }
+    assert!(
+        sm.decode_ns_total > 0 && sm.gemv_ns_total > 0,
+        "serving must leave timing telemetry behind"
     );
     assert!(sm.evictions > 0, "budget below model size must evict");
     assert_eq!(

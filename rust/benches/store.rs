@@ -1,12 +1,14 @@
 //! Model-store benchmarks: serial vs pooled decode throughput, cold vs
 //! warm serve latency through the `ModelStore`/`ModelBackend` path, the
 //! readahead pipeline (decode of layer `i+1` overlapping layer `i`'s
-//! GEMV) against the decode-on-miss serial baseline, and the sharded
+//! GEMV) against the decode-on-miss serial baseline, the cost-model
+//! `auto` readahead planner against the fixed depth-1 pipeline (with
+//! the per-layer decode/GEMV telemetry it plans from), and the sharded
 //! cold serve (the same model behind 1/2/4 stores through a
 //! `ShardRouter`). Emits machine-readable `BENCH_store.json` next to
 //! the human output to keep the perf trajectory moving.
 
-use f2f::bench_util::{bench_with_result, black_box, JsonReport};
+use f2f::bench_util::{bench_with_result, black_box, timed_pass, JsonReport};
 use f2f::container::{
     split_container, write_container_v2, CompressedLayer, Container,
     ShardAssignment,
@@ -216,6 +218,61 @@ fn main() {
         cold_serial.mean.as_secs_f64() / cold_readahead.mean.as_secs_f64(),
         cold_parallel.mean.as_secs_f64()
             / cold_readahead.mean.as_secs_f64()
+    );
+
+    // --- auto readahead planner vs fixed depth-1 ---
+    // One untimed warmup pass fills a cost table (per-layer decode and
+    // GEMV EWMAs); each timed iteration then serves a *cold* store
+    // seeded with that profile — the production shape, where the cost
+    // model outlives any one store — so the planner runs warm instead
+    // of in its depth-1 fallback.
+    let cost_snapshot = {
+        let store = Arc::new(
+            ModelStore::open_bytes(bytes.clone(), StoreConfig::default())
+                .expect("open store"),
+        );
+        let mut backend = ModelBackend::sequential(store.clone())
+            .expect("backend")
+            .with_readahead(ReadaheadPolicy::layers(1));
+        let (_, warm_pass) =
+            timed_pass(&mut backend, &batch).expect("warmup pass");
+        store.wait_for_idle();
+        println!("  (cost-model warmup pass: {warm_pass:?})");
+        store.costs().snapshot()
+    };
+    for (name, c) in &cost_snapshot {
+        json.metric("layer_costs", &format!("{name}.decode_ns"), c.decode_ns);
+        json.metric("layer_costs", &format!("{name}.gemv_ns"), c.gemv_ns);
+    }
+    let cold_auto = bench_with_result(
+        "serve cold readahead auto (cost-model planner)",
+        1,
+        budget,
+        50,
+        || {
+            let store = Arc::new(
+                ModelStore::open_bytes(
+                    bytes.clone(),
+                    StoreConfig::default(),
+                )
+                .expect("open store"),
+            );
+            store.seed_costs(cost_snapshot.iter().cloned());
+            let mut backend = ModelBackend::sequential(store)
+                .expect("backend")
+                .with_readahead(ReadaheadPolicy::auto());
+            backend.forward_batch(black_box(&batch)).expect("serve")
+        },
+    );
+    json.add("serve_cold_readahead_auto", &cold_auto);
+    json.metric(
+        "serve_cold_readahead_auto",
+        "speedup_vs_fixed_depth1",
+        cold_readahead.mean.as_secs_f64() / cold_auto.mean.as_secs_f64(),
+    );
+    println!(
+        "  -> auto-planned cold serve {:.2}x vs fixed depth-1",
+        cold_readahead.mean.as_secs_f64() / cold_auto.mean.as_secs_f64()
     );
 
     // --- sharded cold serve: the same model behind 1/2/4 stores ---

@@ -73,6 +73,24 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One timed serving pass: run a single `forward_batch` through any
+/// [`crate::coordinator::Backend`] and return the outputs with the
+/// wall time it took. The cold/warm pass primitive shared by
+/// `benches/store.rs` and `examples/serve_compressed.rs` (both used
+/// to hand-roll this loop), so every timed pass in the repo measures
+/// the same thing the same way.
+pub fn timed_pass<B>(
+    backend: &mut B,
+    batch: &[Vec<f32>],
+) -> anyhow::Result<(Vec<Vec<f32>>, Duration)>
+where
+    B: crate::coordinator::Backend + ?Sized,
+{
+    let start = Instant::now();
+    let ys = backend.forward_batch(batch)?;
+    Ok((ys, start.elapsed()))
+}
+
 /// Machine-readable benchmark report: flat `case → {metric: number}`
 /// JSON, hand-rolled (no serde offline). Start of the perf trajectory —
 /// a driver can diff `BENCH_*.json` files across commits.
@@ -214,6 +232,22 @@ mod tests {
             json.matches('{').count(),
             json.matches('}').count()
         );
+    }
+
+    #[test]
+    fn timed_pass_returns_outputs_and_elapsed() {
+        use crate::coordinator::NativeBackend;
+        use crate::sparse::DecodedLayer;
+        let mut b = NativeBackend::from_decoded(DecodedLayer {
+            rows: 1,
+            cols: 2,
+            weights: vec![1.0, 2.0],
+        });
+        let (ys, dt) =
+            timed_pass(&mut b, &[vec![3.0, 4.0], vec![0.5, 0.0]])
+                .unwrap();
+        assert_eq!(ys, vec![vec![11.0], vec![0.5]]);
+        assert!(dt <= Duration::from_secs(60), "sane wall time");
     }
 
     #[test]

@@ -26,8 +26,8 @@ mod v2;
 
 pub use serde::{read_container, write_container};
 pub use shard::{
-    is_shard_map, split_container, write_sharded, ShardAssignment,
-    ShardMap,
+    is_shard_map, split_container, split_with_map, write_sharded,
+    ShardAssignment, ShardMap,
 };
 pub use v2::{
     is_v2, read_layer_at, write_container_v2, ContainerIndex, LayerEntry,

@@ -21,7 +21,7 @@
 
 use super::serde::{Reader, Writer};
 use super::v2::{read_layer_at, write_container_v2};
-use super::{Container, ContainerIndex};
+use super::{Container, ContainerIndex, LayerEntry};
 use anyhow::{bail, Result};
 use std::collections::HashSet;
 
@@ -53,24 +53,85 @@ impl ShardMap {
         n_shards: usize,
         strategy: ShardAssignment,
     ) -> Result<ShardMap> {
+        match strategy {
+            ShardAssignment::RoundRobin => {
+                if n_shards == 0 {
+                    bail!("shard map needs at least one shard");
+                }
+                let assignments = index
+                    .entries()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| (e.name.clone(), i % n_shards))
+                    .collect();
+                ShardMap::from_assignments(n_shards, assignments)
+            }
+            ShardAssignment::ByBytes => {
+                Self::assign_by_weight(index, n_shards, |e| e.len as f64)
+            }
+        }
+    }
+
+    /// Greedy weighted assignment: each layer, in container (= chain)
+    /// order, goes to the shard with the least accumulated `weight` so
+    /// far (ties to the lowest shard id — deterministic). The single
+    /// balancing loop behind both [`ShardAssignment::ByBytes`]
+    /// (weight = compressed record bytes) and the observed-cost
+    /// rebalancer in [`crate::shard`] (weight = measured decode ns).
+    pub fn assign_by_weight<F>(
+        index: &ContainerIndex,
+        n_shards: usize,
+        mut weight: F,
+    ) -> Result<ShardMap>
+    where
+        F: FnMut(&LayerEntry) -> f64,
+    {
         if n_shards == 0 {
             bail!("shard map needs at least one shard");
         }
-        let mut load = vec![0u64; n_shards];
+        let mut load = vec![0.0f64; n_shards];
         let mut assignments = Vec::with_capacity(index.len());
-        for (i, e) in index.entries().iter().enumerate() {
-            let shard = match strategy {
-                ShardAssignment::RoundRobin => i % n_shards,
-                ShardAssignment::ByBytes => {
-                    load.iter()
-                        .enumerate()
-                        .min_by_key(|&(_, &bytes)| bytes)
-                        .map(|(sid, _)| sid)
-                        .expect("n_shards >= 1")
+        for e in index.entries() {
+            let mut shard = 0usize;
+            for (s, l) in load.iter().enumerate() {
+                if *l < load[shard] {
+                    shard = s;
                 }
-            };
-            load[shard] += e.len as u64;
+            }
+            load[shard] += weight(e);
             assignments.push((e.name.clone(), shard));
+        }
+        // Funnel through the validating constructor so even maps built
+        // from a pathological index (e.g. duplicate layer names, which
+        // the v2 index does not reject) can never serialize a sidecar
+        // that ShardMap::parse would refuse to load back.
+        ShardMap::from_assignments(n_shards, assignments)
+    }
+
+    /// Build a map directly from `(layer name, shard id)` assignments
+    /// in container (= chain) order — how externally computed
+    /// partitions (e.g. the observed-cost rebalancer in
+    /// [`crate::shard`]) become a validated `F2F3` sidecar. Applies
+    /// the same rules as [`ShardMap::parse`]: at least one shard, no
+    /// assignment to a shard that does not exist, no duplicate layers.
+    pub fn from_assignments(
+        n_shards: usize,
+        assignments: Vec<(String, usize)>,
+    ) -> Result<ShardMap> {
+        if n_shards == 0 {
+            bail!("shard map needs at least one shard");
+        }
+        let mut seen: HashSet<&str> = HashSet::new();
+        for (name, shard) in &assignments {
+            if *shard >= n_shards {
+                bail!(
+                    "layer {name:?} assigned to shard {shard} but only \
+                     {n_shards} shards exist"
+                );
+            }
+            if !seen.insert(name.as_str()) {
+                bail!("layer {name:?} assigned twice");
+            }
         }
         Ok(ShardMap { n_shards, assignments })
     }
@@ -109,25 +170,12 @@ impl ShardMap {
         // Never pre-reserve attacker-controlled sizes.
         let mut assignments: Vec<(String, usize)> =
             Vec::with_capacity(n_layers.min(1024));
-        let mut seen = HashSet::new();
         for li in 0..n_layers {
             let name = match String::from_utf8(r.bytes()?) {
                 Ok(n) => n,
                 Err(_) => bail!("shard-map entry {li}: name not utf8"),
             };
-            let shard = r.u32()? as usize;
-            if shard >= n_shards {
-                bail!(
-                    "shard-map entry {li} ({name}): assigned to shard \
-                     {shard} but only {n_shards} shards exist"
-                );
-            }
-            if !seen.insert(name.clone()) {
-                bail!(
-                    "shard-map entry {li}: layer {name:?} assigned twice"
-                );
-            }
-            assignments.push((name, shard));
+            assignments.push((name, r.u32()? as usize));
         }
         if r.pos != bytes.len() {
             bail!(
@@ -135,7 +183,10 @@ impl ShardMap {
                 bytes.len() - r.pos
             );
         }
-        Ok(ShardMap { n_shards, assignments })
+        // The semantic invariants (in-range shard ids, no duplicate
+        // layers) live in exactly one place: the validating
+        // constructor shared with programmatic map builders.
+        ShardMap::from_assignments(n_shards, assignments)
     }
 
     /// Number of shards the map partitions across.
@@ -191,14 +242,41 @@ pub fn split_container(
 ) -> Result<(ShardMap, Vec<Vec<u8>>)> {
     let index = ContainerIndex::parse(bytes)?;
     let map = ShardMap::assign(&index, n_shards, strategy)?;
-    let mut per: Vec<Container> =
-        (0..n_shards).map(|_| Container::default()).collect();
-    for (entry, (_, shard)) in
-        index.entries().iter().zip(map.assignments())
-    {
-        per[*shard].layers.push(read_layer_at(bytes, entry)?);
+    let shards = split_with_map(bytes, &map)?;
+    Ok((map, shards))
+}
+
+/// Split serialized v2 container bytes under an externally supplied
+/// map — how a cost-rebalanced [`ShardMap`] (see [`crate::shard`])
+/// becomes per-shard files. The map must cover *exactly* the
+/// container's indexed layers; a map naming missing or extra layers is
+/// stale and rejected as an error, never a panic.
+pub fn split_with_map(
+    bytes: &[u8],
+    map: &ShardMap,
+) -> Result<Vec<Vec<u8>>> {
+    let index = ContainerIndex::parse(bytes)?;
+    if map.len() != index.len() {
+        bail!(
+            "shard map assigns {} layers but the container indexes {} \
+             — stale map?",
+            map.len(),
+            index.len()
+        );
     }
-    Ok((map, per.iter().map(write_container_v2).collect()))
+    let mut per: Vec<Container> =
+        (0..map.n_shards()).map(|_| Container::default()).collect();
+    for entry in index.entries() {
+        let Some(shard) = map.shard_of(&entry.name) else {
+            bail!(
+                "layer {:?} is in the container but not the shard map \
+                 — stale map?",
+                entry.name
+            );
+        };
+        per[shard].layers.push(read_layer_at(bytes, entry)?);
+    }
+    Ok(per.iter().map(write_container_v2).collect())
 }
 
 /// Partition an in-memory container: serialize to the indexed v2 layout
@@ -331,6 +409,65 @@ mod tests {
         for s in &shards[3..] {
             assert!(read_container(s).unwrap().layers.is_empty());
         }
+    }
+
+    #[test]
+    fn from_assignments_validates_like_parse() {
+        let map = ShardMap::from_assignments(
+            2,
+            vec![("a".into(), 1), ("b".into(), 0)],
+        )
+        .unwrap();
+        assert_eq!(map.n_shards(), 2);
+        assert_eq!(map.shard_of("a"), Some(1));
+        // And it round-trips through the wire format.
+        assert_eq!(ShardMap::parse(&map.to_bytes()).unwrap(), map);
+        assert!(ShardMap::from_assignments(0, vec![]).is_err());
+        assert!(ShardMap::from_assignments(
+            2,
+            vec![("a".into(), 2)]
+        )
+        .is_err());
+        assert!(ShardMap::from_assignments(
+            2,
+            vec![("a".into(), 0), ("a".into(), 1)]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn split_with_map_honors_external_maps_and_rejects_stale_ones() {
+        let c = sample_container(36);
+        let bytes = write_container_v2(&c);
+        // An external (hand-built) partition: everything on shard 1.
+        let map = ShardMap::from_assignments(
+            2,
+            c.layers.iter().map(|l| (l.name.clone(), 1)).collect(),
+        )
+        .unwrap();
+        let shards = split_with_map(&bytes, &map).unwrap();
+        assert!(read_container(&shards[0]).unwrap().layers.is_empty());
+        assert_eq!(
+            read_container(&shards[1]).unwrap().layers.len(),
+            c.layers.len()
+        );
+        // Stale maps error instead of panicking: wrong layer count...
+        let short = ShardMap::from_assignments(
+            2,
+            vec![(c.layers[0].name.clone(), 0)],
+        )
+        .unwrap();
+        assert!(split_with_map(&bytes, &short).is_err());
+        // ...and right count but wrong names.
+        let renamed = ShardMap::from_assignments(
+            2,
+            c.layers
+                .iter()
+                .map(|l| (format!("{}-renamed", l.name), 0))
+                .collect(),
+        )
+        .unwrap();
+        assert!(split_with_map(&bytes, &renamed).is_err());
     }
 
     #[test]

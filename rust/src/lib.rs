@@ -43,16 +43,24 @@
 //!   [`store::DecodePool`] remains for one-shot bulk decodes), a
 //!   byte-budgeted LRU of decoded layers as a concurrent subsystem —
 //!   in-flight decode dedup, async `prefetch_async`,
-//!   pin-while-executing ([`store::ModelStore`]) — a
+//!   pin-while-executing ([`store::ModelStore`]) — per-layer timing
+//!   telemetry (`store::timing`: [`store::LayerCosts`] EWMAs of decode
+//!   submit→install and per-item GEMV, stamped at the source), a
 //!   [`store::ReadaheadPolicy`] that warms layer `i+1` while layer `i`
-//!   executes, the readahead-driven multi-layer
-//!   [`store::ModelBackend`], and a [`store::RecordSource`] that holds
-//!   the compressed bytes as owned memory or (with the `mmap` feature)
-//!   a read-only file mapping paged in on demand.
+//!   executes — fixed depth, or `Auto`: a planner sizing depth-`k`
+//!   warming against the predicted GEMV window and store budget — the
+//!   readahead-driven multi-layer [`store::ModelBackend`], and a
+//!   [`store::RecordSource`] that holds the compressed bytes as owned
+//!   memory or (with the `mmap` feature) a read-only file mapping
+//!   paged in on demand.
 //! * [`shard`] — horizontal scale-out: a [`shard::ShardRouter`] serving
 //!   one split model from N independent stores (per-shard decode
-//!   services and budgets, cross-shard readahead, aggregated metrics),
-//!   bit-identical to the single-store path.
+//!   services and budgets, cross-shard readahead, aggregated metrics
+//!   with a merged cost table), bit-identical to the single-store
+//!   path; plus observed-cost rebalancing (`shard::rebalance`:
+//!   [`shard::CostProfile`] JSON snapshots of the cost tables and
+//!   [`shard::rebalance_map`] re-partitioning on measured per-layer
+//!   decode time — the `f2f rebalance` CLI).
 //! * [`bandwidth`] — memory transaction / bandwidth-utilization simulator
 //!   (Figure 1, Appendix A).
 //! * [`models`] — synthetic Transformer / ResNet-50 model zoo with
@@ -136,8 +144,8 @@ pub use decoder::{DecoderSpec, SequentialDecoder};
 pub use encoder::{EncodeResult, ViterbiEncoder};
 pub use gf2::BitVecF2;
 pub use pipeline::{CompressionConfig, Compressor};
-pub use shard::{ShardMetrics, ShardRouter};
+pub use shard::{rebalance_map, CostProfile, ShardMetrics, ShardRouter};
 pub use store::{
-    DecodePool, DecodeService, ModelBackend, ModelStore, ReadaheadPolicy,
-    StoreConfig,
+    DecodePool, DecodeService, LayerCost, LayerCosts, ModelBackend,
+    ModelStore, ReadaheadPolicy, StoreConfig,
 };

@@ -12,12 +12,19 @@
 //! * `f2f shard <container> --shards <n> [--by-bytes] [--out prefix]` —
 //!   split a v2 container into per-shard v2 files plus the `F2F3`
 //!   shard-map sidecar.
+//! * `f2f rebalance <container> --profile <json> [--shards <n>]
+//!   [--out prefix]` — re-split a v2 container on *observed* per-layer
+//!   decode cost (a `CostProfile` JSON exported by
+//!   `serve --profile-out`), rewriting the per-shard files and the
+//!   `F2F3` sidecar.
 //! * `f2f serve [...]` — compress a multi-layer model, serve it through
 //!   the model store (`--cache-kb <n>` decoded-weight budget,
 //!   `--decode-threads <n>` decode-service width, `--layers`, `--width`,
-//!   `--readahead on|off|<depth>` async warm-ahead, `--shards <n>`
-//!   split across a multi-store shard router) and run a self-driven
-//!   load test.
+//!   `--readahead on|off|<depth>|auto` async warm-ahead — `auto` plans
+//!   depth from observed costs — `--shards <n>` split across a
+//!   multi-store shard router, `--timing` print the per-layer cost
+//!   table, `--profile-out <path>` export it as `CostProfile` JSON)
+//!   and run a self-driven load test.
 //! * `f2f hw --s <S> --nin <N> --ns <N>` — Appendix G hardware cost.
 
 use anyhow::{bail, Result};
@@ -37,11 +44,13 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("compress") => cmd_compress(args),
         Some("inspect") => cmd_inspect(args),
         Some("shard") => cmd_shard(args),
+        Some("rebalance") => cmd_rebalance(args),
         Some("serve") => cmd_serve(args),
         Some("hw") => cmd_hw(args),
         _ => {
             eprintln!(
-                "usage: f2f <repro|compress|inspect|shard|serve|hw> \
+                "usage: f2f \
+                 <repro|compress|inspect|shard|rebalance|serve|hw> \
                  [options]\n\
                  try: f2f repro table1 --bits 100000"
             );
@@ -201,14 +210,68 @@ fn cmd_shard(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_rebalance(args: &Args) -> Result<()> {
+    use f2f::container::{split_with_map, ContainerIndex, ShardMap};
+    use f2f::shard::{rebalance_map, CostProfile};
+
+    let path = args.pos(1)?;
+    let profile_path = args.get_str("profile", "");
+    if profile_path.is_empty() {
+        bail!("rebalance needs --profile <json> (export one with \
+               `f2f serve --profile-out <path>`)");
+    }
+    let n_shards: usize = args.get("shards", 2)?;
+    let out = args.get_str("out", path);
+
+    let bytes = std::fs::read(path)?;
+    let index = ContainerIndex::parse(&bytes)?;
+    let profile =
+        CostProfile::parse_json(&std::fs::read_to_string(&profile_path)?)?;
+    let map = rebalance_map(&index, n_shards, &profile)?;
+    // Round-trip through the wire form so the emitted sidecar passes
+    // exactly the validation every consumer applies.
+    let map = ShardMap::parse(&map.to_bytes())?;
+    let shards = split_with_map(&bytes, &map)?;
+    let loads = profile.shard_loads(&map);
+
+    let mut table = f2f::report::Table::new(
+        &format!(
+            "{path} -> {n_shards} shards (observed decode cost, \
+             profile {profile_path})"
+        ),
+        &["shard", "file", "layers", "bytes", "predicted_decode_ms"],
+    );
+    for (i, shard_bytes) in shards.iter().enumerate() {
+        let shard_path = format!("{out}.shard{i}.f2f");
+        std::fs::write(&shard_path, shard_bytes)?;
+        let layers: Vec<&str> = map.layers_of(i).collect();
+        table.row(vec![
+            i.to_string(),
+            shard_path,
+            layers.join(","),
+            shard_bytes.len().to_string(),
+            format!("{:.3}", loads[i] / 1e6),
+        ]);
+    }
+    print!("{}", table.render());
+    let map_path = format!("{out}.shardmap");
+    std::fs::write(&map_path, map.to_bytes())?;
+    println!(
+        "wrote {map_path} ({} layers across {n_shards} shards, \
+         rebalanced on observed decode time)",
+        map.len()
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use f2f::container::{write_sharded, ShardAssignment};
     use f2f::coordinator::{InferenceServer, ServerConfig};
     use f2f::models::{compressed_mlp, MlpConfig};
-    use f2f::shard::ShardRouter;
+    use f2f::shard::{CostProfile, ShardRouter};
     use f2f::store::{
-        ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig,
-        StoreMetrics,
+        LayerCost, ModelBackend, ModelStore, ReadaheadPolicy,
+        StoreConfig, StoreMetrics,
     };
     use std::sync::Arc;
 
@@ -223,11 +286,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cache_kb: usize = args.get("cache-kb", 0)?;
     // Decode service width (per store); 0 = size to the host.
     let decode_threads: usize = args.get("decode-threads", 0)?;
-    // Warm layer i+1 while layer i executes: on | off | <depth>.
+    // Warm layer i+1 while layer i executes: on | off | <depth>, or
+    // `auto` — plan depth per layer from the observed cost table.
     let readahead: ReadaheadPolicy =
         args.get_str("readahead", "on").parse()?;
     // Split the model across this many stores behind a shard router.
     let n_shards: usize = args.get("shards", 1)?;
+    // Print the per-layer observed cost table (what `auto` sees).
+    let show_timing = args.flag("timing");
+    // Export the observed costs as CostProfile JSON (the input to
+    // `f2f rebalance`).
+    let profile_out = args.get_str("profile-out", "");
 
     // Compress a multi-layer MLP-shaped model into an indexed container.
     let t0 = std::time::Instant::now();
@@ -274,16 +343,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     };
 
+    // Per-layer observed cost table (`--timing`): exactly the
+    // telemetry the auto readahead planner reads.
+    let print_cost_table = |label: &str, costs: &[(String, LayerCost)]| {
+        let mut table = f2f::report::Table::new(
+            &format!("{label}: per-layer observed costs (EWMA)"),
+            &[
+                "layer",
+                "decode_us",
+                "decode_samples",
+                "gemv_us_per_item",
+                "gemv_samples",
+            ],
+        );
+        for (name, c) in costs {
+            table.row(vec![
+                name.clone(),
+                format!("{:.1}", c.decode_ns / 1e3),
+                c.decode_samples.to_string(),
+                format!("{:.2}", c.gemv_ns / 1e3),
+                c.gemv_samples.to_string(),
+            ]);
+        }
+        print!("{}", table.render());
+    };
+
+    let write_profile = |profile: &CostProfile| -> Result<()> {
+        if !profile_out.is_empty() {
+            std::fs::write(&profile_out, profile.to_json())?;
+            println!(
+                "wrote {profile_out} ({} layers) — feed it to \
+                 `f2f rebalance --profile {profile_out}`",
+                profile.len()
+            );
+        }
+        Ok(())
+    };
+
     if n_shards <= 1 {
         let bytes = f2f::container::write_container_v2(&container);
         let store = Arc::new(ModelStore::open_bytes(bytes, store_config)?);
         println!(
             "store: {} layers, decoded size {} KiB, budget \
-             {budget_label}, {} decode workers, readahead depth {}",
+             {budget_label}, {} decode workers, readahead {}",
             n_layers,
             store.total_decoded_bytes() >> 10,
             store.decode_workers(),
-            readahead.depth,
+            readahead,
         );
         let backend = ModelBackend::sequential(store.clone())?
             .with_readahead(readahead);
@@ -296,6 +402,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // are stable run to run.
         store.wait_for_idle();
         print_store_metrics("store", &store.metrics());
+        if show_timing {
+            print_cost_table("store", &store.costs().snapshot());
+        }
+        write_profile(&CostProfile::from_stores([store.costs()]))?;
         server.shutdown();
     } else {
         let (map, shard_bytes) =
@@ -333,6 +443,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             total.merge(&sm);
         }
         print_store_metrics("all shards", &total);
+        let profile =
+            CostProfile::from_stores(stores.iter().map(|s| s.costs()));
+        if show_timing {
+            print_cost_table("all shards", &profile.entries());
+        }
+        write_profile(&profile)?;
         server.shutdown();
     }
     Ok(())

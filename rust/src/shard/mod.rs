@@ -13,15 +13,23 @@
 //! * readahead is *cross-shard*: while layer `i`'s GEMV runs, layer
 //!   `i+1` warms on **its** shard's decode workers, so cold decode
 //!   parallelism multiplies with the shard count instead of queueing
-//!   on one service;
+//!   on one service (with `--readahead auto`, depth is planned per
+//!   layer from each shard's observed cost table);
 //! * per-shard metrics fold into one aggregate [`ShardMetrics`]
-//!   snapshot.
+//!   snapshot, including the merged per-layer cost table.
 //!
 //! The router implements the coordinator's [`crate::coordinator::Backend`],
 //! so it drops behind an [`crate::coordinator::InferenceServer`] exactly
 //! like the single-store [`crate::store::ModelBackend`] — and produces
 //! bit-identical outputs (same decode, same GEMV order).
+//!
+//! The partition itself can follow the measurements too: export the
+//! merged table as a [`CostProfile`] and let [`rebalance_map`]
+//! re-shard on observed per-layer decode time instead of compressed
+//! bytes (`f2f rebalance`; see [`rebalance`]).
 
+pub mod rebalance;
 mod router;
 
+pub use rebalance::{rebalance_map, CostProfile};
 pub use router::{ShardMetrics, ShardRouter};

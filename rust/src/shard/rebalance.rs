@@ -1,0 +1,566 @@
+//! Observed-cost shard rebalancing: split where the decode time is.
+//!
+//! [`crate::container::ShardAssignment::ByBytes`] balances *compressed
+//! record bytes* at split time — a proxy that ignores how decode cost
+//! actually varies with mask density, plane count and correction
+//! length (the same per-layer asymmetry the paper's hardware decoder
+//! pays in XOR-network depth). A shard holding small-but-expensive
+//! records becomes the straggler every cold pass. The fix is to
+//! rebalance on *measured* cost:
+//!
+//! 1. Serve traffic; every store's [`crate::store::LayerCosts`] table
+//!    fills with EWMA decode times stamped at the source.
+//! 2. Export the merged table as a [`CostProfile`] — flat JSON via
+//!    [`crate::bench_util::JsonReport`], the same machine-readable
+//!    shape the benches emit (`f2f serve --profile-out`, or
+//!    [`CostProfile::to_json`] from code).
+//! 3. [`rebalance_map`] greedily re-partitions the container on the
+//!    profile's observed per-layer decode cost and emits a validated
+//!    `F2F3` [`ShardMap`]; `f2f rebalance` wires it to disk through
+//!    [`crate::container::split_with_map`].
+//!
+//! A profile that does not match the container — missing layers, extra
+//! layers, no decode observations, non-finite numbers — is *stale* and
+//! rejected as an error, never a panic: rebalancing with last month's
+//! model must fail loudly, not ship a skewed partition.
+
+use crate::bench_util::JsonReport;
+use crate::container::{ContainerIndex, ShardMap};
+use crate::store::{LayerCost, LayerCosts};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A serializable snapshot of per-layer observed costs: the wire form
+/// of [`LayerCosts`] tables, merged across stores/shards and carried
+/// between processes as flat JSON.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostProfile {
+    entries: BTreeMap<String, LayerCost>,
+}
+
+impl CostProfile {
+    /// An empty profile.
+    pub fn new() -> Self {
+        CostProfile::default()
+    }
+
+    /// Snapshot and merge one or more live cost tables (one per shard
+    /// store) into a single model-wide profile.
+    pub fn from_stores<'a, I>(tables: I) -> Self
+    where
+        I: IntoIterator<Item = &'a LayerCosts>,
+    {
+        let mut profile = CostProfile::new();
+        for table in tables {
+            for (name, cost) in table.snapshot() {
+                profile.record(&name, cost);
+            }
+        }
+        profile
+    }
+
+    /// Fold one layer's cost into the profile (sample-weighted merge on
+    /// collision).
+    pub fn record(&mut self, name: &str, cost: LayerCost) {
+        self.entries.entry(name.to_string()).or_default().merge(&cost);
+    }
+
+    /// This layer's observed cost, if present.
+    pub fn get(&self, name: &str) -> Option<LayerCost> {
+        self.entries.get(name).copied()
+    }
+
+    /// Number of layers in the profile.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no layer has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Name-ordered `(layer, cost)` pairs — the shape
+    /// [`crate::store::ModelStore::seed_costs`] accepts.
+    pub fn entries(&self) -> Vec<(String, LayerCost)> {
+        self.entries
+            .iter()
+            .map(|(n, c)| (n.clone(), *c))
+            .collect()
+    }
+
+    /// Predicted total decode ns per shard if this profile served
+    /// under `map` — the quantity [`rebalance_map`] balances.
+    pub fn shard_loads(&self, map: &ShardMap) -> Vec<f64> {
+        let mut loads = vec![0.0f64; map.n_shards()];
+        for (name, shard) in map.assignments() {
+            if let Some(c) = self.entries.get(name) {
+                loads[*shard] += c.decode_ns;
+            }
+        }
+        loads
+    }
+
+    /// Serialize as flat JSON (via [`JsonReport`], the same
+    /// machine-readable shape the benches emit): one case per layer
+    /// with `decode_ns` / `decode_samples` / `gemv_ns` /
+    /// `gemv_samples` metrics.
+    pub fn to_json(&self) -> String {
+        let mut rep = JsonReport::new("f2f cost profile");
+        for (name, c) in &self.entries {
+            rep.metric(name, "decode_ns", c.decode_ns);
+            rep.metric(name, "decode_samples", c.decode_samples as f64);
+            rep.metric(name, "gemv_ns", c.gemv_ns);
+            rep.metric(name, "gemv_samples", c.gemv_samples as f64);
+        }
+        rep.to_json()
+    }
+
+    /// Parse a serialized profile. Accepts exactly the flat
+    /// `{"title": …, "cases": {layer: {metric: number}}}` shape
+    /// [`CostProfile::to_json`] writes (unknown metric keys are
+    /// ignored for forward compatibility); anything else is an error,
+    /// never a panic.
+    pub fn parse_json(s: &str) -> Result<Self> {
+        let root = match json::parse(s)? {
+            json::Value::Object(fields) => fields,
+            _ => bail!("cost profile: top level is not a JSON object"),
+        };
+        let cases = root
+            .into_iter()
+            .find(|(k, _)| k == "cases")
+            .map(|(_, v)| v)
+            .ok_or_else(|| anyhow!("cost profile: no \"cases\" object"))?;
+        let json::Value::Object(cases) = cases else {
+            bail!("cost profile: \"cases\" is not an object");
+        };
+        let mut profile = CostProfile::new();
+        for (layer, metrics) in cases {
+            let json::Value::Object(metrics) = metrics else {
+                bail!("cost profile: layer {layer:?} is not an object");
+            };
+            let mut cost = LayerCost::default();
+            for (key, value) in metrics {
+                let json::Value::Number(x) = value else {
+                    bail!(
+                        "cost profile: {layer:?}.{key} is not a number"
+                    );
+                };
+                match key.as_str() {
+                    "decode_ns" => cost.decode_ns = x,
+                    "gemv_ns" => cost.gemv_ns = x,
+                    "decode_samples" => {
+                        cost.decode_samples = as_count(&layer, &key, x)?
+                    }
+                    "gemv_samples" => {
+                        cost.gemv_samples = as_count(&layer, &key, x)?
+                    }
+                    _ => {} // forward compatibility
+                }
+            }
+            if profile.entries.insert(layer.clone(), cost).is_some() {
+                bail!("cost profile: layer {layer:?} appears twice");
+            }
+        }
+        Ok(profile)
+    }
+}
+
+fn as_count(layer: &str, key: &str, x: f64) -> Result<u64> {
+    if x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x <= u64::MAX as f64
+    {
+        Ok(x as u64)
+    } else {
+        bail!("cost profile: {layer:?}.{key} is not a sample count ({x})")
+    }
+}
+
+/// Partition the container's layers across `n_shards` by *observed*
+/// decode cost: the same greedy lightest-shard loop as
+/// `ShardAssignment::ByBytes` ([`ShardMap::assign_by_weight`]), but
+/// weighted by the profile's predicted decode ns instead of compressed
+/// record bytes. The profile must cover the container exactly (see
+/// module docs); the returned map passes the same validation as a
+/// parsed `F2F3` sidecar.
+pub fn rebalance_map(
+    index: &ContainerIndex,
+    n_shards: usize,
+    profile: &CostProfile,
+) -> Result<ShardMap> {
+    if n_shards == 0 {
+        bail!("rebalance needs at least one shard");
+    }
+    for e in index.entries() {
+        let Some(cost) = profile.get(&e.name) else {
+            bail!(
+                "cost profile has no entry for layer {:?} — stale \
+                 profile, or one from a different model?",
+                e.name
+            );
+        };
+        if cost.decode_samples == 0 {
+            bail!(
+                "cost profile has no decode observations for layer \
+                 {:?} — serve traffic (or run the bench) before \
+                 rebalancing",
+                e.name
+            );
+        }
+        if !cost.decode_ns.is_finite() || cost.decode_ns < 0.0 {
+            bail!(
+                "cost profile decode_ns for layer {:?} is not a sane \
+                 duration ({})",
+                e.name,
+                cost.decode_ns
+            );
+        }
+    }
+    for (name, _) in profile.entries() {
+        if index.find(&name).is_none() {
+            bail!(
+                "cost profile names layer {name:?} which the container \
+                 does not have — stale profile, or one from a \
+                 different model?"
+            );
+        }
+    }
+    ShardMap::assign_by_weight(index, n_shards, |e| {
+        profile.get(&e.name).expect("validated above").decode_ns
+    })
+}
+
+/// Minimal JSON reader for the flat profile shape (serde is
+/// unavailable offline, and [`JsonReport`] is write-only). Supports
+/// objects, strings and numbers — exactly what the profile needs —
+/// and rejects everything else cleanly.
+mod json {
+    use anyhow::{bail, Result};
+
+    #[derive(Debug)]
+    pub enum Value {
+        Object(Vec<(String, Value)>),
+        Number(f64),
+        #[allow(dead_code)] // parsed (the title field) but never read
+        String(String),
+    }
+
+    pub fn parse(s: &str) -> Result<Value> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing bytes after JSON value (offset {})", p.i);
+        }
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+
+    impl Parser<'_> {
+        fn ws(&mut self) {
+            while self
+                .b
+                .get(self.i)
+                .is_some_and(|c| c.is_ascii_whitespace())
+            {
+                self.i += 1;
+            }
+        }
+
+        fn peek(&self) -> Option<u8> {
+            self.b.get(self.i).copied()
+        }
+
+        fn expect(&mut self, c: u8) -> Result<()> {
+            if self.peek() == Some(c) {
+                self.i += 1;
+                Ok(())
+            } else {
+                bail!(
+                    "expected {:?} at offset {} ({:?} found)",
+                    c as char,
+                    self.i,
+                    self.peek().map(|b| b as char)
+                );
+            }
+        }
+
+        fn value(&mut self) -> Result<Value> {
+            match self.peek() {
+                Some(b'{') => self.object(),
+                Some(b'"') => Ok(Value::String(self.string()?)),
+                Some(c) if c == b'-' || c.is_ascii_digit() => {
+                    self.number()
+                }
+                other => bail!(
+                    "unsupported JSON value at offset {} ({:?})",
+                    self.i,
+                    other.map(|b| b as char)
+                ),
+            }
+        }
+
+        fn object(&mut self) -> Result<Value> {
+            self.expect(b'{')?;
+            let mut fields = Vec::new();
+            self.ws();
+            if self.peek() == Some(b'}') {
+                self.i += 1;
+                return Ok(Value::Object(fields));
+            }
+            loop {
+                self.ws();
+                let key = self.string()?;
+                self.ws();
+                self.expect(b':')?;
+                self.ws();
+                let value = self.value()?;
+                fields.push((key, value));
+                self.ws();
+                match self.peek() {
+                    Some(b',') => self.i += 1,
+                    Some(b'}') => {
+                        self.i += 1;
+                        return Ok(Value::Object(fields));
+                    }
+                    other => bail!(
+                        "expected ',' or '}}' at offset {} ({:?})",
+                        self.i,
+                        other.map(|b| b as char)
+                    ),
+                }
+            }
+        }
+
+        fn string(&mut self) -> Result<String> {
+            self.expect(b'"')?;
+            let mut out = String::new();
+            loop {
+                match self.peek() {
+                    None => bail!("unterminated JSON string"),
+                    Some(b'"') => {
+                        self.i += 1;
+                        return Ok(out);
+                    }
+                    Some(b'\\') => {
+                        self.i += 1;
+                        match self.peek() {
+                            Some(b'"') => out.push('"'),
+                            Some(b'\\') => out.push('\\'),
+                            Some(b'/') => out.push('/'),
+                            Some(b'n') => out.push('\n'),
+                            Some(b't') => out.push('\t'),
+                            Some(b'r') => out.push('\r'),
+                            Some(b'u') => {
+                                let hex = self
+                                    .b
+                                    .get(self.i + 1..self.i + 5)
+                                    .ok_or_else(|| {
+                                        anyhow::anyhow!(
+                                            "truncated \\u escape"
+                                        )
+                                    })?;
+                                let code = u32::from_str_radix(
+                                    std::str::from_utf8(hex)?,
+                                    16,
+                                )?;
+                                let Some(c) = char::from_u32(code)
+                                else {
+                                    bail!(
+                                        "invalid \\u escape {code:#x}"
+                                    );
+                                };
+                                out.push(c);
+                                self.i += 4;
+                            }
+                            other => bail!(
+                                "unsupported escape {:?}",
+                                other.map(|b| b as char)
+                            ),
+                        }
+                        self.i += 1;
+                    }
+                    Some(_) => {
+                        // Copy one UTF-8 scalar (the input is a &str,
+                        // so boundaries are valid by construction).
+                        let rest = &self.b[self.i..];
+                        let s = std::str::from_utf8(rest)
+                            .expect("input was a &str");
+                        let c = s.chars().next().expect("non-empty");
+                        out.push(c);
+                        self.i += c.len_utf8();
+                    }
+                }
+            }
+        }
+
+        fn number(&mut self) -> Result<Value> {
+            let start = self.i;
+            while self.peek().is_some_and(|c| {
+                c.is_ascii_digit()
+                    || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E')
+            }) {
+                self.i += 1;
+            }
+            let text = std::str::from_utf8(&self.b[start..self.i])
+                .expect("ascii slice");
+            text.parse::<f64>().map(Value::Number).map_err(|_| {
+                anyhow::anyhow!("bad JSON number {text:?}")
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::write_container_v2;
+    use crate::models::{compressed_mlp, MlpConfig};
+
+    fn cost(decode_ns: f64) -> LayerCost {
+        LayerCost {
+            decode_ns,
+            decode_samples: 4,
+            gemv_ns: 10.0,
+            gemv_samples: 4,
+        }
+    }
+
+    fn indexed_mlp(dims: &[usize]) -> (ContainerIndex, Vec<u8>) {
+        let (c, _) = compressed_mlp(&MlpConfig {
+            seed: 70,
+            sparsity: 0.75,
+            n_s: 0,
+            beam: None,
+            ..MlpConfig::new(dims)
+        });
+        let bytes = write_container_v2(&c);
+        (ContainerIndex::parse(&bytes).unwrap(), bytes)
+    }
+
+    #[test]
+    fn profile_json_round_trips() {
+        let mut p = CostProfile::new();
+        p.record("mlp/fc0", cost(1234.5));
+        p.record("mlp/fc1", cost(99.0));
+        let json = p.to_json();
+        assert!(json.contains("\"decode_ns\": 1234.5"));
+        let parsed = CostProfile::parse_json(&json).unwrap();
+        assert_eq!(parsed, p);
+        // Recording the same layer twice merges, sample-weighted.
+        let mut q = CostProfile::new();
+        q.record("a", cost(100.0));
+        q.record("a", cost(300.0));
+        assert_eq!(q.get("a").unwrap().decode_ns, 200.0);
+        assert_eq!(q.get("a").unwrap().decode_samples, 8);
+    }
+
+    #[test]
+    fn malformed_profiles_error_and_never_panic() {
+        for bad in [
+            "",
+            "not json",
+            "{\"title\": \"x\"}",                        // no cases
+            "{\"cases\": 3}",                            // wrong type
+            "{\"cases\": {\"a\": 1}}",                   // case not object
+            "{\"cases\": {\"a\": {\"decode_ns\": \"soon\"}}}",
+            "{\"cases\": {\"a\": {\"decode_samples\": 1.5}}}",
+            "{\"cases\": {\"a\": {\"decode_samples\": -2}}}",
+            "{\"cases\": {\"a\": {}}} trailing",
+            "{\"cases\": {\"a\": {\"decode_ns\": 1}, \
+              \"a\": {\"decode_ns\": 2}}}",
+        ] {
+            assert!(
+                CostProfile::parse_json(bad).is_err(),
+                "must reject {bad:?}"
+            );
+        }
+        // Unknown metric keys are tolerated (forward compatibility).
+        let ok = CostProfile::parse_json(
+            "{\"title\": \"t\", \"cases\": {\"a\": \
+             {\"decode_ns\": 5, \"decode_samples\": 1, \
+              \"novel_metric\": 7}}}",
+        )
+        .unwrap();
+        assert_eq!(ok.get("a").unwrap().decode_ns, 5.0);
+    }
+
+    #[test]
+    fn rebalance_splits_on_observed_cost_not_bytes() {
+        // Four equal-width layers, but the profile says fc0 is as
+        // expensive as the other three combined: cost-greedy must pair
+        // fc0 alone against the rest — byte balancing never would,
+        // because the records are near-identical in size.
+        let (index, _) = indexed_mlp(&[16, 16, 16, 16, 16]);
+        let mut profile = CostProfile::new();
+        profile.record("fc0", cost(3000.0));
+        profile.record("fc1", cost(1000.0));
+        profile.record("fc2", cost(1000.0));
+        profile.record("fc3", cost(1000.0));
+        let map = rebalance_map(&index, 2, &profile).unwrap();
+        assert_eq!(map.shard_of("fc0"), Some(0));
+        assert_eq!(map.shard_of("fc1"), Some(1));
+        assert_eq!(map.shard_of("fc2"), Some(1));
+        assert_eq!(map.shard_of("fc3"), Some(1));
+        let loads = profile.shard_loads(&map);
+        assert_eq!(loads, vec![3000.0, 3000.0], "perfectly balanced");
+        // Deterministic, and the emitted sidecar passes the standard
+        // corrupt-map validation round trip.
+        assert_eq!(rebalance_map(&index, 2, &profile).unwrap(), map);
+        assert_eq!(ShardMap::parse(&map.to_bytes()).unwrap(), map);
+    }
+
+    #[test]
+    fn stale_or_mismatched_profiles_are_rejected() {
+        let (index, _) = indexed_mlp(&[16, 12, 8]);
+        // Missing layer.
+        let mut missing = CostProfile::new();
+        missing.record("fc0", cost(10.0));
+        let err = rebalance_map(&index, 2, &missing).unwrap_err();
+        assert!(format!("{err}").contains("no entry"), "{err}");
+        // Extra (renamed) layer: a profile from a different model.
+        let mut extra = CostProfile::new();
+        extra.record("fc0", cost(10.0));
+        extra.record("fc1", cost(10.0));
+        extra.record("ghost", cost(10.0));
+        let err = rebalance_map(&index, 2, &extra).unwrap_err();
+        assert!(
+            format!("{err}").contains("does not have"),
+            "{err}"
+        );
+        // No decode observations.
+        let mut unwarmed = CostProfile::new();
+        unwarmed.record("fc0", LayerCost::default());
+        unwarmed.record("fc1", LayerCost::default());
+        let err = rebalance_map(&index, 2, &unwarmed).unwrap_err();
+        assert!(
+            format!("{err}").contains("no decode observations"),
+            "{err}"
+        );
+        // Non-finite cost.
+        let mut cursed = CostProfile::new();
+        cursed.record(
+            "fc0",
+            LayerCost {
+                decode_ns: f64::INFINITY,
+                decode_samples: 1,
+                ..Default::default()
+            },
+        );
+        cursed.record("fc1", cost(10.0));
+        let err = rebalance_map(&index, 2, &cursed).unwrap_err();
+        assert!(format!("{err}").contains("sane duration"), "{err}");
+        // Zero shards.
+        let full = {
+            let mut p = CostProfile::new();
+            p.record("fc0", cost(1.0));
+            p.record("fc1", cost(1.0));
+            p
+        };
+        assert!(rebalance_map(&index, 0, &full).is_err());
+    }
+}

@@ -1,10 +1,11 @@
 //! The shard router: a multi-store [`Backend`] for split models.
 
+use super::rebalance::CostProfile;
 use crate::container::ShardMap;
 use crate::coordinator::Backend;
 use crate::store::{
-    forward_chain, validate_chain, ModelStore, ReadaheadPolicy,
-    StoreConfig, StoreMetrics,
+    forward_chain, validate_chain, LayerCost, ModelStore,
+    ReadaheadPolicy, StoreConfig, StoreMetrics,
 };
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -16,14 +17,19 @@ struct ChainLink {
     shard: usize,
 }
 
-/// Aggregated router metrics: one snapshot per shard store, plus their
-/// field-wise sum (see [`StoreMetrics::merge`]).
+/// Aggregated router metrics: one snapshot per shard store, their
+/// field-wise sum (see [`StoreMetrics::merge`]), and the merged
+/// per-layer cost table the stores observed.
 #[derive(Debug, Clone)]
 pub struct ShardMetrics {
     /// Per-shard snapshots, indexed by shard id.
     pub per_shard: Vec<StoreMetrics>,
     /// Field-wise sum across shards.
     pub total: StoreMetrics,
+    /// Per-layer observed costs merged across every shard store
+    /// (name-ordered; each layer normally lives on exactly one shard,
+    /// so merging is a union — see [`LayerCost::merge`]).
+    pub costs: Vec<(String, LayerCost)>,
 }
 
 /// A sequential GEMV chain served from N independent [`ModelStore`]s,
@@ -192,7 +198,18 @@ impl ShardRouter {
         for m in &per_shard {
             total.merge(m);
         }
-        ShardMetrics { per_shard, total }
+        ShardMetrics {
+            per_shard,
+            total,
+            costs: self.cost_profile().entries(),
+        }
+    }
+
+    /// The merged observed-cost table as a serializable
+    /// [`CostProfile`] — the input `f2f rebalance` consumes to
+    /// re-partition the model on measured decode time.
+    pub fn cost_profile(&self) -> CostProfile {
+        CostProfile::from_stores(self.shards.iter().map(|s| s.costs()))
     }
 }
 
@@ -345,6 +362,45 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err}").contains("chain mismatch"), "{err}");
+    }
+
+    #[test]
+    fn shard_metrics_aggregate_counters_and_cost_tables() {
+        // Direct coverage of ShardMetrics: total must equal the
+        // field-wise fold of per_shard (timing fields included), and
+        // the merged cost table must union every shard's observations.
+        let c = model(&[20, 16, 12, 8], 65);
+        let (map, shard_bytes) =
+            write_sharded(&c, 2, ShardAssignment::RoundRobin).unwrap();
+        let mut router = ShardRouter::new(
+            open_all(shard_bytes, StoreConfig::default()),
+            &map,
+        )
+        .unwrap();
+        let xs: Vec<Vec<f32>> = (0..2).map(|_| vec![0.3; 20]).collect();
+        router.forward_batch(&xs).unwrap();
+        router.wait_for_idle();
+        let m = router.metrics();
+        let mut folded = StoreMetrics::default();
+        for s in &m.per_shard {
+            folded.merge(s);
+        }
+        assert_eq!(m.total, folded, "total must be the per-shard fold");
+        assert!(m.total.decode_ns_total > 0, "decode time observed");
+        assert!(m.total.gemv_ns_total > 0, "gemv time observed");
+        // Every chain layer shows up exactly once in the merged table,
+        // name-ordered, with both cost dimensions sampled.
+        let names: Vec<&str> =
+            m.costs.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["fc0", "fc1", "fc2"]);
+        for (name, cost) in &m.costs {
+            assert_eq!(cost.decode_samples, 1, "{name}");
+            assert_eq!(cost.gemv_samples, 1, "{name}");
+        }
+        // And the profile view matches the table view.
+        let profile = router.cost_profile();
+        assert_eq!(profile.entries(), m.costs);
+        assert_eq!(profile.len(), 3);
     }
 
     #[test]

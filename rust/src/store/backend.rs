@@ -14,10 +14,12 @@
 //! layer is fetched *pinned* — a readahead install can never evict the
 //! layer mid-GEMV, and readahead admission counts the pinned bytes.
 
-use super::{ModelStore, ReadaheadPolicy};
+use super::readahead::wrapped_targets;
+use super::{ModelStore, ReadaheadCandidate, ReadaheadPolicy};
 use crate::coordinator::Backend;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Validate a forward chain's dimensions (`rows(Lᵢ) == cols(Lᵢ₊₁)`)
 /// and return `(input_dim, output_dim)`. Shared by [`ModelBackend`]
@@ -45,8 +47,12 @@ pub(crate) fn validate_chain(
 /// plus the layer's name. Per layer: one *pinned* fetch (every request
 /// in the batch reuses the Arc, the LRU sees layer-granular traffic,
 /// and a readahead install can never evict the executing layer), then
-/// the readahead policy's targets warm asynchronously *on their own
+/// the readahead plan's targets warm asynchronously *on their own
 /// store* while this layer's GEMVs run, ReLU between hidden layers.
+/// The GEMV phase is stamped into the store's [`super::LayerCosts`]
+/// (per batch item), closing the telemetry loop the `Auto` planner
+/// reads — readahead never changes outputs, only warming, so every
+/// policy serves bit-identical results.
 ///
 /// The single-store [`ModelBackend`] and the multi-store
 /// [`crate::shard::ShardRouter`] both run exactly this function —
@@ -68,10 +74,12 @@ pub(crate) fn forward_chain(
         // overlaps the GEMVs below, and — because the pin is already
         // held — readahead admission correctly accounts for the
         // executing layer's bytes.
-        for t in readahead.targets(i, links.len()) {
+        let depth = planned_depth(readahead, links, i, acts.len());
+        for t in wrapped_targets(i, links.len(), depth) {
             let (ahead_store, ahead_name) = links[t];
             ahead_store.prefetch_async(ahead_name);
         }
+        let gemv_start = Instant::now();
         for a in acts.iter_mut() {
             let mut y = layer.gemv(a);
             if i < last {
@@ -83,8 +91,82 @@ pub(crate) fn forward_chain(
             }
             *a = y;
         }
+        store.costs().record_gemv(name, gemv_start.elapsed(), acts.len());
     }
     Ok(acts)
+}
+
+/// Decide how deep layer `i`'s readahead warms. `Fixed` answers
+/// immediately; `Auto` assembles the planner's inputs from the
+/// telemetry at hand — the executing layer's predicted GEMV window
+/// (per-item EWMA × batch) and, per candidate target in distance
+/// order, the predicted decode cost from *its own* store's table
+/// (zero for already-cached targets) plus a budget-fit check that
+/// tracks the bytes the plan has committed per store, seeded with the
+/// executing layer's pinned bytes. The store's admission control
+/// remains the final gatekeeper; the plan only decides how far to try.
+fn planned_depth(
+    policy: ReadaheadPolicy,
+    links: &[(&ModelStore, &str)],
+    i: usize,
+    batch_items: usize,
+) -> usize {
+    let len = links.len();
+    let cap = policy.max_depth().min(len.saturating_sub(1));
+    if cap == 0 {
+        return 0;
+    }
+    if !policy.is_auto() {
+        // Deliberate short-circuit, duplicating plan()'s one-line
+        // Fixed clamp: building the candidate list costs per-target
+        // store lookups, which a fixed depth never needs.
+        return cap;
+    }
+    let (store, name) = links[i];
+    let window = store
+        .costs()
+        .get(name)
+        .and_then(|c| c.gemv_estimate())
+        .map(|per_item| per_item * batch_items as f64);
+    let mut committed: Vec<(&ModelStore, usize)> =
+        vec![(store, store.layer_decoded_bytes(name).unwrap_or(0))];
+    let mut candidates = Vec::with_capacity(cap);
+    for d in 1..=cap {
+        let (ahead_store, ahead_name) = links[(i + d) % len];
+        let cached = ahead_store.is_cached(ahead_name);
+        let decode_ns = if cached {
+            Some(0.0) // warming a resident layer is a dedup no-op
+        } else {
+            ahead_store
+                .costs()
+                .get(ahead_name)
+                .and_then(|c| c.decode_estimate())
+        };
+        let need = if cached {
+            0
+        } else {
+            ahead_store.layer_decoded_bytes(ahead_name).unwrap_or(0)
+        };
+        let used = committed
+            .iter_mut()
+            .find(|(s, _)| std::ptr::eq(*s, ahead_store));
+        let fits_budget = match used {
+            Some((_, u)) => {
+                let fits =
+                    u.saturating_add(need) <= ahead_store.budget_bytes();
+                if fits {
+                    *u = u.saturating_add(need);
+                }
+                fits
+            }
+            None => {
+                committed.push((ahead_store, need));
+                need <= ahead_store.budget_bytes()
+            }
+        };
+        candidates.push(ReadaheadCandidate { decode_ns, fits_budget });
+    }
+    policy.plan(window, &candidates)
 }
 
 /// A sequential GEMV chain (`x → L₀ → ReLU → L₁ → … → L_{n−1}`) served
@@ -249,7 +331,11 @@ mod tests {
         let c = model(&[20, 16, 12, 8], 17);
         let x: Vec<f32> = (0..20).map(|j| (j as f32 * 0.2).cos()).collect();
         let mut outs = Vec::new();
-        for policy in [ReadaheadPolicy::off(), ReadaheadPolicy::layers(2)] {
+        for policy in [
+            ReadaheadPolicy::off(),
+            ReadaheadPolicy::layers(2),
+            ReadaheadPolicy::auto(),
+        ] {
             let store = Arc::new(ModelStore::from_container(
                 c.clone(),
                 StoreConfig::default(),
@@ -258,11 +344,78 @@ mod tests {
                 .unwrap()
                 .with_readahead(policy);
             assert_eq!(b.readahead(), policy);
-            outs.push(b.forward_batch(&[x.clone()]).unwrap());
+            // Two passes: the second runs auto with a warmed cost
+            // model, so the planner path beyond the depth-1 fallback
+            // is exercised too.
+            let first = b.forward_batch(&[x.clone()]).unwrap();
+            let second = b.forward_batch(&[x.clone()]).unwrap();
+            assert_eq!(first, second, "{policy}: passes must agree");
+            outs.push(first);
             store.wait_for_idle();
             assert_eq!(store.metrics().redundant_decodes, 0);
         }
         assert_eq!(outs[0], outs[1], "policy must not change outputs");
+        assert_eq!(outs[0], outs[2], "auto must not change outputs");
+    }
+
+    #[test]
+    fn forward_records_gemv_and_decode_telemetry() {
+        let c = model(&[20, 16, 12], 18);
+        let store = Arc::new(ModelStore::from_container(
+            c,
+            StoreConfig::default(),
+        ));
+        let mut b = ModelBackend::sequential(store.clone()).unwrap();
+        let xs: Vec<Vec<f32>> =
+            (0..3).map(|_| vec![0.25; 20]).collect();
+        b.forward_batch(&xs).unwrap();
+        store.wait_for_idle();
+        for name in ["fc0", "fc1"] {
+            let cost = store.costs().get(name).unwrap();
+            assert_eq!(cost.gemv_samples, 1, "{name}");
+            assert!(cost.gemv_estimate().is_some(), "{name}");
+            assert_eq!(cost.decode_samples, 1, "{name}");
+        }
+        let m = store.metrics();
+        assert!(m.gemv_ns_total > 0);
+        assert!(m.decode_ns_total > 0);
+    }
+
+    #[test]
+    fn auto_readahead_plans_deeper_once_costs_warm() {
+        // Seed a cost model where decode is far cheaper than the GEMV
+        // window: the planner must warm the whole remaining chain, and
+        // the store must show multi-layer prefetches during the pass.
+        let c = model(&[20, 16, 12, 8], 19);
+        let store = Arc::new(ModelStore::from_container(
+            c,
+            StoreConfig::default(),
+        ));
+        store.seed_costs(store.layer_names().into_iter().map(|n| {
+            (
+                n,
+                crate::store::LayerCost {
+                    decode_ns: 1.0,
+                    decode_samples: 8,
+                    gemv_ns: 1_000_000.0,
+                    gemv_samples: 8,
+                },
+            )
+        }));
+        let mut b = ModelBackend::sequential(store.clone())
+            .unwrap()
+            .with_readahead(ReadaheadPolicy::auto());
+        b.forward_batch(&[vec![0.5; 20]]).unwrap();
+        store.wait_for_idle();
+        let m = store.metrics();
+        // Layer 0 alone should have warmed fc1 and fc2 (depth 2 of a
+        // 3-layer chain); later layers' warms dedup against residents.
+        assert!(
+            m.prefetches >= 2,
+            "warm cost model must plan past depth 1 (prefetches={})",
+            m.prefetches
+        );
+        assert_eq!(m.redundant_decodes, 0);
     }
 
     #[test]

@@ -20,8 +20,15 @@
 //!   ([`ModelStore::get_pinned`] → [`PinnedLayer`]) so installs never
 //!   evict a layer mid-GEMV. Models larger than the decoded budget
 //!   serve by decode-on-miss / evict-cold.
+//! * [`LayerCosts`] — per-layer timing telemetry: EWMA decode
+//!   (submit→install) and GEMV costs, recorded at the source (the
+//!   decode service stamps completions, the forward chain stamps each
+//!   layer's GEMV phase). The cost model everything below consumes.
 //! * [`ReadaheadPolicy`] — which layers to warm while layer `i`
-//!   executes (default: `i+1`, wrapping at the chain end).
+//!   executes: a fixed depth (default: `i+1`, wrapping at the chain
+//!   end), or `Auto` — a planner that sizes depth-`k` warming so the
+//!   predicted decode cost fits the executing layer's predicted GEMV
+//!   window and the store budget.
 //! * [`ModelBackend`] — a readahead-driven multi-layer forward pass
 //!   (sequential GEMV chain, ReLU between hidden layers) that plugs
 //!   into the coordinator's [`crate::coordinator::InferenceServer`].
@@ -29,20 +36,26 @@
 //!   or (with the `mmap` feature) a read-only file mapping that pages
 //!   in only the records this store decodes. One store per shard of a
 //!   [`crate::container::ShardMap`]-split model is the intended
-//!   deployment; [`crate::shard::ShardRouter`] chains them.
+//!   deployment; [`crate::shard::ShardRouter`] chains them, and
+//!   [`crate::shard::CostProfile`] serializes each store's cost table
+//!   so `f2f rebalance` can re-shard on observed decode time.
 
 mod backend;
 mod model_store;
 mod pool;
 mod readahead;
 mod source;
+mod timing;
 
 pub use backend::ModelBackend;
 pub(crate) use backend::{forward_chain, validate_chain};
 pub use model_store::{ModelStore, PinnedLayer, StoreConfig, StoreMetrics};
 pub use pool::{DecodeHandle, DecodeOutcome, DecodePool, DecodeService};
-pub use readahead::ReadaheadPolicy;
+pub use readahead::{
+    ReadaheadCandidate, ReadaheadPolicy, DEFAULT_AUTO_MAX_DEPTH,
+};
 pub use source::RecordSource;
+pub use timing::{LayerCost, LayerCosts, DEFAULT_EWMA_ALPHA};
 
 /// Build a small compressed INT8 layer chain (`dims[i+1] × dims[i]`,
 /// named `fc0..`) — shared scaffolding for the store unit tests, a thin

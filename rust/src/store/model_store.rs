@@ -35,6 +35,7 @@
 
 use super::pool::{DecodeOutcome, DecodeService};
 use super::source::RecordSource;
+use super::timing::{LayerCost, LayerCosts};
 use crate::container::{
     read_container, read_layer_at, CompressedLayer, Container,
     ContainerIndex,
@@ -86,6 +87,12 @@ pub struct StoreMetrics {
     pub cached_layers: usize,
     /// Decoded bytes currently pinned by executing layers.
     pub pinned_bytes: usize,
+    /// Total wall nanoseconds spent decoding (submit→install), summed
+    /// over every completed decode (see [`LayerCosts`]).
+    pub decode_ns_total: u64,
+    /// Total wall nanoseconds of GEMV phases recorded against this
+    /// store's layers by the forward chain.
+    pub gemv_ns_total: u64,
 }
 
 impl StoreMetrics {
@@ -103,6 +110,8 @@ impl StoreMetrics {
         self.cached_bytes += other.cached_bytes;
         self.cached_layers += other.cached_layers;
         self.pinned_bytes += other.pinned_bytes;
+        self.decode_ns_total += other.decode_ns_total;
+        self.gemv_ns_total += other.gemv_ns_total;
     }
 }
 
@@ -179,6 +188,9 @@ struct StoreInner {
     source: Source,
     budget: usize,
     state: Mutex<CacheState>,
+    /// Per-layer timing telemetry: decode EWMA stamped on install (the
+    /// worker-side callback), GEMV EWMA stamped by the forward chain.
+    costs: LayerCosts,
     /// Signalled whenever an in-flight registration is removed, so
     /// [`ModelStore::wait_for_idle`] can block instead of polling.
     idle: Condvar,
@@ -439,6 +451,7 @@ impl ModelStore {
                 source,
                 budget: config.cache_budget_bytes,
                 state: Mutex::new(CacheState::default()),
+                costs: LayerCosts::new(),
                 idle: Condvar::new(),
             }),
             service,
@@ -631,8 +644,13 @@ impl ModelStore {
                     .compressed_layer(&parse_key)
                     .map_err(|e| format!("{e:#}"))
             },
-            move |outcome| match outcome {
-                Ok(decoded) => inner.install(&key, decoded, &flight),
+            move |outcome, took| match outcome {
+                Ok(decoded) => {
+                    // Submit→install wall time, stamped by the service:
+                    // the latency the auto readahead planner must hide.
+                    inner.costs.record_decode(&key, took);
+                    inner.install(&key, decoded, &flight);
+                }
                 Err(msg) => inner.abort(&key, msg, &flight),
             },
         );
@@ -683,6 +701,29 @@ impl ModelStore {
             cached_bytes: st.cached_bytes,
             cached_layers: st.entries.len(),
             pinned_bytes: st.pinned_bytes,
+            decode_ns_total: self.inner.costs.decode_ns_total(),
+            gemv_ns_total: self.inner.costs.gemv_ns_total(),
+        }
+    }
+
+    /// Per-layer timing telemetry: decode (submit→install) and GEMV
+    /// EWMAs recorded while this store serves. The auto readahead
+    /// planner reads estimates here; `f2f rebalance` consumes a
+    /// serialized snapshot ([`crate::shard::CostProfile`]).
+    pub fn costs(&self) -> &LayerCosts {
+        &self.inner.costs
+    }
+
+    /// Pre-warm the cost table from previously captured entries (e.g.
+    /// a [`crate::shard::CostProfile`] saved by an earlier run), so the
+    /// auto readahead planner starts with estimates instead of the
+    /// depth-1 fallback.
+    pub fn seed_costs<I>(&self, entries: I)
+    where
+        I: IntoIterator<Item = (String, LayerCost)>,
+    {
+        for (name, cost) in entries {
+            self.inner.costs.seed(&name, cost);
         }
     }
 
@@ -970,5 +1011,100 @@ mod tests {
         assert!(store.is_cached("fc0") && !store.is_cached("fc1"));
         // Unknown layers are declined too (a blocking get reports them).
         assert!(!store.prefetch_async("ghost"));
+    }
+
+    #[test]
+    fn metrics_merge_sums_every_field() {
+        // Direct coverage of the aggregation the shard router relies
+        // on — every field, including the timing totals, must sum.
+        let a = StoreMetrics {
+            hits: 1,
+            misses: 2,
+            decodes: 3,
+            evictions: 4,
+            prefetches: 5,
+            redundant_decodes: 6,
+            readahead_skips: 7,
+            cached_bytes: 8,
+            cached_layers: 9,
+            pinned_bytes: 10,
+            decode_ns_total: 11,
+            gemv_ns_total: 12,
+        };
+        let b = StoreMetrics {
+            hits: 100,
+            misses: 200,
+            decodes: 300,
+            evictions: 400,
+            prefetches: 500,
+            redundant_decodes: 600,
+            readahead_skips: 700,
+            cached_bytes: 800,
+            cached_layers: 900,
+            pinned_bytes: 1000,
+            decode_ns_total: 1100,
+            gemv_ns_total: 1200,
+        };
+        let mut merged = a;
+        merged.merge(&b);
+        assert_eq!(
+            merged,
+            StoreMetrics {
+                hits: 101,
+                misses: 202,
+                decodes: 303,
+                evictions: 404,
+                prefetches: 505,
+                redundant_decodes: 606,
+                readahead_skips: 707,
+                cached_bytes: 808,
+                cached_layers: 909,
+                pinned_bytes: 1010,
+                decode_ns_total: 1111,
+                gemv_ns_total: 1212,
+            }
+        );
+        // Merging the identity changes nothing.
+        let mut same = a;
+        same.merge(&StoreMetrics::default());
+        assert_eq!(same, a);
+    }
+
+    #[test]
+    fn decode_timing_is_recorded_on_install() {
+        let c = model(&[16, 12, 8], 37);
+        let store = ModelStore::from_container(c, StoreConfig::default());
+        assert!(store.costs().get("fc0").is_none(), "cold table");
+        store.get("fc0").unwrap();
+        store.get("fc1").unwrap();
+        let c0 = store.costs().get("fc0").unwrap();
+        assert_eq!(c0.decode_samples, 1);
+        assert!(c0.decode_estimate().unwrap() > 0.0);
+        assert_eq!(c0.gemv_samples, 0, "no GEMV ran through the store");
+        let m = store.metrics();
+        assert!(m.decode_ns_total > 0);
+        assert_eq!(m.gemv_ns_total, 0);
+        // A cache hit records no new decode sample.
+        store.get("fc0").unwrap();
+        assert_eq!(store.costs().get("fc0").unwrap().decode_samples, 1);
+    }
+
+    #[test]
+    fn seeded_costs_prewarm_without_touching_totals() {
+        let c = model(&[16, 12], 38);
+        let store = ModelStore::from_container(c, StoreConfig::default());
+        store.seed_costs(vec![(
+            "fc0".to_string(),
+            LayerCost {
+                decode_ns: 750.0,
+                decode_samples: 2,
+                ..Default::default()
+            },
+        )]);
+        assert_eq!(
+            store.costs().get("fc0").unwrap().decode_estimate(),
+            Some(750.0)
+        );
+        assert_eq!(store.metrics().decode_ns_total, 0);
     }
 }

@@ -29,6 +29,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// A configurable-width parallel decoder for compressed layers.
 #[derive(Debug, Clone)]
@@ -207,8 +208,11 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// of the job that died (`String`, so every waiter can share it).
 pub type DecodeOutcome = std::result::Result<Arc<DecodedLayer>, String>;
 
-/// Completion callback invoked by the finishing worker.
-type OnDone = Box<dyn FnOnce(DecodeOutcome) + Send + 'static>;
+/// Completion callback invoked by the finishing worker with the
+/// outcome and the task's submit→completion wall time — the latency a
+/// readahead must actually hide (queue wait included), which is what
+/// the store's cost telemetry records.
+type OnDone = Box<dyn FnOnce(DecodeOutcome, Duration) + Send + 'static>;
 
 struct ServiceState {
     queue: VecDeque<Job>,
@@ -232,6 +236,9 @@ struct ServiceShared {
 /// never pays the record parse. [`LayerTask::begin`] arms the task with
 /// the layer in both cases, always before any plane job can run.
 struct LayerTask {
+    /// When the task was submitted; completion stamps the elapsed wall
+    /// time into the callback.
+    submitted: Instant,
     /// Set once by [`LayerTask::begin`] before any plane job runs.
     layer: std::sync::OnceLock<Arc<CompressedLayer>>,
     /// Built lazily by the first worker job (tables are up to
@@ -247,6 +254,7 @@ struct LayerTask {
 impl LayerTask {
     fn new(on_done: Option<OnDone>) -> Self {
         LayerTask {
+            submitted: Instant::now(),
             layer: std::sync::OnceLock::new(),
             decoder: std::sync::OnceLock::new(),
             planes: Mutex::new(Vec::new()),
@@ -346,7 +354,7 @@ impl LayerTask {
         };
         self.cv.notify_all();
         if let Some(cb) = cb {
-            cb(outcome);
+            cb(outcome, self.submitted.elapsed());
         }
     }
 
@@ -434,20 +442,22 @@ impl DecodeService {
     /// holding pre-parsed layers share them with the workers instead of
     /// deep-copying plane streams on every miss.
     pub fn decode_async(&self, layer: Arc<CompressedLayer>) -> DecodeHandle {
-        self.decode_async_then(layer, |_| {})
+        self.decode_async_then(layer, |_, _| {})
     }
 
     /// Queue a decode and run `on_done` (on the finishing worker) with
     /// the outcome — the assembled layer, or the error of a job that
-    /// panicked. The callback fires exactly once, after the outcome has
-    /// been published to the handle.
+    /// panicked — plus the task's submit→completion wall time (queue
+    /// wait included: the latency a warm must hide, which the store's
+    /// cost telemetry records). The callback fires exactly once, after
+    /// the outcome has been published to the handle.
     pub fn decode_async_then<F>(
         &self,
         layer: Arc<CompressedLayer>,
         on_done: F,
     ) -> DecodeHandle
     where
-        F: FnOnce(DecodeOutcome) + Send + 'static,
+        F: FnOnce(DecodeOutcome, Duration) + Send + 'static,
     {
         let task = Arc::new(LayerTask::new(Some(Box::new(on_done))));
         let n_planes = task.begin(layer);
@@ -471,7 +481,7 @@ impl DecodeService {
         P: FnOnce() -> std::result::Result<Arc<CompressedLayer>, String>
             + Send
             + 'static,
-        F: FnOnce(DecodeOutcome) + Send + 'static,
+        F: FnOnce(DecodeOutcome, Duration) + Send + 'static,
     {
         let task = Arc::new(LayerTask::new(Some(Box::new(on_done))));
         let t = task.clone();
@@ -664,13 +674,36 @@ mod tests {
         let svc = DecodeService::new(2);
         let fired = Arc::new(AtomicUsize::new(0));
         let f2 = fired.clone();
-        let h = svc.decode_async_then(Arc::new(cl.clone()), move |outcome| {
-            let decoded = outcome.expect("well-formed layer decodes");
-            assert_eq!(decoded.rows * decoded.cols, 8 * 32);
-            f2.fetch_add(1, Ordering::SeqCst);
-        });
+        let h =
+            svc.decode_async_then(Arc::new(cl.clone()), move |outcome, _| {
+                let decoded = outcome.expect("well-formed layer decodes");
+                assert_eq!(decoded.rows * decoded.cols, 8 * 32);
+                f2.fetch_add(1, Ordering::SeqCst);
+            });
         h.wait().unwrap();
         assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn completion_callback_stamps_submit_to_install_time() {
+        // Wait on the callback itself (not the handle): the outcome is
+        // published to waiters *before* the callback runs, so blocking
+        // on h.wait() alone would race the stamp.
+        let cl = compress("stamp", 8, 32, 21);
+        let svc = DecodeService::new(2);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let t0 = Instant::now();
+        let h = svc.decode_async_then(Arc::new(cl), move |outcome, took| {
+            outcome.expect("well-formed layer decodes");
+            tx.send(took).expect("receiver alive");
+        });
+        let took = rx.recv().expect("callback fired");
+        let wall = t0.elapsed();
+        assert!(
+            took <= wall,
+            "stamped {took:?} cannot exceed the submit→recv wall {wall:?}"
+        );
+        h.wait().unwrap();
     }
 
     #[test]
@@ -705,7 +738,7 @@ mod tests {
                 *pt.lock().unwrap() = Some(std::thread::current().id());
                 Ok(Arc::new(cl))
             },
-            |_| {},
+            |_, _| {},
         );
         let decoded = h.wait().unwrap();
         assert_eq!(decoded.weights, want.weights);
@@ -721,14 +754,14 @@ mod tests {
     fn parse_stage_errors_and_panics_fail_the_handle() {
         let svc = DecodeService::new(1);
         let err = svc
-            .decode_parse_then(|| Err("record rotted".into()), |_| {})
+            .decode_parse_then(|| Err("record rotted".into()), |_, _| {})
             .wait()
             .unwrap_err();
         assert!(format!("{err}").contains("record rotted"));
         let err = svc
             .decode_parse_then(
                 || panic!("hostile bytes"),
-                |_| {},
+                |_, _| {},
             )
             .wait()
             .unwrap_err();
@@ -750,7 +783,7 @@ mod tests {
             for i in 0..4 {
                 let cl = compress(&format!("d{i}"), 6, 24, 30 + i as u64);
                 let d2 = done.clone();
-                svc.decode_async_then(Arc::new(cl), move |_| {
+                svc.decode_async_then(Arc::new(cl), move |_, _| {
                     d2.fetch_add(1, Ordering::SeqCst);
                 });
             }

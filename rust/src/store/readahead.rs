@@ -1,4 +1,4 @@
-//! Readahead policy: warm layer `i+1` while layer `i`'s GEMV runs.
+//! Readahead planning: which layers to warm while layer `i` executes.
 //!
 //! The paper's fixed-to-fixed format exists so irregular-sparsity
 //! weights decode through a highly regular, parallel structure; a
@@ -9,14 +9,58 @@
 //! [`ModelStore::prefetch_async`](super::ModelStore::prefetch_async),
 //! which dedups against in-flight decodes and skips layers that cannot
 //! fit in the budget alongside the pinned working set.
+//!
+//! Two policies exist:
+//!
+//! * [`ReadaheadPolicy::Fixed`] — warm a constant number of layers
+//!   ahead (0 = off). Simple, predictable, and blind: a depth that
+//!   overlaps perfectly on one layer stalls or over-warms on another,
+//!   because decode time varies with mask density and correction count
+//!   while the GEMV window varies with geometry and batch size.
+//! * [`ReadaheadPolicy::Auto`] — a cost-model-driven planner. Per
+//!   executing layer it picks the largest depth `k` whose *predicted*
+//!   cumulative decode cost (EWMA, [`super::LayerCosts`]) fits inside
+//!   the layer's *predicted* GEMV window and whose decoded bytes fit
+//!   the owning store's budget, falling back to depth-1 until the
+//!   estimates warm. Warming deeper than the window can hide wastes
+//!   decode workers; shallower leaves stalls — `Auto` tracks the
+//!   crossover per layer, per batch size, as the EWMAs drift.
+//!
+//! The planner decides *how deep*; admission control in the store
+//! (budget + pinned set + in-flight dedup) remains the final
+//! gatekeeper, so a plan can only ever warm, never evict the working
+//! set.
 
 use anyhow::anyhow;
 
+/// Default depth ceiling for [`ReadaheadPolicy::Auto`]: even a fully
+/// warmed cost model never plans past this many layers ahead (decode
+/// parallelism flattens and deep warms mostly fight the LRU).
+pub const DEFAULT_AUTO_MAX_DEPTH: usize = 4;
+
 /// How far ahead of the executing layer the store should warm.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ReadaheadPolicy {
-    /// Number of layers ahead to warm (0 = readahead off).
-    pub depth: usize,
+pub enum ReadaheadPolicy {
+    /// Warm a fixed number of layers ahead (0 = readahead off).
+    Fixed(usize),
+    /// Plan depth per layer from observed costs, at most `max_depth`.
+    Auto {
+        /// Hard ceiling on the planned depth.
+        max_depth: usize,
+    },
+}
+
+/// One readahead candidate as the [`ReadaheadPolicy::Auto`] planner
+/// sees it, in distance order (`candidates[d-1]` is the layer `d`
+/// ahead of the executing one).
+#[derive(Debug, Clone, Copy)]
+pub struct ReadaheadCandidate {
+    /// Predicted decode cost in ns: `None` until the EWMA has a sample
+    /// (an already-cached target is `Some(0.0)` — warming it is free).
+    pub decode_ns: Option<f64>,
+    /// Whether the target's decoded bytes fit its store's budget on
+    /// top of what the plan has already committed.
+    pub fits_budget: bool,
 }
 
 impl Default for ReadaheadPolicy {
@@ -29,40 +73,123 @@ impl Default for ReadaheadPolicy {
 impl ReadaheadPolicy {
     /// Readahead disabled: decode strictly on miss.
     pub fn off() -> Self {
-        ReadaheadPolicy { depth: 0 }
+        ReadaheadPolicy::Fixed(0)
     }
 
     /// Warm `depth` layers ahead of the executing one.
     pub fn layers(depth: usize) -> Self {
-        ReadaheadPolicy { depth }
+        ReadaheadPolicy::Fixed(depth)
     }
 
-    /// True when any readahead is issued.
+    /// Cost-model-driven depth with the default ceiling.
+    pub fn auto() -> Self {
+        ReadaheadPolicy::Auto { max_depth: DEFAULT_AUTO_MAX_DEPTH }
+    }
+
+    /// True when any readahead may be issued (`Auto` with a zero
+    /// ceiling is just as off as `Fixed(0)`).
     pub fn enabled(&self) -> bool {
-        self.depth > 0
+        self.max_depth() > 0
     }
 
-    /// Chain indices to warm when layer `i` of a `len`-layer chain
-    /// starts executing. Wraps at the chain end so the next request's
-    /// first layers warm during the tail of this one; never names `i`
-    /// itself (depth is clamped to `len - 1`).
-    pub fn targets(self, i: usize, len: usize) -> impl Iterator<Item = usize> {
-        let depth = if len == 0 { 0 } else { self.depth.min(len - 1) };
-        (1..=depth).map(move |d| (i + d) % len)
+    /// True for the cost-model-driven planner.
+    pub fn is_auto(&self) -> bool {
+        matches!(self, ReadaheadPolicy::Auto { .. })
     }
+
+    /// The deepest warm this policy can ever issue.
+    pub fn max_depth(&self) -> usize {
+        match *self {
+            ReadaheadPolicy::Fixed(depth) => depth,
+            ReadaheadPolicy::Auto { max_depth } => max_depth,
+        }
+    }
+
+    /// Decide the warm depth for one executing layer.
+    ///
+    /// `gemv_window_ns` is the predicted GEMV time of the executing
+    /// layer over the whole batch (`None` until its EWMA warms);
+    /// `candidates[d-1]` describes the layer `d` ahead. `Fixed` ignores
+    /// the inputs and returns its depth (clamped to the candidate
+    /// count); `Auto` extends the plan while the cumulative predicted
+    /// decode cost stays inside the window and each target fits its
+    /// budget, stopping at the first unwarmed target — and never
+    /// returns less than 1 (the depth-1 fallback keeps the pipeline's
+    /// floor behavior identical to `Fixed(1)` while estimates warm).
+    pub fn plan(
+        &self,
+        gemv_window_ns: Option<f64>,
+        candidates: &[ReadaheadCandidate],
+    ) -> usize {
+        match *self {
+            ReadaheadPolicy::Fixed(depth) => depth.min(candidates.len()),
+            ReadaheadPolicy::Auto { max_depth } => {
+                let cap = max_depth.min(candidates.len());
+                if cap == 0 {
+                    return 0;
+                }
+                let Some(window) = gemv_window_ns else {
+                    return 1; // executing layer unwarmed: floor depth
+                };
+                let mut spent = 0.0f64;
+                let mut k = 0;
+                for c in &candidates[..cap] {
+                    let Some(cost) = c.decode_ns else { break };
+                    if !c.fits_budget || spent + cost > window {
+                        break;
+                    }
+                    spent += cost;
+                    k += 1;
+                }
+                k.max(1)
+            }
+        }
+    }
+}
+
+/// Chain indices `1..=depth` ahead of layer `i` in a `len`-layer
+/// chain, wrapping at the chain end so the next request's first layers
+/// warm during the tail of this one; never names `i` itself (depth is
+/// clamped to `len - 1`).
+pub(crate) fn wrapped_targets(
+    i: usize,
+    len: usize,
+    depth: usize,
+) -> impl Iterator<Item = usize> {
+    let depth = if len == 0 { 0 } else { depth.min(len - 1) };
+    (1..=depth).map(move |d| (i + d) % len)
 }
 
 impl std::str::FromStr for ReadaheadPolicy {
     type Err = anyhow::Error;
 
-    /// Parse the CLI form: `on` (depth 1), `off`, or a depth number.
+    /// Parse the CLI form: `on` (depth 1), `off`, a fixed depth
+    /// number, or `auto` (cost-model planner).
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
             "on" => Ok(ReadaheadPolicy::layers(1)),
             "off" => Ok(ReadaheadPolicy::off()),
+            "auto" => Ok(ReadaheadPolicy::auto()),
             n => n.parse::<usize>().map(ReadaheadPolicy::layers).map_err(
-                |_| anyhow!("--readahead: expected on|off|<depth>, got {n:?}"),
+                |_| {
+                    anyhow!(
+                        "--readahead: expected on|off|<depth>|auto, \
+                         got {n:?}"
+                    )
+                },
             ),
+        }
+    }
+}
+
+impl std::fmt::Display for ReadaheadPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            ReadaheadPolicy::Fixed(0) => write!(f, "off"),
+            ReadaheadPolicy::Fixed(depth) => write!(f, "{depth}"),
+            ReadaheadPolicy::Auto { max_depth } => {
+                write!(f, "auto(<={max_depth})")
+            }
         }
     }
 }
@@ -71,38 +198,105 @@ impl std::str::FromStr for ReadaheadPolicy {
 mod tests {
     use super::*;
 
-    fn targets(p: ReadaheadPolicy, i: usize, len: usize) -> Vec<usize> {
-        p.targets(i, len).collect()
+    fn targets(i: usize, len: usize, depth: usize) -> Vec<usize> {
+        wrapped_targets(i, len, depth).collect()
+    }
+
+    fn warm(decode_ns: f64) -> ReadaheadCandidate {
+        ReadaheadCandidate { decode_ns: Some(decode_ns), fits_budget: true }
+    }
+
+    fn cold() -> ReadaheadCandidate {
+        ReadaheadCandidate { decode_ns: None, fits_budget: true }
     }
 
     #[test]
     fn depth_one_warms_next_and_wraps() {
         let p = ReadaheadPolicy::default();
-        assert_eq!(p.depth, 1);
+        assert_eq!(p, ReadaheadPolicy::Fixed(1));
         assert!(p.enabled());
-        assert_eq!(targets(p, 0, 4), vec![1]);
-        assert_eq!(targets(p, 2, 4), vec![3]);
-        assert_eq!(targets(p, 3, 4), vec![0], "wraps at the chain end");
+        assert!(!p.is_auto());
+        assert_eq!(targets(0, 4, p.max_depth()), vec![1]);
+        assert_eq!(targets(2, 4, p.max_depth()), vec![3]);
+        assert_eq!(targets(3, 4, p.max_depth()), vec![0], "wraps at end");
     }
 
     #[test]
     fn off_names_nothing() {
         let p = ReadaheadPolicy::off();
         assert!(!p.enabled());
-        assert_eq!(targets(p, 0, 4), Vec::<usize>::new());
+        assert_eq!(p.max_depth(), 0);
+        assert_eq!(p.plan(Some(1e9), &[warm(1.0)]), 0);
+        assert_eq!(targets(0, 4, 0), Vec::<usize>::new());
     }
 
     #[test]
     fn deep_readahead_clamps_to_chain() {
-        let p = ReadaheadPolicy::layers(2);
-        assert_eq!(targets(p, 1, 4), vec![2, 3]);
-        assert_eq!(targets(p, 3, 4), vec![0, 1]);
+        assert_eq!(targets(1, 4, 2), vec![2, 3]);
+        assert_eq!(targets(3, 4, 2), vec![0, 1]);
         // Depth beyond the chain never names the executing layer.
-        let p = ReadaheadPolicy::layers(10);
-        assert_eq!(targets(p, 1, 3), vec![2, 0]);
+        assert_eq!(targets(1, 3, 10), vec![2, 0]);
         // Degenerate chains.
-        assert_eq!(targets(p, 0, 1), Vec::<usize>::new());
-        assert_eq!(targets(p, 0, 0), Vec::<usize>::new());
+        assert_eq!(targets(0, 1, 10), Vec::<usize>::new());
+        assert_eq!(targets(0, 0, 10), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn fixed_plan_ignores_costs() {
+        let p = ReadaheadPolicy::layers(2);
+        assert_eq!(p.plan(None, &[cold(), cold(), cold()]), 2);
+        assert_eq!(p.plan(Some(0.0), &[warm(1e12)]), 1, "clamps to len");
+    }
+
+    #[test]
+    fn auto_falls_back_to_depth_one_until_warm() {
+        let p = ReadaheadPolicy::auto();
+        assert!(p.is_auto() && p.enabled());
+        // Executing layer's window unknown: floor depth 1.
+        assert_eq!(p.plan(None, &[warm(10.0), warm(10.0)]), 1);
+        // First target unwarmed: still floor depth 1.
+        assert_eq!(p.plan(Some(100.0), &[cold(), warm(1.0)]), 1);
+        // No candidates at all (single-layer chain): nothing to warm.
+        assert_eq!(p.plan(Some(100.0), &[]), 0);
+    }
+
+    #[test]
+    fn auto_extends_while_decode_fits_the_window() {
+        let p = ReadaheadPolicy::auto();
+        // Window 100ns, decodes 40+40+40: third overflows.
+        let c = [warm(40.0), warm(40.0), warm(40.0)];
+        assert_eq!(p.plan(Some(100.0), &c), 2);
+        // A roomier window takes all three.
+        assert_eq!(p.plan(Some(1000.0), &c), 3);
+        // A tiny window still floors at 1 (Fixed(1) parity).
+        assert_eq!(p.plan(Some(1.0), &c), 1);
+        // An unwarmed target stops the extension, not the floor.
+        let c = [warm(40.0), cold(), warm(40.0)];
+        assert_eq!(p.plan(Some(1000.0), &c), 1);
+        // Already-cached targets report 0ns and extend for free.
+        let c = [warm(0.0), warm(0.0), warm(90.0)];
+        assert_eq!(p.plan(Some(100.0), &c), 3);
+    }
+
+    #[test]
+    fn auto_respects_budget_and_max_depth() {
+        let p = ReadaheadPolicy::Auto { max_depth: 2 };
+        let over = ReadaheadCandidate {
+            decode_ns: Some(1.0),
+            fits_budget: false,
+        };
+        // Budget-blocked target stops the extension.
+        assert_eq!(p.plan(Some(1e9), &[warm(1.0), over, warm(1.0)]), 1);
+        // max_depth caps even when everything fits.
+        assert_eq!(
+            p.plan(Some(1e9), &[warm(1.0), warm(1.0), warm(1.0)]),
+            2
+        );
+        assert_eq!(p.max_depth(), 2);
+        // A zero ceiling is as off as Fixed(0).
+        let zero = ReadaheadPolicy::Auto { max_depth: 0 };
+        assert!(!zero.enabled());
+        assert_eq!(zero.plan(Some(1e9), &[warm(1.0)]), 0);
     }
 
     #[test]
@@ -119,6 +313,20 @@ mod tests {
             "3".parse::<ReadaheadPolicy>().unwrap(),
             ReadaheadPolicy::layers(3)
         );
+        assert_eq!(
+            "auto".parse::<ReadaheadPolicy>().unwrap(),
+            ReadaheadPolicy::Auto { max_depth: DEFAULT_AUTO_MAX_DEPTH }
+        );
         assert!("sideways".parse::<ReadaheadPolicy>().is_err());
+    }
+
+    #[test]
+    fn displays_cli_round_trip_forms() {
+        assert_eq!(ReadaheadPolicy::off().to_string(), "off");
+        assert_eq!(ReadaheadPolicy::layers(3).to_string(), "3");
+        assert_eq!(
+            ReadaheadPolicy::auto().to_string(),
+            format!("auto(<={DEFAULT_AUTO_MAX_DEPTH})")
+        );
     }
 }

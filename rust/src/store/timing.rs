@@ -1,0 +1,308 @@
+//! Per-layer timing telemetry: the cost model under adaptive serving.
+//!
+//! The paper's fixed-to-fixed format keeps the *shape* of every layer's
+//! compressed record regular, but the *cost* of decoding one is not
+//! uniform: it scales with mask density, plane count and correction
+//! length, and the GEMV it feeds scales with the layer's geometry and
+//! the batch in flight. Scheduling decisions that pretend those costs
+//! are equal (a fixed readahead depth, byte-balanced shards) leave
+//! overlap on the table. [`LayerCosts`] is the measurement layer those
+//! schedulers consume:
+//!
+//! * [`LayerCosts::record_decode`] — stamped by the model store when a
+//!   decode completes, covering submit→install on the background
+//!   service (queue wait included: that is the latency a warm must
+//!   actually hide).
+//! * [`LayerCosts::record_gemv`] — stamped by the forward chain around
+//!   each layer's GEMV phase, normalized per batch item so estimates
+//!   compose across batch sizes.
+//!
+//! Estimates are exponentially-weighted moving averages (EWMA), so they
+//! track drift (cache pressure, CPU contention) without a sample
+//! history, and the table is lock-cheap: one short-critical-section
+//! mutex over a small name-keyed map, plus relaxed atomic totals for
+//! the metrics surface. Consumers: the `Auto` readahead planner
+//! ([`super::ReadaheadPolicy`]) sizes depth-`k` warming against these
+//! estimates, and [`crate::shard::CostProfile`] serializes a snapshot
+//! so `f2f rebalance` can re-shard on observed decode cost.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Default EWMA smoothing factor: new samples carry 25% weight, so an
+/// estimate re-centers within a handful of passes without jittering on
+/// a single noisy one.
+pub const DEFAULT_EWMA_ALPHA: f64 = 0.25;
+
+/// Observed cost of one layer: EWMA nanoseconds per decode
+/// (submit→install) and per single GEMV, with sample counts (an
+/// estimate with zero samples is *unwarmed*, not free).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LayerCost {
+    /// EWMA of submit→install decode time, ns (0 until sampled).
+    pub decode_ns: f64,
+    /// EWMA of one GEMV over this layer, ns per batch item.
+    pub gemv_ns: f64,
+    /// Decode samples folded into `decode_ns`.
+    pub decode_samples: u64,
+    /// GEMV samples folded into `gemv_ns`.
+    pub gemv_samples: u64,
+}
+
+impl LayerCost {
+    /// Predicted decode cost, or `None` until at least one observation.
+    pub fn decode_estimate(&self) -> Option<f64> {
+        (self.decode_samples > 0).then_some(self.decode_ns)
+    }
+
+    /// Predicted per-item GEMV cost, or `None` until observed.
+    pub fn gemv_estimate(&self) -> Option<f64> {
+        (self.gemv_samples > 0).then_some(self.gemv_ns)
+    }
+
+    /// Fold another observation set into this one, sample-weighted —
+    /// how per-shard tables merge into one model-wide view.
+    pub fn merge(&mut self, other: &LayerCost) {
+        fn blend(a: f64, an: u64, b: f64, bn: u64) -> f64 {
+            let (an, bn) = (an as f64, bn as f64);
+            if an + bn == 0.0 {
+                0.0
+            } else {
+                (a * an + b * bn) / (an + bn)
+            }
+        }
+        self.decode_ns = blend(
+            self.decode_ns,
+            self.decode_samples,
+            other.decode_ns,
+            other.decode_samples,
+        );
+        self.gemv_ns = blend(
+            self.gemv_ns,
+            self.gemv_samples,
+            other.gemv_ns,
+            other.gemv_samples,
+        );
+        self.decode_samples += other.decode_samples;
+        self.gemv_samples += other.gemv_samples;
+    }
+}
+
+/// Concurrent per-layer cost table: EWMA estimates keyed by layer name,
+/// plus monotonic wall-time totals for the metrics surface. One table
+/// per [`super::ModelStore`]; recording is a short lock hold on the
+/// serving/worker path, reading is a snapshot copy.
+#[derive(Debug)]
+pub struct LayerCosts {
+    alpha: f64,
+    table: Mutex<BTreeMap<String, LayerCost>>,
+    decode_ns_total: AtomicU64,
+    gemv_ns_total: AtomicU64,
+}
+
+impl Default for LayerCosts {
+    fn default() -> Self {
+        LayerCosts::new()
+    }
+}
+
+impl LayerCosts {
+    /// A table with the default smoothing factor.
+    pub fn new() -> Self {
+        LayerCosts::with_alpha(DEFAULT_EWMA_ALPHA)
+    }
+
+    /// A table with a custom EWMA `alpha` (clamped into `(0, 1]`).
+    pub fn with_alpha(alpha: f64) -> Self {
+        let alpha = if alpha.is_finite() {
+            alpha.clamp(f64::EPSILON, 1.0)
+        } else {
+            DEFAULT_EWMA_ALPHA
+        };
+        LayerCosts {
+            alpha,
+            table: Mutex::new(BTreeMap::new()),
+            decode_ns_total: AtomicU64::new(0),
+            gemv_ns_total: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one completed decode of `name` (submit→install wall time).
+    pub fn record_decode(&self, name: &str, took: Duration) {
+        let ns = saturating_ns(took);
+        {
+            let mut t = self.table.lock().unwrap();
+            let e = t.entry(name.to_string()).or_default();
+            e.decode_ns = self.ewma(e.decode_ns, e.decode_samples, ns as f64);
+            e.decode_samples += 1;
+        }
+        self.decode_ns_total.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one GEMV phase of `name`: `took` covers `items` batch
+    /// items, the EWMA tracks the per-item cost (estimates must compose
+    /// across batch sizes). A zero-item phase records nothing.
+    pub fn record_gemv(&self, name: &str, took: Duration, items: usize) {
+        if items == 0 {
+            return;
+        }
+        let ns = saturating_ns(took);
+        let per_item = ns as f64 / items as f64;
+        {
+            let mut t = self.table.lock().unwrap();
+            let e = t.entry(name.to_string()).or_default();
+            e.gemv_ns = self.ewma(e.gemv_ns, e.gemv_samples, per_item);
+            e.gemv_samples += 1;
+        }
+        self.gemv_ns_total.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Pre-warm `name` with an externally captured cost (e.g. a saved
+    /// `CostProfile` from an earlier run), sample-weighted against
+    /// anything already observed. Totals are untouched: they count only
+    /// this table's own wall time.
+    pub fn seed(&self, name: &str, cost: LayerCost) {
+        let mut t = self.table.lock().unwrap();
+        t.entry(name.to_string()).or_default().merge(&cost);
+    }
+
+    /// This layer's current estimates, if any observation exists.
+    pub fn get(&self, name: &str) -> Option<LayerCost> {
+        self.table.lock().unwrap().get(name).copied()
+    }
+
+    /// Name-ordered copy of the whole table.
+    pub fn snapshot(&self) -> Vec<(String, LayerCost)> {
+        self.table
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, c)| (n.clone(), *c))
+            .collect()
+    }
+
+    /// Total wall nanoseconds spent decoding (submit→install), summed
+    /// over every recorded decode.
+    pub fn decode_ns_total(&self) -> u64 {
+        self.decode_ns_total.load(Ordering::Relaxed)
+    }
+
+    /// Total wall nanoseconds spent in recorded GEMV phases.
+    pub fn gemv_ns_total(&self) -> u64 {
+        self.gemv_ns_total.load(Ordering::Relaxed)
+    }
+
+    fn ewma(&self, prev: f64, prev_samples: u64, x: f64) -> f64 {
+        if prev_samples == 0 {
+            x
+        } else {
+            self.alpha * x + (1.0 - self.alpha) * prev
+        }
+    }
+}
+
+fn saturating_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_sample_sets_estimate_then_ewma_blends() {
+        let costs = LayerCosts::with_alpha(0.5);
+        assert!(costs.get("fc0").is_none());
+        costs.record_decode("fc0", Duration::from_nanos(1000));
+        let c = costs.get("fc0").unwrap();
+        assert_eq!(c.decode_estimate(), Some(1000.0));
+        assert_eq!(c.decode_samples, 1);
+        assert_eq!(c.gemv_estimate(), None, "gemv still unwarmed");
+        // Second sample: 0.5 * 2000 + 0.5 * 1000.
+        costs.record_decode("fc0", Duration::from_nanos(2000));
+        let c = costs.get("fc0").unwrap();
+        assert_eq!(c.decode_estimate(), Some(1500.0));
+        assert_eq!(c.decode_samples, 2);
+        assert_eq!(costs.decode_ns_total(), 3000);
+    }
+
+    #[test]
+    fn gemv_normalizes_per_item_and_totals_raw() {
+        let costs = LayerCosts::with_alpha(1.0);
+        costs.record_gemv("fc0", Duration::from_nanos(8000), 8);
+        let c = costs.get("fc0").unwrap();
+        assert_eq!(c.gemv_estimate(), Some(1000.0), "per-item EWMA");
+        assert_eq!(c.gemv_samples, 1);
+        assert_eq!(costs.gemv_ns_total(), 8000, "totals keep raw time");
+        // Zero-item phases record nothing.
+        costs.record_gemv("fc0", Duration::from_nanos(999), 0);
+        assert_eq!(costs.get("fc0").unwrap().gemv_samples, 1);
+    }
+
+    #[test]
+    fn merge_is_sample_weighted() {
+        let mut a = LayerCost {
+            decode_ns: 100.0,
+            decode_samples: 3,
+            gemv_ns: 10.0,
+            gemv_samples: 1,
+        };
+        let b = LayerCost {
+            decode_ns: 200.0,
+            decode_samples: 1,
+            gemv_ns: 0.0,
+            gemv_samples: 0,
+        };
+        a.merge(&b);
+        assert_eq!(a.decode_ns, 125.0);
+        assert_eq!(a.decode_samples, 4);
+        assert_eq!(a.gemv_ns, 10.0, "zero-sample side must not dilute");
+        assert_eq!(a.gemv_samples, 1);
+        // Merging into a default entry adopts the other side wholesale.
+        let mut fresh = LayerCost::default();
+        fresh.merge(&a);
+        assert_eq!(fresh, a);
+    }
+
+    #[test]
+    fn snapshot_is_name_ordered_and_seed_prewarms() {
+        let costs = LayerCosts::new();
+        costs.record_decode("fc1", Duration::from_nanos(10));
+        costs.record_decode("fc0", Duration::from_nanos(20));
+        let snap = costs.snapshot();
+        assert_eq!(
+            snap.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            vec!["fc0", "fc1"]
+        );
+        costs.seed(
+            "fc2",
+            LayerCost {
+                decode_ns: 500.0,
+                decode_samples: 4,
+                ..Default::default()
+            },
+        );
+        assert_eq!(
+            costs.get("fc2").unwrap().decode_estimate(),
+            Some(500.0),
+            "seeded layers start warm"
+        );
+        assert_eq!(costs.decode_ns_total(), 30, "seeding never inflates totals");
+    }
+
+    #[test]
+    fn degenerate_alpha_is_clamped() {
+        for bad in [0.0, -1.0, 2.0, f64::NAN, f64::INFINITY] {
+            let costs = LayerCosts::with_alpha(bad);
+            costs.record_decode("x", Duration::from_nanos(100));
+            costs.record_decode("x", Duration::from_nanos(300));
+            let est = costs.get("x").unwrap().decode_estimate().unwrap();
+            assert!(
+                est.is_finite() && est >= 100.0 && est <= 300.0,
+                "alpha {bad} produced estimate {est}"
+            );
+        }
+    }
+}

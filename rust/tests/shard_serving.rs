@@ -6,11 +6,12 @@
 //! with errors — never panics.
 
 use f2f::container::{
-    split_container, write_container_v2, ShardAssignment, ShardMap,
+    split_container, split_with_map, write_container_v2,
+    ContainerIndex, ShardAssignment, ShardMap,
 };
 use f2f::coordinator::{Backend, InferenceServer, ServerConfig};
 use f2f::models::{compressed_mlp, MlpConfig};
-use f2f::shard::ShardRouter;
+use f2f::shard::{rebalance_map, CostProfile, ShardRouter};
 use f2f::store::{ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig};
 use std::sync::Arc;
 use std::time::Duration;
@@ -89,6 +90,122 @@ fn sharded_round_trip_is_bit_exact_for_1_2_4_shards() {
             assert_eq!(m.total.pinned_bytes, 0);
         }
     }
+}
+
+#[test]
+fn sharded_auto_readahead_is_bit_exact_for_1_2_4_shards() {
+    // The cost-model planner on top of cross-shard readahead: off,
+    // fixed depth-1 and auto must all reproduce the single-store
+    // outputs bit-exactly through every shard count, across repeated
+    // passes (the later ones running with a warmed cost table).
+    let bytes = model_bytes(56);
+    let xs = probes(5);
+    let want = single_store_outputs(&bytes, &xs);
+    for n_shards in [1usize, 2, 4] {
+        for policy in [
+            ReadaheadPolicy::off(),
+            ReadaheadPolicy::layers(1),
+            ReadaheadPolicy::auto(),
+        ] {
+            let (map, shard_bytes) =
+                split_container(&bytes, n_shards, ShardAssignment::ByBytes)
+                    .unwrap();
+            let mut router = ShardRouter::from_bytes(
+                &map.to_bytes(),
+                shard_bytes,
+                StoreConfig {
+                    cache_budget_bytes: usize::MAX,
+                    decode_workers: 2,
+                },
+            )
+            .unwrap()
+            .with_readahead(policy);
+            for pass in 0..3 {
+                assert_eq!(
+                    router.forward_batch(&xs).unwrap(),
+                    want,
+                    "{n_shards} shards, {policy}, pass {pass}"
+                );
+            }
+            router.wait_for_idle();
+            let m = router.metrics();
+            assert_eq!(m.total.redundant_decodes, 0);
+            assert!(m.total.gemv_ns_total > 0);
+            // The merged cost table covers the whole chain no matter
+            // which shard observed each layer.
+            assert_eq!(m.costs.len(), DIMS.len() - 1);
+        }
+    }
+}
+
+#[test]
+fn rebalance_round_trips_from_observed_costs_to_serving() {
+    // The full loop `f2f serve --profile-out` + `f2f rebalance`
+    // automate: serve → capture a CostProfile → JSON round trip →
+    // rebalance_map → sidecar validation → split_with_map → serve the
+    // rebalanced shards bit-exactly.
+    let bytes = model_bytes(57);
+    let xs = probes(4);
+    let want = single_store_outputs(&bytes, &xs);
+
+    let store = Arc::new(
+        ModelStore::open_bytes(bytes.clone(), StoreConfig::default())
+            .unwrap(),
+    );
+    let mut backend = ModelBackend::sequential(store.clone()).unwrap();
+    backend.forward_batch(&xs).unwrap();
+    store.wait_for_idle();
+    let profile = CostProfile::from_stores([store.costs()]);
+    assert_eq!(profile.len(), DIMS.len() - 1);
+
+    // Wire round trip, exactly what the CLI writes and reads.
+    let profile = CostProfile::parse_json(&profile.to_json()).unwrap();
+    let index = ContainerIndex::parse(&bytes).unwrap();
+    let map = rebalance_map(&index, 2, &profile).unwrap();
+    // The emitted sidecar passes the standard corruption validation...
+    let map = ShardMap::parse(&map.to_bytes()).unwrap();
+    assert_eq!(map.n_shards(), 2);
+    // ...and both shards carry real load under the profile.
+    let loads = profile.shard_loads(&map);
+    assert!(loads.iter().all(|&l| l > 0.0), "no empty shard: {loads:?}");
+
+    let shard_bytes = split_with_map(&bytes, &map).unwrap();
+    let mut router = ShardRouter::from_bytes(
+        &map.to_bytes(),
+        shard_bytes,
+        StoreConfig::default(),
+    )
+    .unwrap()
+    .with_readahead(ReadaheadPolicy::auto());
+    assert_eq!(
+        router.forward_batch(&xs).unwrap(),
+        want,
+        "rebalanced shards must serve bit-exactly"
+    );
+    router.wait_for_idle();
+
+    // A stale profile — captured from a *different* (shorter) model —
+    // errors instead of panicking.
+    let (small, _) = compressed_mlp(&MlpConfig {
+        seed: 58,
+        sparsity: 0.75,
+        ..MlpConfig::new(&[32, 24, 16])
+    });
+    let small_bytes = write_container_v2(&small);
+    let small_store = Arc::new(
+        ModelStore::open_bytes(small_bytes, StoreConfig::default())
+            .unwrap(),
+    );
+    let mut small_backend =
+        ModelBackend::sequential(small_store.clone()).unwrap();
+    small_backend.forward_batch(&probes(2)).unwrap();
+    small_store.wait_for_idle();
+    let stale = CostProfile::from_stores([small_store.costs()]);
+    let err = rebalance_map(&index, 2, &stale).unwrap_err();
+    assert!(
+        format!("{err}").contains("stale"),
+        "stale profile must be called out: {err}"
+    );
 }
 
 #[test]

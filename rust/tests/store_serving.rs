@@ -198,6 +198,107 @@ fn sequential_scan_thrash_is_bounded_by_readahead_pinning() {
 }
 
 #[test]
+fn readahead_auto_serves_bit_exact_vs_fixed_and_off() {
+    // The cost-model planner may only change *when* layers warm, never
+    // what the chain computes: off / fixed depth-1 / auto must agree
+    // bit for bit, pass after pass, while the auto store fills its
+    // cost table and starts planning past the depth-1 fallback.
+    use f2f::coordinator::Backend;
+
+    let model = compressed_model(24);
+    let bytes = write_container_v2(&model);
+    let xs: Vec<Vec<f32>> = (0..6)
+        .map(|i| {
+            (0..DIMS[0]).map(|j| ((i * j) as f32 * 0.1).sin()).collect()
+        })
+        .collect();
+    let mut outs = Vec::new();
+    for policy in [
+        ReadaheadPolicy::off(),
+        ReadaheadPolicy::layers(1),
+        ReadaheadPolicy::auto(),
+    ] {
+        let store = Arc::new(
+            ModelStore::open_bytes(
+                bytes.clone(),
+                StoreConfig {
+                    cache_budget_bytes: usize::MAX,
+                    decode_workers: 2,
+                },
+            )
+            .unwrap(),
+        );
+        let mut backend = ModelBackend::sequential(store.clone())
+            .unwrap()
+            .with_readahead(policy);
+        let mut passes = Vec::new();
+        for _ in 0..3 {
+            passes.push(backend.forward_batch(&xs).unwrap());
+        }
+        assert!(
+            passes.windows(2).all(|w| w[0] == w[1]),
+            "passes must be identical under one policy"
+        );
+        store.wait_for_idle();
+        let m = store.metrics();
+        assert_eq!(m.redundant_decodes, 0);
+        if policy.is_auto() {
+            // The planner left telemetry behind: every layer's GEMV
+            // was stamped once per pass and every decode was timed.
+            assert!(m.gemv_ns_total > 0 && m.decode_ns_total > 0);
+            for name in store.layer_names() {
+                let c = store.costs().get(&name).unwrap();
+                assert_eq!(c.gemv_samples, 3, "{name}");
+                assert!(c.decode_samples >= 1, "{name}");
+            }
+        }
+        outs.push(passes.pop().unwrap());
+    }
+    assert_eq!(outs[0], outs[1], "fixed depth-1 must match off");
+    assert_eq!(outs[0], outs[2], "auto must match off bit for bit");
+}
+
+#[test]
+fn readahead_auto_respects_tight_budgets() {
+    // Auto under eviction pressure: the budget admission path (not
+    // just the planner's fit check) still rules, outputs still match
+    // the reference, and the cache never ends a pass over budget.
+    use f2f::coordinator::Backend;
+
+    let model = compressed_model(25);
+    let decoded_total: usize =
+        model.layers.iter().map(|l| l.n_weights() * 4).sum();
+    let budget = decoded_total / 2;
+    let store = Arc::new(
+        ModelStore::open_bytes(
+            write_container_v2(&model),
+            StoreConfig { cache_budget_bytes: budget, decode_workers: 2 },
+        )
+        .unwrap(),
+    );
+    let mut backend = ModelBackend::sequential(store.clone())
+        .unwrap()
+        .with_readahead(ReadaheadPolicy::auto());
+    let x: Vec<f32> =
+        (0..DIMS[0]).map(|j| (j as f32 * 0.2).cos()).collect();
+    let want = reference_forward(&model, &x);
+    for pass in 0..4 {
+        let ys = backend.forward_batch(&[x.clone()]).unwrap();
+        for (a, b) in ys[0].iter().zip(&want) {
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                "pass {pass}: {a} vs {b}"
+            );
+        }
+    }
+    store.wait_for_idle();
+    let m = store.metrics();
+    assert!(m.cached_bytes <= budget, "budget respected after passes");
+    assert_eq!(m.redundant_decodes, 0);
+    assert_eq!(m.pinned_bytes, 0);
+}
+
+#[test]
 fn pooled_decode_equals_serial_on_served_model() {
     let model = compressed_model(23);
     let refs: Vec<&f2f::container::CompressedLayer> =
