@@ -22,6 +22,12 @@
 //! 5. The same container is split across 2 shards (`ShardMap` +
 //!    `ShardRouter`): the multi-store forward pass must be bit-exact
 //!    vs the single store, with each shard decoding only its layers.
+//! 6. (unix) Multi-process walkthrough: the same 2 shards served by
+//!    IPC workers over unix-domain sockets behind an `ipc::ProcRouter`
+//!    — the wire protocol, cross-process readahead, and worker-side
+//!    metrics/cost aggregation, still bit-exact. In production the
+//!    workers are separate supervised OS processes:
+//!    `f2f serve --shard-procs 2`.
 //!
 //! With `--features pjrt` (requires the external `xla` bindings and
 //! `make artifacts`), an additional single-layer cross-check runs the
@@ -181,6 +187,10 @@ fn main() -> Result<()> {
         );
     }
 
+    // --- multi-process serving walkthrough (unix) ---
+    #[cfg(unix)]
+    multiproc_walkthrough(&model, &bytes, &probe)?;
+
     // Budget below the decoded model size: eviction is guaranteed.
     let decoded_total: usize =
         model.layers.iter().map(|l| l.n_weights() * 4).sum();
@@ -290,6 +300,112 @@ fn main() -> Result<()> {
     );
     server.shutdown();
     println!("serve_compressed OK");
+    Ok(())
+}
+
+/// Multi-process serving walkthrough: the same 2-shard split served
+/// through the IPC tier. The workers here run as in-process threads
+/// over real unix-domain sockets so the example stays a single
+/// self-contained binary; everything else — the wire protocol, the
+/// `ProcRouter`'s cross-process readahead, the worker-side metrics
+/// and cost aggregation — is exactly the multi-process path. For real
+/// deployments each worker is its own supervised OS process:
+///
+/// ```text
+/// f2f serve --shard-procs 2            # spawn + route + supervise
+/// f2f shard-worker shard0.f2f --socket /run/f2f/s0.sock   # one shard
+/// ```
+#[cfg(unix)]
+fn multiproc_walkthrough(
+    model: &Container,
+    bytes: &[u8],
+    probe: &[f32],
+) -> Result<()> {
+    use f2f::container::ContainerIndex;
+    use f2f::coordinator::Backend;
+    use f2f::ipc::{IpcShardStore, ProcRouter};
+
+    println!("-- multi-process serving walkthrough --");
+    let single_store = Arc::new(ModelStore::open_bytes(
+        bytes.to_vec(),
+        StoreConfig::default(),
+    )?);
+    let mut single = ModelBackend::sequential(single_store)?;
+    let want = single.forward_batch(&[probe.to_vec()])?;
+
+    // Split, then serve each shard from its own worker behind a
+    // unix socket.
+    let (map, shard_bytes) =
+        write_sharded(model, 2, ShardAssignment::ByBytes)?;
+    let mut clients = Vec::new();
+    let mut workers = Vec::new();
+    for (i, b) in shard_bytes.into_iter().enumerate() {
+        let socket = std::env::temp_dir().join(format!(
+            "f2f-example-ipc-{i}-{}.sock",
+            std::process::id()
+        ));
+        let store = Arc::new(ModelStore::open_bytes(
+            b,
+            StoreConfig::default(),
+        )?);
+        let s = socket.clone();
+        workers.push(std::thread::spawn(move || {
+            f2f::ipc::serve_store(store, &s)
+        }));
+        println!(
+            "worker {i}: layers [{}] on {}",
+            map.layers_of(i).collect::<Vec<_>>().join(","),
+            socket.display()
+        );
+        clients.push(Arc::new(IpcShardStore::connect(&socket)));
+    }
+    // Bounded readiness wait: a worker that failed to bind must
+    // surface its error instead of hanging the walkthrough.
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(10);
+    for (i, c) in clients.iter().enumerate() {
+        while !c.ping() {
+            if std::time::Instant::now() > deadline {
+                anyhow::bail!(
+                    "ipc walkthrough: worker {i} did not come up \
+                     within 10s"
+                );
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    // The router walks the chain over IPC; while layer i's GEMV runs
+    // here, layer i+1 warms on its worker's decode service.
+    let index = ContainerIndex::parse(bytes)?;
+    let mut router = ProcRouter::new(clients.clone(), &map, &index)?
+        .with_readahead(ReadaheadPolicy::layers(1));
+    let (got, dt) = timed_pass(&mut router, &[probe.to_vec()])?;
+    assert_eq!(
+        got, want,
+        "IPC-served outputs must be bit-exact vs the single store"
+    );
+    let m = router.metrics()?;
+    println!(
+        "IPC cold pass {dt:?}: bit-exact vs single store \
+         (worker decodes: {:?}, redundant: {})",
+        m.per_shard.iter().map(|s| s.decodes).collect::<Vec<_>>(),
+        m.total.redundant_decodes,
+    );
+    let profile = router.cost_profile()?;
+    println!(
+        "wire-gathered cost profile covers {} layers (decode from \
+         workers, gemv from the router) — `f2f serve --shard-procs 2 \
+         --profile-out` writes it for `f2f rebalance`",
+        profile.len()
+    );
+    for c in &clients {
+        let _ = c.shutdown();
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    println!("workers shut down cleanly over the wire");
     Ok(())
 }
 

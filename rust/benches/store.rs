@@ -280,6 +280,7 @@ fn main() {
     // batch, same policy): `speedup_vs_single_store` isolates what the
     // multi-store router adds (per-shard decode services warming in
     // parallel) from what readahead already bought.
+    let mut inproc_sharded: Vec<(usize, Duration)> = Vec::new();
     for n_shards in [1usize, 2, 4] {
         let (map, shard_bytes) =
             split_container(&bytes, n_shards, ShardAssignment::ByBytes)
@@ -319,7 +320,13 @@ fn main() {
             "  -> {n_shards}-shard cold serve {:.2}x vs single store",
             cold_readahead.mean.as_secs_f64() / r.mean.as_secs_f64()
         );
+        inproc_sharded.push((n_shards, r.mean));
     }
+
+    #[cfg(unix)]
+    bench_multiproc(&mut json, &bytes, &batch, &inproc_sharded);
+    #[cfg(not(unix))]
+    let _ = &inproc_sharded;
 
     let store = Arc::new(
         ModelStore::open_bytes(bytes.clone(), StoreConfig::default())
@@ -398,4 +405,84 @@ fn main() {
 
     json.write("BENCH_store.json").expect("write BENCH_store.json");
     println!("wrote BENCH_store.json");
+}
+
+/// Cold multi-process serve: spawn N supervised `f2f shard-worker`
+/// processes, route one cold batch over IPC, shut the tier down —
+/// the full lifecycle a short-lived deployment pays, timed per
+/// iteration. `speedup_vs_inproc_router` pins the fork + socket +
+/// weight-transfer overhead against the in-process shard router on
+/// the *same* partition, so the IPC tax stays visible in the perf
+/// trajectory (values below 1.0 are expected and are the point).
+#[cfg(unix)]
+fn bench_multiproc(
+    json: &mut JsonReport,
+    bytes: &[u8],
+    batch: &[Vec<f32>],
+    inproc: &[(usize, Duration)],
+) {
+    use f2f::ipc::{ProcRouter, Supervisor, WorkerSpec};
+    use std::path::PathBuf;
+
+    let dir = std::env::temp_dir()
+        .join(format!("f2f-bench-multiproc-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench workdir");
+    let binary = PathBuf::from(env!("CARGO_BIN_EXE_f2f"));
+    let index =
+        f2f::container::ContainerIndex::parse(bytes).expect("index");
+    for n_workers in [1usize, 2, 4] {
+        let (map, shard_bytes) =
+            split_container(bytes, n_workers, ShardAssignment::ByBytes)
+                .expect("split container");
+        let mut specs = Vec::new();
+        for (i, b) in shard_bytes.iter().enumerate() {
+            let shard_path =
+                dir.join(format!("s{n_workers}-shard{i}.f2f"));
+            std::fs::write(&shard_path, b).expect("write shard");
+            specs.push(WorkerSpec::new(
+                &binary,
+                shard_path,
+                dir.join(format!("s{n_workers}-shard{i}.sock")),
+            ));
+        }
+        let r = bench_with_result(
+            &format!(
+                "serve cold multiproc ({n_workers} workers, \
+                 spawn+serve+stop)"
+            ),
+            1,
+            Duration::from_secs(2),
+            12,
+            || {
+                let sup = Supervisor::spawn(specs.clone())
+                    .expect("spawn workers");
+                let mut router = ProcRouter::new(
+                    sup.clients().to_vec(),
+                    &map,
+                    &index,
+                )
+                .expect("router")
+                .with_readahead(ReadaheadPolicy::layers(1))
+                .with_supervisor(sup.clone());
+                let ys = router
+                    .forward_batch(black_box(batch))
+                    .expect("serve");
+                sup.shutdown();
+                ys
+            },
+        );
+        let case = format!("serve_cold_multiproc_s{n_workers}");
+        json.add(&case, &r);
+        if let Some((_, base)) =
+            inproc.iter().find(|(n, _)| *n == n_workers)
+        {
+            let speedup = base.as_secs_f64() / r.mean.as_secs_f64();
+            json.metric(&case, "speedup_vs_inproc_router", speedup);
+            println!(
+                "  -> {n_workers}-worker multiproc cold serve \
+                 {speedup:.2}x vs in-proc router (fork + IPC tax)"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }

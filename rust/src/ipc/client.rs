@@ -1,0 +1,277 @@
+//! `IpcShardStore`: the client side of one shard worker.
+//!
+//! A thin, reconnecting stub over the wire protocol. One instance per
+//! worker; the connection dials lazily, survives across calls, and is
+//! dropped on any transport failure so the next call redials — which
+//! is exactly what makes a supervisor restart transparent: the worker
+//! comes back on the same socket path, and the store's next call
+//! simply connects to the new process.
+//!
+//! Errors are split in two ([`IpcCallError`]): a **remote** error is
+//! the worker answering "no" (unknown layer, corrupt record) — the
+//! worker is healthy and restarting it would not help; a **transport**
+//! error means the conversation itself failed (dead socket, corrupt
+//! frame, unexpected kind) — the signal the
+//! [`ProcRouter`](super::ProcRouter) feeds to the supervisor's revive
+//! path.
+
+use super::wire::{self, Request, Response};
+use crate::shard::CostProfile;
+use crate::sparse::DecodedLayer;
+use crate::store::StoreMetrics;
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Default per-call I/O timeout: generous enough for a cold decode of
+/// any layer this crate serves, finite so a hung worker surfaces as a
+/// transport error the supervisor can act on instead of a hang.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How one IPC call failed.
+#[derive(Debug)]
+pub enum IpcCallError {
+    /// The conversation failed: dead socket, corrupt frame, timeout,
+    /// or a response of the wrong kind. Worth a worker health check.
+    Transport(String),
+    /// The worker answered with an error frame: it is alive, the
+    /// request itself was bad (unknown layer, rotten record).
+    Remote(String),
+}
+
+impl IpcCallError {
+    /// True for failures where restarting the worker could help.
+    pub fn is_transport(&self) -> bool {
+        matches!(self, IpcCallError::Transport(_))
+    }
+}
+
+impl std::fmt::Display for IpcCallError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IpcCallError::Transport(m) => {
+                write!(f, "ipc transport failure: {m}")
+            }
+            IpcCallError::Remote(m) => write!(f, "worker error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for IpcCallError {}
+
+type CallResult<T> = std::result::Result<T, IpcCallError>;
+
+/// Client stub for one shard worker's socket.
+pub struct IpcShardStore {
+    socket_path: PathBuf,
+    conn: Mutex<Option<UnixStream>>,
+    io_timeout: Duration,
+}
+
+impl IpcShardStore {
+    /// A stub for `socket_path`. Dials lazily on the first call, so
+    /// constructing one before the worker is up is fine.
+    pub fn connect(socket_path: impl Into<PathBuf>) -> Self {
+        IpcShardStore {
+            socket_path: socket_path.into(),
+            conn: Mutex::new(None),
+            io_timeout: DEFAULT_IO_TIMEOUT,
+        }
+    }
+
+    /// Override the per-call I/O timeout (builder style).
+    pub fn with_io_timeout(mut self, timeout: Duration) -> Self {
+        self.io_timeout = timeout;
+        self
+    }
+
+    /// The worker's socket path.
+    pub fn socket_path(&self) -> &Path {
+        &self.socket_path
+    }
+
+    fn dial(&self) -> CallResult<UnixStream> {
+        let stream =
+            UnixStream::connect(&self.socket_path).map_err(|e| {
+                IpcCallError::Transport(format!(
+                    "connecting {}: {e}",
+                    self.socket_path.display()
+                ))
+            })?;
+        let _ = stream.set_read_timeout(Some(self.io_timeout));
+        let _ = stream.set_write_timeout(Some(self.io_timeout));
+        Ok(stream)
+    }
+
+    /// One request/response round trip. Holds the connection lock for
+    /// the duration, so concurrent callers serialize cleanly; any
+    /// transport failure drops the connection and the next call
+    /// redials (the restart-transparency contract).
+    fn call(&self, req: &Request) -> CallResult<Response> {
+        let mut guard = self.conn.lock().unwrap();
+        let mut stream = match guard.take() {
+            Some(s) => s,
+            None => self.dial()?,
+        };
+        let result = wire::send_request(&mut stream, req)
+            .map_err(|e| {
+                IpcCallError::Transport(format!("send failed: {e}"))
+            })
+            .and_then(|()| {
+                wire::read_response(&mut stream).map_err(|e| {
+                    IpcCallError::Transport(format!("{e}"))
+                })
+            });
+        match result {
+            Ok(Response::Err { message }) => {
+                // The worker is healthy; keep the connection.
+                *guard = Some(stream);
+                Err(IpcCallError::Remote(message))
+            }
+            Ok(resp) => {
+                *guard = Some(stream);
+                Ok(resp)
+            }
+            Err(e) => Err(e), // connection dropped; next call redials
+        }
+    }
+
+    /// Drop the cached connection (the next call redials). The
+    /// supervisor calls this after replacing a worker process.
+    pub fn disconnect(&self) {
+        *self.conn.lock().unwrap() = None;
+    }
+
+    /// Fetch one decoded layer from the worker.
+    pub fn fetch(&self, layer: &str) -> CallResult<DecodedLayer> {
+        let resp =
+            self.call(&Request::Fetch { layer: layer.to_string() })?;
+        wire::layer_from_response(resp)
+            .map_err(|e| IpcCallError::Transport(format!("{e:#}")))
+    }
+
+    /// Ask the worker to warm a layer asynchronously; returns whether
+    /// the readahead was accepted.
+    pub fn prefetch(&self, layer: &str) -> CallResult<bool> {
+        match self
+            .call(&Request::Prefetch { layer: layer.to_string() })?
+        {
+            Response::Ack { accepted } => Ok(accepted),
+            other => Err(IpcCallError::Transport(format!(
+                "expected an ack, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Snapshot the worker store's metrics.
+    pub fn metrics(&self) -> CallResult<StoreMetrics> {
+        match self.call(&Request::Metrics)? {
+            Response::Metrics(m) => Ok(m),
+            other => Err(IpcCallError::Transport(format!(
+                "expected metrics, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Snapshot the worker store's observed cost table.
+    pub fn cost_profile(&self) -> CallResult<CostProfile> {
+        match self.call(&Request::CostProfile)? {
+            Response::CostProfile { json } => {
+                CostProfile::parse_json(&json).map_err(|e| {
+                    IpcCallError::Transport(format!(
+                        "unparseable cost profile: {e:#}"
+                    ))
+                })
+            }
+            other => Err(IpcCallError::Transport(format!(
+                "expected a cost profile, got {other:?}"
+            ))),
+        }
+    }
+
+    /// True when the worker answers a metrics round trip — the health
+    /// probe the supervisor polls.
+    pub fn ping(&self) -> bool {
+        self.metrics().is_ok()
+    }
+
+    /// Ask the worker to exit cleanly.
+    pub fn shutdown(&self) -> CallResult<()> {
+        match self.call(&Request::Shutdown)? {
+            Response::Bye => {
+                self.disconnect();
+                Ok(())
+            }
+            other => Err(IpcCallError::Transport(format!(
+                "expected bye, got {other:?}"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::write_container_v2;
+    use crate::store::{test_model, ModelStore, StoreConfig};
+    use std::sync::Arc;
+
+    #[test]
+    fn client_round_trips_against_an_in_thread_worker() {
+        let c = test_model(&[16, 12, 8], 92);
+        let want =
+            crate::sparse::DecodedLayer::from_compressed(&c.layers[0])
+                .weights
+                .clone();
+        let bytes = write_container_v2(&c);
+        let store = Arc::new(
+            ModelStore::open_bytes(bytes, StoreConfig::default())
+                .unwrap(),
+        );
+        let socket = std::env::temp_dir().join(format!(
+            "f2f-ipc-client-{}.sock",
+            std::process::id()
+        ));
+        let worker = {
+            let store = store.clone();
+            let socket = socket.clone();
+            std::thread::spawn(move || {
+                crate::ipc::serve_store(store, &socket)
+            })
+        };
+        let client = IpcShardStore::connect(&socket)
+            .with_io_timeout(Duration::from_secs(10));
+        // Lazy dial retries (bounded) until the worker binds.
+        let deadline =
+            std::time::Instant::now() + Duration::from_secs(10);
+        let layer = loop {
+            match client.fetch("fc0") {
+                Ok(l) => break l,
+                Err(e) if e.is_transport() => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "worker did not come up within 10s: {e}"
+                    );
+                    std::thread::sleep(Duration::from_millis(5))
+                }
+                Err(e) => panic!("remote error: {e}"),
+            }
+        };
+        assert_eq!(layer.weights, want);
+        // A remote error keeps the connection (and is not transport).
+        let err = client.fetch("ghost").unwrap_err();
+        assert!(!err.is_transport(), "{err}");
+        assert!(client.prefetch("fc1").unwrap());
+        assert!(client.ping());
+        let m = client.metrics().unwrap();
+        assert!(m.decodes >= 1);
+        let profile = client.cost_profile().unwrap();
+        assert!(profile.get("fc0").is_some());
+        client.shutdown().unwrap();
+        worker.join().unwrap().unwrap();
+        // With the worker gone, calls degrade to transport errors.
+        assert!(client.fetch("fc0").unwrap_err().is_transport());
+        assert!(!client.ping());
+    }
+}

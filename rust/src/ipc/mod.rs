@@ -1,0 +1,49 @@
+//! Multi-process sharded serving: shard workers behind unix sockets.
+//!
+//! The paper's fixed-to-fixed encoding makes every layer's compressed
+//! record a regular, independently addressable unit — which is what
+//! already let [`crate::shard`] split one model across N in-process
+//! stores. This module pushes the same partition past the
+//! single-address-space limit: each shard is served by its **own OS
+//! process** (own mmap, own decode service, own budget, own cost
+//! table), and the forward chain routes over IPC.
+//!
+//! The pieces, bottom up:
+//!
+//! * [`wire`] — a hand-rolled, length-prefixed frame protocol over
+//!   `std::os::unix::net` (pure std, consistent with the offline
+//!   no-new-crates constraint): versioned header,
+//!   `Fetch`/`Prefetch`/`Metrics`/`CostProfile`/`Shutdown` request
+//!   kinds, error frames on both sides — corrupt bytes are errors,
+//!   never panics, never unbounded allocations.
+//! * [`run_worker`] / [`serve_store`] — the `f2f shard-worker`
+//!   child-process entrypoint: one [`crate::store::ModelStore`]
+//!   (cost-sidecar warm-started) behind a `UnixListener`.
+//! * [`IpcShardStore`] — the reconnecting client stub for one worker.
+//! * [`ProcRouter`] — a [`crate::coordinator::Backend`] that walks
+//!   the chain across workers, bit-identical to the single-store
+//!   [`crate::store::ModelBackend`], driving *cross-process*
+//!   readahead: layer `i+1` warms on its worker's decode service
+//!   while layer `i`'s GEMV runs in the router process.
+//! * [`Supervisor`] — spawns workers via `std::process::Command`,
+//!   health-checks them, restarts a crashed worker with its shard
+//!   assignment replayed, and (with the router) aggregates
+//!   [`crate::shard::ShardMetrics`] and
+//!   [`crate::shard::CostProfile`] over the wire so `--timing`,
+//!   `--profile-out` and `f2f rebalance` work unchanged in
+//!   multi-process mode.
+//!
+//! Surface: `f2f serve --shard-procs N`. Unix-only (unix domain
+//! sockets); the module is compiled out elsewhere and the CLI reports
+//! that plainly.
+
+mod client;
+mod router;
+mod supervisor;
+pub mod wire;
+mod worker;
+
+pub use client::{IpcCallError, IpcShardStore, DEFAULT_IO_TIMEOUT};
+pub use router::ProcRouter;
+pub use supervisor::{Supervisor, WorkerSpec};
+pub use worker::{run_worker, serve_store};

@@ -1,0 +1,564 @@
+//! `ProcRouter`: the multi-process [`Backend`] for split models.
+//!
+//! The cross-process sibling of [`crate::shard::ShardRouter`]: the
+//! same chain walk, the same GEMV inner loop, the same readahead
+//! shape — but every layer fetch crosses a process boundary to the
+//! worker owning that shard, and every readahead warms on the target
+//! worker's *own* decode service. Outputs are bit-identical to the
+//! single-store [`crate::store::ModelBackend`] because the decoded
+//! weights that come back over the wire are bit-exact and the f32
+//! GEMV/ReLU loop is the same code shape in the same order.
+//!
+//! Telemetry mirrors the in-process router: GEMV phases are stamped
+//! into a router-local [`LayerCosts`] table (workers never run a
+//! GEMV), decode estimates are pulled from the workers' tables over
+//! the wire ([`ProcRouter::refresh_costs`], automatic after each pass
+//! under the `Auto` policy), and [`ProcRouter::cost_profile`] merges
+//! both — so `--timing`, `--profile-out` and `f2f rebalance` work
+//! unchanged in multi-process mode. The `Auto` planner runs on those
+//! estimates; per-store budget admission stays worker-side (the
+//! worker's `prefetch_async` is the final gatekeeper, exactly as the
+//! store is for the in-process planner).
+//!
+//! Fault handling: a *remote* error (unknown layer, rotten record)
+//! propagates to the batch like any backend error. A *transport*
+//! error asks the [`Supervisor`] to revive the worker — reconnect if
+//! it is alive, respawn with the replayed shard assignment if not —
+//! and retries the fetch once against the fresh process.
+
+use super::client::{IpcCallError, IpcShardStore};
+use super::supervisor::Supervisor;
+use crate::container::{ContainerIndex, ShardMap};
+use crate::coordinator::Backend;
+use crate::shard::{CostProfile, ShardMetrics};
+use crate::store::wrapped_targets;
+use crate::store::{
+    LayerCost, LayerCosts, ReadaheadCandidate, ReadaheadPolicy,
+    StoreMetrics,
+};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One step of the forward chain: the layer and the worker owning it.
+struct ChainLink {
+    name: String,
+    shard: usize,
+}
+
+/// A sequential GEMV chain served from N shard-worker *processes*.
+pub struct ProcRouter {
+    clients: Vec<Arc<IpcShardStore>>,
+    supervisor: Option<Arc<Supervisor>>,
+    chain: Vec<ChainLink>,
+    readahead: ReadaheadPolicy,
+    /// Router-local cost table: GEMV EWMAs stamped here per pass,
+    /// decode EWMAs seeded from the workers' tables over the wire.
+    costs: Arc<LayerCosts>,
+    input_dim: usize,
+    output_dim: usize,
+}
+
+impl ProcRouter {
+    /// Build a router over per-worker client stubs (`clients[i]`
+    /// talks to the worker serving shard `i` of `map`). Chain
+    /// geometry is validated against the original container's index —
+    /// the map and the index travel together, exactly as they do for
+    /// the in-process router's stores.
+    pub fn new(
+        clients: Vec<Arc<IpcShardStore>>,
+        map: &ShardMap,
+        index: &ContainerIndex,
+    ) -> Result<Self> {
+        if map.n_shards() != clients.len() {
+            bail!(
+                "shard map names {} shards but {} worker clients were \
+                 supplied",
+                map.n_shards(),
+                clients.len()
+            );
+        }
+        if map.is_empty() {
+            bail!("shard map assigns no layers");
+        }
+        let mut chain = Vec::with_capacity(map.len());
+        let mut dims = Vec::with_capacity(map.len());
+        for (name, shard) in map.assignments() {
+            let Some(e) = index.find(name) else {
+                bail!(
+                    "layer {name:?} is in the shard map but not the \
+                     container index — stale map?"
+                );
+            };
+            dims.push((e.rows, e.cols));
+            chain.push(ChainLink { name: name.clone(), shard: *shard });
+        }
+        let names: Vec<&str> =
+            chain.iter().map(|l| l.name.as_str()).collect();
+        let (input_dim, output_dim) =
+            crate::store::validate_chain(&names, &dims)?;
+        Ok(ProcRouter {
+            clients,
+            supervisor: None,
+            chain,
+            readahead: ReadaheadPolicy::default(),
+            costs: Arc::new(LayerCosts::new()),
+            input_dim,
+            output_dim,
+        })
+    }
+
+    /// Attach the supervisor whose revive path repairs transport
+    /// failures (builder style). Without one, a dead worker is a
+    /// batch error instead of a restart.
+    pub fn with_supervisor(mut self, sup: Arc<Supervisor>) -> Self {
+        self.supervisor = Some(sup);
+        self
+    }
+
+    /// Replace the readahead policy (builder style).
+    pub fn with_readahead(mut self, policy: ReadaheadPolicy) -> Self {
+        self.readahead = policy;
+        self
+    }
+
+    /// The active readahead policy.
+    pub fn readahead(&self) -> ReadaheadPolicy {
+        self.readahead
+    }
+
+    /// Layer names in forward order.
+    pub fn chain(&self) -> Vec<&str> {
+        self.chain.iter().map(|l| l.name.as_str()).collect()
+    }
+
+    /// The router-local cost table (shareable: clone the `Arc` before
+    /// moving the router behind a server to keep reading GEMV
+    /// telemetry).
+    pub fn costs(&self) -> &Arc<LayerCosts> {
+        &self.costs
+    }
+
+    /// Pull every worker's observed decode costs into the local table
+    /// (the estimates the `Auto` planner reads). Runs automatically
+    /// after each pass under the `Auto` policy; errors are reported
+    /// but a failed refresh only means a staler plan.
+    pub fn refresh_costs(&self) -> Result<()> {
+        for client in &self.clients {
+            let profile = client
+                .cost_profile()
+                .map_err(|e| anyhow!("{e}"))?;
+            for (name, cost) in profile.entries() {
+                if cost.decode_samples == 0 {
+                    continue;
+                }
+                // Seed only the decode dimension: GEMV telemetry is
+                // observed locally, and worker tables never carry it.
+                self.costs.seed(
+                    &name,
+                    LayerCost {
+                        decode_ns: cost.decode_ns,
+                        decode_samples: cost.decode_samples,
+                        ..Default::default()
+                    },
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Merge the workers' cost tables with router-local GEMV
+    /// telemetry into one model-wide [`CostProfile`] — the exact
+    /// input `f2f rebalance` consumes, now gathered across processes.
+    pub fn cost_profile(&self) -> Result<CostProfile> {
+        Self::merged_profile(&self.clients, &self.costs)
+    }
+
+    /// The profile merge shared by [`ProcRouter::cost_profile`] and
+    /// the CLI teardown path (which holds the clients and the local
+    /// table after the router moved behind the server).
+    pub fn merged_profile(
+        clients: &[Arc<IpcShardStore>],
+        local: &LayerCosts,
+    ) -> Result<CostProfile> {
+        let mut profile = CostProfile::new();
+        for client in clients {
+            let worker =
+                client.cost_profile().map_err(|e| anyhow!("{e}"))?;
+            for (name, cost) in worker.entries() {
+                profile.record(&name, cost);
+            }
+        }
+        for (name, cost) in local.snapshot() {
+            // Only the locally observed dimension: the decode entries
+            // in the local table are re-seeded copies of the worker
+            // tables and would double-count.
+            if cost.gemv_samples > 0 {
+                profile.record(
+                    &name,
+                    LayerCost {
+                        gemv_ns: cost.gemv_ns,
+                        gemv_samples: cost.gemv_samples,
+                        ..Default::default()
+                    },
+                );
+            }
+        }
+        Ok(profile)
+    }
+
+    /// Aggregate metrics across every worker, over the wire — the
+    /// multi-process counterpart of
+    /// [`crate::shard::ShardRouter::metrics`].
+    pub fn metrics(&self) -> Result<ShardMetrics> {
+        let mut per_shard = Vec::with_capacity(self.clients.len());
+        for client in &self.clients {
+            per_shard
+                .push(client.metrics().map_err(|e| anyhow!("{e}"))?);
+        }
+        let mut total = StoreMetrics::default();
+        for m in &per_shard {
+            total.merge(m);
+        }
+        Ok(ShardMetrics {
+            per_shard,
+            total,
+            costs: self.cost_profile()?.entries(),
+        })
+    }
+
+    /// Fetch one chain layer from its worker, repairing a transport
+    /// failure through the supervisor once: revive (reconnect or
+    /// respawn with the replayed shard assignment) and retry.
+    fn fetch(
+        &self,
+        idx: usize,
+    ) -> Result<crate::sparse::DecodedLayer> {
+        let link = &self.chain[idx];
+        let client = &self.clients[link.shard];
+        match client.fetch(&link.name) {
+            Ok(layer) => Ok(layer),
+            Err(IpcCallError::Remote(msg)) => Err(anyhow!(
+                "worker {} rejected layer {:?}: {msg}",
+                link.shard,
+                link.name
+            )),
+            Err(IpcCallError::Transport(msg)) => {
+                let Some(sup) = &self.supervisor else {
+                    bail!(
+                        "worker {} unreachable fetching {:?}: {msg}",
+                        link.shard,
+                        link.name
+                    );
+                };
+                sup.revive(link.shard)?;
+                client.fetch(&link.name).map_err(|e| {
+                    anyhow!(
+                        "worker {} still failing after restart \
+                         fetching {:?}: {e}",
+                        link.shard,
+                        link.name
+                    )
+                })
+            }
+        }
+    }
+
+    /// Decide how deep layer `i`'s cross-process readahead warms —
+    /// the same planner as the in-process chain
+    /// ([`ReadaheadPolicy::plan`]), fed from the router-local
+    /// estimates. Budget admission is left to the target worker's
+    /// store (its `prefetch_async` declines what cannot fit), so
+    /// candidates here always claim to fit.
+    fn planned_depth(&self, i: usize, batch_items: usize) -> usize {
+        let len = self.chain.len();
+        let cap = self.readahead.max_depth().min(len.saturating_sub(1));
+        if cap == 0 {
+            return 0;
+        }
+        if !self.readahead.is_auto() {
+            return cap;
+        }
+        let window = self
+            .costs
+            .get(&self.chain[i].name)
+            .and_then(|c| c.gemv_estimate())
+            .map(|per_item| per_item * batch_items as f64);
+        let candidates: Vec<ReadaheadCandidate> = (1..=cap)
+            .map(|d| {
+                let target = &self.chain[(i + d) % len];
+                ReadaheadCandidate {
+                    decode_ns: self
+                        .costs
+                        .get(&target.name)
+                        .and_then(|c| c.decode_estimate()),
+                    fits_budget: true,
+                }
+            })
+            .collect();
+        self.readahead.plan(window, &candidates)
+    }
+}
+
+impl Backend for ProcRouter {
+    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut acts: Vec<Vec<f32>> = xs.to_vec();
+        let Some(last) = self.chain.len().checked_sub(1) else {
+            return Ok(acts); // empty chain: the constructor rejects this
+        };
+        for i in 0..self.chain.len() {
+            let layer = self.fetch(i)?;
+            // Warm upcoming layers on *their* worker's decode service
+            // while this layer's GEMVs run here. Declined or failed
+            // warms only cost overlap, never correctness.
+            let depth = self.planned_depth(i, acts.len());
+            for t in wrapped_targets(i, self.chain.len(), depth) {
+                let target = &self.chain[t];
+                let _ =
+                    self.clients[target.shard].prefetch(&target.name);
+            }
+            let gemv_start = Instant::now();
+            for a in acts.iter_mut() {
+                let mut y = layer.gemv(a);
+                if i < last {
+                    for v in &mut y {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                *a = y;
+            }
+            self.costs.record_gemv(
+                &self.chain[i].name,
+                gemv_start.elapsed(),
+                acts.len(),
+            );
+        }
+        if self.readahead.is_auto() {
+            // Pull the workers' freshly observed decode EWMAs so the
+            // next pass plans on them; a failed refresh only stales
+            // the plan.
+            let _ = self.refresh_costs();
+        }
+        Ok(acts)
+    }
+
+    fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    fn output_dim(&self) -> usize {
+        self.output_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::{write_sharded, ShardAssignment};
+    use crate::store::{test_model, ModelStore, StoreConfig};
+    use std::sync::Arc;
+
+    /// In-thread workers over real unix sockets: the full IPC path
+    /// minus the process fork (covered by rust/tests/ipc_serving.rs).
+    struct ThreadWorkers {
+        clients: Vec<Arc<IpcShardStore>>,
+        handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    }
+
+    impl ThreadWorkers {
+        fn start(tag: &str, shard_bytes: Vec<Vec<u8>>) -> Self {
+            let mut clients = Vec::new();
+            let mut handles = Vec::new();
+            for (i, bytes) in shard_bytes.into_iter().enumerate() {
+                let socket = std::env::temp_dir().join(format!(
+                    "f2f-ipc-router-{tag}-{i}-{}.sock",
+                    std::process::id()
+                ));
+                let store = Arc::new(
+                    ModelStore::open_bytes(
+                        bytes,
+                        StoreConfig::default(),
+                    )
+                    .unwrap(),
+                );
+                let s = socket.clone();
+                handles.push(std::thread::spawn(move || {
+                    crate::ipc::serve_store(store, &s)
+                }));
+                clients.push(Arc::new(
+                    IpcShardStore::connect(&socket).with_io_timeout(
+                        std::time::Duration::from_secs(10),
+                    ),
+                ));
+            }
+            // Bounded wait until every worker answers (a bind
+            // failure must fail the test, not hang it).
+            let deadline = std::time::Instant::now()
+                + std::time::Duration::from_secs(10);
+            for c in &clients {
+                while !c.ping() {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "in-thread worker did not come up within 10s"
+                    );
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(5),
+                    );
+                }
+            }
+            ThreadWorkers { clients, handles }
+        }
+
+        fn stop(self) {
+            for c in &self.clients {
+                let _ = c.shutdown();
+            }
+            for h in self.handles {
+                let _ = h.join();
+            }
+        }
+    }
+
+    #[test]
+    fn proc_router_matches_single_store_bit_exact() {
+        let c = test_model(&[20, 16, 12, 8], 93);
+        let bytes = crate::container::write_container_v2(&c);
+        let index = ContainerIndex::parse(&bytes).unwrap();
+        let xs: Vec<Vec<f32>> = (0..3)
+            .map(|i| {
+                (0..20).map(|j| ((i * j) as f32 * 0.1).sin()).collect()
+            })
+            .collect();
+        let single = Arc::new(
+            ModelStore::open_bytes(
+                bytes.clone(),
+                StoreConfig::default(),
+            )
+            .unwrap(),
+        );
+        let want = crate::store::ModelBackend::sequential(single)
+            .unwrap()
+            .forward_batch(&xs)
+            .unwrap();
+
+        let (map, shard_bytes) =
+            write_sharded(&c, 2, ShardAssignment::ByBytes).unwrap();
+        let workers = ThreadWorkers::start("bitexact", shard_bytes);
+        let mut router = ProcRouter::new(
+            workers.clients.clone(),
+            &map,
+            &index,
+        )
+        .unwrap()
+        .with_readahead(ReadaheadPolicy::layers(1));
+        assert_eq!(router.input_dim(), 20);
+        assert_eq!(router.output_dim(), 8);
+        assert_eq!(router.chain(), vec!["fc0", "fc1", "fc2"]);
+        let got = router.forward_batch(&xs).unwrap();
+        assert_eq!(got, want, "IPC serving must be bit-exact");
+
+        // Aggregated metrics and cost profile come back over the wire.
+        let m = router.metrics().unwrap();
+        assert_eq!(m.per_shard.len(), 2);
+        assert_eq!(m.total.decodes, 3, "each layer decodes once");
+        assert_eq!(m.total.redundant_decodes, 0);
+        let profile = router.cost_profile().unwrap();
+        for name in ["fc0", "fc1", "fc2"] {
+            let cost = profile.get(name).unwrap();
+            assert!(cost.decode_samples > 0, "{name}: worker decode");
+            assert!(cost.gemv_samples > 0, "{name}: local gemv");
+        }
+        workers.stop();
+    }
+
+    #[test]
+    fn auto_policy_plans_from_refreshed_costs_and_stays_bit_exact() {
+        let c = test_model(&[20, 16, 12, 8], 94);
+        let bytes = crate::container::write_container_v2(&c);
+        let index = ContainerIndex::parse(&bytes).unwrap();
+        let xs = vec![vec![0.25f32; 20]];
+        let (map, shard_bytes) =
+            write_sharded(&c, 2, ShardAssignment::RoundRobin).unwrap();
+        let workers = ThreadWorkers::start("auto", shard_bytes);
+        let mut outs = Vec::new();
+        for policy in
+            [ReadaheadPolicy::off(), ReadaheadPolicy::auto()]
+        {
+            let mut router = ProcRouter::new(
+                workers.clients.clone(),
+                &map,
+                &index,
+            )
+            .unwrap()
+            .with_readahead(policy);
+            // Multiple passes: the auto pass after the first runs on
+            // refreshed worker decode estimates + local gemv EWMAs.
+            let first = router.forward_batch(&xs).unwrap();
+            let second = router.forward_batch(&xs).unwrap();
+            assert_eq!(first, second, "{policy}: passes agree");
+            if policy.is_auto() {
+                assert!(
+                    router
+                        .costs()
+                        .get("fc0")
+                        .is_some_and(|c| c.decode_samples > 0),
+                    "auto refresh must pull worker decode estimates"
+                );
+            }
+            outs.push(first);
+        }
+        assert_eq!(outs[0], outs[1], "policy never changes outputs");
+        workers.stop();
+    }
+
+    #[test]
+    fn constructor_rejects_mismatched_maps() {
+        let c = test_model(&[16, 12, 8], 95);
+        let bytes = crate::container::write_container_v2(&c);
+        let index = ContainerIndex::parse(&bytes).unwrap();
+        let (map, _) =
+            write_sharded(&c, 2, ShardAssignment::RoundRobin).unwrap();
+        // One client short of the map's shard count.
+        let one = vec![Arc::new(IpcShardStore::connect("/tmp/x"))];
+        let err = ProcRouter::new(one, &map, &index).unwrap_err();
+        assert!(format!("{err}").contains("2 shards"), "{err}");
+        // A map naming a layer the index lacks.
+        let stale = ShardMap::from_assignments(
+            2,
+            vec![("ghost".into(), 0)],
+        )
+        .unwrap();
+        let two = vec![
+            Arc::new(IpcShardStore::connect("/tmp/x")),
+            Arc::new(IpcShardStore::connect("/tmp/y")),
+        ];
+        let err =
+            ProcRouter::new(two, &stale, &index).unwrap_err();
+        assert!(format!("{err}").contains("stale map"), "{err}");
+    }
+
+    #[test]
+    fn transport_failure_without_supervisor_is_a_batch_error() {
+        let c = test_model(&[16, 12], 96);
+        let bytes = crate::container::write_container_v2(&c);
+        let index = ContainerIndex::parse(&bytes).unwrap();
+        let (map, _) =
+            write_sharded(&c, 1, ShardAssignment::RoundRobin).unwrap();
+        // A client pointed at a socket nobody serves.
+        let dead = std::env::temp_dir().join(format!(
+            "f2f-ipc-dead-{}.sock",
+            std::process::id()
+        ));
+        let clients = vec![Arc::new(IpcShardStore::connect(&dead))];
+        let mut router =
+            ProcRouter::new(clients, &map, &index).unwrap();
+        let err =
+            router.forward_batch(&[vec![0.0; 16]]).unwrap_err();
+        assert!(
+            format!("{err}").contains("unreachable"),
+            "{err}"
+        );
+    }
+}

@@ -1,0 +1,320 @@
+//! The worker supervisor: spawn, health-check, restart, aggregate.
+//!
+//! One [`Supervisor`] owns N shard-worker *processes* (spawned with
+//! `std::process::Command` running `f2f shard-worker`), one per shard
+//! of a split model. Its job is to keep the serving tier available:
+//!
+//! * **Spawn** — start every worker and block until each answers a
+//!   health probe (a metrics round trip) on its socket.
+//! * **Health-check / revive** — [`Supervisor::revive`] is the repair
+//!   path the router calls on a transport failure: a worker that
+//!   merely dropped a connection is reconnected; a dead or
+//!   unresponsive one is replaced by a fresh process *with the same
+//!   shard assignment and socket path* (the spec is replayed
+//!   verbatim), so the router's next call lands on the new process
+//!   without any re-routing.
+//! * **Shutdown** — ask every worker to exit over the wire, wait
+//!   briefly, and kill stragglers; `Drop` does the same so a panicked
+//!   test never leaks processes.
+//!
+//! The supervisor also owns the per-worker [`IpcShardStore`] clients,
+//! shared with the [`ProcRouter`](super::ProcRouter) by `Arc` — which
+//! is what makes the restart transparent: both sides talk through the
+//! same reconnecting stub.
+
+use super::client::IpcShardStore;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Everything needed to (re)start one shard worker. Replaying the
+/// spec after a crash reproduces the worker's shard assignment
+/// exactly.
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    /// The `f2f` binary to exec.
+    pub binary: PathBuf,
+    /// The shard's self-contained v2 container file.
+    pub shard_path: PathBuf,
+    /// The unix socket the worker serves on.
+    pub socket_path: PathBuf,
+    /// Decoded-weight cache budget in KiB (0 = unbounded).
+    pub cache_kb: usize,
+    /// Decode-service width (0 = size to the host).
+    pub decode_threads: usize,
+}
+
+impl WorkerSpec {
+    /// A spec with default store knobs.
+    pub fn new(
+        binary: impl Into<PathBuf>,
+        shard_path: impl Into<PathBuf>,
+        socket_path: impl Into<PathBuf>,
+    ) -> Self {
+        WorkerSpec {
+            binary: binary.into(),
+            shard_path: shard_path.into(),
+            socket_path: socket_path.into(),
+            cache_kb: 0,
+            decode_threads: 0,
+        }
+    }
+
+    fn command(&self) -> Command {
+        let mut cmd = Command::new(&self.binary);
+        cmd.arg("shard-worker")
+            .arg(&self.shard_path)
+            .arg("--socket")
+            .arg(&self.socket_path);
+        if self.cache_kb > 0 {
+            cmd.arg("--cache-kb").arg(self.cache_kb.to_string());
+        }
+        if self.decode_threads > 0 {
+            cmd.arg("--decode-threads")
+                .arg(self.decode_threads.to_string());
+        }
+        // Workers are silent on success; their stderr is worth seeing
+        // when one dies, so it inherits the supervisor's.
+        cmd.stdin(Stdio::null()).stdout(Stdio::null());
+        cmd
+    }
+}
+
+struct Slot {
+    spec: WorkerSpec,
+    child: Option<Child>,
+}
+
+/// Supervises N shard-worker processes and their client stubs.
+pub struct Supervisor {
+    slots: Mutex<Vec<Slot>>,
+    clients: Vec<Arc<IpcShardStore>>,
+    restarts: AtomicU64,
+    ready_timeout: Duration,
+}
+
+impl Supervisor {
+    /// Spawn one worker per spec and wait until every one answers its
+    /// health probe. On failure, already-started workers are torn
+    /// down by `Drop`.
+    pub fn spawn(specs: Vec<WorkerSpec>) -> Result<Arc<Supervisor>> {
+        Self::spawn_with_timeout(specs, Duration::from_secs(20))
+    }
+
+    /// [`Supervisor::spawn`] with an explicit per-worker readiness
+    /// timeout.
+    pub fn spawn_with_timeout(
+        specs: Vec<WorkerSpec>,
+        ready_timeout: Duration,
+    ) -> Result<Arc<Supervisor>> {
+        if specs.is_empty() {
+            bail!("supervisor needs at least one worker spec");
+        }
+        let clients = specs
+            .iter()
+            .map(|s| Arc::new(IpcShardStore::connect(&s.socket_path)))
+            .collect();
+        let sup = Arc::new(Supervisor {
+            slots: Mutex::new(
+                specs
+                    .into_iter()
+                    .map(|spec| Slot { spec, child: None })
+                    .collect(),
+            ),
+            clients,
+            restarts: AtomicU64::new(0),
+            ready_timeout,
+        });
+        let n = sup.n_workers();
+        for i in 0..n {
+            sup.start_worker(i)?;
+        }
+        Ok(sup)
+    }
+
+    /// Number of supervised workers.
+    pub fn n_workers(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// The per-worker client stubs, indexed by shard id. Shared with
+    /// the router by `Arc`.
+    pub fn clients(&self) -> &[Arc<IpcShardStore>] {
+        &self.clients
+    }
+
+    /// How many workers have been restarted since spawn.
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// The worker's OS pid, if it is currently running.
+    pub fn worker_pid(&self, shard: usize) -> Option<u32> {
+        let slots = self.slots.lock().unwrap();
+        slots.get(shard)?.child.as_ref().map(|c| c.id())
+    }
+
+    /// (Re)start one worker and wait for its health probe.
+    fn start_worker(&self, shard: usize) -> Result<()> {
+        {
+            let mut slots = self.slots.lock().unwrap();
+            let slot = slots
+                .get_mut(shard)
+                .with_context(|| format!("no worker slot {shard}"))?;
+            // The worker unlinks a stale socket itself, but removing
+            // it here too closes the window where a probe reaches the
+            // dead incarnation's socket.
+            let _ = std::fs::remove_file(&slot.spec.socket_path);
+            let child = slot.spec.command().spawn().with_context(
+                || {
+                    format!(
+                        "spawning shard worker {shard} ({})",
+                        slot.spec.binary.display()
+                    )
+                },
+            )?;
+            slot.child = Some(child);
+        }
+        self.clients[shard].disconnect();
+        self.wait_ready(shard)
+    }
+
+    /// Poll the worker's health probe until it answers or the
+    /// readiness timeout passes. A child that exits meanwhile fails
+    /// fast with its status.
+    fn wait_ready(&self, shard: usize) -> Result<()> {
+        let deadline = Instant::now() + self.ready_timeout;
+        loop {
+            if self.clients[shard].ping() {
+                return Ok(());
+            }
+            // Child already gone? Report the exit instead of waiting
+            // out the clock.
+            {
+                let mut slots = self.slots.lock().unwrap();
+                if let Some(child) = slots[shard].child.as_mut() {
+                    if let Some(status) = child.try_wait()? {
+                        slots[shard].child = None;
+                        bail!(
+                            "shard worker {shard} exited during \
+                             startup ({status})"
+                        );
+                    }
+                }
+            }
+            if Instant::now() >= deadline {
+                bail!(
+                    "shard worker {shard} did not become ready \
+                     within {:?}",
+                    self.ready_timeout
+                );
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Repair one worker after a transport failure: if the process is
+    /// alive and answers a probe, only the connection is refreshed;
+    /// a dead or unresponsive process is replaced (same spec, same
+    /// socket — the shard assignment is replayed).
+    pub fn revive(&self, shard: usize) -> Result<()> {
+        let needs_restart = {
+            let mut slots = self.slots.lock().unwrap();
+            let slot = slots
+                .get_mut(shard)
+                .with_context(|| format!("no worker slot {shard}"))?;
+            match slot.child.as_mut() {
+                None => true,
+                Some(child) => match child.try_wait()? {
+                    Some(_status) => {
+                        slot.child = None;
+                        true
+                    }
+                    None => false,
+                },
+            }
+        };
+        if !needs_restart {
+            // Process alive: maybe only the connection died.
+            self.clients[shard].disconnect();
+            if self.clients[shard].ping() {
+                return Ok(());
+            }
+            // Alive but unresponsive: replace it.
+            let mut slots = self.slots.lock().unwrap();
+            if let Some(mut child) = slots[shard].child.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+        self.start_worker(shard)
+    }
+
+    /// Kill one worker process outright (no restart) — the fault
+    /// injection hook the kill/restart tests and chaos drills use.
+    pub fn kill_worker(&self, shard: usize) -> Result<()> {
+        let mut slots = self.slots.lock().unwrap();
+        let slot = slots
+            .get_mut(shard)
+            .with_context(|| format!("no worker slot {shard}"))?;
+        if let Some(mut child) = slot.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        drop(slots);
+        self.clients[shard].disconnect();
+        Ok(())
+    }
+
+    /// Stop every worker: a wire `Shutdown` first, then a bounded
+    /// wait, then a kill for whatever is left. Socket files are
+    /// cleaned up.
+    pub fn shutdown(&self) {
+        for client in &self.clients {
+            let _ = client.shutdown();
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut slots = self.slots.lock().unwrap();
+        for slot in slots.iter_mut() {
+            let Some(child) = slot.child.as_mut() else { continue };
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+            slot.child = None;
+            let _ = std::fs::remove_file(&slot.spec.socket_path);
+        }
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        // Never leak worker processes, even on a panicking path.
+        let mut slots = self.slots.lock().unwrap();
+        for slot in slots.iter_mut() {
+            if let Some(mut child) = slot.child.take() {
+                match child.try_wait() {
+                    Ok(Some(_)) => {}
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                    }
+                }
+            }
+            let _ = std::fs::remove_file(&slot.spec.socket_path);
+        }
+    }
+}

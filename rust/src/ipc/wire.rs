@@ -1,0 +1,798 @@
+//! The IPC wire protocol: length-prefixed frames over a byte stream.
+//!
+//! Hand-rolled against `std::io` only (no serde, no tokio — the build
+//! stays fully offline) and deliberately tiny: every message is one
+//! frame, every frame is a fixed 11-byte header followed by a
+//! length-prefixed payload:
+//!
+//! ```text
+//! "F2FI" | u16 version=1 | u8 kind | u32 payload_len | payload
+//! ```
+//!
+//! Request kinds are [`Request`] (`Fetch`/`Prefetch`/`Metrics`/
+//! `CostProfile`/`Shutdown`), response kinds [`Response`]. Every
+//! decoder in this module is bounds-checked and size-capped: corrupt
+//! bytes — truncation, a lying length, a hostile name, an unknown kind
+//! — come back as [`WireError::Corrupt`] errors, never a panic and
+//! never an unbounded allocation, on *both* sides of the socket. A
+//! worker that receives garbage answers with an error frame and closes
+//! the connection; a client that reads garbage drops the connection
+//! and reports a transport failure the supervisor can act on.
+//!
+//! Payload shapes (all little-endian):
+//!
+//! * `Fetch` / `Prefetch` — `u32 name_len | name` (utf-8).
+//! * `Metrics` / `CostProfile` / `Shutdown` — empty.
+//! * `Layer` — `u64 rows | u64 cols | rows·cols × f32` (the decoded
+//!   weights, the same dense row-major layout
+//!   [`crate::sparse::DecodedLayer`] holds).
+//! * `Ack` — `u8 accepted`.
+//! * `Metrics` reply — 12 × `u64`, the [`StoreMetrics`] fields in
+//!   declaration order.
+//! * `CostProfile` reply — `u32 json_len | json` (the exact
+//!   [`crate::shard::CostProfile::to_json`] form, so the cost table
+//!   crosses the process boundary through the same validated parser
+//!   `f2f rebalance` uses).
+//! * `Err` — `u32 msg_len | msg`.
+
+use crate::sparse::DecodedLayer;
+use crate::store::StoreMetrics;
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+
+/// Frame magic: `F2FI` (fixed-to-fixed IPC).
+pub const MAGIC: &[u8; 4] = b"F2FI";
+
+/// Protocol version carried in every frame header.
+pub const VERSION: u16 = 1;
+
+/// Hard cap on one frame's payload. Large enough for any decoded layer
+/// this crate serves, small enough that a corrupt length can never ask
+/// for an absurd allocation.
+pub const MAX_PAYLOAD: usize = 256 << 20;
+
+/// Hard cap on a layer-name length inside a frame.
+pub const MAX_NAME: usize = 4096;
+
+/// The most weights a layer frame can carry under [`MAX_PAYLOAD`]
+/// (16 header bytes for the geometry, 4 bytes per f32). A worker
+/// checks this *before* serializing, so an oversized layer becomes a
+/// clear error frame at the source rather than a mid-stream
+/// corrupt-frame rejection on the other side.
+pub const MAX_WIRE_WEIGHTS: usize = (MAX_PAYLOAD - 16) / 4;
+
+const HEADER_LEN: usize = 4 + 2 + 1 + 4;
+
+// Request frame kinds.
+const K_FETCH: u8 = 0x01;
+const K_PREFETCH: u8 = 0x02;
+const K_METRICS: u8 = 0x03;
+const K_COST_PROFILE: u8 = 0x04;
+const K_SHUTDOWN: u8 = 0x05;
+
+// Response frame kinds.
+const K_LAYER: u8 = 0x81;
+const K_ACK: u8 = 0x82;
+const K_METRICS_REPLY: u8 = 0x83;
+const K_COSTS_REPLY: u8 = 0x84;
+const K_BYE: u8 = 0x85;
+const K_ERR: u8 = 0xFF;
+
+/// Client → worker messages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Fetch one decoded layer (blocks worker-side until decoded).
+    Fetch { layer: String },
+    /// Warm one layer asynchronously ([`accepted`](Response::Ack)
+    /// mirrors [`crate::store::ModelStore::prefetch_async`]).
+    Prefetch { layer: String },
+    /// Snapshot the worker store's [`StoreMetrics`].
+    Metrics,
+    /// Snapshot the worker store's cost table as `CostProfile` JSON.
+    CostProfile,
+    /// Stop serving: the worker replies [`Response::Bye`] and exits.
+    Shutdown,
+}
+
+/// Worker → client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// A decoded layer (dense row-major weights).
+    Layer { rows: usize, cols: usize, weights: Vec<f32> },
+    /// Prefetch acknowledged; `accepted` is false when the readahead
+    /// was declined (unknown layer, or budget admission).
+    Ack { accepted: bool },
+    /// Metrics snapshot.
+    Metrics(StoreMetrics),
+    /// Cost-table snapshot as `CostProfile` JSON.
+    CostProfile { json: String },
+    /// Shutdown acknowledged; the worker is exiting.
+    Bye,
+    /// The request failed worker-side (unknown layer, decode error,
+    /// unparseable frame). The worker stays alive.
+    Err { message: String },
+}
+
+/// How a frame read fails. The worker loop branches on this: a timeout
+/// polls the shutdown flag, an EOF ends the connection quietly, and a
+/// corrupt frame gets an error reply before the connection closes.
+#[derive(Debug)]
+pub enum WireError {
+    /// The stream ended cleanly before a frame started.
+    Eof,
+    /// The read timed out between frames (poll and retry).
+    TimedOut,
+    /// The bytes on the stream do not form a valid frame.
+    Corrupt(String),
+    /// Any other I/O failure.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Eof => write!(f, "connection closed"),
+            WireError::TimedOut => write!(f, "read timed out"),
+            WireError::Corrupt(msg) => write!(f, "corrupt frame: {msg}"),
+            WireError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Write one frame (header + payload) and flush. An over-cap payload
+/// is an error in release builds too — never a frame the receiver
+/// would misdiagnose as stream corruption. Header and payload go out
+/// as one buffered write: ordinary frames are small, and a single
+/// syscall leaves no scheduling window between header and payload for
+/// the peer's mid-frame read timeout to misread as corruption.
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: u8,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    check_payload_len(payload.len())?;
+    let mut frame = Vec::with_capacity(HEADER_LEN + payload.len());
+    push_header(&mut frame, kind, payload.len());
+    frame.extend_from_slice(payload);
+    w.write_all(&frame)?;
+    w.flush()
+}
+
+fn check_payload_len(payload_len: usize) -> std::io::Result<()> {
+    if payload_len > MAX_PAYLOAD {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!(
+                "frame payload {payload_len} exceeds the \
+                 {MAX_PAYLOAD}-byte cap"
+            ),
+        ));
+    }
+    Ok(())
+}
+
+fn push_header(frame: &mut Vec<u8>, kind: u8, payload_len: usize) {
+    frame.extend_from_slice(MAGIC);
+    frame.extend_from_slice(&VERSION.to_le_bytes());
+    frame.push(kind);
+    frame.extend_from_slice(&(payload_len as u32).to_le_bytes());
+}
+
+/// Send a layer response streamed straight from borrowed weights —
+/// the worker's hot fetch path. One serialization copy into the frame
+/// buffer; no intermediate owned `Vec<f32>`. Callers must pre-check
+/// [`MAX_WIRE_WEIGHTS`] (an oversized layer should be an error
+/// *frame*, not an I/O error here).
+pub fn send_layer(
+    w: &mut impl Write,
+    rows: usize,
+    cols: usize,
+    weights: &[f32],
+) -> std::io::Result<()> {
+    let payload_len = 16 + weights.len() * 4;
+    check_payload_len(payload_len)?;
+    let mut frame = Vec::with_capacity(HEADER_LEN + payload_len);
+    push_header(&mut frame, K_LAYER, payload_len);
+    frame.extend_from_slice(&(rows as u64).to_le_bytes());
+    frame.extend_from_slice(&(cols as u64).to_le_bytes());
+    for v in weights {
+        frame.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&frame)?;
+    w.flush()
+}
+
+/// Read one frame: `(kind, payload)`. Bounds-checked and size-capped;
+/// a lying payload length never allocates more than the stream
+/// actually delivers.
+pub fn read_frame(
+    r: &mut impl Read,
+) -> std::result::Result<(u8, Vec<u8>), WireError> {
+    // First byte read separately so a clean close (or an idle-poll
+    // timeout) between frames is distinguishable from truncation
+    // inside one.
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Err(WireError::Eof),
+            Ok(_) => break,
+            Err(e) if is_timeout(&e) => return Err(WireError::TimedOut),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue
+            }
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[0] = first[0];
+    read_exact_frame(r, &mut header[1..])?;
+    if &header[..4] != MAGIC {
+        return Err(WireError::Corrupt("bad magic".into()));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(WireError::Corrupt(format!(
+            "unsupported wire version {version}"
+        )));
+    }
+    let kind = header[6];
+    let len = u32::from_le_bytes([
+        header[7], header[8], header[9], header[10],
+    ]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Corrupt(format!(
+            "payload length {len} exceeds the {MAX_PAYLOAD}-byte cap"
+        )));
+    }
+    // `take` bounds the allocation by what the stream really provides,
+    // so a corrupt length on a short stream cannot balloon memory.
+    let mut payload = Vec::new();
+    match r.by_ref().take(len as u64).read_to_end(&mut payload) {
+        Ok(_) => {}
+        Err(e) if is_timeout(&e) => {
+            return Err(WireError::Corrupt(
+                "timed out mid-frame".into(),
+            ))
+        }
+        Err(e) => return Err(WireError::Io(e)),
+    }
+    if payload.len() != len {
+        return Err(WireError::Corrupt(format!(
+            "truncated payload: {} of {len} bytes",
+            payload.len()
+        )));
+    }
+    Ok((kind, payload))
+}
+
+/// `read_exact` for the rest of a header: truncation and timeouts
+/// mid-frame are corruption (the stream is desynchronized).
+fn read_exact_frame(
+    r: &mut impl Read,
+    buf: &mut [u8],
+) -> std::result::Result<(), WireError> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) if is_timeout(&e) => {
+            Err(WireError::Corrupt("timed out mid-frame".into()))
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            Err(WireError::Corrupt("truncated frame header".into()))
+        }
+        Err(e) => Err(WireError::Io(e)),
+    }
+}
+
+/// Serialize + send one request.
+pub fn send_request(
+    w: &mut impl Write,
+    req: &Request,
+) -> std::io::Result<()> {
+    let (kind, payload) = req.encode();
+    write_frame(w, kind, &payload)
+}
+
+/// Read + parse one request frame.
+pub fn read_request(
+    r: &mut impl Read,
+) -> std::result::Result<Request, WireError> {
+    let (kind, payload) = read_frame(r)?;
+    Request::decode(kind, &payload)
+        .map_err(|e| WireError::Corrupt(format!("{e:#}")))
+}
+
+/// Serialize + send one response.
+pub fn send_response(
+    w: &mut impl Write,
+    resp: &Response,
+) -> std::io::Result<()> {
+    let (kind, payload) = resp.encode();
+    write_frame(w, kind, &payload)
+}
+
+/// Read + parse one response frame.
+pub fn read_response(
+    r: &mut impl Read,
+) -> std::result::Result<Response, WireError> {
+    let (kind, payload) = read_frame(r)?;
+    Response::decode(kind, &payload)
+        .map_err(|e| WireError::Corrupt(format!("{e:#}")))
+}
+
+impl Request {
+    fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            Request::Fetch { layer } => (K_FETCH, encode_name(layer)),
+            Request::Prefetch { layer } => {
+                (K_PREFETCH, encode_name(layer))
+            }
+            Request::Metrics => (K_METRICS, Vec::new()),
+            Request::CostProfile => (K_COST_PROFILE, Vec::new()),
+            Request::Shutdown => (K_SHUTDOWN, Vec::new()),
+        }
+    }
+
+    /// Parse a request payload. Errors (never panics) on truncation,
+    /// trailing bytes, oversized names, non-utf8 names, and unknown
+    /// kinds.
+    pub fn decode(kind: u8, payload: &[u8]) -> Result<Request> {
+        let mut p = Cursor::new(payload);
+        let req = match kind {
+            K_FETCH => Request::Fetch { layer: p.name()? },
+            K_PREFETCH => Request::Prefetch { layer: p.name()? },
+            K_METRICS => Request::Metrics,
+            K_COST_PROFILE => Request::CostProfile,
+            K_SHUTDOWN => Request::Shutdown,
+            k => bail!("unknown request kind {k:#04x}"),
+        };
+        p.finish()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            Response::Layer { rows, cols, weights } => {
+                let mut b =
+                    Vec::with_capacity(16 + weights.len() * 4);
+                b.extend_from_slice(&(*rows as u64).to_le_bytes());
+                b.extend_from_slice(&(*cols as u64).to_le_bytes());
+                for w in weights {
+                    b.extend_from_slice(&w.to_le_bytes());
+                }
+                (K_LAYER, b)
+            }
+            Response::Ack { accepted } => {
+                (K_ACK, vec![u8::from(*accepted)])
+            }
+            Response::Metrics(m) => {
+                let fields: [u64; 12] = [
+                    m.hits,
+                    m.misses,
+                    m.decodes,
+                    m.evictions,
+                    m.prefetches,
+                    m.redundant_decodes,
+                    m.readahead_skips,
+                    m.cached_bytes as u64,
+                    m.cached_layers as u64,
+                    m.pinned_bytes as u64,
+                    m.decode_ns_total,
+                    m.gemv_ns_total,
+                ];
+                let mut b = Vec::with_capacity(12 * 8);
+                for f in fields {
+                    b.extend_from_slice(&f.to_le_bytes());
+                }
+                (K_METRICS_REPLY, b)
+            }
+            Response::CostProfile { json } => {
+                (K_COSTS_REPLY, encode_name(json))
+            }
+            Response::Bye => (K_BYE, Vec::new()),
+            Response::Err { message } => {
+                // Bound the message to the string cap the decoder
+                // enforces, backing off to a char boundary so a
+                // multibyte layer name can never panic the encoder.
+                let mut message = message.clone();
+                if message.len() > MAX_NAME {
+                    let mut cut = MAX_NAME;
+                    while !message.is_char_boundary(cut) {
+                        cut -= 1;
+                    }
+                    message.truncate(cut);
+                }
+                (K_ERR, encode_name(&message))
+            }
+        }
+    }
+
+    /// Parse a response payload. Errors (never panics) on truncation,
+    /// trailing bytes, geometry whose weight count disagrees with the
+    /// payload, and unknown kinds.
+    pub fn decode(kind: u8, payload: &[u8]) -> Result<Response> {
+        let mut p = Cursor::new(payload);
+        let resp = match kind {
+            K_LAYER => {
+                let rows = p.dim()?;
+                let cols = p.dim()?;
+                let n = rows.checked_mul(cols).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "layer geometry {rows}x{cols} overflows"
+                    )
+                })?;
+                let byte_len = n.checked_mul(4).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "layer byte size overflows ({n} weights)"
+                    )
+                })?;
+                let bytes = p.bytes(byte_len)?;
+                let weights = bytes
+                    .chunks_exact(4)
+                    .map(|c| {
+                        f32::from_le_bytes([c[0], c[1], c[2], c[3]])
+                    })
+                    .collect();
+                Response::Layer { rows, cols, weights }
+            }
+            K_ACK => Response::Ack { accepted: p.u8()? != 0 },
+            K_METRICS_REPLY => {
+                let mut f = [0u64; 12];
+                for slot in &mut f {
+                    *slot = p.u64()?;
+                }
+                Response::Metrics(StoreMetrics {
+                    hits: f[0],
+                    misses: f[1],
+                    decodes: f[2],
+                    evictions: f[3],
+                    prefetches: f[4],
+                    redundant_decodes: f[5],
+                    readahead_skips: f[6],
+                    cached_bytes: clamp_usize(f[7]),
+                    cached_layers: clamp_usize(f[8]),
+                    pinned_bytes: clamp_usize(f[9]),
+                    decode_ns_total: f[10],
+                    gemv_ns_total: f[11],
+                })
+            }
+            K_COSTS_REPLY => {
+                // The JSON text rides the same length-prefixed string
+                // encoding as names, without the name length cap (a
+                // large model's profile is legitimately long).
+                let len = p.u32()? as usize;
+                let bytes = p.bytes(len)?;
+                let json =
+                    String::from_utf8(bytes.to_vec()).map_err(|_| {
+                        anyhow::anyhow!("cost profile not utf8")
+                    })?;
+                Response::CostProfile { json }
+            }
+            K_BYE => Response::Bye,
+            K_ERR => Response::Err { message: p.name()? },
+            k => bail!("unknown response kind {k:#04x}"),
+        };
+        p.finish()?;
+        Ok(resp)
+    }
+}
+
+fn clamp_usize(v: u64) -> usize {
+    usize::try_from(v).unwrap_or(usize::MAX)
+}
+
+fn encode_name(s: &str) -> Vec<u8> {
+    let mut b = Vec::with_capacity(4 + s.len());
+    b.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    b.extend_from_slice(s.as_bytes());
+    b
+}
+
+/// Bounds-checked payload reader: every accessor errors on truncation,
+/// and [`Cursor::finish`] rejects trailing bytes.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cursor { b, i: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.i.checked_add(n).ok_or_else(|| {
+            anyhow::anyhow!("payload offset overflows")
+        })?;
+        let Some(s) = self.b.get(self.i..end) else {
+            bail!(
+                "truncated payload: wanted {n} bytes at offset {}",
+                self.i
+            );
+        };
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// A layer dimension: `u64` on the wire, must fit a host `usize`.
+    fn dim(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v)
+            .map_err(|_| anyhow::anyhow!("dimension {v} too large"))
+    }
+
+    /// A length-prefixed utf-8 string, capped at [`MAX_NAME`].
+    fn name(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        if len > MAX_NAME {
+            bail!("name length {len} exceeds the {MAX_NAME}-byte cap");
+        }
+        let bytes = self.bytes(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow::anyhow!("name not utf8"))
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            bail!(
+                "{} trailing bytes after payload",
+                self.b.len() - self.i
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Convert a fetched wire layer into the serving-side decoded form.
+pub fn layer_from_response(resp: Response) -> Result<DecodedLayer> {
+    match resp {
+        Response::Layer { rows, cols, weights } => {
+            if rows.checked_mul(cols) != Some(weights.len()) {
+                bail!(
+                    "layer payload carries {} weights for a {rows}x{cols} \
+                     geometry",
+                    weights.len()
+                );
+            }
+            Ok(DecodedLayer { rows, cols, weights })
+        }
+        other => bail!("expected a layer frame, got {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor as IoCursor;
+
+    fn round_trip_request(req: Request) {
+        let mut buf = Vec::new();
+        send_request(&mut buf, &req).unwrap();
+        let got = read_request(&mut IoCursor::new(&buf)).unwrap();
+        assert_eq!(got, req);
+    }
+
+    fn round_trip_response(resp: Response) {
+        let mut buf = Vec::new();
+        send_response(&mut buf, &resp).unwrap();
+        let got = read_response(&mut IoCursor::new(&buf)).unwrap();
+        assert_eq!(got, resp);
+    }
+
+    #[test]
+    fn every_message_kind_round_trips() {
+        round_trip_request(Request::Fetch { layer: "mlp/fc0".into() });
+        round_trip_request(Request::Prefetch { layer: "x".into() });
+        round_trip_request(Request::Metrics);
+        round_trip_request(Request::CostProfile);
+        round_trip_request(Request::Shutdown);
+        round_trip_response(Response::Layer {
+            rows: 2,
+            cols: 3,
+            weights: vec![0.5, -1.0, 0.0, 3.25, 2.0, -0.125],
+        });
+        round_trip_response(Response::Ack { accepted: true });
+        round_trip_response(Response::Ack { accepted: false });
+        round_trip_response(Response::Metrics(StoreMetrics {
+            hits: 1,
+            misses: 2,
+            decodes: 3,
+            evictions: 4,
+            prefetches: 5,
+            redundant_decodes: 6,
+            readahead_skips: 7,
+            cached_bytes: 8,
+            cached_layers: 9,
+            pinned_bytes: 10,
+            decode_ns_total: 11,
+            gemv_ns_total: 12,
+        }));
+        round_trip_response(Response::CostProfile {
+            json: "{\"title\": \"t\", \"cases\": {}}".into(),
+        });
+        round_trip_response(Response::Bye);
+        round_trip_response(Response::Err {
+            message: "layer \"ghost\" not in container".into(),
+        });
+    }
+
+    #[test]
+    fn streamed_layer_frame_matches_the_owned_encoding() {
+        let weights = vec![0.5f32, -1.0, 0.0, 3.25, 2.0, -0.125];
+        let mut owned = Vec::new();
+        send_response(
+            &mut owned,
+            &Response::Layer {
+                rows: 2,
+                cols: 3,
+                weights: weights.clone(),
+            },
+        )
+        .unwrap();
+        let mut streamed = Vec::new();
+        send_layer(&mut streamed, 2, 3, &weights).unwrap();
+        assert_eq!(streamed, owned, "one wire form, two writers");
+    }
+
+    #[test]
+    fn oversized_payload_is_a_send_error_in_release_too() {
+        // The length check happens before any bytes move, so probing
+        // it needs no giant allocation.
+        let err = check_payload_len(MAX_PAYLOAD + 1).unwrap_err();
+        assert!(format!("{err}").contains("cap"), "{err}");
+        assert!(check_payload_len(MAX_PAYLOAD).is_ok());
+        assert_eq!(MAX_WIRE_WEIGHTS, (MAX_PAYLOAD - 16) / 4);
+    }
+
+    #[test]
+    fn empty_stream_is_eof_not_corrupt() {
+        let err =
+            read_frame(&mut IoCursor::new(Vec::new())).unwrap_err();
+        assert!(matches!(err, WireError::Eof));
+    }
+
+    #[test]
+    fn truncation_at_every_cut_errors_never_panics() {
+        let mut buf = Vec::new();
+        send_request(
+            &mut buf,
+            &Request::Fetch { layer: "layer0".into() },
+        )
+        .unwrap();
+        for cut in 1..buf.len() {
+            let err = read_request(&mut IoCursor::new(&buf[..cut]))
+                .unwrap_err();
+            assert!(
+                matches!(err, WireError::Corrupt(_)),
+                "cut {cut}: {err}"
+            );
+        }
+        let mut resp = Vec::new();
+        send_response(
+            &mut resp,
+            &Response::Layer {
+                rows: 2,
+                cols: 2,
+                weights: vec![1.0, 2.0, 3.0, 4.0],
+            },
+        )
+        .unwrap();
+        for cut in 1..resp.len() {
+            assert!(
+                read_response(&mut IoCursor::new(&resp[..cut]))
+                    .is_err(),
+                "cut {cut} parsed"
+            );
+        }
+    }
+
+    #[test]
+    fn byte_flip_fuzz_never_panics() {
+        let mut buf = Vec::new();
+        send_response(
+            &mut buf,
+            &Response::Layer {
+                rows: 2,
+                cols: 2,
+                weights: vec![1.0, 2.0, 3.0, 4.0],
+            },
+        )
+        .unwrap();
+        for pos in 0..buf.len() {
+            for val in [0x00u8, 0x01, 0x7F, 0xFF] {
+                if buf[pos] == val {
+                    continue;
+                }
+                let mut corrupt = buf.clone();
+                corrupt[pos] = val;
+                // May parse (a flipped f32 bit is still a layer) or
+                // reject — must never panic or over-allocate.
+                let _ = read_response(&mut IoCursor::new(&corrupt));
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_lengths_are_capped() {
+        // A header that promises more payload than the cap.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.push(K_FETCH);
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut IoCursor::new(&buf)).unwrap_err();
+        assert!(
+            matches!(err, WireError::Corrupt(ref m) if m.contains("cap")),
+            "{err}"
+        );
+        // A name length beyond the cap inside a well-formed frame.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(MAX_NAME as u32 + 1).to_le_bytes());
+        assert!(Request::decode(K_FETCH, &payload).is_err());
+        // A layer whose geometry overflows.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&u64::MAX.to_le_bytes());
+        payload.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Response::decode(K_LAYER, &payload).is_err());
+    }
+
+    #[test]
+    fn bad_magic_version_kind_and_trailing_bytes_error() {
+        let mut buf = Vec::new();
+        send_request(&mut buf, &Request::Metrics).unwrap();
+        let mut bad_magic = buf.clone();
+        bad_magic[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut IoCursor::new(&bad_magic)).unwrap_err(),
+            WireError::Corrupt(_)
+        ));
+        let mut bad_version = buf.clone();
+        bad_version[4] = 9;
+        assert!(read_frame(&mut IoCursor::new(&bad_version)).is_err());
+        assert!(Request::decode(0x42, &[]).is_err());
+        assert!(Response::decode(0x42, &[]).is_err());
+        // Trailing bytes after a fixed-size payload.
+        assert!(Request::decode(K_METRICS, &[0]).is_err());
+        assert!(Response::decode(K_ACK, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn layer_from_response_validates_shape() {
+        let ok = layer_from_response(Response::Layer {
+            rows: 1,
+            cols: 2,
+            weights: vec![1.0, 2.0],
+        })
+        .unwrap();
+        assert_eq!((ok.rows, ok.cols), (1, 2));
+        assert!(layer_from_response(Response::Bye).is_err());
+    }
+}

@@ -1,0 +1,380 @@
+//! The shard-worker serve loop: one [`ModelStore`] behind a socket.
+//!
+//! A worker process owns exactly one shard of a split model: its own
+//! mmap-backed store, its own decode service, its own budget, its own
+//! cost table (warm-started from the `<shard>.costs.json` sidecar when
+//! one sits next to the shard file — see
+//! [`crate::store::ModelStore::open_path`]). It answers the wire
+//! protocol over a `UnixListener`:
+//!
+//! * `Fetch` blocks on [`ModelStore::get`] and ships the decoded
+//!   weights back — the store's in-flight dedup means a fetch racing a
+//!   cross-process readahead never decodes twice.
+//! * `Prefetch` maps to [`ModelStore::prefetch_async`] and returns
+//!   immediately, which is what lets the router warm layer `i+1` on
+//!   *this* worker's decode service while layer `i`'s GEMV runs in the
+//!   router process.
+//! * `Metrics` / `CostProfile` snapshot the store's counters and cost
+//!   table, so the supervisor aggregates `--timing` and
+//!   `--profile-out` across processes unchanged.
+//! * `Shutdown` ends the serve loop cleanly.
+//!
+//! Failure policy: a bad request (unknown layer, corrupt record) is an
+//! error *frame*, never a worker death; a corrupt byte stream closes
+//! that one connection; a panic anywhere in decode is already caught
+//! store-side. The process only exits on `Shutdown` — everything else
+//! is survivable, and the supervisor restarts whatever is not.
+
+use super::wire::{self, Request, Response, WireError};
+use crate::shard::CostProfile;
+use crate::store::{ModelStore, StoreConfig};
+use anyhow::{Context, Result};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How often the accept loop and idle connections poll the shutdown
+/// flag.
+const POLL: Duration = Duration::from_millis(5);
+
+/// Open `shard_path` as a [`ModelStore`] (mmap-backed under the `mmap`
+/// feature, cost sidecar auto-loaded) and serve it on `socket_path`
+/// until a `Shutdown` request arrives. The `f2f shard-worker` child
+/// entrypoint is a thin wrapper over this.
+pub fn run_worker(
+    shard_path: &Path,
+    socket_path: &Path,
+    config: StoreConfig,
+) -> Result<()> {
+    let store = Arc::new(
+        ModelStore::open_path(shard_path, config).with_context(|| {
+            format!("opening shard {}", shard_path.display())
+        })?,
+    );
+    serve_store(store, socket_path)
+}
+
+/// Serve an already-open store on `socket_path` until `Shutdown`.
+/// Restarted workers replay the same socket path, so a stale socket
+/// file from a crashed incarnation is unlinked before binding.
+pub fn serve_store(
+    store: Arc<ModelStore>,
+    socket_path: &Path,
+) -> Result<()> {
+    let _ = std::fs::remove_file(socket_path);
+    let listener = UnixListener::bind(socket_path).with_context(|| {
+        format!("binding {}", socket_path.display())
+    })?;
+    // Non-blocking accept so the loop can observe the shutdown flag a
+    // connection handler sets.
+    listener
+        .set_nonblocking(true)
+        .context("setting listener non-blocking")?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        // Reap handlers whose connection already ended, so a
+        // long-lived worker's handle list stays bounded by *live*
+        // connections, not lifetime connection count.
+        conns.retain(|h| !h.is_finished());
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let store = store.clone();
+                let shutdown = shutdown.clone();
+                match std::thread::Builder::new()
+                    .name("f2f-ipc-conn".into())
+                    .spawn(move || {
+                        serve_connection(stream, &store, &shutdown)
+                    }) {
+                    Ok(handle) => conns.push(handle),
+                    // Transient resource pressure: dropping the one
+                    // connection (the closure — and the stream it
+                    // owns — is dropped) beats killing a worker full
+                    // of warm cache. The client sees a transport
+                    // error and retries through the supervisor.
+                    Err(_) => std::thread::sleep(POLL),
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                std::thread::sleep(POLL);
+            }
+            // A failed accept (e.g. aborted connection) is not fatal;
+            // back off briefly and keep serving.
+            Err(_) => std::thread::sleep(POLL),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    let _ = std::fs::remove_file(socket_path);
+    Ok(())
+}
+
+/// One connection: frames in, frames out, until EOF, corruption, or
+/// shutdown. Every failure mode ends at worst this connection.
+fn serve_connection(
+    mut stream: UnixStream,
+    store: &ModelStore,
+    shutdown: &AtomicBool,
+) {
+    // The listener is non-blocking; the conversation must not be (on
+    // some platforms accepted sockets inherit the flag). A finite
+    // read timeout then keeps idle connections polling the shutdown
+    // flag instead of pinning their thread forever.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match wire::read_request(&mut stream) {
+            Ok(req) => {
+                let (reply, quit) = handle(store, req, shutdown);
+                let sent = match &reply {
+                    // Fetched layers stream straight from the cache's
+                    // Arc — one serialization copy, no owned clone of
+                    // the weight vector on the hot path.
+                    Reply::Layer(l) => wire::send_layer(
+                        &mut stream,
+                        l.rows,
+                        l.cols,
+                        &l.weights,
+                    ),
+                    Reply::Msg(resp) => {
+                        wire::send_response(&mut stream, resp)
+                    }
+                };
+                if sent.is_err() {
+                    return; // client went away mid-reply
+                }
+                if quit {
+                    return;
+                }
+            }
+            Err(WireError::TimedOut) => continue,
+            Err(WireError::Eof) => return,
+            Err(WireError::Corrupt(msg)) => {
+                // Tell the peer what went wrong, then drop the
+                // connection: a desynchronized stream cannot be
+                // re-framed. The worker itself keeps serving.
+                let _ = wire::send_response(
+                    &mut stream,
+                    &Response::Err { message: msg },
+                );
+                return;
+            }
+            Err(WireError::Io(_)) => return,
+        }
+    }
+}
+
+/// What one request produces: either an ordinary response message, or
+/// a fetched layer kept behind its cache `Arc` so the send path can
+/// stream it without cloning the weights.
+enum Reply {
+    Msg(Response),
+    Layer(std::sync::Arc<crate::sparse::DecodedLayer>),
+}
+
+/// Dispatch one request against the store. Returns the reply and
+/// whether the connection (and, for `Shutdown`, the worker) should
+/// end.
+fn handle(
+    store: &ModelStore,
+    req: Request,
+    shutdown: &AtomicBool,
+) -> (Reply, bool) {
+    let msg = |resp| (Reply::Msg(resp), false);
+    match req {
+        Request::Fetch { layer } => match store.get(&layer) {
+            Ok(decoded) => {
+                if decoded.weights.len() > wire::MAX_WIRE_WEIGHTS {
+                    // Error at the source: sending it anyway would be
+                    // rejected receiver-side as a corrupt frame and
+                    // trigger a pointless worker restart.
+                    msg(Response::Err {
+                        message: format!(
+                            "layer {layer:?} has {} weights — too \
+                             large for one wire frame (cap {})",
+                            decoded.weights.len(),
+                            wire::MAX_WIRE_WEIGHTS
+                        ),
+                    })
+                } else {
+                    (Reply::Layer(decoded), false)
+                }
+            }
+            Err(e) => msg(Response::Err { message: format!("{e:#}") }),
+        },
+        Request::Prefetch { layer } => msg(Response::Ack {
+            accepted: store.prefetch_async(&layer),
+        }),
+        Request::Metrics => msg(Response::Metrics(store.metrics())),
+        Request::CostProfile => msg(Response::CostProfile {
+            json: CostProfile::from_stores([store.costs()]).to_json(),
+        }),
+        Request::Shutdown => {
+            shutdown.store(true, Ordering::SeqCst);
+            (Reply::Msg(Response::Bye), true)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::write_container_v2;
+    use crate::store::test_model;
+
+    fn temp_socket(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("f2f-ipc-{tag}-{}.sock", std::process::id()))
+    }
+
+    /// In-thread worker: the serve loop and the wire protocol without
+    /// a process fork (the fork path is covered by the integration
+    /// tests and the CI smoke job).
+    #[test]
+    fn serve_loop_answers_every_request_kind_then_shuts_down() {
+        let c = test_model(&[16, 12, 8], 90);
+        let want: Vec<Vec<f32>> = c
+            .layers
+            .iter()
+            .map(|l| {
+                crate::sparse::DecodedLayer::from_compressed(l).weights
+            })
+            .collect();
+        let bytes = write_container_v2(&c);
+        let store = Arc::new(
+            ModelStore::open_bytes(bytes, StoreConfig::default())
+                .unwrap(),
+        );
+        let socket = temp_socket("serve-loop");
+        let worker = {
+            let store = store.clone();
+            let socket = socket.clone();
+            std::thread::spawn(move || serve_store(store, &socket))
+        };
+        // Wait for the socket to come up.
+        let mut stream = loop {
+            match UnixStream::connect(&socket) {
+                Ok(s) => break s,
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        };
+
+        // Fetch both layers: bit-exact decoded weights over the wire.
+        for (i, name) in ["fc0", "fc1"].iter().enumerate() {
+            wire::send_request(
+                &mut stream,
+                &Request::Fetch { layer: name.to_string() },
+            )
+            .unwrap();
+            let resp = wire::read_response(&mut stream).unwrap();
+            let layer = wire::layer_from_response(resp).unwrap();
+            assert_eq!(layer.weights, want[i], "{name}");
+        }
+        // Unknown layer: an error frame, and the connection survives.
+        wire::send_request(
+            &mut stream,
+            &Request::Fetch { layer: "ghost".into() },
+        )
+        .unwrap();
+        match wire::read_response(&mut stream).unwrap() {
+            Response::Err { message } => {
+                assert!(message.contains("ghost"), "{message}")
+            }
+            other => panic!("expected an error frame, got {other:?}"),
+        }
+        // Prefetch dedups against the already-cached layer.
+        wire::send_request(
+            &mut stream,
+            &Request::Prefetch { layer: "fc0".into() },
+        )
+        .unwrap();
+        assert_eq!(
+            wire::read_response(&mut stream).unwrap(),
+            Response::Ack { accepted: true }
+        );
+        // Metrics show both decodes.
+        wire::send_request(&mut stream, &Request::Metrics).unwrap();
+        match wire::read_response(&mut stream).unwrap() {
+            Response::Metrics(m) => {
+                assert_eq!(m.decodes, 2);
+                assert_eq!(m.redundant_decodes, 0);
+            }
+            other => panic!("expected metrics, got {other:?}"),
+        }
+        // The cost profile crosses the wire through the validated
+        // JSON parser.
+        wire::send_request(&mut stream, &Request::CostProfile)
+            .unwrap();
+        match wire::read_response(&mut stream).unwrap() {
+            Response::CostProfile { json } => {
+                let profile =
+                    CostProfile::parse_json(&json).unwrap();
+                assert_eq!(profile.len(), 2);
+                assert!(
+                    profile.get("fc0").unwrap().decode_samples > 0
+                );
+            }
+            other => panic!("expected a profile, got {other:?}"),
+        }
+        // Shutdown ends the loop; the socket file is removed.
+        wire::send_request(&mut stream, &Request::Shutdown).unwrap();
+        assert_eq!(
+            wire::read_response(&mut stream).unwrap(),
+            Response::Bye
+        );
+        worker.join().unwrap().unwrap();
+        assert!(!socket.exists(), "socket removed on clean exit");
+    }
+
+    #[test]
+    fn garbage_bytes_close_one_connection_not_the_worker() {
+        let c = test_model(&[16, 12], 91);
+        let bytes = write_container_v2(&c);
+        let store = Arc::new(
+            ModelStore::open_bytes(bytes, StoreConfig::default())
+                .unwrap(),
+        );
+        let socket = temp_socket("garbage");
+        let worker = {
+            let store = store.clone();
+            let socket = socket.clone();
+            std::thread::spawn(move || serve_store(store, &socket))
+        };
+        let mut stream = loop {
+            match UnixStream::connect(&socket) {
+                Ok(s) => break s,
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        };
+        use std::io::Write;
+        stream.write_all(b"this is definitely not a frame").unwrap();
+        stream.flush().unwrap();
+        // The worker replies with an error frame (or just closes);
+        // either way the *next* connection must serve normally.
+        let _ = wire::read_response(&mut stream);
+        drop(stream);
+        let mut fresh = UnixStream::connect(&socket).unwrap();
+        wire::send_request(
+            &mut fresh,
+            &Request::Fetch { layer: "fc0".into() },
+        )
+        .unwrap();
+        let resp = wire::read_response(&mut fresh).unwrap();
+        assert!(wire::layer_from_response(resp).is_ok());
+        wire::send_request(&mut fresh, &Request::Shutdown).unwrap();
+        let _ = wire::read_response(&mut fresh);
+        worker.join().unwrap().unwrap();
+    }
+}

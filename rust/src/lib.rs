@@ -61,6 +61,16 @@
 //!   [`shard::CostProfile`] JSON snapshots of the cost tables and
 //!   [`shard::rebalance_map`] re-partitioning on measured per-layer
 //!   decode time — the `f2f rebalance` CLI).
+//! * `ipc` (unix) — multi-process sharded serving: a hand-rolled
+//!   length-prefixed wire protocol over unix domain sockets
+//!   (`ipc::wire`), the `f2f shard-worker` child-process entrypoint
+//!   (one mmap-backed store behind a `UnixListener`), the
+//!   reconnecting `ipc::IpcShardStore` client, an `ipc::ProcRouter`
+//!   [`coordinator::Backend`] that walks the chain across worker
+//!   *processes* with cross-process readahead, and an
+//!   `ipc::Supervisor` that spawns, health-checks and restarts
+//!   workers (shard assignment replayed) while aggregating metrics
+//!   and cost tables over the wire — `f2f serve --shard-procs N`.
 //! * [`bandwidth`] — memory transaction / bandwidth-utilization simulator
 //!   (Figure 1, Appendix A).
 //! * [`models`] — synthetic Transformer / ResNet-50 model zoo with
@@ -117,6 +127,13 @@
 //! surface and bit-identical outputs, but per-shard decode services,
 //! per-shard cache budgets, cross-shard readahead, and (with the `mmap`
 //! feature, on by default) per-shard container files paged in lazily.
+//!
+//! To scale past one address space, serve each shard from its own
+//! *process*: `f2f serve --shard-procs N` spawns one `f2f
+//! shard-worker` per shard file (supervised — a crashed worker is
+//! restarted with its shard assignment replayed), and an
+//! `ipc::ProcRouter` walks the same chain over unix-socket IPC with
+//! cross-process readahead, still bit-identical to the single store.
 
 pub mod bandwidth;
 pub mod bench_util;
@@ -128,6 +145,8 @@ pub mod decoder;
 pub mod encoder;
 pub mod entropy;
 pub mod gf2;
+#[cfg(unix)]
+pub mod ipc;
 pub mod models;
 pub mod pipeline;
 pub mod pruning;

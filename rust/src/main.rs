@@ -22,9 +22,16 @@
 //!   `--decode-threads <n>` decode-service width, `--layers`, `--width`,
 //!   `--readahead on|off|<depth>|auto` async warm-ahead — `auto` plans
 //!   depth from observed costs — `--shards <n>` split across a
-//!   multi-store shard router, `--timing` print the per-layer cost
-//!   table, `--profile-out <path>` export it as `CostProfile` JSON)
-//!   and run a self-driven load test.
+//!   multi-store shard router, `--shard-procs <n>` split across that
+//!   many supervised *worker processes* routed over unix-socket IPC,
+//!   `--timing` print the per-layer cost table, `--profile-out [path]`
+//!   export it as `CostProfile` JSON — bare `--profile-out` writes the
+//!   `<container>.costs.json` sidecar `ModelStore::open_path`
+//!   auto-loads) and run a self-driven load test.
+//! * `f2f shard-worker <shard.f2f2> --socket <path> [--cache-kb <n>]
+//!   [--decode-threads <n>]` — serve one shard file over a unix
+//!   socket: the child-process entrypoint `serve --shard-procs`
+//!   spawns (unix only).
 //! * `f2f hw --s <S> --nin <N> --ns <N>` — Appendix G hardware cost.
 
 use anyhow::{bail, Result};
@@ -46,12 +53,12 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("shard") => cmd_shard(args),
         Some("rebalance") => cmd_rebalance(args),
         Some("serve") => cmd_serve(args),
+        Some("shard-worker") => cmd_shard_worker(args),
         Some("hw") => cmd_hw(args),
         _ => {
             eprintln!(
-                "usage: f2f \
-                 <repro|compress|inspect|shard|rebalance|serve|hw> \
-                 [options]\n\
+                "usage: f2f <repro|compress|inspect|shard|rebalance|\
+                 serve|shard-worker|hw> [options]\n\
                  try: f2f repro table1 --bits 100000"
             );
             Ok(())
@@ -264,14 +271,45 @@ fn cmd_rebalance(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Child-process entrypoint for `serve --shard-procs`: serve one
+/// shard file over a unix socket until a wire `Shutdown` arrives.
+/// Silent on success — the supervisor owns the operator-facing
+/// output.
+#[cfg(unix)]
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    use f2f::store::StoreConfig;
+
+    let shard = args.pos(1)?;
+    let socket = args.get_str("socket", "");
+    if socket.is_empty() {
+        bail!("shard-worker needs --socket <path>");
+    }
+    let cache_kb: usize = args.get("cache-kb", 0)?;
+    let decode_threads: usize = args.get("decode-threads", 0)?;
+    let budget = if cache_kb == 0 { usize::MAX } else { cache_kb << 10 };
+    f2f::ipc::run_worker(
+        std::path::Path::new(shard),
+        std::path::Path::new(&socket),
+        StoreConfig {
+            cache_budget_bytes: budget,
+            decode_workers: decode_threads,
+        },
+    )
+}
+
+#[cfg(not(unix))]
+fn cmd_shard_worker(_args: &Args) -> Result<()> {
+    bail!("shard-worker requires unix domain sockets (unix only)");
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use f2f::container::{write_sharded, ShardAssignment};
     use f2f::coordinator::{InferenceServer, ServerConfig};
     use f2f::models::{compressed_mlp, MlpConfig};
     use f2f::shard::{CostProfile, ShardRouter};
     use f2f::store::{
-        LayerCost, ModelBackend, ModelStore, ReadaheadPolicy,
-        StoreConfig, StoreMetrics,
+        ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig,
+        StoreMetrics,
     };
     use std::sync::Arc;
 
@@ -292,11 +330,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.get_str("readahead", "on").parse()?;
     // Split the model across this many stores behind a shard router.
     let n_shards: usize = args.get("shards", 1)?;
+    // Split the model across this many supervised worker *processes*
+    // routed over unix-socket IPC (0 = in-process serving).
+    let shard_procs: usize = args.get("shard-procs", 0)?;
     // Print the per-layer observed cost table (what `auto` sees).
     let show_timing = args.flag("timing");
     // Export the observed costs as CostProfile JSON (the input to
-    // `f2f rebalance`).
-    let profile_out = args.get_str("profile-out", "");
+    // `f2f rebalance`). A bare `--profile-out` defaults to the
+    // `<container>.costs.json` sidecar that `ModelStore::open_path`
+    // auto-loads, so the planner survives restarts.
+    let profile_out_explicit = args.get_str("profile-out", "");
+    let profile_out_requested =
+        args.flag("profile-out") || !profile_out_explicit.is_empty();
 
     // Compress a multi-layer MLP-shaped model into an indexed container.
     let t0 = std::time::Instant::now();
@@ -314,6 +359,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!("model compressed in {:?}", t0.elapsed());
 
+    if shard_procs > 0 {
+        #[cfg(unix)]
+        return serve_multiproc(
+            &container,
+            &MultiprocOpts {
+                shard_procs,
+                requests,
+                max_batch,
+                seed,
+                width,
+                cache_kb,
+                decode_threads,
+                readahead,
+                show_timing,
+                profile_out_explicit,
+                profile_out_requested,
+                workdir: args.get_str("workdir", ""),
+            },
+        );
+        #[cfg(not(unix))]
+        bail!("--shard-procs requires unix domain sockets (unix only)");
+    }
+
     let budget = if cache_kb == 0 { usize::MAX } else { cache_kb << 10 };
     let store_config = StoreConfig {
         cache_budget_bytes: budget,
@@ -325,49 +393,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         format!("{} KiB", budget >> 10)
     };
 
-    let print_store_metrics = |label: &str, sm: &StoreMetrics| {
-        println!(
-            "{label}: hits={} misses={} decodes={} evictions={} \
-             cached={} KiB ({} layers)",
-            sm.hits,
-            sm.misses,
-            sm.decodes,
-            sm.evictions,
-            sm.cached_bytes >> 10,
-            sm.cached_layers,
-        );
-        println!(
-            "{label} readahead: prefetches={} skips={} \
-             redundant_decodes={}",
-            sm.prefetches, sm.readahead_skips, sm.redundant_decodes,
-        );
+    // Resolved export path for this in-process serve: an explicit
+    // `--profile-out <path>` wins; a bare flag targets the sidecar of
+    // the default `f2f compress` output (`model.f2f.costs.json`).
+    // Consumers of that convention are `open_path` callers — spawned
+    // shard workers and anything serving the compressed file from
+    // disk; this in-memory serve loop itself always cold-starts.
+    let profile_out = if !profile_out_explicit.is_empty() {
+        profile_out_explicit.clone()
+    } else if profile_out_requested {
+        f2f::store::cost_sidecar_path(std::path::Path::new(
+            "model.f2f",
+        ))
+        .display()
+        .to_string()
+    } else {
+        String::new()
     };
-
-    // Per-layer observed cost table (`--timing`): exactly the
-    // telemetry the auto readahead planner reads.
-    let print_cost_table = |label: &str, costs: &[(String, LayerCost)]| {
-        let mut table = f2f::report::Table::new(
-            &format!("{label}: per-layer observed costs (EWMA)"),
-            &[
-                "layer",
-                "decode_us",
-                "decode_samples",
-                "gemv_us_per_item",
-                "gemv_samples",
-            ],
-        );
-        for (name, c) in costs {
-            table.row(vec![
-                name.clone(),
-                format!("{:.1}", c.decode_ns / 1e3),
-                c.decode_samples.to_string(),
-                format!("{:.2}", c.gemv_ns / 1e3),
-                c.gemv_samples.to_string(),
-            ]);
-        }
-        print!("{}", table.render());
-    };
-
     let write_profile = |profile: &CostProfile| -> Result<()> {
         if !profile_out.is_empty() {
             std::fs::write(&profile_out, profile.to_json())?;
@@ -450,6 +492,264 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         write_profile(&profile)?;
         server.shutdown();
+    }
+    Ok(())
+}
+
+fn print_store_metrics(label: &str, sm: &f2f::store::StoreMetrics) {
+    println!(
+        "{label}: hits={} misses={} decodes={} evictions={} \
+         cached={} KiB ({} layers)",
+        sm.hits,
+        sm.misses,
+        sm.decodes,
+        sm.evictions,
+        sm.cached_bytes >> 10,
+        sm.cached_layers,
+    );
+    println!(
+        "{label} readahead: prefetches={} skips={} \
+         redundant_decodes={}",
+        sm.prefetches, sm.readahead_skips, sm.redundant_decodes,
+    );
+}
+
+/// Per-layer observed cost table (`--timing`): exactly the telemetry
+/// the auto readahead planner reads.
+fn print_cost_table(
+    label: &str,
+    costs: &[(String, f2f::store::LayerCost)],
+) {
+    let mut table = f2f::report::Table::new(
+        &format!("{label}: per-layer observed costs (EWMA)"),
+        &[
+            "layer",
+            "decode_us",
+            "decode_samples",
+            "gemv_us_per_item",
+            "gemv_samples",
+        ],
+    );
+    for (name, c) in costs {
+        table.row(vec![
+            name.clone(),
+            format!("{:.1}", c.decode_ns / 1e3),
+            c.decode_samples.to_string(),
+            format!("{:.2}", c.gemv_ns / 1e3),
+            c.gemv_samples.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+}
+
+/// Knobs of the multi-process serve path, bundled so the branch in
+/// [`cmd_serve`] stays readable.
+#[cfg(unix)]
+struct MultiprocOpts {
+    shard_procs: usize,
+    requests: usize,
+    max_batch: usize,
+    seed: u64,
+    width: usize,
+    cache_kb: usize,
+    decode_threads: usize,
+    readahead: f2f::store::ReadaheadPolicy,
+    show_timing: bool,
+    profile_out_explicit: String,
+    profile_out_requested: bool,
+    /// Where shard files, map, and sidecars land. Empty = an
+    /// ephemeral temp dir removed on exit; explicit = kept, so the
+    /// artifacts (including the per-shard cost sidecars that warm
+    /// restarted workers) survive for the next serve.
+    workdir: String,
+}
+
+/// `serve --shard-procs N`: split the compressed model into N shard
+/// files, spawn one supervised `f2f shard-worker` process per shard,
+/// and serve through a [`f2f::ipc::ProcRouter`] behind the batching
+/// server — the multi-process serving tier, end to end.
+#[cfg(unix)]
+fn serve_multiproc(
+    container: &f2f::container::Container,
+    opts: &MultiprocOpts,
+) -> Result<()> {
+    use f2f::container::{
+        split_container, write_container_v2, ContainerIndex,
+        ShardAssignment,
+    };
+    use f2f::coordinator::{InferenceServer, ServerConfig};
+    use f2f::ipc::{ProcRouter, Supervisor, WorkerSpec};
+    use f2f::store::{cost_sidecar_path, StoreMetrics};
+
+    let (workdir, ephemeral) = if opts.workdir.is_empty() {
+        (
+            std::env::temp_dir().join(format!(
+                "f2f-serve-procs-{}",
+                std::process::id()
+            )),
+            true,
+        )
+    } else {
+        (std::path::PathBuf::from(&opts.workdir), false)
+    };
+    std::fs::create_dir_all(&workdir)?;
+    let bytes = write_container_v2(container);
+    let model_path = workdir.join("model.f2f");
+    std::fs::write(&model_path, &bytes)?;
+    let (map, shard_bytes) = split_container(
+        &bytes,
+        opts.shard_procs,
+        ShardAssignment::ByBytes,
+    )?;
+    std::fs::write(workdir.join("model.shardmap"), map.to_bytes())?;
+
+    let binary = std::env::current_exe()?;
+    let mut specs = Vec::new();
+    let mut shard_paths = Vec::new();
+    for (i, b) in shard_bytes.iter().enumerate() {
+        let shard_path = workdir.join(format!("model.shard{i}.f2f"));
+        std::fs::write(&shard_path, b)?;
+        specs.push(WorkerSpec {
+            binary: binary.clone(),
+            shard_path: shard_path.clone(),
+            socket_path: workdir.join(format!("shard{i}.sock")),
+            cache_kb: opts.cache_kb,
+            decode_threads: opts.decode_threads,
+        });
+        shard_paths.push(shard_path);
+    }
+    let sup = Supervisor::spawn(specs)?;
+    let budget_label = if opts.cache_kb == 0 {
+        "unbounded".to_string()
+    } else {
+        format!("{} KiB", opts.cache_kb)
+    };
+    println!(
+        "spawned {} shard workers (cache {budget_label}/worker, \
+         readahead {}):",
+        sup.n_workers(),
+        opts.readahead,
+    );
+    for i in 0..sup.n_workers() {
+        let layers: Vec<&str> = map.layers_of(i).collect();
+        println!(
+            "worker {i}: pid {}, layers [{}], socket {}",
+            sup.worker_pid(i)
+                .map(|p| p.to_string())
+                .unwrap_or_else(|| "?".into()),
+            layers.join(","),
+            workdir.join(format!("shard{i}.sock")).display(),
+        );
+    }
+
+    let index = ContainerIndex::parse(&bytes)?;
+    let router =
+        ProcRouter::new(sup.clients().to_vec(), &map, &index)?
+            .with_readahead(opts.readahead)
+            .with_supervisor(sup.clone());
+    // Keep a handle on the router-local GEMV telemetry: the router
+    // itself moves behind the server.
+    let local_costs = router.costs().clone();
+    let clients: Vec<_> = sup.clients().to_vec();
+    let server = InferenceServer::start(
+        ServerConfig {
+            max_batch: opts.max_batch,
+            ..Default::default()
+        },
+        move || Box::new(router),
+    );
+    run_load(&server, opts.requests, opts.width, opts.seed)?;
+    server.shutdown();
+
+    // Aggregate worker metrics over the wire — the counters a
+    // single-process serve prints, now gathered across processes.
+    let mut total = StoreMetrics::default();
+    for (i, client) in clients.iter().enumerate() {
+        match client.metrics() {
+            Ok(m) => {
+                print_store_metrics(&format!("worker {i}"), &m);
+                total.merge(&m);
+            }
+            Err(e) => println!("worker {i}: metrics unavailable ({e})"),
+        }
+    }
+    print_store_metrics("all workers", &total);
+    println!("supervisor: {} worker restarts", sup.restarts());
+
+    // The profile merge is teardown reporting, like the metrics loop
+    // above: a worker that died *after* serving completed must not
+    // turn a successful serve into a nonzero exit (or skip the
+    // workdir cleanup below) — degrade per-worker instead.
+    let profile = match ProcRouter::merged_profile(
+        &clients,
+        &local_costs,
+    ) {
+        Ok(profile) => Some(profile),
+        Err(e) => {
+            println!("cost profile unavailable ({e:#})");
+            None
+        }
+    };
+    if let Some(profile) = &profile {
+        if opts.show_timing {
+            print_cost_table("all workers", &profile.entries());
+        }
+        // `--profile-out <path>` exports there; a bare
+        // `--profile-out` targets the container's auto-loaded
+        // sidecar — but never inside an ephemeral workdir (it is
+        // deleted on exit, which would silently discard the profile
+        // right after advertising its path). Without `--workdir`,
+        // the bare flag falls back to the cwd sidecar of the default
+        // `f2f compress` output.
+        let profile_out = if !opts.profile_out_explicit.is_empty() {
+            opts.profile_out_explicit.clone()
+        } else if opts.profile_out_requested && !ephemeral {
+            cost_sidecar_path(&model_path).display().to_string()
+        } else if opts.profile_out_requested {
+            cost_sidecar_path(std::path::Path::new("model.f2f"))
+                .display()
+                .to_string()
+        } else {
+            String::new()
+        };
+        if !profile_out.is_empty() {
+            match std::fs::write(&profile_out, profile.to_json()) {
+                Ok(()) => println!(
+                    "wrote {profile_out} ({} layers) — feed it to \
+                     `f2f rebalance --profile {profile_out}`",
+                    profile.len()
+                ),
+                Err(e) => println!(
+                    "could not write {profile_out}: {e}"
+                ),
+            }
+        }
+    }
+    // Per-shard sidecars: a worker respawned over these files (this
+    // run or the next, in a kept workdir) opens with a warm planner.
+    for (i, (client, shard_path)) in
+        clients.iter().zip(&shard_paths).enumerate()
+    {
+        if let Ok(p) = client.cost_profile() {
+            let sidecar = cost_sidecar_path(shard_path);
+            if std::fs::write(&sidecar, p.to_json()).is_ok()
+                && !ephemeral
+            {
+                println!(
+                    "wrote {} (warm planner for worker {i} restarts)",
+                    sidecar.display()
+                );
+            }
+        }
+    }
+    sup.shutdown();
+    if ephemeral {
+        let _ = std::fs::remove_dir_all(&workdir);
+    } else {
+        println!(
+            "kept workdir {} (shards + map + cost sidecars)",
+            workdir.display()
+        );
     }
     Ok(())
 }

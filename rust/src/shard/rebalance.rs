@@ -232,9 +232,18 @@ pub fn rebalance_map(
 /// Minimal JSON reader for the flat profile shape (serde is
 /// unavailable offline, and [`JsonReport`] is write-only). Supports
 /// objects, strings and numbers — exactly what the profile needs —
-/// and rejects everything else cleanly.
+/// and rejects everything else cleanly: unknown tokens (`NaN`,
+/// `Infinity`, arrays), numbers that overflow to non-finite values,
+/// duplicate keys inside any object, and nesting past a fixed depth
+/// cap (the recursive-descent parser must error, not exhaust the
+/// stack, on `{"a":{"a":{…` bombs).
 mod json {
     use anyhow::{bail, Result};
+
+    /// Nesting bound: the profile shape is 3 levels deep; anything
+    /// past this is hostile input, rejected before recursion can
+    /// threaten the stack.
+    pub const MAX_DEPTH: usize = 16;
 
     #[derive(Debug)]
     pub enum Value {
@@ -245,7 +254,7 @@ mod json {
     }
 
     pub fn parse(s: &str) -> Result<Value> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -258,6 +267,7 @@ mod json {
     struct Parser<'a> {
         b: &'a [u8],
         i: usize,
+        depth: usize,
     }
 
     impl Parser<'_> {
@@ -305,16 +315,33 @@ mod json {
         }
 
         fn object(&mut self) -> Result<Value> {
+            if self.depth >= MAX_DEPTH {
+                bail!(
+                    "JSON nested deeper than {MAX_DEPTH} levels \
+                     (offset {})",
+                    self.i
+                );
+            }
+            self.depth += 1;
+            let fields = self.object_fields();
+            self.depth -= 1;
+            fields.map(Value::Object)
+        }
+
+        fn object_fields(&mut self) -> Result<Vec<(String, Value)>> {
             self.expect(b'{')?;
-            let mut fields = Vec::new();
+            let mut fields: Vec<(String, Value)> = Vec::new();
             self.ws();
             if self.peek() == Some(b'}') {
                 self.i += 1;
-                return Ok(Value::Object(fields));
+                return Ok(fields);
             }
             loop {
                 self.ws();
                 let key = self.string()?;
+                if fields.iter().any(|(k, _)| *k == key) {
+                    bail!("duplicate JSON key {key:?}");
+                }
                 self.ws();
                 self.expect(b':')?;
                 self.ws();
@@ -325,7 +352,7 @@ mod json {
                     Some(b',') => self.i += 1,
                     Some(b'}') => {
                         self.i += 1;
-                        return Ok(Value::Object(fields));
+                        return Ok(fields);
                     }
                     other => bail!(
                         "expected ',' or '}}' at offset {} ({:?})",
@@ -408,9 +435,16 @@ mod json {
             }
             let text = std::str::from_utf8(&self.b[start..self.i])
                 .expect("ascii slice");
-            text.parse::<f64>().map(Value::Number).map_err(|_| {
-                anyhow::anyhow!("bad JSON number {text:?}")
-            })
+            let v: f64 = text
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad JSON number {text:?}"))?;
+            // `1e999` parses to infinity in Rust; a profile carrying
+            // it would poison every downstream cost comparison, so
+            // non-finite numbers are rejected at the gate.
+            if !v.is_finite() {
+                bail!("non-finite JSON number {text:?}");
+            }
+            Ok(Value::Number(v))
         }
     }
 }
@@ -487,6 +521,88 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ok.get("a").unwrap().decode_ns, 5.0);
+    }
+
+    #[test]
+    fn adversarial_json_errors_and_never_panics() {
+        // Truncated objects at every prefix of a valid profile.
+        let mut p = CostProfile::new();
+        p.record("fc0", cost(10.0));
+        let valid = p.to_json();
+        for cut in 0..valid.len() {
+            if !valid.is_char_boundary(cut) {
+                continue;
+            }
+            let _ = CostProfile::parse_json(&valid[..cut]);
+        }
+        assert!(
+            CostProfile::parse_json(&valid).is_ok(),
+            "the uncut profile still parses"
+        );
+
+        // NaN / Infinity tokens, and numbers that overflow to
+        // non-finite values.
+        for bad in [
+            "{\"cases\": {\"a\": {\"decode_ns\": NaN}}}",
+            "{\"cases\": {\"a\": {\"decode_ns\": Infinity}}}",
+            "{\"cases\": {\"a\": {\"decode_ns\": -Infinity}}}",
+            "{\"cases\": {\"a\": {\"decode_ns\": 1e999}}}",
+            "{\"cases\": {\"a\": {\"decode_ns\": -1e999}}}",
+        ] {
+            let err = CostProfile::parse_json(bad).unwrap_err();
+            let msg = format!("{err}");
+            assert!(
+                msg.contains("JSON") || msg.contains("number"),
+                "{bad:?}: {msg}"
+            );
+        }
+
+        // Duplicate keys at every object level are rejected.
+        for dup in [
+            "{\"cases\": {}, \"cases\": {}}",
+            "{\"cases\": {\"a\": {\"decode_ns\": 1}, \
+              \"a\": {\"decode_ns\": 2}}}",
+            "{\"cases\": {\"a\": {\"decode_ns\": 1, \
+              \"decode_ns\": 2}}}",
+        ] {
+            let err = CostProfile::parse_json(dup).unwrap_err();
+            assert!(
+                format!("{err}").contains("duplicate"),
+                "{dup:?}: {err}"
+            );
+        }
+
+        // A nesting bomb must error at the depth cap, not exhaust
+        // the parser's stack.
+        let mut bomb = String::new();
+        for _ in 0..10_000 {
+            bomb.push_str("{\"a\":");
+        }
+        bomb.push('1');
+        for _ in 0..10_000 {
+            bomb.push('}');
+        }
+        let err = CostProfile::parse_json(&bomb).unwrap_err();
+        assert!(
+            format!("{err}").contains("nested deeper"),
+            "{err}"
+        );
+
+        // Byte-flip fuzz over a valid profile: parse or reject,
+        // never panic.
+        let bytes = valid.as_bytes();
+        for pos in 0..bytes.len() {
+            for val in [b' ', b'"', b'{', b'}', b'0', b'\xff'] {
+                if bytes[pos] == val {
+                    continue;
+                }
+                let mut corrupt = bytes.to_vec();
+                corrupt[pos] = val;
+                if let Ok(s) = String::from_utf8(corrupt) {
+                    let _ = CostProfile::parse_json(&s);
+                }
+            }
+        }
     }
 
     #[test]

@@ -49,13 +49,19 @@ mod timing;
 
 pub use backend::ModelBackend;
 pub(crate) use backend::{forward_chain, validate_chain};
-pub use model_store::{ModelStore, PinnedLayer, StoreConfig, StoreMetrics};
+pub use model_store::{
+    cost_sidecar_path, ModelStore, PinnedLayer, StoreConfig,
+    StoreMetrics,
+};
+pub(crate) use readahead::wrapped_targets;
 pub use pool::{DecodeHandle, DecodeOutcome, DecodePool, DecodeService};
 pub use readahead::{
     ReadaheadCandidate, ReadaheadPolicy, DEFAULT_AUTO_MAX_DEPTH,
 };
 pub use source::RecordSource;
-pub use timing::{LayerCost, LayerCosts, DEFAULT_EWMA_ALPHA};
+pub use timing::{
+    LayerCost, LayerCosts, DEFAULT_EWMA_ALPHA, MAX_COST_SAMPLES,
+};
 
 /// Build a small compressed INT8 layer chain (`dims[i+1] × dims[i]`,
 /// named `fc0..`) — shared scaffolding for the store unit tests, a thin

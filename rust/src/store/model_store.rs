@@ -43,8 +43,20 @@ use crate::container::{
 use crate::sparse::DecodedLayer;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Path of the cost-profile sidecar auto-loaded next to a container:
+/// `<container>.costs.json`. Written by `f2f serve --profile-out`
+/// (which defaults to this path) and read back by
+/// [`ModelStore::open_path`], so a restarted store — or a spawned
+/// shard worker — starts with a warm readahead planner instead of the
+/// depth-1 fallback.
+pub fn cost_sidecar_path(container: &Path) -> PathBuf {
+    let mut os = container.as_os_str().to_os_string();
+    os.push(".costs.json");
+    PathBuf::from(os)
+}
 
 /// Store knobs.
 #[derive(Debug, Clone, Copy)]
@@ -404,14 +416,47 @@ impl ModelStore {
     /// actually decodes are ever paged in — the natural fit for one
     /// shard of a split model. Without the feature the file is read
     /// eagerly; behavior is identical either way.
+    ///
+    /// If a `<container>.costs.json` sidecar sits next to the file
+    /// (see [`cost_sidecar_path`]), the cost table is pre-warmed from
+    /// it, so the `Auto` readahead planner survives restarts — and
+    /// respawned shard workers come up planning instead of falling
+    /// back to depth 1.
     pub fn open_path(
         path: impl AsRef<Path>,
         config: StoreConfig,
     ) -> Result<Self> {
-        Self::open_record_source(
+        let store = Self::open_record_source(
             RecordSource::open(path.as_ref())?,
             config,
-        )
+        )?;
+        store.load_cost_sidecar(&cost_sidecar_path(path.as_ref()));
+        Ok(store)
+    }
+
+    /// Best-effort sidecar seed: only layers this store actually holds
+    /// are warmed (a model-wide profile next to a shard file seeds
+    /// just that shard's entries, so merged views never double-count
+    /// foreign layers). A missing sidecar is the normal case; a
+    /// malformed one is reported to stderr and ignored — a stale
+    /// profile must never stop a store from opening.
+    fn load_cost_sidecar(&self, sidecar: &Path) {
+        let Ok(json) = std::fs::read_to_string(sidecar) else {
+            return;
+        };
+        match crate::shard::CostProfile::parse_json(&json) {
+            Ok(profile) => {
+                for (name, cost) in profile.entries() {
+                    if self.layer_decoded_bytes(&name).is_some() {
+                        self.inner.costs.seed(&name, cost);
+                    }
+                }
+            }
+            Err(e) => eprintln!(
+                "warning: ignoring malformed cost sidecar {}: {e:#}",
+                sidecar.display()
+            ),
+        }
     }
 
     fn open_record_source(
@@ -1087,6 +1132,68 @@ mod tests {
         // A cache hit records no new decode sample.
         store.get("fc0").unwrap();
         assert_eq!(store.costs().get("fc0").unwrap().decode_samples, 1);
+    }
+
+    #[test]
+    fn open_path_auto_loads_the_cost_sidecar() {
+        // A profile saved next to the container warms the planner on
+        // reopen — but only for layers this store actually holds, so
+        // a model-wide profile next to a *shard* file seeds just that
+        // shard's entries.
+        let c = model(&[16, 12, 8], 39);
+        let path = std::env::temp_dir().join(format!(
+            "f2f-store-sidecar-{}.f2f",
+            std::process::id()
+        ));
+        std::fs::write(&path, write_container_v2(&c)).unwrap();
+        let sidecar = cost_sidecar_path(&path);
+        assert_eq!(
+            sidecar.file_name().unwrap().to_str().unwrap(),
+            format!(
+                "f2f-store-sidecar-{}.f2f.costs.json",
+                std::process::id()
+            )
+        );
+        let mut profile = crate::shard::CostProfile::new();
+        profile.record(
+            "fc0",
+            LayerCost {
+                decode_ns: 420.0,
+                decode_samples: 3,
+                ..Default::default()
+            },
+        );
+        profile.record(
+            "not-in-this-store",
+            LayerCost {
+                decode_ns: 1.0,
+                decode_samples: 1,
+                ..Default::default()
+            },
+        );
+        std::fs::write(&sidecar, profile.to_json()).unwrap();
+        let store =
+            ModelStore::open_path(&path, StoreConfig::default()).unwrap();
+        assert_eq!(
+            store.costs().get("fc0").unwrap().decode_estimate(),
+            Some(420.0),
+            "sidecar must pre-warm the planner"
+        );
+        assert!(
+            store.costs().get("not-in-this-store").is_none(),
+            "foreign layers are never seeded"
+        );
+        assert_eq!(store.metrics().decode_ns_total, 0);
+
+        // A corrupt sidecar is ignored — opening must still succeed.
+        std::fs::write(&sidecar, b"{definitely not json").unwrap();
+        let store =
+            ModelStore::open_path(&path, StoreConfig::default()).unwrap();
+        assert!(store.costs().get("fc0").is_none());
+        assert!(store.get("fc0").is_ok());
+
+        let _ = std::fs::remove_file(&sidecar);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

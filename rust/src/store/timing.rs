@@ -36,6 +36,17 @@ use std::time::Duration;
 /// a single noisy one.
 pub const DEFAULT_EWMA_ALPHA: f64 = 0.25;
 
+/// Cap on the sample counts carried in a [`LayerCost`]. The EWMA
+/// estimates themselves already decay (every new sample carries
+/// `alpha` weight, so a one-off contention spike fades geometrically),
+/// but the *counts* used for sample-weighted [`LayerCost::merge`] used
+/// to grow without bound — a long-lived table, or a seeded profile
+/// carrying a spike, would dominate every future merge no matter how
+/// stale its observations were, steering `ReadaheadPolicy::Auto`
+/// forever. Counts now saturate here, bounding any one side's merge
+/// weight while leaving warm/unwarmed detection intact.
+pub const MAX_COST_SAMPLES: u64 = 64;
+
 /// Observed cost of one layer: EWMA nanoseconds per decode
 /// (submit→install) and per single GEMV, with sample counts (an
 /// estimate with zero samples is *unwarmed*, not free).
@@ -63,10 +74,16 @@ impl LayerCost {
     }
 
     /// Fold another observation set into this one, sample-weighted —
-    /// how per-shard tables merge into one model-wide view.
+    /// how per-shard tables merge into one model-wide view. Each
+    /// side's weight (and the resulting count) is capped at
+    /// [`MAX_COST_SAMPLES`], so no history — however long, however
+    /// stale — can outvote fresh observations indefinitely.
     pub fn merge(&mut self, other: &LayerCost) {
         fn blend(a: f64, an: u64, b: f64, bn: u64) -> f64 {
-            let (an, bn) = (an as f64, bn as f64);
+            let (an, bn) = (
+                an.min(MAX_COST_SAMPLES) as f64,
+                bn.min(MAX_COST_SAMPLES) as f64,
+            );
             if an + bn == 0.0 {
                 0.0
             } else {
@@ -85,8 +102,14 @@ impl LayerCost {
             other.gemv_ns,
             other.gemv_samples,
         );
-        self.decode_samples += other.decode_samples;
-        self.gemv_samples += other.gemv_samples;
+        self.decode_samples = self
+            .decode_samples
+            .saturating_add(other.decode_samples)
+            .min(MAX_COST_SAMPLES);
+        self.gemv_samples = self
+            .gemv_samples
+            .saturating_add(other.gemv_samples)
+            .min(MAX_COST_SAMPLES);
     }
 }
 
@@ -136,7 +159,8 @@ impl LayerCosts {
             let mut t = self.table.lock().unwrap();
             let e = t.entry(name.to_string()).or_default();
             e.decode_ns = self.ewma(e.decode_ns, e.decode_samples, ns as f64);
-            e.decode_samples += 1;
+            e.decode_samples =
+                (e.decode_samples + 1).min(MAX_COST_SAMPLES);
         }
         self.decode_ns_total.fetch_add(ns, Ordering::Relaxed);
     }
@@ -154,7 +178,7 @@ impl LayerCosts {
             let mut t = self.table.lock().unwrap();
             let e = t.entry(name.to_string()).or_default();
             e.gemv_ns = self.ewma(e.gemv_ns, e.gemv_samples, per_item);
-            e.gemv_samples += 1;
+            e.gemv_samples = (e.gemv_samples + 1).min(MAX_COST_SAMPLES);
         }
         self.gemv_ns_total.fetch_add(ns, Ordering::Relaxed);
     }
@@ -290,6 +314,66 @@ mod tests {
             "seeded layers start warm"
         );
         assert_eq!(costs.decode_ns_total(), 30, "seeding never inflates totals");
+    }
+
+    #[test]
+    fn contention_spike_decays_below_the_planning_threshold() {
+        // A one-off spike (cache contention, CPU steal) must not
+        // steer the Auto planner forever: with the default alpha the
+        // estimate re-centers geometrically, dropping below twice the
+        // baseline within a bounded number of normal observations.
+        let costs = LayerCosts::new(); // DEFAULT_EWMA_ALPHA
+        let baseline = Duration::from_nanos(1_000);
+        for _ in 0..4 {
+            costs.record_decode("fc0", baseline);
+        }
+        costs.record_decode("fc0", Duration::from_nanos(1_000_000));
+        let spiked =
+            costs.get("fc0").unwrap().decode_estimate().unwrap();
+        assert!(spiked > 200_000.0, "spike visible at first: {spiked}");
+        let mut recovered_after = None;
+        for n in 1..=24 {
+            costs.record_decode("fc0", baseline);
+            let est =
+                costs.get("fc0").unwrap().decode_estimate().unwrap();
+            if est < 2_000.0 {
+                recovered_after = Some(n);
+                break;
+            }
+        }
+        let n = recovered_after
+            .expect("spike must decay below 2x baseline within 24 obs");
+        assert!(n <= 24, "recovered after {n} observations");
+    }
+
+    #[test]
+    fn sample_counts_saturate_and_cap_merge_weight() {
+        // Recording past the cap keeps counting at the cap…
+        let costs = LayerCosts::with_alpha(0.5);
+        for _ in 0..(MAX_COST_SAMPLES + 16) {
+            costs.record_decode("fc0", Duration::from_nanos(100));
+        }
+        assert_eq!(
+            costs.get("fc0").unwrap().decode_samples,
+            MAX_COST_SAMPLES
+        );
+        // …and a merge can never be outvoted by an inflated history:
+        // a (possibly hand-written) profile claiming 10× the cap still
+        // weighs in at the cap, so fresh observations keep half the
+        // vote instead of 1/11th.
+        let mut stale = LayerCost {
+            decode_ns: 1_000_000.0,
+            decode_samples: MAX_COST_SAMPLES * 10,
+            ..Default::default()
+        };
+        let fresh = LayerCost {
+            decode_ns: 1_000.0,
+            decode_samples: MAX_COST_SAMPLES,
+            ..Default::default()
+        };
+        stale.merge(&fresh);
+        assert_eq!(stale.decode_ns, (1_000_000.0 + 1_000.0) / 2.0);
+        assert_eq!(stale.decode_samples, MAX_COST_SAMPLES);
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! Multi-process sharded serving end to end: real `f2f shard-worker`
+//! child processes (spawned from the test binary's `CARGO_BIN_EXE_f2f`)
+//! behind a supervisor, routed by a `ProcRouter`. Serving through
+//! 1/2/4 worker processes must be bit-exact vs the single-store
+//! `ModelBackend` *and* the in-process `ShardRouter`; a killed worker
+//! must be restarted by the supervisor with its shard assignment
+//! replayed while the serve completes correctly; and corrupt frames on
+//! the wire must produce errors on both sides — never a panic, never a
+//! dead worker.
+#![cfg(unix)]
+
+use f2f::container::{split_container, write_container_v2, ContainerIndex, ShardAssignment};
+use f2f::coordinator::Backend;
+use f2f::ipc::{wire, IpcShardStore, ProcRouter, Supervisor, WorkerSpec};
+use f2f::models::{compressed_mlp, MlpConfig};
+use f2f::shard::ShardRouter;
+use f2f::store::{cost_sidecar_path, ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Widths of the synthetic MLP: 4 layers of distinct sizes so
+/// by-bytes balancing is non-trivial.
+const DIMS: [usize; 5] = [32, 24, 16, 12, 8];
+
+fn model_bytes(seed: u64) -> Vec<u8> {
+    let (c, _) = compressed_mlp(&MlpConfig {
+        seed,
+        sparsity: 0.75,
+        ..MlpConfig::new(&DIMS)
+    });
+    write_container_v2(&c)
+}
+
+fn probes(n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            (0..DIMS[0])
+                .map(|j| ((i * j) as f32 * 0.1).sin())
+                .collect()
+        })
+        .collect()
+}
+
+fn single_store_outputs(bytes: &[u8], xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let store = Arc::new(
+        ModelStore::open_bytes(bytes.to_vec(), StoreConfig::default())
+            .unwrap(),
+    );
+    ModelBackend::sequential(store)
+        .unwrap()
+        .forward_batch(xs)
+        .unwrap()
+}
+
+/// A spawned multi-process deployment: shard files + sockets in a
+/// private temp dir, workers supervised, cleaned up on drop.
+struct Deployment {
+    dir: PathBuf,
+    map: f2f::container::ShardMap,
+    index: ContainerIndex,
+    sup: Arc<Supervisor>,
+}
+
+impl Deployment {
+    fn spawn(tag: &str, bytes: &[u8], n_workers: usize) -> Deployment {
+        let dir = std::env::temp_dir().join(format!(
+            "f2f-ipc-test-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (map, shard_bytes) =
+            split_container(bytes, n_workers, ShardAssignment::ByBytes)
+                .unwrap();
+        let binary = PathBuf::from(env!("CARGO_BIN_EXE_f2f"));
+        let mut specs = Vec::new();
+        for (i, b) in shard_bytes.iter().enumerate() {
+            let shard_path = dir.join(format!("shard{i}.f2f"));
+            std::fs::write(&shard_path, b).unwrap();
+            specs.push(WorkerSpec::new(
+                &binary,
+                shard_path,
+                dir.join(format!("shard{i}.sock")),
+            ));
+        }
+        let sup = Supervisor::spawn(specs).expect("spawn workers");
+        let index = ContainerIndex::parse(bytes).unwrap();
+        Deployment { dir, map, index, sup }
+    }
+
+    fn router(&self) -> ProcRouter {
+        ProcRouter::new(
+            self.sup.clients().to_vec(),
+            &self.map,
+            &self.index,
+        )
+        .unwrap()
+        .with_supervisor(self.sup.clone())
+        .with_readahead(ReadaheadPolicy::layers(1))
+    }
+}
+
+impl Drop for Deployment {
+    fn drop(&mut self) {
+        self.sup.shutdown();
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+#[test]
+fn multiproc_serving_is_bit_exact_for_1_2_4_workers() {
+    let bytes = model_bytes(80);
+    let xs = probes(5);
+    let want = single_store_outputs(&bytes, &xs);
+    for n_workers in [1usize, 2, 4] {
+        let dep = Deployment::spawn(
+            &format!("bitexact{n_workers}"),
+            &bytes,
+            n_workers,
+        );
+        // Cross-check against the in-process shard router over the
+        // *same* partition: three serving tiers, one answer.
+        let shard_bytes =
+            f2f::container::split_with_map(&bytes, &dep.map).unwrap();
+        let mut inproc = ShardRouter::from_bytes(
+            &dep.map.to_bytes(),
+            shard_bytes,
+            StoreConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            inproc.forward_batch(&xs).unwrap(),
+            want,
+            "{n_workers}: in-process router diverged from the single \
+             store"
+        );
+
+        let mut router = dep.router();
+        assert_eq!(router.input_dim(), DIMS[0]);
+        assert_eq!(router.output_dim(), *DIMS.last().unwrap());
+        let got = router.forward_batch(&xs).unwrap();
+        assert_eq!(
+            got, want,
+            "{n_workers} worker processes must serve outputs \
+             bit-identical to the single store"
+        );
+
+        // Metrics aggregate over the wire: every layer decoded
+        // exactly once across all workers (readahead dedups).
+        let m = router.metrics().unwrap();
+        assert_eq!(m.per_shard.len(), n_workers);
+        assert_eq!(m.total.decodes, DIMS.len() as u64 - 1);
+        assert_eq!(m.total.redundant_decodes, 0);
+        // The merged cost profile covers the whole chain: decode
+        // observed worker-side, GEMV router-side.
+        for (name, cost) in &m.costs {
+            assert!(cost.decode_samples > 0, "{name}");
+            assert!(cost.gemv_samples > 0, "{name}");
+        }
+        assert_eq!(m.costs.len(), DIMS.len() - 1);
+    }
+}
+
+#[test]
+fn killed_worker_is_restarted_and_the_serve_completes() {
+    let bytes = model_bytes(81);
+    let xs = probes(4);
+    let want = single_store_outputs(&bytes, &xs);
+    let dep = Deployment::spawn("restart", &bytes, 2);
+    let mut router = dep.router();
+    assert_eq!(router.forward_batch(&xs).unwrap(), want, "healthy pass");
+    assert_eq!(dep.sup.restarts(), 0);
+    let pid_before = dep.sup.worker_pid(0).expect("worker 0 alive");
+
+    // Kill worker 0 outright (SIGKILL, no cleanup) — the next pass
+    // must transparently revive it with the same shard assignment and
+    // still produce bit-exact outputs.
+    dep.sup.kill_worker(0).unwrap();
+    assert_eq!(
+        router.forward_batch(&xs).unwrap(),
+        want,
+        "serve must complete correctly across a worker restart"
+    );
+    assert!(dep.sup.restarts() >= 1, "supervisor must have restarted");
+    let pid_after = dep.sup.worker_pid(0).expect("worker 0 respawned");
+    assert_ne!(pid_before, pid_after, "a fresh process took over");
+
+    // The replayed assignment serves worker 0's own layers and still
+    // rejects foreign ones remotely (alive, not just reachable).
+    let shard0_layer = dep.map.layers_of(0).next().unwrap().to_string();
+    let client = &dep.sup.clients()[0];
+    assert!(client.fetch(&shard0_layer).is_ok());
+    let foreign = dep.map.layers_of(1).next().unwrap().to_string();
+    let err = client.fetch(&foreign).unwrap_err();
+    assert!(!err.is_transport(), "foreign layer is a remote error");
+
+    // And a second kill during ongoing traffic also recovers.
+    dep.sup.kill_worker(1).unwrap();
+    assert_eq!(router.forward_batch(&xs).unwrap(), want);
+    assert!(dep.sup.restarts() >= 2);
+}
+
+#[test]
+fn worker_restart_warms_from_the_cost_sidecar() {
+    // The cost-model lifecycle across processes: a sidecar written
+    // next to the shard file pre-warms the respawned worker's table,
+    // so its profile reports decode estimates before any traffic.
+    let bytes = model_bytes(82);
+    let dep = Deployment::spawn("sidecar", &bytes, 2);
+    let shard0_layer = dep.map.layers_of(0).next().unwrap().to_string();
+    let mut profile = f2f::shard::CostProfile::new();
+    profile.record(
+        &shard0_layer,
+        f2f::store::LayerCost {
+            decode_ns: 12_345.0,
+            decode_samples: 4,
+            ..Default::default()
+        },
+    );
+    std::fs::write(
+        cost_sidecar_path(&dep.dir.join("shard0.f2f")),
+        profile.to_json(),
+    )
+    .unwrap();
+    dep.sup.kill_worker(0).unwrap();
+    dep.sup.revive(0).unwrap();
+    let warmed = dep.sup.clients()[0].cost_profile().unwrap();
+    assert_eq!(
+        warmed.get(&shard0_layer).map(|c| c.decode_ns),
+        Some(12_345.0),
+        "respawned worker must auto-load the shard's cost sidecar"
+    );
+}
+
+#[test]
+fn corrupt_frames_error_on_both_sides_and_never_kill_the_worker() {
+    let bytes = model_bytes(83);
+    let dep = Deployment::spawn("fuzz", &bytes, 1);
+    let socket = dep.sup.clients()[0].socket_path().to_path_buf();
+    let first_layer = dep.map.layers_of(0).next().unwrap().to_string();
+
+    // Raw garbage on a fresh connection: the worker answers with an
+    // error frame (or closes) and keeps serving.
+    for garbage in [
+        b"not a frame at all............".as_slice(),
+        &[0xFFu8; 64],
+        &[0x00u8; 11], // zeroed header: bad magic
+    ] {
+        let mut stream = UnixStream::connect(&socket).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        use std::io::Write;
+        stream.write_all(garbage).unwrap();
+        let _ = wire::read_response(&mut stream); // err frame or EOF
+        drop(stream);
+        let client = IpcShardStore::connect(&socket);
+        assert!(
+            client.fetch(&first_layer).is_ok(),
+            "worker must survive garbage frames"
+        );
+    }
+
+    // A well-formed header with an unknown kind: an error frame, and
+    // the *same* worker still serves afterwards.
+    let mut stream = UnixStream::connect(&socket).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    wire::write_frame(&mut stream, 0x42, b"mystery").unwrap();
+    match wire::read_response(&mut stream) {
+        Ok(wire::Response::Err { .. }) | Err(_) => {}
+        Ok(other) => panic!("expected an error frame, got {other:?}"),
+    }
+    let client = IpcShardStore::connect(&socket);
+    assert!(client.ping(), "worker alive after unknown request kind");
+
+    // Truncated-frame fuzz against the pure decoders (no socket):
+    // every prefix of every message must error, never panic.
+    let mut frame = Vec::new();
+    wire::send_request(
+        &mut frame,
+        &wire::Request::Fetch { layer: first_layer },
+    )
+    .unwrap();
+    for cut in 0..frame.len() {
+        let _ =
+            wire::read_request(&mut std::io::Cursor::new(&frame[..cut]));
+    }
+}
+
+#[test]
+fn multiproc_serves_behind_the_inference_server() {
+    // The full production shape: supervisor + ProcRouter behind the
+    // batching InferenceServer, mixed traffic, bit-exact replies.
+    use f2f::coordinator::{InferenceServer, ServerConfig};
+    let bytes = model_bytes(84);
+    let xs = probes(8);
+    let want = single_store_outputs(&bytes, &xs);
+    let dep = Deployment::spawn("server", &bytes, 2);
+    let router = dep.router();
+    let server = InferenceServer::start(
+        ServerConfig {
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        },
+        move || Box::new(router),
+    );
+    for (i, x) in xs.into_iter().enumerate() {
+        assert_eq!(
+            server.infer(x).unwrap(),
+            want[i],
+            "request {i} diverged"
+        );
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, 8);
+    assert_eq!(m.errors, 0);
+    server.shutdown();
+}
+
+#[test]
+fn supervisor_shutdown_stops_workers_and_removes_sockets() {
+    let bytes = model_bytes(85);
+    let dep = Deployment::spawn("shutdown", &bytes, 2);
+    let sockets: Vec<PathBuf> = dep
+        .sup
+        .clients()
+        .iter()
+        .map(|c| c.socket_path().to_path_buf())
+        .collect();
+    for s in &sockets {
+        assert!(s.exists(), "socket {} up before shutdown", s.display());
+    }
+    dep.sup.shutdown();
+    for s in &sockets {
+        assert!(!s.exists(), "socket {} removed", s.display());
+    }
+    // Clients degrade to transport errors once the tier is down.
+    assert!(!dep.sup.clients()[0].ping());
+}
