@@ -298,6 +298,21 @@ fn main() -> Result<()> {
         sm.redundant_decodes, 0,
         "in-flight dedup: a get and a readahead never double-decode"
     );
+    // The observability layer watched the whole run: a span per
+    // queue/batch/decode/GEMV phase (export with `f2f serve
+    // --trace-out`), mergeable histograms behind the percentiles
+    // printed above (`--metrics-out` writes the full registry).
+    let spans = f2f::obs::snapshot();
+    if f2f::obs::enabled() {
+        assert!(!spans.is_empty(), "serving must leave spans behind");
+    }
+    println!(
+        "observability: {} spans recorded, {} request latencies in \
+         the histogram (p99 {:?})",
+        spans.len(),
+        m.latency.count(),
+        m.latency.percentile(0.99),
+    );
     server.shutdown();
     println!("serve_compressed OK");
     Ok(())

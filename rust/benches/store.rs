@@ -5,8 +5,10 @@
 //! `auto` readahead planner against the fixed depth-1 pipeline (with
 //! the per-layer decode/GEMV telemetry it plans from), and the sharded
 //! cold serve (the same model behind 1/2/4 stores through a
-//! `ShardRouter`). Emits machine-readable `BENCH_store.json` next to
-//! the human output to keep the perf trajectory moving.
+//! `ShardRouter`), and the span-recording overhead of the `obs` layer
+//! on the warm path (runtime kill switch on vs off, `obs_overhead_pct`,
+//! target <3%). Emits machine-readable `BENCH_store.json` next to the
+//! human output to keep the perf trajectory moving.
 
 use f2f::bench_util::{bench_with_result, black_box, timed_pass, JsonReport};
 use f2f::container::{
@@ -359,6 +361,38 @@ fn main() {
         m.hits,
         m.misses,
         cold.mean.as_secs_f64() / warm.mean.as_secs_f64()
+    );
+
+    // --- observability overhead: runtime kill switch on vs off ---
+    // The warm serve above ran with span recording on (the default);
+    // the same backend re-measured with the recorder disabled isolates
+    // what the per-layer spans and cache events cost on the hot path.
+    // Target: <3% mean overhead — the recorder is a fixed ring of
+    // try_lock slots, no allocation, relaxed atomics. (The
+    // compiled-out path is covered by the `--no-default-features` CI
+    // leg; this measures the shipping default.)
+    f2f::obs::set_enabled(false);
+    let warm_obs_off = bench_with_result(
+        "serve warm (span recording disabled)",
+        1,
+        budget,
+        200,
+        || {
+            backend
+                .forward_batch(black_box(std::slice::from_ref(&x)))
+                .expect("serve")
+        },
+    );
+    f2f::obs::set_enabled(true);
+    let obs_overhead_pct = (warm.mean.as_secs_f64()
+        / warm_obs_off.mean.as_secs_f64()
+        - 1.0)
+        * 100.0;
+    json.add("serve_warm_obs_off", &warm_obs_off);
+    json.metric("serve_warm", "obs_overhead_pct", obs_overhead_pct);
+    println!(
+        "  -> span recording overhead {obs_overhead_pct:.2}% on the \
+         warm path (target <3%)"
     );
 
     // --- budgeted serve: eviction-heavy traffic, production policy ---

@@ -62,6 +62,15 @@ impl<T> Batcher<T> {
         })
     }
 
+    /// Age of the oldest pending entry — how long the forming batch
+    /// has been open (`None` when empty). Formation time is wait the
+    /// *policy* chose to spend (size-or-deadline), distinct from the
+    /// queue wait a full pipe imposes; the `batch_form` vs `queue`
+    /// spans in [`crate::obs`] show them apart.
+    pub fn oldest_age(&self) -> Option<Duration> {
+        self.oldest.map(|t| t.elapsed())
+    }
+
     /// Close and return the current batch (None if empty).
     pub fn take(&mut self) -> Option<Vec<T>> {
         self.oldest = None;
@@ -118,5 +127,24 @@ mod tests {
         let mut b: Batcher<u32> = Batcher::new(BatchPolicy::default());
         assert!(b.take().is_none());
         assert!(!b.expired());
+    }
+
+    #[test]
+    fn oldest_age_tracks_the_forming_batch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            timeout: Duration::from_secs(10),
+        });
+        assert!(b.oldest_age().is_none(), "empty batcher has no age");
+        b.push(1);
+        std::thread::sleep(Duration::from_millis(1));
+        let age = b.oldest_age().expect("forming batch has an age");
+        assert!(age >= Duration::from_millis(1));
+        // Later pushes never reset the clock…
+        b.push(2);
+        assert!(b.oldest_age().unwrap() >= age);
+        // …and taking the batch does.
+        b.take();
+        assert!(b.oldest_age().is_none());
     }
 }

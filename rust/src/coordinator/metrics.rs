@@ -1,5 +1,18 @@
-//! Serving metrics: counters + latency reservoir.
+//! Serving metrics: counters + mergeable latency histograms.
+//!
+//! Latencies used to live in a raw sample reservoir, sorted on every
+//! snapshot — O(n log n) per scrape, a hard sample ceiling, and a
+//! subtle tail lie: percentile-by-index returned `Duration::ZERO` for
+//! p99 of a one-sample window. [`crate::obs::HdrLite`] replaces that:
+//! recording is O(1), snapshots are O(buckets), two windows merge
+//! exactly (how per-worker metrics aggregate over the wire), and a
+//! single-sample window reports that sample at every quantile. Two
+//! histograms are kept: per-request end-to-end latency
+//! (enqueue → response) and per-batch execution time — the request /
+//! batch granularities of the `--metrics-out` registry (per-layer
+//! lives in [`crate::store::StoreMetrics`]).
 
+use crate::obs::HdrLite;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -15,14 +28,14 @@ struct Inner {
     batches: u64,
     batched_requests: u64,
     errors: u64,
-    /// Latency samples in µs (bounded reservoir, newest kept).
-    latencies_us: Vec<u64>,
+    /// Per-request end-to-end latency (enqueue → response ready).
+    latency: HdrLite,
+    /// Per-batch forward execution time.
+    batch_time: HdrLite,
 }
 
-const RESERVOIR: usize = 65_536;
-
 /// Point-in-time copy of the metrics.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct MetricsSnapshot {
     pub completed: u64,
     pub batches: u64,
@@ -32,24 +45,29 @@ pub struct MetricsSnapshot {
     pub p95: Duration,
     pub p99: Duration,
     pub max: Duration,
+    /// Full per-request latency histogram (p50/p95/p99/max above are
+    /// its quantiles; keep the histogram to merge or re-quantile).
+    pub latency: HdrLite,
+    /// Per-batch forward execution time histogram.
+    pub batch_time: HdrLite,
 }
 
 impl Metrics {
-    /// Record one executed batch of `n` requests with per-request
-    /// end-to-end latencies.
-    pub fn record_batch(&self, latencies: &[Duration]) {
+    /// Record one executed batch: per-request end-to-end latencies
+    /// plus the batch's forward execution wall time.
+    pub fn record_batch(
+        &self,
+        latencies: &[Duration],
+        batch_time: Duration,
+    ) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.batched_requests += latencies.len() as u64;
         m.completed += latencies.len() as u64;
         for l in latencies {
-            if m.latencies_us.len() >= RESERVOIR {
-                let idx = (m.completed as usize) % RESERVOIR;
-                m.latencies_us[idx] = l.as_micros() as u64;
-            } else {
-                m.latencies_us.push(l.as_micros() as u64);
-            }
+            m.latency.record(*l);
         }
+        m.batch_time.record(batch_time);
     }
 
     /// Record a failed request.
@@ -57,28 +75,20 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
-    /// Snapshot with percentile computation.
+    /// Snapshot with percentile computation (no sort — bucket walk).
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
-        let mut ls = m.latencies_us.clone();
-        ls.sort_unstable();
-        let pick = |q: f64| -> Duration {
-            if ls.is_empty() {
-                Duration::ZERO
-            } else {
-                let idx = ((ls.len() as f64 * q) as usize).min(ls.len() - 1);
-                Duration::from_micros(ls[idx])
-            }
-        };
         MetricsSnapshot {
             completed: m.completed,
             batches: m.batches,
             batched_requests: m.batched_requests,
             errors: m.errors,
-            p50: pick(0.50),
-            p95: pick(0.95),
-            p99: pick(0.99),
-            max: ls.last().copied().map(Duration::from_micros).unwrap_or_default(),
+            p50: m.latency.percentile(0.50),
+            p95: m.latency.percentile(0.95),
+            p99: m.latency.percentile(0.99),
+            max: m.latency.max(),
+            latency: m.latency,
+            batch_time: m.batch_time,
         }
     }
 }
@@ -98,22 +108,29 @@ impl MetricsSnapshot {
 mod tests {
     use super::*;
 
+    fn us(v: u64) -> Duration {
+        Duration::from_micros(v)
+    }
+
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::default();
-        m.record_batch(&[
-            Duration::from_micros(100),
-            Duration::from_micros(200),
-        ]);
-        m.record_batch(&[Duration::from_micros(300)]);
+        m.record_batch(&[us(100), us(200)], us(250));
+        m.record_batch(&[us(300)], us(320));
         m.record_error();
         let s = m.snapshot();
         assert_eq!(s.completed, 3);
         assert_eq!(s.batches, 2);
         assert_eq!(s.errors, 1);
         assert!((s.mean_batch_size() - 1.5).abs() < 1e-12);
-        assert_eq!(s.p50, Duration::from_micros(200));
-        assert_eq!(s.max, Duration::from_micros(300));
+        // Histogram quantiles are bucket-resolution: within 2x of the
+        // true sample, monotone, and exact at the max.
+        assert!(s.p50 >= us(100) && s.p50 <= us(400), "p50={:?}", s.p50);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert_eq!(s.max, us(300));
+        assert_eq!(s.latency.count(), 3);
+        assert_eq!(s.batch_time.count(), 2);
+        assert_eq!(s.batch_time.max(), us(320));
     }
 
     #[test]
@@ -121,5 +138,60 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.p99, Duration::ZERO);
+        assert_eq!(s.max, Duration::ZERO);
+        assert!(s.latency.is_empty());
+    }
+
+    #[test]
+    fn single_sample_window_has_nonzero_tail_percentiles() {
+        // The old sort-by-index path returned ZERO for p99 of one
+        // sample; the histogram reports the sample itself.
+        let m = Metrics::default();
+        m.record_batch(&[us(5_000)], us(5_100));
+        let s = m.snapshot();
+        assert_eq!(s.p50, us(5_000));
+        assert_eq!(s.p95, us(5_000));
+        assert_eq!(s.p99, us(5_000));
+        assert_eq!(s.max, us(5_000));
+    }
+
+    #[test]
+    fn two_sample_window_splits_body_and_tail() {
+        let m = Metrics::default();
+        m.record_batch(&[us(1_000), us(100_000)], us(101_000));
+        let s = m.snapshot();
+        assert!(s.p50 >= us(500) && s.p50 <= us(2_000), "p50={:?}", s.p50);
+        assert_eq!(s.p99, us(100_000), "tail clamps to the exact max");
+        assert_eq!(s.max, us(100_000));
+    }
+
+    #[test]
+    fn skewed_window_keeps_percentiles_in_the_body() {
+        // 99 fast requests + 1 outlier: p50/p99 stay near the body,
+        // max reports the outlier exactly — the tail never hides.
+        let m = Metrics::default();
+        let fast = vec![us(1_000); 99];
+        m.record_batch(&fast, us(99_000));
+        m.record_batch(&[Duration::from_secs(1)], Duration::from_secs(1));
+        let s = m.snapshot();
+        assert!(s.p50 <= us(2_000), "p50={:?}", s.p50);
+        assert!(s.p99 <= us(2_000), "p99 is the 99th of 100: {:?}", s.p99);
+        assert_eq!(s.max, Duration::from_secs(1));
+    }
+
+    #[test]
+    fn snapshots_merge_across_windows() {
+        // Two sinks (e.g. two workers) merge into the same histogram
+        // one sink recording everything would have produced.
+        let a = Metrics::default();
+        let b = Metrics::default();
+        let both = Metrics::default();
+        a.record_batch(&[us(100), us(200)], us(300));
+        b.record_batch(&[us(50_000)], us(50_000));
+        both.record_batch(&[us(100), us(200)], us(300));
+        both.record_batch(&[us(50_000)], us(50_000));
+        let mut merged = a.snapshot().latency;
+        merged.merge(&b.snapshot().latency);
+        assert_eq!(merged, both.snapshot().latency);
     }
 }

@@ -1,6 +1,16 @@
 //! The inference server: one request queue, one batching worker thread.
+//!
+//! Tracing: every accepted request mints a trace id at enqueue
+//! ([`crate::obs::mint_trace`]) and records an `enqueue` instant; at
+//! execution the batch pins its *leader's* (first member's) trace to
+//! the worker thread, so the forward pass — per-layer GEMV, decodes,
+//! IPC fetches, however many hops away — stitches under one trace id.
+//! Per-request `queue` spans and the `batch_form`/`batch` spans carry
+//! each member's own id, so a batched request's wait is attributable
+//! even when the execution spans hang off the leader.
 
 use super::{Backend, BatchPolicy, Batcher, Metrics, MetricsSnapshot};
+use crate::obs;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -30,6 +40,9 @@ impl Default for ServerConfig {
 struct Request {
     x: Vec<f32>,
     enqueued: Instant,
+    /// Trace id minted at enqueue; the batch leader's id is pinned to
+    /// the worker thread for the forward pass.
+    trace: u64,
     resp: Sender<Result<Vec<f32>>>,
 }
 
@@ -104,7 +117,14 @@ impl InferenceServer {
             return resp_rx;
         }
         self.inflight.fetch_add(1, Ordering::Relaxed);
-        let req = Request { x, enqueued: Instant::now(), resp: resp_tx.clone() };
+        let trace = obs::mint_trace();
+        obs::event_for(trace, obs::SpanKind::Enqueue, "");
+        let req = Request {
+            x,
+            enqueued: Instant::now(),
+            trace,
+            resp: resp_tx.clone(),
+        };
         if self.tx.send(req).is_err() {
             let _ = resp_tx.send(Err(anyhow!("server stopped")));
         }
@@ -204,14 +224,39 @@ fn execute(
     metrics: &Metrics,
     inflight: &std::sync::atomic::AtomicUsize,
 ) {
+    let Some(leader) = batch.first().map(|r| r.trace) else {
+        return;
+    };
+    // Dequeue: each member's queue wait, plus the formation span
+    // (oldest member's enqueue → batch closed) under the leader.
+    for r in &batch {
+        obs::span_for(
+            r.trace,
+            obs::SpanKind::Queue,
+            "",
+            r.enqueued.elapsed(),
+        );
+    }
+    let oldest = batch
+        .iter()
+        .map(|r| r.enqueued.elapsed())
+        .max()
+        .unwrap_or_default();
+    obs::span_for(leader, obs::SpanKind::BatchForm, "", oldest);
+    // Pin the leader's trace for the forward pass: per-layer GEMV,
+    // decode and IPC spans recorded below attach to it.
+    let _trace = obs::with_trace(leader);
     let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
+    let started = Instant::now();
     match backend.forward_batch(&xs) {
         Ok(ys) => {
+            let batch_time = started.elapsed();
+            obs::span_for(leader, obs::SpanKind::Batch, "", batch_time);
             // Record metrics *before* releasing responses so a caller
             // that observed its reply always sees itself counted.
             let latencies: Vec<_> =
                 batch.iter().map(|r| r.enqueued.elapsed()).collect();
-            metrics.record_batch(&latencies);
+            metrics.record_batch(&latencies, batch_time);
             for (req, y) in batch.into_iter().zip(ys) {
                 inflight.fetch_sub(1, Ordering::Relaxed);
                 let _ = req.resp.send(Ok(y));

@@ -16,6 +16,7 @@
 //! path.
 
 use super::wire::{self, Request, Response};
+use crate::obs::{self, SpanEvent, SpanKind};
 use crate::shard::CostProfile;
 use crate::sparse::DecodedLayer;
 use crate::store::StoreMetrics;
@@ -143,10 +144,17 @@ impl IpcShardStore {
         *self.conn.lock().unwrap() = None;
     }
 
-    /// Fetch one decoded layer from the worker.
+    /// Fetch one decoded layer from the worker. The caller's trace id
+    /// rides the frame so the worker's decode spans stitch into the
+    /// same timeline; the round trip itself is recorded as an
+    /// `ipc_fetch` span on this side.
     pub fn fetch(&self, layer: &str) -> CallResult<DecodedLayer> {
-        let resp =
-            self.call(&Request::Fetch { layer: layer.to_string() })?;
+        let start = std::time::Instant::now();
+        let resp = self.call(&Request::Fetch {
+            layer: layer.to_string(),
+            trace: obs::current_trace(),
+        })?;
+        obs::span(SpanKind::IpcFetch, layer, start.elapsed());
         wire::layer_from_response(resp)
             .map_err(|e| IpcCallError::Transport(format!("{e:#}")))
     }
@@ -154,9 +162,13 @@ impl IpcShardStore {
     /// Ask the worker to warm a layer asynchronously; returns whether
     /// the readahead was accepted.
     pub fn prefetch(&self, layer: &str) -> CallResult<bool> {
-        match self
-            .call(&Request::Prefetch { layer: layer.to_string() })?
-        {
+        let start = std::time::Instant::now();
+        let resp = self.call(&Request::Prefetch {
+            layer: layer.to_string(),
+            trace: obs::current_trace(),
+        })?;
+        obs::span(SpanKind::IpcPrefetch, layer, start.elapsed());
+        match resp {
             Response::Ack { accepted } => Ok(accepted),
             other => Err(IpcCallError::Transport(format!(
                 "expected an ack, got {other:?}"
@@ -186,6 +198,18 @@ impl IpcShardStore {
             }
             other => Err(IpcCallError::Transport(format!(
                 "expected a cost profile, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Snapshot the worker's span recorder: its pid plus every event
+    /// it currently retains. The trace exporter stitches these into
+    /// the cross-process Chrome trace, one lane per pid.
+    pub fn trace_events(&self) -> CallResult<(u32, Vec<SpanEvent>)> {
+        match self.call(&Request::TraceDump)? {
+            Response::Trace { pid, events } => Ok((pid, events)),
+            other => Err(IpcCallError::Transport(format!(
+                "expected a trace dump, got {other:?}"
             ))),
         }
     }
@@ -268,6 +292,10 @@ mod tests {
         assert!(m.decodes >= 1);
         let profile = client.cost_profile().unwrap();
         assert!(profile.get("fc0").is_some());
+        // The worker runs in-thread here, so its trace dump reports
+        // this very process.
+        let (pid, _events) = client.trace_events().unwrap();
+        assert_eq!(pid, std::process::id());
         client.shutdown().unwrap();
         worker.join().unwrap().unwrap();
         // With the worker gone, calls degrade to transport errors.

@@ -18,7 +18,10 @@
 //! unchanged in multi-process mode. The `Auto` planner runs on those
 //! estimates; per-store budget admission stays worker-side (the
 //! worker's `prefetch_async` is the final gatekeeper, exactly as the
-//! store is for the in-process planner).
+//! store is for the in-process planner). Request traces cross the
+//! boundary too: every `Fetch`/`Prefetch` frame carries the current
+//! trace id ([`crate::obs`]), so a worker's decode spans land in the
+//! same timeline as the router's GEMV and `ipc_fetch` spans.
 //!
 //! Fault handling: a *remote* error (unknown layer, rotten record)
 //! propagates to the batch like any backend error. A *transport*
@@ -30,6 +33,7 @@ use super::client::{IpcCallError, IpcShardStore};
 use super::supervisor::Supervisor;
 use crate::container::{ContainerIndex, ShardMap};
 use crate::coordinator::Backend;
+use crate::obs;
 use crate::shard::{CostProfile, ShardMetrics};
 use crate::store::wrapped_targets;
 use crate::store::{
@@ -302,6 +306,10 @@ impl ProcRouter {
 
 impl Backend for ProcRouter {
     fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        // Callers entering outside a server-minted trace still get a
+        // connected timeline; the id rides every Fetch/Prefetch frame
+        // so worker-side spans stitch into the same trace.
+        let _trace = obs::ensure_trace();
         let mut acts: Vec<Vec<f32>> = xs.to_vec();
         let Some(last) = self.chain.len().checked_sub(1) else {
             return Ok(acts); // empty chain: the constructor rejects this
@@ -312,6 +320,12 @@ impl Backend for ProcRouter {
             // while this layer's GEMVs run here. Declined or failed
             // warms only cost overlap, never correctness.
             let depth = self.planned_depth(i, acts.len());
+            if depth > 0 {
+                obs::event(
+                    obs::SpanKind::ReadaheadPlan,
+                    &self.chain[i].name,
+                );
+            }
             for t in wrapped_targets(i, self.chain.len(), depth) {
                 let target = &self.chain[t];
                 let _ =
@@ -329,9 +343,15 @@ impl Backend for ProcRouter {
                 }
                 *a = y;
             }
+            let gemv_took = gemv_start.elapsed();
+            obs::span(
+                obs::SpanKind::Gemv,
+                &self.chain[i].name,
+                gemv_took,
+            );
             self.costs.record_gemv(
                 &self.chain[i].name,
-                gemv_start.elapsed(),
+                gemv_took,
                 acts.len(),
             );
         }

@@ -21,20 +21,37 @@
 //!
 //! Payload shapes (all little-endian):
 //!
-//! * `Fetch` / `Prefetch` — `u32 name_len | name` (utf-8).
-//! * `Metrics` / `CostProfile` / `Shutdown` — empty.
+//! * `Fetch` / `Prefetch` — `u32 name_len | name` (utf-8), then an
+//!   *optional* trailing `u64 trace_id`: current peers always append
+//!   it (so worker-side spans stitch under the originating request's
+//!   trace), v1 peers don't, and decoders accept both — absent means
+//!   [`crate::obs::TRACE_NONE`]; any other trailing length is
+//!   corruption.
+//! * `Metrics` / `CostProfile` / `TraceDump` / `Shutdown` — empty.
 //! * `Layer` — `u64 rows | u64 cols | rows·cols × f32` (the decoded
 //!   weights, the same dense row-major layout
 //!   [`crate::sparse::DecodedLayer`] holds).
 //! * `Ack` — `u8 accepted`.
-//! * `Metrics` reply — 12 × `u64`, the [`StoreMetrics`] fields in
-//!   declaration order.
+//! * `Metrics` reply — `u32 field_count | field_count × u64`:
+//!   version-tolerant by construction. The current field order is the
+//!   12 [`StoreMetrics`] counters in declaration order, then the
+//!   decode histogram and the GEMV histogram, each flattened to
+//!   [`crate::obs::HDR_WIRE_FIELDS`] words
+//!   ([`crate::obs::HdrLite::to_wire`]). A decoder reading a *longer*
+//!   payload (newer peer) ignores the extra fields; a *shorter* one
+//!   (older peer) zero-fills the missing tail — so mixed-version
+//!   router/worker pairs keep exchanging metrics instead of erroring.
 //! * `CostProfile` reply — `u32 json_len | json` (the exact
 //!   [`crate::shard::CostProfile::to_json`] form, so the cost table
 //!   crosses the process boundary through the same validated parser
 //!   `f2f rebalance` uses).
+//! * `Trace` reply — `u32 pid | u32 n_events`, then per event
+//!   `u64 trace_id | u64 t_start_ns | u64 dur_ns | u8 kind |
+//!   u32 label_len | label`. Events with an unknown kind (a newer
+//!   peer's taxonomy) are dropped individually, never the whole frame.
 //! * `Err` — `u32 msg_len | msg`.
 
+use crate::obs::{self, HdrLite, SpanEvent, SpanKind};
 use crate::sparse::DecodedLayer;
 use crate::store::StoreMetrics;
 use anyhow::{bail, Result};
@@ -69,6 +86,7 @@ const K_PREFETCH: u8 = 0x02;
 const K_METRICS: u8 = 0x03;
 const K_COST_PROFILE: u8 = 0x04;
 const K_SHUTDOWN: u8 = 0x05;
+const K_TRACE: u8 = 0x06;
 
 // Response frame kinds.
 const K_LAYER: u8 = 0x81;
@@ -76,20 +94,32 @@ const K_ACK: u8 = 0x82;
 const K_METRICS_REPLY: u8 = 0x83;
 const K_COSTS_REPLY: u8 = 0x84;
 const K_BYE: u8 = 0x85;
+const K_TRACE_REPLY: u8 = 0x86;
 const K_ERR: u8 = 0xFF;
+
+/// Smallest possible wire footprint of one trace event (empty label):
+/// the divisor that pre-validates a `Trace` reply's claimed event count
+/// against the bytes actually present.
+const TRACE_EVENT_MIN_BYTES: usize = 8 + 8 + 8 + 1 + 4;
 
 /// Client → worker messages.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Request {
     /// Fetch one decoded layer (blocks worker-side until decoded).
-    Fetch { layer: String },
+    /// `trace` is the originating request's trace id
+    /// ([`crate::obs::TRACE_NONE`] outside any), which the worker pins
+    /// while handling so its decode/cache spans stitch cross-process.
+    Fetch { layer: String, trace: u64 },
     /// Warm one layer asynchronously ([`accepted`](Response::Ack)
-    /// mirrors [`crate::store::ModelStore::prefetch_async`]).
-    Prefetch { layer: String },
+    /// mirrors [`crate::store::ModelStore::prefetch_async`]); `trace`
+    /// as in [`Request::Fetch`].
+    Prefetch { layer: String, trace: u64 },
     /// Snapshot the worker store's [`StoreMetrics`].
     Metrics,
     /// Snapshot the worker store's cost table as `CostProfile` JSON.
     CostProfile,
+    /// Snapshot the worker's span recorder ([`Response::Trace`]).
+    TraceDump,
     /// Stop serving: the worker replies [`Response::Bye`] and exits.
     Shutdown,
 }
@@ -106,6 +136,9 @@ pub enum Response {
     Metrics(StoreMetrics),
     /// Cost-table snapshot as `CostProfile` JSON.
     CostProfile { json: String },
+    /// Span-recorder snapshot: the worker's pid (its Chrome-trace
+    /// lane) plus every retained event.
+    Trace { pid: u32, events: Vec<SpanEvent> },
     /// Shutdown acknowledged; the worker is exiting.
     Bye,
     /// The request failed worker-side (unknown layer, decode error,
@@ -333,26 +366,39 @@ pub fn read_response(
 impl Request {
     fn encode(&self) -> (u8, Vec<u8>) {
         match self {
-            Request::Fetch { layer } => (K_FETCH, encode_name(layer)),
-            Request::Prefetch { layer } => {
-                (K_PREFETCH, encode_name(layer))
+            Request::Fetch { layer, trace } => {
+                (K_FETCH, encode_name_trace(layer, *trace))
+            }
+            Request::Prefetch { layer, trace } => {
+                (K_PREFETCH, encode_name_trace(layer, *trace))
             }
             Request::Metrics => (K_METRICS, Vec::new()),
             Request::CostProfile => (K_COST_PROFILE, Vec::new()),
+            Request::TraceDump => (K_TRACE, Vec::new()),
             Request::Shutdown => (K_SHUTDOWN, Vec::new()),
         }
     }
 
     /// Parse a request payload. Errors (never panics) on truncation,
     /// trailing bytes, oversized names, non-utf8 names, and unknown
-    /// kinds.
+    /// kinds. `Fetch`/`Prefetch` accept the v1 form without the
+    /// trailing trace id (absent means [`obs::TRACE_NONE`]).
     pub fn decode(kind: u8, payload: &[u8]) -> Result<Request> {
         let mut p = Cursor::new(payload);
         let req = match kind {
-            K_FETCH => Request::Fetch { layer: p.name()? },
-            K_PREFETCH => Request::Prefetch { layer: p.name()? },
+            K_FETCH => {
+                let layer = p.name()?;
+                let trace = p.optional_trace()?;
+                Request::Fetch { layer, trace }
+            }
+            K_PREFETCH => {
+                let layer = p.name()?;
+                let trace = p.optional_trace()?;
+                Request::Prefetch { layer, trace }
+            }
             K_METRICS => Request::Metrics,
             K_COST_PROFILE => Request::CostProfile,
+            K_TRACE => Request::TraceDump,
             K_SHUTDOWN => Request::Shutdown,
             k => bail!("unknown request kind {k:#04x}"),
         };
@@ -378,7 +424,7 @@ impl Response {
                 (K_ACK, vec![u8::from(*accepted)])
             }
             Response::Metrics(m) => {
-                let fields: [u64; 12] = [
+                let mut fields: Vec<u64> = vec![
                     m.hits,
                     m.misses,
                     m.decodes,
@@ -392,7 +438,12 @@ impl Response {
                     m.decode_ns_total,
                     m.gemv_ns_total,
                 ];
-                let mut b = Vec::with_capacity(12 * 8);
+                fields.extend(m.decode_hist.to_wire());
+                fields.extend(m.gemv_hist.to_wire());
+                let mut b = Vec::with_capacity(4 + fields.len() * 8);
+                b.extend_from_slice(
+                    &(fields.len() as u32).to_le_bytes(),
+                );
                 for f in fields {
                     b.extend_from_slice(&f.to_le_bytes());
                 }
@@ -400,6 +451,27 @@ impl Response {
             }
             Response::CostProfile { json } => {
                 (K_COSTS_REPLY, encode_name(json))
+            }
+            Response::Trace { pid, events } => {
+                let mut b = Vec::with_capacity(
+                    8 + events.len() * (TRACE_EVENT_MIN_BYTES + 16),
+                );
+                b.extend_from_slice(&pid.to_le_bytes());
+                b.extend_from_slice(
+                    &(events.len() as u32).to_le_bytes(),
+                );
+                for e in events {
+                    b.extend_from_slice(&e.trace_id.to_le_bytes());
+                    b.extend_from_slice(&e.t_start_ns.to_le_bytes());
+                    b.extend_from_slice(&e.dur_ns.to_le_bytes());
+                    b.push(e.kind.as_u8());
+                    let label = e.label();
+                    b.extend_from_slice(
+                        &(label.len() as u32).to_le_bytes(),
+                    );
+                    b.extend_from_slice(label.as_bytes());
+                }
+                (K_TRACE_REPLY, b)
             }
             Response::Bye => (K_BYE, Vec::new()),
             Response::Err { message } => {
@@ -449,23 +521,43 @@ impl Response {
             }
             K_ACK => Response::Ack { accepted: p.u8()? != 0 },
             K_METRICS_REPLY => {
-                let mut f = [0u64; 12];
-                for slot in &mut f {
-                    *slot = p.u64()?;
+                // Field-counted: a shorter payload (older peer)
+                // zero-fills the tail, a longer one (newer peer) has
+                // its extra fields read and ignored. The count is
+                // validated against the bytes actually present before
+                // anything is read, so a lying count is corruption,
+                // never an absurd allocation.
+                let count = p.u32()? as usize;
+                if count > p.remaining() / 8 {
+                    bail!(
+                        "metrics field count {count} exceeds the \
+                         {}-byte payload",
+                        p.remaining()
+                    );
                 }
+                let mut f = Vec::with_capacity(count);
+                for _ in 0..count {
+                    f.push(p.u64()?);
+                }
+                let g = |i: usize| f.get(i).copied().unwrap_or(0);
+                let hist = |start: usize| {
+                    HdrLite::from_wire(f.get(start..).unwrap_or(&[]))
+                };
                 Response::Metrics(StoreMetrics {
-                    hits: f[0],
-                    misses: f[1],
-                    decodes: f[2],
-                    evictions: f[3],
-                    prefetches: f[4],
-                    redundant_decodes: f[5],
-                    readahead_skips: f[6],
-                    cached_bytes: clamp_usize(f[7]),
-                    cached_layers: clamp_usize(f[8]),
-                    pinned_bytes: clamp_usize(f[9]),
-                    decode_ns_total: f[10],
-                    gemv_ns_total: f[11],
+                    hits: g(0),
+                    misses: g(1),
+                    decodes: g(2),
+                    evictions: g(3),
+                    prefetches: g(4),
+                    redundant_decodes: g(5),
+                    readahead_skips: g(6),
+                    cached_bytes: clamp_usize(g(7)),
+                    cached_layers: clamp_usize(g(8)),
+                    pinned_bytes: clamp_usize(g(9)),
+                    decode_ns_total: g(10),
+                    gemv_ns_total: g(11),
+                    decode_hist: hist(12),
+                    gemv_hist: hist(12 + obs::HDR_WIRE_FIELDS),
                 })
             }
             K_COSTS_REPLY => {
@@ -479,6 +571,34 @@ impl Response {
                         anyhow::anyhow!("cost profile not utf8")
                     })?;
                 Response::CostProfile { json }
+            }
+            K_TRACE_REPLY => {
+                let pid = p.u32()?;
+                let n = p.u32()? as usize;
+                if n > p.remaining() / TRACE_EVENT_MIN_BYTES {
+                    bail!(
+                        "trace event count {n} exceeds the {}-byte \
+                         payload",
+                        p.remaining()
+                    );
+                }
+                let mut events = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let trace_id = p.u64()?;
+                    let t_start_ns = p.u64()?;
+                    let dur_ns = p.u64()?;
+                    let kind = p.u8()?;
+                    let label = p.name()?;
+                    // A kind this build doesn't know (newer peer's
+                    // taxonomy): drop the event, keep the frame.
+                    if let Some(kind) = SpanKind::from_u8(kind) {
+                        events.push(SpanEvent::new(
+                            trace_id, kind, &label, t_start_ns,
+                            dur_ns,
+                        ));
+                    }
+                }
+                Response::Trace { pid, events }
             }
             K_BYE => Response::Bye,
             K_ERR => Response::Err { message: p.name()? },
@@ -497,6 +617,14 @@ fn encode_name(s: &str) -> Vec<u8> {
     let mut b = Vec::with_capacity(4 + s.len());
     b.extend_from_slice(&(s.len() as u32).to_le_bytes());
     b.extend_from_slice(s.as_bytes());
+    b
+}
+
+/// `Fetch`/`Prefetch` payload: length-prefixed name plus the trailing
+/// trace id current peers always send (decoders accept its absence).
+fn encode_name_trace(s: &str, trace: u64) -> Vec<u8> {
+    let mut b = encode_name(s);
+    b.extend_from_slice(&trace.to_le_bytes());
     b
 }
 
@@ -560,6 +688,25 @@ impl<'a> Cursor<'a> {
             .map_err(|_| anyhow::anyhow!("name not utf8"))
     }
 
+    /// Bytes not yet consumed.
+    fn remaining(&self) -> usize {
+        self.b.len().saturating_sub(self.i)
+    }
+
+    /// The optional trailing trace id of `Fetch`/`Prefetch`: exactly
+    /// 8 bytes from a current peer, nothing from a v1 peer
+    /// ([`obs::TRACE_NONE`]); any other length is corruption.
+    fn optional_trace(&mut self) -> Result<u64> {
+        match self.remaining() {
+            0 => Ok(obs::TRACE_NONE),
+            8 => self.u64(),
+            n => bail!(
+                "{n} trailing bytes where a trace id (8) or nothing \
+                 was expected"
+            ),
+        }
+    }
+
     fn finish(&self) -> Result<()> {
         if self.i != self.b.len() {
             bail!(
@@ -607,21 +754,13 @@ mod tests {
         assert_eq!(got, resp);
     }
 
-    #[test]
-    fn every_message_kind_round_trips() {
-        round_trip_request(Request::Fetch { layer: "mlp/fc0".into() });
-        round_trip_request(Request::Prefetch { layer: "x".into() });
-        round_trip_request(Request::Metrics);
-        round_trip_request(Request::CostProfile);
-        round_trip_request(Request::Shutdown);
-        round_trip_response(Response::Layer {
-            rows: 2,
-            cols: 3,
-            weights: vec![0.5, -1.0, 0.0, 3.25, 2.0, -0.125],
-        });
-        round_trip_response(Response::Ack { accepted: true });
-        round_trip_response(Response::Ack { accepted: false });
-        round_trip_response(Response::Metrics(StoreMetrics {
+    fn sample_metrics() -> StoreMetrics {
+        let mut decode_hist = HdrLite::new();
+        decode_hist.record_ns(5_000);
+        decode_hist.record_ns(900_000);
+        let mut gemv_hist = HdrLite::new();
+        gemv_hist.record_ns(250);
+        StoreMetrics {
             hits: 1,
             misses: 2,
             decodes: 3,
@@ -634,14 +773,149 @@ mod tests {
             pinned_bytes: 10,
             decode_ns_total: 11,
             gemv_ns_total: 12,
-        }));
+            decode_hist,
+            gemv_hist,
+        }
+    }
+
+    #[test]
+    fn every_message_kind_round_trips() {
+        round_trip_request(Request::Fetch {
+            layer: "mlp/fc0".into(),
+            trace: 0xABCD_0000_0042,
+        });
+        round_trip_request(Request::Prefetch {
+            layer: "x".into(),
+            trace: obs::TRACE_NONE,
+        });
+        round_trip_request(Request::Metrics);
+        round_trip_request(Request::CostProfile);
+        round_trip_request(Request::TraceDump);
+        round_trip_request(Request::Shutdown);
+        round_trip_response(Response::Layer {
+            rows: 2,
+            cols: 3,
+            weights: vec![0.5, -1.0, 0.0, 3.25, 2.0, -0.125],
+        });
+        round_trip_response(Response::Ack { accepted: true });
+        round_trip_response(Response::Ack { accepted: false });
+        round_trip_response(Response::Metrics(sample_metrics()));
         round_trip_response(Response::CostProfile {
             json: "{\"title\": \"t\", \"cases\": {}}".into(),
+        });
+        round_trip_response(Response::Trace {
+            pid: 4242,
+            events: vec![
+                SpanEvent::new(7, SpanKind::Decode, "fc0", 100, 50),
+                SpanEvent::new(7, SpanKind::CacheMiss, "fc0", 90, 0),
+                SpanEvent::new(
+                    obs::TRACE_NONE,
+                    SpanKind::Evict,
+                    "",
+                    200,
+                    0,
+                ),
+            ],
+        });
+        round_trip_response(Response::Trace {
+            pid: 1,
+            events: Vec::new(),
         });
         round_trip_response(Response::Bye);
         round_trip_response(Response::Err {
             message: "layer \"ghost\" not in container".into(),
         });
+    }
+
+    #[test]
+    fn fetch_without_trailing_trace_decodes_as_v1() {
+        // Satellite of the versioned-metrics work: an older peer's
+        // Fetch/Prefetch carries no trace id — absent means NONE; a
+        // partial trailer is corruption, not a silent zero.
+        for kind in [K_FETCH, K_PREFETCH] {
+            let payload = encode_name("fc0");
+            let req = Request::decode(kind, &payload).unwrap();
+            let (layer, trace) = match req {
+                Request::Fetch { layer, trace }
+                | Request::Prefetch { layer, trace } => (layer, trace),
+                other => panic!("wrong variant: {other:?}"),
+            };
+            assert_eq!(layer, "fc0");
+            assert_eq!(trace, obs::TRACE_NONE);
+            for extra in 1..8usize {
+                let mut bad = encode_name("fc0");
+                bad.extend_from_slice(&vec![0u8; extra]);
+                assert!(
+                    Request::decode(kind, &bad).is_err(),
+                    "{extra} trailing bytes must not parse"
+                );
+            }
+            let mut too_long = encode_name_trace("fc0", 9);
+            too_long.push(0);
+            assert!(Request::decode(kind, &too_long).is_err());
+        }
+    }
+
+    #[test]
+    fn metrics_reply_tolerates_older_and_newer_field_counts() {
+        let m = sample_metrics();
+        let (kind, full) = Response::Metrics(m).encode();
+        assert_eq!(kind, K_METRICS_REPLY);
+        let n_fields = 12 + 2 * obs::HDR_WIRE_FIELDS;
+        assert_eq!(full.len(), 4 + n_fields * 8);
+
+        // Older peer: only the 12 counters. The histograms zero-fill.
+        let mut short = Vec::new();
+        short.extend_from_slice(&12u32.to_le_bytes());
+        short.extend_from_slice(&full[4..4 + 12 * 8]);
+        let got = Response::decode(K_METRICS_REPLY, &short).unwrap();
+        let Response::Metrics(sm) = got else { panic!("not metrics") };
+        assert_eq!(sm.hits, m.hits);
+        assert_eq!(sm.gemv_ns_total, m.gemv_ns_total);
+        assert!(sm.decode_hist.is_empty(), "missing tail zero-fills");
+        assert!(sm.gemv_hist.is_empty());
+
+        // Newer peer: four extra fields appended. Extras are ignored.
+        let mut long = Vec::new();
+        long.extend_from_slice(&(n_fields as u32 + 4).to_le_bytes());
+        long.extend_from_slice(&full[4..]);
+        for v in [101u64, 102, 103, 104] {
+            long.extend_from_slice(&v.to_le_bytes());
+        }
+        let got = Response::decode(K_METRICS_REPLY, &long).unwrap();
+        assert_eq!(got, Response::Metrics(m), "extras must be ignored");
+
+        // A count lying past the payload is corruption, pre-read.
+        let mut lying = Vec::new();
+        lying.extend_from_slice(&u32::MAX.to_le_bytes());
+        lying.extend_from_slice(&full[4..]);
+        assert!(Response::decode(K_METRICS_REPLY, &lying).is_err());
+    }
+
+    #[test]
+    fn trace_reply_drops_unknown_kinds_and_caps_counts() {
+        let ev = SpanEvent::new(3, SpanKind::Gemv, "fc1", 50, 25);
+        let (kind, mut payload) = Response::Trace {
+            pid: 9,
+            events: vec![ev],
+        }
+        .encode();
+        assert_eq!(kind, K_TRACE_REPLY);
+        // Append a second event with a future kind discriminant and
+        // bump the count: the event drops, the frame survives.
+        payload[4..8].copy_from_slice(&2u32.to_le_bytes());
+        payload.extend_from_slice(&11u64.to_le_bytes());
+        payload.extend_from_slice(&60u64.to_le_bytes());
+        payload.extend_from_slice(&1u64.to_le_bytes());
+        payload.push(200); // unknown kind
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        let got = Response::decode(K_TRACE_REPLY, &payload).unwrap();
+        assert_eq!(got, Response::Trace { pid: 9, events: vec![ev] });
+        // An event count lying past the payload is corruption.
+        let mut lying = Vec::new();
+        lying.extend_from_slice(&9u32.to_le_bytes());
+        lying.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Response::decode(K_TRACE_REPLY, &lying).is_err());
     }
 
     #[test]

@@ -17,6 +17,12 @@
 //! * `Metrics` / `CostProfile` snapshot the store's counters and cost
 //!   table, so the supervisor aggregates `--timing` and
 //!   `--profile-out` across processes unchanged.
+//! * `TraceDump` snapshots this process's span recorder
+//!   ([`crate::obs`]) so the router can stitch worker decode spans
+//!   into one cross-process Chrome trace. `Fetch`/`Prefetch` frames
+//!   carry the requester's trace id, and the handler pins it to the
+//!   serving thread for the duration of the store call — every span
+//!   the call records lands in the requester's timeline.
 //! * `Shutdown` ends the serve loop cleanly.
 //!
 //! Failure policy: a bad request (unknown layer, corrupt record) is an
@@ -26,6 +32,7 @@
 //! is survivable, and the supervisor restarts whatever is not.
 
 use super::wire::{self, Request, Response, WireError};
+use crate::obs;
 use crate::shard::CostProfile;
 use crate::store::{ModelStore, StoreConfig};
 use anyhow::{Context, Result};
@@ -194,33 +201,55 @@ fn handle(
 ) -> (Reply, bool) {
     let msg = |resp| (Reply::Msg(resp), false);
     match req {
-        Request::Fetch { layer } => match store.get(&layer) {
-            Ok(decoded) => {
-                if decoded.weights.len() > wire::MAX_WIRE_WEIGHTS {
-                    // Error at the source: sending it anyway would be
-                    // rejected receiver-side as a corrupt frame and
-                    // trigger a pointless worker restart.
-                    msg(Response::Err {
-                        message: format!(
-                            "layer {layer:?} has {} weights — too \
-                             large for one wire frame (cap {})",
-                            decoded.weights.len(),
-                            wire::MAX_WIRE_WEIGHTS
-                        ),
-                    })
-                } else {
-                    (Reply::Layer(decoded), false)
+        Request::Fetch { layer, trace } => {
+            // Pin the requester's trace to this thread: the cache
+            // hit/miss events and any decode the get() triggers stitch
+            // into the caller's cross-process timeline.
+            let _trace = obs::with_trace(trace);
+            match store.get(&layer) {
+                Ok(decoded) => {
+                    if decoded.weights.len() > wire::MAX_WIRE_WEIGHTS {
+                        // Error at the source: sending it anyway
+                        // would be rejected receiver-side as a corrupt
+                        // frame and trigger a pointless worker
+                        // restart.
+                        msg(Response::Err {
+                            message: format!(
+                                "layer {layer:?} has {} weights — too \
+                                 large for one wire frame (cap {})",
+                                decoded.weights.len(),
+                                wire::MAX_WIRE_WEIGHTS
+                            ),
+                        })
+                    } else {
+                        (Reply::Layer(decoded), false)
+                    }
+                }
+                Err(e) => {
+                    msg(Response::Err { message: format!("{e:#}") })
                 }
             }
-            Err(e) => msg(Response::Err { message: format!("{e:#}") }),
-        },
-        Request::Prefetch { layer } => msg(Response::Ack {
-            accepted: store.prefetch_async(&layer),
-        }),
+        }
+        Request::Prefetch { layer, trace } => {
+            let _trace = obs::with_trace(trace);
+            msg(Response::Ack {
+                accepted: store.prefetch_async(&layer),
+            })
+        }
         Request::Metrics => msg(Response::Metrics(store.metrics())),
         Request::CostProfile => msg(Response::CostProfile {
             json: CostProfile::from_stores([store.costs()]).to_json(),
         }),
+        Request::TraceDump => {
+            // Snapshot, do not clear: the recorder is process-global,
+            // and a dump must never erase spans other code in this
+            // process is still accumulating. The exporter dumps once
+            // at end of run, so replay is not a concern.
+            msg(Response::Trace {
+                pid: std::process::id(),
+                events: obs::snapshot(),
+            })
+        }
         Request::Shutdown => {
             shutdown.store(true, Ordering::SeqCst);
             (Reply::Msg(Response::Bye), true)
@@ -275,7 +304,10 @@ mod tests {
         for (i, name) in ["fc0", "fc1"].iter().enumerate() {
             wire::send_request(
                 &mut stream,
-                &Request::Fetch { layer: name.to_string() },
+                &Request::Fetch {
+                    layer: name.to_string(),
+                    trace: 7,
+                },
             )
             .unwrap();
             let resp = wire::read_response(&mut stream).unwrap();
@@ -285,7 +317,7 @@ mod tests {
         // Unknown layer: an error frame, and the connection survives.
         wire::send_request(
             &mut stream,
-            &Request::Fetch { layer: "ghost".into() },
+            &Request::Fetch { layer: "ghost".into(), trace: 0 },
         )
         .unwrap();
         match wire::read_response(&mut stream).unwrap() {
@@ -297,7 +329,7 @@ mod tests {
         // Prefetch dedups against the already-cached layer.
         wire::send_request(
             &mut stream,
-            &Request::Prefetch { layer: "fc0".into() },
+            &Request::Prefetch { layer: "fc0".into(), trace: 0 },
         )
         .unwrap();
         assert_eq!(
@@ -327,6 +359,22 @@ mod tests {
                 );
             }
             other => panic!("expected a profile, got {other:?}"),
+        }
+        // A trace dump names this process; with recording compiled
+        // in, the fetches above left spans under their request trace.
+        wire::send_request(&mut stream, &Request::TraceDump).unwrap();
+        match wire::read_response(&mut stream).unwrap() {
+            Response::Trace { pid, events } => {
+                assert_eq!(pid, std::process::id());
+                #[cfg(feature = "obs")]
+                assert!(
+                    events.iter().any(|e| e.trace_id == 7),
+                    "fetch spans must carry the frame's trace id"
+                );
+                #[cfg(not(feature = "obs"))]
+                assert!(events.is_empty());
+            }
+            other => panic!("expected a trace dump, got {other:?}"),
         }
         // Shutdown ends the loop; the socket file is removed.
         wire::send_request(&mut stream, &Request::Shutdown).unwrap();
@@ -368,7 +416,7 @@ mod tests {
         let mut fresh = UnixStream::connect(&socket).unwrap();
         wire::send_request(
             &mut fresh,
-            &Request::Fetch { layer: "fc0".into() },
+            &Request::Fetch { layer: "fc0".into(), trace: 0 },
         )
         .unwrap();
         let resp = wire::read_response(&mut fresh).unwrap();

@@ -71,6 +71,24 @@
 //!   `ipc::Supervisor` that spawns, health-checks and restarts
 //!   workers (shard assignment replayed) while aggregating metrics
 //!   and cost tables over the wire — `f2f serve --shard-procs N`.
+//! * [`obs`] — observability: a lock-cheap span recorder (fixed ring
+//!   buffer, relaxed atomics, zero allocation on the hot path) with a
+//!   span taxonomy covering the whole serving path — queueing
+//!   (`enqueue`/`queue`/`batch_form`/`batch`), per-layer `gemv`,
+//!   `decode` submit→install, `readahead_plan`/`readahead_skip`,
+//!   `cache_hit`/`cache_miss`/`evict`, and `ipc_fetch`/`ipc_prefetch`
+//!   round trips — plus trace-context propagation (the server mints a
+//!   trace id per batch; `Fetch`/`Prefetch` frames carry it to shard
+//!   workers so cross-process spans stitch into one timeline),
+//!   mergeable log-bucketed latency histograms ([`obs::HdrLite`], the
+//!   percentile engine under [`coordinator::MetricsSnapshot`] and
+//!   [`store::StoreMetrics`]), and exporters: Chrome trace-event JSON
+//!   ([`obs::chrome_trace`] — `serve --trace-out`, one pid lane per
+//!   process, Perfetto-loadable) and a unified JSON metrics registry
+//!   (`serve --metrics-out`, counters + histograms + cost table via
+//!   [`bench_util::JsonReport`]). Recording compiles out with
+//!   `--no-default-features` (the on-by-default `obs` feature) and has
+//!   a runtime kill switch for overhead measurement.
 //! * [`bandwidth`] — memory transaction / bandwidth-utilization simulator
 //!   (Figure 1, Appendix A).
 //! * [`models`] — synthetic Transformer / ResNet-50 model zoo with
@@ -134,6 +152,24 @@
 //! restarted with its shard assignment replayed), and an
 //! `ipc::ProcRouter` walks the same chain over unix-socket IPC with
 //! cross-process readahead, still bit-identical to the single store.
+//!
+//! ## Observability
+//!
+//! Every stage of that path is traced. The inference server mints a
+//! trace id per batch; the forward chain, stores, decode service and
+//! IPC client record spans under it ([`obs::SpanKind`] is the
+//! taxonomy: queueing → batch → per-layer `gemv` → `decode`, plus
+//! readahead/cache/IPC events), and `Fetch`/`Prefetch` wire frames
+//! carry the id into `shard-worker` processes so one request's
+//! timeline stitches across pid lanes. `f2f serve --trace-out t.json`
+//! exports Chrome trace-event JSON (open in `chrome://tracing` or
+//! Perfetto); `--metrics-out m.json` dumps the unified registry —
+//! counters, mergeable [`obs::HdrLite`] latency histograms at
+//! request / batch / decode / GEMV granularity, and the per-layer cost
+//! table in [`shard::CostProfile`]-compatible form. Span recording is
+//! governed by the on-by-default `obs` cargo feature
+//! (`--no-default-features` compiles it out entirely) and a runtime
+//! kill switch ([`obs::set_enabled`]).
 
 pub mod bandwidth;
 pub mod bench_util;
@@ -148,6 +184,7 @@ pub mod gf2;
 #[cfg(unix)]
 pub mod ipc;
 pub mod models;
+pub mod obs;
 pub mod pipeline;
 pub mod pruning;
 pub mod report;

@@ -24,10 +24,14 @@
 //!   depth from observed costs — `--shards <n>` split across a
 //!   multi-store shard router, `--shard-procs <n>` split across that
 //!   many supervised *worker processes* routed over unix-socket IPC,
-//!   `--timing` print the per-layer cost table, `--profile-out [path]`
+//!   `--timing` print the per-layer cost table plus the request /
+//!   batch / decode / GEMV latency histograms, `--profile-out [path]`
 //!   export it as `CostProfile` JSON — bare `--profile-out` writes the
 //!   `<container>.costs.json` sidecar `ModelStore::open_path`
-//!   auto-loads) and run a self-driven load test.
+//!   auto-loads — `--trace-out <path>` export the run's spans as a
+//!   Chrome trace (one pid lane per process; load in chrome://tracing
+//!   or Perfetto), `--metrics-out <path>` export the unified metrics
+//!   registry as JSON) and run a self-driven load test.
 //! * `f2f shard-worker <shard.f2f2> --socket <path> [--cache-kb <n>]
 //!   [--decode-threads <n>]` — serve one shard file over a unix
 //!   socket: the child-process entrypoint `serve --shard-procs`
@@ -342,6 +346,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let profile_out_explicit = args.get_str("profile-out", "");
     let profile_out_requested =
         args.flag("profile-out") || !profile_out_explicit.is_empty();
+    // Export the run's recorded spans ([`f2f::obs`]) as a Chrome
+    // trace. Multi-process serving stitches one pid lane per worker,
+    // connected to the router lane by shared request trace ids.
+    let trace_out = args.get_str("trace-out", "");
+    // Export the unified metrics registry: server counters and
+    // request/batch histograms, per-store cache counters and
+    // decode/GEMV histograms, per-layer observed costs.
+    let metrics_out = args.get_str("metrics-out", "");
 
     // Compress a multi-layer MLP-shaped model into an indexed container.
     let t0 = std::time::Instant::now();
@@ -375,6 +387,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 show_timing,
                 profile_out_explicit,
                 profile_out_requested,
+                trace_out,
+                metrics_out,
                 workdir: args.get_str("workdir", ""),
             },
         );
@@ -448,7 +462,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             print_cost_table("store", &store.costs().snapshot());
         }
         write_profile(&CostProfile::from_stores([store.costs()]))?;
+        let snap = server.metrics();
         server.shutdown();
+        export_observability(
+            &trace_out,
+            &metrics_out,
+            show_timing,
+            &snap,
+            &[("store".to_string(), store.metrics())],
+            &store.costs().snapshot(),
+            Vec::new(),
+        );
     } else {
         let (map, shard_bytes) =
             write_sharded(&container, n_shards, ShardAssignment::ByBytes)?;
@@ -479,10 +503,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             s.wait_for_idle();
         }
         let mut total = StoreMetrics::default();
+        let mut shard_metrics = Vec::new();
         for (i, s) in stores.iter().enumerate() {
             let sm = s.metrics();
             print_store_metrics(&format!("shard {i}"), &sm);
             total.merge(&sm);
+            shard_metrics.push((format!("shard {i}"), sm));
         }
         print_store_metrics("all shards", &total);
         let profile =
@@ -491,7 +517,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             print_cost_table("all shards", &profile.entries());
         }
         write_profile(&profile)?;
+        let snap = server.metrics();
         server.shutdown();
+        export_observability(
+            &trace_out,
+            &metrics_out,
+            show_timing,
+            &snap,
+            &shard_metrics,
+            &profile.entries(),
+            Vec::new(),
+        );
     }
     Ok(())
 }
@@ -542,6 +578,157 @@ fn print_cost_table(
     print!("{}", table.render());
 }
 
+/// The observability tail shared by every serve path (single-store,
+/// sharded, multi-process): the `--timing` histogram summary, the
+/// `--metrics-out` registry, and the `--trace-out` Chrome trace. All
+/// of it is teardown reporting, so failures print and degrade instead
+/// of turning a completed serve into a nonzero exit.
+fn export_observability(
+    trace_out: &str,
+    metrics_out: &str,
+    show_timing: bool,
+    server: &f2f::coordinator::MetricsSnapshot,
+    stores: &[(String, f2f::store::StoreMetrics)],
+    costs: &[(String, f2f::store::LayerCost)],
+    worker_lanes: Vec<f2f::obs::ProcessLane>,
+) {
+    if show_timing {
+        print_latency_histograms(server, stores);
+    }
+    if !metrics_out.is_empty() {
+        let json = build_metrics_report(server, stores, costs).to_json();
+        // Self-check before writing: the registry must stay readable
+        // by the same hand-rolled JSON reader `f2f rebalance` uses.
+        match f2f::shard::CostProfile::parse_json(&json) {
+            Ok(_) => match std::fs::write(metrics_out, &json) {
+                Ok(()) => println!(
+                    "wrote {metrics_out} (unified metrics registry)"
+                ),
+                Err(e) => {
+                    println!("could not write {metrics_out}: {e}")
+                }
+            },
+            Err(e) => println!(
+                "metrics registry failed its own round-trip check, \
+                 not written: {e:#}"
+            ),
+        }
+    }
+    if !trace_out.is_empty() {
+        let mut lanes = vec![f2f::obs::ProcessLane {
+            pid: std::process::id(),
+            name: "server".to_string(),
+            events: f2f::obs::snapshot(),
+        }];
+        lanes.extend(worker_lanes);
+        let n_spans: usize = lanes.iter().map(|l| l.events.len()).sum();
+        match std::fs::write(trace_out, f2f::obs::chrome_trace(&lanes))
+        {
+            Ok(()) => println!(
+                "wrote {trace_out} ({n_spans} spans across {} process \
+                 lanes) — load it in chrome://tracing or Perfetto",
+                lanes.len()
+            ),
+            Err(e) => println!("could not write {trace_out}: {e}"),
+        }
+    }
+}
+
+/// `--timing` histogram summary: request/batch latency from the
+/// server plus decode/GEMV phase latency per store, log-bucketed
+/// quantiles (see [`f2f::obs::HdrLite`]).
+fn print_latency_histograms(
+    server: &f2f::coordinator::MetricsSnapshot,
+    stores: &[(String, f2f::store::StoreMetrics)],
+) {
+    let mut series: Vec<(String, f2f::obs::HdrLite)> = vec![
+        ("request".to_string(), server.latency),
+        ("batch".to_string(), server.batch_time),
+    ];
+    for (label, sm) in stores {
+        series.push((format!("{label} decode"), sm.decode_hist));
+        series.push((format!("{label} gemv"), sm.gemv_hist));
+    }
+    let mut table = f2f::report::Table::new(
+        "latency histograms (log-bucketed)",
+        &["series", "count", "p50", "p95", "p99", "max"],
+    );
+    for (name, h) in &series {
+        table.row(vec![
+            name.clone(),
+            h.count().to_string(),
+            format!("{:?}", h.percentile(0.50)),
+            format!("{:?}", h.percentile(0.95)),
+            format!("{:?}", h.percentile(0.99)),
+            format!("{:?}", h.max()),
+        ]);
+    }
+    print!("{}", table.render());
+}
+
+/// Quantile + count metrics of one histogram under `case`.
+fn hist_metrics(
+    rep: &mut f2f::bench_util::JsonReport,
+    case: &str,
+    prefix: &str,
+    h: &f2f::obs::HdrLite,
+) {
+    rep.metric(case, &format!("{prefix}_count"), h.count() as f64);
+    for (q, tag) in [(0.50, "p50"), (0.95, "p95"), (0.99, "p99")] {
+        rep.metric(
+            case,
+            &format!("{prefix}_{tag}_s"),
+            h.percentile(q).as_secs_f64(),
+        );
+    }
+    rep.metric(case, &format!("{prefix}_max_s"), h.max().as_secs_f64());
+}
+
+/// The `--metrics-out` registry: one JSON object unifying the serving
+/// tier's telemetry — server counters with request/batch histogram
+/// quantiles, per-store cache counters with decode/GEMV histogram
+/// quantiles, and per-layer observed costs (the same numbers
+/// `--profile-out` exports, here under `layer/<name>` cases).
+fn build_metrics_report(
+    server: &f2f::coordinator::MetricsSnapshot,
+    stores: &[(String, f2f::store::StoreMetrics)],
+    costs: &[(String, f2f::store::LayerCost)],
+) -> f2f::bench_util::JsonReport {
+    let mut rep =
+        f2f::bench_util::JsonReport::new("f2f serve metrics");
+    rep.metric("server", "completed", server.completed as f64);
+    rep.metric("server", "batches", server.batches as f64);
+    rep.metric("server", "errors", server.errors as f64);
+    rep.metric("server", "mean_batch_size", server.mean_batch_size());
+    hist_metrics(&mut rep, "server", "request", &server.latency);
+    hist_metrics(&mut rep, "server", "batch", &server.batch_time);
+    for (label, sm) in stores {
+        for (key, v) in [
+            ("hits", sm.hits),
+            ("misses", sm.misses),
+            ("decodes", sm.decodes),
+            ("evictions", sm.evictions),
+            ("prefetches", sm.prefetches),
+            ("redundant_decodes", sm.redundant_decodes),
+            ("readahead_skips", sm.readahead_skips),
+            ("cached_bytes", sm.cached_bytes as u64),
+            ("cached_layers", sm.cached_layers as u64),
+        ] {
+            rep.metric(label, key, v as f64);
+        }
+        hist_metrics(&mut rep, label, "decode", &sm.decode_hist);
+        hist_metrics(&mut rep, label, "gemv", &sm.gemv_hist);
+    }
+    for (name, c) in costs {
+        let case = format!("layer/{name}");
+        rep.metric(&case, "decode_ns", c.decode_ns);
+        rep.metric(&case, "decode_samples", c.decode_samples as f64);
+        rep.metric(&case, "gemv_ns", c.gemv_ns);
+        rep.metric(&case, "gemv_samples", c.gemv_samples as f64);
+    }
+    rep
+}
+
 /// Knobs of the multi-process serve path, bundled so the branch in
 /// [`cmd_serve`] stays readable.
 #[cfg(unix)]
@@ -557,6 +744,8 @@ struct MultiprocOpts {
     show_timing: bool,
     profile_out_explicit: String,
     profile_out_requested: bool,
+    trace_out: String,
+    metrics_out: String,
     /// Where shard files, map, and sidecars land. Empty = an
     /// ephemeral temp dir removed on exit; explicit = kept, so the
     /// artifacts (including the per-shard cost sidecars that warm
@@ -659,22 +848,46 @@ fn serve_multiproc(
         move || Box::new(router),
     );
     run_load(&server, opts.requests, opts.width, opts.seed)?;
+    let server_snap = server.metrics();
     server.shutdown();
 
     // Aggregate worker metrics over the wire — the counters a
     // single-process serve prints, now gathered across processes.
     let mut total = StoreMetrics::default();
+    let mut worker_metrics = Vec::new();
     for (i, client) in clients.iter().enumerate() {
         match client.metrics() {
             Ok(m) => {
                 print_store_metrics(&format!("worker {i}"), &m);
                 total.merge(&m);
+                worker_metrics.push((format!("worker {i}"), m));
             }
             Err(e) => println!("worker {i}: metrics unavailable ({e})"),
         }
     }
     print_store_metrics("all workers", &total);
     println!("supervisor: {} worker restarts", sup.restarts());
+
+    // Pull every worker's span lane for the cross-process trace: the
+    // shared request trace ids are what connect a worker's decode
+    // spans to this process's GEMV and ipc_fetch spans.
+    let mut worker_lanes = Vec::new();
+    if !opts.trace_out.is_empty() {
+        for (i, client) in clients.iter().enumerate() {
+            match client.trace_events() {
+                Ok((pid, events)) => {
+                    worker_lanes.push(f2f::obs::ProcessLane {
+                        pid,
+                        name: format!("worker {i}"),
+                        events,
+                    })
+                }
+                Err(e) => {
+                    println!("worker {i}: trace unavailable ({e})")
+                }
+            }
+        }
+    }
 
     // The profile merge is teardown reporting, like the metrics loop
     // above: a worker that died *after* serving completed must not
@@ -725,6 +938,16 @@ fn serve_multiproc(
             }
         }
     }
+    export_observability(
+        &opts.trace_out,
+        &opts.metrics_out,
+        opts.show_timing,
+        &server_snap,
+        &worker_metrics,
+        &profile.as_ref().map(|p| p.entries()).unwrap_or_default(),
+        worker_lanes,
+    );
+
     // Per-shard sidecars: a worker respawned over these files (this
     // run or the next, in a kept workdir) opens with a warm planner.
     for (i, (client, shard_path)) in

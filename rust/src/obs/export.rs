@@ -1,0 +1,180 @@
+//! Chrome trace-event export: recorded spans → `chrome://tracing` JSON.
+//!
+//! The [trace-event format] is the lowest-common-denominator timeline
+//! format both `chrome://tracing` and Perfetto load directly: a JSON
+//! object with a `traceEvents` array of complete (`"ph": "X"`) and
+//! instant (`"ph": "i"`) events, grouped by `pid`/`tid`. Each process
+//! in a multi-process serve (router + every `shard-worker`) becomes
+//! one pid lane, named via `process_name` metadata events; within a
+//! lane, events render on a tid per [`SpanKind`] so queueing, GEMV,
+//! decode and cache activity stack as separate tracks. `trace_id` and
+//! the layer label ride in `args`, so selecting one request's spans is
+//! a search for its (hex) trace id across every lane.
+//!
+//! Timestamps: [`super::SpanEvent::t_start_ns`] is wall-clock unix
+//! nanoseconds precisely so lanes from different processes align; the
+//! exporter rebases everything onto the earliest event to keep the
+//! microsecond values small (trace-event `ts` is a double — raw unix
+//! nanoseconds would cost sub-microsecond precision).
+//!
+//! [trace-event format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use super::{SpanEvent, SpanKind};
+
+/// One process's worth of recorded events: a pid lane in the export.
+#[derive(Debug, Clone)]
+pub struct ProcessLane {
+    /// Operating-system process id (the lane key).
+    pub pid: u32,
+    /// Human-readable lane name (e.g. `router`, `shard-worker 1`).
+    pub name: String,
+    /// Events recorded by that process.
+    pub events: Vec<SpanEvent>,
+}
+
+/// Render lanes as a Chrome trace-event JSON document.
+pub fn chrome_trace(lanes: &[ProcessLane]) -> String {
+    let t0 = lanes
+        .iter()
+        .flat_map(|l| l.events.iter().map(|e| e.t_start_ns))
+        .min()
+        .unwrap_or(0);
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut first = true;
+    let mut push = |s: String, first: &mut bool| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+        out.push_str(&s);
+    };
+    for lane in lanes {
+        push(
+            format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\
+                 \"tid\":0,\"args\":{{\"name\":\"{}\"}}}}",
+                lane.pid,
+                escape(&lane.name)
+            ),
+            &mut first,
+        );
+        for ev in &lane.events {
+            push(render_event(lane.pid, ev, t0), &mut first);
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+fn render_event(pid: u32, ev: &SpanEvent, t0: u64) -> String {
+    let ts_us = ev.t_start_ns.saturating_sub(t0) as f64 / 1_000.0;
+    let dur_us = ev.dur_ns as f64 / 1_000.0;
+    let tid = ev.kind.as_u8();
+    let args = format!(
+        "{{\"trace_id\":\"{:#x}\",\"label\":\"{}\"}}",
+        ev.trace_id,
+        escape(ev.label())
+    );
+    if ev.kind.is_instant() && ev.dur_ns == 0 {
+        // Thread-scoped instant: renders as a tick mark on the lane.
+        format!(
+            "{{\"name\":\"{}\",\"cat\":\"f2f\",\"ph\":\"i\",\"s\":\"t\",\
+             \"pid\":{pid},\"tid\":{tid},\"ts\":{ts_us},\"args\":{args}}}",
+            ev.kind.name()
+        )
+    } else {
+        format!(
+            "{{\"name\":\"{}\",\"cat\":\"f2f\",\"ph\":\"X\",\
+             \"pid\":{pid},\"tid\":{tid},\"ts\":{ts_us},\
+             \"dur\":{dur_us},\"args\":{args}}}",
+            ev.kind.name()
+        )
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(
+        trace: u64,
+        kind: SpanKind,
+        label: &str,
+        start: u64,
+        dur: u64,
+    ) -> SpanEvent {
+        SpanEvent::new(trace, kind, label, start, dur)
+    }
+
+    #[test]
+    fn lanes_render_as_pids_with_metadata_names() {
+        let lanes = [
+            ProcessLane {
+                pid: 100,
+                name: "router".into(),
+                events: vec![
+                    ev(7, SpanKind::Batch, "", 2_000, 900),
+                    ev(7, SpanKind::Gemv, "mlp/fc0", 2_100, 300),
+                    ev(7, SpanKind::CacheMiss, "mlp/fc0", 2_050, 0),
+                ],
+            },
+            ProcessLane {
+                pid: 200,
+                name: "shard-worker 0".into(),
+                events: vec![ev(7, SpanKind::Decode, "mlp/fc0", 2_200, 400)],
+            },
+        ];
+        let json = chrome_trace(&lanes);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"pid\":100"));
+        assert!(json.contains("\"pid\":200"));
+        assert!(json.contains("\"process_name\""));
+        assert!(json.contains("\"router\""));
+        assert!(json.contains("\"shard-worker 0\""));
+        // Complete spans carry dur; instants use ph:"i".
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ph\":\"i\""));
+        // One request's spans are findable by trace id across lanes.
+        assert_eq!(json.matches("\"trace_id\":\"0x7\"").count(), 4);
+        // Timestamps rebase onto the earliest event (2_000 ns → 0 µs).
+        assert!(json.contains("\"ts\":0"));
+        // Cheap structural sanity: balanced brackets/braces.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn empty_export_is_still_well_formed() {
+        let json = chrome_trace(&[]);
+        assert!(json.contains("\"traceEvents\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn labels_and_names_are_escaped() {
+        let lanes = [ProcessLane {
+            pid: 1,
+            name: "we\"ird\\lane".into(),
+            events: vec![ev(1, SpanKind::Gemv, "a\"b", 0, 1)],
+        }];
+        let json = chrome_trace(&lanes);
+        assert!(json.contains("we\\\"ird\\\\lane"));
+        assert!(json.contains("a\\\"b"));
+    }
+}

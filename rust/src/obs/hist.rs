@@ -1,0 +1,332 @@
+//! `HdrLite`: a log-bucketed latency histogram, mergeable and wire-flat.
+//!
+//! The coordinator used to keep a raw reservoir of latency samples and
+//! sort it on every snapshot — O(n log n) per scrape, a fixed memory
+//! ceiling, and no way to merge two windows (per-shard, per-worker)
+//! without shipping every sample. `HdrLite` replaces that with 64
+//! power-of-two buckets over nanoseconds: recording is one `leading_zeros`
+//! plus an increment, merging is element-wise addition, and the whole
+//! histogram flattens to a fixed run of `u64`s for the wire `Metrics`
+//! frame. Exact `min`/`max` ride along so tail percentiles of sparse
+//! windows (one sample, two samples) report the *observed* extreme
+//! instead of a bucket bound — the sort-free answer to the old
+//! "p99 of a single sample is zero" edge case.
+//!
+//! Quantiles are bucket-resolution: `value_at(q)` returns the upper
+//! bound of the bucket holding the rank-`q` sample, clamped into
+//! `[min, max]`, so any reported percentile is within 2x of the true
+//! sample (and exact at the extremes). That is plenty for SLO tracking
+//! and trend diffing, and it is what makes the merge exact: merging two
+//! histograms and querying is identical to recording every sample into
+//! one.
+
+use std::time::Duration;
+
+/// Number of power-of-two buckets. Bucket `b > 0` covers
+/// `[2^(b-1), 2^b - 1]` nanoseconds; bucket 0 holds exact zeros; the
+/// last bucket is open-ended. 64 buckets span 1 ns to ~292 years.
+pub const HDR_BUCKETS: usize = 64;
+
+/// Log-bucketed latency histogram: 64 pow-2 buckets over nanoseconds,
+/// exact min/max, element-wise mergeable, flattenable to `u64`s for
+/// the wire. See the module docs for the accuracy contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HdrLite {
+    counts: [u64; HDR_BUCKETS],
+    total: u64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for HdrLite {
+    fn default() -> Self {
+        HdrLite {
+            counts: [0; HDR_BUCKETS],
+            total: 0,
+            min_ns: 0,
+            max_ns: 0,
+        }
+    }
+}
+
+/// Flattened length of one histogram on the wire:
+/// `total, min_ns, max_ns` followed by the bucket counts.
+pub const HDR_WIRE_FIELDS: usize = 3 + HDR_BUCKETS;
+
+fn bucket_of(v: u64) -> usize {
+    // 0 → bucket 0; otherwise floor(log2(v)) + 1, saturating at the
+    // open-ended last bucket.
+    ((u64::BITS - v.leading_zeros()) as usize).min(HDR_BUCKETS - 1)
+}
+
+fn bucket_upper(b: usize) -> u64 {
+    if b >= HDR_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+impl HdrLite {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        HdrLite::default()
+    }
+
+    /// Record one duration (saturating at `u64::MAX` nanoseconds).
+    pub fn record(&mut self, d: Duration) {
+        self.record_ns(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Record one raw nanosecond value.
+    pub fn record_ns(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        if self.total == 0 {
+            self.min_ns = v;
+            self.max_ns = v;
+        } else {
+            self.min_ns = self.min_ns.min(v);
+            self.max_ns = self.max_ns.max(v);
+        }
+        self.total += 1;
+    }
+
+    /// Fold another histogram into this one. Querying the merge is
+    /// identical to having recorded every sample into one histogram.
+    pub fn merge(&mut self, other: &HdrLite) {
+        if other.total == 0 {
+            return;
+        }
+        if self.total == 0 {
+            self.min_ns = other.min_ns;
+            self.max_ns = other.max_ns;
+        } else {
+            self.min_ns = self.min_ns.min(other.min_ns);
+            self.max_ns = self.max_ns.max(other.max_ns);
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Exact largest recorded value (zero when empty).
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(if self.total == 0 { 0 } else { self.max_ns })
+    }
+
+    /// Exact smallest recorded value (zero when empty).
+    pub fn min(&self) -> Duration {
+        Duration::from_nanos(if self.total == 0 { 0 } else { self.min_ns })
+    }
+
+    /// The value at quantile `q` (clamped into `[0, 1]`) in
+    /// nanoseconds: the upper bound of the bucket holding the
+    /// rank-`ceil(q·count)` sample, clamped into `[min, max]`. Zero
+    /// only when the histogram is empty — a single-sample window
+    /// reports that sample at every quantile.
+    pub fn value_at(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let q = if q.is_finite() { q.clamp(0.0, 1.0) } else { 1.0 };
+        let rank =
+            ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(b)
+                    .min(self.max_ns)
+                    .max(self.min_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// [`HdrLite::value_at`] as a [`Duration`].
+    pub fn percentile(&self, q: f64) -> Duration {
+        Duration::from_nanos(self.value_at(q))
+    }
+
+    /// Flatten for the wire: `total, min_ns, max_ns`, then the bucket
+    /// counts — [`HDR_WIRE_FIELDS`] values.
+    pub fn to_wire(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(HDR_WIRE_FIELDS);
+        out.push(self.total);
+        out.push(self.min_ns);
+        out.push(self.max_ns);
+        out.extend_from_slice(&self.counts);
+        out
+    }
+
+    /// Rebuild from a wire flattening. Tolerant of short slices (a
+    /// payload from an older peer): missing fields read as zero.
+    pub fn from_wire(vals: &[u64]) -> HdrLite {
+        let at = |i: usize| vals.get(i).copied().unwrap_or(0);
+        let mut h = HdrLite {
+            counts: [0; HDR_BUCKETS],
+            total: at(0),
+            min_ns: at(1),
+            max_ns: at(2),
+        };
+        for (b, slot) in h.counts.iter_mut().enumerate() {
+            *slot = at(3 + b);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn us(v: u64) -> Duration {
+        Duration::from_micros(v)
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = HdrLite::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(0.5), Duration::ZERO);
+        assert_eq!(h.percentile(0.99), Duration::ZERO);
+        assert_eq!(h.max(), Duration::ZERO);
+        assert_eq!(h.min(), Duration::ZERO);
+    }
+
+    #[test]
+    fn single_sample_reports_itself_at_every_quantile() {
+        let mut h = HdrLite::new();
+        h.record(us(5_000));
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), us(5_000), "q={q}");
+        }
+        assert_eq!(h.min(), us(5_000));
+        assert_eq!(h.max(), us(5_000));
+    }
+
+    #[test]
+    fn two_samples_split_between_min_and_max() {
+        let mut h = HdrLite::new();
+        h.record(us(1_000));
+        h.record(us(100_000));
+        // p50 lands on the first sample's bucket (within 2x), p99 on
+        // the exact max.
+        let p50 = h.value_at(0.5);
+        assert!(
+            (500_000..=2_000_000).contains(&p50),
+            "p50 within 2x of 1ms: {p50}ns"
+        );
+        assert_eq!(h.percentile(0.99), us(100_000), "p99 clamps to max");
+        assert_eq!(h.percentile(1.0), us(100_000));
+    }
+
+    #[test]
+    fn skewed_window_keeps_the_tail_visible() {
+        // 99 fast samples and one 1 s outlier: p50/p99 stay near the
+        // body, p100 reports the outlier exactly.
+        let mut h = HdrLite::new();
+        for _ in 0..99 {
+            h.record(us(1_000));
+        }
+        h.record(Duration::from_secs(1));
+        let p50 = h.value_at(0.5);
+        assert!(p50 <= 2_000_000, "p50 near the body: {p50}ns");
+        let p99 = h.value_at(0.99);
+        assert!(p99 <= 2_000_000, "p99 is the 99th of 100: {p99}ns");
+        assert_eq!(h.percentile(1.0), Duration::from_secs(1));
+        assert_eq!(h.max(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn quantiles_are_within_2x_and_monotone() {
+        let mut h = HdrLite::new();
+        for v in [100u64, 200, 300, 431, 1_024, 9_999, 65_536] {
+            h.record_ns(v);
+        }
+        let mut prev = 0;
+        for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let v = h.value_at(q);
+            assert!(v >= prev, "monotone at q={q}");
+            prev = v;
+        }
+        // Every reported quantile is a plausible sample bound.
+        assert!(h.value_at(0.5) >= 100 && h.value_at(0.5) <= 65_536);
+        assert_eq!(h.value_at(1.0), 65_536);
+    }
+
+    #[test]
+    fn zero_values_land_in_bucket_zero() {
+        let mut h = HdrLite::new();
+        h.record_ns(0);
+        h.record_ns(0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.value_at(0.99), 0);
+        assert_eq!(h.max(), Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_matches_recording_into_one() {
+        let samples_a = [120u64, 4_500, 88_000, 1_000_000];
+        let samples_b = [60u64, 60, 9, 77_000_000];
+        let mut a = HdrLite::new();
+        let mut b = HdrLite::new();
+        let mut all = HdrLite::new();
+        for v in samples_a {
+            a.record_ns(v);
+            all.record_ns(v);
+        }
+        for v in samples_b {
+            b.record_ns(v);
+            all.record_ns(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+        // Merging an empty histogram is a no-op in both directions.
+        let mut empty = HdrLite::new();
+        empty.merge(&a);
+        assert_eq!(empty, all);
+        a.merge(&HdrLite::new());
+        assert_eq!(a, all);
+    }
+
+    #[test]
+    fn wire_flattening_round_trips_and_tolerates_truncation() {
+        let mut h = HdrLite::new();
+        for v in [1u64, 2, 3, 500, 123_456_789] {
+            h.record_ns(v);
+        }
+        let flat = h.to_wire();
+        assert_eq!(flat.len(), HDR_WIRE_FIELDS);
+        assert_eq!(HdrLite::from_wire(&flat), h);
+        // A short payload (older peer) zero-fills the missing tail
+        // instead of erroring.
+        let short = HdrLite::from_wire(&flat[..10]);
+        assert_eq!(short.count(), h.count());
+        assert_eq!(short.max(), h.max());
+        // An empty payload is an empty histogram.
+        assert_eq!(HdrLite::from_wire(&[]), HdrLite::new());
+    }
+
+    #[test]
+    fn hostile_quantiles_never_panic() {
+        let mut h = HdrLite::new();
+        h.record_ns(42);
+        for q in [-1.0, 2.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let v = h.value_at(q);
+            assert!(v == 42, "q={q} → {v}");
+        }
+    }
+}

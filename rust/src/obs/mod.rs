@@ -1,0 +1,530 @@
+//! Crate-wide observability: span tracing + latency histograms.
+//!
+//! The serving stack spans threads (batcher → worker → decode service)
+//! and processes (router → `shard-worker` over unix sockets); coarse
+//! EWMA averages say *that* it is slow, never *where*. This module is
+//! the substrate that answers "where did this request spend its time":
+//!
+//! * **Span recorder** — a fixed-size ring buffer of
+//!   [`SpanEvent`]s (`{trace_id, kind, label, t_start_ns, dur_ns}`).
+//!   Recording is allocation-free: a relaxed atomic slot claim plus an
+//!   uncontended per-slot `try_lock` (contended slots count as dropped
+//!   rather than block the hot path). One global recorder per process;
+//!   `shard-worker` processes expose theirs over the wire so a
+//!   cross-process timeline can be stitched.
+//! * **Trace context** — [`mint_trace`] allocates a process-unique
+//!   trace id; [`with_trace`] pins it to the current thread for the
+//!   duration of a guard. The inference server mints one per batch
+//!   leader, the forward chain and stores read it implicitly, the IPC
+//!   client sends it inside `Fetch`/`Prefetch` frames, and the worker
+//!   re-pins it around request handling — so a decode running three
+//!   hops away still lands under the originating request's trace.
+//! * **Span taxonomy** ([`SpanKind`]) — `enqueue`/`queue` (batcher),
+//!   `batch_form`/`batch` (formation and execution), `gemv` (per
+//!   layer), `decode` (submit→install on the decode service),
+//!   `readahead_plan`/`readahead_skip`, `cache_hit`/`cache_miss`/
+//!   `evict` (model store), `ipc_fetch`/`ipc_prefetch` (wire round
+//!   trips).
+//! * **Histograms** — [`HdrLite`], 64 pow-2 buckets, mergeable,
+//!   wire-flat; the percentile engine under
+//!   [`crate::coordinator::MetricsSnapshot`] and
+//!   [`crate::store::StoreMetrics`].
+//! * **Exporters** — [`chrome_trace`] renders recorded events as
+//!   Chrome trace-event JSON (`chrome://tracing` / Perfetto, one pid
+//!   lane per process); `f2f serve --trace-out` / `--metrics-out`
+//!   drive it from the CLI.
+//!
+//! Recording compiles out with `--no-default-features` (the `obs`
+//! feature, on by default): every `span`/`event` call becomes a no-op
+//! and the ring buffer is never allocated. With the feature on, a
+//! runtime kill switch ([`set_enabled`]) lets one binary measure the
+//! recorder's own overhead (see `obs_overhead_pct` in
+//! `benches/store.rs`). Trace-id minting stays available either way —
+//! it is one relaxed atomic increment and the wire format carries it
+//! unconditionally.
+
+mod export;
+mod hist;
+
+pub use export::{chrome_trace, ProcessLane};
+pub use hist::{HdrLite, HDR_BUCKETS, HDR_WIRE_FIELDS};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+/// The null trace id: events recorded outside any request context.
+pub const TRACE_NONE: u64 = 0;
+
+/// Ring-buffer capacity of the global recorder (events, not bytes).
+pub const DEFAULT_EVENT_CAPACITY: usize = 65_536;
+
+/// Label bytes carried inline per event (longer labels truncate at a
+/// UTF-8 boundary — layer names are short; nothing allocates).
+pub const MAX_LABEL_BYTES: usize = 32;
+
+/// What a span measures. The discriminant is the wire encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// A request entered the batcher queue (instant).
+    Enqueue = 0,
+    /// Time a request waited in the queue (enqueue → dequeue).
+    Queue = 1,
+    /// Batch formation: first member's enqueue → batch closed.
+    BatchForm = 2,
+    /// One batch's forward execution.
+    Batch = 3,
+    /// One layer's GEMV phase over the whole batch.
+    Gemv = 4,
+    /// One layer decode, submit → install (queue wait included).
+    Decode = 5,
+    /// A readahead plan was issued for the labeled layer (instant).
+    ReadaheadPlan = 6,
+    /// A readahead was declined by budget admission (instant).
+    ReadaheadSkip = 7,
+    /// Store cache hit (instant).
+    CacheHit = 8,
+    /// Store cache miss (instant).
+    CacheMiss = 9,
+    /// A decoded layer was evicted (instant).
+    Evict = 10,
+    /// One IPC fetch round trip (request sent → layer received).
+    IpcFetch = 11,
+    /// One IPC prefetch round trip (request sent → ack received).
+    IpcPrefetch = 12,
+}
+
+impl SpanKind {
+    /// Every kind, in discriminant order.
+    pub const ALL: [SpanKind; 13] = [
+        SpanKind::Enqueue,
+        SpanKind::Queue,
+        SpanKind::BatchForm,
+        SpanKind::Batch,
+        SpanKind::Gemv,
+        SpanKind::Decode,
+        SpanKind::ReadaheadPlan,
+        SpanKind::ReadaheadSkip,
+        SpanKind::CacheHit,
+        SpanKind::CacheMiss,
+        SpanKind::Evict,
+        SpanKind::IpcFetch,
+        SpanKind::IpcPrefetch,
+    ];
+
+    /// Stable snake_case name (the Chrome-trace event name).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Enqueue => "enqueue",
+            SpanKind::Queue => "queue",
+            SpanKind::BatchForm => "batch_form",
+            SpanKind::Batch => "batch",
+            SpanKind::Gemv => "gemv",
+            SpanKind::Decode => "decode",
+            SpanKind::ReadaheadPlan => "readahead_plan",
+            SpanKind::ReadaheadSkip => "readahead_skip",
+            SpanKind::CacheHit => "cache_hit",
+            SpanKind::CacheMiss => "cache_miss",
+            SpanKind::Evict => "evict",
+            SpanKind::IpcFetch => "ipc_fetch",
+            SpanKind::IpcPrefetch => "ipc_prefetch",
+        }
+    }
+
+    /// Wire discriminant.
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    /// Decode a wire discriminant (`None` for kinds from a newer
+    /// peer — callers drop such events rather than error).
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        SpanKind::ALL.get(v as usize).copied()
+    }
+
+    /// True for point events (rendered as instants, not slices).
+    pub fn is_instant(self) -> bool {
+        matches!(
+            self,
+            SpanKind::Enqueue
+                | SpanKind::ReadaheadPlan
+                | SpanKind::ReadaheadSkip
+                | SpanKind::CacheHit
+                | SpanKind::CacheMiss
+                | SpanKind::Evict
+        )
+    }
+}
+
+/// One recorded span: fixed-size, `Copy`, no heap — the ring-buffer
+/// slot type and the wire `TraceReply` element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// The request trace this span belongs to ([`TRACE_NONE`] when
+    /// recorded outside any request context).
+    pub trace_id: u64,
+    /// Start of the span, nanoseconds since the unix epoch (wall
+    /// clock, so lanes from different processes align).
+    pub t_start_ns: u64,
+    /// Span length in nanoseconds (0 for instants).
+    pub dur_ns: u64,
+    /// What was measured.
+    pub kind: SpanKind,
+    label_len: u8,
+    label: [u8; MAX_LABEL_BYTES],
+}
+
+impl SpanEvent {
+    /// Build an event; `label` truncates to [`MAX_LABEL_BYTES`] at a
+    /// UTF-8 boundary.
+    pub fn new(
+        trace_id: u64,
+        kind: SpanKind,
+        label: &str,
+        t_start_ns: u64,
+        dur_ns: u64,
+    ) -> SpanEvent {
+        let mut n = label.len().min(MAX_LABEL_BYTES);
+        while n > 0 && !label.is_char_boundary(n) {
+            n -= 1;
+        }
+        let mut buf = [0u8; MAX_LABEL_BYTES];
+        buf[..n].copy_from_slice(&label.as_bytes()[..n]);
+        SpanEvent {
+            trace_id,
+            t_start_ns,
+            dur_ns,
+            kind,
+            label_len: n as u8,
+            label: buf,
+        }
+    }
+
+    /// The span's label (usually a layer name; may be empty).
+    pub fn label(&self) -> &str {
+        std::str::from_utf8(&self.label[..self.label_len as usize])
+            .unwrap_or("")
+    }
+}
+
+/// Fixed-size concurrent ring buffer of [`SpanEvent`]s. Recording
+/// claims a slot with one relaxed `fetch_add` and writes it under an
+/// uncontended per-slot `try_lock`; a contended slot (another thread
+/// mid-write on the same wrapped index) counts as dropped instead of
+/// blocking. Snapshots are the cold path: they lock slot by slot.
+#[derive(Debug)]
+pub struct SpanRecorder {
+    slots: Vec<std::sync::Mutex<Option<SpanEvent>>>,
+    head: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl SpanRecorder {
+    /// A recorder holding the newest `capacity` events (min 1).
+    pub fn new(capacity: usize) -> SpanRecorder {
+        let capacity = capacity.max(1);
+        SpanRecorder {
+            slots: (0..capacity)
+                .map(|_| std::sync::Mutex::new(None))
+                .collect(),
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one event (lock-cheap, allocation-free).
+    pub fn record(&self, ev: SpanEvent) {
+        let i = self.head.fetch_add(1, Ordering::Relaxed) as usize
+            % self.slots.len();
+        match self.slots[i].try_lock() {
+            Ok(mut slot) => *slot = Some(ev),
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Copy out every retained event, ordered by start time.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let mut out: Vec<SpanEvent> = self
+            .slots
+            .iter()
+            .filter_map(|s| *s.lock().unwrap())
+            .collect();
+        out.sort_by_key(|e| (e.t_start_ns, e.dur_ns));
+        out
+    }
+
+    /// Discard every retained event.
+    pub fn clear(&self) {
+        for s in &self.slots {
+            *s.lock().unwrap() = None;
+        }
+    }
+
+    /// Events lost to slot contention or ring wrap-around of an
+    /// in-progress write (not wrap-around itself, which overwrites).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace context: always compiled (one atomic + one thread-local cell);
+// only *recording* is feature-gated.
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static CURRENT_TRACE: std::cell::Cell<u64> =
+        const { std::cell::Cell::new(TRACE_NONE) };
+}
+
+/// Allocate a fresh trace id, unique within this process and salted
+/// with the pid so ids from router and workers never collide.
+pub fn mint_trace() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    ((std::process::id() as u64 & 0xFFFF) << 48) | (n & 0xFFFF_FFFF_FFFF)
+}
+
+/// The trace id pinned to this thread ([`TRACE_NONE`] outside any).
+pub fn current_trace() -> u64 {
+    CURRENT_TRACE.with(|c| c.get())
+}
+
+/// Restores the previous thread trace id on drop.
+#[must_use = "the trace is unpinned when the guard drops"]
+pub struct TraceGuard {
+    prev: u64,
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        CURRENT_TRACE.with(|c| c.set(self.prev));
+    }
+}
+
+/// Pin `trace_id` to the current thread until the guard drops.
+pub fn with_trace(trace_id: u64) -> TraceGuard {
+    let prev = CURRENT_TRACE.with(|c| c.replace(trace_id));
+    TraceGuard { prev }
+}
+
+/// Pin the current trace if one exists, else mint and pin a fresh one
+/// — how `forward_batch` entry points guarantee every pass has a
+/// trace without double-minting under the inference server.
+pub fn ensure_trace() -> TraceGuard {
+    let cur = current_trace();
+    if cur == TRACE_NONE {
+        with_trace(mint_trace())
+    } else {
+        with_trace(cur)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Global recorder + recording entry points (feature-gated bodies).
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "obs")]
+mod hot {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::OnceLock;
+
+    pub(super) static ENABLED: AtomicBool = AtomicBool::new(true);
+
+    pub(super) fn global() -> &'static SpanRecorder {
+        static GLOBAL: OnceLock<SpanRecorder> = OnceLock::new();
+        GLOBAL.get_or_init(|| SpanRecorder::new(DEFAULT_EVENT_CAPACITY))
+    }
+}
+
+/// True when recording is compiled in *and* runtime-enabled.
+pub fn enabled() -> bool {
+    #[cfg(feature = "obs")]
+    {
+        hot::ENABLED.load(Ordering::Relaxed)
+    }
+    #[cfg(not(feature = "obs"))]
+    {
+        false
+    }
+}
+
+/// Runtime kill switch (no-op when the `obs` feature is off). Lets one
+/// binary measure the recorder's own overhead.
+pub fn set_enabled(on: bool) {
+    #[cfg(feature = "obs")]
+    hot::ENABLED.store(on, Ordering::Relaxed);
+    #[cfg(not(feature = "obs"))]
+    let _ = on;
+}
+
+/// Nanoseconds since the unix epoch (wall clock — cross-process lanes
+/// must share a clock, which `Instant` does not).
+pub fn unix_now_ns() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| u64::try_from(d.as_nanos()).unwrap_or(u64::MAX))
+        .unwrap_or(0)
+}
+
+#[cfg(feature = "obs")]
+fn saturating_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// Record a completed span of `dur` ending now, under an explicit
+/// trace id.
+pub fn span_for(trace_id: u64, kind: SpanKind, label: &str, dur: Duration) {
+    #[cfg(feature = "obs")]
+    if enabled() {
+        let dur_ns = saturating_ns(dur);
+        let start = unix_now_ns().saturating_sub(dur_ns);
+        hot::global()
+            .record(SpanEvent::new(trace_id, kind, label, start, dur_ns));
+    }
+    #[cfg(not(feature = "obs"))]
+    {
+        let _ = (trace_id, kind, label, dur);
+    }
+}
+
+/// Record a completed span of `dur` ending now, under the current
+/// thread's trace.
+pub fn span(kind: SpanKind, label: &str, dur: Duration) {
+    span_for(current_trace(), kind, label, dur);
+}
+
+/// Record an instant event under an explicit trace id.
+pub fn event_for(trace_id: u64, kind: SpanKind, label: &str) {
+    span_for(trace_id, kind, label, Duration::ZERO);
+}
+
+/// Record an instant event under the current thread's trace.
+pub fn event(kind: SpanKind, label: &str) {
+    span_for(current_trace(), kind, label, Duration::ZERO);
+}
+
+/// Snapshot the global recorder (empty when `obs` is compiled out).
+pub fn snapshot() -> Vec<SpanEvent> {
+    #[cfg(feature = "obs")]
+    {
+        hot::global().snapshot()
+    }
+    #[cfg(not(feature = "obs"))]
+    {
+        Vec::new()
+    }
+}
+
+/// Clear the global recorder (no-op when `obs` is compiled out).
+pub fn clear() {
+    #[cfg(feature = "obs")]
+    hot::global().clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_event_truncates_labels_at_char_boundaries() {
+        let e = SpanEvent::new(1, SpanKind::Gemv, "mlp/fc0", 10, 5);
+        assert_eq!(e.label(), "mlp/fc0");
+        assert_eq!(e.trace_id, 1);
+        assert_eq!(e.dur_ns, 5);
+        let long = "x".repeat(MAX_LABEL_BYTES + 10);
+        let e = SpanEvent::new(1, SpanKind::Gemv, &long, 0, 0);
+        assert_eq!(e.label().len(), MAX_LABEL_BYTES);
+        // A multi-byte char straddling the cut is dropped whole.
+        let tricky = format!("{}é", "a".repeat(MAX_LABEL_BYTES - 1));
+        let e = SpanEvent::new(1, SpanKind::Gemv, &tricky, 0, 0);
+        assert_eq!(e.label(), "a".repeat(MAX_LABEL_BYTES - 1));
+    }
+
+    #[test]
+    fn kinds_round_trip_their_wire_discriminant() {
+        for k in SpanKind::ALL {
+            assert_eq!(SpanKind::from_u8(k.as_u8()), Some(k));
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(SpanKind::from_u8(200), None, "future kinds drop");
+    }
+
+    #[test]
+    fn recorder_retains_newest_and_orders_snapshots() {
+        let r = SpanRecorder::new(4);
+        for i in 0..6u64 {
+            r.record(SpanEvent::new(i, SpanKind::Gemv, "l", 100 - i, 0));
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 4, "ring keeps the newest capacity");
+        // Ordered by start time regardless of record order.
+        for w in snap.windows(2) {
+            assert!(w[0].t_start_ns <= w[1].t_start_ns);
+        }
+        r.clear();
+        assert!(r.snapshot().is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn trace_context_nests_and_restores() {
+        assert_eq!(current_trace(), TRACE_NONE);
+        let a = mint_trace();
+        let b = mint_trace();
+        assert_ne!(a, b);
+        assert_ne!(a, TRACE_NONE);
+        {
+            let _g = with_trace(a);
+            assert_eq!(current_trace(), a);
+            {
+                let _g2 = with_trace(b);
+                assert_eq!(current_trace(), b);
+            }
+            assert_eq!(current_trace(), a);
+            // ensure_trace keeps an existing pin.
+            let _g3 = ensure_trace();
+            assert_eq!(current_trace(), a);
+        }
+        assert_eq!(current_trace(), TRACE_NONE);
+        // ensure_trace mints when unpinned.
+        let g = ensure_trace();
+        assert_ne!(current_trace(), TRACE_NONE);
+        drop(g);
+        assert_eq!(current_trace(), TRACE_NONE);
+    }
+
+    #[cfg(feature = "obs")]
+    #[test]
+    fn global_recording_respects_the_kill_switch() {
+        // Serialized against other tests by using distinctive labels:
+        // the global recorder is process-wide.
+        set_enabled(true);
+        let tr = mint_trace();
+        {
+            let _g = with_trace(tr);
+            span(SpanKind::Batch, "kill-switch-on", Duration::from_micros(5));
+        }
+        set_enabled(false);
+        span_for(tr, SpanKind::Batch, "kill-switch-off", Duration::ZERO);
+        set_enabled(true);
+        let snap = snapshot();
+        assert!(snap
+            .iter()
+            .any(|e| e.label() == "kill-switch-on" && e.trace_id == tr));
+        assert!(!snap.iter().any(|e| e.label() == "kill-switch-off"));
+    }
+
+    #[cfg(not(feature = "obs"))]
+    #[test]
+    fn compiled_out_recording_is_inert() {
+        set_enabled(true);
+        assert!(!enabled());
+        span(SpanKind::Batch, "never", Duration::from_secs(1));
+        assert!(snapshot().is_empty());
+        clear();
+    }
+}

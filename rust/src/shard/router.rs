@@ -18,7 +18,8 @@ struct ChainLink {
 }
 
 /// Aggregated router metrics: one snapshot per shard store, their
-/// field-wise sum (see [`StoreMetrics::merge`]), and the merged
+/// field-wise sum (see [`StoreMetrics::merge`] — counters add, decode
+/// and GEMV latency histograms merge exactly), and the merged
 /// per-layer cost table the stores observed.
 #[derive(Debug, Clone)]
 pub struct ShardMetrics {
@@ -215,6 +216,9 @@ impl ShardRouter {
 
 impl Backend for ShardRouter {
     fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        // Trace context for callers outside the inference server (the
+        // server pins the batch leader's trace before calling in).
+        let _trace = crate::obs::ensure_trace();
         // Resolve each chain step to its owning shard's store and run
         // the exact same inner loop as the single-store `ModelBackend`
         // (bit-identical outputs by construction). Readahead targets

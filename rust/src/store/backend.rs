@@ -17,6 +17,7 @@
 use super::readahead::wrapped_targets;
 use super::{ModelStore, ReadaheadCandidate, ReadaheadPolicy};
 use crate::coordinator::Backend;
+use crate::obs;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 use std::time::Instant;
@@ -75,6 +76,9 @@ pub(crate) fn forward_chain(
         // held — readahead admission correctly accounts for the
         // executing layer's bytes.
         let depth = planned_depth(readahead, links, i, acts.len());
+        if depth > 0 {
+            obs::event(obs::SpanKind::ReadaheadPlan, name);
+        }
         for t in wrapped_targets(i, links.len(), depth) {
             let (ahead_store, ahead_name) = links[t];
             ahead_store.prefetch_async(ahead_name);
@@ -91,7 +95,9 @@ pub(crate) fn forward_chain(
             }
             *a = y;
         }
-        store.costs().record_gemv(name, gemv_start.elapsed(), acts.len());
+        let gemv_took = gemv_start.elapsed();
+        obs::span(obs::SpanKind::Gemv, name, gemv_took);
+        store.costs().record_gemv(name, gemv_took, acts.len());
     }
     Ok(acts)
 }
@@ -262,6 +268,9 @@ impl ModelBackend {
 
 impl Backend for ModelBackend {
     fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        // Callers entering outside a server-minted trace (examples,
+        // benches, direct use) still get a connected timeline.
+        let _trace = obs::ensure_trace();
         let links: Vec<(&ModelStore, &str)> = self
             .chain
             .iter()

@@ -36,6 +36,7 @@
 use super::pool::{DecodeOutcome, DecodeService};
 use super::source::RecordSource;
 use super::timing::{LayerCost, LayerCosts};
+use crate::obs::{self, HdrLite};
 use crate::container::{
     read_container, read_layer_at, CompressedLayer, Container,
     ContainerIndex,
@@ -105,6 +106,11 @@ pub struct StoreMetrics {
     /// Total wall nanoseconds of GEMV phases recorded against this
     /// store's layers by the forward chain.
     pub gemv_ns_total: u64,
+    /// Distribution of decode submit→install wall times (every sample
+    /// behind `decode_ns_total`, log-bucketed and mergeable).
+    pub decode_hist: HdrLite,
+    /// Distribution of per-layer GEMV phase wall times.
+    pub gemv_hist: HdrLite,
 }
 
 impl StoreMetrics {
@@ -124,6 +130,8 @@ impl StoreMetrics {
         self.pinned_bytes += other.pinned_bytes;
         self.decode_ns_total += other.decode_ns_total;
         self.gemv_ns_total += other.gemv_ns_total;
+        self.decode_hist.merge(&other.decode_hist);
+        self.gemv_hist.merge(&other.gemv_hist);
     }
 }
 
@@ -326,6 +334,7 @@ impl StoreInner {
             if let Some(e) = st.entries.remove(&victim) {
                 st.cached_bytes -= e.bytes;
                 st.evictions += 1;
+                obs::event(obs::SpanKind::Evict, &victim);
             }
         }
     }
@@ -660,6 +669,7 @@ impl ModelStore {
                 st.pinned_bytes.saturating_add(st.in_flight_bytes);
             if need.saturating_add(committed) > self.inner.budget {
                 st.readahead_skips += 1;
+                obs::event(obs::SpanKind::ReadaheadSkip, name);
                 return false;
             }
             st.prefetches += 1;
@@ -709,9 +719,11 @@ impl ModelStore {
         if let Some(e) = st.entries.get_mut(name) {
             e.last_used = clock;
             st.hits += 1;
+            obs::event(obs::SpanKind::CacheHit, name);
             return Fetch::Hit(e.layer.clone());
         }
         st.misses += 1;
+        obs::event(obs::SpanKind::CacheMiss, name);
         if let Some(flight) = st.in_flight.get(name) {
             Fetch::Wait(flight.clone())
         } else {
@@ -748,6 +760,8 @@ impl ModelStore {
             pinned_bytes: st.pinned_bytes,
             decode_ns_total: self.inner.costs.decode_ns_total(),
             gemv_ns_total: self.inner.costs.gemv_ns_total(),
+            decode_hist: self.inner.costs.decode_hist(),
+            gemv_hist: self.inner.costs.gemv_hist(),
         }
     }
 
@@ -1061,7 +1075,14 @@ mod tests {
     #[test]
     fn metrics_merge_sums_every_field() {
         // Direct coverage of the aggregation the shard router relies
-        // on — every field, including the timing totals, must sum.
+        // on — every field, including the timing totals and the
+        // latency histograms, must sum.
+        let mut ha = HdrLite::new();
+        ha.record_ns(11);
+        let mut hb = HdrLite::new();
+        hb.record_ns(1100);
+        let mut hab = ha;
+        hab.merge(&hb);
         let a = StoreMetrics {
             hits: 1,
             misses: 2,
@@ -1075,6 +1096,8 @@ mod tests {
             pinned_bytes: 10,
             decode_ns_total: 11,
             gemv_ns_total: 12,
+            decode_hist: ha,
+            gemv_hist: ha,
         };
         let b = StoreMetrics {
             hits: 100,
@@ -1089,6 +1112,8 @@ mod tests {
             pinned_bytes: 1000,
             decode_ns_total: 1100,
             gemv_ns_total: 1200,
+            decode_hist: hb,
+            gemv_hist: hb,
         };
         let mut merged = a;
         merged.merge(&b);
@@ -1107,6 +1132,8 @@ mod tests {
                 pinned_bytes: 1010,
                 decode_ns_total: 1111,
                 gemv_ns_total: 1212,
+                decode_hist: hab,
+                gemv_hist: hab,
             }
         );
         // Merging the identity changes nothing.
@@ -1129,6 +1156,8 @@ mod tests {
         let m = store.metrics();
         assert!(m.decode_ns_total > 0);
         assert_eq!(m.gemv_ns_total, 0);
+        assert_eq!(m.decode_hist.count(), 2, "one sample per decode");
+        assert!(m.gemv_hist.is_empty());
         // A cache hit records no new decode sample.
         store.get("fc0").unwrap();
         assert_eq!(store.costs().get("fc0").unwrap().decode_samples, 1);

@@ -22,6 +22,7 @@
 use crate::container::{CompressedLayer, Container};
 use crate::decoder::SequentialDecoder;
 use crate::gf2::BitVecF2;
+use crate::obs;
 use crate::sparse::{assemble, decode_plane, DecodedLayer};
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
@@ -239,6 +240,10 @@ struct LayerTask {
     /// When the task was submitted; completion stamps the elapsed wall
     /// time into the callback.
     submitted: Instant,
+    /// Trace id active on the submitting thread, so the decode span a
+    /// readahead kicks off attributes to the request that planned it
+    /// even though it completes on a worker thread.
+    trace: u64,
     /// Set once by [`LayerTask::begin`] before any plane job runs.
     layer: std::sync::OnceLock<Arc<CompressedLayer>>,
     /// Built lazily by the first worker job (tables are up to
@@ -255,6 +260,7 @@ impl LayerTask {
     fn new(on_done: Option<OnDone>) -> Self {
         LayerTask {
             submitted: Instant::now(),
+            trace: obs::current_trace(),
             layer: std::sync::OnceLock::new(),
             decoder: std::sync::OnceLock::new(),
             planes: Mutex::new(Vec::new()),
@@ -353,8 +359,17 @@ impl LayerTask {
             self.on_done.lock().unwrap().take()
         };
         self.cv.notify_all();
+        // First writer only (the early return above): one decode span
+        // per task, covering submit→install (queue wait included).
+        let took = self.submitted.elapsed();
+        obs::span_for(
+            self.trace,
+            obs::SpanKind::Decode,
+            &self.layer_name(),
+            took,
+        );
         if let Some(cb) = cb {
-            cb(outcome, self.submitted.elapsed());
+            cb(outcome, took);
         }
     }
 

@@ -29,7 +29,11 @@
 //! The planner decides *how deep*; admission control in the store
 //! (budget + pinned set + in-flight dedup) remains the final
 //! gatekeeper, so a plan can only ever warm, never evict the working
-//! set.
+//! set. Both halves of that decision are traced: the forward chain
+//! records a `readahead_plan` instant when it issues a plan, and the
+//! store records a `readahead_skip` instant when admission declines a
+//! warm (see [`crate::obs::SpanKind`]) — so a trace shows not just
+//! what was warmed but what the planner *tried* and lost to budget.
 
 use anyhow::anyhow;
 

@@ -26,6 +26,7 @@
 //! estimates, and [`crate::shard::CostProfile`] serializes a snapshot
 //! so `f2f rebalance` can re-shard on observed decode cost.
 
+use crate::obs::HdrLite;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -123,6 +124,12 @@ pub struct LayerCosts {
     table: Mutex<BTreeMap<String, LayerCost>>,
     decode_ns_total: AtomicU64,
     gemv_ns_total: AtomicU64,
+    // Distribution counterparts of the EWMA point estimates: every
+    // recorded decode / GEMV phase also lands in a mergeable
+    // log-bucketed histogram, the per-layer-granularity feed of the
+    // metrics registry (`StoreMetrics::{decode_hist, gemv_hist}`).
+    decode_hist: Mutex<HdrLite>,
+    gemv_hist: Mutex<HdrLite>,
 }
 
 impl Default for LayerCosts {
@@ -149,6 +156,8 @@ impl LayerCosts {
             table: Mutex::new(BTreeMap::new()),
             decode_ns_total: AtomicU64::new(0),
             gemv_ns_total: AtomicU64::new(0),
+            decode_hist: Mutex::new(HdrLite::new()),
+            gemv_hist: Mutex::new(HdrLite::new()),
         }
     }
 
@@ -162,6 +171,7 @@ impl LayerCosts {
             e.decode_samples =
                 (e.decode_samples + 1).min(MAX_COST_SAMPLES);
         }
+        self.decode_hist.lock().unwrap().record_ns(ns);
         self.decode_ns_total.fetch_add(ns, Ordering::Relaxed);
     }
 
@@ -180,6 +190,7 @@ impl LayerCosts {
             e.gemv_ns = self.ewma(e.gemv_ns, e.gemv_samples, per_item);
             e.gemv_samples = (e.gemv_samples + 1).min(MAX_COST_SAMPLES);
         }
+        self.gemv_hist.lock().unwrap().record_ns(ns);
         self.gemv_ns_total.fetch_add(ns, Ordering::Relaxed);
     }
 
@@ -205,6 +216,18 @@ impl LayerCosts {
             .iter()
             .map(|(n, c)| (n.clone(), *c))
             .collect()
+    }
+
+    /// Distribution of recorded decode times (submit→install, raw ns
+    /// per decode) — a copy, mergeable across tables.
+    pub fn decode_hist(&self) -> HdrLite {
+        *self.decode_hist.lock().unwrap()
+    }
+
+    /// Distribution of recorded GEMV phase times (raw ns per phase,
+    /// *not* per item — the EWMA tracks the per-item normalization).
+    pub fn gemv_hist(&self) -> HdrLite {
+        *self.gemv_hist.lock().unwrap()
     }
 
     /// Total wall nanoseconds spent decoding (submit→install), summed
@@ -263,6 +286,36 @@ mod tests {
         // Zero-item phases record nothing.
         costs.record_gemv("fc0", Duration::from_nanos(999), 0);
         assert_eq!(costs.get("fc0").unwrap().gemv_samples, 1);
+    }
+
+    #[test]
+    fn histograms_track_recorded_distributions() {
+        let costs = LayerCosts::new();
+        assert!(costs.decode_hist().is_empty());
+        assert!(costs.gemv_hist().is_empty());
+        costs.record_decode("fc0", Duration::from_nanos(1_000));
+        costs.record_decode("fc1", Duration::from_micros(50));
+        costs.record_gemv("fc0", Duration::from_nanos(8_000), 8);
+        let d = costs.decode_hist();
+        assert_eq!(d.count(), 2);
+        assert_eq!(d.max(), Duration::from_micros(50));
+        let g = costs.gemv_hist();
+        assert_eq!(g.count(), 1);
+        assert_eq!(
+            g.percentile(0.99),
+            Duration::from_nanos(8_000),
+            "histogram keeps the raw phase time, not the per-item EWMA"
+        );
+        // Seeding pre-warms estimates only, never the distributions.
+        costs.seed(
+            "fc2",
+            LayerCost {
+                decode_ns: 500.0,
+                decode_samples: 4,
+                ..Default::default()
+            },
+        );
+        assert_eq!(costs.decode_hist().count(), 2);
     }
 
     #[test]

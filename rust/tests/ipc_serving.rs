@@ -4,9 +4,10 @@
 //! 1/2/4 worker processes must be bit-exact vs the single-store
 //! `ModelBackend` *and* the in-process `ShardRouter`; a killed worker
 //! must be restarted by the supervisor with its shard assignment
-//! replayed while the serve completes correctly; and corrupt frames on
+//! replayed while the serve completes correctly; corrupt frames on
 //! the wire must produce errors on both sides — never a panic, never a
-//! dead worker.
+//! dead worker; and (with the `obs` feature) every request's trace id
+//! must stitch one connected timeline across the process boundary.
 #![cfg(unix)]
 
 use f2f::container::{split_container, write_container_v2, ContainerIndex, ShardAssignment};
@@ -281,7 +282,7 @@ fn corrupt_frames_error_on_both_sides_and_never_kill_the_worker() {
     let mut frame = Vec::new();
     wire::send_request(
         &mut frame,
-        &wire::Request::Fetch { layer: first_layer },
+        &wire::Request::Fetch { layer: first_layer, trace: 1 },
     )
     .unwrap();
     for cut in 0..frame.len() {
@@ -319,6 +320,111 @@ fn multiproc_serves_behind_the_inference_server() {
     assert_eq!(m.completed, 8);
     assert_eq!(m.errors, 0);
     server.shutdown();
+}
+
+/// Satellite of the tracing tentpole: a 2-worker serve must produce
+/// one *connected* trace per request — router-side GEMV and
+/// `ipc_fetch` spans plus worker-side cache/decode spans, all sharing
+/// the request's trace id, with no orphaned traces in any worker lane.
+#[cfg(feature = "obs")]
+#[test]
+fn traces_stitch_across_process_boundaries() {
+    use f2f::obs::{self, SpanKind};
+
+    let bytes = model_bytes(86);
+    let xs = probes(3);
+    let dep = Deployment::spawn("trace", &bytes, 2);
+    let mut router = dep.router();
+    // One forward pass per request, each pinned to its own trace —
+    // exactly what the inference server does per batch leader.
+    let mut trace_ids = Vec::new();
+    for x in &xs {
+        let tr = obs::mint_trace();
+        let _g = obs::with_trace(tr);
+        router.forward_batch(std::slice::from_ref(x)).unwrap();
+        trace_ids.push(tr);
+    }
+    let n_layers = DIMS.len() - 1;
+
+    // Router side: every request trace carries one GEMV span and one
+    // IPC fetch round trip per chain layer.
+    let local = obs::snapshot();
+    for &tr in &trace_ids {
+        for (kind, what) in [
+            (SpanKind::Gemv, "gemv"),
+            (SpanKind::IpcFetch, "ipc fetch"),
+        ] {
+            let n = local
+                .iter()
+                .filter(|e| e.trace_id == tr && e.kind == kind)
+                .count();
+            assert_eq!(
+                n, n_layers,
+                "trace {tr:#x}: one {what} span per layer"
+            );
+        }
+    }
+
+    // Worker side: each lane is a real separate process, its spans
+    // stitch to our request traces, and nothing is orphaned.
+    let mut pids = vec![std::process::id()];
+    let mut worker_events = Vec::new();
+    for (i, client) in dep.sup.clients().iter().enumerate() {
+        let (pid, events) = client.trace_events().unwrap();
+        assert!(
+            !pids.contains(&pid),
+            "worker {i} must be its own process (pid {pid})"
+        );
+        pids.push(pid);
+        assert!(!events.is_empty(), "worker {i} recorded no spans");
+        for e in &events {
+            assert!(
+                e.trace_id == obs::TRACE_NONE
+                    || trace_ids.contains(&e.trace_id),
+                "worker {i} span {:?} is orphaned: trace {:#x} \
+                 belongs to no request",
+                e.kind,
+                e.trace_id
+            );
+        }
+        worker_events.extend(events);
+    }
+    // Every request reached the workers under its own id (the first
+    // as decodes/misses, later ones at least as cache hits) …
+    for &tr in &trace_ids {
+        assert!(
+            worker_events.iter().any(|e| e.trace_id == tr),
+            "trace {tr:#x} never appeared in any worker lane"
+        );
+    }
+    // … and each layer's one decode landed in exactly one lane.
+    let decodes = worker_events
+        .iter()
+        .filter(|e| e.kind == SpanKind::Decode)
+        .count();
+    assert_eq!(decodes, n_layers, "one decode span per chain layer");
+
+    // A killed-and-revived worker comes back with a fresh, empty
+    // recorder, answers dumps cleanly, and resumes stitched tracing.
+    dep.sup.kill_worker(0).unwrap();
+    dep.sup.revive(0).unwrap();
+    let (new_pid, events) =
+        dep.sup.clients()[0].trace_events().unwrap();
+    assert!(!pids.contains(&new_pid), "revived worker is a fresh pid");
+    assert!(
+        events.is_empty(),
+        "a fresh worker has no spans before traffic"
+    );
+    let tr = obs::mint_trace();
+    {
+        let _g = obs::with_trace(tr);
+        router.forward_batch(&xs[..1]).unwrap();
+    }
+    let (_, events) = dep.sup.clients()[0].trace_events().unwrap();
+    assert!(
+        events.iter().any(|e| e.trace_id == tr),
+        "revived worker must stitch new requests into their traces"
+    );
 }
 
 #[test]
