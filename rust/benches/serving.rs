@@ -29,7 +29,8 @@ fn main() {
                 queue_capacity: 1 << 14,
             },
             move || Box::new(NativeBackend::new(&cl2)),
-        );
+        )
+        .unwrap();
         let mut rng = Rng::new(2);
         let xs: Vec<Vec<f32>> = (0..64)
             .map(|_| (0..512).map(|_| rng.next_f32() - 0.5).collect())

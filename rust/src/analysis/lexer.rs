@@ -1,0 +1,411 @@
+//! A minimal token-level lexer for Rust source — just enough fidelity
+//! for the invariant rules in [`super::rules`].
+//!
+//! This is deliberately *not* a parser: the lint rules only need a
+//! faithful token stream (so `.unwrap()` inside a string literal or a
+//! comment never counts) plus the comment list with line spans (so
+//! `// SAFETY:` and `// lint: allow(...)` comments can be matched to
+//! the code they annotate). Handled: line and nested block comments,
+//! cooked / raw / byte strings, char literals vs. lifetimes, numeric
+//! literals (including `1.0` vs. `0..n` ranges), and identifiers.
+//! Known simplification: a non-ASCII char literal lexes as a lifetime
+//! plus a stray quote — the repo's sources are ASCII, and the failure
+//! mode is a false *positive* a human reviews, never a silent miss.
+
+/// One lexed token kind. Punctuation stays byte-per-byte (`::` is two
+/// `Punct(':')` tokens) — the rules only ever match single characters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// An identifier or keyword.
+    Ident(String),
+    /// A lifetime such as `'a` — kept distinct from [`Tok::Ident`] so
+    /// `&'a [u8]` never looks like an indexing expression.
+    Lifetime,
+    /// Any literal: string, raw string, byte string, char, or number.
+    Literal,
+    /// A single punctuation character.
+    Punct(char),
+}
+
+/// A token with the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub line: u32,
+    pub tok: Tok,
+}
+
+/// A comment with its line span (block comments may span lines) and
+/// its text — everything after the `//` / between `/*` `*/`.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub end_line: u32,
+    pub text: String,
+}
+
+/// Lex `src` into its token stream and comment list.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
+    Lexer::new(src).run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    tokens: Vec<Token>,
+    comments: Vec<Comment>,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(src: &'a str) -> Self {
+        Lexer {
+            b: src.as_bytes(),
+            i: 0,
+            line: 1,
+            tokens: Vec::new(),
+            comments: Vec::new(),
+        }
+    }
+
+    fn peek(&self, ahead: usize) -> u8 {
+        self.b.get(self.i + ahead).copied().unwrap_or(0)
+    }
+
+    fn bump(&mut self) -> u8 {
+        let c = self.peek(0);
+        self.i += 1;
+        if c == b'\n' {
+            self.line += 1;
+        }
+        c
+    }
+
+    fn text_since(&self, start: usize, end: usize) -> String {
+        let end = end.max(start);
+        String::from_utf8_lossy(&self.b[start..end]).into_owned()
+    }
+
+    fn run(mut self) -> (Vec<Token>, Vec<Comment>) {
+        while self.i < self.b.len() {
+            let c = self.peek(0);
+            match c {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                }
+                b'/' if self.peek(1) == b'/' => self.line_comment(),
+                b'/' if self.peek(1) == b'*' => self.block_comment(),
+                b'"' => {
+                    let line = self.line;
+                    self.bump();
+                    self.string_body(false, 0, line);
+                }
+                b'\'' => self.quote(),
+                b'r' | b'b' if self.literal_prefix() => {
+                    self.prefixed_literal()
+                }
+                _ if c == b'_' || c.is_ascii_alphabetic() => self.ident(),
+                _ if c.is_ascii_digit() => self.number(),
+                _ if c.is_ascii() => {
+                    let line = self.line;
+                    self.bump();
+                    self.tokens.push(Token {
+                        line,
+                        tok: Tok::Punct(c as char),
+                    });
+                }
+                // Non-ASCII outside a string or comment: opaque bytes
+                // (valid Rust only allows them in unicode idents, which
+                // this repo does not use).
+                _ => {
+                    self.bump();
+                }
+            }
+        }
+        (self.tokens, self.comments)
+    }
+
+    /// Does the `r` / `b` at the cursor start a literal (raw string,
+    /// byte string, byte char) rather than an identifier? `r#ident`
+    /// raw identifiers answer no and lex as plain tokens.
+    fn literal_prefix(&self) -> bool {
+        match self.peek(0) {
+            b'r' => match self.peek(1) {
+                b'"' => true,
+                b'#' => {
+                    let mut k = 1;
+                    while self.peek(k) == b'#' {
+                        k += 1;
+                    }
+                    self.peek(k) == b'"'
+                }
+                _ => false,
+            },
+            b'b' => match self.peek(1) {
+                b'"' | b'\'' => true,
+                b'r' => {
+                    let mut k = 2;
+                    while self.peek(k) == b'#' {
+                        k += 1;
+                    }
+                    self.peek(k) == b'"'
+                }
+                _ => false,
+            },
+            _ => false,
+        }
+    }
+
+    fn prefixed_literal(&mut self) {
+        let line = self.line;
+        if self.peek(0) == b'b' && self.peek(1) == b'\'' {
+            self.bump(); // b
+            self.char_literal(line);
+            return;
+        }
+        let mut raw = false;
+        while matches!(self.peek(0), b'b' | b'r') {
+            if self.peek(0) == b'r' {
+                raw = true;
+            }
+            self.bump();
+        }
+        let mut hashes = 0usize;
+        while self.peek(0) == b'#' {
+            hashes += 1;
+            self.bump();
+        }
+        self.bump(); // opening quote
+        self.string_body(raw, hashes, line);
+    }
+
+    /// Body of a string literal whose opening quote was consumed. In a
+    /// raw string escapes are inert and the closing quote must be
+    /// followed by `hashes` `#`s.
+    fn string_body(&mut self, raw: bool, hashes: usize, line: u32) {
+        while self.i < self.b.len() {
+            let c = self.bump();
+            if c == b'\\' && !raw {
+                self.bump();
+            } else if c == b'"' {
+                let mut k = 0;
+                while k < hashes && self.peek(0) == b'#' {
+                    self.bump();
+                    k += 1;
+                }
+                if k == hashes {
+                    break;
+                }
+            }
+        }
+        self.tokens.push(Token { line, tok: Tok::Literal });
+    }
+
+    /// A `'`: char literal (`'x'`, `'\n'`) or lifetime (`'a`).
+    fn quote(&mut self) {
+        let line = self.line;
+        if self.peek(1) == b'\\'
+            || (self.peek(2) == b'\'' && self.peek(1) != b'\'')
+        {
+            self.char_literal(line);
+        } else {
+            self.bump(); // '
+            while self.peek(0) == b'_'
+                || self.peek(0).is_ascii_alphanumeric()
+            {
+                self.bump();
+            }
+            self.tokens.push(Token { line, tok: Tok::Lifetime });
+        }
+    }
+
+    /// A char literal with the cursor on its opening quote.
+    fn char_literal(&mut self, line: u32) {
+        self.bump(); // opening quote
+        while self.i < self.b.len() {
+            let c = self.bump();
+            if c == b'\\' {
+                self.bump();
+            } else if c == b'\'' {
+                break;
+            }
+        }
+        self.tokens.push(Token { line, tok: Tok::Literal });
+    }
+
+    fn ident(&mut self) {
+        let line = self.line;
+        let start = self.i;
+        while self.peek(0) == b'_' || self.peek(0).is_ascii_alphanumeric()
+        {
+            self.bump();
+        }
+        let text = self.text_since(start, self.i);
+        self.tokens.push(Token { line, tok: Tok::Ident(text) });
+    }
+
+    /// A numeric literal. The `.` is consumed only when a digit
+    /// follows, so `0..n` stays two range dots and `1.0.abs()` stops
+    /// before the method call.
+    fn number(&mut self) {
+        let line = self.line;
+        while self.peek(0) == b'_'
+            || self.peek(0).is_ascii_alphanumeric()
+            || (self.peek(0) == b'.' && self.peek(1).is_ascii_digit())
+        {
+            self.bump();
+        }
+        self.tokens.push(Token { line, tok: Tok::Literal });
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        self.bump();
+        self.bump(); // //
+        let start = self.i;
+        while self.i < self.b.len() && self.peek(0) != b'\n' {
+            self.bump();
+        }
+        let text = self.text_since(start, self.i);
+        self.comments.push(Comment { line, end_line: line, text });
+    }
+
+    fn block_comment(&mut self) {
+        let line = self.line;
+        self.bump();
+        self.bump(); // /*
+        let start = self.i;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            if self.peek(0) == b'/' && self.peek(1) == b'*' {
+                depth += 1;
+                self.bump();
+                self.bump();
+            } else if self.peek(0) == b'*' && self.peek(1) == b'/' {
+                depth -= 1;
+                self.bump();
+                self.bump();
+            } else {
+                self.bump();
+            }
+        }
+        let text = self.text_since(start, self.i.saturating_sub(2));
+        self.comments.push(Comment {
+            line,
+            end_line: self.line,
+            text,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).0.into_iter().map(|t| t.tok).collect()
+    }
+
+    fn id(s: &str) -> Tok {
+        Tok::Ident(s.to_string())
+    }
+
+    #[test]
+    fn method_call_chain() {
+        assert_eq!(
+            toks("x.unwrap()"),
+            vec![
+                id("x"),
+                Tok::Punct('.'),
+                id("unwrap"),
+                Tok::Punct('('),
+                Tok::Punct(')'),
+            ]
+        );
+    }
+
+    #[test]
+    fn strings_and_comments_hide_their_contents() {
+        let src = r##"
+            // a comment with .unwrap() in it
+            let a = "string with .unwrap() and x[0]";
+            let b = r#"raw with panic!("no")"#;
+            /* block /* nested */ with .expect("x") */
+            let c = b"bytes .unwrap()";
+        "##;
+        let (tokens, comments) = lex(src);
+        assert!(tokens.iter().all(|t| t.tok != id("unwrap")));
+        assert!(tokens.iter().all(|t| t.tok != id("panic")));
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].text.contains("unwrap"));
+        assert!(comments[1].text.contains("nested"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_identifiers() {
+        let t = toks("fn f<'a>(x: &'a [u8]) -> &'a [u8] { x }");
+        assert!(t.contains(&Tok::Lifetime));
+        // The `[` after the lifetime follows a Lifetime token, not an
+        // identifier — the property the no-index rule relies on.
+        let i = t.iter().position(|x| *x == Tok::Lifetime).unwrap();
+        assert_eq!(t[i + 1], Tok::Punct('['));
+    }
+
+    #[test]
+    fn char_literals_versus_lifetimes() {
+        assert_eq!(toks("'x'"), vec![Tok::Literal]);
+        assert_eq!(toks(r"'\''"), vec![Tok::Literal]);
+        assert_eq!(toks("'_'"), vec![Tok::Literal]);
+        assert_eq!(toks("'static"), vec![Tok::Lifetime]);
+        assert_eq!(toks("b'z'"), vec![Tok::Literal]);
+    }
+
+    #[test]
+    fn numbers_keep_range_dots() {
+        assert_eq!(
+            toks("0..n"),
+            vec![
+                Tok::Literal,
+                Tok::Punct('.'),
+                Tok::Punct('.'),
+                id("n"),
+            ]
+        );
+        assert_eq!(toks("1.5e3"), vec![Tok::Literal]);
+        assert_eq!(toks("0xFF_u32"), vec![Tok::Literal]);
+        assert_eq!(
+            toks("1.0.abs()"),
+            vec![
+                Tok::Literal,
+                Tok::Punct('.'),
+                id("abs"),
+                Tok::Punct('('),
+                Tok::Punct(')'),
+            ]
+        );
+    }
+
+    #[test]
+    fn block_comment_spans_lines() {
+        let (_, comments) = lex("/* one\ntwo\nthree */ fn f() {}");
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].line, 1);
+        assert_eq!(comments[0].end_line, 3);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_terminate_correctly() {
+        let src = r###"let s = r##"inner "# quote"## ; done"###;
+        let t = toks(src);
+        assert_eq!(
+            t,
+            vec![
+                id("let"),
+                id("s"),
+                Tok::Punct('='),
+                Tok::Literal,
+                Tok::Punct(';'),
+                id("done"),
+            ]
+        );
+    }
+}

@@ -1,0 +1,236 @@
+//! Repo-native static analysis: the `f2f lint` invariant checker.
+//!
+//! The serving stack's contract — corrupt input *errors*, it never
+//! panics; a panicking worker degrades, it never cascades — is easy to
+//! promise in a PR description and easy to regress one `.unwrap()` at
+//! a time. With no external linting crates available offline, this
+//! module enforces the contract with a hand-rolled token-level scanner
+//! ([`lexer`]) and a small set of scoped rules ([`rules`]):
+//!
+//! | rule | scope | meaning |
+//! |------|-------|---------|
+//! | `no-unwrap` | `ipc/ container/ store/ shard/ coordinator/` | no `.unwrap()` / `.expect()` outside tests |
+//! | `no-panic` | same | no `panic!` / `assert!` / `unreachable!` / `todo!` (`debug_assert*` is fine) |
+//! | `lock-poison` | same | no `.lock().unwrap()`: use [`crate::sync`] or handle poisoning |
+//! | `no-index` | wire/container/JSON parser files | no unchecked `x[i]` on adversarial input |
+//! | `safety-comment` | all of `rust/src/` | every `unsafe` carries a `// SAFETY:` comment |
+//! | `bad-allow` | all | malformed escape-hatch comments are themselves findings |
+//!
+//! Code under `#[test]` / `#[cfg(test)]` is exempt from every rule.
+//! Justified exceptions use the escape hatch, which must name the rule
+//! *and* carry a reason:
+//!
+//! ```text
+//! // lint: allow(no-index) -- chunks_exact(4) yields 4-byte slices
+//! ```
+//!
+//! Run it as `f2f lint` (CI does, on every push); the linter itself is
+//! regression-tested against the must-fail fixture corpus in
+//! `analysis/fixtures/` (non-`.rs` extensions, so the repo walk skips
+//! them).
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_source, Finding, Rule};
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Lint every `.rs` file under `<repo_root>/rust/src`, returning all
+/// findings (empty means the repo is clean). File order — and so
+/// finding order — is deterministic.
+pub fn run_lint(repo_root: &Path) -> Result<Vec<Finding>> {
+    let src_root = repo_root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &PathBuf::new(), &mut files)
+        .with_context(|| {
+            format!("walking {}", src_root.display())
+        })?;
+    files.sort();
+    let mut findings = Vec::new();
+    for rel in files {
+        let path = src_root.join(&rel);
+        let src = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {}", path.display())
+        })?;
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok(findings)
+}
+
+fn collect_rs(
+    root: &Path,
+    rel: &Path,
+    out: &mut Vec<PathBuf>,
+) -> Result<()> {
+    for entry in std::fs::read_dir(root.join(rel))? {
+        let entry = entry?;
+        let sub = rel.join(entry.file_name());
+        if entry.file_type()?.is_dir() {
+            collect_rs(root, &sub, out)?;
+        } else if sub.extension().is_some_and(|e| e == "rs") {
+            out.push(sub);
+        }
+    }
+    Ok(())
+}
+
+/// Render findings one per line, `file:line: rule — message`, with
+/// paths relative to the repo root (clickable in most terminals).
+pub fn render(findings: &[Finding]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for f in findings {
+        let _ = writeln!(
+            out,
+            "rust/src/{}:{}: {} — {}",
+            f.file,
+            f.line,
+            f.rule.name(),
+            f.message
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Lint a fixture as if it lived at a serving-path parser file, so
+    /// every rule scope is active.
+    fn lint_fixture(src: &str) -> Vec<Finding> {
+        lint_source("container/serde.rs", src)
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<Rule> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn fixture_no_unwrap_fails() {
+        let f =
+            lint_fixture(include_str!("fixtures/no_unwrap.fixture"));
+        assert_eq!(rules_of(&f), [Rule::NoUnwrap, Rule::NoUnwrap]);
+    }
+
+    #[test]
+    fn fixture_no_panic_fails() {
+        let f = lint_fixture(include_str!("fixtures/no_panic.fixture"));
+        assert_eq!(rules_of(&f), [Rule::NoPanic, Rule::NoPanic]);
+    }
+
+    #[test]
+    fn fixture_no_index_fails() {
+        let f = lint_fixture(include_str!("fixtures/no_index.fixture"));
+        assert_eq!(rules_of(&f), [Rule::NoIndex, Rule::NoIndex]);
+    }
+
+    #[test]
+    fn fixture_safety_comment_fails() {
+        let f = lint_fixture(include_str!(
+            "fixtures/safety_comment.fixture"
+        ));
+        assert_eq!(rules_of(&f), [Rule::SafetyComment]);
+    }
+
+    #[test]
+    fn fixture_lock_poison_fails_once_not_twice() {
+        // `.lock().unwrap()` is one lock-poison finding; the trailing
+        // unwrap must not be double-reported as no-unwrap.
+        let f =
+            lint_fixture(include_str!("fixtures/lock_poison.fixture"));
+        assert_eq!(rules_of(&f), [Rule::LockPoison, Rule::LockPoison]);
+    }
+
+    #[test]
+    fn fixture_bad_allow_fails_and_suppresses_nothing() {
+        let f =
+            lint_fixture(include_str!("fixtures/bad_allow.fixture"));
+        let rules = rules_of(&f);
+        assert_eq!(
+            rules.iter().filter(|r| **r == Rule::BadAllow).count(),
+            2,
+            "{f:?}"
+        );
+        // The unwraps under the malformed allows still count.
+        assert_eq!(
+            rules.iter().filter(|r| **r == Rule::NoUnwrap).count(),
+            2,
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn fixture_allow_ok_passes() {
+        let f = lint_fixture(include_str!("fixtures/allow_ok.fixture"));
+        assert!(f.is_empty(), "{}", render(&f));
+    }
+
+    #[test]
+    fn fixture_test_mod_skip_passes() {
+        let f = lint_fixture(include_str!(
+            "fixtures/test_mod_skip.fixture"
+        ));
+        assert!(f.is_empty(), "{}", render(&f));
+    }
+
+    #[test]
+    fn fixture_tricky_lexer_passes() {
+        let f =
+            lint_fixture(include_str!("fixtures/tricky_lexer.fixture"));
+        assert!(f.is_empty(), "{}", render(&f));
+    }
+
+    #[test]
+    fn scopes_limit_rules_to_their_directories() {
+        // The same unwrap is a finding on the serving path, silent in
+        // an offline module (encoder math may panic on programmer
+        // error), and indexing is only policed in parser files.
+        let src = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(lint_source("store/pool.rs", src).len(), 1);
+        assert_eq!(lint_source("encoder/viterbi.rs", src).len(), 0);
+        let idx = "pub fn g(b: &[u8]) -> u8 { b[0] }\n";
+        assert_eq!(lint_source("ipc/wire.rs", idx).len(), 1);
+        assert_eq!(lint_source("store/pool.rs", idx).len(), 0);
+    }
+
+    #[test]
+    fn allow_covers_its_own_line_and_the_next() {
+        let trailing = "pub fn f(x: Option<u32>) -> u32 {\n\
+             x.unwrap() // lint: allow(no-unwrap) -- fixture\n\
+             }\n";
+        assert!(lint_source("store/a.rs", trailing).is_empty());
+        let too_far = "pub fn f(x: Option<u32>) -> u32 {\n\
+             // lint: allow(no-unwrap) -- fixture\n\
+             let y = x;\n\
+             y.unwrap()\n\
+             }\n";
+        assert_eq!(lint_source("store/a.rs", too_far).len(), 1);
+    }
+
+    #[test]
+    fn allow_is_rule_specific() {
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n\
+             // lint: allow(no-panic) -- wrong rule for this line\n\
+             x.unwrap()\n\
+             }\n";
+        let f = lint_source("store/a.rs", src);
+        assert_eq!(rules_of(&f), [Rule::NoUnwrap]);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // walks the real source tree
+    fn repo_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let findings = run_lint(root).expect("lint walk");
+        assert!(
+            findings.is_empty(),
+            "f2f lint found {} violation(s):\n{}",
+            findings.len(),
+            render(&findings)
+        );
+    }
+}

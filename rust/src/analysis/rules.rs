@@ -1,0 +1,422 @@
+//! The lint rules: token-level invariant checks over one source file.
+//!
+//! Each rule is scoped (see [`super`] for the full catalog): the
+//! panic-freedom rules apply to the serving-critical directories, the
+//! indexing rule to the adversarial-input parser files, and the
+//! `SAFETY:` rule to every file. Code under a `#[test]` / `#[cfg(test)]`
+//! attribute is exempt from all rules — tests are *supposed* to
+//! unwrap, panic and index freely.
+
+use super::lexer::{lex, Comment, Tok, Token};
+
+/// Directories (relative to `rust/src/`) on the serving path, where a
+/// panic is an availability bug: one poisoned mutex or unwound worker
+/// must degrade to an error response, never take the process down.
+const SERVING_DIRS: [&str; 5] =
+    ["ipc/", "container/", "store/", "shard/", "coordinator/"];
+
+/// Files that parse adversarial bytes (wire frames, container records,
+/// external JSON). Unchecked indexing is forbidden here outright:
+/// every access must be `get`-shaped or justified with an allow.
+const PARSER_FILES: [&str; 5] = [
+    "ipc/wire.rs",
+    "container/serde.rs",
+    "container/v2.rs",
+    "container/shard.rs",
+    "shard/rebalance.rs",
+];
+
+/// Macros that abort the current thread. `debug_assert*` is exempt by
+/// construction (different identifier): debug-only invariant checks
+/// are encouraged, release panics are not.
+const PANIC_MACROS: [&str; 7] = [
+    "panic",
+    "unreachable",
+    "todo",
+    "unimplemented",
+    "assert",
+    "assert_eq",
+    "assert_ne",
+];
+
+/// Keywords that may legally precede `[` without forming an index
+/// expression (`let [a, b] = …`, `&mut [0; 4]`, `impl [T]`, …).
+const INDEX_KEYWORDS: [&str; 22] = [
+    "as", "await", "box", "break", "const", "dyn", "else", "if", "impl",
+    "in", "let", "match", "move", "mut", "pub", "ref", "return",
+    "static", "type", "union", "where", "yield",
+];
+
+/// One lint rule. `name()` is the spelling used in findings and in the
+/// `// lint: allow(<rule>) -- <reason>` escape hatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// `.unwrap()` / `.expect()` in a serving-critical module.
+    NoUnwrap,
+    /// `panic!` / `assert!` / `unreachable!` / … in a serving-critical
+    /// module.
+    NoPanic,
+    /// Unchecked `x[i]` indexing in a parser file.
+    NoIndex,
+    /// An `unsafe` block or impl with no `// SAFETY:` comment within
+    /// the three preceding lines.
+    SafetyComment,
+    /// `.lock().unwrap()` (or `.wait(..).unwrap()`) — re-panics on a
+    /// mutex poisoned by an earlier panic, cascading one failure into
+    /// every later request. Use [`crate::sync::lock_unpoisoned`] /
+    /// [`crate::sync::wait_unpoisoned`] or handle the `PoisonError`.
+    LockPoison,
+    /// A malformed `// lint: allow(...)` comment: unknown rule, or a
+    /// missing `-- <reason>` justification. Never allowable itself.
+    BadAllow,
+}
+
+impl Rule {
+    /// The rule's spelling in findings and allow comments.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::NoUnwrap => "no-unwrap",
+            Rule::NoPanic => "no-panic",
+            Rule::NoIndex => "no-index",
+            Rule::SafetyComment => "safety-comment",
+            Rule::LockPoison => "lock-poison",
+            Rule::BadAllow => "bad-allow",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Rule> {
+        match s {
+            "no-unwrap" => Some(Rule::NoUnwrap),
+            "no-panic" => Some(Rule::NoPanic),
+            "no-index" => Some(Rule::NoIndex),
+            "safety-comment" => Some(Rule::SafetyComment),
+            "lock-poison" => Some(Rule::LockPoison),
+            _ => None,
+        }
+    }
+}
+
+/// One lint violation: file (relative to `rust/src/`), 1-based line,
+/// rule, and a human-oriented message.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: Rule,
+    pub message: String,
+}
+
+struct Allow {
+    rule: Rule,
+    from: u32,
+    to: u32,
+}
+
+/// Lint one file's source. `rel_path` is the path relative to
+/// `rust/src/` with `/` separators — it selects which rule scopes
+/// apply (see the module docs).
+pub fn lint_source(rel_path: &str, src: &str) -> Vec<Finding> {
+    let (tokens, comments) = lex(src);
+    let skipped = test_spans(&tokens);
+    let (allows, mut findings) = parse_allows(rel_path, &comments);
+
+    let serving = SERVING_DIRS.iter().any(|d| rel_path.starts_with(d));
+    let parser_file = PARSER_FILES.contains(&rel_path);
+    let mut push = |line: u32, rule: Rule, message: String| {
+        findings.push(Finding {
+            file: rel_path.to_string(),
+            line,
+            rule,
+            message,
+        });
+    };
+
+    // lock-poison runs first so the trailing `.unwrap` it consumes is
+    // not double-reported by no-unwrap.
+    let mut lock_unwraps = Vec::new();
+    if serving {
+        for i in 0..tokens.len() {
+            if skipped[i] || !ident_in(&tokens, i, &["lock", "wait"]) {
+                continue;
+            }
+            if i == 0 || !is_punct(&tokens, i - 1, '.') {
+                continue;
+            }
+            let Some(close) = matching_paren(&tokens, i + 1) else {
+                continue;
+            };
+            if is_punct(&tokens, close + 1, '.')
+                && ident_in(&tokens, close + 2, &["unwrap", "expect"])
+                && is_punct(&tokens, close + 3, '(')
+            {
+                lock_unwraps.push(close + 2);
+                let name = ident_text(&tokens, i);
+                push(
+                    tokens[i].line,
+                    Rule::LockPoison,
+                    format!(
+                        "`.{name}(..)` result unwrapped: panics if the \
+                         mutex was poisoned by an earlier panic; use \
+                         crate::sync::{{lock,wait}}_unpoisoned or \
+                         handle the PoisonError"
+                    ),
+                );
+            }
+        }
+    }
+
+    if serving {
+        for i in 0..tokens.len() {
+            if skipped[i] || lock_unwraps.contains(&i) {
+                continue;
+            }
+            if ident_in(&tokens, i, &["unwrap", "expect"])
+                && i > 0
+                && is_punct(&tokens, i - 1, '.')
+                && is_punct(&tokens, i + 1, '(')
+            {
+                let name = ident_text(&tokens, i);
+                push(
+                    tokens[i].line,
+                    Rule::NoUnwrap,
+                    format!(
+                        "`.{name}()` in a serving-critical module: \
+                         return an error instead of panicking"
+                    ),
+                );
+            }
+            if ident_in(&tokens, i, &PANIC_MACROS)
+                && is_punct(&tokens, i + 1, '!')
+            {
+                let name = ident_text(&tokens, i);
+                push(
+                    tokens[i].line,
+                    Rule::NoPanic,
+                    format!(
+                        "`{name}!` in a serving-critical module: \
+                         return an error (or use debug_assert! for \
+                         debug-only invariants)"
+                    ),
+                );
+            }
+        }
+    }
+
+    if parser_file {
+        for i in 1..tokens.len() {
+            if skipped[i] || !is_punct(&tokens, i, '[') {
+                continue;
+            }
+            let indexes = match &tokens[i - 1].tok {
+                Tok::Ident(name) => {
+                    !INDEX_KEYWORDS.contains(&name.as_str())
+                }
+                Tok::Punct(')' | ']' | '?') => true,
+                _ => false,
+            };
+            if indexes {
+                push(
+                    tokens[i].line,
+                    Rule::NoIndex,
+                    "unchecked indexing in a parser: corrupt input \
+                     must error, never panic — use get()/get_mut() \
+                     or split_at_checked-style access"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    for i in 0..tokens.len() {
+        if skipped[i] || !ident_in(&tokens, i, &["unsafe"]) {
+            continue;
+        }
+        let line = tokens[i].line;
+        let documented = comments.iter().any(|c| {
+            c.text.contains("SAFETY:")
+                && c.end_line <= line
+                && c.end_line + 3 >= line
+        });
+        if !documented {
+            push(
+                line,
+                Rule::SafetyComment,
+                "`unsafe` without a `// SAFETY:` comment on the \
+                 preceding lines stating why the preconditions hold"
+                    .to_string(),
+            );
+        }
+    }
+
+    findings.retain(|f| {
+        f.rule == Rule::BadAllow
+            || !allows.iter().any(|a| {
+                a.rule == f.rule && a.from <= f.line && f.line <= a.to
+            })
+    });
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// Collect `// lint: allow(<rule>) -- <reason>` comments. A valid
+/// allow suppresses its rule on the comment's own lines and the line
+/// immediately after (so both trailing and preceding placement work);
+/// a malformed one suppresses nothing and is itself a finding.
+fn parse_allows(
+    rel_path: &str,
+    comments: &[Comment],
+) -> (Vec<Allow>, Vec<Finding>) {
+    let mut allows = Vec::new();
+    let mut findings = Vec::new();
+    for c in comments {
+        let Some(body) = c.text.trim_start().strip_prefix("lint:")
+        else {
+            continue;
+        };
+        match parse_allow_body(body.trim()) {
+            Ok(rule) => allows.push(Allow {
+                rule,
+                from: c.line,
+                to: c.end_line + 1,
+            }),
+            Err(why) => findings.push(Finding {
+                file: rel_path.to_string(),
+                line: c.line,
+                rule: Rule::BadAllow,
+                message: why,
+            }),
+        }
+    }
+    (allows, findings)
+}
+
+fn parse_allow_body(body: &str) -> Result<Rule, String> {
+    let Some(rest) = body.strip_prefix("allow(") else {
+        return Err(
+            "expected `allow(<rule>) -- <reason>` after `lint:`"
+                .to_string(),
+        );
+    };
+    let Some((rule_name, rest)) = rest.split_once(')') else {
+        return Err("unclosed `allow(`".to_string());
+    };
+    let rule_name = rule_name.trim();
+    let Some(rule) = Rule::from_name(rule_name) else {
+        return Err(format!("unknown lint rule `{rule_name}`"));
+    };
+    let Some(reason) = rest.trim_start().strip_prefix("--") else {
+        return Err(format!(
+            "allow({rule_name}) is missing its `-- <reason>` \
+             justification"
+        ));
+    };
+    if reason.trim().is_empty() {
+        return Err(format!(
+            "allow({rule_name}) has an empty justification"
+        ));
+    }
+    Ok(rule)
+}
+
+/// Token indices covered by a test attribute: `#[test]`, `#[cfg(test)]`
+/// (and compositions like `#[cfg_attr(miri, ignore)] #[test]`) mark the
+/// following item — attribute through the item's matching `}` (or a
+/// `;` for item-less forms) — as exempt from every rule.
+fn test_spans(tokens: &[Token]) -> Vec<bool> {
+    let mut skip = vec![false; tokens.len()];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if !(is_punct(tokens, i, '#') && is_punct(tokens, i + 1, '[')) {
+            i += 1;
+            continue;
+        }
+        // Scan the attribute for the `test` identifier.
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut is_test = false;
+        while j < tokens.len() && depth > 0 {
+            match &tokens[j].tok {
+                Tok::Punct('[') => depth += 1,
+                Tok::Punct(']') => depth -= 1,
+                Tok::Ident(name) if name == "test" => is_test = true,
+                _ => {}
+            }
+            j += 1;
+        }
+        if !is_test {
+            i = j;
+            continue;
+        }
+        // Skip to the end of the annotated item: the matching close
+        // brace of its body, or a `;` reached before any brace.
+        let mut k = j;
+        let mut braces = 0usize;
+        let mut entered = false;
+        while k < tokens.len() {
+            match &tokens[k].tok {
+                Tok::Punct('{') => {
+                    braces += 1;
+                    entered = true;
+                }
+                Tok::Punct('}') => {
+                    braces = braces.saturating_sub(1);
+                    if entered && braces == 0 {
+                        k += 1;
+                        break;
+                    }
+                }
+                Tok::Punct(';') if !entered => {
+                    k += 1;
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        for s in skip.iter_mut().take(k).skip(i) {
+            *s = true;
+        }
+        i = k;
+    }
+    skip
+}
+
+fn is_punct(tokens: &[Token], i: usize, c: char) -> bool {
+    matches!(tokens.get(i), Some(t) if t.tok == Tok::Punct(c))
+}
+
+fn ident_in(tokens: &[Token], i: usize, names: &[&str]) -> bool {
+    match tokens.get(i).map(|t| &t.tok) {
+        Some(Tok::Ident(name)) => names.contains(&name.as_str()),
+        _ => false,
+    }
+}
+
+fn ident_text(tokens: &[Token], i: usize) -> &str {
+    match tokens.get(i).map(|t| &t.tok) {
+        Some(Tok::Ident(name)) => name,
+        _ => "",
+    }
+}
+
+/// With `tokens[open]` expected to be `(`, the index of its matching
+/// `)`.
+fn matching_paren(tokens: &[Token], open: usize) -> Option<usize> {
+    if !is_punct(tokens, open, '(') {
+        return None;
+    }
+    let mut depth = 0usize;
+    for (k, t) in tokens.iter().enumerate().skip(open) {
+        match t.tok {
+            Tok::Punct('(') => depth += 1,
+            Tok::Punct(')') => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}

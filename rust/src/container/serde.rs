@@ -85,24 +85,38 @@ impl<'a> Reader<'a> {
         Reader { buf, pos: 0 }
     }
     pub(super) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            anyhow::anyhow!(
+                "container length overflows at offset {}",
+                self.pos
+            )
+        })?;
+        let Some(s) = self.buf.get(self.pos..end) else {
             bail!("container truncated at offset {}", self.pos);
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        };
+        self.pos = end;
         Ok(s)
     }
+    /// Exactly `N` bytes as a fixed-size array (the `from_le_bytes`
+    /// shape), so the scalar accessors below never index or unwrap.
+    fn array<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let b = self.take(N)?;
+        b.try_into().map_err(|_| {
+            anyhow::anyhow!("internal: reader returned a wrong-size slice")
+        })
+    }
     pub(super) fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        let [b] = self.array()?;
+        Ok(b)
     }
     pub(super) fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.array()?))
     }
     pub(super) fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.array()?))
     }
     pub(super) fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(self.array()?))
     }
     pub(super) fn bytes(&mut self) -> Result<Vec<u8>> {
         let n = self.u32()? as usize;
@@ -110,18 +124,30 @@ impl<'a> Reader<'a> {
     }
     pub(super) fn u32s_vec(&mut self) -> Result<Vec<u32>> {
         let n = self.u32()? as usize;
-        let raw = self.take(n * 4)?;
+        let byte_len = n.checked_mul(4).ok_or_else(|| {
+            anyhow::anyhow!("u32 array length {n} overflows")
+        })?;
+        let raw = self.take(byte_len)?;
         Ok(raw
             .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| {
+                // lint: allow(no-unwrap) -- chunks_exact(4) yields exactly 4 bytes
+                u32::from_le_bytes(c.try_into().unwrap())
+            })
             .collect())
     }
     pub(super) fn words(&mut self) -> Result<Vec<u64>> {
         let n = self.u32()? as usize;
-        let raw = self.take(n * 8)?;
+        let byte_len = n.checked_mul(8).ok_or_else(|| {
+            anyhow::anyhow!("word array length {n} overflows")
+        })?;
+        let raw = self.take(byte_len)?;
         Ok(raw
             .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| {
+                // lint: allow(no-unwrap) -- chunks_exact(8) yields exactly 8 bytes
+                u64::from_le_bytes(c.try_into().unwrap())
+            })
             .collect())
     }
     pub(super) fn bitvec(&mut self) -> Result<BitVecF2> {
@@ -276,7 +302,7 @@ pub fn write_container(c: &Container) -> Vec<u8> {
 /// Parse a container from bytes. Accepts both the v1 (`F2F1`) and the
 /// indexed v2 (`F2F2`) layouts.
 pub fn read_container(bytes: &[u8]) -> Result<Container> {
-    if bytes.len() >= 4 && &bytes[..4] == super::v2::MAGIC_V2 {
+    if super::v2::is_v2(bytes) {
         return super::v2::read_container_v2(bytes);
     }
     let mut r = Reader::new(bytes);

@@ -92,13 +92,19 @@ impl ShardMap {
         let mut load = vec![0.0f64; n_shards];
         let mut assignments = Vec::with_capacity(index.len());
         for e in index.entries() {
-            let mut shard = 0usize;
-            for (s, l) in load.iter().enumerate() {
-                if *l < load[shard] {
-                    shard = s;
-                }
+            // Least-loaded shard; the tuple comparison breaks load
+            // ties toward the lowest shard id (deterministic).
+            let shard = load
+                .iter()
+                .enumerate()
+                .min_by(|(sa, a), (sb, b)| {
+                    a.total_cmp(b).then(sa.cmp(sb))
+                })
+                .map(|(s, _)| s)
+                .unwrap_or(0);
+            if let Some(l) = load.get_mut(shard) {
+                *l += weight(e);
             }
-            load[shard] += weight(e);
             assignments.push((e.name.clone(), shard));
         }
         // Funnel through the validating constructor so even maps built
@@ -228,7 +234,7 @@ impl ShardMap {
 
 /// True when `bytes` carry the shard-map (`F2F3`) magic.
 pub fn is_shard_map(bytes: &[u8]) -> bool {
-    bytes.len() >= 4 && &bytes[..4] == MAGIC_SHARD
+    bytes.get(..4) == Some(MAGIC_SHARD.as_slice())
 }
 
 /// Split serialized v2 container bytes into per-shard v2 containers plus
@@ -274,7 +280,15 @@ pub fn split_with_map(
                 entry.name
             );
         };
-        per[shard].layers.push(read_layer_at(bytes, entry)?);
+        let Some(c) = per.get_mut(shard) else {
+            bail!(
+                "layer {:?} assigned to shard {shard}, but the map has \
+                 only {} shards",
+                entry.name,
+                map.n_shards()
+            );
+        };
+        c.layers.push(read_layer_at(bytes, entry)?);
     }
     Ok(per.iter().map(write_container_v2).collect())
 }

@@ -241,11 +241,11 @@ pub fn read_layer_at(
     bytes: &[u8],
     entry: &LayerEntry,
 ) -> Result<CompressedLayer> {
-    let end = entry
+    let record = entry
         .offset
         .checked_add(entry.len)
-        .filter(|&e| e <= bytes.len());
-    let Some(end) = end else {
+        .and_then(|end| bytes.get(entry.offset..end));
+    let Some(record) = record else {
         bail!(
             "layer {}: record [{}, +{}) out of bounds",
             entry.name,
@@ -253,7 +253,7 @@ pub fn read_layer_at(
             entry.len
         );
     };
-    let mut r = Reader::new(&bytes[entry.offset..end]);
+    let mut r = Reader::new(record);
     let layer = read_layer(&mut r)?;
     if r.pos != entry.len {
         bail!(
@@ -293,7 +293,7 @@ pub fn read_layer_at(
 
 /// True when `bytes` carry the v2 (`F2F2`) magic.
 pub fn is_v2(bytes: &[u8]) -> bool {
-    bytes.len() >= 4 && &bytes[..4] == MAGIC_V2
+    bytes.get(..4) == Some(MAGIC_V2.as_slice())
 }
 
 /// Parse a whole v2 container eagerly (the [`read_container`] fallback

@@ -13,6 +13,7 @@
 //! lives in [`crate::store::StoreMetrics`]).
 
 use crate::obs::HdrLite;
+use crate::sync::lock_unpoisoned;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -60,7 +61,7 @@ impl Metrics {
         latencies: &[Duration],
         batch_time: Duration,
     ) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_unpoisoned(&self.inner);
         m.batches += 1;
         m.batched_requests += latencies.len() as u64;
         m.completed += latencies.len() as u64;
@@ -72,12 +73,12 @@ impl Metrics {
 
     /// Record a failed request.
     pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+        lock_unpoisoned(&self.inner).errors += 1;
     }
 
     /// Snapshot with percentile computation (no sort — bucket walk).
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let m = self.inner.lock().unwrap();
+        let m = lock_unpoisoned(&self.inner);
         MetricsSnapshot {
             completed: m.completed,
             batches: m.batches,

@@ -57,7 +57,8 @@ mod tests {
         let server = InferenceServer::start(
             ServerConfig::default(),
             || Box::new(Echo),
-        );
+        )
+        .unwrap();
         let y = server.infer(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
         assert_eq!(y, vec![2.0, 4.0, 6.0, 8.0]);
         server.shutdown();
@@ -70,7 +71,7 @@ mod tests {
             batch_timeout: Duration::from_millis(5),
             ..Default::default()
         };
-        let server = InferenceServer::start(cfg, || Box::new(Echo));
+        let server = InferenceServer::start(cfg, || Box::new(Echo)).unwrap();
         let handles: Vec<_> = (0..64)
             .map(|i| server.infer_async(vec![i as f32; 4]))
             .collect();
@@ -94,7 +95,8 @@ mod tests {
         let server = InferenceServer::start(
             ServerConfig::default(),
             || Box::new(Echo),
-        );
+        )
+        .unwrap();
         assert!(server.infer(vec![1.0; 3]).is_err());
         server.shutdown();
     }
@@ -127,7 +129,8 @@ mod tests {
                 ..Default::default()
             },
             || Box::new(Flaky),
-        );
+        )
+        .unwrap();
         assert_eq!(server.infer(vec![1.0, 2.0]).unwrap(), vec![1.0, 2.0]);
         let err = server.infer(vec![-1.0, 2.0]).unwrap_err();
         assert!(

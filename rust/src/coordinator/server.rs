@@ -59,8 +59,10 @@ pub struct InferenceServer {
 
 impl InferenceServer {
     /// Start a server; `factory` builds the backend *on the worker
-    /// thread* (PJRT handles are not `Send`).
-    pub fn start<F>(config: ServerConfig, factory: F) -> Self
+    /// thread* (PJRT handles are not `Send`). Fails — instead of
+    /// panicking the serving process — when the worker thread cannot
+    /// be spawned or the backend dies during initialization.
+    pub fn start<F>(config: ServerConfig, factory: F) -> Result<Self>
     where
         F: FnOnce() -> Box<dyn Backend> + Send + 'static,
     {
@@ -81,12 +83,20 @@ impl InferenceServer {
                 let _ = dim_tx.send(backend.input_dim());
                 run_worker(rx, &mut *backend, &m2, &s2, &inf2, config);
             })
-            .expect("spawn worker");
-        let input_dim = dim_rx
-            .recv_timeout(Duration::from_secs(60))
-            .expect("backend failed to initialize");
+            .map_err(|e| anyhow!("spawn inference worker: {e}"))?;
+        let input_dim =
+            dim_rx.recv_timeout(Duration::from_secs(60)).map_err(|e| {
+                anyhow!(
+                    "backend failed to initialize: {}",
+                    match e {
+                        RecvTimeoutError::Timeout => "timed out",
+                        RecvTimeoutError::Disconnected =>
+                            "factory panicked or exited",
+                    }
+                )
+            })?;
 
-        InferenceServer {
+        Ok(InferenceServer {
             tx,
             metrics,
             input_dim,
@@ -94,7 +104,7 @@ impl InferenceServer {
             capacity: config.queue_capacity,
             stop,
             worker: Some(worker),
-        }
+        })
     }
 
     /// Submit a request; returns a receiver for the response.

@@ -44,9 +44,13 @@ fn compact_bits(v: Block, mask: Block) -> u64 {
     #[cfg(all(target_arch = "x86_64", target_feature = "bmi2"))]
     {
         // Two PEXTs (low/high lane) + shift-merge.
+        // SAFETY: this arm only compiles on x86_64 with the `bmi2`
+        // target feature enabled (`cfg` above), so the BMI2
+        // `_pext_u64` instruction is statically guaranteed present.
         let lo = unsafe {
             std::arch::x86_64::_pext_u64(v as u64, mask as u64)
         };
+        // SAFETY: same static `x86_64` + `bmi2` guarantee as above.
         let hi = unsafe {
             std::arch::x86_64::_pext_u64((v >> 64) as u64, (mask >> 64) as u64)
         };

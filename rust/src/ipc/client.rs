@@ -19,6 +19,7 @@ use super::wire::{self, Request, Response};
 use crate::obs::{self, SpanEvent, SpanKind};
 use crate::shard::CostProfile;
 use crate::sparse::DecodedLayer;
+use crate::sync::lock_unpoisoned;
 use crate::store::StoreMetrics;
 use std::os::unix::net::UnixStream;
 use std::path::{Path, PathBuf};
@@ -110,7 +111,7 @@ impl IpcShardStore {
     /// transport failure drops the connection and the next call
     /// redials (the restart-transparency contract).
     fn call(&self, req: &Request) -> CallResult<Response> {
-        let mut guard = self.conn.lock().unwrap();
+        let mut guard = lock_unpoisoned(&self.conn);
         let mut stream = match guard.take() {
             Some(s) => s,
             None => self.dial()?,
@@ -141,7 +142,7 @@ impl IpcShardStore {
     /// Drop the cached connection (the next call redials). The
     /// supervisor calls this after replacing a worker process.
     pub fn disconnect(&self) {
-        *self.conn.lock().unwrap() = None;
+        *lock_unpoisoned(&self.conn) = None;
     }
 
     /// Fetch one decoded layer from the worker. The caller's trace id

@@ -23,6 +23,7 @@
 //! same reconnecting stub.
 
 use super::client::IpcShardStore;
+use crate::sync::lock_unpoisoned;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
@@ -153,14 +154,14 @@ impl Supervisor {
 
     /// The worker's OS pid, if it is currently running.
     pub fn worker_pid(&self, shard: usize) -> Option<u32> {
-        let slots = self.slots.lock().unwrap();
+        let slots = lock_unpoisoned(&self.slots);
         slots.get(shard)?.child.as_ref().map(|c| c.id())
     }
 
     /// (Re)start one worker and wait for its health probe.
     fn start_worker(&self, shard: usize) -> Result<()> {
         {
-            let mut slots = self.slots.lock().unwrap();
+            let mut slots = lock_unpoisoned(&self.slots);
             let slot = slots
                 .get_mut(shard)
                 .with_context(|| format!("no worker slot {shard}"))?;
@@ -194,7 +195,7 @@ impl Supervisor {
             // Child already gone? Report the exit instead of waiting
             // out the clock.
             {
-                let mut slots = self.slots.lock().unwrap();
+                let mut slots = lock_unpoisoned(&self.slots);
                 if let Some(child) = slots[shard].child.as_mut() {
                     if let Some(status) = child.try_wait()? {
                         slots[shard].child = None;
@@ -222,7 +223,7 @@ impl Supervisor {
     /// socket — the shard assignment is replayed).
     pub fn revive(&self, shard: usize) -> Result<()> {
         let needs_restart = {
-            let mut slots = self.slots.lock().unwrap();
+            let mut slots = lock_unpoisoned(&self.slots);
             let slot = slots
                 .get_mut(shard)
                 .with_context(|| format!("no worker slot {shard}"))?;
@@ -244,7 +245,7 @@ impl Supervisor {
                 return Ok(());
             }
             // Alive but unresponsive: replace it.
-            let mut slots = self.slots.lock().unwrap();
+            let mut slots = lock_unpoisoned(&self.slots);
             if let Some(mut child) = slots[shard].child.take() {
                 let _ = child.kill();
                 let _ = child.wait();
@@ -257,7 +258,7 @@ impl Supervisor {
     /// Kill one worker process outright (no restart) — the fault
     /// injection hook the kill/restart tests and chaos drills use.
     pub fn kill_worker(&self, shard: usize) -> Result<()> {
-        let mut slots = self.slots.lock().unwrap();
+        let mut slots = lock_unpoisoned(&self.slots);
         let slot = slots
             .get_mut(shard)
             .with_context(|| format!("no worker slot {shard}"))?;
@@ -278,7 +279,7 @@ impl Supervisor {
             let _ = client.shutdown();
         }
         let deadline = Instant::now() + Duration::from_secs(5);
-        let mut slots = self.slots.lock().unwrap();
+        let mut slots = lock_unpoisoned(&self.slots);
         for slot in slots.iter_mut() {
             let Some(child) = slot.child.as_mut() else { continue };
             loop {
@@ -303,7 +304,7 @@ impl Supervisor {
 impl Drop for Supervisor {
     fn drop(&mut self) {
         // Never leak worker processes, even on a panicking path.
-        let mut slots = self.slots.lock().unwrap();
+        let mut slots = lock_unpoisoned(&self.slots);
         for slot in slots.iter_mut() {
             if let Some(mut child) = slot.child.take() {
                 match child.try_wait() {

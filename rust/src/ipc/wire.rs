@@ -267,20 +267,24 @@ pub fn read_frame(
             Err(e) => return Err(WireError::Io(e)),
         }
     }
+    // The header is a fixed 11-byte stack array; every offset below is
+    // a compile-time constant inside it, hence the per-line lint
+    // exceptions rather than a bounds-checked reader.
     let mut header = [0u8; HEADER_LEN];
-    header[0] = first[0];
-    read_exact_frame(r, &mut header[1..])?;
-    if &header[..4] != MAGIC {
+    header[0] = first[0]; // lint: allow(no-index) -- constant offsets in a fixed header array
+    read_exact_frame(r, &mut header[1..])?; // lint: allow(no-index) -- constant offsets in a fixed header array
+    if &header[..4] != MAGIC { // lint: allow(no-index) -- constant offsets in a fixed header array
         return Err(WireError::Corrupt("bad magic".into()));
     }
-    let version = u16::from_le_bytes([header[4], header[5]]);
+    let version = u16::from_le_bytes([header[4], header[5]]); // lint: allow(no-index) -- constant offsets in a fixed header array
     if version != VERSION {
         return Err(WireError::Corrupt(format!(
             "unsupported wire version {version}"
         )));
     }
-    let kind = header[6];
+    let kind = header[6]; // lint: allow(no-index) -- constant offsets in a fixed header array
     let len = u32::from_le_bytes([
+        // lint: allow(no-index) -- constant offsets in a fixed header array
         header[7], header[8], header[9], header[10],
     ]) as usize;
     if len > MAX_PAYLOAD {
@@ -514,6 +518,7 @@ impl Response {
                 let weights = bytes
                     .chunks_exact(4)
                     .map(|c| {
+                        // lint: allow(no-index) -- chunks_exact(4) yields exactly 4 bytes
                         f32::from_le_bytes([c[0], c[1], c[2], c[3]])
                     })
                     .collect();
@@ -654,20 +659,26 @@ impl<'a> Cursor<'a> {
         Ok(s)
     }
 
+    /// Exactly `N` bytes as a fixed-size array (the `from_le_bytes`
+    /// shape), so the integer accessors below never index a slice.
+    fn array<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let b = self.bytes(N)?;
+        b.try_into().map_err(|_| {
+            anyhow::anyhow!("internal: cursor returned a wrong-size slice")
+        })
+    }
+
     fn u8(&mut self) -> Result<u8> {
-        Ok(self.bytes(1)?[0])
+        let [b] = self.array()?;
+        Ok(b)
     }
 
     fn u32(&mut self) -> Result<u32> {
-        let b = self.bytes(4)?;
-        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        Ok(u32::from_le_bytes(self.array()?))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        let b = self.bytes(8)?;
-        Ok(u64::from_le_bytes([
-            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
-        ]))
+        Ok(u64::from_le_bytes(self.array()?))
     }
 
     /// A layer dimension: `u64` on the wire, must fit a host `usize`.
@@ -958,7 +969,7 @@ mod tests {
         let mut buf = Vec::new();
         send_request(
             &mut buf,
-            &Request::Fetch { layer: "layer0".into() },
+            &Request::Fetch { layer: "layer0".into(), trace: 0 },
         )
         .unwrap();
         for cut in 1..buf.len() {

@@ -98,6 +98,12 @@
 //! * [`runtime`] — PJRT (XLA) runtime that loads AOT-compiled artifacts.
 //! * [`report`] — textual table/figure rendering for the repro harness.
 //! * [`repro`] — one entry point per paper table/figure.
+//! * [`analysis`] — the `f2f lint` soundness scanner: a
+//!   dependency-free token-level analyzer enforcing the repo's
+//!   panic-free-serving, SAFETY-comment and lock-poisoning invariants
+//!   (see *Soundness & analysis* below).
+//! * [`sync`] — poison-tolerant lock/condvar helpers shared by every
+//!   serving module.
 //!
 //! ## Serving a whole model
 //!
@@ -132,7 +138,7 @@
 //!     .with_readahead(ReadaheadPolicy::layers(1));
 //! let server = InferenceServer::start(ServerConfig::default(), move || {
 //!     Box::new(backend)
-//! });
+//! })?;
 //! let y = server.infer(vec![0.0; server.input_dim()])?;
 //! # let _ = y;
 //! # Ok(())
@@ -170,7 +176,28 @@
 //! governed by the on-by-default `obs` cargo feature
 //! (`--no-default-features` compiles it out entirely) and a runtime
 //! kill switch ([`obs::set_enabled`]).
+//!
+//! ## Soundness & analysis
+//!
+//! The serving paths are *panic-free by policy*, and the policy is
+//! machine-checked: `f2f lint` (the [`analysis`] module — a
+//! dependency-free token-level scanner over `rust/src/`) forbids
+//! `unwrap`/`expect`/panicking macros and unchecked indexing in the
+//! serving modules (`ipc`, `container`, `store`, `shard`,
+//! `coordinator`), requires a `// SAFETY:` comment on every `unsafe`,
+//! and flags `.lock().unwrap()` everywhere — lock poisoning must be
+//! handled (see [`sync::lock_unpoisoned`]: a panicking worker must
+//! degrade one request, not wedge the process). Deliberate exceptions
+//! carry an inline justification
+//! (`// lint: allow(<rule>) -- <reason>`), which the linter verifies
+//! and CI enforces (`cargo run -- lint`). Parser/codec hot spots
+//! (wire frames, container records, shard maps) additionally run
+//! under Miri in CI, debug builds self-audit cache byte-accounting
+//! invariants ([`store::ModelStore`]) and the trace ring ([`obs`]),
+//! and a scheduled ThreadSanitizer job sweeps the concurrent decode /
+//! serving tests.
 
+pub mod analysis;
 pub mod bandwidth;
 pub mod bench_util;
 pub mod cli;
@@ -194,6 +221,7 @@ pub mod runtime;
 pub mod shard;
 pub mod sparse;
 pub mod store;
+pub mod sync;
 pub mod weights;
 
 pub use decoder::{DecoderSpec, SequentialDecoder};

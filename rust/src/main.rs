@@ -37,6 +37,10 @@
 //!   socket: the child-process entrypoint `serve --shard-procs`
 //!   spawns (unix only).
 //! * `f2f hw --s <S> --nin <N> --ns <N>` — Appendix G hardware cost.
+//! * `f2f lint [--root <dir>] [--file <path> [--as <relpath>]]` — run
+//!   the repo-native invariant linter (see [`f2f::analysis`]) over
+//!   `rust/src`, or over one file as if it lived at `<relpath>` (how CI
+//!   drives the must-fail fixture corpus). Exits non-zero on findings.
 
 use anyhow::{bail, Result};
 use f2f::cli::Args;
@@ -59,10 +63,11 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("shard-worker") => cmd_shard_worker(args),
         Some("hw") => cmd_hw(args),
+        Some("lint") => cmd_lint(args),
         _ => {
             eprintln!(
                 "usage: f2f <repro|compress|inspect|shard|rebalance|\
-                 serve|shard-worker|hw> [options]\n\
+                 serve|shard-worker|hw|lint> [options]\n\
                  try: f2f repro table1 --bits 100000"
             );
             Ok(())
@@ -452,7 +457,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let server = InferenceServer::start(
             ServerConfig { max_batch, ..Default::default() },
             move || Box::new(backend),
-        );
+        )?;
         run_load(&server, requests, width, seed)?;
         // Let trailing readahead decodes land so the printed counters
         // are stable run to run.
@@ -495,7 +500,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let server = InferenceServer::start(
             ServerConfig { max_batch, ..Default::default() },
             move || Box::new(router),
-        );
+        )?;
         run_load(&server, requests, width, seed)?;
         // Let trailing cross-shard readahead decodes land so the
         // printed counters are stable run to run.
@@ -846,7 +851,7 @@ fn serve_multiproc(
             ..Default::default()
         },
         move || Box::new(router),
-    );
+    )?;
     run_load(&server, opts.requests, opts.width, opts.seed)?;
     let server_snap = server.metrics();
     server.shutdown();
@@ -1035,4 +1040,62 @@ fn cmd_hw(args: &Args) -> Result<()> {
         c.transistors_per_output_bit()
     );
     Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    use anyhow::Context as _;
+    use f2f::analysis::{lint_source, render, run_lint};
+    use std::path::PathBuf;
+
+    // Single-file mode: lint one file as if it lived at the given
+    // `rust/src`-relative path, so every scoped rule applies. CI uses
+    // this to run the must-fail fixture corpus.
+    let file = args.get_str("file", "");
+    if !file.is_empty() {
+        let rel = args.get_str("as", &file);
+        let src = std::fs::read_to_string(&file)
+            .with_context(|| format!("reading {file}"))?;
+        let findings = lint_source(&rel, &src);
+        print!("{}", render(&findings));
+        if !findings.is_empty() {
+            bail!("lint: {} finding(s) in {file}", findings.len());
+        }
+        println!("lint: {file} clean (as {rel})");
+        return Ok(());
+    }
+
+    let root_arg = args.get_str("root", "");
+    let root = if root_arg.is_empty() {
+        discover_repo_root()?
+    } else {
+        PathBuf::from(root_arg)
+    };
+    let findings = run_lint(&root)?;
+    print!("{}", render(&findings));
+    if !findings.is_empty() {
+        bail!("lint: {} finding(s)", findings.len());
+    }
+    let src_root = root.join("rust").join("src");
+    println!("lint: {} clean", src_root.display());
+    Ok(())
+}
+
+/// Find the repo root (the directory holding `rust/src`): walk up from
+/// the current directory — works from the repo root and from `rust/` —
+/// then fall back to the source tree this binary was built from.
+fn discover_repo_root() -> Result<std::path::PathBuf> {
+    let mut dir = std::env::current_dir()?;
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    let built = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    if built.join("rust").join("src").is_dir() {
+        return Ok(built.to_path_buf());
+    }
+    bail!("cannot locate rust/src; pass --root <dir>")
 }

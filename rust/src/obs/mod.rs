@@ -49,6 +49,7 @@ mod hist;
 pub use export::{chrome_trace, ProcessLane};
 pub use hist::{HdrLite, HDR_BUCKETS, HDR_WIRE_FIELDS};
 
+use crate::sync::lock_unpoisoned;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
@@ -244,23 +245,50 @@ impl SpanRecorder {
         }
     }
 
-    /// Copy out every retained event, ordered by start time.
+    /// Copy out every retained event, ordered by start time. A slot
+    /// poisoned by a panicking writer still yields its last complete
+    /// value (`SpanEvent` is `Copy`: a slot is never half-written).
     pub fn snapshot(&self) -> Vec<SpanEvent> {
         let mut out: Vec<SpanEvent> = self
             .slots
             .iter()
-            .filter_map(|s| *s.lock().unwrap())
+            .filter_map(|s| *lock_unpoisoned(s))
             .collect();
         out.sort_by_key(|e| (e.t_start_ns, e.dur_ns));
+        self.check_invariants(out.len());
         out
     }
 
     /// Discard every retained event.
     pub fn clear(&self) {
         for s in &self.slots {
-            *s.lock().unwrap() = None;
+            *lock_unpoisoned(s) = None;
         }
     }
+
+    /// Debug-build audit of the ring's structural invariants, run on
+    /// every snapshot. Compiled out of release builds.
+    #[cfg(debug_assertions)]
+    fn check_invariants(&self, retained: usize) {
+        debug_assert!(
+            retained <= self.slots.len(),
+            "ring retained {retained} events over capacity {}",
+            self.slots.len()
+        );
+        let claims = self.head.load(Ordering::Relaxed);
+        let dropped = self.dropped.load(Ordering::Relaxed);
+        debug_assert!(
+            dropped <= claims,
+            "ring dropped {dropped} events but only {claims} were claimed"
+        );
+        debug_assert!(
+            retained as u64 <= claims,
+            "ring retains {retained} events but only {claims} were claimed"
+        );
+    }
+
+    #[cfg(not(debug_assertions))]
+    fn check_invariants(&self, _retained: usize) {}
 
     /// Events lost to slot contention or ring wrap-around of an
     /// in-progress write (not wrap-around itself, which overwrites).

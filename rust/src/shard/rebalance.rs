@@ -95,7 +95,9 @@ impl CostProfile {
         let mut loads = vec![0.0f64; map.n_shards()];
         for (name, shard) in map.assignments() {
             if let Some(c) = self.entries.get(name) {
-                loads[*shard] += c.decode_ns;
+                if let Some(l) = loads.get_mut(*shard) {
+                    *l += c.decode_ns;
+                }
             }
         }
         loads
@@ -224,8 +226,11 @@ pub fn rebalance_map(
             );
         }
     }
+    // Every indexed layer was validated present (and sane) above, so
+    // the 0.0 fallback is unreachable — it exists so a future edit to
+    // the validation can never reintroduce a panic here.
     ShardMap::assign_by_weight(index, n_shards, |e| {
-        profile.get(&e.name).expect("validated above").decode_ns
+        profile.get(&e.name).map_or(0.0, |c| c.decode_ns)
     })
 }
 
@@ -285,7 +290,7 @@ mod json {
             self.b.get(self.i).copied()
         }
 
-        fn expect(&mut self, c: u8) -> Result<()> {
+        fn expect_byte(&mut self, c: u8) -> Result<()> {
             if self.peek() == Some(c) {
                 self.i += 1;
                 Ok(())
@@ -329,7 +334,7 @@ mod json {
         }
 
         fn object_fields(&mut self) -> Result<Vec<(String, Value)>> {
-            self.expect(b'{')?;
+            self.expect_byte(b'{')?;
             let mut fields: Vec<(String, Value)> = Vec::new();
             self.ws();
             if self.peek() == Some(b'}') {
@@ -343,7 +348,7 @@ mod json {
                     bail!("duplicate JSON key {key:?}");
                 }
                 self.ws();
-                self.expect(b':')?;
+                self.expect_byte(b':')?;
                 self.ws();
                 let value = self.value()?;
                 fields.push((key, value));
@@ -364,7 +369,7 @@ mod json {
         }
 
         fn string(&mut self) -> Result<String> {
-            self.expect(b'"')?;
+            self.expect_byte(b'"')?;
             let mut out = String::new();
             loop {
                 match self.peek() {
@@ -413,11 +418,19 @@ mod json {
                     }
                     Some(_) => {
                         // Copy one UTF-8 scalar (the input is a &str,
-                        // so boundaries are valid by construction).
-                        let rest = &self.b[self.i..];
-                        let s = std::str::from_utf8(rest)
-                            .expect("input was a &str");
-                        let c = s.chars().next().expect("non-empty");
+                        // so boundaries are valid by construction —
+                        // but decode defensively all the same).
+                        let rest =
+                            self.b.get(self.i..).unwrap_or_default();
+                        let tail = std::str::from_utf8(rest)
+                            .map_err(|_| {
+                                anyhow::anyhow!(
+                                    "invalid UTF-8 in JSON string"
+                                )
+                            })?;
+                        let Some(c) = tail.chars().next() else {
+                            bail!("unterminated JSON string");
+                        };
                         out.push(c);
                         self.i += c.len_utf8();
                     }
@@ -433,8 +446,10 @@ mod json {
             }) {
                 self.i += 1;
             }
-            let text = std::str::from_utf8(&self.b[start..self.i])
-                .expect("ascii slice");
+            let digits = self.b.get(start..self.i).unwrap_or_default();
+            let text = std::str::from_utf8(digits).map_err(|_| {
+                anyhow::anyhow!("bad JSON number at offset {start}")
+            })?;
             let v: f64 = text
                 .parse()
                 .map_err(|_| anyhow::anyhow!("bad JSON number {text:?}"))?;

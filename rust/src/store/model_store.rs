@@ -42,6 +42,7 @@ use crate::container::{
     ContainerIndex,
 };
 use crate::sparse::DecodedLayer;
+use crate::sync::{lock_unpoisoned, wait_unpoisoned};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -166,17 +167,17 @@ struct InFlight {
 
 impl InFlight {
     fn complete(&self, result: DecodeOutcome) {
-        *self.done.lock().unwrap() = Some(result);
+        *lock_unpoisoned(&self.done) = Some(result);
         self.cv.notify_all();
     }
 
     fn wait(&self) -> DecodeOutcome {
-        let mut done = self.done.lock().unwrap();
+        let mut done = lock_unpoisoned(&self.done);
         loop {
             if let Some(r) = done.as_ref() {
                 return r.clone();
             }
-            done = self.cv.wait(done).unwrap();
+            done = wait_unpoisoned(&self.cv, done);
         }
     }
 }
@@ -199,6 +200,34 @@ struct CacheState {
     prefetches: u64,
     redundant_decodes: u64,
     readahead_skips: u64,
+}
+
+impl CacheState {
+    /// Debug-build audit of the cache's core invariants, run after
+    /// every mutation under the state lock: the byte counters must
+    /// equal what the entries actually hold. Compiled out of release
+    /// builds.
+    #[cfg(debug_assertions)]
+    fn check_invariants(&self) {
+        let cached: usize = self.entries.values().map(|e| e.bytes).sum();
+        debug_assert_eq!(
+            self.cached_bytes, cached,
+            "cached_bytes diverged from the sum of resident entries"
+        );
+        let pinned: usize = self
+            .entries
+            .values()
+            .filter(|e| e.pins > 0)
+            .map(|e| e.bytes)
+            .sum();
+        debug_assert_eq!(
+            self.pinned_bytes, pinned,
+            "pinned_bytes diverged from the sum of pinned entries"
+        );
+    }
+
+    #[cfg(not(debug_assertions))]
+    fn check_invariants(&self) {}
 }
 
 /// Shared core: the compressed source plus the cache state. Completion
@@ -262,7 +291,7 @@ impl StoreInner {
     ) {
         let bytes = decoded.decoded_bytes();
         let result = {
-            let mut guard = self.state.lock().unwrap();
+            let mut guard = lock_unpoisoned(&self.state);
             let st = &mut *guard;
             st.clock += 1;
             let clock = st.clock;
@@ -270,7 +299,7 @@ impl StoreInner {
                 st.in_flight_bytes =
                     st.in_flight_bytes.saturating_sub(bytes);
             }
-            if let Some(e) = st.entries.get_mut(name) {
+            let installed = if let Some(e) = st.entries.get_mut(name) {
                 // Someone installed this layer while we decoded. With
                 // in-flight dedup this path is unreachable; count it so
                 // a regression is visible in metrics.
@@ -291,7 +320,9 @@ impl StoreInner {
                 );
                 self.evict_over_budget(st, Some(name));
                 decoded
-            }
+            };
+            st.check_invariants();
+            installed
         };
         self.idle.notify_all();
         flight.complete(Ok(result));
@@ -302,13 +333,14 @@ impl StoreInner {
     /// the registration so a later fetch can retry from scratch.
     fn abort(&self, name: &str, msg: String, flight: &InFlight) {
         {
-            let mut guard = self.state.lock().unwrap();
+            let mut guard = lock_unpoisoned(&self.state);
             let st = &mut *guard;
             if st.in_flight.remove(name).is_some() {
                 let need = self.layer_decoded_bytes(name).unwrap_or(0);
                 st.in_flight_bytes =
                     st.in_flight_bytes.saturating_sub(need);
             }
+            st.check_invariants();
         }
         self.idle.notify_all();
         flight.complete(Err(msg));
@@ -332,11 +364,16 @@ impl StoreInner {
                 .map(|(n, _)| n.clone());
             let Some(victim) = victim else { break };
             if let Some(e) = st.entries.remove(&victim) {
+                debug_assert_eq!(
+                    e.pins, 0,
+                    "evicted {victim:?} while it was pinned"
+                );
                 st.cached_bytes -= e.bytes;
                 st.evictions += 1;
                 obs::event(obs::SpanKind::Evict, &victim);
             }
         }
+        st.check_invariants();
     }
 }
 
@@ -379,7 +416,7 @@ impl Drop for PinnedLayer {
             // steal a pin another caller still holds.
             return;
         }
-        let mut guard = self.inner.state.lock().unwrap();
+        let mut guard = lock_unpoisoned(&self.inner.state);
         let st = &mut *guard;
         let mut released = false;
         if let Some(e) = st.entries.get_mut(&self.name) {
@@ -397,6 +434,7 @@ impl Drop for PinnedLayer {
             // not sit over budget between batches.
             self.inner.evict_over_budget(st, None);
         }
+        st.check_invariants();
     }
 }
 
@@ -570,7 +608,7 @@ impl ModelStore {
     /// True if `name` is currently decoded in cache (does not touch
     /// recency).
     pub fn is_cached(&self, name: &str) -> bool {
-        self.inner.state.lock().unwrap().entries.contains_key(name)
+        lock_unpoisoned(&self.inner.state).entries.contains_key(name)
     }
 
     /// Fetch a decoded layer: cache hit bumps recency; miss joins the
@@ -594,7 +632,7 @@ impl ModelStore {
     /// readahead installs cannot evict the layer mid-execution.
     pub fn get_pinned(&self, name: &str) -> Result<PinnedLayer> {
         let layer = self.get(name)?;
-        let mut guard = self.inner.state.lock().unwrap();
+        let mut guard = lock_unpoisoned(&self.inner.state);
         let st = &mut *guard;
         st.clock += 1;
         let clock = st.clock;
@@ -630,6 +668,7 @@ impl ModelStore {
             self.inner.evict_over_budget(st, Some(name));
             true
         };
+        st.check_invariants();
         drop(guard);
         Ok(PinnedLayer {
             inner: self.inner.clone(),
@@ -651,7 +690,7 @@ impl ModelStore {
     /// in the budget alongside the pinned working set).
     pub fn prefetch_async(&self, name: &str) -> bool {
         let flight = {
-            let mut guard = self.inner.state.lock().unwrap();
+            let mut guard = lock_unpoisoned(&self.inner.state);
             let st = &mut *guard;
             if st.entries.contains_key(name)
                 || st.in_flight.contains_key(name)
@@ -712,7 +751,7 @@ impl ModelStore {
     }
 
     fn lookup(&self, name: &str) -> Fetch {
-        let mut guard = self.inner.state.lock().unwrap();
+        let mut guard = lock_unpoisoned(&self.inner.state);
         let st = &mut *guard;
         st.clock += 1;
         let clock = st.clock;
@@ -738,15 +777,15 @@ impl ModelStore {
 
     /// Block until no decode is in flight (test / drain aid).
     pub fn wait_for_idle(&self) {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.inner.state);
         while !st.in_flight.is_empty() {
-            st = self.inner.idle.wait(st).unwrap();
+            st = wait_unpoisoned(&self.inner.idle, st);
         }
     }
 
     /// Metrics snapshot.
     pub fn metrics(&self) -> StoreMetrics {
-        let st = self.inner.state.lock().unwrap();
+        let st = lock_unpoisoned(&self.inner.state);
         StoreMetrics {
             hits: st.hits,
             misses: st.misses,

@@ -128,6 +128,8 @@ mod mapped {
     // through for its whole lifetime, so shared references may cross
     // threads freely; the pointer is exclusively owned until `Drop`.
     unsafe impl Send for MmapRegion {}
+    // SAFETY: read-only for its whole lifetime (see `Send` above), so
+    // concurrent shared reads through `&MmapRegion` never race a write.
     unsafe impl Sync for MmapRegion {}
 
     impl MmapRegion {

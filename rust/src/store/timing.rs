@@ -27,6 +27,7 @@
 //! so `f2f rebalance` can re-shard on observed decode cost.
 
 use crate::obs::HdrLite;
+use crate::sync::lock_unpoisoned;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -165,13 +166,13 @@ impl LayerCosts {
     pub fn record_decode(&self, name: &str, took: Duration) {
         let ns = saturating_ns(took);
         {
-            let mut t = self.table.lock().unwrap();
+            let mut t = lock_unpoisoned(&self.table);
             let e = t.entry(name.to_string()).or_default();
             e.decode_ns = self.ewma(e.decode_ns, e.decode_samples, ns as f64);
             e.decode_samples =
                 (e.decode_samples + 1).min(MAX_COST_SAMPLES);
         }
-        self.decode_hist.lock().unwrap().record_ns(ns);
+        lock_unpoisoned(&self.decode_hist).record_ns(ns);
         self.decode_ns_total.fetch_add(ns, Ordering::Relaxed);
     }
 
@@ -185,12 +186,12 @@ impl LayerCosts {
         let ns = saturating_ns(took);
         let per_item = ns as f64 / items as f64;
         {
-            let mut t = self.table.lock().unwrap();
+            let mut t = lock_unpoisoned(&self.table);
             let e = t.entry(name.to_string()).or_default();
             e.gemv_ns = self.ewma(e.gemv_ns, e.gemv_samples, per_item);
             e.gemv_samples = (e.gemv_samples + 1).min(MAX_COST_SAMPLES);
         }
-        self.gemv_hist.lock().unwrap().record_ns(ns);
+        lock_unpoisoned(&self.gemv_hist).record_ns(ns);
         self.gemv_ns_total.fetch_add(ns, Ordering::Relaxed);
     }
 
@@ -199,20 +200,18 @@ impl LayerCosts {
     /// anything already observed. Totals are untouched: they count only
     /// this table's own wall time.
     pub fn seed(&self, name: &str, cost: LayerCost) {
-        let mut t = self.table.lock().unwrap();
+        let mut t = lock_unpoisoned(&self.table);
         t.entry(name.to_string()).or_default().merge(&cost);
     }
 
     /// This layer's current estimates, if any observation exists.
     pub fn get(&self, name: &str) -> Option<LayerCost> {
-        self.table.lock().unwrap().get(name).copied()
+        lock_unpoisoned(&self.table).get(name).copied()
     }
 
     /// Name-ordered copy of the whole table.
     pub fn snapshot(&self) -> Vec<(String, LayerCost)> {
-        self.table
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.table)
             .iter()
             .map(|(n, c)| (n.clone(), *c))
             .collect()
@@ -221,13 +220,13 @@ impl LayerCosts {
     /// Distribution of recorded decode times (submit→install, raw ns
     /// per decode) — a copy, mergeable across tables.
     pub fn decode_hist(&self) -> HdrLite {
-        *self.decode_hist.lock().unwrap()
+        *lock_unpoisoned(&self.decode_hist)
     }
 
     /// Distribution of recorded GEMV phase times (raw ns per phase,
     /// *not* per item — the EWMA tracks the per-item normalization).
     pub fn gemv_hist(&self) -> HdrLite {
-        *self.gemv_hist.lock().unwrap()
+        *lock_unpoisoned(&self.gemv_hist)
     }
 
     /// Total wall nanoseconds spent decoding (submit→install), summed

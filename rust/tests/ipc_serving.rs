@@ -308,7 +308,8 @@ fn multiproc_serves_behind_the_inference_server() {
             ..Default::default()
         },
         move || Box::new(router),
-    );
+    )
+    .unwrap();
     for (i, x) in xs.into_iter().enumerate() {
         assert_eq!(
             server.infer(x).unwrap(),

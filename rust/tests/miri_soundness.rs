@@ -1,0 +1,281 @@
+//! Miri-targeted soundness tests for every decoder that faces bytes
+//! from another process or an on-disk artifact.
+//!
+//! Everything here runs purely in memory — no sockets, no files, no
+//! spawned threads, no clocks — so
+//! `cargo +nightly miri test --test miri_soundness` finishes in
+//! seconds while exercising, under the interpreter's full UB checking,
+//! the exact code paths the serving stack runs on untrusted input:
+//! IPC frame encode/decode ([`f2f::ipc::wire`]), the v2 container
+//! index and `F2F3` shard-map parsers ([`f2f::container`]), and the
+//! `CostProfile` JSON reader ([`f2f::shard`]).
+//!
+//! The regular test suite covers the same parsers through sockets and
+//! temp files; those tests are skipped under Miri (isolation forbids
+//! the syscalls), which is why this file exists.
+
+use f2f::container::{
+    is_shard_map, is_v2, write_container_v2, Container, ContainerIndex,
+    ShardMap,
+};
+use f2f::shard::CostProfile;
+use f2f::store::LayerCost;
+
+/// The IPC wire codec only exists on unix (`std::os::unix::net`), but
+/// the frame encode/decode under test is pure `Read`/`Write` over
+/// in-memory buffers — Miri runs it without socket syscalls.
+#[cfg(unix)]
+mod wire_frames {
+    use f2f::ipc::wire::{
+        read_frame, read_request, read_response, send_request,
+        send_response, Request, Response, WireError,
+    };
+
+    /// Encode one request into an in-memory frame (`Vec<u8>` is
+    /// `Write`).
+    fn request_frame(req: &Request) -> Vec<u8> {
+        let mut buf = Vec::new();
+        send_request(&mut buf, req).expect("encode request");
+        buf
+    }
+
+    /// Encode one response into an in-memory frame.
+    fn response_frame(resp: &Response) -> Vec<u8> {
+        let mut buf = Vec::new();
+        send_response(&mut buf, resp).expect("encode response");
+        buf
+    }
+
+    #[test]
+    fn every_request_variant_roundtrips_in_memory() {
+        let reqs = [
+            Request::Fetch { layer: "layer0".into(), trace: 7 },
+            Request::Prefetch { layer: "blk.3/ffn".into(), trace: 0 },
+            Request::Metrics,
+            Request::CostProfile,
+            Request::TraceDump,
+            Request::Shutdown,
+        ];
+        for req in &reqs {
+            let buf = request_frame(req);
+            let got = read_request(&mut &buf[..]).expect("decode");
+            assert_eq!(&got, req);
+        }
+    }
+
+    #[test]
+    fn response_variants_roundtrip_in_memory() {
+        let resps = [
+            Response::Layer {
+                rows: 2,
+                cols: 3,
+                weights: vec![0.5, -1.0, 0.0, 3.25, -0.125, 2.0],
+            },
+            Response::Ack { accepted: true },
+            Response::Ack { accepted: false },
+            Response::CostProfile { json: "{\"layers\":{}}".into() },
+            Response::Err {
+                message: "unknown layer \"ghost\"".into(),
+            },
+            Response::Bye,
+        ];
+        for resp in &resps {
+            let buf = response_frame(resp);
+            let got = read_response(&mut &buf[..]).expect("decode");
+            assert_eq!(&got, resp);
+        }
+    }
+
+    #[test]
+    fn truncated_frames_error_and_never_panic() {
+        let frames = [
+            request_frame(&Request::Fetch {
+                layer: "w".into(),
+                trace: 1,
+            }),
+            response_frame(&Response::Layer {
+                rows: 1,
+                cols: 2,
+                weights: vec![1.0, 2.0],
+            }),
+        ];
+        for buf in &frames {
+            for cut in 0..buf.len() {
+                let short = &buf[..cut];
+                assert!(
+                    read_frame(&mut &short[..]).is_err(),
+                    "a {cut}-byte prefix of a {}-byte frame must \
+                     not parse",
+                    buf.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_frame_headers_are_rejected() {
+        // Header layout: magic [0..4], version u16 [4..6], kind [6],
+        // payload length u32 [7..11].
+        let good = request_frame(&Request::Metrics);
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(matches!(
+            read_frame(&mut &bad_magic[..]),
+            Err(WireError::Corrupt(_))
+        ));
+
+        let mut bad_version = good.clone();
+        bad_version[4] ^= 0xFF;
+        assert!(read_frame(&mut &bad_version[..]).is_err());
+
+        // An unknown kind may pass the frame layer but must be
+        // rejected as a request.
+        let mut bad_kind = good.clone();
+        bad_kind[6] = 0xEE;
+        assert!(read_request(&mut &bad_kind[..]).is_err());
+
+        // A length field claiming more payload than the stream
+        // delivers is truncation, not an allocation of the claimed
+        // size.
+        let mut lying_len = good;
+        lying_len[7] = 40;
+        assert!(read_frame(&mut &lying_len[..]).is_err());
+    }
+}
+
+#[test]
+fn cost_profile_json_roundtrips() {
+    let mut p = CostProfile::new();
+    p.record(
+        "blk.0",
+        LayerCost {
+            decode_ns: 1.5e6,
+            gemv_ns: 300.0,
+            decode_samples: 4,
+            gemv_samples: 2,
+        },
+    );
+    p.record(
+        "blk.1",
+        LayerCost {
+            decode_ns: 2.25e6,
+            gemv_ns: 0.0,
+            decode_samples: 1,
+            gemv_samples: 0,
+        },
+    );
+    let json = p.to_json();
+    let back = CostProfile::parse_json(&json).expect("parse own json");
+    assert_eq!(back.len(), 2);
+    let a = back.get("blk.0").expect("blk.0 present");
+    assert_eq!(a.decode_samples, 4);
+    assert!((a.decode_ns - 1.5e6).abs() < 1.0, "got {}", a.decode_ns);
+}
+
+#[test]
+fn truncated_cost_profile_json_errors_and_never_panics() {
+    let mut p = CostProfile::new();
+    p.record(
+        "layer \"quoted\" \\ name",
+        LayerCost {
+            decode_ns: 9.0e5,
+            gemv_ns: 12.5,
+            decode_samples: 3,
+            gemv_samples: 1,
+        },
+    );
+    let json = p.to_json();
+    // Any cut before the closing brace leaves the top-level object
+    // unbalanced, so every such prefix must error (and, under Miri,
+    // must do so without UB). The layer name here is ASCII, so every
+    // byte offset is a char boundary. Cuts inside the trailing
+    // newline would be complete documents and are excluded.
+    let end = json.trim_end().len();
+    for cut in 0..end {
+        assert!(
+            CostProfile::parse_json(&json[..cut]).is_err(),
+            "prefix of length {cut} must not parse"
+        );
+    }
+    assert!(CostProfile::parse_json(&json).is_ok());
+}
+
+#[test]
+fn adversarial_cost_profile_json_never_panics() {
+    let cases = [
+        "",
+        "{",
+        "}",
+        "null",
+        "[1,2,3]",
+        "{\"layers\":}",
+        "{\"layers\":{\"a\":1}}",
+        "{\"layers\":{\"a\":{\"decode_ns\":\"NaN\"}}}",
+        "{\"layers\":{\"a\":{\"decode_ns\":1e309}}}",
+        "{\"layers\":{\"a\":{}}, \"layers\":{\"a\":{}}}",
+        "{\"layers\":{\"\\u0000\":{}}}",
+        "{\"layers\" \u{7f}",
+    ];
+    for s in cases {
+        // Lenient readers may accept some of these; the contract under
+        // test is error-or-value, never a panic or UB.
+        let _ = CostProfile::parse_json(s);
+    }
+}
+
+#[test]
+fn v2_index_parses_and_rejects_every_truncation() {
+    let bytes = write_container_v2(&Container::default());
+    assert!(is_v2(&bytes));
+    let idx = ContainerIndex::parse(&bytes).expect("parse own bytes");
+    assert!(idx.is_empty());
+    for cut in 0..bytes.len() {
+        assert!(
+            ContainerIndex::parse(&bytes[..cut]).is_err(),
+            "a {cut}-byte prefix of the v2 header must not parse"
+        );
+    }
+    // Single-byte corruption anywhere in the header must never panic.
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0xFF;
+        let _ = ContainerIndex::parse(&bad);
+    }
+}
+
+#[test]
+fn shard_map_roundtrips_and_rejects_corruption() {
+    let map = ShardMap::from_assignments(
+        2,
+        vec![("blk.0".into(), 0), ("blk.1".into(), 1)],
+    )
+    .expect("valid assignments");
+    let bytes = map.to_bytes();
+    assert!(is_shard_map(&bytes));
+    let back = ShardMap::parse(&bytes).expect("parse own bytes");
+    assert_eq!(back.n_shards(), 2);
+    assert_eq!(back.shard_of("blk.1"), Some(1));
+
+    for cut in 0..bytes.len() {
+        assert!(
+            ShardMap::parse(&bytes[..cut]).is_err(),
+            "a {cut}-byte prefix of the shard map must not parse"
+        );
+    }
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0xFF;
+        let _ = ShardMap::parse(&bad);
+    }
+
+    // Semantic rejects: out-of-range shard id, duplicate layer.
+    let out_of_range =
+        ShardMap::from_assignments(1, vec![("a".into(), 1)]);
+    assert!(out_of_range.is_err());
+    let duplicate = ShardMap::from_assignments(
+        2,
+        vec![("a".into(), 0), ("a".into(), 1)],
+    );
+    assert!(duplicate.is_err());
+}

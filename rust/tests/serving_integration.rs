@@ -41,7 +41,8 @@ fn served_outputs_match_reference() {
             ..Default::default()
         },
         move || Box::new(NativeBackend::new(&cl2)),
-    );
+    )
+    .unwrap();
     let mut rng = Rng::new(9);
     for _ in 0..20 {
         let x: Vec<f32> =
@@ -69,7 +70,8 @@ fn concurrent_load_is_batched_and_complete() {
             ..Default::default()
         },
         move || Box::new(NativeBackend::new(&cl)),
-    );
+    )
+    .unwrap();
     let n = 200;
     let handles: Vec<_> = (0..n)
         .map(|i| server.infer_async(vec![i as f32 * 0.01; 128]))
@@ -114,7 +116,8 @@ fn backpressure_rejects_when_queue_full() {
             queue_capacity: 8,
         },
         || Box::new(Slow),
-    );
+    )
+    .unwrap();
     let handles: Vec<_> =
         (0..64).map(|_| server.infer_async(vec![1.0, 2.0])).collect();
     let (mut ok, mut rejected) = (0, 0);

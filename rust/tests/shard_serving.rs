@@ -256,7 +256,8 @@ fn sharded_server_under_tight_budgets_with_eviction() {
             ..Default::default()
         },
         move || Box::new(router),
-    );
+    )
+    .unwrap();
     for (i, x) in probes(12).into_iter().enumerate() {
         let y = server.infer(x).unwrap();
         assert_eq!(

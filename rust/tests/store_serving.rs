@@ -71,7 +71,8 @@ fn whole_model_serves_under_tight_budget_with_eviction() {
             ..Default::default()
         },
         move || Box::new(backend),
-    );
+    )
+    .unwrap();
 
     let mut rng = Rng::new(33);
     for _ in 0..12 {
@@ -121,7 +122,8 @@ fn generous_budget_decodes_each_layer_once() {
     let server = InferenceServer::start(
         ServerConfig::default(),
         move || Box::new(backend),
-    );
+    )
+    .unwrap();
     for i in 0..20 {
         let x = vec![0.01 * i as f32; DIMS[0]];
         server.infer(x).unwrap();
