@@ -5,10 +5,12 @@
 //! `auto` readahead planner against the fixed depth-1 pipeline (with
 //! the per-layer decode/GEMV telemetry it plans from), and the sharded
 //! cold serve (the same model behind 1/2/4 stores through a
-//! `ShardRouter`), and the span-recording overhead of the `obs` layer
+//! `ShardRouter`), the span-recording overhead of the `obs` layer
 //! on the warm path (runtime kill switch on vs off, `obs_overhead_pct`,
-//! target <3%). Emits machine-readable `BENCH_store.json` next to the
-//! human output to keep the perf trajectory moving.
+//! target <3%), and the live stats socket's cost on the same warm path
+//! (`stats_poll_overhead_pct`: a 10 Hz `f2f top`-shaped poller against
+//! the unpolled serve). Emits machine-readable `BENCH_store.json` next
+//! to the human output to keep the perf trajectory moving.
 
 use f2f::bench_util::{bench_with_result, black_box, timed_pass, JsonReport};
 use f2f::container::{
@@ -394,6 +396,72 @@ fn main() {
         "  -> span recording overhead {obs_overhead_pct:.2}% on the \
          warm path (target <3%)"
     );
+
+    // --- stats socket overhead: warm serve with a live 10 Hz poller ---
+    // The same warm backend re-measured while an `f2f top`-shaped
+    // client polls the stats socket at 10 Hz: the whole live ops plane
+    // (socket accept, snapshot closures walking the store metrics,
+    // JSON render) billed against the serving hot path.
+    #[cfg(unix)]
+    {
+        use f2f::obs::stats::{poll_stats, LiveSources, StatsServer};
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        let socket = std::env::temp_dir()
+            .join(format!("f2f-bench-stats-{}.sock", std::process::id()));
+        let live = {
+            let s1 = store.clone();
+            let s2 = store.clone();
+            LiveSources::new(
+                Arc::new(move || {
+                    vec![("store".to_string(), s1.metrics())]
+                }),
+                Arc::new(move || s2.costs().snapshot()),
+            )
+        };
+        let server =
+            StatsServer::start(&socket, live).expect("stats server");
+        let stop = Arc::new(AtomicBool::new(false));
+        let poller = {
+            let stop = stop.clone();
+            let socket = socket.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    let _ =
+                        poll_stats(&socket, Duration::from_secs(1));
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            })
+        };
+        let warm_polled = bench_with_result(
+            "serve warm (stats socket polled at 10 Hz)",
+            1,
+            budget,
+            200,
+            || {
+                backend
+                    .forward_batch(black_box(std::slice::from_ref(&x)))
+                    .expect("serve")
+            },
+        );
+        stop.store(true, Ordering::Release);
+        let _ = poller.join();
+        drop(server);
+        let stats_poll_overhead_pct = (warm_polled.mean.as_secs_f64()
+            / warm.mean.as_secs_f64()
+            - 1.0)
+            * 100.0;
+        json.add("serve_warm_stats_polled", &warm_polled);
+        json.metric(
+            "serve_warm",
+            "stats_poll_overhead_pct",
+            stats_poll_overhead_pct,
+        );
+        println!(
+            "  -> live stats polling overhead \
+             {stats_poll_overhead_pct:.2}% on the warm path"
+        );
+    }
 
     // --- budgeted serve: eviction-heavy traffic, production policy ---
     let tight = WIDTH * WIDTH * 4 * 2; // two of four layers fit

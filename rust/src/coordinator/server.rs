@@ -123,6 +123,16 @@ impl InferenceServer {
         }
         if self.inflight.load(Ordering::Relaxed) >= self.capacity {
             self.metrics.record_error();
+            // Sheds are worth a journal line, but at queue-full rates
+            // the journal's own limiter is what keeps this safe.
+            obs::events::warn(
+                "request_shed",
+                "request shed: queue full (backpressure)",
+                &[(
+                    "capacity",
+                    obs::events::Value::U64(self.capacity as u64),
+                )],
+            );
             let _ = resp_tx.send(Err(anyhow!("queue full (backpressure)")));
             return resp_rx;
         }
@@ -151,6 +161,28 @@ impl InferenceServer {
     /// Metrics snapshot.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// Shared handle to the live metrics — what the stats socket
+    /// snapshots while the server keeps running.
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Current queue depth: requests accepted and not yet answered.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// The backpressure bound ([`ServerConfig::queue_capacity`]).
+    pub fn queue_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Shared handle to the inflight gauge, for live queue-depth
+    /// sampling after the server handle has moved elsewhere.
+    pub fn inflight_handle(&self) -> Arc<std::sync::atomic::AtomicUsize> {
+        self.inflight.clone()
     }
 
     /// Expected input dimension.

@@ -215,6 +215,29 @@ impl IpcShardStore {
         }
     }
 
+    /// One live-stats poll: the raw JSON document described in
+    /// [`crate::obs::stats`]. Workers answer with a single-shard
+    /// snapshot of their own store; stats sockets answer with the
+    /// merged serving-process view.
+    pub fn stats_json(&self) -> CallResult<String> {
+        match self.call(&Request::Stats)? {
+            Response::Stats { json } => Ok(json),
+            other => Err(IpcCallError::Transport(format!(
+                "expected a stats frame, got {other:?}"
+            ))),
+        }
+    }
+
+    /// The newest `max` lines of the peer's event journal, as JSONL.
+    pub fn events_tail(&self, max: u32) -> CallResult<String> {
+        match self.call(&Request::Events { max })? {
+            Response::Events { jsonl } => Ok(jsonl),
+            other => Err(IpcCallError::Transport(format!(
+                "expected an events frame, got {other:?}"
+            ))),
+        }
+    }
+
     /// True when the worker answers a metrics round trip — the health
     /// probe the supervisor polls.
     pub fn ping(&self) -> bool {

@@ -16,6 +16,12 @@
 //! * **Shutdown** — ask every worker to exit over the wire, wait
 //!   briefly, and kill stragglers; `Drop` does the same so a panicked
 //!   test never leaks processes.
+//! * **Postmortem** — reaping a dead worker ([`Supervisor::revive`],
+//!   [`Supervisor::kill_worker`]) collects its crash flight sidecar
+//!   ([`crate::obs::flight`]), attributes the exit (panic message >
+//!   signal > exit code; a wire shutdown is attributed as such), and
+//!   emits the postmortem artifact pair plus a `worker_exit` journal
+//!   event before the replacement starts.
 //!
 //! The supervisor also owns the per-worker [`IpcShardStore`] clients,
 //! shared with the [`ProcRouter`](super::ProcRouter) by `Arc` — which
@@ -23,10 +29,12 @@
 //! same reconnecting stub.
 
 use super::client::IpcShardStore;
+use crate::obs::events::{self, Value};
+use crate::obs::flight;
 use crate::sync::lock_unpoisoned;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
-use std::process::{Child, Command, Stdio};
+use std::process::{Child, Command, ExitStatus, Stdio};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -46,6 +54,9 @@ pub struct WorkerSpec {
     pub cache_kb: usize,
     /// Decode-service width (0 = size to the host).
     pub decode_threads: usize,
+    /// Directory for crash flight sidecars ([`crate::obs::flight`]).
+    /// `None` disables flight recording and postmortems.
+    pub flight_dir: Option<PathBuf>,
 }
 
 impl WorkerSpec {
@@ -61,7 +72,14 @@ impl WorkerSpec {
             socket_path: socket_path.into(),
             cache_kb: 0,
             decode_threads: 0,
+            flight_dir: None,
         }
+    }
+
+    /// Enable crash flight recording under `dir`.
+    pub fn with_flight_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.flight_dir = Some(dir.into());
+        self
     }
 
     fn command(&self) -> Command {
@@ -77,11 +95,98 @@ impl WorkerSpec {
             cmd.arg("--decode-threads")
                 .arg(self.decode_threads.to_string());
         }
+        if let Some(dir) = &self.flight_dir {
+            cmd.arg("--flight-dir").arg(dir);
+        }
         // Workers are silent on success; their stderr is worth seeing
         // when one dies, so it inherits the supervisor's.
         cmd.stdin(Stdio::null()).stdout(Stdio::null());
         cmd
     }
+}
+
+/// Attribute one worker death: a panic recorded in the flight sidecar
+/// wins (it names the panic site), then the wait status (signal
+/// number or exit code), then an honest "unknown".
+fn exit_cause(
+    status: Option<ExitStatus>,
+    flight: Option<&flight::FlightData>,
+) -> String {
+    if let Some(data) = flight {
+        if data.panicked {
+            return format!("panic: {}", data.panic_msg);
+        }
+    }
+    match status {
+        Some(st) => {
+            use std::os::unix::process::ExitStatusExt;
+            if let Some(sig) = st.signal() {
+                format!("signal {sig}")
+            } else if let Some(code) = st.code() {
+                if code == 0 {
+                    "clean exit".to_string()
+                } else {
+                    format!("exit code {code}")
+                }
+            } else {
+                format!("{st}")
+            }
+        }
+        None => "unknown (no exit status)".to_string(),
+    }
+}
+
+/// Reap one dead worker: collect its flight sidecar (if any),
+/// attribute the exit, write the postmortem artifact pair, and emit
+/// one `worker_exit` journal event carrying the attributed cause.
+fn reap_worker(
+    spec: &WorkerSpec,
+    shard: usize,
+    pid: Option<u32>,
+    status: Option<ExitStatus>,
+) {
+    let data = match (spec.flight_dir.as_deref(), pid) {
+        (Some(dir), Some(pid)) => {
+            let path = flight::flight_path(dir, pid);
+            let data = flight::FlightData::read(&path).ok();
+            if data.is_some() {
+                // The sidecar is consumed by this reap; the next
+                // incarnation writes its own under its own pid.
+                let _ = std::fs::remove_file(&path);
+            }
+            data
+        }
+        _ => None,
+    };
+    let cause = exit_cause(status, data.as_ref());
+    let mut spans = 0u64;
+    if let (Some(dir), Some(data)) =
+        (spec.flight_dir.as_deref(), data.as_ref())
+    {
+        match flight::write_postmortem(dir, data, &cause) {
+            Ok(pm) => spans = pm.spans as u64,
+            Err(e) => {
+                events::warn(
+                    "postmortem_failed",
+                    &format!(
+                        "shard worker {shard}: postmortem write \
+                         failed: {e:#}"
+                    ),
+                    &[("shard", Value::U64(shard as u64))],
+                );
+            }
+        }
+    }
+    events::warn(
+        "worker_exit",
+        &format!("shard worker {shard} died: {cause}"),
+        &[
+            ("shard", Value::U64(shard as u64)),
+            ("pid", Value::U64(u64::from(pid.unwrap_or(0)))),
+            ("cause", Value::Str(cause)),
+            ("flight_spans", Value::U64(spans)),
+        ],
+    );
 }
 
 struct Slot {
@@ -229,13 +334,24 @@ impl Supervisor {
                 .with_context(|| format!("no worker slot {shard}"))?;
             match slot.child.as_mut() {
                 None => true,
-                Some(child) => match child.try_wait()? {
-                    Some(_status) => {
-                        slot.child = None;
-                        true
+                Some(child) => {
+                    let pid = child.id();
+                    match child.try_wait()? {
+                        Some(status) => {
+                            slot.child = None;
+                            let spec = slot.spec.clone();
+                            drop(slots);
+                            reap_worker(
+                                &spec,
+                                shard,
+                                Some(pid),
+                                Some(status),
+                            );
+                            true
+                        }
+                        None => false,
                     }
-                    None => false,
-                },
+                }
             }
         };
         if !needs_restart {
@@ -247,12 +363,39 @@ impl Supervisor {
             // Alive but unresponsive: replace it.
             let mut slots = lock_unpoisoned(&self.slots);
             if let Some(mut child) = slots[shard].child.take() {
+                let pid = child.id();
                 let _ = child.kill();
-                let _ = child.wait();
+                let status = child.wait().ok();
+                let spec = slots[shard].spec.clone();
+                drop(slots);
+                events::warn(
+                    "worker_unresponsive",
+                    &format!(
+                        "shard worker {shard} alive but unresponsive; \
+                         replacing"
+                    ),
+                    &[("shard", Value::U64(shard as u64))],
+                );
+                reap_worker(&spec, shard, Some(pid), status);
             }
         }
         self.restarts.fetch_add(1, Ordering::Relaxed);
-        self.start_worker(shard)
+        self.start_worker(shard)?;
+        events::info(
+            "worker_respawn",
+            &format!("shard worker {shard} respawned"),
+            &[
+                ("shard", Value::U64(shard as u64)),
+                (
+                    "pid",
+                    Value::U64(u64::from(
+                        self.worker_pid(shard).unwrap_or(0),
+                    )),
+                ),
+                ("restarts", Value::U64(self.restarts())),
+            ],
+        );
+        Ok(())
     }
 
     /// Kill one worker process outright (no restart) — the fault
@@ -263,10 +406,15 @@ impl Supervisor {
             .get_mut(shard)
             .with_context(|| format!("no worker slot {shard}"))?;
         if let Some(mut child) = slot.child.take() {
+            let pid = child.id();
             let _ = child.kill();
-            let _ = child.wait();
+            let status = child.wait().ok();
+            let spec = slot.spec.clone();
+            drop(slots);
+            reap_worker(&spec, shard, Some(pid), status);
+        } else {
+            drop(slots);
         }
-        drop(slots);
         self.clients[shard].disconnect();
         Ok(())
     }
@@ -280,7 +428,7 @@ impl Supervisor {
         }
         let deadline = Instant::now() + Duration::from_secs(5);
         let mut slots = lock_unpoisoned(&self.slots);
-        for slot in slots.iter_mut() {
+        for (shard, slot) in slots.iter_mut().enumerate() {
             let Some(child) = slot.child.as_mut() else { continue };
             loop {
                 match child.try_wait() {
@@ -297,6 +445,16 @@ impl Supervisor {
             }
             slot.child = None;
             let _ = std::fs::remove_file(&slot.spec.socket_path);
+            // An orderly exit: attributed to the wire request, no
+            // postmortem (the worker removed its own flight sidecar).
+            events::info(
+                "worker_exit",
+                &format!("shard worker {shard} shut down (wire)"),
+                &[
+                    ("shard", Value::U64(shard as u64)),
+                    ("cause", Value::Str("shutdown".to_string())),
+                ],
+            );
         }
     }
 }

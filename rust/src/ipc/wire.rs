@@ -10,7 +10,8 @@
 //! ```
 //!
 //! Request kinds are [`Request`] (`Fetch`/`Prefetch`/`Metrics`/
-//! `CostProfile`/`Shutdown`), response kinds [`Response`]. Every
+//! `CostProfile`/`TraceDump`/`Stats`/`Events`/`Shutdown`), response
+//! kinds [`Response`]. Every
 //! decoder in this module is bounds-checked and size-capped: corrupt
 //! bytes — truncation, a lying length, a hostile name, an unknown kind
 //! — come back as [`WireError::Corrupt`] errors, never a panic and
@@ -27,7 +28,9 @@
 //!   trace), v1 peers don't, and decoders accept both — absent means
 //!   [`crate::obs::TRACE_NONE`]; any other trailing length is
 //!   corruption.
-//! * `Metrics` / `CostProfile` / `TraceDump` / `Shutdown` — empty.
+//! * `Metrics` / `CostProfile` / `TraceDump` / `Shutdown` / `Stats`
+//!   — empty.
+//! * `Events` — `u32 max` (newest journal lines wanted).
 //! * `Layer` — `u64 rows | u64 cols | rows·cols × f32` (the decoded
 //!   weights, the same dense row-major layout
 //!   [`crate::sparse::DecodedLayer`] holds).
@@ -49,6 +52,10 @@
 //!   `u64 trace_id | u64 t_start_ns | u64 dur_ns | u8 kind |
 //!   u32 label_len | label`. Events with an unknown kind (a newer
 //!   peer's taxonomy) are dropped individually, never the whole frame.
+//! * `Stats` reply — `u32 json_len | json`: the self-describing live
+//!   snapshot [`crate::obs::stats`] builds (what `f2f top` renders).
+//! * `Events` reply — `u32 jsonl_len | jsonl`: newline-separated
+//!   journal lines, oldest first ([`crate::obs::events`]).
 //! * `Err` — `u32 msg_len | msg`.
 
 use crate::obs::{self, HdrLite, SpanEvent, SpanKind};
@@ -87,6 +94,8 @@ const K_METRICS: u8 = 0x03;
 const K_COST_PROFILE: u8 = 0x04;
 const K_SHUTDOWN: u8 = 0x05;
 const K_TRACE: u8 = 0x06;
+const K_STATS: u8 = 0x07;
+const K_EVENTS: u8 = 0x08;
 
 // Response frame kinds.
 const K_LAYER: u8 = 0x81;
@@ -95,6 +104,8 @@ const K_METRICS_REPLY: u8 = 0x83;
 const K_COSTS_REPLY: u8 = 0x84;
 const K_BYE: u8 = 0x85;
 const K_TRACE_REPLY: u8 = 0x86;
+const K_STATS_REPLY: u8 = 0x87;
+const K_EVENTS_REPLY: u8 = 0x88;
 const K_ERR: u8 = 0xFF;
 
 /// Smallest possible wire footprint of one trace event (empty label):
@@ -120,6 +131,11 @@ pub enum Request {
     CostProfile,
     /// Snapshot the worker's span recorder ([`Response::Trace`]).
     TraceDump,
+    /// Snapshot the peer's live-stats JSON ([`Response::Stats`]) —
+    /// what a [`crate::obs::stats::StatsServer`] and workers answer.
+    Stats,
+    /// The newest `max` event-journal lines ([`Response::Events`]).
+    Events { max: u32 },
     /// Stop serving: the worker replies [`Response::Bye`] and exits.
     Shutdown,
 }
@@ -139,6 +155,12 @@ pub enum Response {
     /// Span-recorder snapshot: the worker's pid (its Chrome-trace
     /// lane) plus every retained event.
     Trace { pid: u32, events: Vec<SpanEvent> },
+    /// Live-stats snapshot as self-describing JSON
+    /// ([`crate::obs::stats`]).
+    Stats { json: String },
+    /// Event-journal tail as JSONL (one journal line per text line,
+    /// oldest first; empty when the journal is).
+    Events { jsonl: String },
     /// Shutdown acknowledged; the worker is exiting.
     Bye,
     /// The request failed worker-side (unknown layer, decode error,
@@ -379,6 +401,10 @@ impl Request {
             Request::Metrics => (K_METRICS, Vec::new()),
             Request::CostProfile => (K_COST_PROFILE, Vec::new()),
             Request::TraceDump => (K_TRACE, Vec::new()),
+            Request::Stats => (K_STATS, Vec::new()),
+            Request::Events { max } => {
+                (K_EVENTS, max.to_le_bytes().to_vec())
+            }
             Request::Shutdown => (K_SHUTDOWN, Vec::new()),
         }
     }
@@ -403,6 +429,8 @@ impl Request {
             K_METRICS => Request::Metrics,
             K_COST_PROFILE => Request::CostProfile,
             K_TRACE => Request::TraceDump,
+            K_STATS => Request::Stats,
+            K_EVENTS => Request::Events { max: p.u32()? },
             K_SHUTDOWN => Request::Shutdown,
             k => bail!("unknown request kind {k:#04x}"),
         };
@@ -476,6 +504,12 @@ impl Response {
                     b.extend_from_slice(label.as_bytes());
                 }
                 (K_TRACE_REPLY, b)
+            }
+            Response::Stats { json } => {
+                (K_STATS_REPLY, encode_name(json))
+            }
+            Response::Events { jsonl } => {
+                (K_EVENTS_REPLY, encode_name(jsonl))
             }
             Response::Bye => (K_BYE, Vec::new()),
             Response::Err { message } => {
@@ -569,14 +603,10 @@ impl Response {
                 // The JSON text rides the same length-prefixed string
                 // encoding as names, without the name length cap (a
                 // large model's profile is legitimately long).
-                let len = p.u32()? as usize;
-                let bytes = p.bytes(len)?;
-                let json =
-                    String::from_utf8(bytes.to_vec()).map_err(|_| {
-                        anyhow::anyhow!("cost profile not utf8")
-                    })?;
-                Response::CostProfile { json }
+                Response::CostProfile { json: p.text()? }
             }
+            K_STATS_REPLY => Response::Stats { json: p.text()? },
+            K_EVENTS_REPLY => Response::Events { jsonl: p.text()? },
             K_TRACE_REPLY => {
                 let pid = p.u32()?;
                 let n = p.u32()? as usize;
@@ -699,6 +729,17 @@ impl<'a> Cursor<'a> {
             .map_err(|_| anyhow::anyhow!("name not utf8"))
     }
 
+    /// A length-prefixed utf-8 string *without* the name cap (profile
+    /// / stats / journal text is legitimately long; [`MAX_PAYLOAD`]
+    /// still bounds it, and `bytes` bounds the read by what the
+    /// payload actually holds).
+    fn text(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.bytes(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow::anyhow!("text payload not utf8"))
+    }
+
     /// Bytes not yet consumed.
     fn remaining(&self) -> usize {
         self.b.len().saturating_sub(self.i)
@@ -802,6 +843,9 @@ mod tests {
         round_trip_request(Request::Metrics);
         round_trip_request(Request::CostProfile);
         round_trip_request(Request::TraceDump);
+        round_trip_request(Request::Stats);
+        round_trip_request(Request::Events { max: 0 });
+        round_trip_request(Request::Events { max: u32::MAX });
         round_trip_request(Request::Shutdown);
         round_trip_response(Response::Layer {
             rows: 2,
@@ -832,10 +876,42 @@ mod tests {
             pid: 1,
             events: Vec::new(),
         });
+        round_trip_response(Response::Stats {
+            json: "{\"schema\": 1, \"pid\": 7}".into(),
+        });
+        round_trip_response(Response::Stats { json: String::new() });
+        round_trip_response(Response::Events {
+            jsonl: "{\"kind\":\"a\"}\n{\"kind\":\"b\"}".into(),
+        });
+        round_trip_response(Response::Events { jsonl: String::new() });
         round_trip_response(Response::Bye);
         round_trip_response(Response::Err {
             message: "layer \"ghost\" not in container".into(),
         });
+    }
+
+    #[test]
+    fn stats_and_events_frames_reject_corruption() {
+        // Events request is exactly 4 bytes.
+        assert!(Request::decode(K_EVENTS, &[]).is_err());
+        assert!(Request::decode(K_EVENTS, &[1, 2, 3]).is_err());
+        assert!(Request::decode(K_EVENTS, &[1, 0, 0, 0, 9]).is_err());
+        // Stats request is empty.
+        assert!(Request::decode(K_STATS, &[7]).is_err());
+        // A text length lying past the payload is truncation.
+        let mut lying = Vec::new();
+        lying.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Response::decode(K_STATS_REPLY, &lying).is_err());
+        assert!(Response::decode(K_EVENTS_REPLY, &lying).is_err());
+        // Non-utf8 text is corruption, not a lossy parse.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(Response::decode(K_STATS_REPLY, &bad).is_err());
+        // Trailing bytes after the text reject.
+        let mut trailing = encode_name("{}");
+        trailing.push(0);
+        assert!(Response::decode(K_STATS_REPLY, &trailing).is_err());
     }
 
     #[test]

@@ -23,7 +23,17 @@
 //!   carry the requester's trace id, and the handler pins it to the
 //!   serving thread for the duration of the store call — every span
 //!   the call records lands in the requester's timeline.
+//! * `Stats` / `Events` answer the live-operations frames
+//!   ([`crate::obs::stats`], [`crate::obs::events`]) with this
+//!   worker's single-shard snapshot and journal tail.
 //! * `Shutdown` ends the serve loop cleanly.
+//!
+//! When spawned with a flight directory ([`run_worker`]'s
+//! `flight_dir`), the worker also installs a crash flight recorder
+//! ([`crate::obs::flight`]): a panic hook plus a checkpoint thread
+//! keep `<dir>/flight-<pid>.bin` current so the supervisor can write
+//! a postmortem for a death that never answered `TraceDump`. A clean
+//! shutdown removes the sidecar.
 //!
 //! Failure policy: a bad request (unknown layer, corrupt record) is an
 //! error *frame*, never a worker death; a corrupt byte stream closes
@@ -54,13 +64,38 @@ pub fn run_worker(
     shard_path: &Path,
     socket_path: &Path,
     config: StoreConfig,
+    flight_dir: Option<&Path>,
 ) -> Result<()> {
     let store = Arc::new(
         ModelStore::open_path(shard_path, config).with_context(|| {
             format!("opening shard {}", shard_path.display())
         })?,
     );
-    serve_store(store, socket_path)
+    // Flight recording is best-effort: a worker that cannot write its
+    // sidecar still serves — it just dies without a postmortem.
+    let recorder = flight_dir.and_then(|dir| {
+        match obs::flight::FlightRecorder::install(
+            dir,
+            obs::flight::DEFAULT_CHECKPOINT_INTERVAL,
+        ) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                obs::events::warn(
+                    "flight_install_failed",
+                    &format!("flight recorder disabled: {e:#}"),
+                    &[],
+                );
+                None
+            }
+        }
+    });
+    let result = serve_store(store, socket_path);
+    if let Some(rec) = recorder {
+        // A clean exit removes the sidecar; a flight file left behind
+        // always means an unclean death.
+        rec.finish(result.is_ok());
+    }
+    result
 }
 
 /// Serve an already-open store on `socket_path` until `Shutdown`.
@@ -240,6 +275,26 @@ fn handle(
         Request::CostProfile => msg(Response::CostProfile {
             json: CostProfile::from_stores([store.costs()]).to_json(),
         }),
+        Request::Stats => {
+            // One-shard live view: snapshot now, serve as the same
+            // JSON document the router's stats socket produces.
+            let m = store.metrics();
+            let costs = store.costs().snapshot();
+            let name = format!("pid {}", std::process::id());
+            let stores: obs::stats::StoresSource =
+                Arc::new(move || vec![(name.clone(), m)]);
+            let costs_src: obs::stats::CostsSource =
+                Arc::new(move || costs.clone());
+            let sources =
+                obs::stats::LiveSources::new(stores, costs_src);
+            msg(Response::Stats { json: sources.stats_json() })
+        }
+        Request::Events { max } => {
+            let max = max.min(obs::stats::MAX_EVENT_LINES) as usize;
+            msg(Response::Events {
+                jsonl: obs::events::recent(max).join("\n"),
+            })
+        }
         Request::TraceDump => {
             // Snapshot, do not clear: the recorder is process-global,
             // and a dump must never erase spans other code in this
@@ -359,6 +414,39 @@ mod tests {
                 );
             }
             other => panic!("expected a profile, got {other:?}"),
+        }
+        // The live-stats frame carries a one-shard JSON snapshot that
+        // parses with the hardened reader.
+        wire::send_request(&mut stream, &Request::Stats).unwrap();
+        match wire::read_response(&mut stream).unwrap() {
+            Response::Stats { json } => {
+                let snap =
+                    crate::obs::stats::StatsSnapshot::parse_json(&json)
+                        .unwrap();
+                assert_eq!(snap.shards.len(), 1);
+                assert_eq!(
+                    crate::obs::stats::field(
+                        &snap.shards[0].1,
+                        "decodes"
+                    ),
+                    2.0
+                );
+            }
+            other => panic!("expected a stats frame, got {other:?}"),
+        }
+        // The journal tail rides the events frame.
+        crate::obs::events::set_stderr_mirror(false);
+        crate::obs::events::warn("worker_unit_probe", "probe", &[]);
+        wire::send_request(
+            &mut stream,
+            &Request::Events { max: 4096 },
+        )
+        .unwrap();
+        match wire::read_response(&mut stream).unwrap() {
+            Response::Events { jsonl } => {
+                assert!(jsonl.contains("worker_unit_probe"), "{jsonl}")
+            }
+            other => panic!("expected an events frame, got {other:?}"),
         }
         // A trace dump names this process; with recording compiled
         // in, the fetches above left spans under their request trace.

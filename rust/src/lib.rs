@@ -88,7 +88,18 @@
 //!   (`serve --metrics-out`, counters + histograms + cost table via
 //!   [`bench_util::JsonReport`]). Recording compiles out with
 //!   `--no-default-features` (the on-by-default `obs` feature) and has
-//!   a runtime kill switch for overhead measurement.
+//!   a runtime kill switch for overhead measurement. On top of the
+//!   recorder sits the **live operations plane**: a streaming stats
+//!   server answering `Metrics`/`CostProfile` wire frames on a unix
+//!   socket *while serving* (`serve --stats-socket`, polled by the
+//!   `f2f top` CLI), a structured rate-limited JSONL event journal
+//!   ([`obs::events`], `serve --events-out`) replacing ad-hoc stderr
+//!   prints, a crash flight recorder ([`obs::flight`] — workers
+//!   checkpoint their span ring to a sidecar; the supervisor turns a
+//!   dead worker's sidecar into a postmortem artifact with an
+//!   attributed exit cause), and a latency watchdog
+//!   ([`obs::watchdog`]) that emits `anomaly` events when live EWMAs
+//!   regress against their rolling baseline.
 //! * [`bandwidth`] — memory transaction / bandwidth-utilization simulator
 //!   (Figure 1, Appendix A).
 //! * [`models`] — synthetic Transformer / ResNet-50 model zoo with
@@ -176,6 +187,56 @@
 //! governed by the on-by-default `obs` cargo feature
 //! (`--no-default-features` compiles it out entirely) and a runtime
 //! kill switch ([`obs::set_enabled`]).
+//!
+//! ### Live operations
+//!
+//! The exporters above are post-hoc; the live ops plane answers "what
+//! is it doing *right now*" and "what killed it":
+//!
+//! * **Streaming stats** — `serve --stats-socket ops.sock` starts a
+//!   [`obs::stats::StatsServer`] on a dedicated unix socket. Each poll
+//!   merges the router-side [`coordinator::MetricsSnapshot`], every
+//!   shard's / worker's [`store::StoreMetrics`] (fetched over the
+//!   existing `Metrics` wire frame for worker processes), and the
+//!   per-layer cost table into one JSON snapshot — on demand, off the
+//!   request path, without pausing traffic. `f2f top ops.sock` renders
+//!   it as a refreshing per-shard / per-layer table; `f2f top ops.sock
+//!   --once` prints the raw snapshot for scripts and CI.
+//! * **Event journal** — [`obs::events`] is a leveled, per-kind
+//!   rate-limited, trace-id-stamped JSONL stream (always compiled in;
+//!   `serve --events-out events.jsonl` adds a file sink, `--quiet`
+//!   silences the stderr mirror for warn/error, and the tail is also
+//!   served over the stats socket). Every ad-hoc `eprintln!` in the
+//!   serving tier now routes through it. One example line per kind:
+//!
+//!   ```text
+//!   {"ts_ns":1,"seq":0,"level":"warn","kind":"cost_sidecar_malformed","pid":7,"msg":"cost sidecar ignored","fields":{"path":"m.f2f.costs.json","error":"..."}}
+//!   {"ts_ns":2,"seq":1,"level":"error","kind":"decode_worker_spawn_failed","pid":7,"msg":"decode worker thread failed to spawn","fields":{"error":"..."}}
+//!   {"ts_ns":3,"seq":2,"level":"warn","kind":"decode_inline_degraded","pid":7,"msg":"no decode workers; decoding inline on callers","fields":{"requested":4}}
+//!   {"ts_ns":4,"seq":3,"level":"error","kind":"worker_exit","pid":7,"msg":"shard worker exited","fields":{"shard":0,"pid":91,"cause":"signal 9","postmortem":"flight/postmortem-91.json"}}
+//!   {"ts_ns":5,"seq":4,"level":"info","kind":"worker_respawn","pid":7,"msg":"shard worker revived","fields":{"shard":0,"pid":92,"restarts":1}}
+//!   {"ts_ns":6,"seq":5,"level":"warn","kind":"worker_unresponsive","pid":7,"msg":"health check failed; restarting","fields":{"shard":1,"error":"..."}}
+//!   {"ts_ns":7,"seq":6,"level":"warn","kind":"postmortem_failed","pid":7,"msg":"could not write postmortem","fields":{"shard":0,"error":"..."}}
+//!   {"ts_ns":8,"seq":7,"level":"warn","kind":"flight_install_failed","pid":91,"msg":"flight recorder disabled","fields":{"dir":"flight","error":"..."}}
+//!   {"ts_ns":9,"seq":8,"level":"info","kind":"evict","pid":7,"msg":"evicted decoded layer","fields":{"layer":"fc3","bytes":8192}}
+//!   {"ts_ns":10,"seq":9,"level":"warn","kind":"request_shed","pid":7,"trace_id":"0x1a2b","msg":"queue full; request shed","fields":{"inflight":256,"capacity":256}}
+//!   {"ts_ns":11,"seq":10,"level":"warn","kind":"anomaly","pid":7,"msg":"decode latency above rolling baseline","fields":{"metric":"decode_ns:fc1","ewma_ns":920000,"baseline_ns":310000,"factor":2.97}}
+//!   ```
+//!
+//! * **Crash flight recorder** — with `--shard-procs N`, each worker
+//!   installs a panic hook and checkpoints its span ring plus recent
+//!   journal lines to `<workdir>/flight-<pid>.bin` every ~100 ms
+//!   ([`obs::flight`]). When the supervisor reaps a dead worker it
+//!   attributes the exit (wire `Shutdown` vs signal vs recorded panic
+//!   message), converts the sidecar into `postmortem-<pid>.json` (span
+//!   and journal summary, `"cause"`) plus a Chrome-trace fragment
+//!   `postmortem-<pid>.trace.json`, emits the `worker_exit` event
+//!   above, and only then revives the worker.
+//! * **Watchdog** — [`obs::watchdog::Watchdog`] samples live per-layer
+//!   decode / GEMV EWMAs and the request p99 on an interval, maintains
+//!   rolling baselines, and emits an `anomaly` event when a signal
+//!   sustains above `factor ×` baseline — the hook ROADMAP item 5's
+//!   SLO tier consumes.
 //!
 //! ## Soundness & analysis
 //!

@@ -31,11 +31,27 @@
 //!   auto-loads — `--trace-out <path>` export the run's spans as a
 //!   Chrome trace (one pid lane per process; load in chrome://tracing
 //!   or Perfetto), `--metrics-out <path>` export the unified metrics
-//!   registry as JSON) and run a self-driven load test.
+//!   registry as JSON, `--stats-socket <path>` serve live stats on a
+//!   dedicated unix socket while serving (poll it with `f2f top`),
+//!   `--events-out <path>` persist the structured event journal as
+//!   JSONL, `--quiet` stop mirroring warn/error events to stderr,
+//!   `--duration-s <n>` keep replaying the load until the wall-clock
+//!   budget is spent — how CI holds a serve open to poll and kill it
+//!   mid-flight) and run a self-driven load test. `--trace-out` /
+//!   `--metrics-out` are also checkpointed incrementally (atomic
+//!   tmp+rename every 500 ms) so a crashed serve still leaves fresh
+//!   artifacts.
+//! * `f2f top <stats-socket> [--interval-ms <n>] [--once]` — poll a
+//!   serve's `--stats-socket` and render a refreshing per-shard /
+//!   per-layer table (hit rate, decode/GEMV quantiles, queue depth,
+//!   evictions, readahead skips). `--once` prints the raw stats JSON
+//!   document and exits — the machine-readable mode CI asserts on.
 //! * `f2f shard-worker <shard.f2f2> --socket <path> [--cache-kb <n>]
-//!   [--decode-threads <n>]` — serve one shard file over a unix
-//!   socket: the child-process entrypoint `serve --shard-procs`
-//!   spawns (unix only).
+//!   [--decode-threads <n>] [--flight-dir <dir>]` — serve one shard
+//!   file over a unix socket: the child-process entrypoint
+//!   `serve --shard-procs` spawns (unix only). With `--flight-dir`
+//!   the worker keeps a crash flight sidecar checkpointed for the
+//!   supervisor's postmortem.
 //! * `f2f hw --s <S> --nin <N> --ns <N>` — Appendix G hardware cost.
 //! * `f2f lint [--root <dir>] [--file <path> [--as <relpath>]]` — run
 //!   the repo-native invariant linter (see [`f2f::analysis`]) over
@@ -61,13 +77,14 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("shard") => cmd_shard(args),
         Some("rebalance") => cmd_rebalance(args),
         Some("serve") => cmd_serve(args),
+        Some("top") => cmd_top(args),
         Some("shard-worker") => cmd_shard_worker(args),
         Some("hw") => cmd_hw(args),
         Some("lint") => cmd_lint(args),
         _ => {
             eprintln!(
                 "usage: f2f <repro|compress|inspect|shard|rebalance|\
-                 serve|shard-worker|hw|lint> [options]\n\
+                 serve|top|shard-worker|hw|lint> [options]\n\
                  try: f2f repro table1 --bits 100000"
             );
             Ok(())
@@ -295,6 +312,12 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
     }
     let cache_kb: usize = args.get("cache-kb", 0)?;
     let decode_threads: usize = args.get("decode-threads", 0)?;
+    let flight_dir = args.get_str("flight-dir", "");
+    let flight = if flight_dir.is_empty() {
+        None
+    } else {
+        Some(std::path::PathBuf::from(&flight_dir))
+    };
     let budget = if cache_kb == 0 { usize::MAX } else { cache_kb << 10 };
     f2f::ipc::run_worker(
         std::path::Path::new(shard),
@@ -303,12 +326,48 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
             cache_budget_bytes: budget,
             decode_workers: decode_threads,
         },
+        flight.as_deref(),
     )
 }
 
 #[cfg(not(unix))]
 fn cmd_shard_worker(_args: &Args) -> Result<()> {
     bail!("shard-worker requires unix domain sockets (unix only)");
+}
+
+/// `f2f top <stats-socket>`: poll a serving process's live-stats
+/// socket and render the refreshing operations table. `--once` prints
+/// the raw stats JSON document and exits (the machine-readable mode
+/// CI asserts on); otherwise the view refreshes every
+/// `--interval-ms` until the serve goes away (which ends the loop
+/// with the connect error).
+#[cfg(unix)]
+fn cmd_top(args: &Args) -> Result<()> {
+    use f2f::obs::stats::{poll_stats, StatsSnapshot};
+    use std::time::Duration;
+
+    let socket = args.pos(1)?.to_string();
+    let socket = std::path::Path::new(&socket);
+    let interval_ms: u64 = args.get("interval-ms", 1000)?;
+    let timeout = Duration::from_secs(5);
+    if args.flag("once") {
+        print!("{}", poll_stats(socket, timeout)?);
+        return Ok(());
+    }
+    loop {
+        let snap =
+            StatsSnapshot::parse_json(&poll_stats(socket, timeout)?)?;
+        // ANSI clear + home: redraw in place like `top`.
+        print!("\x1b[2J\x1b[H{}", snap.render());
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        std::thread::sleep(Duration::from_millis(interval_ms.max(100)));
+    }
+}
+
+#[cfg(not(unix))]
+fn cmd_top(_args: &Args) -> Result<()> {
+    bail!("top requires unix domain sockets (unix only)");
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -359,6 +418,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // request/batch histograms, per-store cache counters and
     // decode/GEMV histograms, per-layer observed costs.
     let metrics_out = args.get_str("metrics-out", "");
+    // Live operations plane: serve stats on a dedicated unix socket
+    // while serving (`f2f top` polls it), persist the structured
+    // event journal, silence its stderr mirror, and optionally keep
+    // the load running for a wall-clock budget so there is a live
+    // process to poll.
+    let stats_socket = args.get_str("stats-socket", "");
+    let events_out = args.get_str("events-out", "");
+    let duration_s: u64 = args.get("duration-s", 0)?;
+    if args.flag("quiet") {
+        f2f::obs::events::set_stderr_mirror(false);
+    }
+    if !events_out.is_empty() {
+        let path = std::path::Path::new(&events_out);
+        // The sink may live inside a workdir that is only created
+        // further down (multi-process serving) — make the parent now.
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        f2f::obs::events::set_sink_path(path)?;
+        println!("event journal: {events_out} (JSONL, incremental)");
+    }
 
     // Compress a multi-layer MLP-shaped model into an indexed container.
     let t0 = std::time::Instant::now();
@@ -394,6 +476,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 profile_out_requested,
                 trace_out,
                 metrics_out,
+                stats_socket,
+                duration_s,
                 workdir: args.get_str("workdir", ""),
             },
         );
@@ -458,7 +542,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ServerConfig { max_batch, ..Default::default() },
             move || Box::new(backend),
         )?;
-        run_load(&server, requests, width, seed)?;
+        let live = {
+            let s1 = store.clone();
+            let s2 = store.clone();
+            let metrics = server.metrics_handle();
+            let inflight = server.inflight_handle();
+            let capacity = server.queue_capacity();
+            f2f::obs::stats::LiveSources::new(
+                Arc::new(move || {
+                    vec![("store".to_string(), s1.metrics())]
+                }),
+                Arc::new(move || s2.costs().snapshot()),
+            )
+            .with_server(Arc::new(move || metrics.snapshot()))
+            .with_queue(Arc::new(move || {
+                (
+                    inflight.load(std::sync::atomic::Ordering::Relaxed),
+                    capacity,
+                )
+            }))
+        };
+        let ops =
+            start_ops_plane(&stats_socket, &trace_out, &metrics_out, &live)?;
+        run_load_for(&server, requests, width, seed, duration_s)?;
         // Let trailing readahead decodes land so the printed counters
         // are stable run to run.
         store.wait_for_idle();
@@ -468,6 +574,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         write_profile(&CostProfile::from_stores([store.costs()]))?;
         let snap = server.metrics();
+        drop(ops);
         server.shutdown();
         export_observability(
             &trace_out,
@@ -501,7 +608,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ServerConfig { max_batch, ..Default::default() },
             move || Box::new(router),
         )?;
-        run_load(&server, requests, width, seed)?;
+        let live = {
+            let s1 = stores.clone();
+            let s2 = stores.clone();
+            let metrics = server.metrics_handle();
+            let inflight = server.inflight_handle();
+            let capacity = server.queue_capacity();
+            f2f::obs::stats::LiveSources::new(
+                Arc::new(move || {
+                    s1.iter()
+                        .enumerate()
+                        .map(|(i, s)| (format!("shard {i}"), s.metrics()))
+                        .collect()
+                }),
+                Arc::new(move || {
+                    CostProfile::from_stores(s2.iter().map(|s| s.costs()))
+                        .entries()
+                }),
+            )
+            .with_server(Arc::new(move || metrics.snapshot()))
+            .with_queue(Arc::new(move || {
+                (
+                    inflight.load(std::sync::atomic::Ordering::Relaxed),
+                    capacity,
+                )
+            }))
+        };
+        let ops =
+            start_ops_plane(&stats_socket, &trace_out, &metrics_out, &live)?;
+        run_load_for(&server, requests, width, seed, duration_s)?;
         // Let trailing cross-shard readahead decodes land so the
         // printed counters are stable run to run.
         for s in &stores {
@@ -523,6 +658,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         write_profile(&profile)?;
         let snap = server.metrics();
+        drop(ops);
         server.shutdown();
         export_observability(
             &trace_out,
@@ -533,6 +669,165 @@ fn cmd_serve(args: &Args) -> Result<()> {
             &profile.entries(),
             Vec::new(),
         );
+    }
+    Ok(())
+}
+
+/// The live operations plane for one serve: the optional stats
+/// socket, the regression watchdog, and the incremental exporter
+/// that keeps `--trace-out` / `--metrics-out` fresh (atomic
+/// tmp+rename every 500 ms). Dropping it stops all three.
+struct OpsPlane {
+    #[cfg(unix)]
+    _stats: Option<f2f::obs::stats::StatsServer>,
+    _watchdog: f2f::obs::watchdog::Watchdog,
+    flush_stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    flusher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for OpsPlane {
+    fn drop(&mut self) {
+        self.flush_stop
+            .store(true, std::sync::atomic::Ordering::Release);
+        if let Some(t) = self.flusher.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// How often the incremental exporter checkpoints `--trace-out` /
+/// `--metrics-out` while serving.
+const FLUSH_INTERVAL: std::time::Duration =
+    std::time::Duration::from_millis(500);
+
+fn start_ops_plane(
+    stats_socket: &str,
+    trace_out: &str,
+    metrics_out: &str,
+    live: &f2f::obs::stats::LiveSources,
+) -> Result<OpsPlane> {
+    #[cfg(unix)]
+    let stats = if stats_socket.is_empty() {
+        None
+    } else {
+        let path = std::path::Path::new(stats_socket);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let server =
+            f2f::obs::stats::StatsServer::start(path, live.clone())?;
+        println!(
+            "stats socket: {stats_socket} \
+             (try `f2f top {stats_socket}`)"
+        );
+        Some(server)
+    };
+    #[cfg(not(unix))]
+    if !stats_socket.is_empty() {
+        bail!("--stats-socket requires unix domain sockets (unix only)");
+    }
+    let watchdog = {
+        let live = live.clone();
+        f2f::obs::watchdog::Watchdog::start(
+            f2f::obs::watchdog::WatchdogConfig::default(),
+            move || live.watchdog_sample(),
+        )
+    };
+    let flush_stop = std::sync::Arc::new(
+        std::sync::atomic::AtomicBool::new(false),
+    );
+    let flusher = if trace_out.is_empty() && metrics_out.is_empty() {
+        None
+    } else {
+        let stop = flush_stop.clone();
+        let live = live.clone();
+        let trace_out = trace_out.to_string();
+        let metrics_out = metrics_out.to_string();
+        std::thread::Builder::new()
+            .name("f2f-flush".into())
+            .spawn(move || {
+                let tick = std::time::Duration::from_millis(10);
+                let mut since = std::time::Duration::ZERO;
+                while !stop
+                    .load(std::sync::atomic::Ordering::Acquire)
+                {
+                    std::thread::sleep(tick);
+                    since += tick;
+                    if since < FLUSH_INTERVAL {
+                        continue;
+                    }
+                    since = std::time::Duration::ZERO;
+                    flush_exports(&trace_out, &metrics_out, &live);
+                }
+            })
+            .ok()
+    };
+    Ok(OpsPlane {
+        #[cfg(unix)]
+        _stats: stats,
+        _watchdog: watchdog,
+        flush_stop,
+        flusher,
+    })
+}
+
+/// One incremental export checkpoint: rewrite `--trace-out` (this
+/// process's lane only; worker lanes are stitched in at teardown)
+/// and `--metrics-out` atomically, so a crashed serve still leaves
+/// artifacts no staler than [`FLUSH_INTERVAL`]. Failures are silent
+/// here — the final teardown export reports them.
+fn flush_exports(
+    trace_out: &str,
+    metrics_out: &str,
+    live: &f2f::obs::stats::LiveSources,
+) {
+    if !trace_out.is_empty() {
+        let lanes = vec![f2f::obs::ProcessLane {
+            pid: std::process::id(),
+            name: "server".to_string(),
+            events: f2f::obs::snapshot(),
+        }];
+        let _ = f2f::obs::write_atomic(
+            std::path::Path::new(trace_out),
+            f2f::obs::chrome_trace(&lanes).as_bytes(),
+        );
+    }
+    if !metrics_out.is_empty() {
+        if let Some(snap) = live.server_snapshot() {
+            let json = build_metrics_report(
+                &snap,
+                &live.stores(),
+                &live.costs(),
+            )
+            .to_json();
+            let _ = f2f::obs::write_atomic(
+                std::path::Path::new(metrics_out),
+                json.as_bytes(),
+            );
+        }
+    }
+}
+
+/// [`run_load`], then keep replaying it until `duration_s` of wall
+/// clock has passed (0 = one pass — the default). CI uses the budget
+/// to hold a serve open while it polls the stats socket and kills a
+/// worker mid-flight.
+fn run_load_for(
+    server: &f2f::coordinator::InferenceServer,
+    requests: usize,
+    width: usize,
+    seed: u64,
+    duration_s: u64,
+) -> Result<()> {
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(duration_s);
+    run_load(server, requests, width, seed)?;
+    let mut round = 1u64;
+    while std::time::Instant::now() < deadline {
+        run_load(server, requests, width, seed.wrapping_add(round))?;
+        round += 1;
     }
     Ok(())
 }
@@ -751,6 +1046,8 @@ struct MultiprocOpts {
     profile_out_requested: bool,
     trace_out: String,
     metrics_out: String,
+    stats_socket: String,
+    duration_s: u64,
     /// Where shard files, map, and sidecars land. Empty = an
     /// ephemeral temp dir removed on exit; explicit = kept, so the
     /// artifacts (including the per-shard cost sidecars that warm
@@ -774,6 +1071,7 @@ fn serve_multiproc(
     use f2f::coordinator::{InferenceServer, ServerConfig};
     use f2f::ipc::{ProcRouter, Supervisor, WorkerSpec};
     use f2f::store::{cost_sidecar_path, StoreMetrics};
+    use std::sync::Arc;
 
     let (workdir, ephemeral) = if opts.workdir.is_empty() {
         (
@@ -809,6 +1107,9 @@ fn serve_multiproc(
             socket_path: workdir.join(format!("shard{i}.sock")),
             cache_kb: opts.cache_kb,
             decode_threads: opts.decode_threads,
+            // Crash flight recorder sidecars land next to the shards;
+            // the supervisor turns them into postmortems on reap.
+            flight_dir: Some(workdir.clone()),
         });
         shard_paths.push(shard_path);
     }
@@ -852,8 +1153,67 @@ fn serve_multiproc(
         },
         move || Box::new(router),
     )?;
-    run_load(&server, opts.requests, opts.width, opts.seed)?;
+    // Live sources poll the workers over the same IPC clients the
+    // router serves with; the per-client mutex serializes a poll
+    // against in-flight fetches, so polling never changes results —
+    // it only interleaves. A worker mid-restart is skipped rather
+    // than failing the whole snapshot.
+    let live = {
+        let c1 = clients.clone();
+        let c2 = clients.clone();
+        let local = local_costs.clone();
+        let metrics = server.metrics_handle();
+        let inflight = server.inflight_handle();
+        let capacity = server.queue_capacity();
+        f2f::obs::stats::LiveSources::new(
+            Arc::new(move || {
+                c1.iter()
+                    .enumerate()
+                    .filter_map(|(i, c)| {
+                        c.metrics()
+                            .ok()
+                            .map(|m| (format!("worker {i}"), m))
+                    })
+                    .collect()
+            }),
+            Arc::new(move || {
+                let mut profile = f2f::shard::CostProfile::default();
+                for c in &c2 {
+                    if let Ok(p) = c.cost_profile() {
+                        for (name, cost) in p.entries() {
+                            profile.record(&name, cost);
+                        }
+                    }
+                }
+                for (name, cost) in local.snapshot() {
+                    profile.record(&name, cost);
+                }
+                profile.entries()
+            }),
+        )
+        .with_server(Arc::new(move || metrics.snapshot()))
+        .with_queue(Arc::new(move || {
+            (
+                inflight.load(std::sync::atomic::Ordering::Relaxed),
+                capacity,
+            )
+        }))
+    };
+    let ops = start_ops_plane(
+        &opts.stats_socket,
+        &opts.trace_out,
+        &opts.metrics_out,
+        &live,
+    )?;
+    run_load_for(
+        &server,
+        opts.requests,
+        opts.width,
+        opts.seed,
+        opts.duration_s,
+    )?;
     let server_snap = server.metrics();
+    drop(ops);
     server.shutdown();
 
     // Aggregate worker metrics over the wire — the counters a

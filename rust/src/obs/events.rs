@@ -1,0 +1,489 @@
+//! Structured event journal: leveled, rate-limited, trace-stamped.
+//!
+//! Spans ([`crate::obs`]) answer "where did this request spend its
+//! time"; the journal answers "what did the system *decide* and what
+//! went wrong while it ran". Every operationally significant moment —
+//! a malformed cost sidecar, decode degrading to inline, an eviction,
+//! a shed request, a worker death and its attributed cause, a watchdog
+//! anomaly — is one JSONL line:
+//!
+//! ```json
+//! {"ts_ns":1723111575000000000,"seq":17,"level":"warn",
+//!  "kind":"worker_exit","pid":4242,"trace_id":"0x0",
+//!  "msg":"shard worker 1 exited","fields":{"cause":"signal 9"}}
+//! ```
+//!
+//! Properties the serving path relies on:
+//!
+//! * **Bounded**: the journal keeps the newest
+//!   [`DEFAULT_RING_CAPACITY`] rendered lines in memory; a file sink
+//!   ([`set_sink_path`], `serve --events-out`) additionally appends
+//!   every line as it is emitted and flushes per line, so a crash
+//!   loses at most the line being written — the journal needs no
+//!   graceful teardown to be useful.
+//! * **Rate-limited**: each event kind has a token bucket
+//!   ([`RATE_BURST`] burst, [`RATE_PER_SEC`] steady-state) so an
+//!   eviction storm cannot turn the journal into the hot path.
+//!   `error`-level events bypass the limiter; drops are counted per
+//!   kind and surfaced in [`stats`](totals).
+//! * **Attributable**: every line carries the emitting thread's
+//!   current trace id ([`crate::obs::current_trace`]), so a shed or
+//!   evict decision cross-references the Chrome trace.
+//! * **Mirrored**: `warn`/`error` lines also go to stderr (the
+//!   behavior the `eprintln!` sites this journal replaced had) unless
+//!   [`set_stderr_mirror`]`(false)` — `serve --quiet`.
+
+use crate::sync::lock_unpoisoned;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Rendered lines the in-memory ring retains (newest win).
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Token-bucket burst per event kind.
+pub const RATE_BURST: u32 = 64;
+
+/// Token-bucket steady-state refill per event kind, per second.
+pub const RATE_PER_SEC: u32 = 16;
+
+/// Event severity. `Error` bypasses the per-kind rate limiter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Operational decisions worth a record (evictions, sheds).
+    Info,
+    /// Degradations the system survived (malformed sidecar, inline
+    /// decode fallback, a reaped worker).
+    Warn,
+    /// Failures that cost a request or a subsystem.
+    Error,
+}
+
+impl Level {
+    /// Stable lowercase name (the JSON `level` field).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+/// One structured field value. Numbers stay numbers in the JSON.
+#[derive(Debug, Clone)]
+pub enum Value {
+    /// Unsigned counter / byte count / nanoseconds.
+    U64(u64),
+    /// Measured or derived quantity.
+    F64(f64),
+    /// Free text (escaped on render).
+    Str(String),
+    /// Flag.
+    Bool(bool),
+}
+
+impl Value {
+    fn render(&self, out: &mut String) {
+        match self {
+            Value::U64(v) => out.push_str(&v.to_string()),
+            Value::F64(v) if v.is_finite() => {
+                out.push_str(&v.to_string())
+            }
+            Value::F64(_) => out.push('0'),
+            Value::Str(s) => {
+                out.push('"');
+                escape_into(s, out);
+                out.push('"');
+            }
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        }
+    }
+}
+
+/// Per-kind token bucket + drop counter.
+struct KindBucket {
+    kind: String,
+    tokens: f64,
+    last_refill: Instant,
+    dropped: u64,
+}
+
+struct JournalInner {
+    ring: VecDeque<String>,
+    capacity: usize,
+    sink: Option<std::fs::File>,
+    buckets: Vec<KindBucket>,
+    seq: u64,
+    emitted: u64,
+    dropped: u64,
+}
+
+/// A leveled, rate-limited JSONL event journal. One process-global
+/// instance serves the crate ([`emit`] and friends); standalone
+/// instances exist for tests.
+pub struct Journal {
+    inner: Mutex<JournalInner>,
+    mirror: AtomicBool,
+}
+
+/// Journal counters: `(emitted, dropped_by_rate_limit)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Totals {
+    /// Lines that made it into the ring (and sink, if any).
+    pub emitted: u64,
+    /// Events the per-kind rate limiter discarded.
+    pub dropped: u64,
+}
+
+impl Journal {
+    /// A journal retaining the newest `capacity` lines.
+    pub fn new(capacity: usize) -> Journal {
+        Journal {
+            inner: Mutex::new(JournalInner {
+                ring: VecDeque::new(),
+                capacity: capacity.max(1),
+                sink: None,
+                buckets: Vec::new(),
+                seq: 0,
+                emitted: 0,
+                dropped: 0,
+            }),
+            mirror: AtomicBool::new(true),
+        }
+    }
+
+    /// Emit one event. Returns `false` when the rate limiter dropped
+    /// it (`Error` level is never dropped).
+    pub fn emit(
+        &self,
+        level: Level,
+        kind: &str,
+        msg: &str,
+        fields: &[(&str, Value)],
+    ) -> bool {
+        {
+            let mut inner = lock_unpoisoned(&self.inner);
+            if level != Level::Error && !inner.admit(kind) {
+                inner.dropped += 1;
+                return false;
+            }
+            inner.seq += 1;
+            inner.emitted += 1;
+            let line =
+                render_line(inner.seq, level, kind, msg, fields);
+            if let Some(f) = inner.sink.as_mut() {
+                // Best-effort append: a full disk must never take the
+                // serving path down with it.
+                let _ = f.write_all(line.as_bytes());
+                let _ = f.write_all(b"\n");
+                let _ = f.flush();
+            }
+            if inner.ring.len() >= inner.capacity {
+                inner.ring.pop_front();
+            }
+            inner.ring.push_back(line);
+        }
+        if level != Level::Info && self.mirror.load(Ordering::Relaxed)
+        {
+            eprintln!("{msg}");
+        }
+        true
+    }
+
+    /// Mirror `warn`/`error` messages to stderr (default on; `serve
+    /// --quiet` turns it off).
+    pub fn set_stderr_mirror(&self, on: bool) {
+        self.mirror.store(on, Ordering::Relaxed);
+    }
+
+    /// Route every subsequent line to a JSONL file as well (created or
+    /// truncated now; each line is flushed as it is written).
+    pub fn set_sink_path(&self, path: &Path) -> std::io::Result<()> {
+        let file = std::fs::File::create(path)?;
+        lock_unpoisoned(&self.inner).sink = Some(file);
+        Ok(())
+    }
+
+    /// The newest `max` rendered lines, oldest first.
+    pub fn recent(&self, max: usize) -> Vec<String> {
+        let inner = lock_unpoisoned(&self.inner);
+        let skip = inner.ring.len().saturating_sub(max);
+        inner.ring.iter().skip(skip).cloned().collect()
+    }
+
+    /// Emitted / rate-dropped counters.
+    pub fn totals(&self) -> Totals {
+        let inner = lock_unpoisoned(&self.inner);
+        Totals { emitted: inner.emitted, dropped: inner.dropped }
+    }
+}
+
+impl JournalInner {
+    /// Take one token from `kind`'s bucket, refilling by elapsed time.
+    fn admit(&mut self, kind: &str) -> bool {
+        let now = Instant::now();
+        let bucket = match self
+            .buckets
+            .iter_mut()
+            .find(|b| b.kind == kind)
+        {
+            Some(b) => b,
+            None => {
+                self.buckets.push(KindBucket {
+                    kind: kind.to_string(),
+                    tokens: RATE_BURST as f64,
+                    last_refill: now,
+                    dropped: 0,
+                });
+                match self.buckets.last_mut() {
+                    Some(b) => b,
+                    None => return true,
+                }
+            }
+        };
+        let dt = now
+            .saturating_duration_since(bucket.last_refill)
+            .as_secs_f64();
+        bucket.last_refill = now;
+        bucket.tokens = (bucket.tokens + dt * RATE_PER_SEC as f64)
+            .min(RATE_BURST as f64);
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            true
+        } else {
+            bucket.dropped += 1;
+            false
+        }
+    }
+}
+
+fn render_line(
+    seq: u64,
+    level: Level,
+    kind: &str,
+    msg: &str,
+    fields: &[(&str, Value)],
+) -> String {
+    let mut out = String::with_capacity(128 + msg.len());
+    out.push_str("{\"ts_ns\":");
+    out.push_str(&super::unix_now_ns().to_string());
+    out.push_str(",\"seq\":");
+    out.push_str(&seq.to_string());
+    out.push_str(",\"level\":\"");
+    out.push_str(level.as_str());
+    out.push_str("\",\"kind\":\"");
+    escape_into(kind, &mut out);
+    out.push_str("\",\"pid\":");
+    out.push_str(&std::process::id().to_string());
+    out.push_str(",\"trace_id\":\"");
+    out.push_str(&format!("{:#x}", super::current_trace()));
+    out.push_str("\",\"msg\":\"");
+    escape_into(msg, &mut out);
+    out.push('"');
+    if !fields.is_empty() {
+        out.push_str(",\"fields\":{");
+        for (i, (k, v)) in fields.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            escape_into(k, &mut out);
+            out.push_str("\":");
+            v.render(&mut out);
+        }
+        out.push('}');
+    }
+    out.push('}');
+    out
+}
+
+/// Minimal JSON string escaper, shared with the other obs emitters.
+pub(crate) fn escape_into(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// The process-global journal every convenience function below uses.
+pub fn global() -> &'static Journal {
+    static GLOBAL: OnceLock<Journal> = OnceLock::new();
+    GLOBAL.get_or_init(|| Journal::new(DEFAULT_RING_CAPACITY))
+}
+
+/// Emit one event on the global journal.
+pub fn emit(
+    level: Level,
+    kind: &str,
+    msg: &str,
+    fields: &[(&str, Value)],
+) -> bool {
+    global().emit(level, kind, msg, fields)
+}
+
+/// `info`-level event on the global journal.
+pub fn info(kind: &str, msg: &str, fields: &[(&str, Value)]) -> bool {
+    emit(Level::Info, kind, msg, fields)
+}
+
+/// `warn`-level event on the global journal.
+pub fn warn(kind: &str, msg: &str, fields: &[(&str, Value)]) -> bool {
+    emit(Level::Warn, kind, msg, fields)
+}
+
+/// `error`-level event on the global journal (never rate-dropped).
+pub fn error(kind: &str, msg: &str, fields: &[(&str, Value)]) -> bool {
+    emit(Level::Error, kind, msg, fields)
+}
+
+/// Mirror toggle on the global journal (`serve --quiet` → false).
+pub fn set_stderr_mirror(on: bool) {
+    global().set_stderr_mirror(on);
+}
+
+/// File sink on the global journal (`serve --events-out`).
+pub fn set_sink_path(path: &Path) -> std::io::Result<()> {
+    global().set_sink_path(path)
+}
+
+/// Newest `max` lines from the global journal, oldest first.
+pub fn recent(max: usize) -> Vec<String> {
+    global().recent(max)
+}
+
+/// Counters of the global journal.
+pub fn totals() -> Totals {
+    global().totals()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lines_are_json_with_level_kind_and_fields() {
+        let j = Journal::new(16);
+        j.set_stderr_mirror(false);
+        assert!(j.emit(
+            Level::Warn,
+            "unit_kind",
+            "something \"quoted\"\nhappened",
+            &[
+                ("count", Value::U64(3)),
+                ("rate", Value::F64(0.5)),
+                ("layer", Value::Str("fc0".into())),
+                ("degraded", Value::Bool(true)),
+            ],
+        ));
+        let lines = j.recent(10);
+        assert_eq!(lines.len(), 1);
+        let line = &lines[0];
+        assert!(line.starts_with("{\"ts_ns\":"), "{line}");
+        assert!(line.ends_with('}'), "{line}");
+        assert!(line.contains("\"level\":\"warn\""), "{line}");
+        assert!(line.contains("\"kind\":\"unit_kind\""), "{line}");
+        assert!(
+            line.contains("something \\\"quoted\\\"\\nhappened"),
+            "{line}"
+        );
+        assert!(line.contains("\"count\":3"), "{line}");
+        assert!(line.contains("\"rate\":0.5"), "{line}");
+        assert!(line.contains("\"layer\":\"fc0\""), "{line}");
+        assert!(line.contains("\"degraded\":true"), "{line}");
+        assert_eq!(
+            j.totals(),
+            Totals { emitted: 1, dropped: 0 }
+        );
+    }
+
+    #[test]
+    fn ring_keeps_the_newest_lines() {
+        let j = Journal::new(4);
+        j.set_stderr_mirror(false);
+        for i in 0..10 {
+            // Distinct kinds dodge the rate limiter entirely.
+            j.emit(Level::Info, &format!("k{i}"), &format!("m{i}"), &[]);
+        }
+        let lines = j.recent(100);
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("\"msg\":\"m6\""));
+        assert!(lines[3].contains("\"msg\":\"m9\""));
+        assert_eq!(j.recent(2).len(), 2);
+        assert!(j.recent(2)[1].contains("\"msg\":\"m9\""));
+    }
+
+    #[test]
+    fn rate_limiter_drops_bursts_but_not_errors() {
+        let j = Journal::new(1024);
+        j.set_stderr_mirror(false);
+        let mut admitted = 0;
+        for _ in 0..(RATE_BURST * 3) {
+            if j.emit(Level::Info, "storm", "evict", &[]) {
+                admitted += 1;
+            }
+        }
+        assert!(admitted >= RATE_BURST, "burst admitted");
+        assert!(
+            admitted < RATE_BURST * 3,
+            "steady flood must be limited (admitted {admitted})"
+        );
+        let t = j.totals();
+        assert_eq!(t.emitted, u64::from(admitted));
+        assert!(t.dropped > 0);
+        // Errors bypass the exhausted bucket.
+        assert!(j.emit(Level::Error, "storm", "fatal", &[]));
+        // A different kind has its own bucket.
+        assert!(j.emit(Level::Info, "calm", "ok", &[]));
+    }
+
+    #[test]
+    fn sink_receives_every_line_incrementally() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "f2f-events-test-{}.jsonl",
+            std::process::id()
+        ));
+        let j = Journal::new(8);
+        j.set_stderr_mirror(false);
+        j.set_sink_path(&path).unwrap();
+        j.emit(Level::Info, "a", "first", &[]);
+        j.emit(Level::Warn, "b", "second", &[]);
+        // No teardown: the sink is already flushed line by line.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> =
+            text.lines().filter(|l| !l.is_empty()).collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"msg\":\"first\""));
+        assert!(lines[1].contains("\"msg\":\"second\""));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn trace_id_is_stamped_from_the_current_context() {
+        let j = Journal::new(8);
+        j.set_stderr_mirror(false);
+        let tr = crate::obs::mint_trace();
+        {
+            let _g = crate::obs::with_trace(tr);
+            j.emit(Level::Info, "traced", "inside", &[]);
+        }
+        let line = j.recent(1).remove(0);
+        assert!(
+            line.contains(&format!("\"trace_id\":\"{tr:#x}\"")),
+            "{line}"
+        );
+    }
+}

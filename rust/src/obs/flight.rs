@@ -1,0 +1,562 @@
+//! Crash flight recorder: periodic checkpoints of the span ring and
+//! event journal, surviving the process they describe.
+//!
+//! A worker's span ring lives in its own address space, so the one
+//! moment it matters most — the worker just died — is exactly when
+//! `TraceDump` over the wire can no longer reach it. The flight
+//! recorder closes that hole: [`FlightRecorder::install`] registers a
+//! panic hook and a checkpoint thread that atomically rewrite a small
+//! binary sidecar, `<dir>/flight-<pid>.bin`, every interval (tmp file
+//! + rename, so readers never see a torn write). When the
+//! [`Supervisor`](crate::ipc::Supervisor) reaps a dead worker it
+//! parses the sidecar ([`FlightData::read`]), attributes the exit, and
+//! emits a postmortem artifact pair ([`write_postmortem`]): a Chrome
+//! trace fragment of the worker's final spans plus a summary JSON with
+//! the attributed cause, the panic message if any, and the tail of the
+//! worker's event journal. A clean shutdown removes the sidecar — a
+//! flight file left behind always means an unclean death.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! "F2FL" | u16 version | u32 pid | u64 wall_ns | u8 panicked
+//! | u32 msg_len | msg | u32 n_events
+//! | n × { u64 trace_id | u64 t_start_ns | u64 dur_ns
+//!         | u8 kind | u8 label_len | label }
+//! | u32 n_lines | n × { u32 len | line }
+//! ```
+
+use super::events::escape_into;
+use super::{SpanEvent, SpanKind};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, Once, OnceLock};
+use std::time::Duration;
+
+/// Flight sidecar magic.
+pub const FLIGHT_MAGIC: [u8; 4] = *b"F2FL";
+
+/// Flight sidecar format version.
+pub const FLIGHT_VERSION: u16 = 1;
+
+/// Default checkpoint cadence. Short on purpose: the recorder exists
+/// for the window between "traffic happened" and "worker died".
+pub const DEFAULT_CHECKPOINT_INTERVAL: Duration = Duration::from_millis(100);
+
+/// Newest span events a checkpoint retains.
+pub const MAX_FLIGHT_EVENTS: usize = 8192;
+
+/// Newest journal lines a checkpoint retains.
+pub const MAX_FLIGHT_JOURNAL: usize = 256;
+
+const MAX_MSG_BYTES: usize = 64 * 1024;
+const MAX_LINE_BYTES: usize = 64 * 1024;
+const EVENT_MIN_BYTES: usize = 26;
+const LINE_MIN_BYTES: usize = 4;
+
+/// One parsed flight checkpoint: the last observable state of a
+/// (possibly dead) process.
+#[derive(Debug, Clone)]
+pub struct FlightData {
+    /// Pid of the process that wrote the checkpoint.
+    pub pid: u32,
+    /// Wall-clock time of the checkpoint, ns since the unix epoch.
+    pub wall_ns: u64,
+    /// True when written from inside the panic hook.
+    pub panicked: bool,
+    /// The panic payload message (empty unless `panicked`).
+    pub panic_msg: String,
+    /// Newest span events at checkpoint time, start-ordered.
+    pub events: Vec<SpanEvent>,
+    /// Newest journal lines at checkpoint time, oldest first.
+    pub journal: Vec<String>,
+}
+
+impl FlightData {
+    /// Snapshot this process's span ring and journal tail.
+    pub fn capture(panic_msg: Option<&str>) -> FlightData {
+        let mut events = super::snapshot();
+        let skip = events.len().saturating_sub(MAX_FLIGHT_EVENTS);
+        if skip > 0 {
+            events.drain(..skip);
+        }
+        FlightData {
+            pid: std::process::id(),
+            wall_ns: super::unix_now_ns(),
+            panicked: panic_msg.is_some(),
+            panic_msg: panic_msg.unwrap_or("").to_string(),
+            events,
+            journal: super::events::recent(MAX_FLIGHT_JOURNAL),
+        }
+    }
+
+    /// Serialize to the sidecar format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            64 + self.events.len() * 64 + self.journal.len() * 64,
+        );
+        out.extend_from_slice(&FLIGHT_MAGIC);
+        out.extend_from_slice(&FLIGHT_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.pid.to_le_bytes());
+        out.extend_from_slice(&self.wall_ns.to_le_bytes());
+        out.push(u8::from(self.panicked));
+        let msg = trim_bytes(&self.panic_msg, MAX_MSG_BYTES);
+        out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+        out.extend_from_slice(msg.as_bytes());
+        out.extend_from_slice(&(self.events.len() as u32).to_le_bytes());
+        for ev in &self.events {
+            out.extend_from_slice(&ev.trace_id.to_le_bytes());
+            out.extend_from_slice(&ev.t_start_ns.to_le_bytes());
+            out.extend_from_slice(&ev.dur_ns.to_le_bytes());
+            out.push(ev.kind.as_u8());
+            let label = ev.label();
+            out.push(label.len() as u8);
+            out.extend_from_slice(label.as_bytes());
+        }
+        out.extend_from_slice(&(self.journal.len() as u32).to_le_bytes());
+        for line in &self.journal {
+            let line = trim_bytes(line, MAX_LINE_BYTES);
+            out.extend_from_slice(&(line.len() as u32).to_le_bytes());
+            out.extend_from_slice(line.as_bytes());
+        }
+        out
+    }
+
+    /// Parse a sidecar. Fully bounds-checked: a torn or corrupt file
+    /// errors, it never panics. Events with unknown kinds (a newer
+    /// writer) are dropped individually.
+    pub fn parse(bytes: &[u8]) -> Result<FlightData> {
+        let mut c = Cursor { buf: bytes, at: 0 };
+        if c.take(4)? != FLIGHT_MAGIC {
+            bail!("flight sidecar: bad magic");
+        }
+        let version = c.u16()?;
+        if version != FLIGHT_VERSION {
+            bail!("flight sidecar: unsupported version {version}");
+        }
+        let pid = c.u32()?;
+        let wall_ns = c.u64()?;
+        let panicked = c.u8()? != 0;
+        let msg_len = c.u32()? as usize;
+        if msg_len > MAX_MSG_BYTES {
+            bail!("flight sidecar: panic message of {msg_len} bytes");
+        }
+        let panic_msg =
+            String::from_utf8_lossy(c.take(msg_len)?).into_owned();
+        let n_events = c.u32()? as usize;
+        if n_events > c.remaining() / EVENT_MIN_BYTES {
+            bail!("flight sidecar: event count {n_events} exceeds payload");
+        }
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            let trace_id = c.u64()?;
+            let t_start_ns = c.u64()?;
+            let dur_ns = c.u64()?;
+            let kind = c.u8()?;
+            let label_len = c.u8()? as usize;
+            if label_len > super::MAX_LABEL_BYTES {
+                bail!("flight sidecar: label of {label_len} bytes");
+            }
+            let label =
+                String::from_utf8_lossy(c.take(label_len)?).into_owned();
+            if let Some(kind) = SpanKind::from_u8(kind) {
+                events.push(SpanEvent::new(
+                    trace_id, kind, &label, t_start_ns, dur_ns,
+                ));
+            }
+        }
+        let n_lines = c.u32()? as usize;
+        if n_lines > c.remaining() / LINE_MIN_BYTES {
+            bail!("flight sidecar: line count {n_lines} exceeds payload");
+        }
+        let mut journal = Vec::with_capacity(n_lines);
+        for _ in 0..n_lines {
+            let len = c.u32()? as usize;
+            if len > MAX_LINE_BYTES {
+                bail!("flight sidecar: journal line of {len} bytes");
+            }
+            journal
+                .push(String::from_utf8_lossy(c.take(len)?).into_owned());
+        }
+        Ok(FlightData {
+            pid,
+            wall_ns,
+            panicked,
+            panic_msg,
+            events,
+            journal,
+        })
+    }
+
+    /// Read and parse a sidecar file.
+    pub fn read(path: &Path) -> Result<FlightData> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        FlightData::parse(&bytes)
+            .with_context(|| format!("parse {}", path.display()))
+    }
+}
+
+/// The sidecar path a process with `pid` checkpoints into under `dir`.
+pub fn flight_path(dir: &Path, pid: u32) -> PathBuf {
+    dir.join(format!("flight-{pid}.bin"))
+}
+
+fn trim_bytes(s: &str, max: usize) -> &str {
+    let mut n = s.len().min(max);
+    while n > 0 && !s.is_char_boundary(n) {
+        n -= 1;
+    }
+    s.get(..n).unwrap_or("")
+}
+
+/// Bounds-checked reader over untrusted sidecar bytes.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        match self.buf.get(self.at..self.at.saturating_add(n)) {
+            Some(s) => {
+                self.at += n;
+                Ok(s)
+            }
+            None => bail!("flight sidecar: truncated at byte {}", self.at),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?.first().copied().unwrap_or(0))
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let mut b = [0u8; 2];
+        b.copy_from_slice(self.take(2)?);
+        Ok(u16::from_le_bytes(b))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        b.copy_from_slice(self.take(4)?);
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(self.take(8)?);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.at)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Recorder: checkpoint thread + panic hook.
+// ---------------------------------------------------------------------
+
+/// Where the panic hook writes its final checkpoint. Process-global
+/// because `std::panic::set_hook` is.
+fn hook_path() -> &'static Mutex<Option<PathBuf>> {
+    static PATH: OnceLock<Mutex<Option<PathBuf>>> = OnceLock::new();
+    PATH.get_or_init(|| Mutex::new(None))
+}
+
+fn checkpoint(path: &Path, panic_msg: Option<&str>) {
+    // Best effort by design: a full disk must not take the worker down.
+    let data = FlightData::capture(panic_msg);
+    let _ = super::write_atomic(path, &data.to_bytes());
+}
+
+fn install_panic_hook() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| {
+                    info.payload().downcast_ref::<String>().cloned()
+                })
+                .unwrap_or_else(|| "<non-string panic payload>".into());
+            let msg = match info.location() {
+                Some(loc) => format!("{msg} at {loc}"),
+                None => msg,
+            };
+            let path = crate::sync::lock_unpoisoned(hook_path()).clone();
+            if let Some(path) = path {
+                checkpoint(&path, Some(&msg));
+            }
+            prev(info);
+        }));
+    });
+}
+
+/// Periodic flight checkpointing for this process. Dropping the
+/// recorder stops the thread but leaves the newest sidecar on disk
+/// (crash-safe default); [`FlightRecorder::finish`]`(true)` is the
+/// clean-shutdown path that removes it.
+pub struct FlightRecorder {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    path: PathBuf,
+}
+
+impl FlightRecorder {
+    /// Start checkpointing into `dir` every `interval`. Writes an
+    /// immediate first checkpoint and registers the process panic
+    /// hook, so even a death right after install leaves a sidecar.
+    pub fn install(dir: &Path, interval: Duration) -> Result<FlightRecorder> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create {}", dir.display()))?;
+        let path = flight_path(dir, std::process::id());
+        *crate::sync::lock_unpoisoned(hook_path()) = Some(path.clone());
+        install_panic_hook();
+        checkpoint(&path, None);
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let stop = Arc::clone(&stop);
+            let path = path.clone();
+            let interval = interval.max(Duration::from_millis(10));
+            std::thread::Builder::new()
+                .name("f2f-flight".into())
+                .spawn(move || {
+                    let tick = Duration::from_millis(10);
+                    let mut since = Duration::ZERO;
+                    while !stop.load(Ordering::Acquire) {
+                        std::thread::sleep(tick);
+                        since += tick;
+                        if since >= interval {
+                            since = Duration::ZERO;
+                            checkpoint(&path, None);
+                        }
+                    }
+                })
+                .ok()
+        };
+        Ok(FlightRecorder { stop, thread, path })
+    }
+
+    /// The sidecar path this recorder maintains.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Stop checkpointing. `clean` removes the sidecar (orderly
+    /// shutdown — no forensics needed); otherwise a final checkpoint
+    /// is written and the file stays.
+    pub fn finish(mut self, clean: bool) {
+        self.halt();
+        if clean {
+            *crate::sync::lock_unpoisoned(hook_path()) = None;
+            let _ = std::fs::remove_file(&self.path);
+        } else {
+            checkpoint(&self.path, None);
+        }
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for FlightRecorder {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Postmortem artifacts (supervisor side).
+// ---------------------------------------------------------------------
+
+/// Paths of the artifact pair [`write_postmortem`] produced.
+#[derive(Debug, Clone)]
+pub struct Postmortem {
+    /// Summary JSON: pid, attributed cause, span/journal counts,
+    /// panic message, journal tail.
+    pub summary_path: PathBuf,
+    /// Chrome trace-event fragment of the dead process's final spans.
+    pub trace_path: PathBuf,
+    /// Span events carried into the trace fragment.
+    pub spans: usize,
+}
+
+/// Render a dead worker's flight checkpoint into
+/// `<dir>/postmortem-<pid>.json` + `<dir>/postmortem-<pid>.trace.json`.
+/// `cause` is the supervisor's exit attribution (e.g. `"signal 9"`,
+/// `"panic: …"`, `"clean exit"`).
+pub fn write_postmortem(
+    dir: &Path,
+    data: &FlightData,
+    cause: &str,
+) -> Result<Postmortem> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create {}", dir.display()))?;
+    let trace_path = dir.join(format!("postmortem-{}.trace.json", data.pid));
+    let lane = super::ProcessLane {
+        pid: data.pid,
+        name: format!("flight pid {}", data.pid),
+        events: data.events.clone(),
+    };
+    super::write_atomic(
+        &trace_path,
+        super::chrome_trace(&[lane]).as_bytes(),
+    )?;
+    let mut json = String::with_capacity(512);
+    json.push_str("{\n  \"pid\": ");
+    json.push_str(&data.pid.to_string());
+    json.push_str(",\n  \"cause\": \"");
+    escape_into(cause, &mut json);
+    json.push_str("\",\n  \"panicked\": ");
+    json.push_str(if data.panicked { "true" } else { "false" });
+    json.push_str(",\n  \"panic_msg\": \"");
+    escape_into(&data.panic_msg, &mut json);
+    json.push_str("\",\n  \"checkpoint_wall_ns\": ");
+    json.push_str(&data.wall_ns.to_string());
+    json.push_str(",\n  \"spans\": ");
+    json.push_str(&data.events.len().to_string());
+    json.push_str(",\n  \"journal_lines\": ");
+    json.push_str(&data.journal.len().to_string());
+    json.push_str(",\n  \"trace\": \"");
+    escape_into(
+        trace_path.file_name().and_then(|n| n.to_str()).unwrap_or(""),
+        &mut json,
+    );
+    json.push_str("\",\n  \"journal_tail\": [");
+    let tail_skip = data.journal.len().saturating_sub(32);
+    for (i, line) in data.journal.iter().skip(tail_skip).enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        // Journal lines are themselves JSON objects: embed verbatim.
+        json.push_str("\n    ");
+        json.push_str(line);
+    }
+    json.push_str("\n  ]\n}\n");
+    let summary_path = dir.join(format!("postmortem-{}.json", data.pid));
+    super::write_atomic(&summary_path, json.as_bytes())?;
+    Ok(Postmortem { summary_path, trace_path, spans: data.events.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FlightData {
+        FlightData {
+            pid: 4242,
+            wall_ns: 1_700_000_000_000_000_000,
+            panicked: true,
+            panic_msg: "boom at worker.rs:1".into(),
+            events: vec![
+                SpanEvent::new(7, SpanKind::Decode, "mlp/fc0", 100, 50),
+                SpanEvent::new(7, SpanKind::Gemv, "mlp/fc1", 200, 25),
+                SpanEvent::new(0, SpanKind::Evict, "mlp/fc2", 300, 0),
+            ],
+            journal: vec![
+                "{\"kind\":\"a\"}".into(),
+                "{\"kind\":\"b\"}".into(),
+            ],
+        }
+    }
+
+    #[test]
+    fn sidecar_round_trips() {
+        let data = sample();
+        let parsed = FlightData::parse(&data.to_bytes()).unwrap();
+        assert_eq!(parsed.pid, data.pid);
+        assert_eq!(parsed.wall_ns, data.wall_ns);
+        assert_eq!(parsed.panicked, data.panicked);
+        assert_eq!(parsed.panic_msg, data.panic_msg);
+        assert_eq!(parsed.events, data.events);
+        assert_eq!(parsed.journal, data.journal);
+    }
+
+    #[test]
+    fn corrupt_sidecars_error_instead_of_panicking() {
+        let bytes = sample().to_bytes();
+        assert!(FlightData::parse(b"").is_err());
+        assert!(FlightData::parse(b"XXXX").is_err());
+        // Truncation at every prefix length must error or parse, never
+        // panic; short prefixes always error.
+        for cut in 0..bytes.len().min(64) {
+            assert!(
+                FlightData::parse(&bytes[..cut]).is_err(),
+                "prefix of {cut} bytes parsed"
+            );
+        }
+        // A lying event count is rejected up front.
+        let mut lying = bytes.clone();
+        let n_events_at = 4 + 2 + 4 + 8 + 1 + 4 + sample().panic_msg.len();
+        lying[n_events_at..n_events_at + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(FlightData::parse(&lying).is_err());
+    }
+
+    #[test]
+    fn unknown_span_kinds_are_dropped_individually() {
+        let mut bytes = sample().to_bytes();
+        // First event's kind byte: header + msg + n_events + 24.
+        let kind_at =
+            4 + 2 + 4 + 8 + 1 + 4 + sample().panic_msg.len() + 4 + 24;
+        bytes[kind_at] = 250;
+        let parsed = FlightData::parse(&bytes).unwrap();
+        assert_eq!(parsed.events.len(), 2, "one event dropped");
+        assert_eq!(parsed.events[0].kind, SpanKind::Gemv);
+    }
+
+    #[test]
+    fn recorder_checkpoints_and_clean_finish_removes() {
+        let dir = std::env::temp_dir()
+            .join(format!("f2f-flight-test-{}", std::process::id()));
+        let rec = FlightRecorder::install(
+            &dir,
+            Duration::from_millis(10),
+        )
+        .unwrap();
+        let path = rec.path().to_path_buf();
+        assert!(path.exists(), "initial checkpoint is immediate");
+        let data = FlightData::read(&path).unwrap();
+        assert_eq!(data.pid, std::process::id());
+        assert!(!data.panicked);
+        rec.finish(true);
+        assert!(!path.exists(), "clean finish removes the sidecar");
+        // Unclean finish leaves a final checkpoint behind.
+        let rec =
+            FlightRecorder::install(&dir, Duration::from_millis(10))
+                .unwrap();
+        rec.finish(false);
+        assert!(path.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn postmortem_artifacts_carry_spans_and_cause() {
+        let dir = std::env::temp_dir()
+            .join(format!("f2f-postmortem-test-{}", std::process::id()));
+        let data = sample();
+        let pm = write_postmortem(&dir, &data, "signal 9").unwrap();
+        assert_eq!(pm.spans, 3);
+        let summary =
+            std::fs::read_to_string(&pm.summary_path).unwrap();
+        assert!(summary.contains("\"cause\": \"signal 9\""), "{summary}");
+        assert!(summary.contains("\"pid\": 4242"), "{summary}");
+        assert!(summary.contains("\"spans\": 3"), "{summary}");
+        assert!(summary.contains("boom at worker.rs:1"), "{summary}");
+        assert!(summary.contains("{\"kind\":\"b\"}"), "{summary}");
+        let trace = std::fs::read_to_string(&pm.trace_path).unwrap();
+        assert!(trace.contains("\"traceEvents\""), "{trace}");
+        assert!(trace.contains("mlp/fc0"), "{trace}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -42,9 +42,30 @@
 //! `benches/store.rs`). Trace-id minting stays available either way —
 //! it is one relaxed atomic increment and the wire format carries it
 //! unconditionally.
+//!
+//! On top of the recorder sits the **live operations plane** (PR 8):
+//!
+//! * [`events`] — a structured, leveled, rate-limited JSONL event
+//!   journal (the replacement for ad-hoc `eprintln!`), tailed over
+//!   the stats socket and persisted with `serve --events-out`.
+//! * [`stats`] — on-demand JSON snapshots of a *running* server
+//!   (merged store metrics, cost EWMAs, request quantiles, queue
+//!   depth) served on a dedicated unix socket; `f2f top` renders
+//!   them as a refreshing table.
+//! * [`flight`] — a crash flight recorder: workers checkpoint their
+//!   span ring and journal tail to a binary sidecar so the
+//!   supervisor can write a postmortem for a worker that died
+//!   without answering `TraceDump`.
+//! * [`watchdog`] — rolling-baseline regression detection over the
+//!   live signals, emitting `anomaly` journal events.
 
 mod export;
 mod hist;
+
+pub mod events;
+pub mod flight;
+pub mod stats;
+pub mod watchdog;
 
 pub use export::{chrome_trace, ProcessLane};
 pub use hist::{HdrLite, HDR_BUCKETS, HDR_WIRE_FIELDS};
@@ -396,6 +417,18 @@ pub fn unix_now_ns() -> u64 {
         .duration_since(UNIX_EPOCH)
         .map(|d| u64::try_from(d.as_nanos()).unwrap_or(u64::MAX))
         .unwrap_or(0)
+}
+
+/// Write `bytes` to `path` atomically: a sibling `.tmp` file is
+/// written in full, then renamed over the target, so a concurrent
+/// reader (the supervisor parsing a flight sidecar, CI tailing an
+/// incremental export) never observes a torn file.
+pub fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)
 }
 
 #[cfg(feature = "obs")]

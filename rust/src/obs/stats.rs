@@ -1,0 +1,940 @@
+//! Streaming stats: live snapshots of a serving process, on demand.
+//!
+//! Everything PR 6 measures — request/batch histograms, per-store
+//! cache counters, per-layer cost EWMAs — was only exported at
+//! graceful teardown. This module turns those signals into a *live*
+//! surface:
+//!
+//! * [`LiveSources`] — closures over the running server's metrics
+//!   handle, queue gauges, stores and cost tables. Snapshots are
+//!   taken on demand per request, so polling never pauses traffic:
+//!   each source is a lock-snapshot the serving path already takes.
+//! * [`LiveSources::stats_json`] — one self-describing JSON document
+//!   (schema-versioned, objects and numbers only, so the same
+//!   hardened reader that parses cost profiles parses it).
+//! * [`StatsServer`] (unix) — a dedicated socket speaking the
+//!   existing wire frames: `Metrics` answers the *merged*
+//!   [`StoreMetrics`] across shards, `CostProfile` the merged cost
+//!   table, `TraceDump` this process's span ring, `Stats` the JSON
+//!   snapshot, `Events` the journal tail. `serve --stats-socket`
+//!   starts one; `f2f top <socket>` polls it and renders
+//!   [`StatsSnapshot::render`]'s refreshing table.
+
+use super::events;
+use super::watchdog::WatchdogSample;
+use crate::coordinator::MetricsSnapshot;
+use crate::report::Table;
+use crate::shard::CostProfile;
+use crate::store::{LayerCost, StoreMetrics};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// Stats-document schema version ([`LiveSources::stats_json`]).
+pub const STATS_SCHEMA: u64 = 1;
+
+/// Hard cap on journal lines one `Events` request returns.
+pub const MAX_EVENT_LINES: u32 = 65_536;
+
+/// Source of the coordinator's [`MetricsSnapshot`].
+pub type ServerSource = Arc<dyn Fn() -> MetricsSnapshot + Send + Sync>;
+
+/// Source of the `(inflight, capacity)` queue gauge.
+pub type QueueSource = Arc<dyn Fn() -> (usize, usize) + Send + Sync>;
+
+/// Source of per-store `(name, metrics)` snapshots.
+pub type StoresSource =
+    Arc<dyn Fn() -> Vec<(String, StoreMetrics)> + Send + Sync>;
+
+/// Source of merged per-layer `(name, cost)` estimates.
+pub type CostsSource =
+    Arc<dyn Fn() -> Vec<(String, LayerCost)> + Send + Sync>;
+
+/// Live taps into a serving process. Every accessor snapshots *now* —
+/// nothing is cached, nothing waits for teardown. Cloning shares the
+/// underlying closures.
+#[derive(Clone)]
+pub struct LiveSources {
+    server: Option<ServerSource>,
+    queue: Option<QueueSource>,
+    stores: StoresSource,
+    costs: CostsSource,
+}
+
+impl LiveSources {
+    /// Sources over store metrics and a cost table (the minimum any
+    /// serving process has).
+    pub fn new(stores: StoresSource, costs: CostsSource) -> LiveSources {
+        LiveSources { server: None, queue: None, stores, costs }
+    }
+
+    /// Add the coordinator's request-metrics source.
+    pub fn with_server(mut self, server: ServerSource) -> LiveSources {
+        self.server = Some(server);
+        self
+    }
+
+    /// Add the `(inflight, capacity)` queue gauge source.
+    pub fn with_queue(mut self, queue: QueueSource) -> LiveSources {
+        self.queue = Some(queue);
+        self
+    }
+
+    /// The coordinator's request metrics, when a server source is
+    /// attached.
+    pub fn server_snapshot(&self) -> Option<MetricsSnapshot> {
+        self.server.as_ref().map(|s| s())
+    }
+
+    /// Per-store snapshots, in shard order.
+    pub fn stores(&self) -> Vec<(String, StoreMetrics)> {
+        (self.stores)()
+    }
+
+    /// Merged per-layer cost estimates.
+    pub fn costs(&self) -> Vec<(String, LayerCost)> {
+        (self.costs)()
+    }
+
+    /// All stores folded into one [`StoreMetrics`] — what the stats
+    /// socket's `Metrics` frame answers.
+    pub fn merged_metrics(&self) -> StoreMetrics {
+        let mut merged = StoreMetrics::default();
+        for (_, m) in self.stores() {
+            merged.merge(&m);
+        }
+        merged
+    }
+
+    /// The cost table as a [`CostProfile`] — what the stats socket's
+    /// `CostProfile` frame answers (same JSON `f2f rebalance` eats).
+    pub fn cost_profile(&self) -> CostProfile {
+        let mut profile = CostProfile::new();
+        for (name, cost) in self.costs() {
+            profile.record(&name, cost);
+        }
+        profile
+    }
+
+    /// One watchdog observation: request p99 plus per-layer EWMAs.
+    pub fn watchdog_sample(&self) -> WatchdogSample {
+        let request_p99_ns = self
+            .server
+            .as_ref()
+            .map(|s| s().p99.as_nanos() as f64)
+            .unwrap_or(0.0);
+        let layers = self
+            .costs()
+            .into_iter()
+            .map(|(name, c)| {
+                (
+                    name,
+                    c.decode_estimate().unwrap_or(0.0),
+                    c.gemv_estimate().unwrap_or(0.0),
+                )
+            })
+            .collect();
+        WatchdogSample { request_p99_ns, layers }
+    }
+
+    /// The full live snapshot as self-describing JSON. Objects and
+    /// numbers only (shards and layers are objects keyed by name, not
+    /// arrays) so [`StatsSnapshot::parse_json`] reads it with the
+    /// crate's hardened object-only JSON reader.
+    pub fn stats_json(&self) -> String {
+        let mut out = String::with_capacity(1024);
+        out.push_str("{\"schema\": ");
+        out.push_str(&STATS_SCHEMA.to_string());
+        out.push_str(", \"ts_ns\": ");
+        out.push_str(&super::unix_now_ns().to_string());
+        out.push_str(", \"pid\": ");
+        out.push_str(&std::process::id().to_string());
+        if let Some(server) = self.server.as_ref() {
+            let s = server();
+            out.push_str(",\n \"server\": {");
+            push_num(&mut out, "completed", s.completed as f64);
+            out.push_str(", ");
+            push_num(&mut out, "batches", s.batches as f64);
+            out.push_str(", ");
+            push_num(&mut out, "errors", s.errors as f64);
+            out.push_str(", ");
+            push_num(&mut out, "mean_batch_size", s.mean_batch_size());
+            out.push_str(", ");
+            push_num(&mut out, "request_p50_us", dur_us(s.p50));
+            out.push_str(", ");
+            push_num(&mut out, "request_p95_us", dur_us(s.p95));
+            out.push_str(", ");
+            push_num(&mut out, "request_p99_us", dur_us(s.p99));
+            out.push_str(", ");
+            push_num(&mut out, "request_max_us", dur_us(s.max));
+            if let Some(queue) = self.queue.as_ref() {
+                let (depth, capacity) = queue();
+                out.push_str(", ");
+                push_num(&mut out, "queue_depth", depth as f64);
+                out.push_str(", ");
+                push_num(&mut out, "queue_capacity", capacity as f64);
+            }
+            out.push('}');
+        }
+        out.push_str(",\n \"shards\": {");
+        for (i, (name, m)) in self.stores().iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n   ");
+            }
+            out.push('"');
+            events::escape_into(name, &mut out);
+            out.push_str("\": {");
+            let lookups = m.hits + m.misses;
+            let hit_rate = if lookups == 0 {
+                0.0
+            } else {
+                m.hits as f64 / lookups as f64
+            };
+            push_num(&mut out, "hits", m.hits as f64);
+            out.push_str(", ");
+            push_num(&mut out, "misses", m.misses as f64);
+            out.push_str(", ");
+            push_num(&mut out, "hit_rate", hit_rate);
+            out.push_str(", ");
+            push_num(&mut out, "decodes", m.decodes as f64);
+            out.push_str(", ");
+            push_num(&mut out, "evictions", m.evictions as f64);
+            out.push_str(", ");
+            push_num(&mut out, "prefetches", m.prefetches as f64);
+            out.push_str(", ");
+            push_num(
+                &mut out,
+                "readahead_skips",
+                m.readahead_skips as f64,
+            );
+            out.push_str(", ");
+            push_num(&mut out, "cached_bytes", m.cached_bytes as f64);
+            out.push_str(", ");
+            push_num(&mut out, "cached_layers", m.cached_layers as f64);
+            out.push_str(", ");
+            push_num(
+                &mut out,
+                "decode_samples",
+                m.decode_hist.count() as f64,
+            );
+            out.push_str(", ");
+            push_hist_us(&mut out, "decode", &m.decode_hist);
+            out.push_str(", ");
+            push_num(&mut out, "gemv_samples", m.gemv_hist.count() as f64);
+            out.push_str(", ");
+            push_hist_us(&mut out, "gemv", &m.gemv_hist);
+            out.push('}');
+        }
+        out.push_str("},\n \"layers\": {");
+        for (i, (name, c)) in self.costs().iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n   ");
+            }
+            out.push('"');
+            events::escape_into(name, &mut out);
+            out.push_str("\": {");
+            push_num(&mut out, "decode_ns", c.decode_ns);
+            out.push_str(", ");
+            push_num(&mut out, "gemv_ns", c.gemv_ns);
+            out.push_str(", ");
+            push_num(&mut out, "decode_samples", c.decode_samples as f64);
+            out.push_str(", ");
+            push_num(&mut out, "gemv_samples", c.gemv_samples as f64);
+            out.push('}');
+        }
+        let totals = events::totals();
+        out.push_str("},\n \"events\": {");
+        push_num(&mut out, "emitted", totals.emitted as f64);
+        out.push_str(", ");
+        push_num(&mut out, "dropped", totals.dropped as f64);
+        out.push_str("}}\n");
+        out
+    }
+}
+
+fn dur_us(d: std::time::Duration) -> f64 {
+    d.as_secs_f64() * 1e6
+}
+
+fn push_num(out: &mut String, key: &str, v: f64) {
+    out.push('"');
+    out.push_str(key);
+    out.push_str("\": ");
+    if v.is_finite() {
+        out.push_str(&format!("{v:.3}"));
+    } else {
+        out.push('0');
+    }
+}
+
+fn push_hist_us(out: &mut String, prefix: &str, h: &super::HdrLite) {
+    for (label, q) in
+        [("p50", 0.50), ("p95", 0.95), ("p99", 0.99)]
+    {
+        push_num(
+            out,
+            &format!("{prefix}_{label}_us"),
+            dur_us(h.percentile(q)),
+        );
+        out.push_str(", ");
+    }
+    push_num(out, &format!("{prefix}_max_us"), dur_us(h.max()));
+}
+
+// ---------------------------------------------------------------------
+// Client side: parse + render (what `f2f top` draws).
+// ---------------------------------------------------------------------
+
+/// Named numeric fields of one JSON object.
+pub type Fields = Vec<(String, f64)>;
+
+/// Look up one field; 0.0 when absent (forward compatibility — a
+/// newer server may drop or rename fields the renderer tolerates).
+pub fn field(fields: &[(String, f64)], key: &str) -> f64 {
+    fields
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| *v)
+        .unwrap_or(0.0)
+}
+
+/// A parsed stats document, field order preserved.
+#[derive(Debug, Clone, Default)]
+pub struct StatsSnapshot {
+    /// Snapshot wall-clock time, ns since the unix epoch.
+    pub ts_ns: u64,
+    /// Pid of the serving process.
+    pub pid: u64,
+    /// Coordinator request metrics (empty when the document has none).
+    pub server: Fields,
+    /// Per-shard store metrics, keyed by store name.
+    pub shards: Vec<(String, Fields)>,
+    /// Per-layer cost estimates, keyed by layer name.
+    pub layers: Vec<(String, Fields)>,
+    /// Journal counters (`emitted`, `dropped`).
+    pub events: Fields,
+}
+
+impl StatsSnapshot {
+    /// Parse a [`LiveSources::stats_json`] document. Unknown keys and
+    /// non-numeric leaves are ignored (forward compatibility); a
+    /// document that is not an object-of-objects errors cleanly.
+    pub fn parse_json(s: &str) -> Result<StatsSnapshot> {
+        use crate::shard::rebalance::json::{parse, Value};
+        let Value::Object(root) = parse(s)? else {
+            bail!("stats document: top level is not a JSON object");
+        };
+        let mut snap = StatsSnapshot::default();
+        for (key, value) in root {
+            match (key.as_str(), value) {
+                ("ts_ns", Value::Number(v)) => {
+                    snap.ts_ns = num_u64(v);
+                }
+                ("pid", Value::Number(v)) => {
+                    snap.pid = num_u64(v);
+                }
+                ("server", Value::Object(fields)) => {
+                    snap.server = numeric_fields(fields);
+                }
+                ("events", Value::Object(fields)) => {
+                    snap.events = numeric_fields(fields);
+                }
+                ("shards", Value::Object(groups)) => {
+                    snap.shards = nested_fields(groups);
+                }
+                ("layers", Value::Object(groups)) => {
+                    snap.layers = nested_fields(groups);
+                }
+                _ => {} // schema/title/unknown: ignore
+            }
+        }
+        Ok(snap)
+    }
+
+    /// Render the refreshing `f2f top` view: a summary line, the
+    /// per-shard table, and the per-layer cost table.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(1024);
+        let ev_emitted = field(&self.events, "emitted");
+        let ev_dropped = field(&self.events, "dropped");
+        out.push_str(&format!(
+            "f2f top — pid {} · {} shard(s) · events {:.0} emitted / \
+             {:.0} dropped\n",
+            self.pid,
+            self.shards.len(),
+            ev_emitted,
+            ev_dropped,
+        ));
+        if !self.server.is_empty() {
+            out.push_str(&format!(
+                "requests: {:.0} done · {:.0} err · queue {:.0}/{:.0} \
+                 · batch {:.1} · p50/p95/p99 {:.0}/{:.0}/{:.0} µs\n",
+                field(&self.server, "completed"),
+                field(&self.server, "errors"),
+                field(&self.server, "queue_depth"),
+                field(&self.server, "queue_capacity"),
+                field(&self.server, "mean_batch_size"),
+                field(&self.server, "request_p50_us"),
+                field(&self.server, "request_p95_us"),
+                field(&self.server, "request_p99_us"),
+            ));
+        }
+        let mut shards = Table::new(
+            "shards",
+            &[
+                "shard",
+                "hit%",
+                "decodes",
+                "evict",
+                "ra-skip",
+                "cached KiB",
+                "layers",
+                "decode p50/p95/p99 µs",
+                "gemv p50/p95/p99 µs",
+            ],
+        );
+        for (name, f) in &self.shards {
+            shards.row(vec![
+                name.clone(),
+                format!("{:.1}", field(f, "hit_rate") * 100.0),
+                format!("{:.0}", field(f, "decodes")),
+                format!("{:.0}", field(f, "evictions")),
+                format!("{:.0}", field(f, "readahead_skips")),
+                format!("{:.0}", field(f, "cached_bytes") / 1024.0),
+                format!("{:.0}", field(f, "cached_layers")),
+                format!(
+                    "{:.0}/{:.0}/{:.0}",
+                    field(f, "decode_p50_us"),
+                    field(f, "decode_p95_us"),
+                    field(f, "decode_p99_us"),
+                ),
+                format!(
+                    "{:.0}/{:.0}/{:.0}",
+                    field(f, "gemv_p50_us"),
+                    field(f, "gemv_p95_us"),
+                    field(f, "gemv_p99_us"),
+                ),
+            ]);
+        }
+        out.push_str(&shards.render());
+        let mut layers = Table::new(
+            "layers",
+            &["layer", "decode µs", "gemv µs/item", "samples d/g"],
+        );
+        const MAX_LAYER_ROWS: usize = 32;
+        for (name, f) in self.layers.iter().take(MAX_LAYER_ROWS) {
+            layers.row(vec![
+                name.clone(),
+                format!("{:.1}", field(f, "decode_ns") / 1e3),
+                format!("{:.1}", field(f, "gemv_ns") / 1e3),
+                format!(
+                    "{:.0}/{:.0}",
+                    field(f, "decode_samples"),
+                    field(f, "gemv_samples"),
+                ),
+            ]);
+        }
+        out.push_str(&layers.render());
+        if self.layers.len() > MAX_LAYER_ROWS {
+            out.push_str(&format!(
+                "… and {} more layers\n",
+                self.layers.len() - MAX_LAYER_ROWS
+            ));
+        }
+        out
+    }
+}
+
+fn num_u64(v: f64) -> u64 {
+    if v.is_finite() && v >= 0.0 {
+        v as u64
+    } else {
+        0
+    }
+}
+
+fn numeric_fields(
+    fields: Vec<(String, crate::shard::rebalance::json::Value)>,
+) -> Fields {
+    use crate::shard::rebalance::json::Value;
+    fields
+        .into_iter()
+        .filter_map(|(k, v)| match v {
+            Value::Number(x) => Some((k, x)),
+            _ => None,
+        })
+        .collect()
+}
+
+fn nested_fields(
+    groups: Vec<(String, crate::shard::rebalance::json::Value)>,
+) -> Vec<(String, Fields)> {
+    use crate::shard::rebalance::json::Value;
+    groups
+        .into_iter()
+        .filter_map(|(name, v)| match v {
+            Value::Object(fields) => {
+                Some((name, numeric_fields(fields)))
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Server + poll client (unix: rides the IPC wire protocol).
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+pub use unix_impl::{poll_events, poll_stats, StatsServer};
+
+#[cfg(unix)]
+mod unix_impl {
+    use super::*;
+    use crate::ipc::wire::{self, Request, Response, WireError};
+    use std::os::unix::net::{UnixListener, UnixStream};
+    use std::path::{Path, PathBuf};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Duration;
+
+    const POLL: Duration = Duration::from_millis(5);
+
+    /// A stats socket over [`LiveSources`]: accepts connections on a
+    /// dedicated unix socket and answers wire requests from live
+    /// snapshots while the serving process keeps taking traffic.
+    /// Dropping (or [`stop`](StatsServer::stop)ping) it closes the
+    /// socket and removes the socket file.
+    pub struct StatsServer {
+        shutdown: Arc<AtomicBool>,
+        accept: Option<std::thread::JoinHandle<()>>,
+        socket_path: PathBuf,
+    }
+
+    impl StatsServer {
+        /// Bind `socket_path` (replacing a stale socket file) and
+        /// serve `sources` from a background thread.
+        pub fn start(
+            socket_path: &Path,
+            sources: LiveSources,
+        ) -> Result<StatsServer> {
+            if socket_path.exists() {
+                let _ = std::fs::remove_file(socket_path);
+            }
+            let listener =
+                UnixListener::bind(socket_path).with_context(|| {
+                    format!("bind stats socket {}", socket_path.display())
+                })?;
+            listener.set_nonblocking(true).context(
+                "set stats listener nonblocking",
+            )?;
+            let shutdown = Arc::new(AtomicBool::new(false));
+            let accept = {
+                let shutdown = Arc::clone(&shutdown);
+                std::thread::Builder::new()
+                    .name("f2f-stats".into())
+                    .spawn(move || {
+                        accept_loop(&listener, &sources, &shutdown)
+                    })
+                    .context("spawn stats accept thread")?
+            };
+            Ok(StatsServer {
+                shutdown,
+                accept: Some(accept),
+                socket_path: socket_path.to_path_buf(),
+            })
+        }
+
+        /// The socket path this server listens on.
+        pub fn socket_path(&self) -> &Path {
+            &self.socket_path
+        }
+
+        /// Close the socket and join the serving threads.
+        pub fn stop(mut self) {
+            self.halt();
+        }
+
+        fn halt(&mut self) {
+            self.shutdown.store(true, Ordering::Release);
+            if let Some(t) = self.accept.take() {
+                let _ = t.join();
+            }
+            let _ = std::fs::remove_file(&self.socket_path);
+        }
+    }
+
+    impl Drop for StatsServer {
+        fn drop(&mut self) {
+            self.halt();
+        }
+    }
+
+    fn accept_loop(
+        listener: &UnixListener,
+        sources: &LiveSources,
+        shutdown: &Arc<AtomicBool>,
+    ) {
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !shutdown.load(Ordering::Acquire) {
+            conns.retain(|h| !h.is_finished());
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let sources = sources.clone();
+                    let shutdown = Arc::clone(shutdown);
+                    let spawned = std::thread::Builder::new()
+                        .name("f2f-stats-conn".into())
+                        .spawn(move || {
+                            serve_conn(stream, &sources, &shutdown)
+                        });
+                    match spawned {
+                        Ok(h) => conns.push(h),
+                        Err(_) => std::thread::sleep(POLL),
+                    }
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    std::thread::sleep(POLL);
+                }
+                Err(_) => std::thread::sleep(POLL),
+            }
+        }
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+
+    fn serve_conn(
+        stream: UnixStream,
+        sources: &LiveSources,
+        shutdown: &Arc<AtomicBool>,
+    ) {
+        let mut stream = stream;
+        let _ = stream.set_nonblocking(false);
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+        loop {
+            if shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let req = match wire::read_request(&mut stream) {
+                Ok(req) => req,
+                Err(WireError::TimedOut) => continue,
+                Err(WireError::Eof) | Err(WireError::Io(_)) => return,
+                Err(WireError::Corrupt(msg)) => {
+                    let _ = wire::send_response(
+                        &mut stream,
+                        &Response::Err {
+                            message: format!("corrupt frame: {msg}"),
+                        },
+                    );
+                    return;
+                }
+            };
+            let (resp, stop) = answer(sources, req, shutdown);
+            if wire::send_response(&mut stream, &resp).is_err() {
+                return;
+            }
+            if stop {
+                return;
+            }
+        }
+    }
+
+    fn answer(
+        sources: &LiveSources,
+        req: Request,
+        shutdown: &Arc<AtomicBool>,
+    ) -> (Response, bool) {
+        match req {
+            Request::Metrics => {
+                (Response::Metrics(sources.merged_metrics()), false)
+            }
+            Request::CostProfile => (
+                Response::CostProfile {
+                    json: sources.cost_profile().to_json(),
+                },
+                false,
+            ),
+            Request::TraceDump => (
+                Response::Trace {
+                    pid: std::process::id(),
+                    events: crate::obs::snapshot(),
+                },
+                false,
+            ),
+            Request::Stats => {
+                (Response::Stats { json: sources.stats_json() }, false)
+            }
+            Request::Events { max } => {
+                let max = max.min(MAX_EVENT_LINES) as usize;
+                (
+                    Response::Events {
+                        jsonl: events::recent(max).join("\n"),
+                    },
+                    false,
+                )
+            }
+            Request::Fetch { .. } | Request::Prefetch { .. } => (
+                Response::Err {
+                    message: "stats socket serves no layers".into(),
+                },
+                false,
+            ),
+            Request::Shutdown => {
+                shutdown.store(true, Ordering::Release);
+                (Response::Bye, true)
+            }
+        }
+    }
+
+    fn call(
+        socket: &Path,
+        req: &Request,
+        timeout: Duration,
+    ) -> Result<Response> {
+        let mut stream =
+            UnixStream::connect(socket).with_context(|| {
+                format!("connect stats socket {}", socket.display())
+            })?;
+        let timeout = timeout.max(Duration::from_millis(10));
+        let _ = stream.set_read_timeout(Some(timeout));
+        let _ = stream.set_write_timeout(Some(timeout));
+        wire::send_request(&mut stream, req)
+            .context("send stats request")?;
+        match wire::read_response(&mut stream) {
+            Ok(Response::Err { message }) => {
+                bail!("stats peer error: {message}")
+            }
+            Ok(resp) => Ok(resp),
+            Err(e) => bail!("read stats response: {e}"),
+        }
+    }
+
+    /// One live-stats poll: the raw JSON document the peer serves.
+    pub fn poll_stats(socket: &Path, timeout: Duration) -> Result<String> {
+        match call(socket, &Request::Stats, timeout)? {
+            Response::Stats { json } => Ok(json),
+            other => bail!("expected a stats frame, got {other:?}"),
+        }
+    }
+
+    /// One journal poll: the newest `max` lines as JSONL.
+    pub fn poll_events(
+        socket: &Path,
+        max: u32,
+        timeout: Duration,
+    ) -> Result<String> {
+        match call(socket, &Request::Events { max }, timeout)? {
+            Response::Events { jsonl } => Ok(jsonl),
+            other => bail!("expected an events frame, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::HdrLite;
+    use std::time::Duration;
+
+    fn fake_sources() -> LiveSources {
+        let stores: StoresSource = Arc::new(|| {
+            let mut decode_hist = HdrLite::new();
+            decode_hist.record(Duration::from_micros(120));
+            decode_hist.record(Duration::from_micros(480));
+            let mut gemv_hist = HdrLite::new();
+            gemv_hist.record(Duration::from_micros(40));
+            vec![(
+                "worker 0".to_string(),
+                StoreMetrics {
+                    hits: 30,
+                    misses: 10,
+                    decodes: 10,
+                    evictions: 2,
+                    readahead_skips: 1,
+                    cached_bytes: 4096,
+                    cached_layers: 3,
+                    decode_hist,
+                    gemv_hist,
+                    ..StoreMetrics::default()
+                },
+            )]
+        });
+        let costs: CostsSource = Arc::new(|| {
+            vec![(
+                "mlp/fc0".to_string(),
+                LayerCost {
+                    decode_ns: 120_000.0,
+                    gemv_ns: 40_000.0,
+                    decode_samples: 10,
+                    gemv_samples: 40,
+                },
+            )]
+        });
+        let server: ServerSource = Arc::new(|| {
+            let m = crate::coordinator::Metrics::default();
+            m.record_batch(
+                &[Duration::from_micros(500), Duration::from_micros(900)],
+                Duration::from_micros(700),
+            );
+            m.snapshot()
+        });
+        let queue: QueueSource = Arc::new(|| (3, 4096));
+        LiveSources::new(stores, costs)
+            .with_server(server)
+            .with_queue(queue)
+    }
+
+    #[test]
+    fn stats_json_round_trips_through_the_hardened_parser() {
+        let sources = fake_sources();
+        let json = sources.stats_json();
+        let snap = StatsSnapshot::parse_json(&json).unwrap();
+        assert_eq!(snap.pid, u64::from(std::process::id()));
+        assert!(snap.ts_ns > 0);
+        assert_eq!(snap.shards.len(), 1);
+        let (name, f) = &snap.shards[0];
+        assert_eq!(name, "worker 0");
+        assert_eq!(field(f, "hits"), 30.0);
+        assert!((field(f, "hit_rate") - 0.75).abs() < 1e-9);
+        assert_eq!(field(f, "decode_samples"), 2.0);
+        assert!(field(f, "decode_p99_us") > 0.0);
+        assert_eq!(snap.layers.len(), 1);
+        let (lname, lf) = &snap.layers[0];
+        assert_eq!(lname, "mlp/fc0");
+        assert_eq!(field(lf, "decode_ns"), 120_000.0);
+        assert_eq!(field(&snap.server, "completed"), 2.0);
+        assert_eq!(field(&snap.server, "queue_capacity"), 4096.0);
+        assert!(field(&snap.server, "request_p99_us") > 0.0);
+    }
+
+    #[test]
+    fn render_shows_every_section() {
+        let sources = fake_sources();
+        let snap =
+            StatsSnapshot::parse_json(&sources.stats_json()).unwrap();
+        let view = snap.render();
+        assert!(view.contains("f2f top"), "{view}");
+        assert!(view.contains("requests:"), "{view}");
+        assert!(view.contains("worker 0"), "{view}");
+        assert!(view.contains("mlp/fc0"), "{view}");
+        assert!(view.contains("hit%"), "{view}");
+    }
+
+    #[test]
+    fn merged_metrics_fold_across_stores() {
+        let stores: StoresSource = Arc::new(|| {
+            let a = StoreMetrics { hits: 5, ..StoreMetrics::default() };
+            let b = StoreMetrics {
+                hits: 7,
+                misses: 2,
+                ..StoreMetrics::default()
+            };
+            vec![("s0".into(), a), ("s1".into(), b)]
+        });
+        let costs: CostsSource = Arc::new(Vec::new);
+        let sources = LiveSources::new(stores, costs);
+        let merged = sources.merged_metrics();
+        assert_eq!(merged.hits, 12);
+        assert_eq!(merged.misses, 2);
+        assert!(sources.cost_profile().is_empty());
+    }
+
+    #[test]
+    fn watchdog_sample_reflects_costs_and_p99() {
+        let sample = fake_sources().watchdog_sample();
+        assert!(sample.request_p99_ns > 0.0);
+        assert_eq!(sample.layers.len(), 1);
+        assert_eq!(sample.layers[0].1, 120_000.0);
+        assert_eq!(sample.layers[0].2, 40_000.0);
+    }
+
+    #[test]
+    fn malformed_stats_documents_error_cleanly() {
+        assert!(StatsSnapshot::parse_json("").is_err());
+        assert!(StatsSnapshot::parse_json("42").is_err());
+        assert!(StatsSnapshot::parse_json("{\"shards\": [}").is_err());
+        // Unknown keys and non-numeric leaves are tolerated.
+        let snap = StatsSnapshot::parse_json(
+            "{\"future\": \"stuff\", \"pid\": 9, \
+             \"shards\": {\"s\": {\"hits\": 1, \"note\": \"x\"}}}",
+        )
+        .unwrap();
+        assert_eq!(snap.pid, 9);
+        assert_eq!(field(&snap.shards[0].1, "hits"), 1.0);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn stats_server_answers_every_frame_live() {
+        use crate::ipc::wire::{self, Request, Response};
+        use std::os::unix::net::UnixStream;
+
+        let dir = std::env::temp_dir();
+        let socket = dir.join(format!(
+            "f2f-stats-test-{}.sock",
+            std::process::id()
+        ));
+        let server =
+            StatsServer::start(&socket, fake_sources()).unwrap();
+        crate::obs::events::set_stderr_mirror(false);
+        crate::obs::events::warn("stats_unit_probe", "probe", &[]);
+
+        let json =
+            poll_stats(&socket, Duration::from_secs(5)).unwrap();
+        let snap = StatsSnapshot::parse_json(&json).unwrap();
+        assert_eq!(snap.shards.len(), 1);
+
+        let jsonl =
+            poll_events(&socket, 4096, Duration::from_secs(5)).unwrap();
+        assert!(
+            jsonl.contains("stats_unit_probe"),
+            "journal tail served: {jsonl}"
+        );
+
+        let mut stream = UnixStream::connect(&socket).unwrap();
+        let t = Some(Duration::from_secs(5));
+        stream.set_read_timeout(t).unwrap();
+        wire::send_request(&mut stream, &Request::Metrics).unwrap();
+        let Response::Metrics(m) =
+            wire::read_response(&mut stream).unwrap()
+        else {
+            panic!("not a metrics frame");
+        };
+        assert_eq!(m.hits, 30);
+        wire::send_request(&mut stream, &Request::CostProfile).unwrap();
+        let Response::CostProfile { json } =
+            wire::read_response(&mut stream).unwrap()
+        else {
+            panic!("not a costs frame");
+        };
+        let profile =
+            crate::shard::CostProfile::parse_json(&json).unwrap();
+        assert!(profile.get("mlp/fc0").is_some());
+        wire::send_request(&mut stream, &Request::TraceDump).unwrap();
+        let Response::Trace { pid, .. } =
+            wire::read_response(&mut stream).unwrap()
+        else {
+            panic!("not a trace frame");
+        };
+        assert_eq!(pid, std::process::id());
+        // A layer fetch is politely refused, connection stays usable.
+        wire::send_request(
+            &mut stream,
+            &Request::Fetch { layer: "x".into(), trace: 0 },
+        )
+        .unwrap();
+        assert!(matches!(
+            wire::read_response(&mut stream).unwrap(),
+            Response::Err { .. }
+        ));
+        wire::send_request(&mut stream, &Request::Stats).unwrap();
+        assert!(matches!(
+            wire::read_response(&mut stream).unwrap(),
+            Response::Stats { .. }
+        ));
+
+        server.stop();
+        assert!(!socket.exists(), "stop removes the socket file");
+    }
+}

@@ -1,0 +1,374 @@
+//! Regression watchdog: rolling baselines over live latency signals,
+//! `anomaly` journal events on sustained regression.
+//!
+//! The cost model already prices every layer (`decode_ns`/`gemv_ns`
+//! EWMAs) and the server tracks request quantiles — but nothing
+//! *watches* them. The watchdog closes the loop: a monitor thread
+//! samples those signals every interval, folds each into a rolling
+//! EWMA baseline, and when a signal stays above `factor ×` its
+//! baseline for `sustain` consecutive samples it emits one
+//! [`anomaly`](crate::obs::events) event naming the metric, the
+//! current value, and the baseline it violated. ROADMAP item 5's
+//! admission control consumes exactly this stream: "decode on
+//! `mlp/fc2` is 3× its baseline" is the signal that batching and
+//! shedding decisions need, delivered on the journal (and therefore
+//! over the stats socket and `--events-out`) rather than in a
+//! post-hoc export.
+//!
+//! The detector itself ([`BaselineTracker`]) is pure and synchronous
+//! so tests drive it without threads or clocks.
+
+use super::events::{self, Value};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Watchdog tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct WatchdogConfig {
+    /// Sampling cadence of the monitor thread.
+    pub interval: Duration,
+    /// A sample regresses when it exceeds `factor ×` the baseline.
+    pub factor: f64,
+    /// Consecutive regressed samples before an anomaly fires.
+    pub sustain: u32,
+    /// EWMA weight of a healthy sample when folding the baseline.
+    pub alpha: f64,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> WatchdogConfig {
+        WatchdogConfig {
+            interval: Duration::from_millis(500),
+            factor: 2.0,
+            sustain: 3,
+            alpha: 0.2,
+        }
+    }
+}
+
+/// A fired anomaly: the sample and the baseline it violated.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Anomaly {
+    /// The regressed sample value.
+    pub current: f64,
+    /// The rolling baseline at firing time.
+    pub baseline: f64,
+}
+
+/// Rolling-EWMA regression detector for one scalar signal. Pure:
+/// feed samples with [`observe`](BaselineTracker::observe), get an
+/// [`Anomaly`] back when the regression has sustained.
+#[derive(Debug, Clone)]
+pub struct BaselineTracker {
+    factor: f64,
+    sustain: u32,
+    alpha: f64,
+    baseline: Option<f64>,
+    streak: u32,
+}
+
+impl BaselineTracker {
+    /// A fresh tracker with `cfg`'s thresholds and no baseline yet.
+    pub fn new(cfg: &WatchdogConfig) -> BaselineTracker {
+        BaselineTracker {
+            factor: cfg.factor.max(1.0),
+            sustain: cfg.sustain.max(1),
+            alpha: cfg.alpha.clamp(0.0, 1.0),
+            baseline: None,
+            streak: 0,
+        }
+    }
+
+    /// The current rolling baseline (`None` until the first positive
+    /// sample).
+    pub fn baseline(&self) -> Option<f64> {
+        self.baseline
+    }
+
+    /// Feed one sample. Non-positive / non-finite samples (no data
+    /// yet) are ignored. Healthy samples fold into the baseline;
+    /// regressed samples extend the streak; the `sustain`-th
+    /// consecutive regression fires an [`Anomaly`] and then folds the
+    /// regressed value in so a genuine new plateau re-baselines
+    /// instead of firing forever.
+    pub fn observe(&mut self, value: f64) -> Option<Anomaly> {
+        if !value.is_finite() || value <= 0.0 {
+            return None;
+        }
+        let baseline = match self.baseline {
+            Some(b) => b,
+            None => {
+                self.baseline = Some(value);
+                return None;
+            }
+        };
+        if value > baseline * self.factor {
+            self.streak += 1;
+            if self.streak >= self.sustain {
+                self.streak = 0;
+                self.baseline = Some(
+                    baseline * (1.0 - self.alpha) + value * self.alpha,
+                );
+                return Some(Anomaly { current: value, baseline });
+            }
+        } else {
+            self.streak = 0;
+            self.baseline = Some(
+                baseline * (1.0 - self.alpha) + value * self.alpha,
+            );
+        }
+        None
+    }
+}
+
+/// One sample of every signal the watchdog tracks.
+#[derive(Debug, Clone, Default)]
+pub struct WatchdogSample {
+    /// Request p99 latency in nanoseconds (0 = no requests yet).
+    pub request_p99_ns: f64,
+    /// Per-layer `(name, decode_ns, gemv_ns)` EWMA estimates.
+    pub layers: Vec<(String, f64, f64)>,
+}
+
+/// Per-signal tracker table, anomaly emission on the journal. Pure
+/// apart from the journal write; the thread wrapper below drives it.
+struct Detector {
+    cfg: WatchdogConfig,
+    request: BaselineTracker,
+    layers: Vec<(String, BaselineTracker, BaselineTracker)>,
+}
+
+impl Detector {
+    fn new(cfg: WatchdogConfig) -> Detector {
+        Detector {
+            request: BaselineTracker::new(&cfg),
+            layers: Vec::new(),
+            cfg,
+        }
+    }
+
+    fn ingest(&mut self, sample: &WatchdogSample) {
+        if let Some(a) = self.request.observe(sample.request_p99_ns) {
+            emit_anomaly("request_p99_ns", "", &a);
+        }
+        for (name, decode_ns, gemv_ns) in &sample.layers {
+            let slot = match self
+                .layers
+                .iter_mut()
+                .find(|(n, _, _)| n == name)
+            {
+                Some(s) => s,
+                None => {
+                    self.layers.push((
+                        name.clone(),
+                        BaselineTracker::new(&self.cfg),
+                        BaselineTracker::new(&self.cfg),
+                    ));
+                    match self.layers.last_mut() {
+                        Some(s) => s,
+                        None => continue,
+                    }
+                }
+            };
+            if let Some(a) = slot.1.observe(*decode_ns) {
+                emit_anomaly("decode_ns", name, &a);
+            }
+            if let Some(a) = slot.2.observe(*gemv_ns) {
+                emit_anomaly("gemv_ns", name, &a);
+            }
+        }
+    }
+}
+
+fn emit_anomaly(metric: &str, layer: &str, a: &Anomaly) {
+    let msg = if layer.is_empty() {
+        format!(
+            "watchdog: {metric} regressed to {:.0} (baseline {:.0})",
+            a.current, a.baseline
+        )
+    } else {
+        format!(
+            "watchdog: {metric} on {layer} regressed to {:.0} (baseline {:.0})",
+            a.current, a.baseline
+        )
+    };
+    events::warn(
+        "anomaly",
+        &msg,
+        &[
+            ("metric", Value::Str(metric.to_string())),
+            ("layer", Value::Str(layer.to_string())),
+            ("current", Value::F64(a.current)),
+            ("baseline", Value::F64(a.baseline)),
+        ],
+    );
+}
+
+/// The monitor thread. Dropping (or [`stop`](Watchdog::stop)ping) it
+/// joins the thread.
+pub struct Watchdog {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Watchdog {
+    /// Start sampling `source` every `cfg.interval`, emitting
+    /// `anomaly` journal events on sustained regressions.
+    pub fn start<F>(cfg: WatchdogConfig, source: F) -> Watchdog
+    where
+        F: Fn() -> WatchdogSample + Send + 'static,
+    {
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let stop = Arc::clone(&stop);
+            let interval = cfg.interval.max(Duration::from_millis(10));
+            std::thread::Builder::new()
+                .name("f2f-watchdog".into())
+                .spawn(move || {
+                    let mut det = Detector::new(cfg);
+                    let tick = Duration::from_millis(10);
+                    let mut since = Duration::ZERO;
+                    while !stop.load(Ordering::Acquire) {
+                        std::thread::sleep(tick);
+                        since += tick;
+                        if since >= interval {
+                            since = Duration::ZERO;
+                            det.ingest(&source());
+                        }
+                    }
+                })
+                .ok()
+        };
+        Watchdog { stop, thread }
+    }
+
+    /// Stop and join the monitor thread.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> WatchdogConfig {
+        WatchdogConfig {
+            interval: Duration::from_millis(10),
+            factor: 2.0,
+            sustain: 3,
+            alpha: 0.2,
+        }
+    }
+
+    #[test]
+    fn steady_signal_never_fires() {
+        let mut t = BaselineTracker::new(&cfg());
+        for _ in 0..100 {
+            assert_eq!(t.observe(1000.0), None);
+        }
+        // Mild drift folds into the baseline without firing.
+        for i in 0..50 {
+            assert_eq!(t.observe(1000.0 + f64::from(i) * 10.0), None);
+        }
+    }
+
+    #[test]
+    fn sustained_regression_fires_once_then_rebaselines() {
+        let mut t = BaselineTracker::new(&cfg());
+        for _ in 0..10 {
+            t.observe(1000.0);
+        }
+        // Two regressed samples: below sustain, nothing fires.
+        assert_eq!(t.observe(5000.0), None);
+        assert_eq!(t.observe(5000.0), None);
+        let fired = t.observe(5000.0).expect("third sample fires");
+        assert_eq!(fired.current, 5000.0);
+        assert!((fired.baseline - 1000.0).abs() < 1.0);
+        // Baseline absorbed part of the spike; a return to normal
+        // keeps quiet.
+        assert!(t.baseline().unwrap() > 1000.0);
+        for _ in 0..20 {
+            assert_eq!(t.observe(1000.0), None);
+        }
+    }
+
+    #[test]
+    fn a_blip_resets_the_streak() {
+        let mut t = BaselineTracker::new(&cfg());
+        for _ in 0..10 {
+            t.observe(1000.0);
+        }
+        assert_eq!(t.observe(5000.0), None);
+        assert_eq!(t.observe(5000.0), None);
+        assert_eq!(t.observe(1000.0), None, "healthy sample resets");
+        assert_eq!(t.observe(5000.0), None);
+        assert_eq!(t.observe(5000.0), None, "streak restarted from 0");
+    }
+
+    #[test]
+    fn zero_and_nonfinite_samples_are_ignored() {
+        let mut t = BaselineTracker::new(&cfg());
+        assert_eq!(t.observe(0.0), None);
+        assert_eq!(t.observe(-5.0), None);
+        assert_eq!(t.observe(f64::NAN), None);
+        assert_eq!(t.baseline(), None, "no baseline from junk");
+        t.observe(100.0);
+        assert_eq!(t.baseline(), Some(100.0));
+        assert_eq!(t.observe(0.0), None);
+        assert_eq!(t.baseline(), Some(100.0), "junk does not decay");
+    }
+
+    #[test]
+    fn detector_emits_anomaly_events_per_layer_metric() {
+        let mut det = Detector::new(cfg());
+        let calm = WatchdogSample {
+            request_p99_ns: 1_000_000.0,
+            layers: vec![("wd/fc0".into(), 1000.0, 2000.0)],
+        };
+        for _ in 0..5 {
+            det.ingest(&calm);
+        }
+        let hot = WatchdogSample {
+            request_p99_ns: 1_000_000.0,
+            layers: vec![("wd/fc0".into(), 9000.0, 2000.0)],
+        };
+        crate::obs::events::set_stderr_mirror(false);
+        for _ in 0..3 {
+            det.ingest(&hot);
+        }
+        let lines = crate::obs::events::recent(4096);
+        let hit = lines.iter().any(|l| {
+            l.contains("\"kind\":\"anomaly\"")
+                && l.contains("\"layer\":\"wd/fc0\"")
+                && l.contains("\"metric\":\"decode_ns\"")
+        });
+        assert!(hit, "anomaly event reached the journal");
+        let gemv_hit = lines.iter().any(|l| {
+            l.contains("\"layer\":\"wd/fc0\"")
+                && l.contains("\"metric\":\"gemv_ns\"")
+        });
+        assert!(!gemv_hit, "healthy gemv signal stayed quiet");
+    }
+
+    #[test]
+    fn watchdog_thread_starts_and_stops() {
+        let wd = Watchdog::start(cfg(), WatchdogSample::default);
+        std::thread::sleep(Duration::from_millis(40));
+        wd.stop();
+    }
+}

@@ -241,8 +241,11 @@ pub fn rebalance_map(
 /// `Infinity`, arrays), numbers that overflow to non-finite values,
 /// duplicate keys inside any object, and nesting past a fixed depth
 /// cap (the recursive-descent parser must error, not exhaust the
-/// stack, on `{"a":{"a":{…` bombs).
-mod json {
+/// stack, on `{"a":{"a":{…` bombs). Crate-visible: the live-stats
+/// snapshot (`crate::obs::stats`) deliberately restricts itself to
+/// the same objects-and-numbers shape so `f2f top` parses it with
+/// this same hardened reader.
+pub(crate) mod json {
     use anyhow::{bail, Result};
 
     /// Nesting bound: the profile shape is 3 levels deep; anything

@@ -371,6 +371,17 @@ impl StoreInner {
                 st.cached_bytes -= e.bytes;
                 st.evictions += 1;
                 obs::event(obs::SpanKind::Evict, &victim);
+                // Ops-plane visibility: evictions under pressure are
+                // exactly what `f2f top` watchers grep for. The
+                // journal's rate limiter bounds the cost under churn.
+                obs::events::info(
+                    "evict",
+                    &format!("evicted layer {victim}"),
+                    &[(
+                        "bytes",
+                        obs::events::Value::U64(e.bytes as u64),
+                    )],
+                );
             }
         }
         st.check_invariants();
@@ -499,10 +510,16 @@ impl ModelStore {
                     }
                 }
             }
-            Err(e) => eprintln!(
-                "warning: ignoring malformed cost sidecar {}: {e:#}",
-                sidecar.display()
-            ),
+            Err(e) => {
+                obs::events::warn(
+                    "cost_sidecar_malformed",
+                    &format!(
+                        "ignoring malformed cost sidecar {}: {e:#}",
+                        sidecar.display()
+                    ),
+                    &[],
+                );
+            }
         }
     }
 

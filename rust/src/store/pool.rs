@@ -460,15 +460,21 @@ impl DecodeService {
                     .name(format!("f2f-decode-{i}"))
                     .spawn(move || worker_loop(&shared))
                     .map_err(|e| {
-                        eprintln!("f2f: spawn decode worker {i}: {e}");
+                        crate::obs::events::warn(
+                            "decode_worker_spawn_failed",
+                            &format!("spawn decode worker {i}: {e}"),
+                            &[],
+                        );
                     })
                     .ok()
             })
             .collect();
         if threads.is_empty() {
-            eprintln!(
-                "f2f: no decode worker threads available; \
-                 decoding inline on submitting threads"
+            crate::obs::events::warn(
+                "decode_inline_degraded",
+                "no decode worker threads available; decoding inline \
+                 on submitting threads",
+                &[],
             );
             shared.inline.store(true, Ordering::Release);
         }

@@ -1,0 +1,346 @@
+//! The live operations plane end to end, against real worker
+//! processes: polling the stats socket mid-serve returns *merged*
+//! per-worker histograms without pausing traffic (outputs stay
+//! bit-exact vs an unpolled run), and killing a worker mid-traffic
+//! leaves a postmortem artifact — the dead worker's flight-recorded
+//! spans plus an exit-cause event in the journal — while the serve
+//! completes with zero failed requests after the revive.
+#![cfg(unix)]
+
+use f2f::container::{
+    split_container, write_container_v2, ContainerIndex, ShardAssignment,
+};
+use f2f::coordinator::Backend;
+use f2f::ipc::{ProcRouter, Supervisor, WorkerSpec};
+use f2f::models::{compressed_mlp, MlpConfig};
+use f2f::obs::stats::{field, poll_stats, LiveSources, StatsServer, StatsSnapshot};
+use f2f::store::{ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const DIMS: [usize; 5] = [32, 24, 16, 12, 8];
+
+fn model_bytes(seed: u64) -> Vec<u8> {
+    let (c, _) = compressed_mlp(&MlpConfig {
+        seed,
+        sparsity: 0.75,
+        ..MlpConfig::new(&DIMS)
+    });
+    write_container_v2(&c)
+}
+
+fn probes(n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            (0..DIMS[0])
+                .map(|j| ((i * j) as f32 * 0.1).sin())
+                .collect()
+        })
+        .collect()
+}
+
+fn single_store_outputs(bytes: &[u8], xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let store = Arc::new(
+        ModelStore::open_bytes(bytes.to_vec(), StoreConfig::default())
+            .unwrap(),
+    );
+    ModelBackend::sequential(store)
+        .unwrap()
+        .forward_batch(xs)
+        .unwrap()
+}
+
+/// A 2-worker deployment with the crash flight recorder enabled:
+/// shard files, sockets, and flight sidecars all live in one private
+/// temp dir, cleaned up on drop.
+struct Deployment {
+    dir: PathBuf,
+    map: f2f::container::ShardMap,
+    index: ContainerIndex,
+    sup: Arc<Supervisor>,
+}
+
+impl Deployment {
+    fn spawn(tag: &str, bytes: &[u8], n_workers: usize) -> Deployment {
+        let dir = std::env::temp_dir().join(format!(
+            "f2f-liveops-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (map, shard_bytes) =
+            split_container(bytes, n_workers, ShardAssignment::ByBytes)
+                .unwrap();
+        let binary = PathBuf::from(env!("CARGO_BIN_EXE_f2f"));
+        let mut specs = Vec::new();
+        for (i, b) in shard_bytes.iter().enumerate() {
+            let shard_path = dir.join(format!("shard{i}.f2f"));
+            std::fs::write(&shard_path, b).unwrap();
+            specs.push(
+                WorkerSpec::new(
+                    &binary,
+                    shard_path,
+                    dir.join(format!("shard{i}.sock")),
+                )
+                .with_flight_dir(&dir),
+            );
+        }
+        let sup = Supervisor::spawn(specs).expect("spawn workers");
+        let index = ContainerIndex::parse(bytes).unwrap();
+        Deployment { dir, map, index, sup }
+    }
+
+    fn router(&self) -> ProcRouter {
+        ProcRouter::new(
+            self.sup.clients().to_vec(),
+            &self.map,
+            &self.index,
+        )
+        .unwrap()
+        .with_supervisor(self.sup.clone())
+        .with_readahead(ReadaheadPolicy::layers(1))
+    }
+
+    /// The [`LiveSources`] a multi-process serve wires up: per-worker
+    /// store metrics over the wire, worker decode costs folded with
+    /// the router-local GEMV costs.
+    fn live_sources(
+        &self,
+        local_costs: Arc<f2f::store::LayerCosts>,
+    ) -> LiveSources {
+        let c1 = self.sup.clients().to_vec();
+        let c2 = self.sup.clients().to_vec();
+        LiveSources::new(
+            Arc::new(move || {
+                c1.iter()
+                    .enumerate()
+                    .filter_map(|(i, c)| {
+                        c.metrics()
+                            .ok()
+                            .map(|m| (format!("worker {i}"), m))
+                    })
+                    .collect()
+            }),
+            Arc::new(move || {
+                let mut profile = f2f::shard::CostProfile::default();
+                for c in &c2 {
+                    if let Ok(p) = c.cost_profile() {
+                        for (name, cost) in p.entries() {
+                            profile.record(&name, cost);
+                        }
+                    }
+                }
+                for (name, cost) in local_costs.snapshot() {
+                    profile.record(&name, cost);
+                }
+                profile.entries()
+            }),
+        )
+    }
+}
+
+impl Drop for Deployment {
+    fn drop(&mut self) {
+        self.sup.shutdown();
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Acceptance: polling the stats socket during a 2-worker serve
+/// returns merged per-worker snapshots with nonzero decode and GEMV
+/// samples, and the polled serve's outputs are bit-exact vs an
+/// unpolled run — polling never pauses or perturbs traffic.
+#[test]
+fn stats_polling_mid_serve_is_merged_and_bit_exact() {
+    f2f::obs::events::set_stderr_mirror(false);
+    let bytes = model_bytes(90);
+    let xs = probes(6);
+    let want = single_store_outputs(&bytes, &xs);
+    const PASSES: usize = 3;
+
+    // Reference run, never polled.
+    let unpolled: Vec<Vec<Vec<f32>>> = {
+        let dep = Deployment::spawn("quiet", &bytes, 2);
+        let mut router = dep.router();
+        (0..PASSES)
+            .map(|_| router.forward_batch(&xs).unwrap())
+            .collect()
+    };
+    for pass in &unpolled {
+        assert_eq!(pass, &want, "reference run itself must be exact");
+    }
+
+    // Polled run: a stats server over the live deployment, hammered
+    // from another thread while the same traffic flows.
+    let dep = Deployment::spawn("polled", &bytes, 2);
+    let mut router = dep.router();
+    let local_costs = router.costs().clone();
+    let live = dep.live_sources(local_costs);
+    let socket = dep.dir.join("stats.sock");
+    let server = StatsServer::start(&socket, live).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let poller = {
+        let stop = stop.clone();
+        let socket = socket.clone();
+        std::thread::spawn(move || {
+            let mut polls = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                let json =
+                    poll_stats(&socket, Duration::from_secs(5))
+                        .expect("mid-serve poll failed");
+                StatsSnapshot::parse_json(&json)
+                    .expect("mid-serve poll returned unparseable stats");
+                polls += 1;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            polls
+        })
+    };
+
+    for pass in 0..PASSES {
+        let got = router.forward_batch(&xs).unwrap();
+        assert_eq!(
+            got, unpolled[pass],
+            "pass {pass}: polled serve diverged from the unpolled run"
+        );
+    }
+    stop.store(true, Ordering::Release);
+    let polls = poller.join().unwrap();
+    assert!(polls > 0, "the poller never got a snapshot in");
+
+    // The final snapshot merges both workers with live samples.
+    let snap = StatsSnapshot::parse_json(
+        &poll_stats(&socket, Duration::from_secs(5)).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(snap.pid, std::process::id() as u64);
+    assert_eq!(snap.shards.len(), 2, "one entry per worker: {snap:?}");
+    let (mut decodes, mut decode_samples) = (0.0, 0.0);
+    for (name, fields) in &snap.shards {
+        assert!(name.starts_with("worker "), "{name}");
+        decodes += field(fields, "decodes");
+        decode_samples += field(fields, "decode_samples");
+    }
+    assert!(decodes > 0.0, "merged decode counters must be live");
+    assert!(
+        decode_samples > 0.0,
+        "merged decode histograms must carry samples"
+    );
+    assert_eq!(
+        snap.layers.len(),
+        DIMS.len() - 1,
+        "every chain layer reports costs: {snap:?}"
+    );
+    for (name, fields) in &snap.layers {
+        assert!(
+            field(fields, "decode_samples") > 0.0,
+            "{name}: worker-side decode cost missing"
+        );
+        assert!(
+            field(fields, "gemv_samples") > 0.0,
+            "{name}: router-side GEMV cost missing"
+        );
+    }
+
+    drop(server);
+    assert!(!socket.exists(), "stats server removes its socket");
+}
+
+/// Acceptance: SIGKILLing a worker mid-traffic produces a postmortem
+/// (the worker's flight-recorded spans + attributed exit cause), a
+/// `worker_exit` journal event naming the cause, and the serve
+/// completes with zero failed requests once the supervisor revives it.
+#[test]
+fn killed_worker_leaves_postmortem_and_serve_completes_cleanly() {
+    use f2f::coordinator::{InferenceServer, ServerConfig};
+    f2f::obs::events::set_stderr_mirror(false);
+    let bytes = model_bytes(91);
+    let xs = probes(4);
+    let want = single_store_outputs(&bytes, &xs);
+    let dep = Deployment::spawn("kill", &bytes, 2);
+    let router = dep.router();
+    let server = InferenceServer::start(
+        ServerConfig {
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        },
+        move || Box::new(router),
+    )
+    .unwrap();
+
+    // Warm traffic so worker 0 has decode spans on record, then give
+    // its flight recorder (100 ms cadence) time to checkpoint them.
+    for (i, x) in xs.iter().cloned().enumerate() {
+        assert_eq!(server.infer(x).unwrap(), want[i], "warm request {i}");
+    }
+    std::thread::sleep(Duration::from_millis(300));
+
+    let pid = dep.sup.worker_pid(0).expect("worker 0 alive");
+    dep.sup.kill_worker(0).unwrap();
+
+    // Traffic after the kill: the supervisor revives the worker on
+    // demand and every request still succeeds, bit-exact.
+    for (i, x) in xs.iter().cloned().enumerate() {
+        assert_eq!(
+            server.infer(x).unwrap(),
+            want[i],
+            "post-kill request {i} diverged"
+        );
+    }
+    let m = server.metrics();
+    assert_eq!(m.errors, 0, "zero failed requests across the kill");
+    assert_eq!(m.completed, 2 * xs.len() as u64);
+    server.shutdown();
+    assert!(dep.sup.restarts() >= 1, "supervisor must have revived");
+
+    // The postmortem artifact pair exists and attributes the kill.
+    let summary_path = dep.dir.join(format!("postmortem-{pid}.json"));
+    let summary = std::fs::read_to_string(&summary_path)
+        .expect("postmortem summary must exist after a reap");
+    assert!(
+        summary.contains("\"cause\": \"signal 9\""),
+        "SIGKILL must be attributed: {summary}"
+    );
+    assert!(summary.contains(&format!("\"pid\": {pid}")), "{summary}");
+    assert!(
+        dep.dir
+            .join(format!("postmortem-{pid}.trace.json"))
+            .exists(),
+        "trace fragment must ride along"
+    );
+    // Span recording rides the `obs` feature; with it on, the flight
+    // checkpoint must have captured the worker's serving spans.
+    #[cfg(feature = "obs")]
+    {
+        let spans: u64 = summary
+            .lines()
+            .find_map(|l| {
+                l.trim()
+                    .strip_prefix("\"spans\": ")?
+                    .trim_end_matches(',')
+                    .parse()
+                    .ok()
+            })
+            .expect("summary carries a spans count");
+        assert!(
+            spans >= 1,
+            "postmortem must carry the dead worker's spans: {summary}"
+        );
+    }
+
+    // The journal records the exit with its attributed cause.
+    let exit_line = f2f::obs::events::recent(4096)
+        .into_iter()
+        .find(|l| {
+            l.contains("\"kind\":\"worker_exit\"")
+                && l.contains("signal 9")
+                && l.contains(&format!("\"pid\":{pid}"))
+        });
+    assert!(
+        exit_line.is_some(),
+        "journal must carry a worker_exit event attributing signal 9"
+    );
+}

@@ -1,0 +1,259 @@
+//! Property tests for the observability primitives the live ops
+//! plane leans on: [`f2f::obs::HdrLite`] merge algebra (commutative,
+//! associative, identical to single-histogram recording), the
+//! bucket-resolution quantile contract (every reported percentile is
+//! within one power-of-two bucket of the exact sample), and the wire
+//! `Metrics` frame's field-count-prefixed histogram encoding
+//! (byte-exact round trip; short payloads zero-fill, long payloads
+//! ignore extras — the mixed-version contract `f2f top` and the
+//! stats socket inherit).
+
+use f2f::obs::{HdrLite, HDR_WIRE_FIELDS};
+use f2f::rng::Rng;
+use std::time::Duration;
+
+/// A pseudo-random latency sample spanning the full bucket range:
+/// mostly microsecond-scale, with zeros and huge outliers mixed in.
+fn sample(rng: &mut Rng) -> u64 {
+    match rng.next_u64() % 8 {
+        0 => 0,
+        1 => rng.next_u64() % 16,                  // sub-16 ns
+        2..=5 => 1_000 + rng.next_u64() % 100_000, // the body
+        6 => rng.next_u64() % 10_000_000_000,      // up to 10 s
+        _ => u64::MAX - rng.next_u64() % 1024,     // open-ended bucket
+    }
+}
+
+fn hist_of(samples: &[u64]) -> HdrLite {
+    let mut h = HdrLite::new();
+    for &v in samples {
+        h.record_ns(v);
+    }
+    h
+}
+
+#[test]
+fn merge_is_commutative_and_associative() {
+    for seed in 0..32u64 {
+        let mut rng = Rng::new(seed);
+        let n = 1 + (rng.next_u64() % 200) as usize;
+        let a: Vec<u64> = (0..n).map(|_| sample(&mut rng)).collect();
+        let b: Vec<u64> =
+            (0..n / 2 + 1).map(|_| sample(&mut rng)).collect();
+        let c: Vec<u64> = (0..3).map(|_| sample(&mut rng)).collect();
+        let (ha, hb, hc) = (hist_of(&a), hist_of(&b), hist_of(&c));
+
+        // a ⊕ b == b ⊕ a
+        let mut ab = ha;
+        ab.merge(&hb);
+        let mut ba = hb;
+        ba.merge(&ha);
+        assert_eq!(ab, ba, "seed {seed}: merge must be commutative");
+
+        // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)
+        let mut left = ab;
+        left.merge(&hc);
+        let mut bc = hb;
+        bc.merge(&hc);
+        let mut right = ha;
+        right.merge(&bc);
+        assert_eq!(left, right, "seed {seed}: merge must be associative");
+
+        // …and both equal recording every sample into one histogram —
+        // the property that makes cross-shard aggregation exact.
+        let mut all: Vec<u64> = a.clone();
+        all.extend(&b);
+        all.extend(&c);
+        assert_eq!(
+            left,
+            hist_of(&all),
+            "seed {seed}: merged == single-histogram recording"
+        );
+    }
+}
+
+#[test]
+fn merge_with_empty_is_identity_both_ways() {
+    let mut rng = Rng::new(99);
+    let samples: Vec<u64> = (0..50).map(|_| sample(&mut rng)).collect();
+    let h = hist_of(&samples);
+    let mut left = HdrLite::new();
+    left.merge(&h);
+    assert_eq!(left, h);
+    let mut right = h;
+    right.merge(&HdrLite::new());
+    assert_eq!(right, h);
+}
+
+/// Every quantile the histogram reports is within one power-of-two
+/// bucket of the exact rank-order sample: `exact <= reported <=
+/// 2 * exact` (equal at zero), and exact at both extremes.
+#[test]
+fn quantiles_are_within_one_bucket_of_exact() {
+    for seed in 100..132u64 {
+        let mut rng = Rng::new(seed);
+        let n = 1 + (rng.next_u64() % 500) as usize;
+        let mut samples: Vec<u64> =
+            (0..n).map(|_| sample(&mut rng)).collect();
+        let h = hist_of(&samples);
+        samples.sort_unstable();
+
+        for q in [0.0, 0.01, 0.1, 0.5, 0.9, 0.95, 0.99, 0.999, 1.0] {
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+            let exact = samples[rank - 1];
+            let got = h.value_at(q);
+            assert!(
+                got >= exact,
+                "seed {seed} q={q}: reported {got} below exact {exact}"
+            );
+            let bound = exact.saturating_mul(2).max(1);
+            assert!(
+                got <= bound.min(*samples.last().unwrap_or(&0)).max(exact),
+                "seed {seed} q={q}: reported {got} more than one \
+                 bucket above exact {exact}"
+            );
+        }
+        assert_eq!(
+            h.max(),
+            Duration::from_nanos(*samples.last().unwrap()),
+            "seed {seed}: max is exact"
+        );
+        assert_eq!(
+            h.min(),
+            Duration::from_nanos(samples[0]),
+            "seed {seed}: min is exact"
+        );
+    }
+}
+
+/// The wire `Metrics` frame round-trips its histograms byte-exactly,
+/// and its `u32 field_count` prefix keeps mixed-version peers talking:
+/// a shorter payload (older peer) zero-fills the histogram tail, a
+/// longer one (newer peer) is read ignoring the extras.
+#[cfg(unix)]
+mod metrics_frame {
+    use super::*;
+    use f2f::ipc::wire::{read_response, send_response, write_frame, Response};
+    use f2f::store::StoreMetrics;
+    use std::io::Cursor;
+
+    /// Frame header length: magic + version + kind + payload_len.
+    const HEADER: usize = 4 + 2 + 1 + 4;
+
+    fn random_metrics(rng: &mut Rng) -> StoreMetrics {
+        let mut decode_hist = HdrLite::new();
+        let mut gemv_hist = HdrLite::new();
+        for _ in 0..(rng.next_u64() % 100) {
+            decode_hist.record_ns(sample(rng));
+        }
+        for _ in 0..(rng.next_u64() % 100) {
+            gemv_hist.record_ns(sample(rng));
+        }
+        StoreMetrics {
+            hits: rng.next_u64() % 1_000,
+            misses: rng.next_u64() % 1_000,
+            decodes: rng.next_u64() % 1_000,
+            evictions: rng.next_u64() % 1_000,
+            prefetches: rng.next_u64() % 1_000,
+            redundant_decodes: rng.next_u64() % 10,
+            readahead_skips: rng.next_u64() % 10,
+            cached_bytes: (rng.next_u64() % (1 << 30)) as usize,
+            cached_layers: (rng.next_u64() % 64) as usize,
+            pinned_bytes: (rng.next_u64() % (1 << 20)) as usize,
+            decode_ns_total: rng.next_u64() % (1 << 40),
+            gemv_ns_total: rng.next_u64() % (1 << 40),
+            decode_hist,
+            gemv_hist,
+        }
+    }
+
+    fn frame_of(m: StoreMetrics) -> Vec<u8> {
+        let mut buf = Vec::new();
+        send_response(&mut buf, &Response::Metrics(m)).unwrap();
+        buf
+    }
+
+    #[test]
+    fn histograms_round_trip_byte_exact() {
+        for seed in 7..27u64 {
+            let mut rng = Rng::new(seed);
+            let m = random_metrics(&mut rng);
+            let frame = frame_of(m);
+            let got =
+                read_response(&mut Cursor::new(&frame)).unwrap();
+            let Response::Metrics(sm) = got else {
+                panic!("seed {seed}: not a metrics reply")
+            };
+            assert_eq!(sm, m, "seed {seed}: decoded snapshot diverged");
+            // Re-encoding the decoded snapshot reproduces the original
+            // frame bit for bit — histograms included.
+            assert_eq!(
+                frame_of(sm),
+                frame,
+                "seed {seed}: re-encode must be byte-exact"
+            );
+        }
+    }
+
+    #[test]
+    fn short_field_count_zero_fills_the_histograms() {
+        let mut rng = Rng::new(42);
+        let m = random_metrics(&mut rng);
+        let frame = frame_of(m);
+        let kind = frame[6];
+        // Keep only the 12 scalar counters: an older peer's payload.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&12u32.to_le_bytes());
+        payload.extend_from_slice(
+            &frame[HEADER + 4..HEADER + 4 + 12 * 8],
+        );
+        let mut short = Vec::new();
+        write_frame(&mut short, kind, &payload).unwrap();
+        let got = read_response(&mut Cursor::new(&short)).unwrap();
+        let Response::Metrics(sm) = got else { panic!("not metrics") };
+        assert_eq!(sm.hits, m.hits);
+        assert_eq!(sm.gemv_ns_total, m.gemv_ns_total);
+        assert!(sm.decode_hist.is_empty(), "missing tail zero-fills");
+        assert!(sm.gemv_hist.is_empty(), "missing tail zero-fills");
+    }
+
+    #[test]
+    fn long_field_count_ignores_the_extras() {
+        let mut rng = Rng::new(43);
+        let m = random_metrics(&mut rng);
+        let frame = frame_of(m);
+        let kind = frame[6];
+        let n_fields = (12 + 2 * HDR_WIRE_FIELDS) as u32;
+        // A newer peer appends four fields this build doesn't know.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(n_fields + 4).to_le_bytes());
+        payload.extend_from_slice(&frame[HEADER + 4..]);
+        for v in [7u64, 8, 9, 10] {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut long = Vec::new();
+        write_frame(&mut long, kind, &payload).unwrap();
+        let got = read_response(&mut Cursor::new(&long)).unwrap();
+        assert_eq!(
+            got,
+            Response::Metrics(m),
+            "unknown trailing fields must be ignored"
+        );
+    }
+
+    #[test]
+    fn lying_field_count_is_rejected_before_allocation() {
+        let mut rng = Rng::new(44);
+        let frame = frame_of(random_metrics(&mut rng));
+        let kind = frame[6];
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        payload.extend_from_slice(&frame[HEADER + 4..]);
+        let mut lying = Vec::new();
+        write_frame(&mut lying, kind, &payload).unwrap();
+        assert!(
+            read_response(&mut Cursor::new(&lying)).is_err(),
+            "a field count past the payload is corruption"
+        );
+    }
+}
