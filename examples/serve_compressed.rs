@@ -197,7 +197,11 @@ fn main() -> Result<()> {
     let budget = decoded_total * 2 / 3;
     let store = Arc::new(ModelStore::open_bytes(
         bytes,
-        StoreConfig { cache_budget_bytes: budget, decode_workers: 0 },
+        StoreConfig {
+            cache_budget_bytes: budget,
+            decode_workers: 0,
+            ..StoreConfig::default()
+        },
     )?);
     println!(
         "store: decoded model {} KiB, cache budget {} KiB, {} decode workers",

@@ -9,8 +9,12 @@
 //! on the warm path (runtime kill switch on vs off, `obs_overhead_pct`,
 //! target <3%), and the live stats socket's cost on the same warm path
 //! (`stats_poll_overhead_pct`: a 10 Hz `f2f top`-shaped poller against
-//! the unpolled serve). Emits machine-readable `BENCH_store.json` next
-//! to the human output to keep the perf trajectory moving.
+//! the unpolled serve), the scalar vs word-parallel decode kernels
+//! (`decode_kernel_scalar` / `decode_kernel_word`), and the fused
+//! bit-plane serve against the materialized baseline
+//! (`serve_cold_fused` / `serve_warm_fused`, `speedup_vs_materialized`).
+//! Emits machine-readable `BENCH_store.json` next to the human output
+//! to keep the perf trajectory moving.
 
 use f2f::bench_util::{bench_with_result, black_box, timed_pass, JsonReport};
 use f2f::container::{
@@ -18,6 +22,7 @@ use f2f::container::{
     ShardAssignment,
 };
 use f2f::coordinator::Backend;
+use f2f::kernels::{DecodeMode, KernelKind};
 use f2f::models::{compressed_mlp, MlpConfig};
 use f2f::shard::ShardRouter;
 use f2f::sparse::DecodedLayer;
@@ -102,6 +107,64 @@ fn main() {
         serial.mean.as_secs_f64() / best_pooled.mean.as_secs_f64()
     );
 
+    // --- decode kernels: scalar per-bit loop vs word-parallel ---
+    // Same end-to-end decode (GF(2) planes + corrections + reassembly),
+    // explicit kernel choice on each side; the default path is whatever
+    // `F2F_KERNEL` selects, so this series keeps both spellings honest.
+    let kern_scalar = bench_with_result(
+        "decode kernel scalar (per-bit decode + reassembly)",
+        1,
+        budget,
+        50,
+        || {
+            refs.iter()
+                .map(|l| {
+                    DecodedLayer::from_compressed_with(
+                        l,
+                        KernelKind::Scalar,
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+    );
+    json.add("decode_kernel_scalar", &kern_scalar);
+    json.metric(
+        "decode_kernel_scalar",
+        "gbit_per_s",
+        decoded_bits / kern_scalar.mean.as_secs_f64() / 1e9,
+    );
+    let kern_word = bench_with_result(
+        "decode kernel word (u64 blocks + 64x64 transpose)",
+        1,
+        budget,
+        50,
+        || {
+            refs.iter()
+                .map(|l| {
+                    DecodedLayer::from_compressed_with(
+                        l,
+                        KernelKind::Word,
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+    );
+    json.add("decode_kernel_word", &kern_word);
+    json.metric(
+        "decode_kernel_word",
+        "gbit_per_s",
+        decoded_bits / kern_word.mean.as_secs_f64() / 1e9,
+    );
+    json.metric(
+        "decode_kernel_word",
+        "speedup_vs_scalar",
+        kern_scalar.mean.as_secs_f64() / kern_word.mean.as_secs_f64(),
+    );
+    println!(
+        "  -> word-parallel decode kernel {:.2}x over scalar",
+        kern_scalar.mean.as_secs_f64() / kern_word.mean.as_secs_f64()
+    );
+
     // --- cold vs warm serve through the store ---
     let bytes = write_container_v2(&model);
     let x: Vec<f32> = (0..WIDTH).map(|i| (i as f32 * 0.01).sin()).collect();
@@ -129,6 +192,46 @@ fn main() {
     );
     json.add("serve_cold", &cold);
 
+    // --- fused cold serve: bit-plane GEMV, dense f32 never built ---
+    // Identical request shape to `serve_cold`; the store caches
+    // `FusedLayer`s and the backend executes y = W·x straight off the
+    // planes. The cold win is skipping the transpose/reassembly and
+    // touching ~n_w/32 of the dense bytes.
+    let cold_fused = bench_with_result(
+        "serve cold fused (decode-mode fused, no dense materialize)",
+        1,
+        budget,
+        50,
+        || {
+            let store = Arc::new(
+                ModelStore::open_bytes(
+                    bytes.clone(),
+                    StoreConfig {
+                        decode_mode: DecodeMode::Fused,
+                        ..StoreConfig::default()
+                    },
+                )
+                .expect("open store"),
+            );
+            let mut backend = ModelBackend::sequential(store)
+                .expect("backend")
+                .with_readahead(ReadaheadPolicy::off());
+            backend
+                .forward_batch(std::slice::from_ref(&x))
+                .expect("serve")
+        },
+    );
+    json.add("serve_cold_fused", &cold_fused);
+    json.metric(
+        "serve_cold_fused",
+        "speedup_vs_materialized",
+        cold.mean.as_secs_f64() / cold_fused.mean.as_secs_f64(),
+    );
+    println!(
+        "  -> fused cold serve {:.2}x vs materialized",
+        cold.mean.as_secs_f64() / cold_fused.mean.as_secs_f64()
+    );
+
     // --- cold serve, readahead pipeline vs decode-on-miss serial ---
     // A small batch gives each layer's GEMV phase enough weight for the
     // next layer's background decode to overlap with.
@@ -151,6 +254,7 @@ fn main() {
                     StoreConfig {
                         cache_budget_bytes: usize::MAX,
                         decode_workers: 1,
+                        ..StoreConfig::default()
                     },
                 )
                 .expect("open store"),
@@ -365,6 +469,49 @@ fn main() {
         cold.mean.as_secs_f64() / warm.mean.as_secs_f64()
     );
 
+    // --- fused warm serve: the steady-state GEMV trade ---
+    // Cache fully warm on both sides, so this isolates the per-request
+    // cost of the bit-plane GEMV (n_w plane passes + mask pass) against
+    // the dense unit-stride multiply it replaces. The fused side pays
+    // more FLOP-shaped work per element but reads ~n_w/32 of the bytes;
+    // which side wins is memory-bound vs compute-bound, so the ratio is
+    // tracked rather than asserted.
+    let fused_store = Arc::new(
+        ModelStore::open_bytes(
+            bytes.clone(),
+            StoreConfig {
+                decode_mode: DecodeMode::Fused,
+                ..StoreConfig::default()
+            },
+        )
+        .expect("open store"),
+    );
+    let mut fused_backend = ModelBackend::sequential(fused_store)
+        .expect("backend")
+        .with_readahead(ReadaheadPolicy::off());
+    fused_backend.prefetch_all().expect("prefetch");
+    let warm_fused = bench_with_result(
+        "serve warm fused (cached bit-plane layers)",
+        1,
+        budget,
+        200,
+        || {
+            fused_backend
+                .forward_batch(black_box(std::slice::from_ref(&x)))
+                .expect("serve")
+        },
+    );
+    json.add("serve_warm_fused", &warm_fused);
+    json.metric(
+        "serve_warm_fused",
+        "speedup_vs_materialized",
+        warm.mean.as_secs_f64() / warm_fused.mean.as_secs_f64(),
+    );
+    println!(
+        "  -> fused warm serve {:.2}x vs materialized",
+        warm.mean.as_secs_f64() / warm_fused.mean.as_secs_f64()
+    );
+
     // --- observability overhead: runtime kill switch on vs off ---
     // The warm serve above ran with span recording on (the default);
     // the same backend re-measured with the recorder disabled isolates
@@ -471,6 +618,7 @@ fn main() {
             StoreConfig {
                 cache_budget_bytes: tight,
                 decode_workers: 0,
+                ..StoreConfig::default()
             },
         )
         .expect("open store"),

@@ -9,7 +9,7 @@
 //!
 //! | rule | scope | meaning |
 //! |------|-------|---------|
-//! | `no-unwrap` | `ipc/ container/ store/ shard/ coordinator/` | no `.unwrap()` / `.expect()` outside tests |
+//! | `no-unwrap` | `ipc/ container/ store/ shard/ coordinator/ sparse/ kernels/` | no `.unwrap()` / `.expect()` outside tests |
 //! | `no-panic` | same | no `panic!` / `assert!` / `unreachable!` / `todo!` (`debug_assert*` is fine) |
 //! | `lock-poison` | same | no `.lock().unwrap()`: use [`crate::sync`] or handle poisoning |
 //! | `no-index` | wire/container/JSON parser files | no unchecked `x[i]` on adversarial input |

@@ -12,8 +12,15 @@ use super::lexer::{lex, Comment, Tok, Token};
 /// Directories (relative to `rust/src/`) on the serving path, where a
 /// panic is an availability bug: one poisoned mutex or unwound worker
 /// must degrade to an error response, never take the process down.
-const SERVING_DIRS: [&str; 5] =
-    ["ipc/", "container/", "store/", "shard/", "coordinator/"];
+const SERVING_DIRS: [&str; 7] = [
+    "ipc/",
+    "container/",
+    "store/",
+    "shard/",
+    "coordinator/",
+    "sparse/",
+    "kernels/",
+];
 
 /// Files that parse adversarial bytes (wire frames, container records,
 /// external JSON). Unchecked indexing is forbidden here outright:

@@ -16,6 +16,7 @@ pub use cost::HardwareCost;
 pub use spec::DecoderSpec;
 
 use crate::gf2::{Block, ChunkTables, XorMatrix};
+use crate::kernels::KernelKind;
 
 /// A ready-to-run sequential decoder: spec + matrix + lookup tables.
 #[derive(Debug, Clone)]
@@ -97,21 +98,60 @@ impl SequentialDecoder {
 
     /// Decode a stream directly into a flat bit vector of `n_bits` bits
     /// (truncating the final partial block, inverse of slicing).
+    /// Dispatches on the active [`KernelKind`]: the default word path
+    /// lays each decoded block down with ≤ 3 word ops through
+    /// [`crate::kernels::BlockWriter`] instead of `N_out` per-bit
+    /// stores.
     pub fn decode_stream_to_bits(
         &self,
         encoded: &[u32],
         n_bits: usize,
     ) -> crate::gf2::BitVecF2 {
-        let blocks = self.decode_stream(encoded);
-        let mut v = crate::gf2::BitVecF2::zeros(n_bits);
-        for (t, b) in blocks.iter().enumerate() {
-            let start = t * self.spec.n_out;
-            if start >= n_bits {
-                break;
+        self.decode_stream_to_bits_with(encoded, n_bits, KernelKind::active())
+    }
+
+    /// [`SequentialDecoder::decode_stream_to_bits`] with an explicit
+    /// kernel choice (benches time scalar vs word through this).
+    pub fn decode_stream_to_bits_with(
+        &self,
+        encoded: &[u32],
+        n_bits: usize,
+        kind: KernelKind,
+    ) -> crate::gf2::BitVecF2 {
+        match kind {
+            KernelKind::Word => {
+                let ns = self.spec.n_s;
+                assert!(
+                    encoded.len() >= ns,
+                    "encoded stream shorter than register depth"
+                );
+                let l = encoded.len() - ns;
+                let mut w = crate::kernels::BlockWriter::new(n_bits);
+                for t in 0..l {
+                    if w.is_full() {
+                        break;
+                    }
+                    let mut acc: Block = 0;
+                    for s in 0..=ns {
+                        acc ^= self.tables.slot(s, encoded[t + ns - s] as usize);
+                    }
+                    w.push(acc, self.spec.n_out);
+                }
+                w.finish()
             }
-            v.set_block(start, self.spec.n_out.min(n_bits - start), *b);
+            KernelKind::Scalar => {
+                let blocks = self.decode_stream(encoded);
+                let mut v = crate::gf2::BitVecF2::zeros(n_bits);
+                for (t, b) in blocks.iter().enumerate() {
+                    let start = t * self.spec.n_out;
+                    if start >= n_bits {
+                        break;
+                    }
+                    v.set_block(start, self.spec.n_out.min(n_bits - start), *b);
+                }
+                v
+            }
         }
-        v
     }
 
     /// Hardware cost of this decoder per Appendix G.
@@ -165,6 +205,32 @@ mod tests {
         assert_eq!(blocks[0], d.decode_step(11, &[0]));
         assert_eq!(blocks[1], d.decode_step(45, &[11]));
         assert_eq!(blocks[2], d.decode_step(60, &[45]));
+    }
+
+    #[test]
+    fn word_and_scalar_writers_agree() {
+        // Sweep n_out (incl. non-divisors of 64) and bit counts with
+        // tail words; the two writer kernels must be bit-identical.
+        for (n_in, n_out, n_s) in [(4, 10, 0), (6, 12, 2), (8, 64, 1), (5, 96, 0)] {
+            let s = spec(n_in, n_out, n_s);
+            let d = SequentialDecoder::random(s, 7);
+            let encoded: Vec<u32> = (0..40)
+                .map(|i| (i * 37 % (1 << n_in)) as u32)
+                .collect();
+            for n_bits in [1usize, 63, 64, 65, 130, 37 * n_out] {
+                let word = d.decode_stream_to_bits_with(
+                    &encoded,
+                    n_bits,
+                    KernelKind::Word,
+                );
+                let scalar = d.decode_stream_to_bits_with(
+                    &encoded,
+                    n_bits,
+                    KernelKind::Scalar,
+                );
+                assert_eq!(word, scalar, "n_out={n_out} n_bits={n_bits}");
+            }
+        }
     }
 
     #[test]

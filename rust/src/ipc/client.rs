@@ -16,9 +16,9 @@
 //! path.
 
 use super::wire::{self, Request, Response};
+use crate::kernels::ExecLayer;
 use crate::obs::{self, SpanEvent, SpanKind};
 use crate::shard::CostProfile;
-use crate::sparse::DecodedLayer;
 use crate::sync::lock_unpoisoned;
 use crate::store::StoreMetrics;
 use std::os::unix::net::UnixStream;
@@ -145,18 +145,20 @@ impl IpcShardStore {
         *lock_unpoisoned(&self.conn) = None;
     }
 
-    /// Fetch one decoded layer from the worker. The caller's trace id
-    /// rides the frame so the worker's decode spans stitch into the
-    /// same timeline; the round trip itself is recorded as an
-    /// `ipc_fetch` span on this side.
-    pub fn fetch(&self, layer: &str) -> CallResult<DecodedLayer> {
+    /// Fetch one decoded layer from the worker, in whichever
+    /// representation the worker's store caches (dense or fused —
+    /// both execute behind the same [`ExecLayer`] surface,
+    /// bit-identically). The caller's trace id rides the frame so the
+    /// worker's decode spans stitch into the same timeline; the round
+    /// trip itself is recorded as an `ipc_fetch` span on this side.
+    pub fn fetch(&self, layer: &str) -> CallResult<ExecLayer> {
         let start = std::time::Instant::now();
         let resp = self.call(&Request::Fetch {
             layer: layer.to_string(),
             trace: obs::current_trace(),
         })?;
         obs::span(SpanKind::IpcFetch, layer, start.elapsed());
-        wire::layer_from_response(resp)
+        wire::exec_layer_from_response(resp)
             .map_err(|e| IpcCallError::Transport(format!("{e:#}")))
     }
 
@@ -306,7 +308,7 @@ mod tests {
                 Err(e) => panic!("remote error: {e}"),
             }
         };
-        assert_eq!(layer.weights, want);
+        assert_eq!(layer.dense_weights(), want);
         // A remote error keeps the connection (and is not transport).
         let err = client.fetch("ghost").unwrap_err();
         assert!(!err.is_transport(), "{err}");

@@ -15,7 +15,10 @@
 //!   no-new-crates constraint): versioned header,
 //!   `Fetch`/`Prefetch`/`Metrics`/`CostProfile`/`Shutdown` request
 //!   kinds, error frames on both sides — corrupt bytes are errors,
-//!   never panics, never unbounded allocations.
+//!   never panics, never unbounded allocations. Fetched layers cross
+//!   in the representation the worker's store caches: dense weight
+//!   frames, or fused bit-plane frames (`--decode-mode fused|auto`)
+//!   that the router executes without materializing dense f32.
 //! * [`run_worker`] / [`serve_store`] — the `f2f shard-worker`
 //!   child-process entrypoint: one [`crate::store::ModelStore`]
 //!   (cost-sidecar warm-started) behind a `UnixListener`.

@@ -4,10 +4,13 @@
 //! same chain walk, the same GEMV inner loop, the same readahead
 //! shape — but every layer fetch crosses a process boundary to the
 //! worker owning that shard, and every readahead warms on the target
-//! worker's *own* decode service. Outputs are bit-identical to the
-//! single-store [`crate::store::ModelBackend`] because the decoded
-//! weights that come back over the wire are bit-exact and the f32
-//! GEMV/ReLU loop is the same code shape in the same order.
+//! worker's *own* decode service. Layers arrive in whichever
+//! representation the worker's store caches — dense weight frames, or
+//! fused bit-plane frames under `--decode-mode fused`/`auto` — and
+//! outputs are bit-identical to the single-store
+//! [`crate::store::ModelBackend`] either way, because both
+//! [`ExecLayer`] forms accumulate the same f32 terms in the same
+//! order and the ReLU loop is the same code shape.
 //!
 //! Telemetry mirrors the in-process router: GEMV phases are stamped
 //! into a router-local [`LayerCosts`] table (workers never run a
@@ -33,6 +36,7 @@ use super::client::{IpcCallError, IpcShardStore};
 use super::supervisor::Supervisor;
 use crate::container::{ContainerIndex, ShardMap};
 use crate::coordinator::Backend;
+use crate::kernels::ExecLayer;
 use crate::obs;
 use crate::shard::{CostProfile, ShardMetrics};
 use crate::store::wrapped_targets;
@@ -234,10 +238,7 @@ impl ProcRouter {
     /// Fetch one chain layer from its worker, repairing a transport
     /// failure through the supervisor once: revive (reconnect or
     /// respawn with the replayed shard assignment) and retry.
-    fn fetch(
-        &self,
-        idx: usize,
-    ) -> Result<crate::sparse::DecodedLayer> {
+    fn fetch(&self, idx: usize) -> Result<ExecLayer> {
         let link = &self.chain[idx];
         let client = &self.clients[link.shard];
         match client.fetch(&link.name) {
@@ -314,6 +315,9 @@ impl Backend for ProcRouter {
         let Some(last) = self.chain.len().checked_sub(1) else {
             return Ok(acts); // empty chain: the constructor rejects this
         };
+        // One scratch output reused across every layer × batch item,
+        // mirroring the in-process chain's buffer reuse.
+        let mut scratch: Vec<f32> = Vec::new();
         for i in 0..self.chain.len() {
             let layer = self.fetch(i)?;
             // Warm upcoming layers on *their* worker's decode service
@@ -333,15 +337,15 @@ impl Backend for ProcRouter {
             }
             let gemv_start = Instant::now();
             for a in acts.iter_mut() {
-                let mut y = layer.gemv(a);
+                layer.gemv_into(a, &mut scratch);
                 if i < last {
-                    for v in &mut y {
+                    for v in &mut scratch {
                         if *v < 0.0 {
                             *v = 0.0;
                         }
                     }
                 }
-                *a = y;
+                std::mem::swap(a, &mut scratch);
             }
             let gemv_took = gemv_start.elapsed();
             obs::span(
@@ -388,7 +392,11 @@ mod tests {
     }
 
     impl ThreadWorkers {
-        fn start(tag: &str, shard_bytes: Vec<Vec<u8>>) -> Self {
+        fn start(
+            tag: &str,
+            shard_bytes: Vec<Vec<u8>>,
+            config: StoreConfig,
+        ) -> Self {
             let mut clients = Vec::new();
             let mut handles = Vec::new();
             for (i, bytes) in shard_bytes.into_iter().enumerate() {
@@ -397,11 +405,7 @@ mod tests {
                     std::process::id()
                 ));
                 let store = Arc::new(
-                    ModelStore::open_bytes(
-                        bytes,
-                        StoreConfig::default(),
-                    )
-                    .unwrap(),
+                    ModelStore::open_bytes(bytes, config).unwrap(),
                 );
                 let s = socket.clone();
                 handles.push(std::thread::spawn(move || {
@@ -465,7 +469,11 @@ mod tests {
 
         let (map, shard_bytes) =
             write_sharded(&c, 2, ShardAssignment::ByBytes).unwrap();
-        let workers = ThreadWorkers::start("bitexact", shard_bytes);
+        let workers = ThreadWorkers::start(
+            "bitexact",
+            shard_bytes,
+            StoreConfig::default(),
+        );
         let mut router = ProcRouter::new(
             workers.clients.clone(),
             &map,
@@ -501,7 +509,11 @@ mod tests {
         let xs = vec![vec![0.25f32; 20]];
         let (map, shard_bytes) =
             write_sharded(&c, 2, ShardAssignment::RoundRobin).unwrap();
-        let workers = ThreadWorkers::start("auto", shard_bytes);
+        let workers = ThreadWorkers::start(
+            "auto",
+            shard_bytes,
+            StoreConfig::default(),
+        );
         let mut outs = Vec::new();
         for policy in
             [ReadaheadPolicy::off(), ReadaheadPolicy::auto()]
@@ -531,6 +543,48 @@ mod tests {
         }
         assert_eq!(outs[0], outs[1], "policy never changes outputs");
         workers.stop();
+    }
+
+    #[test]
+    fn fused_workers_match_materialized_bit_exact() {
+        // The same chain served twice over IPC — workers materialized,
+        // then fused — must produce bit-identical batches: the fused
+        // frame crosses the wire and executes without ever building
+        // the dense buffer, yet accumulates the same f32 terms in the
+        // same order.
+        let c = test_model(&[64, 32, 8], 97);
+        let bytes = crate::container::write_container_v2(&c);
+        let index = ContainerIndex::parse(&bytes).unwrap();
+        let xs: Vec<Vec<f32>> = (0..2)
+            .map(|i| {
+                (0..64).map(|j| ((i + j) as f32 * 0.3).cos()).collect()
+            })
+            .collect();
+        let (map, shard_bytes) =
+            write_sharded(&c, 2, ShardAssignment::RoundRobin).unwrap();
+        let mut outs = Vec::new();
+        for mode in [
+            crate::kernels::DecodeMode::Materialized,
+            crate::kernels::DecodeMode::Fused,
+        ] {
+            let workers = ThreadWorkers::start(
+                &format!("fused-parity-{mode}"),
+                shard_bytes.clone(),
+                StoreConfig {
+                    decode_mode: mode,
+                    ..StoreConfig::default()
+                },
+            );
+            let mut router = ProcRouter::new(
+                workers.clients.clone(),
+                &map,
+                &index,
+            )
+            .unwrap();
+            outs.push(router.forward_batch(&xs).unwrap());
+            workers.stop();
+        }
+        assert_eq!(outs[0], outs[1], "fused IPC serving must be bit-exact");
     }
 
     #[test]

@@ -54,6 +54,10 @@ pub struct WorkerSpec {
     pub cache_kb: usize,
     /// Decode-service width (0 = size to the host).
     pub decode_threads: usize,
+    /// The worker store's [`crate::kernels::DecodeMode`] — replayed on
+    /// respawn so a restarted worker caches (and ships) layers in the
+    /// same representation as the incarnation it replaces.
+    pub decode_mode: crate::kernels::DecodeMode,
     /// Directory for crash flight sidecars ([`crate::obs::flight`]).
     /// `None` disables flight recording and postmortems.
     pub flight_dir: Option<PathBuf>,
@@ -72,6 +76,7 @@ impl WorkerSpec {
             socket_path: socket_path.into(),
             cache_kb: 0,
             decode_threads: 0,
+            decode_mode: crate::kernels::DecodeMode::default(),
             flight_dir: None,
         }
     }
@@ -94,6 +99,10 @@ impl WorkerSpec {
         if self.decode_threads > 0 {
             cmd.arg("--decode-threads")
                 .arg(self.decode_threads.to_string());
+        }
+        if self.decode_mode != crate::kernels::DecodeMode::default() {
+            cmd.arg("--decode-mode")
+                .arg(self.decode_mode.to_string());
         }
         if let Some(dir) = &self.flight_dir {
             cmd.arg("--flight-dir").arg(dir);

@@ -34,6 +34,12 @@
 //! * `Layer` — `u64 rows | u64 cols | rows·cols × f32` (the decoded
 //!   weights, the same dense row-major layout
 //!   [`crate::sparse::DecodedLayer`] holds).
+//! * `FusedLayer` — `u64 rows | u64 cols | u8 dtype (0=f32, 1=i8) |
+//!   f32 scale`, then `n_w · rows · ⌈cols/64⌉` plane words and
+//!   `rows · ⌈cols/64⌉` mask words (all `u64`): the bit-plane-resident
+//!   form [`crate::kernels::FusedLayer`] executes directly. Word
+//!   counts are *derived* from the geometry, never carried, so a frame
+//!   whose payload disagrees with its own geometry is corruption.
 //! * `Ack` — `u8 accepted`.
 //! * `Metrics` reply — `u32 field_count | field_count × u64`:
 //!   version-tolerant by construction. The current field order is the
@@ -58,6 +64,8 @@
 //!   journal lines, oldest first ([`crate::obs::events`]).
 //! * `Err` — `u32 msg_len | msg`.
 
+use crate::container::Dtype;
+use crate::kernels::{ExecLayer, FusedLayer};
 use crate::obs::{self, HdrLite, SpanEvent, SpanKind};
 use crate::sparse::DecodedLayer;
 use crate::store::StoreMetrics;
@@ -85,6 +93,16 @@ pub const MAX_NAME: usize = 4096;
 /// corrupt-frame rejection on the other side.
 pub const MAX_WIRE_WEIGHTS: usize = (MAX_PAYLOAD - 16) / 4;
 
+/// Fixed prefix of a fused-layer payload: `u64 rows | u64 cols |
+/// u8 dtype | f32 scale`.
+const FUSED_HEADER_BYTES: usize = 8 + 8 + 1 + 4;
+
+/// The most `u64` words (planes + mask together) a fused-layer frame
+/// can carry under [`MAX_PAYLOAD`] — the worker-side pre-check
+/// mirroring [`MAX_WIRE_WEIGHTS`].
+pub const MAX_WIRE_FUSED_WORDS: usize =
+    (MAX_PAYLOAD - FUSED_HEADER_BYTES) / 8;
+
 const HEADER_LEN: usize = 4 + 2 + 1 + 4;
 
 // Request frame kinds.
@@ -106,6 +124,7 @@ const K_BYE: u8 = 0x85;
 const K_TRACE_REPLY: u8 = 0x86;
 const K_STATS_REPLY: u8 = 0x87;
 const K_EVENTS_REPLY: u8 = 0x88;
+const K_FUSED_LAYER: u8 = 0x89;
 const K_ERR: u8 = 0xFF;
 
 /// Smallest possible wire footprint of one trace event (empty label):
@@ -145,6 +164,18 @@ pub enum Request {
 pub enum Response {
     /// A decoded layer (dense row-major weights).
     Layer { rows: usize, cols: usize, weights: Vec<f32> },
+    /// A decoded layer in its fused (bit-plane-resident) form: the
+    /// representation a fused-mode worker caches crosses the socket
+    /// as-is — ~9/32 of the dense frame for I8 layers — and executes
+    /// on the client without ever materializing dense f32.
+    FusedLayer {
+        rows: usize,
+        cols: usize,
+        dtype: Dtype,
+        scale: f32,
+        planes: Vec<u64>,
+        mask: Vec<u64>,
+    },
     /// Prefetch acknowledged; `accepted` is false when the readahead
     /// was declined (unknown layer, or budget admission).
     Ack { accepted: bool },
@@ -264,6 +295,56 @@ pub fn send_layer(
     }
     w.write_all(&frame)?;
     w.flush()
+}
+
+/// Send a fused-layer response streamed straight from the layer's
+/// borrowed plane/mask words — the fused counterpart of
+/// [`send_layer`], one serialization copy and no intermediate owned
+/// buffers. Callers must pre-check [`MAX_WIRE_FUSED_WORDS`] (an
+/// oversized layer should be an error *frame*, not an I/O error
+/// here).
+pub fn send_fused_layer(
+    w: &mut impl Write,
+    layer: &FusedLayer,
+) -> std::io::Result<()> {
+    let planes = layer.plane_words();
+    let mask = layer.mask_words();
+    let payload_len =
+        FUSED_HEADER_BYTES + (planes.len() + mask.len()) * 8;
+    check_payload_len(payload_len)?;
+    let mut frame = Vec::with_capacity(HEADER_LEN + payload_len);
+    push_header(&mut frame, K_FUSED_LAYER, payload_len);
+    push_fused_header(
+        &mut frame,
+        layer.rows(),
+        layer.cols(),
+        layer.dtype(),
+        layer.scale(),
+    );
+    for v in planes {
+        frame.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in mask {
+        frame.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&frame)?;
+    w.flush()
+}
+
+fn push_fused_header(
+    b: &mut Vec<u8>,
+    rows: usize,
+    cols: usize,
+    dtype: Dtype,
+    scale: f32,
+) {
+    b.extend_from_slice(&(rows as u64).to_le_bytes());
+    b.extend_from_slice(&(cols as u64).to_le_bytes());
+    b.push(match dtype {
+        Dtype::F32 => 0,
+        Dtype::I8 => 1,
+    });
+    b.extend_from_slice(&scale.to_le_bytes());
 }
 
 /// Read one frame: `(kind, payload)`. Bounds-checked and size-capped;
@@ -452,6 +533,27 @@ impl Response {
                 }
                 (K_LAYER, b)
             }
+            Response::FusedLayer {
+                rows,
+                cols,
+                dtype,
+                scale,
+                planes,
+                mask,
+            } => {
+                let mut b = Vec::with_capacity(
+                    FUSED_HEADER_BYTES
+                        + (planes.len() + mask.len()) * 8,
+                );
+                push_fused_header(&mut b, *rows, *cols, *dtype, *scale);
+                for w in planes {
+                    b.extend_from_slice(&w.to_le_bytes());
+                }
+                for w in mask {
+                    b.extend_from_slice(&w.to_le_bytes());
+                }
+                (K_FUSED_LAYER, b)
+            }
             Response::Ack { accepted } => {
                 (K_ACK, vec![u8::from(*accepted)])
             }
@@ -557,6 +659,60 @@ impl Response {
                     })
                     .collect();
                 Response::Layer { rows, cols, weights }
+            }
+            K_FUSED_LAYER => {
+                let rows = p.dim()?;
+                let cols = p.dim()?;
+                let dtype = match p.u8()? {
+                    0 => Dtype::F32,
+                    1 => Dtype::I8,
+                    d => bail!("unknown fused-layer dtype {d}"),
+                };
+                let scale = f32::from_le_bytes(p.array()?);
+                // Word counts are derived from the geometry, with the
+                // same pre-read validation as the counted frames
+                // above: a lying geometry on a short payload is
+                // corruption, never an absurd allocation.
+                let stride = rows
+                    .checked_mul(cols.div_ceil(64))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "fused geometry {rows}x{cols} overflows"
+                        )
+                    })?;
+                let plane_words = stride
+                    .checked_mul(dtype.bits())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "fused plane count overflows \
+                             ({rows}x{cols})"
+                        )
+                    })?;
+                let total = plane_words
+                    .checked_add(stride)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "fused word count overflows \
+                             ({rows}x{cols})"
+                        )
+                    })?;
+                if total > p.remaining() / 8 {
+                    bail!(
+                        "fused geometry {rows}x{cols} wants {total} \
+                         words but the payload holds {} bytes",
+                        p.remaining()
+                    );
+                }
+                let planes = p.words(plane_words)?;
+                let mask = p.words(stride)?;
+                Response::FusedLayer {
+                    rows,
+                    cols,
+                    dtype,
+                    scale,
+                    planes,
+                    mask,
+                }
             }
             K_ACK => Response::Ack { accepted: p.u8()? != 0 },
             K_METRICS_REPLY => {
@@ -740,6 +896,24 @@ impl<'a> Cursor<'a> {
             .map_err(|_| anyhow::anyhow!("text payload not utf8"))
     }
 
+    /// Exactly `n` little-endian `u64` words. Callers pre-validate
+    /// `n` against [`Cursor::remaining`]; `bytes` re-bounds the read
+    /// by the payload actually present either way.
+    fn words(&mut self, n: usize) -> Result<Vec<u64>> {
+        let byte_len = n.checked_mul(8).ok_or_else(|| {
+            anyhow::anyhow!("word count {n} overflows")
+        })?;
+        let bytes = self.bytes(byte_len)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| {
+                let mut w = [0u8; 8];
+                w.copy_from_slice(c);
+                u64::from_le_bytes(w)
+            })
+            .collect())
+    }
+
     /// Bytes not yet consumed.
     fn remaining(&self) -> usize {
         self.b.len().saturating_sub(self.i)
@@ -784,6 +958,31 @@ pub fn layer_from_response(resp: Response) -> Result<DecodedLayer> {
             Ok(DecodedLayer { rows, cols, weights })
         }
         other => bail!("expected a layer frame, got {other:?}"),
+    }
+}
+
+/// Convert a fetched wire layer — dense or fused — into the executable
+/// form the serving side runs. Both arrive through the same
+/// geometry-vs-payload validation: a dense frame through
+/// [`layer_from_response`], a fused one through
+/// [`FusedLayer::from_raw`] (which re-checks the word counts against
+/// the geometry, so a hostile frame can never build a layer whose
+/// GEMV would read out of bounds).
+pub fn exec_layer_from_response(resp: Response) -> Result<ExecLayer> {
+    match resp {
+        Response::FusedLayer {
+            rows,
+            cols,
+            dtype,
+            scale,
+            planes,
+            mask,
+        } => FusedLayer::from_raw(rows, cols, dtype, scale, planes, mask)
+            .map(ExecLayer::Fused)
+            .map_err(|e| anyhow::anyhow!("fused layer frame: {e}")),
+        other => {
+            layer_from_response(other).map(ExecLayer::Materialized)
+        }
     }
 }
 
@@ -851,6 +1050,24 @@ mod tests {
             rows: 2,
             cols: 3,
             weights: vec![0.5, -1.0, 0.0, 3.25, 2.0, -0.125],
+        });
+        // 2×3 I8 fused: wpr = 1, 8 planes × 2 rows + 2 mask words.
+        round_trip_response(Response::FusedLayer {
+            rows: 2,
+            cols: 3,
+            dtype: Dtype::I8,
+            scale: 0.125,
+            planes: (0..16u64).map(|i| i.wrapping_mul(0x9E37)).collect(),
+            mask: vec![0b101, 0b111],
+        });
+        // F32 fused: 32 planes per word-aligned row.
+        round_trip_response(Response::FusedLayer {
+            rows: 1,
+            cols: 64,
+            dtype: Dtype::F32,
+            scale: 1.0,
+            planes: vec![u64::MAX; 32],
+            mask: vec![u64::MAX],
         });
         round_trip_response(Response::Ack { accepted: true });
         round_trip_response(Response::Ack { accepted: false });
@@ -1003,6 +1220,119 @@ mod tests {
         lying.extend_from_slice(&9u32.to_le_bytes());
         lying.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(Response::decode(K_TRACE_REPLY, &lying).is_err());
+    }
+
+    #[test]
+    fn fused_frames_reject_corruption() {
+        // A well-formed 1×3 I8 frame to mutate: 3 cols → 1 word/row,
+        // 8 plane words + 1 mask word after the 21-byte prefix.
+        let good = Response::FusedLayer {
+            rows: 1,
+            cols: 3,
+            dtype: Dtype::I8,
+            scale: 0.5,
+            planes: vec![0b101; 8],
+            mask: vec![0b111],
+        };
+        let (kind, payload) = good.encode();
+        assert_eq!(kind, K_FUSED_LAYER);
+        assert!(Response::decode(kind, &payload).is_ok());
+        // Unknown dtype discriminant.
+        let mut bad_dtype = payload.clone();
+        bad_dtype[16] = 7;
+        assert!(Response::decode(kind, &bad_dtype).is_err());
+        // Geometry promising more words than the payload holds —
+        // rejected before any allocation.
+        let mut lying = payload.clone();
+        lying[0..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Response::decode(kind, &lying).is_err());
+        // An overflowing geometry.
+        let mut overflow = payload.clone();
+        overflow[0..8]
+            .copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        overflow[8..16]
+            .copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        assert!(Response::decode(kind, &overflow).is_err());
+        // Trailing bytes after the mask words.
+        let mut trailing = payload.clone();
+        trailing.push(0);
+        assert!(Response::decode(kind, &trailing).is_err());
+        // Truncation at every cut errors, never panics.
+        for cut in 0..payload.len() {
+            assert!(
+                Response::decode(kind, &payload[..cut]).is_err(),
+                "cut {cut} parsed"
+            );
+        }
+    }
+
+    #[test]
+    fn streamed_fused_frame_matches_the_owned_encoding() {
+        // 2×70 I8: 2 words/row, tail bits in play.
+        let planes: Vec<u64> =
+            (0..32u64).map(|i| i.wrapping_mul(0x0123_4567)).collect();
+        let mask = vec![u64::MAX, 0x3F, 0, 0x2A];
+        let layer = FusedLayer::from_raw(
+            2,
+            70,
+            Dtype::I8,
+            0.25,
+            planes.clone(),
+            mask.clone(),
+        )
+        .unwrap();
+        let mut owned = Vec::new();
+        send_response(
+            &mut owned,
+            &Response::FusedLayer {
+                rows: 2,
+                cols: 70,
+                dtype: Dtype::I8,
+                scale: 0.25,
+                planes,
+                mask,
+            },
+        )
+        .unwrap();
+        let mut streamed = Vec::new();
+        send_fused_layer(&mut streamed, &layer).unwrap();
+        assert_eq!(streamed, owned, "one wire form, two writers");
+    }
+
+    #[test]
+    fn exec_layer_from_response_converts_both_forms() {
+        let dense = exec_layer_from_response(Response::Layer {
+            rows: 1,
+            cols: 2,
+            weights: vec![1.0, 2.0],
+        })
+        .unwrap();
+        assert!(!dense.is_fused());
+        assert_eq!((dense.rows(), dense.cols()), (1, 2));
+        let fused = exec_layer_from_response(Response::FusedLayer {
+            rows: 1,
+            cols: 3,
+            dtype: Dtype::I8,
+            scale: 0.5,
+            planes: vec![0; 8],
+            mask: vec![0b111],
+        })
+        .unwrap();
+        assert!(fused.is_fused());
+        assert_eq!((fused.rows(), fused.cols()), (1, 3));
+        // Word counts disagreeing with the geometry re-reject at the
+        // FusedLayer boundary (an in-process construction bug, since
+        // the wire decoder derives counts from the geometry).
+        assert!(exec_layer_from_response(Response::FusedLayer {
+            rows: 1,
+            cols: 3,
+            dtype: Dtype::I8,
+            scale: 0.5,
+            planes: vec![0; 7],
+            mask: vec![0b111],
+        })
+        .is_err());
+        assert!(exec_layer_from_response(Response::Bye).is_err());
     }
 
     #[test]

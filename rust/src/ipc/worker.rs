@@ -8,8 +8,11 @@
 //! protocol over a `UnixListener`:
 //!
 //! * `Fetch` blocks on [`ModelStore::get`] and ships the decoded
-//!   weights back — the store's in-flight dedup means a fetch racing a
-//!   cross-process readahead never decodes twice.
+//!   layer back *in the representation the store caches*: a
+//!   materialized layer as a dense weight frame, a fused one as its
+//!   bit-planes + mask (~9/32 of the dense frame for I8 layers) — the
+//!   store's in-flight dedup means a fetch racing a cross-process
+//!   readahead never decodes twice.
 //! * `Prefetch` maps to [`ModelStore::prefetch_async`] and returns
 //!   immediately, which is what lets the router warm layer `i+1` on
 //!   *this* worker's decode service while layer `i`'s GEMV runs in the
@@ -42,6 +45,7 @@
 //! is survivable, and the supervisor restarts whatever is not.
 
 use super::wire::{self, Request, Response, WireError};
+use crate::kernels::ExecLayer;
 use crate::obs;
 use crate::shard::CostProfile;
 use crate::store::{ModelStore, StoreConfig};
@@ -183,13 +187,18 @@ fn serve_connection(
                 let sent = match &reply {
                     // Fetched layers stream straight from the cache's
                     // Arc — one serialization copy, no owned clone of
-                    // the weight vector on the hot path.
-                    Reply::Layer(l) => wire::send_layer(
-                        &mut stream,
-                        l.rows,
-                        l.cols,
-                        &l.weights,
-                    ),
+                    // the weights (or plane words) on the hot path.
+                    Reply::Layer(l) => match l.as_ref() {
+                        ExecLayer::Materialized(d) => wire::send_layer(
+                            &mut stream,
+                            d.rows,
+                            d.cols,
+                            &d.weights,
+                        ),
+                        ExecLayer::Fused(f) => {
+                            wire::send_fused_layer(&mut stream, f)
+                        }
+                    },
                     Reply::Msg(resp) => {
                         wire::send_response(&mut stream, resp)
                     }
@@ -223,7 +232,7 @@ fn serve_connection(
 /// stream it without cloning the weights.
 enum Reply {
     Msg(Response),
-    Layer(std::sync::Arc<crate::sparse::DecodedLayer>),
+    Layer(std::sync::Arc<ExecLayer>),
 }
 
 /// Dispatch one request against the store. Returns the reply and
@@ -243,21 +252,41 @@ fn handle(
             let _trace = obs::with_trace(trace);
             match store.get(&layer) {
                 Ok(decoded) => {
-                    if decoded.weights.len() > wire::MAX_WIRE_WEIGHTS {
-                        // Error at the source: sending it anyway
-                        // would be rejected receiver-side as a corrupt
-                        // frame and trigger a pointless worker
-                        // restart.
-                        msg(Response::Err {
+                    // Error at the source when a layer cannot fit one
+                    // wire frame: sending it anyway would be rejected
+                    // receiver-side as a corrupt frame and trigger a
+                    // pointless worker restart.
+                    let oversized = match decoded.as_ref() {
+                        ExecLayer::Materialized(d) => {
+                            (d.weights.len() > wire::MAX_WIRE_WEIGHTS)
+                                .then(|| {
+                                    format!(
+                                        "{} weights (cap {})",
+                                        d.weights.len(),
+                                        wire::MAX_WIRE_WEIGHTS
+                                    )
+                                })
+                        }
+                        ExecLayer::Fused(f) => {
+                            let words = f.plane_words().len()
+                                + f.mask_words().len();
+                            (words > wire::MAX_WIRE_FUSED_WORDS)
+                                .then(|| {
+                                    format!(
+                                        "{words} fused words (cap {})",
+                                        wire::MAX_WIRE_FUSED_WORDS
+                                    )
+                                })
+                        }
+                    };
+                    match oversized {
+                        Some(why) => msg(Response::Err {
                             message: format!(
-                                "layer {layer:?} has {} weights — too \
-                                 large for one wire frame (cap {})",
-                                decoded.weights.len(),
-                                wire::MAX_WIRE_WEIGHTS
+                                "layer {layer:?} has {why} — too \
+                                 large for one wire frame"
                             ),
-                        })
-                    } else {
-                        (Reply::Layer(decoded), false)
+                        }),
+                        None => (Reply::Layer(decoded), false),
                     }
                 }
                 Err(e) => {
@@ -472,6 +501,61 @@ mod tests {
         );
         worker.join().unwrap().unwrap();
         assert!(!socket.exists(), "socket removed on clean exit");
+    }
+
+    #[test]
+    fn fused_store_ships_fused_frames_bit_exact() {
+        // A fused-mode worker answers Fetch with the bit-plane frame;
+        // the exec-layer conversion on the receiving side reproduces
+        // the materialized decode bit-for-bit.
+        let c = test_model(&[64, 8], 93);
+        let want =
+            crate::sparse::DecodedLayer::from_compressed(&c.layers[0])
+                .weights;
+        let bytes = write_container_v2(&c);
+        let store = Arc::new(
+            ModelStore::open_bytes(
+                bytes,
+                StoreConfig {
+                    decode_mode: crate::kernels::DecodeMode::Fused,
+                    ..StoreConfig::default()
+                },
+            )
+            .unwrap(),
+        );
+        let socket = temp_socket("fused-serve");
+        let worker = {
+            let store = store.clone();
+            let socket = socket.clone();
+            std::thread::spawn(move || serve_store(store, &socket))
+        };
+        let mut stream = loop {
+            match UnixStream::connect(&socket) {
+                Ok(s) => break s,
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        };
+        wire::send_request(
+            &mut stream,
+            &Request::Fetch { layer: "fc0".into(), trace: 0 },
+        )
+        .unwrap();
+        let resp = wire::read_response(&mut stream).unwrap();
+        assert!(
+            matches!(resp, Response::FusedLayer { .. }),
+            "fused store must ship the fused frame, got {resp:?}"
+        );
+        // The dense form must reject the fused frame explicitly...
+        let fused_err =
+            wire::layer_from_response(resp.clone()).unwrap_err();
+        assert!(format!("{fused_err:#}").contains("expected a layer"));
+        // ...while the exec conversion executes it bit-exactly.
+        let exec = wire::exec_layer_from_response(resp).unwrap();
+        assert!(exec.is_fused());
+        assert_eq!(exec.dense_weights(), want);
+        wire::send_request(&mut stream, &Request::Shutdown).unwrap();
+        let _ = wire::read_response(&mut stream);
+        worker.join().unwrap().unwrap();
     }
 
     #[test]

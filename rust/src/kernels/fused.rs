@@ -1,0 +1,395 @@
+//! Fused decode→GEMV execution: `y = W·x` straight from bit-planes.
+//!
+//! The materialized path decodes a layer into a dense f32 buffer
+//! (`4·rows·cols` bytes) that the GEMV then walks. A [`FusedLayer`]
+//! keeps the *decoded bit-planes* resident instead — corrections and
+//! inversion already applied — and decodes 64 weights at a time into
+//! registers during the GEMV itself, via [`transpose64`]. For I8 layers
+//! the resident footprint is `(n_w+1)` bits per weight instead of 32
+//! (~9/32 of dense), which relieves cache-eviction pressure, `Auto`
+//! readahead admission, and IPC transfer size all at once; F32 layers
+//! are slightly *larger* fused (33/32), which is why
+//! [`DecodeMode::Auto`](super::DecodeMode) prices per layer.
+//!
+//! Planes and mask are repacked **row-padded**: every row starts on a
+//! word boundary (`words_per_row = ⌈cols/64⌉`), so the per-row GEMV
+//! reads whole words even when `cols % 64 != 0`. The f32 accumulation
+//! is the exact op sequence of `DecodedLayer::gemv` — ascending column,
+//! pruned terms included as `+0.0` — so fused and materialized outputs
+//! are bit-exact, which `rust/tests/fused_parity.rs` pins down.
+
+use super::transpose64;
+use crate::container::{CompressedLayer, Dtype};
+use crate::gf2::BitVecF2;
+use crate::sparse::DecodedLayer;
+
+/// A layer resident as decoded bit-planes + mask, executing GEMV
+/// without ever materializing the dense f32 buffer.
+#[derive(Debug, Clone)]
+pub struct FusedLayer {
+    rows: usize,
+    cols: usize,
+    dtype: Dtype,
+    scale: f32,
+    words_per_row: usize,
+    /// Plane-major, row-padded words: plane `k`'s row `r` occupies
+    /// `[k·rows·wpr + r·wpr ..][..wpr]`. Planes stay MSB-first (plane 0
+    /// holds weight bit `n_w − 1`), matching the container layout.
+    planes: Vec<u64>,
+    /// Pruning mask in the same row-padded layout (set = unpruned).
+    mask: Vec<u64>,
+}
+
+impl FusedLayer {
+    /// Build from decoded (corrected, un-inverted) planes, repacking
+    /// into the row-padded layout. Validates plane count and lengths —
+    /// a malformed container becomes an error, never a panic.
+    pub fn from_planes(
+        layer: &CompressedLayer,
+        planes: &[BitVecF2],
+    ) -> Result<Self, String> {
+        let n_w = layer.dtype.bits();
+        let n = layer.n_weights();
+        if planes.len() != n_w {
+            return Err(format!(
+                "layer {:?}: {} planes for dtype {:?} (want {n_w})",
+                layer.name,
+                planes.len(),
+                layer.dtype
+            ));
+        }
+        if layer.mask.len() != n {
+            return Err(format!(
+                "layer {:?}: mask has {} bits for {n} weights",
+                layer.name,
+                layer.mask.len()
+            ));
+        }
+        for (k, p) in planes.iter().enumerate() {
+            if p.len() != n {
+                return Err(format!(
+                    "layer {:?}: plane {k} has {} bits for {n} weights",
+                    layer.name,
+                    p.len()
+                ));
+            }
+        }
+        let wpr = layer.cols.div_ceil(64);
+        let mut plane_words = Vec::with_capacity(n_w * layer.rows * wpr);
+        for p in planes {
+            pack_rows(p, layer.rows, layer.cols, &mut plane_words);
+        }
+        let mut mask_words = Vec::with_capacity(layer.rows * wpr);
+        pack_rows(&layer.mask, layer.rows, layer.cols, &mut mask_words);
+        FusedLayer::from_raw(
+            layer.rows,
+            layer.cols,
+            layer.dtype,
+            layer.scale,
+            plane_words,
+            mask_words,
+        )
+    }
+
+    /// Rebuild from already-row-padded words (the IPC wire path).
+    /// Word counts are validated against the geometry; stray bits past
+    /// `cols` in a row's tail word are never read, so hostile padding
+    /// is harmless.
+    pub fn from_raw(
+        rows: usize,
+        cols: usize,
+        dtype: Dtype,
+        scale: f32,
+        planes: Vec<u64>,
+        mask: Vec<u64>,
+    ) -> Result<Self, String> {
+        let n_w = dtype.bits();
+        let wpr = cols.div_ceil(64);
+        let stride = rows
+            .checked_mul(wpr)
+            .ok_or("fused layer shape overflows")?;
+        let want = stride
+            .checked_mul(n_w)
+            .ok_or("fused layer shape overflows")?;
+        if planes.len() != want {
+            return Err(format!(
+                "fused layer has {} plane words for {rows}×{cols} {dtype:?} \
+                 (want {want})",
+                planes.len()
+            ));
+        }
+        if mask.len() != stride {
+            return Err(format!(
+                "fused layer has {} mask words for {rows}×{cols} \
+                 (want {stride})",
+                mask.len()
+            ));
+        }
+        Ok(FusedLayer {
+            rows,
+            cols,
+            dtype,
+            scale,
+            words_per_row: wpr,
+            planes,
+            mask,
+        })
+    }
+
+    /// Output dimension.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Input dimension.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Weight dtype.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// INT8 dequantization scale (1.0 for F32).
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Words per row-padded row (`⌈cols/64⌉`).
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Concatenated plane words (plane-major, row-padded), for the wire.
+    pub fn plane_words(&self) -> &[u64] {
+        &self.planes
+    }
+
+    /// Row-padded mask words, for the wire.
+    pub fn mask_words(&self) -> &[u64] {
+        &self.mask
+    }
+
+    /// Resident bytes: `(n_w + 1) · rows · ⌈cols/64⌉ · 8` — what this
+    /// layer costs a [`crate::store::ModelStore`] cache budget.
+    pub fn planned_bytes(&self) -> usize {
+        (self.planes.len() + self.mask.len())
+            * std::mem::size_of::<u64>()
+    }
+
+    /// Decode the 64-weight group at row `r`, word `w` into
+    /// `buf[..lim]`; returns `lim` (64, or the tail width).
+    #[inline]
+    fn decode_group(
+        &self,
+        r: usize,
+        w: usize,
+        lanes: &mut [u64; 64],
+        buf: &mut [f32; 64],
+    ) -> usize {
+        let n_w = self.dtype.bits();
+        let stride = self.rows * self.words_per_row;
+        let row_off = r * self.words_per_row + w;
+        // Lane `k` carries weight bit `k` = plane `n_w − 1 − k`
+        // (MSB-first planes); after the transpose, `lanes[c]`'s low
+        // `n_w` bits are weight `w·64 + c`'s bit pattern.
+        for (k, lane) in lanes.iter_mut().take(n_w).enumerate() {
+            *lane = self.planes[(n_w - 1 - k) * stride + row_off];
+        }
+        for lane in lanes.iter_mut().skip(n_w) {
+            *lane = 0;
+        }
+        transpose64(lanes);
+        let m = self.mask[row_off];
+        let lim = 64.min(self.cols - w * 64);
+        match self.dtype {
+            Dtype::F32 => {
+                for (c, slot) in buf.iter_mut().take(lim).enumerate() {
+                    *slot = if (m >> c) & 1 == 1 {
+                        f32::from_bits(lanes[c] as u32)
+                    } else {
+                        0.0
+                    };
+                }
+            }
+            Dtype::I8 => {
+                for (c, slot) in buf.iter_mut().take(lim).enumerate() {
+                    // Pruned weights are literal +0.0, never `0·scale`:
+                    // a negative scale would yield −0.0 and break
+                    // bit-exactness with the materialized path.
+                    *slot = if (m >> c) & 1 == 1 {
+                        (lanes[c] as u8 as i8) as f32 * self.scale
+                    } else {
+                        0.0
+                    };
+                }
+            }
+        }
+        lim
+    }
+
+    /// `y = W·x` decoded on the fly, identical accumulation order
+    /// (ascending column, pruned terms included as `+0.0`) to
+    /// [`DecodedLayer::gemv`] — bit-exact with the materialized path.
+    pub fn gemv(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.gemv_into(x, &mut out);
+        out
+    }
+
+    /// [`FusedLayer::gemv`] into a caller-owned buffer (cleared and
+    /// refilled), so batch loops reuse allocations.
+    pub fn gemv_into(&self, x: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(self.cols, x.len());
+        out.clear();
+        out.reserve(self.rows);
+        let mut lanes = [0u64; 64];
+        let mut wbuf = [0f32; 64];
+        for r in 0..self.rows {
+            let mut acc = 0.0f32;
+            for w in 0..self.words_per_row {
+                let lim = self.decode_group(r, w, &mut lanes, &mut wbuf);
+                // Truncate like the materialized zip if `x` is short
+                // (callers validate lengths at the serving boundary).
+                let xs = x.get(w * 64..).unwrap_or(&[]);
+                for (wt, &xv) in wbuf.iter().take(lim).zip(xs) {
+                    acc += wt * xv;
+                }
+            }
+            out.push(acc);
+        }
+    }
+
+    /// Materialize the dense layer (bit-exact with the weights the
+    /// materialized decode path produces) — for tests, tooling, and
+    /// callers that need raw weights.
+    pub fn to_dense(&self) -> DecodedLayer {
+        let mut weights = Vec::with_capacity(self.rows * self.cols);
+        let mut lanes = [0u64; 64];
+        let mut wbuf = [0f32; 64];
+        for r in 0..self.rows {
+            for w in 0..self.words_per_row {
+                let lim = self.decode_group(r, w, &mut lanes, &mut wbuf);
+                weights.extend_from_slice(&wbuf[..lim]);
+            }
+        }
+        DecodedLayer { rows: self.rows, cols: self.cols, weights }
+    }
+}
+
+/// Repack a flat `rows·cols`-bit vector row-padded: each row restarts
+/// on a word boundary so unaligned rows (`cols % 64 != 0`) become
+/// whole-word reads. `BitVecF2::block` zero-pads tail reads.
+fn pack_rows(bits: &BitVecF2, rows: usize, cols: usize, out: &mut Vec<u64>) {
+    let wpr = cols.div_ceil(64);
+    for r in 0..rows {
+        for w in 0..wpr {
+            let width = 64.min(cols - w * 64);
+            out.push(bits.block(r * cols + w * 64, width) as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{quantize_i8, LayerSpec, SyntheticLayer, WeightGen};
+    use crate::pipeline::{CompressionConfig, Compressor};
+    use crate::rng::Rng;
+    use crate::sparse::decode_plane_with;
+    use crate::{decoder::SequentialDecoder, kernels::KernelKind};
+
+    fn compress(rows: usize, cols: usize, seed: u64) -> CompressedLayer {
+        let spec = LayerSpec { name: "t".into(), rows, cols };
+        let layer = SyntheticLayer::generate(&spec, WeightGen::default(), seed);
+        let (q, scale) = quantize_i8(&layer.weights);
+        let cfg = CompressionConfig {
+            sparsity: 0.75,
+            n_s: 0,
+            ..Default::default()
+        };
+        let (cl, _) =
+            Compressor::new(cfg).compress_i8("t", rows, cols, &q, scale);
+        cl
+    }
+
+    fn decoded_planes(cl: &CompressedLayer) -> Vec<BitVecF2> {
+        let dec = SequentialDecoder::random(cl.spec, cl.m_seed);
+        (0..cl.planes.len())
+            .map(|k| decode_plane_with(cl, &dec, k, KernelKind::Word))
+            .collect()
+    }
+
+    #[test]
+    fn fused_dense_and_gemv_match_materialized_bit_exact() {
+        // Unaligned cols (37, 64+13) exercise the row-padded tail.
+        for (rows, cols, seed) in [(5, 37, 1u64), (8, 77, 2), (3, 64, 3)] {
+            let cl = compress(rows, cols, seed);
+            let planes = decoded_planes(&cl);
+            let fused = FusedLayer::from_planes(&cl, &planes).unwrap();
+            let dense = DecodedLayer::from_compressed(&cl);
+            assert_eq!(fused.to_dense().weights, dense.weights);
+            let mut rng = Rng::new(seed);
+            let x: Vec<f32> =
+                (0..cols).map(|_| rng.next_f32() - 0.5).collect();
+            let got = fused.gemv(&x);
+            let want = dense.gemv(&x);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{rows}x{cols}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_planes_rejects_malformed_shapes() {
+        let cl = compress(4, 20, 9);
+        let planes = decoded_planes(&cl);
+        assert!(FusedLayer::from_planes(&cl, &planes[..7]).is_err());
+        let mut short = planes.clone();
+        short[3] = BitVecF2::zeros(10);
+        assert!(FusedLayer::from_planes(&cl, &short).is_err());
+    }
+
+    #[test]
+    fn from_raw_validates_word_counts() {
+        assert!(FusedLayer::from_raw(
+            2,
+            70,
+            Dtype::I8,
+            1.0,
+            vec![0; 8 * 2 * 2],
+            vec![0; 2 * 2]
+        )
+        .is_ok());
+        assert!(FusedLayer::from_raw(
+            2,
+            70,
+            Dtype::I8,
+            1.0,
+            vec![0; 8 * 2 * 2 - 1],
+            vec![0; 2 * 2]
+        )
+        .is_err());
+        assert!(FusedLayer::from_raw(
+            2,
+            70,
+            Dtype::I8,
+            1.0,
+            vec![0; 8 * 2 * 2],
+            vec![0; 5]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn planned_bytes_is_planes_plus_mask_words() {
+        let cl = compress(4, 70, 5);
+        let planes = decoded_planes(&cl);
+        let fused = FusedLayer::from_planes(&cl, &planes).unwrap();
+        // 8 planes + 1 mask, 4 rows × 2 words/row, 8 bytes each.
+        assert_eq!(fused.planned_bytes(), 9 * 4 * 2 * 8);
+        assert!(fused.planned_bytes() < 4 * 70 * 4, "I8 fused < dense");
+    }
+}

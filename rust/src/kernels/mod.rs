@@ -1,0 +1,320 @@
+//! Word-parallel bit-plane kernels and the fused decode→GEMV path.
+//!
+//! The paper's fixed-to-fixed format keeps every access fixed-size and
+//! unit-stride — the property irregular formats like CSR destroy — yet
+//! the original hot loops squandered it: `decode_stream_to_bits` wrote
+//! one bit per iteration, `reassemble_*` probed all `n_w` planes per
+//! weight through `BitVecF2::get`, and serving always round-tripped
+//! through a fully materialized dense buffer. This module rebuilds
+//! those loops over the `u64` words `BitVecF2` already stores:
+//!
+//! * [`BlockWriter`] — appends decoded `N_out ≤ 128`-bit blocks
+//!   directly into `u64` words (≤ 3 shift/OR ops per block instead of
+//!   `N_out` per-bit stores);
+//! * [`transpose64`] — the 64×64 bit-matrix transpose (delta-swap
+//!   network): one call turns `n_w` plane words into 64 ready weight
+//!   bit patterns, so reassembly costs ~6 word ops per plane word
+//!   instead of 64 single-bit probes;
+//! * [`FusedLayer`] — executes `y = W·x` directly from bit-planes +
+//!   mask, never materializing the dense f32 buffer, shrinking the
+//!   resident footprint of I8 layers to ~9/32 of dense (relieving
+//!   eviction pressure, `Auto` readahead admission, and IPC transfer
+//!   size alike);
+//! * [`ExecLayer`] — the store's cache value: a layer in whichever
+//!   representation its [`DecodeMode`] picked, behind one
+//!   `gemv`/`gemv_into` surface so backends and routers don't care.
+//!
+//! **Kernel selection** is a runtime switch ([`KernelKind::active`]):
+//! the word-parallel path is the default; `F2F_KERNEL=scalar` forces
+//! the portable per-bit fallback (and `benches/store.rs` times both as
+//! `decode_kernel_scalar` vs `decode_kernel_word`). There are no
+//! hand-written SIMD intrinsics by design — the `u64` bit ops and
+//! `count_ones` lanes autovectorize on every target, and the f32
+//! accumulation is kept strictly sequential because reordering it
+//! would break the bit-exactness contract between scalar, word, and
+//! fused paths that `rust/tests/fused_parity.rs` pins down.
+
+mod fused;
+mod transpose;
+mod writer;
+
+pub use fused::FusedLayer;
+pub use transpose::transpose64;
+pub(crate) use transpose::{reassemble_f32_words, reassemble_i8_words};
+pub use writer::BlockWriter;
+
+use crate::container::CompressedLayer;
+use crate::gf2::BitVecF2;
+use crate::sparse::DecodedLayer;
+
+/// Which inner-loop implementation the decode/reassemble hot paths use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable per-bit reference loops (the original paths).
+    Scalar,
+    /// `u64`-word blocked loops (block writer + bit-matrix transpose).
+    Word,
+}
+
+impl KernelKind {
+    /// The process-wide kernel, resolved once: `Word` unless the
+    /// environment forces the fallback with `F2F_KERNEL=scalar`.
+    pub fn active() -> KernelKind {
+        static ACTIVE: std::sync::OnceLock<KernelKind> =
+            std::sync::OnceLock::new();
+        *ACTIVE.get_or_init(|| {
+            KernelKind::from_env(std::env::var("F2F_KERNEL").ok().as_deref())
+        })
+    }
+
+    /// Pure mapping from the `F2F_KERNEL` value (testable without
+    /// mutating process environment).
+    pub(crate) fn from_env(v: Option<&str>) -> KernelKind {
+        match v {
+            Some("scalar") => KernelKind::Scalar,
+            _ => KernelKind::Word,
+        }
+    }
+}
+
+/// How a store turns a compressed layer into an executable one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecodeMode {
+    /// Decode to the dense f32 buffer (the original path).
+    #[default]
+    Materialized,
+    /// Keep decoded bit-planes resident; GEMV decodes on the fly.
+    Fused,
+    /// Per layer, whichever representation is smaller resident —
+    /// priced from the same geometry the cost table and the index
+    /// expose, so cache accounting and readahead admission agree with
+    /// the decision.
+    Auto,
+}
+
+impl DecodeMode {
+    /// Resolve `Auto` for one layer's geometry (`n_w` = bits per
+    /// weight): fused wins iff its resident bytes undercut the dense
+    /// buffer — true for I8 (9 plane-bits vs 32 dense bits per
+    /// weight), false for F32 (33/32).
+    pub fn resolve(self, rows: usize, cols: usize, n_w: usize) -> DecodeMode {
+        match self {
+            DecodeMode::Auto => {
+                if fused_bytes(rows, cols, n_w) < dense_bytes(rows, cols) {
+                    DecodeMode::Fused
+                } else {
+                    DecodeMode::Materialized
+                }
+            }
+            m => m,
+        }
+    }
+
+    /// Resident bytes a layer decoded under this mode will charge the
+    /// cache budget — the *planned* size used for admission before the
+    /// decode runs (and matching what `ExecLayer::planned_bytes`
+    /// reports after).
+    pub fn planned_bytes(self, rows: usize, cols: usize, n_w: usize) -> usize {
+        match self.resolve(rows, cols, n_w) {
+            DecodeMode::Fused => fused_bytes(rows, cols, n_w),
+            _ => dense_bytes(rows, cols),
+        }
+    }
+}
+
+impl std::str::FromStr for DecodeMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "materialized" => Ok(DecodeMode::Materialized),
+            "fused" => Ok(DecodeMode::Fused),
+            "auto" => Ok(DecodeMode::Auto),
+            other => Err(format!(
+                "unknown decode mode {other:?} \
+                 (expected materialized|fused|auto)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for DecodeMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            DecodeMode::Materialized => "materialized",
+            DecodeMode::Fused => "fused",
+            DecodeMode::Auto => "auto",
+        })
+    }
+}
+
+/// Resident bytes of a fused layer: `n_w` planes + 1 mask, row-padded
+/// to whole words (`(n_w + 1) · rows · ⌈cols/64⌉ · 8`).
+pub fn fused_bytes(rows: usize, cols: usize, n_w: usize) -> usize {
+    (n_w + 1)
+        .saturating_mul(rows)
+        .saturating_mul(cols.div_ceil(64))
+        .saturating_mul(8)
+}
+
+/// Resident bytes of a materialized layer (`4·rows·cols`).
+pub fn dense_bytes(rows: usize, cols: usize) -> usize {
+    rows.saturating_mul(cols)
+        .saturating_mul(std::mem::size_of::<f32>())
+}
+
+/// A decoded layer in whichever representation its decode mode picked.
+/// This is what a [`crate::store::ModelStore`] caches and what the
+/// serving GEMV loops execute against.
+#[derive(Debug, Clone)]
+pub enum ExecLayer {
+    /// Dense f32 weights (the original representation).
+    Materialized(DecodedLayer),
+    /// Bit-planes + mask, decoded on the fly during GEMV.
+    Fused(FusedLayer),
+}
+
+impl ExecLayer {
+    /// Output dimension.
+    pub fn rows(&self) -> usize {
+        match self {
+            ExecLayer::Materialized(l) => l.rows,
+            ExecLayer::Fused(l) => l.rows(),
+        }
+    }
+
+    /// Input dimension.
+    pub fn cols(&self) -> usize {
+        match self {
+            ExecLayer::Materialized(l) => l.cols,
+            ExecLayer::Fused(l) => l.cols(),
+        }
+    }
+
+    /// True for the fused (bit-plane-resident) representation.
+    pub fn is_fused(&self) -> bool {
+        matches!(self, ExecLayer::Fused(_))
+    }
+
+    /// Resident bytes this layer charges a store's cache budget.
+    pub fn planned_bytes(&self) -> usize {
+        match self {
+            ExecLayer::Materialized(l) => l.decoded_bytes(),
+            ExecLayer::Fused(l) => l.planned_bytes(),
+        }
+    }
+
+    /// `y = W·x`; both representations produce bit-identical outputs.
+    pub fn gemv(&self, x: &[f32]) -> Vec<f32> {
+        match self {
+            ExecLayer::Materialized(l) => l.gemv(x),
+            ExecLayer::Fused(l) => l.gemv(x),
+        }
+    }
+
+    /// [`ExecLayer::gemv`] into a caller-owned buffer (cleared and
+    /// refilled), so batch loops reuse allocations.
+    pub fn gemv_into(&self, x: &[f32], out: &mut Vec<f32>) {
+        match self {
+            ExecLayer::Materialized(l) => l.gemv_into(x, out),
+            ExecLayer::Fused(l) => l.gemv_into(x, out),
+        }
+    }
+
+    /// The dense layer, cloned (materialized) or decoded (fused) —
+    /// both bit-exact with the materialized decode path.
+    pub fn to_decoded(&self) -> DecodedLayer {
+        match self {
+            ExecLayer::Materialized(l) => l.clone(),
+            ExecLayer::Fused(l) => l.to_dense(),
+        }
+    }
+
+    /// Dense row-major weights regardless of representation.
+    pub fn dense_weights(&self) -> Vec<f32> {
+        match self {
+            ExecLayer::Materialized(l) => l.weights.clone(),
+            ExecLayer::Fused(l) => l.to_dense().weights,
+        }
+    }
+
+    /// The dense representation, if that is what's resident.
+    pub fn as_materialized(&self) -> Option<&DecodedLayer> {
+        match self {
+            ExecLayer::Materialized(l) => Some(l),
+            ExecLayer::Fused(_) => None,
+        }
+    }
+}
+
+/// Assemble decoded planes into the representation `mode` picks for
+/// this layer's geometry. The decode pipeline's final step — fallible,
+/// so malformed containers surface as decode errors, never panics.
+pub(crate) fn assemble_exec(
+    layer: &CompressedLayer,
+    planes: &[BitVecF2],
+    mode: DecodeMode,
+) -> Result<ExecLayer, String> {
+    match mode.resolve(layer.rows, layer.cols, layer.dtype.bits()) {
+        DecodeMode::Fused => {
+            FusedLayer::from_planes(layer, planes).map(ExecLayer::Fused)
+        }
+        _ => crate::sparse::assemble(layer, planes)
+            .map(ExecLayer::Materialized),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_kind_env_mapping() {
+        assert_eq!(KernelKind::from_env(None), KernelKind::Word);
+        assert_eq!(KernelKind::from_env(Some("word")), KernelKind::Word);
+        assert_eq!(KernelKind::from_env(Some("scalar")), KernelKind::Scalar);
+    }
+
+    #[test]
+    fn decode_mode_parses_and_displays() {
+        for s in ["materialized", "fused", "auto"] {
+            let m: DecodeMode = s.parse().unwrap();
+            assert_eq!(m.to_string(), s);
+        }
+        assert!("dense".parse::<DecodeMode>().is_err());
+        assert_eq!(DecodeMode::default(), DecodeMode::Materialized);
+    }
+
+    #[test]
+    fn auto_prices_i8_fused_and_f32_materialized() {
+        // I8: 9 plane words vs 32 dense bytes per 64 weights → fused.
+        assert_eq!(
+            DecodeMode::Auto.resolve(16, 128, 8),
+            DecodeMode::Fused
+        );
+        // F32: 33 words vs 32 words of dense bytes → materialized.
+        assert_eq!(
+            DecodeMode::Auto.resolve(16, 128, 32),
+            DecodeMode::Materialized
+        );
+        // Fixed modes resolve to themselves.
+        assert_eq!(
+            DecodeMode::Fused.resolve(16, 128, 32),
+            DecodeMode::Fused
+        );
+        assert_eq!(
+            DecodeMode::Materialized.resolve(16, 128, 8),
+            DecodeMode::Materialized
+        );
+    }
+
+    #[test]
+    fn planned_bytes_formulas() {
+        // 3 rows × 70 cols I8: wpr = 2, (8+1)·3·2·8 = 432 fused.
+        assert_eq!(fused_bytes(3, 70, 8), 432);
+        assert_eq!(dense_bytes(3, 70), 840);
+        assert_eq!(DecodeMode::Auto.planned_bytes(3, 70, 8), 432);
+        assert_eq!(DecodeMode::Materialized.planned_bytes(3, 70, 8), 840);
+        assert_eq!(DecodeMode::Auto.planned_bytes(3, 70, 32), 840);
+    }
+}

@@ -1,0 +1,193 @@
+//! 64×64 bit-matrix transpose and word-level plane reassembly.
+//!
+//! Reassembling one weight used to probe all `n_w` planes through
+//! `BitVecF2::get` — `n_w` shifted loads per weight. But 64 consecutive
+//! weights' bits live in one `u64` word per plane, so a 64×64 bit-matrix
+//! transpose turns `n_w` plane words into 64 ready weight bit patterns
+//! in 6 delta-swap stages of word-wide XORs (~6·64 word ops for 64·`n_w`
+//! bits — the software analogue of the paper's parallel XOR array).
+
+use crate::gf2::BitVecF2;
+
+/// In-place 64×64 bit-matrix transpose (Hacker's Delight §7-3 delta
+/// swaps): after the call, bit `r` of `a[c]` equals bit `c` of the
+/// original `a[r]`.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j = 32usize;
+    let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+    while j != 0 {
+        let mut k = 0usize;
+        while k < 64 {
+            let t = ((a[k] >> j) ^ a[k + j]) & m;
+            a[k] ^= t << j;
+            a[k + j] ^= t;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// Load transpose input for word `wi`: lane `r` carries weight bit `r`,
+/// i.e. plane `n_w − 1 − r` (planes are MSB-first); unused lanes zero.
+/// After [`transpose64`], `lanes[c]`'s low `n_w` bits are weight
+/// `wi·64 + c`'s bit pattern.
+#[inline]
+fn load_lanes(planes: &[BitVecF2], n_w: usize, wi: usize, lanes: &mut [u64; 64]) {
+    for (r, lane) in lanes.iter_mut().take(n_w).enumerate() {
+        *lane = planes[n_w - 1 - r].words()[wi];
+    }
+    for lane in lanes.iter_mut().skip(n_w) {
+        *lane = 0;
+    }
+}
+
+/// Word-level f32 reassembly under the word-masked prune gate. Callers
+/// (the fallible `assemble`) validate `planes.len() == 32` and per-plane
+/// lengths before dispatching here.
+pub(crate) fn reassemble_f32_words(
+    planes: &[BitVecF2],
+    mask: &BitVecF2,
+    n: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(planes.len(), 32);
+    debug_assert_eq!(mask.len(), n);
+    let mut out = Vec::with_capacity(n);
+    let mut lanes = [0u64; 64];
+    for wi in 0..n.div_ceil(64) {
+        load_lanes(planes, 32, wi, &mut lanes);
+        transpose64(&mut lanes);
+        let m = mask.words()[wi];
+        let lim = 64.min(n - wi * 64);
+        for c in 0..lim {
+            // Pruned positions decode to arbitrary bits; the mask word
+            // gates them to the same +0.0 the scalar path returns.
+            out.push(if (m >> c) & 1 == 1 {
+                f32::from_bits(lanes[c] as u32)
+            } else {
+                0.0
+            });
+        }
+    }
+    out
+}
+
+/// Word-level i8 reassembly (dequantized by `scale`); same contract as
+/// [`reassemble_f32_words`] with `planes.len() == 8`.
+pub(crate) fn reassemble_i8_words(
+    planes: &[BitVecF2],
+    mask: &BitVecF2,
+    n: usize,
+    scale: f32,
+) -> Vec<f32> {
+    debug_assert_eq!(planes.len(), 8);
+    debug_assert_eq!(mask.len(), n);
+    let mut out = Vec::with_capacity(n);
+    let mut lanes = [0u64; 64];
+    for wi in 0..n.div_ceil(64) {
+        load_lanes(planes, 8, wi, &mut lanes);
+        transpose64(&mut lanes);
+        let m = mask.words()[wi];
+        let lim = 64.min(n - wi * 64);
+        for c in 0..lim {
+            // Pruned weights must be literal +0.0, not `0 · scale`: a
+            // negative scale would yield −0.0 and break bit-exactness
+            // with the scalar path.
+            out.push(if (m >> c) & 1 == 1 {
+                (lanes[c] as u8 as i8) as f32 * scale
+            } else {
+                0.0
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn transpose_is_exact() {
+        let mut rng = Rng::new(11);
+        let mut a = [0u64; 64];
+        for lane in a.iter_mut() {
+            *lane = rng.next_u64();
+        }
+        let orig = a;
+        transpose64(&mut a);
+        for r in 0..64 {
+            for c in 0..64 {
+                assert_eq!((a[c] >> r) & 1, (orig[r] >> c) & 1, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_twice_is_identity() {
+        let mut rng = Rng::new(12);
+        let mut a = [0u64; 64];
+        for lane in a.iter_mut() {
+            *lane = rng.next_u64();
+        }
+        let orig = a;
+        transpose64(&mut a);
+        transpose64(&mut a);
+        assert_eq!(a, orig);
+    }
+
+    /// Build MSB-first planes from raw weight bit patterns, like the
+    /// compression pipeline does.
+    fn planes_from_bits(bits: &[u64], n_w: usize) -> Vec<BitVecF2> {
+        (0..n_w)
+            .map(|k| {
+                BitVecF2::from_iter_bits(
+                    bits.iter().map(|&b| (b >> (n_w - 1 - k)) & 1 == 1),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn f32_words_matches_per_weight_probe_with_tail() {
+        let mut rng = Rng::new(13);
+        for n in [1usize, 63, 64, 65, 130, 200] {
+            let bits: Vec<u64> =
+                (0..n).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect();
+            let planes = planes_from_bits(&bits, 32);
+            let mask =
+                BitVecF2::from_iter_bits((0..n).map(|_| rng.bernoulli(0.7)));
+            let got = reassemble_f32_words(&planes, &mask, n);
+            for (i, &g) in got.iter().enumerate() {
+                let want = if mask.get(i) {
+                    f32::from_bits(bits[i] as u32)
+                } else {
+                    0.0
+                };
+                assert_eq!(g.to_bits(), want.to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_words_matches_per_weight_probe() {
+        let mut rng = Rng::new(14);
+        let n = 150;
+        let bits: Vec<u64> = (0..n).map(|_| rng.next_u64() & 0xFF).collect();
+        let planes = planes_from_bits(&bits, 8);
+        let mask =
+            BitVecF2::from_iter_bits((0..n).map(|_| rng.bernoulli(0.5)));
+        for scale in [0.5f32, -0.25] {
+            let got = reassemble_i8_words(&planes, &mask, n, scale);
+            for (i, &g) in got.iter().enumerate() {
+                let want = if mask.get(i) {
+                    (bits[i] as u8 as i8) as f32 * scale
+                } else {
+                    0.0
+                };
+                assert_eq!(g.to_bits(), want.to_bits(), "scale={scale} i={i}");
+            }
+        }
+    }
+}

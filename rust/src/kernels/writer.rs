@@ -1,0 +1,129 @@
+//! Word-parallel block writer: append decoded blocks straight into words.
+//!
+//! `SequentialDecoder::decode_stream_to_bits` used to lay each decoded
+//! `N_out`-bit block down through `BitVecF2::set_block`, a per-bit
+//! read-modify-write loop — `N_out` word stores per block. A decoded
+//! block is already a bit-packed [`Block`], so writing it is three
+//! shift/OR word operations at most (a 128-bit block at a nonzero word
+//! offset spans three `u64` words). [`BlockWriter`] keeps a running bit
+//! cursor and does exactly that.
+
+use crate::gf2::{low_mask, BitVecF2, Block};
+
+/// Appends `width ≤ 128`-bit blocks at a running cursor into `u64`
+/// words; bits past the target length are dropped (the zero-padded tail
+/// of the paper's `l = ⌈mn/N_out⌉` slicing).
+#[derive(Debug)]
+pub struct BlockWriter {
+    words: Vec<u64>,
+    n_bits: usize,
+    cursor: usize,
+}
+
+impl BlockWriter {
+    /// A writer for a vector of `n_bits` bits, cursor at bit 0.
+    pub fn new(n_bits: usize) -> Self {
+        BlockWriter { words: vec![0; n_bits.div_ceil(64)], n_bits, cursor: 0 }
+    }
+
+    /// True once `n_bits` bits have been written; further pushes no-op.
+    pub fn is_full(&self) -> bool {
+        self.cursor >= self.n_bits
+    }
+
+    /// Append the low `width ≤ 128` bits of `block` at the cursor.
+    #[inline]
+    pub fn push(&mut self, block: Block, width: usize) {
+        debug_assert!(width <= 128);
+        let width = width.min(self.n_bits - self.cursor);
+        if width == 0 {
+            return;
+        }
+        let b = block & low_mask(width);
+        let (w, off) = (self.cursor / 64, self.cursor % 64);
+        self.words[w] |= (b << off) as u64;
+        // Bits spilling past word `w`: at most two more words
+        // (`off ≤ 63`, `width ≤ 128`). The shift guard keeps the u128
+        // shift amount in range (`off + width > 64` implies the shift
+        // `64 - off` is at most 64, valid for a u128).
+        let mut rem: Block = if off + width > 64 { b >> (64 - off) } else { 0 };
+        let mut idx = w + 1;
+        while rem != 0 {
+            self.words[idx] |= rem as u64;
+            rem >>= 64;
+            idx += 1;
+        }
+        self.cursor += width;
+    }
+
+    /// Finish into a [`BitVecF2`] of the target length.
+    pub fn finish(self) -> BitVecF2 {
+        BitVecF2::from_words(self.words, self.n_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Reference writer: the original per-bit `set_block` path.
+    fn reference(blocks: &[(Block, usize)], n_bits: usize) -> BitVecF2 {
+        let mut v = BitVecF2::zeros(n_bits);
+        let mut cursor = 0;
+        for &(b, width) in blocks {
+            if cursor >= n_bits {
+                break;
+            }
+            let w = width.min(n_bits - cursor);
+            v.set_block(cursor, w, b);
+            cursor += w;
+        }
+        v
+    }
+
+    #[test]
+    fn matches_per_bit_reference_across_widths_and_tails() {
+        let mut rng = Rng::new(7);
+        for n_out in [1usize, 3, 10, 12, 63, 64, 65, 80, 100, 127, 128] {
+            for n_bits in [1usize, 63, 64, 65, 100, 1000, 1024, 4097] {
+                let n_blocks = n_bits.div_ceil(n_out) + 2;
+                let blocks: Vec<(Block, usize)> = (0..n_blocks)
+                    .map(|_| {
+                        let b = (rng.next_u64() as u128) << 64
+                            | rng.next_u64() as u128;
+                        (b, n_out)
+                    })
+                    .collect();
+                let mut w = BlockWriter::new(n_bits);
+                for &(b, width) in &blocks {
+                    w.push(b, width);
+                }
+                assert_eq!(
+                    w.finish(),
+                    reference(&blocks, n_bits),
+                    "n_out={n_out} n_bits={n_bits}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_writer_drops_extra_blocks() {
+        let mut w = BlockWriter::new(10);
+        w.push(0x3FF, 10);
+        assert!(w.is_full());
+        w.push(!0, 128); // dropped
+        let v = w.finish();
+        assert_eq!(v.len(), 10);
+        assert_eq!(v.count_ones(), 10);
+    }
+
+    #[test]
+    fn zero_length_vector() {
+        let mut w = BlockWriter::new(0);
+        assert!(w.is_full());
+        w.push(!0, 64);
+        assert_eq!(w.finish().len(), 0);
+    }
+}

@@ -37,6 +37,15 @@
 //!   ([`container::ShardMap`], [`container::split_container`]).
 //! * [`sparse`] — CSR + SpMV baseline (Algorithm 1) and the
 //!   decode-then-GEMV fixed-to-fixed path (Algorithm 2).
+//! * [`kernels`] — word-parallel hot-loop kernels exploiting the
+//!   format's regularity: a block writer laying decoded `N_out`-bit
+//!   blocks into `u64` words, the 64×64 bit-matrix transpose behind
+//!   word-level reassembly (64 weights per iteration under a
+//!   word-masked prune gate), and the fused decode→GEMV
+//!   [`kernels::FusedLayer`] that never materializes dense f32 —
+//!   surfaced as [`kernels::DecodeMode`] on stores and `serve
+//!   --decode-mode` (see *Serving a whole model*). `F2F_KERNEL=scalar`
+//!   forces the portable per-bit fallback.
 //! * [`store`] — model store + streaming decode engine: a persistent
 //!   background decode service with async submit/wait handles and a
 //!   worker-side record-parse stage ([`store::DecodeService`];
@@ -125,6 +134,7 @@
 //! ```no_run
 //! use f2f::container::write_container_v2;
 //! use f2f::coordinator::{InferenceServer, ServerConfig};
+//! use f2f::kernels::DecodeMode;
 //! use f2f::store::{ModelBackend, ModelStore, ReadaheadPolicy, StoreConfig};
 //! use std::sync::Arc;
 //!
@@ -139,7 +149,11 @@
 //! // never decodes twice.
 //! let store = Arc::new(ModelStore::open_bytes(
 //!     bytes,
-//!     StoreConfig { cache_budget_bytes: 64 << 20, decode_workers: 4 },
+//!     StoreConfig {
+//!         cache_budget_bytes: 64 << 20,
+//!         decode_workers: 4,
+//!         decode_mode: DecodeMode::Auto,
+//!     },
 //! )?);
 //!
 //! // A multi-layer GEMV chain behind the batching inference server.
@@ -155,6 +169,33 @@
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! ### Decode modes and word-parallel kernels
+//!
+//! The store's decode pipeline runs on word-parallel kernels by
+//! default ([`kernels`]): decoded blocks land in `u64` words via a
+//! block writer instead of per-bit stores, and reassembly transposes
+//! 64 plane words at a time instead of probing every plane per weight.
+//! What the decode *produces* is the store's
+//! [`kernels::DecodeMode`] (`StoreConfig::decode_mode`, CLI `serve
+//! --decode-mode`):
+//!
+//! * `materialized` (default) — the dense f32 buffer, as before.
+//! * `fused` — a [`kernels::FusedLayer`]: decoded bit-planes + mask
+//!   stay resident and the GEMV decodes 64 weights at a time on the
+//!   fly. I8 layers shrink to ~9/32 of their dense footprint, so the
+//!   same cache budget holds ~3.5× more layers, readahead admission
+//!   accepts deeper warms, and shard workers ship fewer bytes per
+//!   fetch.
+//! * `auto` — per layer, whichever representation is smaller
+//!   (fused for I8, materialized for F32), priced from the same
+//!   geometry the planners use so byte accounting stays consistent.
+//!
+//! Every mode is bit-exact with every other (identical f32
+//! accumulation order, pinned down by `rust/tests/fused_parity.rs`),
+//! and flows through [`shard::ShardRouter`] and `ipc::ProcRouter`
+//! unchanged — fused layers cross the IPC wire as plane words, not
+//! dense f32.
 //!
 //! To scale out horizontally, split the same container across N shards
 //! ([`container::write_sharded`] / the `f2f shard` CLI) and serve it
@@ -245,7 +286,8 @@
 //! dependency-free token-level scanner over `rust/src/`) forbids
 //! `unwrap`/`expect`/panicking macros and unchecked indexing in the
 //! serving modules (`ipc`, `container`, `store`, `shard`,
-//! `coordinator`), requires a `// SAFETY:` comment on every `unsafe`,
+//! `coordinator`, `sparse`, `kernels`), requires a `// SAFETY:`
+//! comment on every `unsafe`,
 //! and flags `.lock().unwrap()` everywhere — lock poisoning must be
 //! handled (see [`sync::lock_unpoisoned`]: a panicking worker must
 //! degrade one request, not wedge the process). Deliberate exceptions
@@ -271,6 +313,7 @@ pub mod entropy;
 pub mod gf2;
 #[cfg(unix)]
 pub mod ipc;
+pub mod kernels;
 pub mod models;
 pub mod obs;
 pub mod pipeline;
@@ -288,6 +331,7 @@ pub mod weights;
 pub use decoder::{DecoderSpec, SequentialDecoder};
 pub use encoder::{EncodeResult, ViterbiEncoder};
 pub use gf2::BitVecF2;
+pub use kernels::{DecodeMode, ExecLayer, FusedLayer, KernelKind};
 pub use pipeline::{CompressionConfig, Compressor};
 pub use shard::{rebalance_map, CostProfile, ShardMetrics, ShardRouter};
 pub use store::{

@@ -21,9 +21,13 @@
 //!   the model store (`--cache-kb <n>` decoded-weight budget,
 //!   `--decode-threads <n>` decode-service width, `--layers`, `--width`,
 //!   `--readahead on|off|<depth>|auto` async warm-ahead — `auto` plans
-//!   depth from observed costs — `--shards <n>` split across a
-//!   multi-store shard router, `--shard-procs <n>` split across that
-//!   many supervised *worker processes* routed over unix-socket IPC,
+//!   depth from observed costs — `--decode-mode
+//!   materialized|fused|auto` pick how stores cache decoded layers
+//!   (dense f32, bit-plane-resident fused GEMV, or per-layer
+//!   whichever is smaller — see [`f2f::kernels`]), `--shards <n>`
+//!   split across a multi-store shard router, `--shard-procs <n>`
+//!   split across that many supervised *worker processes* routed over
+//!   unix-socket IPC,
 //!   `--timing` print the per-layer cost table plus the request /
 //!   batch / decode / GEMV latency histograms, `--profile-out [path]`
 //!   export it as `CostProfile` JSON — bare `--profile-out` writes the
@@ -47,9 +51,10 @@
 //!   evictions, readahead skips). `--once` prints the raw stats JSON
 //!   document and exits — the machine-readable mode CI asserts on.
 //! * `f2f shard-worker <shard.f2f2> --socket <path> [--cache-kb <n>]
-//!   [--decode-threads <n>] [--flight-dir <dir>]` — serve one shard
-//!   file over a unix socket: the child-process entrypoint
-//!   `serve --shard-procs` spawns (unix only). With `--flight-dir`
+//!   [--decode-threads <n>] [--decode-mode <mode>]
+//!   [--flight-dir <dir>]` — serve one shard file over a unix socket:
+//!   the child-process entrypoint `serve --shard-procs` spawns (unix
+//!   only). With `--flight-dir`
 //!   the worker keeps a crash flight sidecar checkpointed for the
 //!   supervisor's postmortem.
 //! * `f2f hw --s <S> --nin <N> --ns <N>` — Appendix G hardware cost.
@@ -312,6 +317,9 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
     }
     let cache_kb: usize = args.get("cache-kb", 0)?;
     let decode_threads: usize = args.get("decode-threads", 0)?;
+    let decode_mode: f2f::kernels::DecodeMode =
+        args.get_str("decode-mode", "materialized").parse()
+            .map_err(|e: String| anyhow::anyhow!(e))?;
     let flight_dir = args.get_str("flight-dir", "");
     let flight = if flight_dir.is_empty() {
         None
@@ -325,6 +333,7 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
         StoreConfig {
             cache_budget_bytes: budget,
             decode_workers: decode_threads,
+            decode_mode,
         },
         flight.as_deref(),
     )
@@ -396,6 +405,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // `auto` — plan depth per layer from the observed cost table.
     let readahead: ReadaheadPolicy =
         args.get_str("readahead", "on").parse()?;
+    // How stores cache decoded layers: dense f32 (`materialized`),
+    // bit-plane-resident with the GEMV fused over the planes
+    // (`fused`), or per layer whichever is smaller (`auto`).
+    let decode_mode: f2f::kernels::DecodeMode =
+        args.get_str("decode-mode", "materialized").parse()
+            .map_err(|e: String| anyhow::anyhow!(e))?;
     // Split the model across this many stores behind a shard router.
     let n_shards: usize = args.get("shards", 1)?;
     // Split the model across this many supervised worker *processes*
@@ -470,6 +485,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 width,
                 cache_kb,
                 decode_threads,
+                decode_mode,
                 readahead,
                 show_timing,
                 profile_out_explicit,
@@ -489,6 +505,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let store_config = StoreConfig {
         cache_budget_bytes: budget,
         decode_workers: decode_threads,
+        decode_mode,
     };
     let budget_label = if budget == usize::MAX {
         "unbounded".to_string()
@@ -530,7 +547,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let store = Arc::new(ModelStore::open_bytes(bytes, store_config)?);
         println!(
             "store: {} layers, decoded size {} KiB, budget \
-             {budget_label}, {} decode workers, readahead {}",
+             {budget_label}, {} decode workers, readahead {}, \
+             decode-mode {decode_mode}",
             n_layers,
             store.total_decoded_bytes() >> 10,
             store.decode_workers(),
@@ -1040,6 +1058,7 @@ struct MultiprocOpts {
     width: usize,
     cache_kb: usize,
     decode_threads: usize,
+    decode_mode: f2f::kernels::DecodeMode,
     readahead: f2f::store::ReadaheadPolicy,
     show_timing: bool,
     profile_out_explicit: String,
@@ -1107,6 +1126,7 @@ fn serve_multiproc(
             socket_path: workdir.join(format!("shard{i}.sock")),
             cache_kb: opts.cache_kb,
             decode_threads: opts.decode_threads,
+            decode_mode: opts.decode_mode,
             // Crash flight recorder sidecars land next to the shards;
             // the supervisor turns them into postmortems on reap.
             flight_dir: Some(workdir.clone()),
@@ -1121,9 +1141,10 @@ fn serve_multiproc(
     };
     println!(
         "spawned {} shard workers (cache {budget_label}/worker, \
-         readahead {}):",
+         readahead {}, decode-mode {}):",
         sup.n_workers(),
         opts.readahead,
+        opts.decode_mode,
     );
     for i in 0..sup.n_workers() {
         let layers: Vec<&str> = map.layers_of(i).collect();

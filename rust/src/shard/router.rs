@@ -171,7 +171,7 @@ impl ShardRouter {
         for (i, link) in self.chain.iter().enumerate() {
             let store = &self.shards[link.shard];
             let bytes =
-                store.layer_decoded_bytes(&link.name).unwrap_or(0);
+                store.layer_planned_bytes(&link.name).unwrap_or(0);
             if i > 0
                 && used[link.shard].saturating_add(bytes)
                     > store.budget_bytes()
@@ -421,6 +421,7 @@ mod tests {
                 StoreConfig {
                     cache_budget_bytes: layer_bytes,
                     decode_workers: 1,
+                    ..StoreConfig::default()
                 },
             ),
             &map,

@@ -50,8 +50,9 @@ impl CsrMatrix {
     }
 
     /// Algorithm 1: SpMV with irregular, data-dependent access.
+    /// `x.len()` must equal `cols` (validated by serving callers).
     pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(self.cols, x.len());
+        debug_assert_eq!(self.cols, x.len());
         let mut y = vec![0.0f32; self.rows];
         for i in 0..self.rows {
             let mut acc = 0.0f32;
@@ -64,8 +65,9 @@ impl CsrMatrix {
     }
 
     /// SpMM against a dense `cols × k` matrix (Fig. S.10's workload).
+    /// `b.rows` must equal `cols`.
     pub fn spmm(&self, b: &DenseMatrix) -> DenseMatrix {
-        assert_eq!(self.cols, b.rows);
+        debug_assert_eq!(self.cols, b.rows);
         let k = b.cols;
         let mut y = DenseMatrix::zeros(self.rows, k);
         for i in 0..self.rows {

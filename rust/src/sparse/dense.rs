@@ -21,9 +21,9 @@ impl DenseMatrix {
         DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
-    /// From a row-major buffer.
+    /// From a row-major buffer of exactly `rows · cols` values.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
-        assert_eq!(data.len(), rows * cols);
+        debug_assert_eq!(data.len(), rows * cols);
         DenseMatrix { rows, cols, data }
     }
 
@@ -64,9 +64,9 @@ impl DenseMatrix {
     }
 }
 
-/// Dense mat-vec `y = A·x`.
+/// Dense mat-vec `y = A·x` (`x.len()` must equal `a.cols`).
 pub fn gemv(a: &DenseMatrix, x: &[f32]) -> Vec<f32> {
-    assert_eq!(a.cols, x.len());
+    debug_assert_eq!(a.cols, x.len());
     (0..a.rows)
         .map(|r| {
             a.row(r)
@@ -82,7 +82,7 @@ pub fn gemv(a: &DenseMatrix, x: &[f32]) -> Vec<f32> {
 /// `b[j*k + col]`? no — row-major `cols × k`). Output row-major
 /// `rows × k`. This is the `(2048×2048)·(2048×k)` shape of Fig. S.10.
 pub fn gemm(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
-    assert_eq!(a.cols, b.rows);
+    debug_assert_eq!(a.cols, b.rows);
     let mut y = DenseMatrix::zeros(a.rows, b.cols);
     for r in 0..a.rows {
         let arow = a.row(r);

@@ -6,10 +6,18 @@
 //! pruned weights decode to arbitrary bits (the paper: "pruned weights
 //! are filled by random values during weight decoding") and are nulled by
 //! the mask before the multiply.
+//!
+//! Reassembly dispatches on [`KernelKind`]: the default word-parallel
+//! path assembles 64 weights per iteration through the bit-matrix
+//! transpose in [`crate::kernels`]; `F2F_KERNEL=scalar` forces the
+//! per-bit reference loops kept here (also the baseline
+//! `benches/store.rs` times the word kernels against). Both produce
+//! bit-identical weights.
 
 use crate::container::{CompressedLayer, Dtype};
 use crate::decoder::SequentialDecoder;
 use crate::gf2::BitVecF2;
+use crate::kernels::{reassemble_f32_words, reassemble_i8_words, KernelKind};
 #[cfg(test)]
 use crate::weights::BitPlanes;
 
@@ -30,8 +38,20 @@ pub(crate) fn decode_plane(
     dec: &SequentialDecoder,
     k: usize,
 ) -> BitVecF2 {
+    decode_plane_with(layer, dec, k, KernelKind::active())
+}
+
+/// [`decode_plane`] with an explicit kernel choice (benches time the
+/// scalar and word block writers against each other through this).
+pub fn decode_plane_with(
+    layer: &CompressedLayer,
+    dec: &SequentialDecoder,
+    k: usize,
+    kind: KernelKind,
+) -> BitVecF2 {
     let p = &layer.planes[k];
-    let mut bits = dec.decode_stream_to_bits(&p.encoded, layer.n_weights());
+    let mut bits =
+        dec.decode_stream_to_bits_with(&p.encoded, layer.n_weights(), kind);
     p.correction.apply(&mut bits);
     if p.inverted {
         bits.invert();
@@ -41,27 +61,83 @@ pub(crate) fn decode_plane(
 
 /// Reassemble decoded bit-planes into the dense f32 layer (mask-gated,
 /// dtype-dispatched). Shared with [`crate::store::DecodePool`].
+/// Fallible: a plane count or length that disagrees with the layer's
+/// dtype/shape (a malformed container) is an error, never a panic —
+/// this is reached from the serving path.
 pub(crate) fn assemble(
     layer: &CompressedLayer,
     planes: &[BitVecF2],
-) -> DecodedLayer {
+) -> Result<DecodedLayer, String> {
+    assemble_with(layer, planes, KernelKind::active())
+}
+
+/// [`assemble`] with an explicit kernel choice.
+pub fn assemble_with(
+    layer: &CompressedLayer,
+    planes: &[BitVecF2],
+    kind: KernelKind,
+) -> Result<DecodedLayer, String> {
     let n = layer.n_weights();
-    let weights = match layer.dtype {
-        Dtype::F32 => reassemble_f32(planes, &layer.mask, n),
-        Dtype::I8 => reassemble_i8(planes, &layer.mask, n, layer.scale),
+    let n_w = layer.dtype.bits();
+    if planes.len() != n_w {
+        return Err(format!(
+            "layer {:?}: {} planes for dtype {:?} (want {n_w})",
+            layer.name,
+            planes.len(),
+            layer.dtype
+        ));
+    }
+    if layer.mask.len() != n {
+        return Err(format!(
+            "layer {:?}: mask has {} bits for {n} weights",
+            layer.name,
+            layer.mask.len()
+        ));
+    }
+    for (k, p) in planes.iter().enumerate() {
+        if p.len() != n {
+            return Err(format!(
+                "layer {:?}: plane {k} has {} bits for {n} weights",
+                layer.name,
+                p.len()
+            ));
+        }
+    }
+    let weights = match (layer.dtype, kind) {
+        (Dtype::F32, KernelKind::Word) => {
+            reassemble_f32_words(planes, &layer.mask, n)
+        }
+        (Dtype::I8, KernelKind::Word) => {
+            reassemble_i8_words(planes, &layer.mask, n, layer.scale)
+        }
+        (Dtype::F32, KernelKind::Scalar) => {
+            reassemble_f32(planes, &layer.mask, n)
+        }
+        (Dtype::I8, KernelKind::Scalar) => {
+            reassemble_i8(planes, &layer.mask, n, layer.scale)
+        }
     };
-    DecodedLayer { rows: layer.rows, cols: layer.cols, weights }
+    Ok(DecodedLayer { rows: layer.rows, cols: layer.cols, weights })
 }
 
 impl DecodedLayer {
     /// Decode + correct + reassemble a compressed layer. Lossless: the
     /// unpruned weights are bit-exact.
     pub fn from_compressed(layer: &CompressedLayer) -> Self {
+        Self::from_compressed_with(layer, KernelKind::active())
+    }
+
+    /// [`DecodedLayer::from_compressed`] with an explicit kernel choice.
+    pub fn from_compressed_with(
+        layer: &CompressedLayer,
+        kind: KernelKind,
+    ) -> Self {
         let dec = SequentialDecoder::random(layer.spec, layer.m_seed);
         let planes: Vec<BitVecF2> = (0..layer.planes.len())
-            .map(|k| decode_plane(layer, &dec, k))
+            .map(|k| decode_plane_with(layer, &dec, k, kind))
             .collect();
-        assemble(layer, &planes)
+        // lint: allow(no-unwrap) -- plane count/length vs dtype is validated at container parse; serving decodes go through the fallible `assemble` in the store pool instead
+        assemble_with(layer, &planes, kind).expect("parse-validated layer")
     }
 
     /// Decoded dense size in bytes (what this layer costs in a
@@ -73,16 +149,29 @@ impl DecodedLayer {
     /// `y = W · x` (Algorithm 2's multiply; pruned entries are already
     /// zero so no gather is needed — every access is unit-stride).
     pub fn gemv(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(self.cols, x.len());
-        (0..self.rows)
-            .map(|r| {
+        let mut out = Vec::new();
+        self.gemv_into(x, &mut out);
+        out
+    }
+
+    /// [`DecodedLayer::gemv`] into a caller-owned buffer (cleared and
+    /// refilled), so batch loops reuse allocations instead of
+    /// reallocating every layer × item. Shapes are validated at the
+    /// serving boundary (`validate_chain` / `forward_batch`); a
+    /// mismatched `x` truncates the dot product rather than panicking.
+    pub fn gemv_into(&self, x: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(self.cols, x.len());
+        out.clear();
+        out.reserve(self.rows);
+        for r in 0..self.rows {
+            out.push(
                 self.weights[r * self.cols..(r + 1) * self.cols]
                     .iter()
                     .zip(x)
                     .map(|(&w, &xv)| w * xv)
-                    .sum()
-            })
-            .collect()
+                    .sum(),
+            );
+        }
     }
 }
 
@@ -91,8 +180,9 @@ pub fn decode_gemv(layer: &CompressedLayer, x: &[f32]) -> Vec<f32> {
     DecodedLayer::from_compressed(layer).gemv(x)
 }
 
+/// Per-bit f32 reassembly — the scalar reference kernel.
 fn reassemble_f32(planes: &[BitVecF2], mask: &BitVecF2, n: usize) -> Vec<f32> {
-    assert_eq!(planes.len(), 32);
+    debug_assert_eq!(planes.len(), 32);
     (0..n)
         .map(|i| {
             if !mask.get(i) {
@@ -109,13 +199,14 @@ fn reassemble_f32(planes: &[BitVecF2], mask: &BitVecF2, n: usize) -> Vec<f32> {
         .collect()
 }
 
+/// Per-bit i8 reassembly — the scalar reference kernel.
 fn reassemble_i8(
     planes: &[BitVecF2],
     mask: &BitVecF2,
     n: usize,
     scale: f32,
 ) -> Vec<f32> {
-    assert_eq!(planes.len(), 8);
+    debug_assert_eq!(planes.len(), 8);
     (0..n)
         .map(|i| {
             if !mask.get(i) {
@@ -134,7 +225,8 @@ fn reassemble_i8(
 
 // Integration tests with real compressed layers live in
 // `rust/tests/pipeline_roundtrip.rs` (they need the pipeline to build
-// containers); unit tests here exercise the reassembly helpers.
+// containers) and `rust/tests/fused_parity.rs` (kernel/mode parity);
+// unit tests here exercise the reassembly helpers.
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +241,8 @@ mod tests {
         let mask = BitVecF2::from_bools(&[true, false, true, false]);
         let out = reassemble_f32(&planes, &mask, 4);
         assert_eq!(out, vec![1.5, 0.0, 0.75, 0.0]);
+        // The word kernel agrees bit for bit.
+        assert_eq!(reassemble_f32_words(&planes, &mask, 4), out);
     }
 
     #[test]
@@ -160,6 +254,51 @@ mod tests {
         let mask = BitVecF2::from_bools(&[true, true, true, true]);
         let out = reassemble_i8(&planes, &mask, 4, 0.5);
         assert_eq!(out, vec![5.0, -10.0, 63.5, -64.0]);
+        assert_eq!(reassemble_i8_words(&planes, &mask, 4, 0.5), out);
+    }
+
+    #[test]
+    fn scalar_and_word_kernels_agree_across_tail_widths() {
+        let mut rng = Rng::new(8);
+        for n in [1usize, 63, 64, 65, 129, 200] {
+            let w: Vec<f32> =
+                (0..n).map(|_| rng.normal() as f32).collect();
+            let planes_src = BitPlanes::from_f32(&w);
+            let planes: Vec<BitVecF2> =
+                (0..32).map(|k| planes_src.plane(k).clone()).collect();
+            let mask = BitVecF2::from_iter_bits(
+                (0..n).map(|_| rng.bernoulli(0.6)),
+            );
+            let scalar = reassemble_f32(&planes, &mask, n);
+            let word = reassemble_f32_words(&planes, &mask, n);
+            assert_eq!(scalar.len(), word.len());
+            for (s, wd) in scalar.iter().zip(&word) {
+                assert_eq!(s.to_bits(), wd.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn assemble_rejects_wrong_plane_count() {
+        let mut rng = Rng::new(9);
+        let dense =
+            crate::sparse::DenseMatrix::random_sparse(4, 8, 0.5, &mut rng);
+        let cfg = crate::pipeline::CompressionConfig {
+            sparsity: 0.5,
+            n_s: 0,
+            ..Default::default()
+        };
+        let (cl, _) = crate::pipeline::Compressor::new(cfg)
+            .compress_f32("t", 4, 8, &dense.data);
+        let dec = SequentialDecoder::random(cl.spec, cl.m_seed);
+        let planes: Vec<BitVecF2> = (0..cl.planes.len())
+            .map(|k| decode_plane(&cl, &dec, k))
+            .collect();
+        assert!(assemble(&cl, &planes).is_ok());
+        assert!(assemble(&cl, &planes[..31]).is_err());
+        let mut bad = planes;
+        bad[0] = BitVecF2::zeros(3);
+        assert!(assemble(&cl, &bad).is_err());
     }
 
     #[test]
@@ -176,6 +315,13 @@ mod tests {
                 .map(|c| weights[r * 4 + c] * x[c])
                 .sum();
             assert!((y[r] - expect).abs() < 1e-5);
+        }
+        // gemv_into reuses its buffer and matches bit for bit.
+        let mut buf = vec![0.0f32; 17];
+        layer.gemv_into(&x, &mut buf);
+        assert_eq!(buf.len(), 3);
+        for (a, b) in y.iter().zip(&buf) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 }

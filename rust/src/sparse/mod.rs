@@ -15,7 +15,9 @@ mod f2f_mv;
 
 pub use csr::CsrMatrix;
 pub use dense::{gemm, gemv, DenseMatrix};
-pub use f2f_mv::{decode_gemv, DecodedLayer};
+pub use f2f_mv::{
+    assemble_with, decode_gemv, decode_plane_with, DecodedLayer,
+};
 pub(crate) use f2f_mv::{assemble, decode_plane};
 
 #[cfg(test)]

@@ -67,6 +67,10 @@ pub(crate) fn forward_chain(
     let Some(last) = links.len().checked_sub(1) else {
         return Ok(acts); // empty chain: constructors reject this
     };
+    // One scratch output reused across every layer × batch item: each
+    // GEMV fills it, then it swaps with the activation — zero per-call
+    // allocation once it has grown to the widest layer of the chain.
+    let mut scratch: Vec<f32> = Vec::new();
     for (i, (store, name)) in links.iter().enumerate() {
         let layer = store
             .get_pinned(name)
@@ -85,15 +89,15 @@ pub(crate) fn forward_chain(
         }
         let gemv_start = Instant::now();
         for a in acts.iter_mut() {
-            let mut y = layer.gemv(a);
+            layer.gemv_into(a, &mut scratch);
             if i < last {
-                for v in &mut y {
+                for v in &mut scratch {
                     if *v < 0.0 {
                         *v = 0.0;
                     }
                 }
             }
-            *a = y;
+            std::mem::swap(a, &mut scratch);
         }
         let gemv_took = gemv_start.elapsed();
         obs::span(obs::SpanKind::Gemv, name, gemv_took);
@@ -135,7 +139,7 @@ fn planned_depth(
         .and_then(|c| c.gemv_estimate())
         .map(|per_item| per_item * batch_items as f64);
     let mut committed: Vec<(&ModelStore, usize)> =
-        vec![(store, store.layer_decoded_bytes(name).unwrap_or(0))];
+        vec![(store, store.layer_planned_bytes(name).unwrap_or(0))];
     let mut candidates = Vec::with_capacity(cap);
     for d in 1..=cap {
         let (ahead_store, ahead_name) = links[(i + d) % len];
@@ -151,7 +155,7 @@ fn planned_depth(
         let need = if cached {
             0
         } else {
-            ahead_store.layer_decoded_bytes(ahead_name).unwrap_or(0)
+            ahead_store.layer_planned_bytes(ahead_name).unwrap_or(0)
         };
         let used = committed
             .iter_mut()
@@ -255,7 +259,7 @@ impl ModelBackend {
         let budget = self.store.budget_bytes();
         let mut used = 0usize;
         for (i, name) in self.chain.iter().enumerate() {
-            let bytes = self.store.layer_decoded_bytes(name).unwrap_or(0);
+            let bytes = self.store.layer_planned_bytes(name).unwrap_or(0);
             if i > 0 && used.saturating_add(bytes) > budget {
                 break;
             }
@@ -428,6 +432,41 @@ mod tests {
     }
 
     #[test]
+    fn decode_modes_serve_bit_identical_chains() {
+        // The whole point of `DecodeMode`: representation is invisible
+        // to callers. Auto over these I8 layers picks fused for wide
+        // layers and materialized for narrow ones — the mix must still
+        // be bit-exact with the all-dense baseline.
+        use crate::kernels::DecodeMode;
+        let c = model(&[20, 16, 12, 8], 21);
+        let xs: Vec<Vec<f32>> = (0..2)
+            .map(|i| {
+                (0..20).map(|j| ((i + j) as f32 * 0.3).sin()).collect()
+            })
+            .collect();
+        let mut outs = Vec::new();
+        for mode in [
+            DecodeMode::Materialized,
+            DecodeMode::Fused,
+            DecodeMode::Auto,
+        ] {
+            let store = Arc::new(ModelStore::from_container(
+                c.clone(),
+                StoreConfig {
+                    decode_mode: mode,
+                    ..StoreConfig::default()
+                },
+            ));
+            assert_eq!(store.decode_mode(), mode);
+            let mut b = ModelBackend::sequential(store.clone()).unwrap();
+            outs.push(b.forward_batch(&xs).unwrap());
+            store.wait_for_idle();
+        }
+        assert_eq!(outs[0], outs[1], "fused must be bit-exact");
+        assert_eq!(outs[0], outs[2], "auto must be bit-exact");
+    }
+
+    #[test]
     fn rejects_incompatible_chain() {
         let c = model(&[20, 16, 12], 8);
         let store = Arc::new(ModelStore::from_container(
@@ -472,7 +511,11 @@ mod tests {
         let budget = 16 * 16 * 4 * 2; // two of four layers fit
         let store = Arc::new(ModelStore::from_container(
             c,
-            StoreConfig { cache_budget_bytes: budget, decode_workers: 1 },
+            StoreConfig {
+                cache_budget_bytes: budget,
+                decode_workers: 1,
+                ..StoreConfig::default()
+            },
         ));
         let b = ModelBackend::sequential(store.clone()).unwrap();
         b.prefetch_all().unwrap();

@@ -19,7 +19,11 @@
 //!   [`ModelStore::prefetch_async`] warming, and pin-while-executing
 //!   ([`ModelStore::get_pinned`] → [`PinnedLayer`]) so installs never
 //!   evict a layer mid-GEMV. Models larger than the decoded budget
-//!   serve by decode-on-miss / evict-cold.
+//!   serve by decode-on-miss / evict-cold. Layers cache as
+//!   [`crate::kernels::ExecLayer`]s in the representation the store's
+//!   [`crate::kernels::DecodeMode`] picks — dense f32, or bit-plane
+//!   resident executing the GEMV fused — with every budget decision
+//!   priced in that representation.
 //! * [`LayerCosts`] — per-layer timing telemetry: EWMA decode
 //!   (submit→install) and GEMV costs, recorded at the source (the
 //!   decode service stamps completions, the forward chain stamps each
@@ -96,7 +100,11 @@ mod tests {
         let store = Arc::new(
             ModelStore::open_bytes(
                 bytes,
-                StoreConfig { cache_budget_bytes: usize::MAX, decode_workers: 2 },
+                StoreConfig {
+                    cache_budget_bytes: usize::MAX,
+                    decode_workers: 2,
+                    ..StoreConfig::default()
+                },
             )
             .unwrap(),
         );

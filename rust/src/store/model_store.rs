@@ -41,7 +41,7 @@ use crate::container::{
     read_container, read_layer_at, CompressedLayer, Container,
     ContainerIndex,
 };
-use crate::sparse::DecodedLayer;
+use crate::kernels::{DecodeMode, ExecLayer};
 use crate::sync::{lock_unpoisoned, wait_unpoisoned};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -67,11 +67,21 @@ pub struct StoreConfig {
     pub cache_budget_bytes: usize,
     /// Persistent decode-service worker threads (0 = size to the host).
     pub decode_workers: usize,
+    /// Representation decoded layers take in cache: dense f32
+    /// (`Materialized`), bit-plane resident (`Fused`), or per-layer
+    /// whichever is smaller (`Auto`). Everything byte-budgeted —
+    /// admission, install, eviction, readahead planning — prices
+    /// layers under this mode.
+    pub decode_mode: DecodeMode,
 }
 
 impl Default for StoreConfig {
     fn default() -> Self {
-        StoreConfig { cache_budget_bytes: usize::MAX, decode_workers: 0 }
+        StoreConfig {
+            cache_budget_bytes: usize::MAX,
+            decode_workers: 0,
+            decode_mode: DecodeMode::Materialized,
+        }
     }
 }
 
@@ -148,7 +158,7 @@ enum Source {
 }
 
 struct CacheEntry {
-    layer: Arc<DecodedLayer>,
+    layer: Arc<ExecLayer>,
     bytes: usize,
     last_used: u64,
     /// Active [`PinnedLayer`] guards; a pinned entry is never evicted.
@@ -236,6 +246,8 @@ impl CacheState {
 struct StoreInner {
     source: Source,
     budget: usize,
+    /// Representation decoded layers take (see [`StoreConfig`]).
+    mode: DecodeMode,
     state: Mutex<CacheState>,
     /// Per-layer timing telemetry: decode EWMA stamped on install (the
     /// worker-side callback), GEMV EWMA stamped by the forward chain.
@@ -281,15 +293,31 @@ impl StoreInner {
         }
     }
 
+    /// Resident bytes the layer will charge the cache budget under this
+    /// store's decode mode — what admission must reserve before the
+    /// decode runs, and what [`ExecLayer::planned_bytes`] reports after.
+    fn layer_planned_bytes(&self, name: &str) -> Option<usize> {
+        match &self.source {
+            Source::Indexed { index, .. } => index.find(name).map(|e| {
+                self.mode.planned_bytes(e.rows, e.cols, e.dtype.bits())
+            }),
+            Source::Parsed { layers } => {
+                layers.iter().find(|l| l.name == name).map(|l| {
+                    self.mode.planned_bytes(l.rows, l.cols, l.dtype.bits())
+                })
+            }
+        }
+    }
+
     /// Install a finished decode, then release its waiters. Runs on the
     /// decode worker that finished the layer's last plane.
     fn install(
         &self,
         name: &str,
-        decoded: Arc<DecodedLayer>,
+        decoded: Arc<ExecLayer>,
         flight: &InFlight,
     ) {
-        let bytes = decoded.decoded_bytes();
+        let bytes = decoded.planned_bytes();
         let result = {
             let mut guard = lock_unpoisoned(&self.state);
             let st = &mut *guard;
@@ -336,7 +364,7 @@ impl StoreInner {
             let mut guard = lock_unpoisoned(&self.state);
             let st = &mut *guard;
             if st.in_flight.remove(name).is_some() {
-                let need = self.layer_decoded_bytes(name).unwrap_or(0);
+                let need = self.layer_planned_bytes(name).unwrap_or(0);
                 st.in_flight_bytes =
                     st.in_flight_bytes.saturating_sub(need);
             }
@@ -393,7 +421,7 @@ impl StoreInner {
 pub struct PinnedLayer {
     inner: Arc<StoreInner>,
     name: String,
-    layer: Arc<DecodedLayer>,
+    layer: Arc<ExecLayer>,
     /// Whether this guard actually took a pin on the cache entry (the
     /// eviction-window race can hand out an unpinned guard); only a
     /// taken pin may be released on drop.
@@ -402,7 +430,7 @@ pub struct PinnedLayer {
 
 impl PinnedLayer {
     /// The pinned decoded layer.
-    pub fn layer(&self) -> &Arc<DecodedLayer> {
+    pub fn layer(&self) -> &Arc<ExecLayer> {
         &self.layer
     }
 
@@ -413,9 +441,9 @@ impl PinnedLayer {
 }
 
 impl std::ops::Deref for PinnedLayer {
-    type Target = DecodedLayer;
+    type Target = ExecLayer;
 
-    fn deref(&self) -> &DecodedLayer {
+    fn deref(&self) -> &ExecLayer {
         &self.layer
     }
 }
@@ -451,7 +479,7 @@ impl Drop for PinnedLayer {
 
 /// How a fetch resolves under the state lock.
 enum Fetch {
-    Hit(Arc<DecodedLayer>),
+    Hit(Arc<ExecLayer>),
     Wait(Arc<InFlight>),
     Decode(Arc<InFlight>),
 }
@@ -559,6 +587,7 @@ impl ModelStore {
             inner: Arc::new(StoreInner {
                 source,
                 budget: config.cache_budget_bytes,
+                mode: config.decode_mode,
                 state: Mutex::new(CacheState::default()),
                 costs: LayerCosts::new(),
                 idle: Condvar::new(),
@@ -597,6 +626,19 @@ impl ModelStore {
         self.inner.layer_decoded_bytes(name)
     }
 
+    /// Resident bytes one layer will charge the cache budget under this
+    /// store's decode mode, without decoding — what readahead planning
+    /// and `prefetch_all` budget walks must price with (a fused I8
+    /// layer charges ~9/32 of its dense size).
+    pub fn layer_planned_bytes(&self, name: &str) -> Option<usize> {
+        self.inner.layer_planned_bytes(name)
+    }
+
+    /// The decode mode this store caches layers under.
+    pub fn decode_mode(&self) -> DecodeMode {
+        self.inner.mode
+    }
+
     /// Total decoded size of the whole model in bytes.
     pub fn total_decoded_bytes(&self) -> usize {
         match &self.inner.source {
@@ -628,10 +670,11 @@ impl ModelStore {
         lock_unpoisoned(&self.inner.state).entries.contains_key(name)
     }
 
-    /// Fetch a decoded layer: cache hit bumps recency; miss joins the
+    /// Fetch a decoded layer (in this store's decode-mode
+    /// representation): cache hit bumps recency; miss joins the
     /// in-flight decode if one is running, else starts one on the
     /// background service and waits for its install.
-    pub fn get(&self, name: &str) -> Result<Arc<DecodedLayer>> {
+    pub fn get(&self, name: &str) -> Result<Arc<ExecLayer>> {
         match self.lookup(name) {
             Fetch::Hit(layer) => Ok(layer),
             Fetch::Wait(flight) => {
@@ -670,7 +713,7 @@ impl ModelStore {
         } else {
             // Evicted in the window since `get` returned: reinstate it
             // pinned — it is about to execute, the hottest possible use.
-            let bytes = layer.decoded_bytes();
+            let bytes = layer.planned_bytes();
             st.cached_bytes += bytes;
             st.pinned_bytes += bytes;
             st.entries.insert(
@@ -714,7 +757,7 @@ impl ModelStore {
             {
                 return true; // warm or already decoding: dedup
             }
-            let Some(need) = self.inner.layer_decoded_bytes(name) else {
+            let Some(need) = self.inner.layer_planned_bytes(name) else {
                 return false; // unknown layer: a blocking get reports it
             };
             // Admission: the layer must fit in the budget alongside the
@@ -755,6 +798,7 @@ impl ModelStore {
                     .compressed_layer(&parse_key)
                     .map_err(|e| format!("{e:#}"))
             },
+            self.inner.mode,
             move |outcome, took| match outcome {
                 Ok(decoded) => {
                     // Submit→install wall time, stamped by the service:
@@ -786,7 +830,7 @@ impl ModelStore {
             let flight = Arc::new(InFlight::default());
             st.in_flight.insert(name.to_string(), flight.clone());
             st.in_flight_bytes = st.in_flight_bytes.saturating_add(
-                self.inner.layer_decoded_bytes(name).unwrap_or(0),
+                self.inner.layer_planned_bytes(name).unwrap_or(0),
             );
             Fetch::Decode(flight)
         }
@@ -852,6 +896,7 @@ impl ModelStore {
 mod tests {
     use super::*;
     use crate::container::write_container_v2;
+    use crate::sparse::DecodedLayer;
     use crate::store::test_model as model;
 
     fn layer_bytes(dims: &[usize], i: usize) -> usize {
@@ -873,7 +918,7 @@ mod tests {
         assert_eq!(store.layer_dims("fc1"), Some((8, 12)));
         assert_eq!(store.layer_decoded_bytes("fc0"), Some(12 * 16 * 4));
         for (i, name) in ["fc0", "fc1"].iter().enumerate() {
-            assert_eq!(store.get(name).unwrap().weights, want[i]);
+            assert_eq!(store.get(name).unwrap().dense_weights(), want[i]);
         }
         // Misses on unknown layers error, clean up, and keep erroring.
         assert!(store.get("nope").is_err());
@@ -896,7 +941,7 @@ mod tests {
             store.source_mapped(),
             "unix + mmap feature must map container files"
         );
-        assert_eq!(store.get("fc0").unwrap().weights, want);
+        assert_eq!(store.get("fc0").unwrap().dense_weights(), want);
         drop(store);
         let _ = std::fs::remove_file(&path);
     }
@@ -908,7 +953,7 @@ mod tests {
         let bytes = crate::container::write_container(&c);
         let store =
             ModelStore::open_bytes(bytes, StoreConfig::default()).unwrap();
-        assert_eq!(store.get("fc0").unwrap().weights, want);
+        assert_eq!(store.get("fc0").unwrap().dense_weights(), want);
     }
 
     #[test]
@@ -919,7 +964,11 @@ mod tests {
         let budget = layer_bytes(&dims, 0) * 2;
         let store = ModelStore::from_container(
             c,
-            StoreConfig { cache_budget_bytes: budget, decode_workers: 1 },
+            StoreConfig {
+                cache_budget_bytes: budget,
+                decode_workers: 1,
+                ..StoreConfig::default()
+            },
         );
         store.get("fc0").unwrap();
         store.get("fc1").unwrap();
@@ -975,10 +1024,14 @@ mod tests {
         let c = model(&[16, 12], 6);
         let store = ModelStore::from_container(
             c,
-            StoreConfig { cache_budget_bytes: 8, decode_workers: 1 },
+            StoreConfig {
+                cache_budget_bytes: 8,
+                decode_workers: 1,
+                ..StoreConfig::default()
+            },
         );
         let l = store.get("fc0").unwrap();
-        assert_eq!(l.rows * l.cols, 12 * 16);
+        assert_eq!(l.rows() * l.cols(), 12 * 16);
         // Bigger than budget but it is the only entry: kept.
         assert!(store.is_cached("fc0"));
     }
@@ -997,7 +1050,7 @@ mod tests {
                 let barrier = barrier.clone();
                 std::thread::spawn(move || {
                     barrier.wait();
-                    store.get("fc0").unwrap().weights.clone()
+                    store.get("fc0").unwrap().dense_weights()
                 })
             })
             .collect();
@@ -1027,7 +1080,7 @@ mod tests {
         // Async warming is not caller traffic: no hit/miss accounting.
         assert_eq!(m.hits + m.misses, 0);
         let l = store.get("fc0").unwrap();
-        assert_eq!(l.rows * l.cols, 12 * 16);
+        assert_eq!(l.rows() * l.cols(), 12 * 16);
         assert_eq!(store.metrics().hits, 1);
     }
 
@@ -1038,10 +1091,14 @@ mod tests {
         let budget = layer_bytes(&dims, 0) * 2; // two layers fit
         let store = ModelStore::from_container(
             c,
-            StoreConfig { cache_budget_bytes: budget, decode_workers: 1 },
+            StoreConfig {
+                cache_budget_bytes: budget,
+                decode_workers: 1,
+                ..StoreConfig::default()
+            },
         );
         let pinned = store.get_pinned("fc0").unwrap();
-        assert_eq!(pinned.rows * pinned.cols, 16 * 16);
+        assert_eq!(pinned.rows() * pinned.cols(), 16 * 16);
         // Warm fc1 (fits beside the pin), then fc2: its install must
         // evict fc1 — never the pinned fc0, although fc0 is LRU-oldest.
         assert!(store.prefetch_async("fc1"));
@@ -1071,6 +1128,7 @@ mod tests {
             StoreConfig {
                 cache_budget_bytes: usize::MAX,
                 decode_workers: 1,
+                ..StoreConfig::default()
             },
         );
         assert!(store.get("fc0").is_err(), "decode panic must surface");
@@ -1088,7 +1146,11 @@ mod tests {
         let budget = layer_bytes(&dims, 0); // exactly one layer
         let store = ModelStore::from_container(
             c,
-            StoreConfig { cache_budget_bytes: budget, decode_workers: 1 },
+            StoreConfig {
+                cache_budget_bytes: budget,
+                decode_workers: 1,
+                ..StoreConfig::default()
+            },
         );
         let pin = store.get_pinned("fc0").unwrap();
         // A demand fetch while fc0 is pinned finds no eviction victim:
@@ -1113,7 +1175,11 @@ mod tests {
         let budget = layer_bytes(&dims, 0); // exactly one layer
         let store = ModelStore::from_container(
             c,
-            StoreConfig { cache_budget_bytes: budget, decode_workers: 1 },
+            StoreConfig {
+                cache_budget_bytes: budget,
+                decode_workers: 1,
+                ..StoreConfig::default()
+            },
         );
         let _pin = store.get_pinned("fc0").unwrap();
         assert!(
@@ -1126,6 +1192,41 @@ mod tests {
         assert!(store.is_cached("fc0") && !store.is_cached("fc1"));
         // Unknown layers are declined too (a blocking get reports them).
         assert!(!store.prefetch_async("ghost"));
+    }
+
+    #[test]
+    fn fused_mode_shrinks_cache_footprint_and_stays_bit_exact() {
+        // One wide I8 layer (8 × 64): bit-plane residency costs
+        // (8+1)·8·1·8 = 576 bytes vs 2048 dense — the budget, the
+        // metrics, and the planned sizing must all price the fused
+        // representation, and the weights must stay bit-exact.
+        let c = model(&[64, 8], 41);
+        let want = DecodedLayer::from_compressed(&c.layers[0]).weights;
+        let store = ModelStore::from_container(
+            c,
+            StoreConfig {
+                decode_mode: DecodeMode::Fused,
+                ..StoreConfig::default()
+            },
+        );
+        let planned = store.layer_planned_bytes("fc0").unwrap();
+        assert_eq!(planned, crate::kernels::fused_bytes(8, 64, 8));
+        assert!(planned < store.layer_decoded_bytes("fc0").unwrap());
+        let l = store.get("fc0").unwrap();
+        assert!(l.is_fused());
+        assert_eq!(l.planned_bytes(), planned, "admission == install");
+        assert_eq!(l.dense_weights(), want);
+        let m = store.metrics();
+        assert_eq!(m.cached_bytes, planned);
+        // Materialized stores price the same layer dense.
+        let c = model(&[64, 8], 41);
+        let dense_store =
+            ModelStore::from_container(c, StoreConfig::default());
+        assert_eq!(
+            dense_store.layer_planned_bytes("fc0"),
+            dense_store.layer_decoded_bytes("fc0")
+        );
+        assert!(!dense_store.get("fc0").unwrap().is_fused());
     }
 
     #[test]

@@ -22,6 +22,7 @@
 use crate::container::{CompressedLayer, Container};
 use crate::decoder::SequentialDecoder;
 use crate::gf2::BitVecF2;
+use crate::kernels::{assemble_exec, DecodeMode, ExecLayer};
 use crate::obs;
 use crate::sparse::{assemble, decode_plane, DecodedLayer};
 use crate::sync::{lock_unpoisoned, wait_unpoisoned};
@@ -94,7 +95,8 @@ impl DecodePool {
             return layers
                 .iter()
                 .zip(&planes)
-                .map(|(l, p)| assemble(l, p))
+                // lint: allow(no-unwrap) -- sync batch engine over caller-built layers: plane slots are sized from each layer's own plane list, the one shape `assemble` can reject
+                .map(|(l, p)| assemble(l, p).expect("planes match layer"))
                 .collect();
         }
 
@@ -175,7 +177,9 @@ impl DecodePool {
                                 }
                                 out.push((
                                     li,
-                                    assemble(layers[li], &planes[li]),
+                                    // lint: allow(no-unwrap) -- plane slots are sized from each layer's own plane list, the one shape `assemble` can reject
+                                    assemble(layers[li], &planes[li])
+                                        .expect("planes match layer"),
                                 ));
                             }
                             out
@@ -211,9 +215,11 @@ impl DecodePool {
 /// of a plane-less layer).
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// How a layer decode ended: the assembled layer, or the panic message
-/// of the job that died (`String`, so every waiter can share it).
-pub type DecodeOutcome = std::result::Result<Arc<DecodedLayer>, String>;
+/// How a layer decode ended: the assembled layer (in whichever
+/// representation the task's [`DecodeMode`] picked), or the failure
+/// message — a panic, or a shape mismatch the fallible assembly caught
+/// (`String`, so every waiter can share it).
+pub type DecodeOutcome = std::result::Result<Arc<ExecLayer>, String>;
 
 /// Completion callback invoked by the finishing worker with the
 /// outcome and the task's submit→completion wall time — the latency a
@@ -250,6 +256,9 @@ struct LayerTask {
     /// When the task was submitted; completion stamps the elapsed wall
     /// time into the callback.
     submitted: Instant,
+    /// Representation the final assembly produces (resolved per layer
+    /// geometry when `Auto`).
+    mode: DecodeMode,
     /// Trace id active on the submitting thread, so the decode span a
     /// readahead kicks off attributes to the request that planned it
     /// even though it completes on a worker thread.
@@ -267,9 +276,10 @@ struct LayerTask {
 }
 
 impl LayerTask {
-    fn new(on_done: Option<OnDone>) -> Self {
+    fn new(mode: DecodeMode, on_done: Option<OnDone>) -> Self {
         LayerTask {
             submitted: Instant::now(),
+            mode,
             trace: obs::current_trace(),
             layer: std::sync::OnceLock::new(),
             decoder: std::sync::OnceLock::new(),
@@ -350,10 +360,14 @@ impl LayerTask {
                 let mut slots = lock_unpoisoned(&self.planes);
                 slots.iter_mut().map(|p| p.take()).collect()
             };
-            planes.map(|planes| assemble(layer, &planes))
+            planes.map(|planes| assemble_exec(layer, &planes, self.mode))
         }));
         match assembled {
-            Ok(Some(layer)) => self.complete(Ok(Arc::new(layer))),
+            Ok(Some(Ok(layer))) => self.complete(Ok(Arc::new(layer))),
+            Ok(Some(Err(msg))) => self.complete(Err(format!(
+                "assembly of layer {:?} rejected: {msg}",
+                self.layer_name()
+            ))),
             Ok(None) => self.complete(Err(format!(
                 "assembly of layer {:?} missing a decoded plane",
                 self.layer_name()
@@ -410,7 +424,7 @@ pub struct DecodeHandle {
 impl DecodeHandle {
     /// Block until the layer is fully decoded and assembled. A decode
     /// job that panicked surfaces here as an error, not a hang.
-    pub fn wait(&self) -> Result<Arc<DecodedLayer>> {
+    pub fn wait(&self) -> Result<Arc<ExecLayer>> {
         self.task.wait().map_err(|e| anyhow!("{e}"))
     }
 
@@ -492,8 +506,9 @@ impl DecodeService {
     }
 
     /// Queue a decode; the handle's [`DecodeHandle::wait`] blocks until
-    /// all planes are decoded and assembled. Takes an `Arc` so callers
-    /// holding pre-parsed layers share them with the workers instead of
+    /// all planes are decoded and assembled (to the default
+    /// materialized representation). Takes an `Arc` so callers holding
+    /// pre-parsed layers share them with the workers instead of
     /// deep-copying plane streams on every miss.
     pub fn decode_async(&self, layer: Arc<CompressedLayer>) -> DecodeHandle {
         self.decode_async_then(layer, |_, _| {})
@@ -513,7 +528,10 @@ impl DecodeService {
     where
         F: FnOnce(DecodeOutcome, Duration) + Send + 'static,
     {
-        let task = Arc::new(LayerTask::new(Some(Box::new(on_done))));
+        let task = Arc::new(LayerTask::new(
+            DecodeMode::Materialized,
+            Some(Box::new(on_done)),
+        ));
         let n_planes = task.begin(layer);
         spawn_plane_jobs(&self.shared, &task, n_planes);
         DecodeHandle { task }
@@ -525,10 +543,13 @@ impl DecodeService {
     /// push, never the record parse — for a serving thread issuing
     /// readahead this keeps the overlap window intact even for very
     /// large layer records. A `parse` error (or panic) becomes the
-    /// task's outcome, exactly like a plane-decode failure.
+    /// task's outcome, exactly like a plane-decode failure. `mode`
+    /// picks the representation the final assembly produces (`Auto`
+    /// resolves per the parsed layer's geometry).
     pub fn decode_parse_then<P, F>(
         &self,
         parse: P,
+        mode: DecodeMode,
         on_done: F,
     ) -> DecodeHandle
     where
@@ -537,7 +558,7 @@ impl DecodeService {
             + 'static,
         F: FnOnce(DecodeOutcome, Duration) + Send + 'static,
     {
-        let task = Arc::new(LayerTask::new(Some(Box::new(on_done))));
+        let task = Arc::new(LayerTask::new(mode, Some(Box::new(on_done))));
         let t = task.clone();
         let shared = self.shared.clone();
         self.submit(Box::new(move || {
@@ -702,7 +723,8 @@ mod tests {
             let h = svc.decode_async(Arc::new(cl.clone()));
             let decoded = h.wait().unwrap();
             assert_eq!(
-                decoded.weights, serial.weights,
+                decoded.dense_weights(),
+                serial.weights,
                 "service workers={workers} diverged"
             );
             assert!(h.is_done());
@@ -722,7 +744,7 @@ mod tests {
         for (h, l) in handles.iter().zip(&layers) {
             let serial = DecodedLayer::from_compressed(l);
             assert_eq!(
-                h.wait().unwrap().weights,
+                h.wait().unwrap().dense_weights(),
                 serial.weights,
                 "{}",
                 l.name
@@ -739,7 +761,7 @@ mod tests {
         let h =
             svc.decode_async_then(Arc::new(cl.clone()), move |outcome, _| {
                 let decoded = outcome.expect("well-formed layer decodes");
-                assert_eq!(decoded.rows * decoded.cols, 8 * 32);
+                assert_eq!(decoded.rows() * decoded.cols(), 8 * 32);
                 f2.fetch_add(1, Ordering::SeqCst);
             });
         h.wait().unwrap();
@@ -783,7 +805,25 @@ mod tests {
         let ok = compress("fine", 8, 32, 51);
         let want = DecodedLayer::from_compressed(&ok);
         let got = svc.decode_async(Arc::new(ok)).wait().unwrap();
-        assert_eq!(got.weights, want.weights);
+        assert_eq!(got.dense_weights(), want.weights);
+    }
+
+    #[test]
+    fn fused_and_auto_modes_decode_through_the_service() {
+        // I8 layers resolve Auto → Fused; either way the assembled
+        // representation must stay bit-exact with the dense decode.
+        let cl = compress("fused", 8, 70, 52);
+        let want = DecodedLayer::from_compressed(&cl);
+        let svc = DecodeService::new(2);
+        for mode in [DecodeMode::Fused, DecodeMode::Auto] {
+            let l = Arc::new(cl.clone());
+            let got = svc
+                .decode_parse_then(move || Ok(l), mode, |_, _| {})
+                .wait()
+                .unwrap();
+            assert!(got.is_fused(), "{mode} should keep bit-planes resident");
+            assert_eq!(got.dense_weights(), want.weights, "{mode}");
+        }
     }
 
     #[test]
@@ -800,10 +840,11 @@ mod tests {
                 *pt.lock().unwrap() = Some(std::thread::current().id());
                 Ok(Arc::new(cl))
             },
+            DecodeMode::Materialized,
             |_, _| {},
         );
         let decoded = h.wait().unwrap();
-        assert_eq!(decoded.weights, want.weights);
+        assert_eq!(decoded.dense_weights(), want.weights);
         let ran_on = parse_thread.lock().unwrap().expect("parse ran");
         assert_ne!(
             ran_on, submitter,
@@ -816,13 +857,18 @@ mod tests {
     fn parse_stage_errors_and_panics_fail_the_handle() {
         let svc = DecodeService::new(1);
         let err = svc
-            .decode_parse_then(|| Err("record rotted".into()), |_, _| {})
+            .decode_parse_then(
+                || Err("record rotted".into()),
+                DecodeMode::Materialized,
+                |_, _| {},
+            )
             .wait()
             .unwrap_err();
         assert!(format!("{err}").contains("record rotted"));
         let err = svc
             .decode_parse_then(
                 || panic!("hostile bytes"),
+                DecodeMode::Materialized,
                 |_, _| {},
             )
             .wait()
@@ -832,7 +878,7 @@ mod tests {
         let ok = compress("after", 8, 32, 41);
         let want = DecodedLayer::from_compressed(&ok);
         let got = svc.decode_async(Arc::new(ok)).wait().unwrap();
-        assert_eq!(got.weights, want.weights);
+        assert_eq!(got.dense_weights(), want.weights);
     }
 
     #[test]
@@ -880,7 +926,7 @@ mod tests {
         let cl = compress("poisoned", 8, 32, 61);
         let want = DecodedLayer::from_compressed(&cl);
         let got = svc.decode_async(Arc::new(cl)).wait().unwrap();
-        assert_eq!(got.weights, want.weights);
+        assert_eq!(got.dense_weights(), want.weights);
     }
 
     #[test]
@@ -904,15 +950,19 @@ mod tests {
         let want = DecodedLayer::from_compressed(&cl);
         let h = svc.decode_async(Arc::new(cl));
         assert!(h.is_done(), "inline decode completes at submit time");
-        assert_eq!(h.wait().unwrap().weights, want.weights);
+        assert_eq!(h.wait().unwrap().dense_weights(), want.weights);
         // The parse-stage path also runs inline, including its
         // recursive plane-job submissions.
         let cl = compress("inline2", 6, 24, 63);
         let want = DecodedLayer::from_compressed(&cl);
         let got = svc
-            .decode_parse_then(move || Ok(Arc::new(cl)), |_, _| {})
+            .decode_parse_then(
+                move || Ok(Arc::new(cl)),
+                DecodeMode::Materialized,
+                |_, _| {},
+            )
             .wait()
             .unwrap();
-        assert_eq!(got.weights, want.weights);
+        assert_eq!(got.dense_weights(), want.weights);
     }
 }

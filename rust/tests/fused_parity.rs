@@ -1,0 +1,309 @@
+//! Fused vs materialized bit-exactness, end to end.
+//!
+//! The fused decode→GEMV path ([`f2f::kernels::FusedLayer`]) promises
+//! outputs **bit-identical** to the materialized dense path — same f32
+//! accumulation order, pruned terms included as `+0.0` — on every
+//! serving tier. This suite pins the contract down at three levels:
+//!
+//! 1. a property sweep over dtype {F32, I8} × mask density
+//!    {0, ~0.1, ~0.9, 1} × widths that are not multiples of 64 (the
+//!    row-padded tail words), comparing scalar, word, and fused decode
+//!    of the *same* compressed layer bit for bit;
+//! 2. a 2-shard in-process serve: `ShardRouter` over fused stores must
+//!    match the materialized router and the single-store baseline;
+//! 3. a 2-shard multi-process serve: real `f2f shard-worker` children
+//!    spawned with `--decode-mode fused`, shipping bit-plane frames
+//!    over the wire, routed by `ProcRouter` — same outputs again.
+
+use f2f::container::{
+    split_container, write_container_v2, CompressedLayer, Dtype,
+    ShardAssignment,
+};
+use f2f::coordinator::Backend;
+use f2f::decoder::SequentialDecoder;
+use f2f::gf2::BitVecF2;
+use f2f::kernels::{DecodeMode, FusedLayer, KernelKind};
+use f2f::models::{
+    compressed_mlp, LayerSpec, MlpConfig, SyntheticLayer, WeightGen,
+};
+use f2f::pipeline::{CompressionConfig, Compressor};
+use f2f::shard::ShardRouter;
+use f2f::sparse::{decode_plane_with, DecodedLayer};
+use f2f::store::{ModelBackend, ModelStore, StoreConfig};
+use std::sync::Arc;
+
+/// Compress one synthetic layer at the given dtype and pruning rate.
+fn compress(
+    rows: usize,
+    cols: usize,
+    dtype: Dtype,
+    sparsity: f64,
+    seed: u64,
+) -> CompressedLayer {
+    let spec = LayerSpec { name: "p".into(), rows, cols };
+    let layer = SyntheticLayer::generate(&spec, WeightGen::default(), seed);
+    let cfg = CompressionConfig {
+        sparsity,
+        n_s: 0,
+        seed,
+        ..Default::default()
+    };
+    Compressor::new(cfg).compress_layer(&layer, dtype).0
+}
+
+fn decoded_planes(cl: &CompressedLayer) -> Vec<BitVecF2> {
+    let dec = SequentialDecoder::random(cl.spec, cl.m_seed);
+    (0..cl.planes.len())
+        .map(|k| decode_plane_with(cl, &dec, k, KernelKind::Word))
+        .collect()
+}
+
+fn bits_of(ws: &[f32]) -> Vec<u32> {
+    ws.iter().map(|w| w.to_bits()).collect()
+}
+
+/// The property: for every dtype × mask density × odd width, the
+/// scalar kernel, the word kernel, and the fused path produce the same
+/// dense weights and the same GEMV output, bit for bit. Densities 0
+/// and 1 are forced by overwriting the mask post-compression (the
+/// encoder cannot express S = 1.0) — both paths must honor whatever
+/// mask the container carries, including the degenerate ones.
+#[test]
+fn fused_matches_materialized_across_dtypes_densities_and_widths() {
+    // (density target, sparsity to compress at, force-mask)
+    enum Force {
+        None,
+        AllPruned,
+        AllKept,
+    }
+    let densities: [(f64, Force); 4] = [
+        (0.0, Force::AllPruned),
+        (0.1, Force::None), // sparsity 0.9
+        (0.9, Force::None), // sparsity 0.1
+        (1.0, Force::AllKept),
+    ];
+    for dtype in [Dtype::F32, Dtype::I8] {
+        // Widths off the 64 grid exercise the row-padded tail word;
+        // 128 keeps one aligned case in the sweep.
+        for (rows, cols) in [(6, 37), (4, 70), (3, 128)] {
+            for (density, force) in &densities {
+                let sparsity = match force {
+                    Force::None => 1.0 - density,
+                    _ => 0.5, // any valid rate; mask is replaced below
+                };
+                let seed = (rows * 1000 + cols) as u64
+                    ^ ((*density * 10.0) as u64)
+                    ^ dtype.bits() as u64;
+                let mut cl = compress(rows, cols, dtype, sparsity, seed);
+                let n = cl.n_weights();
+                match force {
+                    Force::None => {}
+                    Force::AllPruned => cl.mask = BitVecF2::zeros(n),
+                    Force::AllKept => {
+                        let mut m = BitVecF2::zeros(n);
+                        for i in 0..n {
+                            m.set(i, true);
+                        }
+                        cl.mask = m;
+                    }
+                }
+                let tag = format!(
+                    "{dtype:?} {rows}x{cols} density {density}"
+                );
+
+                let scalar = DecodedLayer::from_compressed_with(
+                    &cl,
+                    KernelKind::Scalar,
+                );
+                let word = DecodedLayer::from_compressed_with(
+                    &cl,
+                    KernelKind::Word,
+                );
+                assert_eq!(
+                    bits_of(&scalar.weights),
+                    bits_of(&word.weights),
+                    "{tag}: scalar vs word kernels"
+                );
+
+                let fused =
+                    FusedLayer::from_planes(&cl, &decoded_planes(&cl))
+                        .expect("well-formed layer");
+                assert_eq!(
+                    bits_of(&fused.to_dense().weights),
+                    bits_of(&word.weights),
+                    "{tag}: fused to_dense vs materialized"
+                );
+
+                // GEMV parity, including buffer reuse: the same
+                // caller-owned buffer across calls (the batch-loop
+                // shape `gemv_into` exists for).
+                let x: Vec<f32> = (0..cols)
+                    .map(|j| ((j as f32) * 0.37 + seed as f32).sin())
+                    .collect();
+                let want = word.gemv(&x);
+                let got = fused.gemv(&x);
+                assert_eq!(
+                    bits_of(&got),
+                    bits_of(&want),
+                    "{tag}: fused gemv vs materialized"
+                );
+                let mut reused = vec![7.0f32; 3];
+                fused.gemv_into(&x, &mut reused);
+                assert_eq!(bits_of(&reused), bits_of(&want), "{tag}");
+                word.gemv_into(&x, &mut reused);
+                assert_eq!(bits_of(&reused), bits_of(&want), "{tag}");
+
+                // Degenerate densities really did take effect.
+                match force {
+                    Force::AllPruned => assert!(
+                        word.weights.iter().all(|w| *w == 0.0),
+                        "{tag}: all-pruned layer must decode to zeros"
+                    ),
+                    Force::AllKept => assert_eq!(
+                        (0..n).filter(|&i| cl.mask.get(i)).count(),
+                        n,
+                        "{tag}"
+                    ),
+                    Force::None => {}
+                }
+            }
+        }
+    }
+}
+
+/// Widths of the serving-level model: distinct sizes so by-bytes
+/// 2-shard balancing is non-trivial, wide enough that `Auto` prices
+/// I8 layers fused.
+const DIMS: [usize; 4] = [48, 32, 16, 8];
+
+fn model_bytes(seed: u64) -> Vec<u8> {
+    let (c, _) = compressed_mlp(&MlpConfig {
+        seed,
+        sparsity: 0.75,
+        ..MlpConfig::new(&DIMS)
+    });
+    write_container_v2(&c)
+}
+
+fn probes(n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            (0..DIMS[0])
+                .map(|j| ((i * j) as f32 * 0.1).sin())
+                .collect()
+        })
+        .collect()
+}
+
+fn single_store_outputs(
+    bytes: &[u8],
+    mode: DecodeMode,
+    xs: &[Vec<f32>],
+) -> Vec<Vec<f32>> {
+    let store = Arc::new(
+        ModelStore::open_bytes(
+            bytes.to_vec(),
+            StoreConfig { decode_mode: mode, ..StoreConfig::default() },
+        )
+        .unwrap(),
+    );
+    ModelBackend::sequential(store)
+        .unwrap()
+        .forward_batch(xs)
+        .unwrap()
+}
+
+#[test]
+fn two_shard_router_serves_fused_bit_exact() {
+    let bytes = model_bytes(41);
+    let xs = probes(5);
+    let want = single_store_outputs(&bytes, DecodeMode::Materialized, &xs);
+    // Single store first: every decode mode, one answer.
+    for mode in [DecodeMode::Fused, DecodeMode::Auto] {
+        assert_eq!(
+            single_store_outputs(&bytes, mode, &xs),
+            want,
+            "{mode:?} single store diverged from materialized"
+        );
+    }
+    let (map, shard_bytes) =
+        split_container(&bytes, 2, ShardAssignment::ByBytes).unwrap();
+    assert_eq!(shard_bytes.len(), 2);
+    for mode in
+        [DecodeMode::Materialized, DecodeMode::Fused, DecodeMode::Auto]
+    {
+        let mut router = ShardRouter::from_bytes(
+            &map.to_bytes(),
+            shard_bytes.clone(),
+            StoreConfig { decode_mode: mode, ..StoreConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(
+            router.forward_batch(&xs).unwrap(),
+            want,
+            "{mode:?} 2-shard router diverged from materialized"
+        );
+    }
+}
+
+/// The multi-process leg: real `f2f shard-worker` children spawned
+/// with `--decode-mode fused` serve bit-plane frames over the wire;
+/// the `ProcRouter` executes them without ever materializing dense
+/// f32 — and the outputs still match the materialized tier exactly.
+#[cfg(unix)]
+#[test]
+fn two_worker_procrouter_serves_fused_bit_exact() {
+    use f2f::container::ContainerIndex;
+    use f2f::ipc::{ProcRouter, Supervisor, WorkerSpec};
+    use std::path::PathBuf;
+
+    let bytes = model_bytes(42);
+    let xs = probes(4);
+    let want = single_store_outputs(&bytes, DecodeMode::Materialized, &xs);
+
+    let dir = std::env::temp_dir().join(format!(
+        "f2f-fused-parity-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let (map, shard_bytes) =
+        split_container(&bytes, 2, ShardAssignment::ByBytes).unwrap();
+    let binary = PathBuf::from(env!("CARGO_BIN_EXE_f2f"));
+    let index = ContainerIndex::parse(&bytes).unwrap();
+
+    for mode in [DecodeMode::Materialized, DecodeMode::Fused] {
+        let mut specs = Vec::new();
+        for (i, b) in shard_bytes.iter().enumerate() {
+            let shard_path = dir.join(format!("{mode}-shard{i}.f2f"));
+            std::fs::write(&shard_path, b).unwrap();
+            let mut spec = WorkerSpec::new(
+                &binary,
+                shard_path,
+                dir.join(format!("{mode}-shard{i}.sock")),
+            );
+            spec.decode_mode = mode;
+            specs.push(spec);
+        }
+        let sup = Supervisor::spawn(specs).expect("spawn workers");
+        let mut router =
+            ProcRouter::new(sup.clients().to_vec(), &map, &index)
+                .unwrap()
+                .with_supervisor(sup.clone());
+        assert_eq!(
+            router.forward_batch(&xs).unwrap(),
+            want,
+            "{mode:?} worker processes diverged from the \
+             materialized single store"
+        );
+        // A worker restarted mid-tier replays its decode mode, so the
+        // revived process serves the same representation bit-exactly.
+        sup.kill_worker(0).unwrap();
+        assert_eq!(
+            router.forward_batch(&xs).unwrap(),
+            want,
+            "{mode:?} serve across a worker restart"
+        );
+        sup.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

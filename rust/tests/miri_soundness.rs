@@ -12,7 +12,11 @@
 //!
 //! The regular test suite covers the same parsers through sockets and
 //! temp files; those tests are skipped under Miri (isolation forbids
-//! the syscalls), which is why this file exists.
+//! the syscalls), which is why this file exists. The [`word_kernels`]
+//! module additionally runs the bit-twiddling hot loops — the 64×64
+//! transpose, the block writer, and the fused tail-word decode — under
+//! the interpreter, where an out-of-range shift or a stray read past a
+//! row's tail word would surface as an error instead of silence.
 
 use f2f::container::{
     is_shard_map, is_v2, write_container_v2, Container, ContainerIndex,
@@ -71,6 +75,15 @@ mod wire_frames {
                 cols: 3,
                 weights: vec![0.5, -1.0, 0.0, 3.25, -0.125, 2.0],
             },
+            // Fused bit-plane frame: 2×70 I8 → 2 words/row, 8 planes.
+            Response::FusedLayer {
+                rows: 2,
+                cols: 70,
+                dtype: f2f::container::Dtype::I8,
+                scale: 0.125,
+                planes: (0..8 * 2 * 2).map(|i| i as u64 * 0x9E37).collect(),
+                mask: vec![u64::MAX; 2 * 2],
+            },
             Response::Ack { accepted: true },
             Response::Ack { accepted: false },
             Response::CostProfile { json: "{\"layers\":{}}".into() },
@@ -83,6 +96,33 @@ mod wire_frames {
             let buf = response_frame(resp);
             let got = read_response(&mut &buf[..]).expect("decode");
             assert_eq!(&got, resp);
+        }
+    }
+
+    #[test]
+    fn fused_frames_reject_truncation_and_corruption_in_memory() {
+        let buf = response_frame(&Response::FusedLayer {
+            rows: 1,
+            cols: 3,
+            dtype: f2f::container::Dtype::I8,
+            scale: 1.0,
+            planes: vec![0b101; 8],
+            mask: vec![0b111],
+        });
+        for cut in 0..buf.len() {
+            assert!(
+                read_response(&mut &buf[..cut]).is_err(),
+                "a {cut}-byte prefix of a fused frame must not parse"
+            );
+        }
+        // Single-byte corruption anywhere (geometry, dtype, words)
+        // must produce error-or-value, never a panic or UB — a lying
+        // rows/cols field in particular must not drive an allocation
+        // or a word read past the payload.
+        for i in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[i] ^= 0xFF;
+            let _ = read_response(&mut &bad[..]);
         }
     }
 
@@ -141,6 +181,154 @@ mod wire_frames {
         let mut lying_len = good;
         lying_len[7] = 40;
         assert!(read_frame(&mut &lying_len[..]).is_err());
+    }
+}
+
+/// The word-parallel kernel hot loops, pure in memory: shift networks
+/// and tail-word handling are exactly where UB (out-of-range shifts,
+/// reads past a padded row) likes to hide.
+mod word_kernels {
+    use f2f::container::Dtype;
+    use f2f::kernels::{transpose64, BlockWriter, FusedLayer};
+    use f2f::rng::Rng;
+
+    #[test]
+    fn transpose64_moves_every_bit_and_is_an_involution() {
+        let mut rng = Rng::new(11);
+        let orig: [u64; 64] = std::array::from_fn(|_| rng.next_u64());
+        let mut a = orig;
+        transpose64(&mut a);
+        for r in 0..64 {
+            for c in 0..64 {
+                assert_eq!(
+                    (a[c] >> r) & 1,
+                    (orig[r] >> c) & 1,
+                    "bit ({r},{c})"
+                );
+            }
+        }
+        transpose64(&mut a);
+        assert_eq!(a, orig, "transpose twice is identity");
+    }
+
+    #[test]
+    fn block_writer_matches_a_per_bit_reference_across_tails() {
+        let mut rng = Rng::new(12);
+        // Widths straddling the word boundaries (63/64/65) and the
+        // two-word spill (127/128), against short and unaligned
+        // target lengths.
+        for width in [1usize, 7, 63, 64, 65, 100, 127, 128] {
+            for n_bits in [1usize, 64, 70, 130] {
+                let blocks: Vec<u128> = (0..n_bits.div_ceil(width) + 1)
+                    .map(|_| {
+                        (rng.next_u64() as u128) << 64
+                            | rng.next_u64() as u128
+                    })
+                    .collect();
+                let mut w = BlockWriter::new(n_bits);
+                for &b in &blocks {
+                    w.push(b, width);
+                }
+                let v = w.finish();
+                let mut cursor = 0usize;
+                let mut expected = vec![false; n_bits];
+                for &b in &blocks {
+                    for i in 0..width {
+                        if cursor < n_bits {
+                            expected[cursor] = (b >> i) & 1 == 1;
+                            cursor += 1;
+                        }
+                    }
+                }
+                for (i, want) in expected.iter().enumerate() {
+                    assert_eq!(
+                        v.get(i),
+                        *want,
+                        "width={width} n_bits={n_bits} bit {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_tail_words_decode_gemv_and_ignore_hostile_padding() {
+        // 3×70 I8: 2 words/row, the second covering only bits 0..5.
+        // Bits 6..63 of every tail word are garbage the decode must
+        // never read — the involution of the row-padded layout.
+        let (rows, cols, n_w) = (3usize, 70usize, 8usize);
+        let wpr = cols.div_ceil(64);
+        let mut rng = Rng::new(13);
+        let planes: Vec<u64> =
+            (0..n_w * rows * wpr).map(|_| rng.next_u64()).collect();
+        let mask: Vec<u64> =
+            (0..rows * wpr).map(|_| rng.next_u64()).collect();
+        let scale = -0.25f32; // negative: pruned must be +0.0, not −0.0
+        let fused = FusedLayer::from_raw(
+            rows,
+            cols,
+            Dtype::I8,
+            scale,
+            planes.clone(),
+            mask.clone(),
+        )
+        .expect("word counts match the geometry");
+
+        // Independent per-bit reference straight off the raw words.
+        let stride = rows * wpr;
+        let bit = |words: &[u64], base: usize, c: usize| {
+            (words[base + c / 64] >> (c % 64)) & 1
+        };
+        let mut want = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let row = r * wpr;
+                if bit(&mask, row, c) == 1 {
+                    let mut byte = 0u8;
+                    for k in 0..n_w {
+                        byte |= (bit(&planes, k * stride + row, c)
+                            as u8)
+                            << (n_w - 1 - k);
+                    }
+                    want.push(byte as i8 as f32 * scale);
+                } else {
+                    want.push(0.0);
+                }
+            }
+        }
+        let got = fused.to_dense();
+        assert_eq!((got.rows, got.cols), (rows, cols));
+        let bits = |ws: &[f32]| {
+            ws.iter().map(|w| w.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&got.weights), bits(&want));
+
+        // GEMV parity with the dense reference, same op order.
+        let x: Vec<f32> =
+            (0..cols).map(|j| (j as f32).sin()).collect();
+        assert_eq!(bits(&fused.gemv(&x)), bits(&got.gemv(&x)));
+
+        // Stray tail-word bits really are dead: flipping them must
+        // change nothing.
+        let mut hostile_planes = planes;
+        let mut hostile_mask = mask;
+        for r in 0..rows {
+            for k in 0..n_w {
+                hostile_planes[k * stride + r * wpr + 1] ^=
+                    !0u64 << (cols - 64);
+            }
+            hostile_mask[r * wpr + 1] ^= !0u64 << (cols - 64);
+        }
+        let hostile = FusedLayer::from_raw(
+            rows,
+            cols,
+            Dtype::I8,
+            scale,
+            hostile_planes,
+            hostile_mask,
+        )
+        .expect("same geometry");
+        assert_eq!(bits(&hostile.to_dense().weights), bits(&want));
     }
 }
 

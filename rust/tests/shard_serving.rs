@@ -68,6 +68,7 @@ fn sharded_round_trip_is_bit_exact_for_1_2_4_shards() {
                 StoreConfig {
                     cache_budget_bytes: usize::MAX,
                     decode_workers: 2,
+                    ..StoreConfig::default()
                 },
             )
             .unwrap()
@@ -116,6 +117,7 @@ fn sharded_auto_readahead_is_bit_exact_for_1_2_4_shards() {
                 StoreConfig {
                     cache_budget_bytes: usize::MAX,
                     decode_workers: 2,
+                    ..StoreConfig::default()
                 },
             )
             .unwrap()
@@ -240,6 +242,7 @@ fn sharded_server_under_tight_budgets_with_eviction() {
                 StoreConfig {
                     cache_budget_bytes: 2048,
                     decode_workers: 2,
+                    ..StoreConfig::default()
                 },
             )
             .unwrap();

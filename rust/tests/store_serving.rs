@@ -57,6 +57,7 @@ fn whole_model_serves_under_tight_budget_with_eviction() {
             StoreConfig {
                 cache_budget_bytes: budget,
                 decode_workers: 2,
+                ..StoreConfig::default()
             },
         )
         .unwrap(),
@@ -161,7 +162,11 @@ fn sequential_scan_thrash_is_bounded_by_readahead_pinning() {
 
     let store = Arc::new(ModelStore::from_container(
         model.clone(),
-        StoreConfig { cache_budget_bytes: budget, decode_workers: 2 },
+        StoreConfig {
+            cache_budget_bytes: budget,
+            decode_workers: 2,
+            ..StoreConfig::default()
+        },
     ));
     let mut backend = ModelBackend::sequential(store.clone())
         .unwrap()
@@ -226,6 +231,7 @@ fn readahead_auto_serves_bit_exact_vs_fixed_and_off() {
                 StoreConfig {
                     cache_budget_bytes: usize::MAX,
                     decode_workers: 2,
+                    ..StoreConfig::default()
                 },
             )
             .unwrap(),
@@ -274,7 +280,11 @@ fn readahead_auto_respects_tight_budgets() {
     let store = Arc::new(
         ModelStore::open_bytes(
             write_container_v2(&model),
-            StoreConfig { cache_budget_bytes: budget, decode_workers: 2 },
+            StoreConfig {
+                cache_budget_bytes: budget,
+                decode_workers: 2,
+                ..StoreConfig::default()
+            },
         )
         .unwrap(),
     );
