@@ -8,16 +8,34 @@
 //!
 //! ```text
 //! cargo run --release --example compress_transformer [weights_per_layer]
+//! cargo run --release --example compress_transformer -- --serve
 //! ```
+//!
+//! `--serve` switches to the zoo demo leg: compress the canonical
+//! Transformer table *with kind records* (a v3 container carrying its
+//! attention + FFN chain) next to a companion ResNet ladder, serve
+//! both tenants from one shared-budget registry, and print per-model
+//! observed cost tables.
 
 use f2f::container::Dtype;
-use f2f::models::{transformer_layers, SyntheticLayer, WeightGen};
+use f2f::coordinator::Backend;
+use f2f::models::{
+    resnet_chain, tiny_resnet_layers, tiny_transformer_layers,
+    transformer_chain, transformer_layers, LayerSpec, SyntheticLayer,
+    WeightGen,
+};
 use f2f::pipeline::{CompressionConfig, Compressor, LayerReport};
 use f2f::pruning::PruneMethod;
+use f2f::registry::{ModelRegistry, ZooModel};
 use f2f::report::Table;
 use f2f::sparse::DecodedLayer;
+use f2f::store::{ReadaheadPolicy, StoreConfig};
 
 fn main() {
+    if std::env::args().any(|a| a == "--serve") {
+        serve_zoo_demo();
+        return;
+    }
     let max_w: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -95,4 +113,123 @@ fn main() {
         }
     }
     println!("all unpruned FP32 weights bit-exact after container round-trip");
+}
+
+/// Compress one tenant's layer table with its chain into a v3
+/// container and load it back as a zoo tenant — the chain rides *in*
+/// the container, not beside it.
+fn compress_tenant(
+    id: &str,
+    specs: &[LayerSpec],
+    chain: f2f::container::ChainSpec,
+    cfg: CompressionConfig,
+) -> ZooModel {
+    let layers: Vec<SyntheticLayer> = specs
+        .iter()
+        .map(|s| SyntheticLayer::generate(s, WeightGen::default(), 0xAAA))
+        .collect();
+    let (container, reports) =
+        Compressor::new(cfg).compress_model(&layers, Dtype::I8);
+    let agg = LayerReport::aggregate(id, &reports);
+    println!(
+        "{id}: {} layers compressed, E={:.2}% mem_reduction={:.2}%",
+        specs.len(),
+        agg.efficiency,
+        agg.memory_reduction
+    );
+    let bytes = f2f::container::write_container_v3(&container, &[chain]);
+    ZooModel::from_bytes(id, &bytes).expect("v3 container round-trip")
+}
+
+/// The `--serve` demo: a Transformer (attention + FFN kind records)
+/// and a ResNet ladder (conv-as-GEMM + downsample residuals) served
+/// concurrently from one registry under a shared byte budget small
+/// enough that a burst on one tenant evicts the other's cold layers.
+fn serve_zoo_demo() {
+    let cfg = CompressionConfig {
+        sparsity: 0.9,
+        n_s: 1,
+        method: PruneMethod::Magnitude,
+        beam: Some(8),
+        ..Default::default()
+    };
+    let tx_specs = tiny_transformer_layers(2, 64, 256);
+    let tx_chain =
+        transformer_chain("transformer", &tx_specs).expect("chain");
+    let rn_specs = tiny_resnet_layers(&[(8, 32), (16, 64)]);
+    let rn_chain = resnet_chain("resnet50", &rn_specs).expect("chain");
+    let decoded_bytes: usize = tx_specs
+        .iter()
+        .chain(&rn_specs)
+        .map(|s| s.n_weights() * 4)
+        .sum();
+
+    let zoo = vec![
+        compress_tenant("transformer", &tx_specs, tx_chain, cfg),
+        compress_tenant("resnet50", &rn_specs, rn_chain, cfg),
+    ];
+
+    // A budget below the combined decoded size: serving one tenant
+    // must push the other's cold layers out, never a pinned one.
+    let budget = decoded_bytes * 6 / 10;
+    let mut registry = ModelRegistry::new(
+        &zoo,
+        StoreConfig {
+            cache_budget_bytes: budget,
+            ..Default::default()
+        },
+    )
+    .expect("registry")
+    .with_readahead(ReadaheadPolicy::layers(1));
+    println!(
+        "zoo: {} models, combined decoded ~{} KiB, shared budget {} KiB",
+        registry.n_models(),
+        decoded_bytes >> 10,
+        budget >> 10
+    );
+
+    for round in 0..3usize {
+        for id in ["transformer", "resnet50"] {
+            let dim = registry.chain(id).expect("chain").input_dim();
+            let xs: Vec<Vec<f32>> = (0..4usize)
+                .map(|i| {
+                    (0..dim)
+                        .map(|j| {
+                            (((i * dim + j + round) as f32) * 0.37).sin()
+                        })
+                        .collect()
+                })
+                .collect();
+            let ys = registry
+                .forward_model_batch(id, &xs)
+                .expect("zoo forward");
+            assert!(
+                ys.iter().flatten().all(|v| v.is_finite()),
+                "{id}: non-finite output"
+            );
+        }
+    }
+    registry.wait_for_idle();
+
+    if let Some(m) = registry.store_metrics() {
+        println!(
+            "shared store: decodes={} hits={} evictions={} \
+             redundant_decodes={}",
+            m.decodes, m.hits, m.evictions, m.redundant_decodes
+        );
+    }
+    for id in registry.model_ids() {
+        let mut table = Table::new(
+            &format!("{id}: per-layer observed costs"),
+            &["layer", "gemv_us_per_item", "samples"],
+        );
+        for (name, c) in registry.model_costs(&id) {
+            table.row(vec![
+                name,
+                format!("{:.2}", c.gemv_ns / 1e3),
+                c.gemv_samples.to_string(),
+            ]);
+        }
+        print!("{}", table.render());
+    }
 }

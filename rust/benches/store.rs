@@ -12,7 +12,11 @@
 //! the unpolled serve), the scalar vs word-parallel decode kernels
 //! (`decode_kernel_scalar` / `decode_kernel_word`), and the fused
 //! bit-plane serve against the materialized baseline
-//! (`serve_cold_fused` / `serve_warm_fused`, `speedup_vs_materialized`).
+//! (`serve_cold_fused` / `serve_warm_fused`, `speedup_vs_materialized`),
+//! and the model zoo: N tenants interleaved through one shared-budget
+//! `ModelRegistry` (`serve_zoo_{2,4}_models`) with the shared LRU
+//! pitted against the same total bytes statically partitioned per
+//! tenant (`hit_rate_shared_vs_partitioned`).
 //! Emits machine-readable `BENCH_store.json` next to the human output
 //! to keep the perf trajectory moving.
 
@@ -652,6 +656,174 @@ fn main() {
         m.decodes, m.evictions, m.prefetches, m.readahead_skips,
         m.redundant_decodes
     );
+
+    // --- model zoo: N tenants behind one shared-budget registry ---
+    // Each tenant is a 3-layer 128-wide MLP; the interleaved load is
+    // skewed (tenant 0 takes three requests per round, the rest one)
+    // and the shared budget holds half the combined decoded bytes, so
+    // every round works the cross-model LRU. The hit-rate series pins
+    // the zoo's core claim: one shared budget beats the same total
+    // bytes statically partitioned per tenant, because the shared LRU
+    // reassigns the cold tenants' slack to the hot one.
+    {
+        use f2f::registry::{ModelRegistry, ZooModel};
+
+        const ZOO_LAYERS: usize = 3;
+        const ZOO_WIDTH: usize = 128;
+        let build_zoo = |n: usize| -> Vec<ZooModel> {
+            (0..n)
+                .map(|i| {
+                    let (container, _) = compressed_mlp(&MlpConfig {
+                        seed: 100 + i as u64,
+                        name_prefix: format!("t{i}/fc"),
+                        ..MlpConfig::uniform(ZOO_LAYERS, ZOO_WIDTH)
+                    });
+                    ZooModel::new(format!("t{i}"), container)
+                })
+                .collect()
+        };
+        // Per round: tenant 0 three times, every other tenant once.
+        let schedule = |ids: &[String]| -> Vec<String> {
+            let mut seq = Vec::new();
+            for _ in 0..6 {
+                for _ in 0..3 {
+                    seq.push(ids[0].clone());
+                }
+                for id in &ids[1..] {
+                    seq.push(id.clone());
+                }
+            }
+            seq
+        };
+        let zx: Vec<Vec<f32>> = (0..2)
+            .map(|i| {
+                (0..ZOO_WIDTH)
+                    .map(|j| ((i * ZOO_WIDTH + j) as f32 * 0.01).sin())
+                    .collect()
+            })
+            .collect();
+        let per_tenant_bytes = ZOO_LAYERS * ZOO_WIDTH * ZOO_WIDTH * 4;
+
+        for n_models in [2usize, 4] {
+            let zoo = build_zoo(n_models);
+            let ids: Vec<String> =
+                zoo.iter().map(|m| m.id.clone()).collect();
+            let seq = schedule(&ids);
+            let byte_budget = per_tenant_bytes * n_models / 2;
+            let r = bench_with_result(
+                &format!(
+                    "serve zoo ({n_models} tenants, shared budget, \
+                     skewed interleave)"
+                ),
+                1,
+                budget,
+                12,
+                || {
+                    let mut reg = ModelRegistry::new(
+                        &zoo,
+                        StoreConfig {
+                            cache_budget_bytes: byte_budget,
+                            ..StoreConfig::default()
+                        },
+                    )
+                    .expect("registry")
+                    .with_readahead(ReadaheadPolicy::layers(1));
+                    for id in &seq {
+                        black_box(
+                            reg.forward_model_batch(id, black_box(&zx))
+                                .expect("zoo serve"),
+                        );
+                    }
+                    reg.wait_for_idle();
+                },
+            );
+            json.add(&format!("serve_zoo_{n_models}_models"), &r);
+        }
+
+        // Hit rate under the same workload and the same total bytes:
+        // one shared-budget registry vs one registry per tenant, each
+        // capped at its static 1/N slice. A slice below a tenant's
+        // full chain thrashes LRU on the cyclic layer walk, so the
+        // partitioned rate can bottom out near zero — the ratio's
+        // denominator is floored to keep the metric finite.
+        let n_models = 4usize;
+        let zoo = build_zoo(n_models);
+        let ids: Vec<String> = zoo.iter().map(|m| m.id.clone()).collect();
+        let seq = schedule(&ids);
+        let total_budget = per_tenant_bytes * n_models / 2;
+
+        let shared_rate = {
+            let mut reg = ModelRegistry::new(
+                &zoo,
+                StoreConfig {
+                    cache_budget_bytes: total_budget,
+                    ..StoreConfig::default()
+                },
+            )
+            .expect("registry")
+            .with_readahead(ReadaheadPolicy::layers(1));
+            for id in &seq {
+                reg.forward_model_batch(id, &zx).expect("zoo serve");
+            }
+            reg.wait_for_idle();
+            let m = reg.store_metrics().expect("zoo metrics");
+            m.hits as f64 / (m.hits + m.misses).max(1) as f64
+        };
+        let partitioned_rate = {
+            let mut regs: Vec<ModelRegistry> = zoo
+                .iter()
+                .map(|m| {
+                    ModelRegistry::new(
+                        std::slice::from_ref(m),
+                        StoreConfig {
+                            cache_budget_bytes: total_budget / n_models,
+                            ..StoreConfig::default()
+                        },
+                    )
+                    .expect("solo registry")
+                    .with_readahead(ReadaheadPolicy::layers(1))
+                })
+                .collect();
+            for id in &seq {
+                let i = ids
+                    .iter()
+                    .position(|x| x == id)
+                    .expect("known tenant");
+                regs[i]
+                    .forward_model_batch(id, &zx)
+                    .expect("solo serve");
+            }
+            let (mut hits, mut misses) = (0u64, 0u64);
+            for reg in &regs {
+                reg.wait_for_idle();
+                let m = reg.store_metrics().expect("solo metrics");
+                hits += m.hits;
+                misses += m.misses;
+            }
+            hits as f64 / (hits + misses).max(1) as f64
+        };
+        json.metric(
+            "serve_zoo_4_models",
+            "hit_rate_shared",
+            shared_rate,
+        );
+        json.metric(
+            "serve_zoo_4_models",
+            "hit_rate_partitioned",
+            partitioned_rate,
+        );
+        json.metric(
+            "serve_zoo_4_models",
+            "hit_rate_shared_vs_partitioned",
+            shared_rate / partitioned_rate.max(0.01),
+        );
+        println!(
+            "  -> zoo hit rate: shared {:.1}% vs partitioned {:.1}% \
+             (same total bytes, skewed tenants)",
+            shared_rate * 100.0,
+            partitioned_rate * 100.0
+        );
+    }
 
     json.write("BENCH_store.json").expect("write BENCH_store.json");
     println!("wrote BENCH_store.json");

@@ -12,7 +12,7 @@ use super::lexer::{lex, Comment, Tok, Token};
 /// Directories (relative to `rust/src/`) on the serving path, where a
 /// panic is an availability bug: one poisoned mutex or unwound worker
 /// must degrade to an error response, never take the process down.
-const SERVING_DIRS: [&str; 7] = [
+const SERVING_DIRS: [&str; 8] = [
     "ipc/",
     "container/",
     "store/",
@@ -20,6 +20,7 @@ const SERVING_DIRS: [&str; 7] = [
     "coordinator/",
     "sparse/",
     "kernels/",
+    "registry/",
 ];
 
 /// Files that parse adversarial bytes (wire frames, container records,

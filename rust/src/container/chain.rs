@@ -1,0 +1,586 @@
+//! Layer-kind chains: the executable structure of a container.
+//!
+//! v1/v2 containers carry only a flat layer list; every serving tier
+//! walked it as an implicit uniform GEMV+ReLU ladder. Real models are
+//! not ladders: a Transformer block is four attention matmuls feeding
+//! a residual add and a two-matmul FFN, a ResNet bottleneck is three
+//! convs (as GEMM over im2col patches) plus a skip link. A
+//! [`ChainSpec`] records that structure *next to the weights*, so a
+//! compressed container round-trips into something executable instead
+//! of a naming convention.
+//!
+//! The container **v3** layout (same `F2F2` magic, version field 3)
+//! inserts a chains section between the layer index and the records:
+//!
+//! ```text
+//! "F2F2" | u32 version=3 | u32 n_layers
+//! n_layers × <index entry>                    // unchanged from v2
+//! u32 n_chains
+//! n_chains × { model_id, u32 n_steps, n_steps × <step> }
+//! n_layers × <layer record>                   // unchanged from v2
+//! ```
+//!
+//! Each step names the layers it consumes ([`StepKind`]), where its
+//! input comes from ([`StepInput`]) and an optional residual source
+//! ([`Residual`]). Step execution order is fixed: matmul(s), then the
+//! residual add, then the activation — the post-add ReLU of ResNet
+//! and the pre-LN-style `x + f(x)` of Transformer sublayers both fit.
+//! Old v2 containers keep parsing (no chains section → callers treat
+//! the layer list as one implicit [`ChainSpec::uniform`] gemv+relu
+//! chain, bit-identical to the historic behavior).
+
+use super::serde::{Reader, Writer};
+use anyhow::{bail, Result};
+
+/// Sanity caps: corrupt counts must be rejected before allocation.
+const MAX_CHAINS: usize = 4096;
+const MAX_STEPS: usize = 1 << 20;
+
+const INPUT_PREV: u32 = 0xFFFF_FFFF;
+const INPUT_CHAIN: u32 = 0xFFFF_FFFE;
+const RESID_NONE: u32 = 0xFFFF_FFFF;
+const RESID_CHAIN: u32 = 0xFFFF_FFFE;
+const RESID_OWN_INPUT: u32 = 0xFFFF_FFFD;
+/// Step indices at or above the sentinel range are unrepresentable.
+const MAX_STEP_REF: u32 = 0xFFFF_FFF0;
+
+/// Elementwise nonlinearity applied after a step's matmul + residual.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    /// tanh-approximation GELU (Hendrycks & Gimpel 2016).
+    Gelu,
+}
+
+impl Activation {
+    fn code(self) -> u8 {
+        match self {
+            Activation::None => 0,
+            Activation::Relu => 1,
+            Activation::Gelu => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Activation> {
+        match c {
+            0 => Ok(Activation::None),
+            1 => Ok(Activation::Relu),
+            2 => Ok(Activation::Gelu),
+            c => bail!("unknown activation code {c}"),
+        }
+    }
+
+    /// Apply in place.
+    pub fn apply(self, xs: &mut [f32]) {
+        match self {
+            Activation::None => {}
+            Activation::Relu => {
+                for v in xs.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            Activation::Gelu => {
+                for v in xs.iter_mut() {
+                    let x = *v;
+                    let c = 0.797_884_56_f32; // sqrt(2/π)
+                    let t = (c * (x + 0.044_715 * x * x * x)).tanh();
+                    *v = 0.5 * x * (1.0 + t);
+                }
+            }
+        }
+    }
+}
+
+/// Where a step reads its input vector from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepInput {
+    /// The previous step's output (the chain input for step 0).
+    Prev,
+    /// The chain's input vector.
+    ChainInput,
+    /// An earlier step's output (strictly `< `this step's index).
+    Step(usize),
+}
+
+/// Where a step's residual add reads from (added to the matmul output
+/// before the activation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residual {
+    None,
+    /// The chain's input vector.
+    ChainInput,
+    /// This step's own (resolved) input — the classic `x + f(x)`.
+    OwnInput,
+    /// An earlier step's output.
+    Step(usize),
+}
+
+/// What one step computes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepKind {
+    /// One dense matmul: `y = W·x`.
+    Gemv { layer: String },
+    /// One attention sublayer at sequence length 1: all four
+    /// projections run (`q = Wq·x`, `k = Wk·x`, `v = Wv·x`), the
+    /// single attention score softmaxes to 1, and `y = Wo·v`.
+    Attention { q: String, k: String, v: String, output: String },
+    /// Conv-as-GEMM over an im2col patch: the layer is
+    /// `out_ch × (kh·kw·in_ch)`; an incoming `in_ch` channel vector
+    /// is tiled `kh·kw` times (1×1-feature-map im2col semantics) to
+    /// form the patch.
+    Conv {
+        layer: String,
+        kh: usize,
+        kw: usize,
+        in_ch: usize,
+        out_ch: usize,
+    },
+}
+
+impl StepKind {
+    fn tag(&self) -> u8 {
+        match self {
+            StepKind::Gemv { .. } => 0,
+            StepKind::Attention { .. } => 1,
+            StepKind::Conv { .. } => 2,
+        }
+    }
+
+    /// Names of the layers this step fetches, in execution order.
+    pub fn layer_names(&self) -> Vec<&str> {
+        match self {
+            StepKind::Gemv { layer } => vec![layer],
+            StepKind::Attention { q, k, v, output } => {
+                vec![q, k, v, output]
+            }
+            StepKind::Conv { layer, .. } => vec![layer],
+        }
+    }
+}
+
+/// One step of an executable chain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainStep {
+    pub kind: StepKind,
+    pub input: StepInput,
+    pub residual: Residual,
+    pub activation: Activation,
+}
+
+impl ChainStep {
+    /// A plain `y = relu-or-not(W·x)` step on the running activation.
+    pub fn gemv(layer: impl Into<String>, activation: Activation) -> Self {
+        ChainStep {
+            kind: StepKind::Gemv { layer: layer.into() },
+            input: StepInput::Prev,
+            residual: Residual::None,
+            activation,
+        }
+    }
+}
+
+/// The executable structure of one model in a container: an ordered
+/// step list over the container's layers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainSpec {
+    /// Model id this chain belongs to (empty in single-model
+    /// containers; never contains `"::"` — the registry's name
+    /// separator).
+    pub model: String,
+    pub steps: Vec<ChainStep>,
+}
+
+impl ChainSpec {
+    /// The implicit chain of a chainless (v1/v2) container: one Gemv
+    /// step per layer, ReLU between layers, none after the last —
+    /// exactly the ladder the historic serving path executed.
+    pub fn uniform<S: AsRef<str>>(
+        model: impl Into<String>,
+        layers: &[S],
+    ) -> ChainSpec {
+        let last = layers.len().saturating_sub(1);
+        let steps = layers
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                ChainStep::gemv(
+                    name.as_ref(),
+                    if i < last {
+                        Activation::Relu
+                    } else {
+                        Activation::None
+                    },
+                )
+            })
+            .collect();
+        ChainSpec { model: model.into(), steps }
+    }
+
+    /// Every layer name the chain fetches, in execution order
+    /// (attention steps contribute four).
+    pub fn layer_names(&self) -> Vec<&str> {
+        self.steps
+            .iter()
+            .flat_map(|s| s.kind.layer_names())
+            .collect()
+    }
+
+    /// Structural validation: every referenced layer exists (per
+    /// `exists`), every step/residual reference points strictly
+    /// earlier, and the chain is non-empty.
+    pub fn validate(&self, exists: impl Fn(&str) -> bool) -> Result<()> {
+        if self.steps.is_empty() {
+            bail!("chain {:?} has no steps", self.model);
+        }
+        for (i, step) in self.steps.iter().enumerate() {
+            for name in step.kind.layer_names() {
+                if !exists(name) {
+                    bail!(
+                        "chain {:?} step {i}: layer {name:?} is not in \
+                         the container",
+                        self.model
+                    );
+                }
+            }
+            if let StepInput::Step(s) = step.input {
+                if s >= i {
+                    bail!(
+                        "chain {:?} step {i}: input references step {s} \
+                         (must be strictly earlier)",
+                        self.model
+                    );
+                }
+            }
+            if let Residual::Step(s) = step.residual {
+                if s >= i {
+                    bail!(
+                        "chain {:?} step {i}: residual references step \
+                         {s} (must be strictly earlier)",
+                        self.model
+                    );
+                }
+            }
+            if let StepKind::Conv { layer: _, kh, kw, in_ch, out_ch } =
+                &step.kind
+            {
+                let patch = kh
+                    .checked_mul(*kw)
+                    .and_then(|k| k.checked_mul(*in_ch));
+                if *kh == 0
+                    || *kw == 0
+                    || *in_ch == 0
+                    || *out_ch == 0
+                    || patch.is_none()
+                {
+                    bail!(
+                        "chain {:?} step {i}: degenerate conv geometry \
+                         {kh}x{kw}x{in_ch}->{out_ch}",
+                        self.model
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn write_input(w: &mut Writer, input: StepInput) {
+    w.u32(match input {
+        StepInput::Prev => INPUT_PREV,
+        StepInput::ChainInput => INPUT_CHAIN,
+        StepInput::Step(s) => s as u32,
+    });
+}
+
+fn read_input(r: &mut Reader) -> Result<StepInput> {
+    match r.u32()? {
+        INPUT_PREV => Ok(StepInput::Prev),
+        INPUT_CHAIN => Ok(StepInput::ChainInput),
+        s if s < MAX_STEP_REF => Ok(StepInput::Step(s as usize)),
+        s => bail!("reserved step-input sentinel {s:#010x}"),
+    }
+}
+
+fn write_residual(w: &mut Writer, residual: Residual) {
+    w.u32(match residual {
+        Residual::None => RESID_NONE,
+        Residual::ChainInput => RESID_CHAIN,
+        Residual::OwnInput => RESID_OWN_INPUT,
+        Residual::Step(s) => s as u32,
+    });
+}
+
+fn read_residual(r: &mut Reader) -> Result<Residual> {
+    match r.u32()? {
+        RESID_NONE => Ok(Residual::None),
+        RESID_CHAIN => Ok(Residual::ChainInput),
+        RESID_OWN_INPUT => Ok(Residual::OwnInput),
+        s if s < MAX_STEP_REF => Ok(Residual::Step(s as usize)),
+        s => bail!("reserved residual sentinel {s:#010x}"),
+    }
+}
+
+fn read_name(r: &mut Reader, what: &str) -> Result<String> {
+    match String::from_utf8(r.bytes()?) {
+        Ok(s) => Ok(s),
+        Err(_) => bail!("chain {what} not utf8"),
+    }
+}
+
+/// Serialize the chains section (shared by [`super::write_container_v3`]).
+pub(super) fn write_chains(w: &mut Writer, chains: &[ChainSpec]) {
+    w.u32(chains.len() as u32);
+    for chain in chains {
+        w.bytes(chain.model.as_bytes());
+        w.u32(chain.steps.len() as u32);
+        for step in &chain.steps {
+            w.u8(step.kind.tag());
+            write_input(w, step.input);
+            write_residual(w, step.residual);
+            w.u8(step.activation.code());
+            match &step.kind {
+                StepKind::Gemv { layer } => {
+                    w.bytes(layer.as_bytes());
+                }
+                StepKind::Attention { q, k, v, output } => {
+                    w.bytes(q.as_bytes());
+                    w.bytes(k.as_bytes());
+                    w.bytes(v.as_bytes());
+                    w.bytes(output.as_bytes());
+                }
+                StepKind::Conv { layer, kh, kw, in_ch, out_ch } => {
+                    w.bytes(layer.as_bytes());
+                    w.u32(*kh as u32);
+                    w.u32(*kw as u32);
+                    w.u32(*in_ch as u32);
+                    w.u32(*out_ch as u32);
+                }
+            }
+        }
+    }
+}
+
+/// Parse the chains section. Errors (never panics) on truncation,
+/// absurd counts, unknown tags/codes and reserved sentinels; callers
+/// run [`ChainSpec::validate`] against the layer index afterwards.
+pub(super) fn read_chains(r: &mut Reader) -> Result<Vec<ChainSpec>> {
+    let n_chains = r.u32()? as usize;
+    if n_chains > MAX_CHAINS {
+        bail!("chain count {n_chains} exceeds the {MAX_CHAINS} cap");
+    }
+    let mut chains = Vec::with_capacity(n_chains.min(1024));
+    for ci in 0..n_chains {
+        let model = read_name(r, "model id")?;
+        let n_steps = r.u32()? as usize;
+        if n_steps > MAX_STEPS {
+            bail!(
+                "chain {ci} ({model}): step count {n_steps} exceeds \
+                 the {MAX_STEPS} cap"
+            );
+        }
+        let mut steps = Vec::with_capacity(n_steps.min(1024));
+        for _ in 0..n_steps {
+            let tag = r.u8()?;
+            let input = read_input(r)?;
+            let residual = read_residual(r)?;
+            let activation = Activation::from_code(r.u8()?)?;
+            let kind = match tag {
+                0 => StepKind::Gemv { layer: read_name(r, "layer")? },
+                1 => StepKind::Attention {
+                    q: read_name(r, "q layer")?,
+                    k: read_name(r, "k layer")?,
+                    v: read_name(r, "v layer")?,
+                    output: read_name(r, "output layer")?,
+                },
+                2 => StepKind::Conv {
+                    layer: read_name(r, "layer")?,
+                    kh: r.u32()? as usize,
+                    kw: r.u32()? as usize,
+                    in_ch: r.u32()? as usize,
+                    out_ch: r.u32()? as usize,
+                },
+                t => bail!("unknown chain step tag {t}"),
+            };
+            steps.push(ChainStep { kind, input, residual, activation });
+        }
+        chains.push(ChainSpec { model, steps });
+    }
+    Ok(chains)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_chains() -> Vec<ChainSpec> {
+        vec![
+            ChainSpec::uniform("mlp", &["fc0", "fc1", "fc2"]),
+            ChainSpec {
+                model: "tf".into(),
+                steps: vec![
+                    ChainStep {
+                        kind: StepKind::Attention {
+                            q: "b0/q".into(),
+                            k: "b0/k".into(),
+                            v: "b0/v".into(),
+                            output: "b0/o".into(),
+                        },
+                        input: StepInput::ChainInput,
+                        residual: Residual::OwnInput,
+                        activation: Activation::None,
+                    },
+                    ChainStep {
+                        kind: StepKind::Gemv { layer: "b0/ffn1".into() },
+                        input: StepInput::Prev,
+                        residual: Residual::None,
+                        activation: Activation::Gelu,
+                    },
+                    ChainStep {
+                        kind: StepKind::Gemv { layer: "b0/ffn2".into() },
+                        input: StepInput::Prev,
+                        residual: Residual::Step(0),
+                        activation: Activation::None,
+                    },
+                ],
+            },
+            ChainSpec {
+                model: "cnn".into(),
+                steps: vec![
+                    ChainStep {
+                        kind: StepKind::Conv {
+                            layer: "conv1".into(),
+                            kh: 3,
+                            kw: 3,
+                            in_ch: 4,
+                            out_ch: 8,
+                        },
+                        input: StepInput::ChainInput,
+                        residual: Residual::None,
+                        activation: Activation::Relu,
+                    },
+                ],
+            },
+        ]
+    }
+
+    fn round_trip(chains: &[ChainSpec]) -> Vec<ChainSpec> {
+        let mut w = Writer::new();
+        write_chains(&mut w, chains);
+        let mut r = Reader::new(&w.buf);
+        let back = read_chains(&mut r).unwrap();
+        assert_eq!(r.pos, w.buf.len(), "chains section fully consumed");
+        back
+    }
+
+    #[test]
+    fn chains_round_trip_exact() {
+        let chains = sample_chains();
+        assert_eq!(round_trip(&chains), chains);
+        assert_eq!(round_trip(&[]), Vec::<ChainSpec>::new());
+    }
+
+    #[test]
+    fn uniform_reproduces_the_ladder() {
+        let c = ChainSpec::uniform("", &["a", "b", "c"]);
+        assert_eq!(c.steps.len(), 3);
+        assert_eq!(c.steps[0].activation, Activation::Relu);
+        assert_eq!(c.steps[1].activation, Activation::Relu);
+        assert_eq!(c.steps[2].activation, Activation::None);
+        assert!(c
+            .steps
+            .iter()
+            .all(|s| s.input == StepInput::Prev
+                && s.residual == Residual::None));
+        assert_eq!(c.layer_names(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn attention_contributes_four_layer_names() {
+        let chains = sample_chains();
+        assert_eq!(
+            chains[1].layer_names(),
+            vec!["b0/q", "b0/k", "b0/v", "b0/o", "b0/ffn1", "b0/ffn2"]
+        );
+    }
+
+    #[test]
+    fn validate_rejects_missing_layers_and_forward_refs() {
+        let chains = sample_chains();
+        let names = ["fc0", "fc1", "fc2"];
+        assert!(chains[0]
+            .validate(|n| names.contains(&n))
+            .is_ok());
+        let err = chains[0].validate(|_| false).unwrap_err();
+        assert!(format!("{err}").contains("not in the container"));
+
+        let mut bad = chains[0].clone();
+        bad.steps[0].input = StepInput::Step(2);
+        let err = bad.validate(|_| true).unwrap_err();
+        assert!(format!("{err}").contains("strictly earlier"), "{err}");
+
+        let mut bad = chains[0].clone();
+        bad.steps[1].residual = Residual::Step(1);
+        let err = bad.validate(|_| true).unwrap_err();
+        assert!(format!("{err}").contains("strictly earlier"), "{err}");
+
+        let empty = ChainSpec { model: "e".into(), steps: vec![] };
+        assert!(empty.validate(|_| true).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_conv_geometry() {
+        let mut c = sample_chains()[2].clone();
+        if let StepKind::Conv { kh, .. } = &mut c.steps[0].kind {
+            *kh = 0;
+        }
+        let err = c.validate(|_| true).unwrap_err();
+        assert!(format!("{err}").contains("degenerate conv"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_chain_bytes_error_cleanly() {
+        let mut w = Writer::new();
+        write_chains(&mut w, &sample_chains());
+        let bytes = w.buf;
+        // Truncation at every prefix must error, never panic.
+        for cut in 0..bytes.len().min(64) {
+            let mut r = Reader::new(&bytes[..cut]);
+            assert!(read_chains(&mut r).is_err(), "cut at {cut}");
+        }
+        // Absurd chain count.
+        let mut huge = bytes.clone();
+        huge[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = Reader::new(&huge);
+        assert!(read_chains(&mut r).is_err());
+        // Unknown activation / tag / sentinel values.
+        for pos in 4..bytes.len().min(96) {
+            for val in [0x7Fu8, 0xF3, 0xFF] {
+                if bytes[pos] == val {
+                    continue;
+                }
+                let mut corrupt = bytes.clone();
+                corrupt[pos] = val;
+                let mut r = Reader::new(&corrupt);
+                let _ = read_chains(&mut r);
+            }
+        }
+    }
+
+    #[test]
+    fn gelu_and_relu_apply() {
+        let mut xs = vec![-1.0f32, 0.0, 2.0];
+        Activation::Relu.apply(&mut xs);
+        assert_eq!(xs, vec![0.0, 0.0, 2.0]);
+        let mut ys = vec![-1.0f32, 0.0, 2.0];
+        Activation::Gelu.apply(&mut ys);
+        assert!(ys[0] < 0.0 && ys[0] > -0.2);
+        assert_eq!(ys[1], 0.0);
+        assert!(ys[2] > 1.9 && ys[2] < 2.0);
+        let mut zs = vec![-3.0f32];
+        Activation::None.apply(&mut zs);
+        assert_eq!(zs, vec![-3.0]);
+    }
+}

@@ -11,26 +11,36 @@
 //! dense size; the mask is accounted separately (§3 assumes the binary
 //! mask is stored/compressed independently, citing Lee et al. 2019a).
 //!
-//! Two wire layouts exist: legacy v1 (`F2F1`, parse front-to-back) and
+//! Three wire layouts exist: legacy v1 (`F2F1`, parse front-to-back),
 //! the indexed v2 (`F2F2`, per-layer offset index for random access —
-//! see [`ContainerIndex`]). [`read_container`] accepts both;
-//! [`write_container_v2`] is the default writer for new files. A v2
-//! container can additionally be partitioned across N stores: the
-//! `F2F3` [`ShardMap`] sidecar records the layer → shard assignment and
-//! [`split_container`] emits one self-contained v2 file per shard (see
-//! [`crate::shard`] for the serving side).
+//! see [`ContainerIndex`]), and v3 (same magic, version field 3),
+//! which adds a chains section recording the executable structure of
+//! each model — layer-kind records ([`ChainSpec`]: gemv+activation,
+//! attention Q/K/V/output groups, conv-as-GEMM, residual links).
+//! [`read_container`] accepts all three; [`write_container_v2`] is the
+//! default writer for plain layer tables and [`write_container_v3`]
+//! for containers with chains. A v2/v3 container can additionally be
+//! partitioned across N stores: the `F2F3` [`ShardMap`] sidecar
+//! records the layer → shard assignment and [`split_container`] emits
+//! one self-contained v2 file per shard (see [`crate::shard`] for the
+//! serving side).
 
+mod chain;
 mod serde;
 mod shard;
 mod v2;
 
+pub use chain::{
+    Activation, ChainSpec, ChainStep, Residual, StepInput, StepKind,
+};
 pub use serde::{read_container, write_container};
 pub use shard::{
     is_shard_map, split_container, split_with_map, write_sharded,
     ShardAssignment, ShardMap,
 };
 pub use v2::{
-    is_v2, read_layer_at, write_container_v2, ContainerIndex, LayerEntry,
+    is_v2, read_layer_at, write_container_v2, write_container_v3,
+    ContainerIndex, LayerEntry,
 };
 
 use crate::decoder::DecoderSpec;

@@ -17,6 +17,7 @@
 //! touching the other records — the enabling property for the
 //! [`crate::store::ModelStore`] streaming-decode path.
 
+use super::chain::ChainSpec;
 use super::serde::{
     dtype_code, dtype_from_code, read_layer, write_layer, Reader, Writer,
 };
@@ -58,22 +59,25 @@ impl LayerEntry {
     }
 }
 
-/// Parsed v2 index: layer directory without any payload parsing.
+/// Parsed v2/v3 index: layer directory without any payload parsing,
+/// plus the chains section when the container carries one (v3).
 #[derive(Debug, Clone)]
 pub struct ContainerIndex {
     entries: Vec<LayerEntry>,
+    chains: Vec<ChainSpec>,
 }
 
 impl ContainerIndex {
-    /// Parse the index of a v2 container. Validates magic, version,
-    /// bounds and contiguity of the records; does not touch payloads.
+    /// Parse the index of a v2/v3 container. Validates magic, version,
+    /// bounds and contiguity of the records (and, for v3, the chains
+    /// section); does not touch payloads.
     pub fn parse(bytes: &[u8]) -> Result<ContainerIndex> {
         let mut r = Reader::new(bytes);
         if r.take(4)? != MAGIC_V2 {
             bail!("bad magic: not an F2F v2 container");
         }
         let version = r.u32()?;
-        if version != 2 {
+        if version != 2 && version != 3 {
             bail!("unsupported v2 container version {version}");
         }
         let n_layers = r.u32()? as usize;
@@ -133,9 +137,32 @@ impl ContainerIndex {
                 len,
             });
         }
-        // Records must be contiguous: first right after the index, each
-        // next at the previous end, last ending at EOF. This catches both
-        // truncation and trailing garbage.
+        // v3 inserts the chains section between index and records; it
+        // must be consumed here so the contiguity check below starts
+        // at the first record. Chains reference index entries by name,
+        // so structural validation runs against the entries just read.
+        let chains = if version >= 3 {
+            let chains = super::chain::read_chains(&mut r)?;
+            for chain in &chains {
+                chain.validate(|name| {
+                    entries.iter().any(|e| e.name == name)
+                })?;
+            }
+            let mut models: Vec<&str> =
+                chains.iter().map(|c| c.model.as_str()).collect();
+            models.sort_unstable();
+            models.dedup();
+            if models.len() != chains.len() {
+                bail!("duplicate model id in chains section");
+            }
+            chains
+        } else {
+            Vec::new()
+        };
+        // Records must be contiguous: first right after the index (and
+        // chains section, for v3), each next at the previous end, last
+        // ending at EOF. This catches both truncation and trailing
+        // garbage.
         let mut expect = r.pos;
         for (li, e) in entries.iter().enumerate() {
             if e.offset != expect {
@@ -164,7 +191,7 @@ impl ContainerIndex {
                 ),
             };
         }
-        Ok(ContainerIndex { entries })
+        Ok(ContainerIndex { entries, chains })
     }
 
     /// All entries, in container order.
@@ -191,10 +218,31 @@ impl ContainerIndex {
     pub fn total_decoded_bytes(&self) -> usize {
         self.entries.iter().map(|e| e.decoded_bytes()).sum()
     }
+
+    /// The chains section (empty for v1/v2 containers — callers fall
+    /// back to [`ChainSpec::uniform`] over [`Self::entries`]).
+    pub fn chains(&self) -> &[ChainSpec] {
+        &self.chains
+    }
+
+    /// Look a chain up by model id.
+    pub fn chain_for(&self, model: &str) -> Option<&ChainSpec> {
+        self.chains.iter().find(|c| c.model == model)
+    }
 }
 
 /// Serialize a container in the indexed v2 layout.
 pub fn write_container_v2(c: &Container) -> Vec<u8> {
+    write_indexed(c, None)
+}
+
+/// Serialize a container in the v3 layout: the v2 index plus a chains
+/// section recording the executable structure ([`ChainSpec`]).
+pub fn write_container_v3(c: &Container, chains: &[ChainSpec]) -> Vec<u8> {
+    write_indexed(c, Some(chains))
+}
+
+fn write_indexed(c: &Container, chains: Option<&[ChainSpec]>) -> Vec<u8> {
     // Serialize every record first so offsets are known.
     let records: Vec<Vec<u8>> = c
         .layers
@@ -205,17 +253,23 @@ pub fn write_container_v2(c: &Container) -> Vec<u8> {
             w.buf
         })
         .collect();
+    let chain_bytes: Option<Vec<u8>> = chains.map(|chains| {
+        let mut w = Writer::new();
+        super::chain::write_chains(&mut w, chains);
+        w.buf
+    });
     let index_size: usize = 4 + 4 + 4
         + c.layers
             .iter()
             .map(|l| 4 + l.name.len() + 4 + 4 + 1 + 4 + 8 + 8)
-            .sum::<usize>();
+            .sum::<usize>()
+        + chain_bytes.as_ref().map_or(0, Vec::len);
     let payload: usize = records.iter().map(Vec::len).sum();
 
     let mut w = Writer::new();
     w.buf.reserve(index_size + payload);
     w.buf.extend_from_slice(MAGIC_V2);
-    w.u32(2); // version
+    w.u32(if chain_bytes.is_some() { 3 } else { 2 });
     w.u32(c.layers.len() as u32);
     let mut offset = index_size;
     for (layer, rec) in c.layers.iter().zip(&records) {
@@ -227,6 +281,9 @@ pub fn write_container_v2(c: &Container) -> Vec<u8> {
         w.u64(offset as u64);
         w.u64(rec.len() as u64);
         offset += rec.len();
+    }
+    if let Some(chain_bytes) = &chain_bytes {
+        w.buf.extend_from_slice(chain_bytes);
     }
     debug_assert_eq!(w.buf.len(), index_size);
     for rec in &records {
@@ -463,5 +520,81 @@ mod tests {
         assert!(is_v2(&write_container_v2(&c)));
         assert!(!is_v2(&write_container(&c)));
         assert!(!is_v2(b"F2"));
+    }
+
+    #[test]
+    fn v3_round_trips_chains_and_layers() {
+        let c = sample_container(21);
+        let chains = vec![ChainSpec::uniform(
+            "m",
+            &["layer0", "layer1", "layer2"],
+        )];
+        let bytes = write_container_v3(&c, &chains);
+        assert!(is_v2(&bytes), "v3 keeps the F2F2 magic");
+        let idx = ContainerIndex::parse(&bytes).unwrap();
+        assert_eq!(idx.chains(), chains.as_slice());
+        assert!(idx.chain_for("m").is_some());
+        assert!(idx.chain_for("ghost").is_none());
+        // Records stay addressable and eager reads still work.
+        let e = idx.find("layer1").unwrap();
+        let layer = read_layer_at(&bytes, e).unwrap();
+        assert_eq!(layer.name, "layer1");
+        let back = read_container(&bytes).unwrap();
+        assert_layers_eq(&c, &back);
+    }
+
+    #[test]
+    fn v2_containers_parse_with_no_chains() {
+        let c = sample_container(22);
+        let idx =
+            ContainerIndex::parse(&write_container_v2(&c)).unwrap();
+        assert!(idx.chains().is_empty());
+    }
+
+    #[test]
+    fn v3_rejects_chains_referencing_missing_layers() {
+        let c = sample_container(23);
+        let chains = vec![ChainSpec::uniform("m", &["layer0", "ghost"])];
+        let bytes = write_container_v3(&c, &chains);
+        let err = ContainerIndex::parse(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("not in the container"), "{err}");
+    }
+
+    #[test]
+    fn v3_rejects_duplicate_model_ids() {
+        let c = sample_container(24);
+        let chains = vec![
+            ChainSpec::uniform("m", &["layer0"]),
+            ChainSpec::uniform("m", &["layer1"]),
+        ];
+        let bytes = write_container_v3(&c, &chains);
+        let err = ContainerIndex::parse(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("duplicate model id"), "{err}");
+    }
+
+    #[test]
+    fn v3_fuzzed_header_corruption_never_panics() {
+        let c = sample_container(25);
+        let chains = vec![ChainSpec::uniform(
+            "m",
+            &["layer0", "layer1", "layer2"],
+        )];
+        let bytes = write_container_v3(&c, &chains);
+        let index_end =
+            ContainerIndex::parse(&bytes).unwrap().entries()[0].offset;
+        for pos in 0..index_end {
+            for val in [0x00u8, 0x01, 0x7F, 0xFF] {
+                if bytes[pos] == val {
+                    continue;
+                }
+                let mut corrupt = bytes.clone();
+                corrupt[pos] = val;
+                let _ = ContainerIndex::parse(&corrupt);
+                let _ = read_container(&corrupt);
+            }
+        }
+        for cut in [8usize, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(read_container(&bytes[..cut]).is_err());
+        }
     }
 }

@@ -2,11 +2,18 @@
 
 use crate::container::CompressedLayer;
 use crate::sparse::DecodedLayer;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Something that can run a batch of mat-vec requests.
 ///
 /// `&mut self` so backends may keep scratch buffers / device handles.
+///
+/// A backend may serve a single anonymous model (the original contract:
+/// `forward_batch` + `input_dim`/`output_dim`) or several named ones
+/// (a [`crate::registry::ModelRegistry`] zoo). The model-scoped methods
+/// default to "no named models": single-model backends implement
+/// nothing new, and the empty model id `""` always routes to the
+/// anonymous path.
 pub trait Backend {
     /// Compute `y_i = f(x_i)` for every request in the batch. Fallible:
     /// a store/decode failure is reported to the callers of the batch
@@ -16,6 +23,45 @@ pub trait Backend {
     fn input_dim(&self) -> usize;
     /// Produced output length.
     fn output_dim(&self) -> usize;
+
+    /// Named models this backend serves (empty for single-model
+    /// backends). The server builds one metrics window per entry.
+    fn models(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// Run a batch against one named model. Every request in `xs`
+    /// belongs to `model` — the server's batcher never mixes models in
+    /// one batch. `""` is the anonymous single-model path.
+    fn forward_model_batch(
+        &mut self,
+        model: &str,
+        xs: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        if model.is_empty() {
+            self.forward_batch(xs)
+        } else {
+            bail!("backend serves no model {model:?}")
+        }
+    }
+
+    /// Input length of one named model (`""` = the anonymous model).
+    fn model_input_dim(&self, model: &str) -> Option<usize> {
+        if model.is_empty() {
+            Some(self.input_dim())
+        } else {
+            None
+        }
+    }
+
+    /// Output length of one named model (`""` = the anonymous model).
+    fn model_output_dim(&self, model: &str) -> Option<usize> {
+        if model.is_empty() {
+            Some(self.output_dim())
+        } else {
+            None
+        }
+    }
 }
 
 /// Native Rust backend: decode the compressed layer once at startup

@@ -71,6 +71,13 @@ impl<T> Batcher<T> {
         self.oldest.map(|t| t.elapsed())
     }
 
+    /// The first pending entry, if any — lets the consumer decide
+    /// whether an incoming request is batch-compatible (e.g. same
+    /// model) before pushing, flushing first when it isn't.
+    pub fn first(&self) -> Option<&T> {
+        self.pending.first()
+    }
+
     /// Close and return the current batch (None if empty).
     pub fn take(&mut self) -> Option<Vec<T>> {
         self.oldest = None;
@@ -120,6 +127,18 @@ mod tests {
         std::thread::sleep(Duration::from_millis(2));
         assert!(b.expired());
         assert_eq!(b.take().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn first_peeks_without_consuming() {
+        let mut b: Batcher<u32> = Batcher::new(BatchPolicy::default());
+        assert!(b.first().is_none());
+        b.push(7);
+        b.push(8);
+        assert_eq!(b.first(), Some(&7));
+        assert_eq!(b.len(), 2, "peek must not consume");
+        assert_eq!(b.take().unwrap(), vec![7, 8]);
+        assert!(b.first().is_none());
     }
 
     #[test]

@@ -91,6 +91,112 @@ mod tests {
     }
 
     #[test]
+    fn multi_model_requests_batch_purely() {
+        use std::sync::{Arc, Mutex};
+        /// Two named models of different dims; logs every batch it
+        /// executes so the test can check model purity.
+        struct Zoo {
+            log: Arc<Mutex<Vec<(String, usize)>>>,
+        }
+        impl Backend for Zoo {
+            fn forward_batch(
+                &mut self,
+                _xs: &[Vec<f32>],
+            ) -> Result<Vec<Vec<f32>>> {
+                bail!("anonymous path unused")
+            }
+            fn input_dim(&self) -> usize {
+                0
+            }
+            fn output_dim(&self) -> usize {
+                0
+            }
+            fn models(&self) -> Vec<String> {
+                vec!["a".into(), "b".into()]
+            }
+            fn model_input_dim(&self, model: &str) -> Option<usize> {
+                match model {
+                    "a" => Some(3),
+                    "b" => Some(2),
+                    _ => None,
+                }
+            }
+            fn model_output_dim(&self, model: &str) -> Option<usize> {
+                self.model_input_dim(model)
+            }
+            fn forward_model_batch(
+                &mut self,
+                model: &str,
+                xs: &[Vec<f32>],
+            ) -> Result<Vec<Vec<f32>>> {
+                self.log
+                    .lock()
+                    .unwrap()
+                    .push((model.to_string(), xs.len()));
+                let gain = match model {
+                    "a" => 2.0,
+                    "b" => -1.0,
+                    _ => bail!("no model {model:?}"),
+                };
+                Ok(xs
+                    .iter()
+                    .map(|x| x.iter().map(|v| v * gain).collect())
+                    .collect())
+            }
+        }
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let log2 = log.clone();
+        let server = InferenceServer::start(
+            ServerConfig {
+                max_batch: 4,
+                batch_timeout: Duration::from_millis(5),
+                ..Default::default()
+            },
+            move || Box::new(Zoo { log: log2 }),
+        )
+        .unwrap();
+        assert_eq!(server.models(), vec!["a", "b"]);
+        assert_eq!(server.model_input_dim("a"), Some(3));
+        assert_eq!(server.model_input_dim("b"), Some(2));
+        assert_eq!(server.model_input_dim("ghost"), None);
+        // Interleave the two models; every reply must carry its own
+        // model's transform even when enqueued back-to-back.
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                if i % 2 == 0 {
+                    ("a", server.infer_model_async("a", vec![i as f32; 3]))
+                } else {
+                    ("b", server.infer_model_async("b", vec![i as f32; 2]))
+                }
+            })
+            .collect();
+        for (i, (model, h)) in handles.into_iter().enumerate() {
+            let y = h.recv().unwrap().unwrap();
+            let want = if model == "a" {
+                2.0 * i as f32
+            } else {
+                -(i as f32)
+            };
+            assert_eq!(y[0], want, "request {i} on {model}");
+        }
+        // No batch ever mixed models (dims alone would explode), and
+        // per-model windows saw exactly their own traffic.
+        for (model, n) in log.lock().unwrap().iter() {
+            assert!(model == "a" || model == "b");
+            assert!(*n >= 1);
+        }
+        let ma = server.model_metrics("a").unwrap();
+        let mb = server.model_metrics("b").unwrap();
+        assert_eq!(ma.completed, 8);
+        assert_eq!(mb.completed, 8);
+        assert_eq!(server.metrics().completed, 16, "shared window sums");
+        // Unknown models fail at submit, wrong dims fail per model.
+        assert!(server.infer_model("ghost", vec![0.0; 3]).is_err());
+        assert!(server.infer_model("a", vec![0.0; 2]).is_err());
+        server.shutdown();
+    }
+
+    #[test]
     fn rejects_wrong_dimension() {
         let server = InferenceServer::start(
             ServerConfig::default(),

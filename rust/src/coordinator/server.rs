@@ -38,6 +38,10 @@ impl Default for ServerConfig {
 }
 
 struct Request {
+    /// Model id this request targets (`""` = the anonymous
+    /// single-model backend). Batches are model-pure: the worker
+    /// flushes a forming batch before admitting a different model.
+    model: String,
     x: Vec<f32>,
     enqueued: Instant,
     /// Trace id minted at enqueue; the batch leader's id is pinned to
@@ -46,11 +50,22 @@ struct Request {
     resp: Sender<Result<Vec<f32>>>,
 }
 
+/// One named model as the server fronts it: dims validated at submit,
+/// plus a metrics window of its own (the shared [`Metrics`] still
+/// aggregates across models).
+#[derive(Clone)]
+struct ModelPort {
+    name: String,
+    input_dim: usize,
+    metrics: Arc<Metrics>,
+}
+
 /// Handle to a running server.
 pub struct InferenceServer {
     tx: Sender<Request>,
     metrics: Arc<Metrics>,
     input_dim: usize,
+    models: Vec<ModelPort>,
     inflight: Arc<std::sync::atomic::AtomicUsize>,
     capacity: usize,
     stop: Arc<AtomicBool>,
@@ -71,8 +86,9 @@ impl InferenceServer {
         let stop = Arc::new(AtomicBool::new(false));
         let inflight = Arc::new(std::sync::atomic::AtomicUsize::new(0));
 
-        // The worker reports its input dim back once the backend exists.
-        let (dim_tx, dim_rx) = channel::<usize>();
+        // The worker reports its input dim (and the named-model table,
+        // for multi-model backends) back once the backend exists.
+        let (dim_tx, dim_rx) = channel::<(usize, Vec<ModelPort>)>();
         let m2 = metrics.clone();
         let s2 = stop.clone();
         let inf2 = inflight.clone();
@@ -80,11 +96,26 @@ impl InferenceServer {
             .name("f2f-worker".into())
             .spawn(move || {
                 let mut backend = factory();
-                let _ = dim_tx.send(backend.input_dim());
-                run_worker(rx, &mut *backend, &m2, &s2, &inf2, config);
+                let ports: Vec<ModelPort> = backend
+                    .models()
+                    .into_iter()
+                    .filter_map(|name| {
+                        let input_dim = backend.model_input_dim(&name)?;
+                        Some(ModelPort {
+                            name,
+                            input_dim,
+                            metrics: Arc::new(Metrics::default()),
+                        })
+                    })
+                    .collect();
+                let _ =
+                    dim_tx.send((backend.input_dim(), ports.clone()));
+                run_worker(
+                    rx, &mut *backend, &m2, &ports, &s2, &inf2, config,
+                );
             })
             .map_err(|e| anyhow!("spawn inference worker: {e}"))?;
-        let input_dim =
+        let (input_dim, models) =
             dim_rx.recv_timeout(Duration::from_secs(60)).map_err(|e| {
                 anyhow!(
                     "backend failed to initialize: {}",
@@ -100,6 +131,7 @@ impl InferenceServer {
             tx,
             metrics,
             input_dim,
+            models,
             inflight,
             capacity: config.queue_capacity,
             stop,
@@ -107,17 +139,59 @@ impl InferenceServer {
         })
     }
 
-    /// Submit a request; returns a receiver for the response.
+    /// Submit a request to the anonymous single-model backend; returns
+    /// a receiver for the response.
     pub fn infer_async(
         &self,
         x: Vec<f32>,
     ) -> Receiver<Result<Vec<f32>>> {
+        self.submit(String::new(), x, self.input_dim)
+    }
+
+    /// Submit a request to one named model of a multi-model backend.
+    /// Dim validation is per model; an unknown model id fails at
+    /// submit, before the queue.
+    pub fn infer_model_async(
+        &self,
+        model: &str,
+        x: Vec<f32>,
+    ) -> Receiver<Result<Vec<f32>>> {
+        if model.is_empty() {
+            return self.infer_async(x);
+        }
+        let Some(port) = self.models.iter().find(|p| p.name == model)
+        else {
+            let (resp_tx, resp_rx) = channel();
+            let _ = resp_tx
+                .send(Err(anyhow!("unknown model {model:?}")));
+            return resp_rx;
+        };
+        self.submit(model.to_string(), x, port.input_dim)
+    }
+
+    /// Blocking inference against one named model.
+    pub fn infer_model(
+        &self,
+        model: &str,
+        x: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        self.infer_model_async(model, x)
+            .recv()
+            .map_err(|_| anyhow!("worker dropped response"))?
+    }
+
+    fn submit(
+        &self,
+        model: String,
+        x: Vec<f32>,
+        expect_dim: usize,
+    ) -> Receiver<Result<Vec<f32>>> {
         let (resp_tx, resp_rx) = channel();
-        if x.len() != self.input_dim {
+        if x.len() != expect_dim {
             let _ = resp_tx.send(Err(anyhow!(
                 "input dim {} != expected {}",
                 x.len(),
-                self.input_dim
+                expect_dim
             )));
             return resp_rx;
         }
@@ -138,8 +212,9 @@ impl InferenceServer {
         }
         self.inflight.fetch_add(1, Ordering::Relaxed);
         let trace = obs::mint_trace();
-        obs::event_for(trace, obs::SpanKind::Enqueue, "");
+        obs::event_for(trace, obs::SpanKind::Enqueue, &model);
         let req = Request {
+            model,
             x,
             enqueued: Instant::now(),
             trace,
@@ -167,6 +242,37 @@ impl InferenceServer {
     /// snapshots while the server keeps running.
     pub fn metrics_handle(&self) -> Arc<Metrics> {
         self.metrics.clone()
+    }
+
+    /// Named models the backend reported (empty for single-model
+    /// backends), in the backend's order.
+    pub fn models(&self) -> Vec<String> {
+        self.models.iter().map(|p| p.name.clone()).collect()
+    }
+
+    /// Input dimension of one named model.
+    pub fn model_input_dim(&self, model: &str) -> Option<usize> {
+        self.models
+            .iter()
+            .find(|p| p.name == model)
+            .map(|p| p.input_dim)
+    }
+
+    /// Metrics snapshot of one named model's window.
+    pub fn model_metrics(&self, model: &str) -> Option<MetricsSnapshot> {
+        self.models
+            .iter()
+            .find(|p| p.name == model)
+            .map(|p| p.metrics.snapshot())
+    }
+
+    /// Shared handles to every named model's metrics window, for the
+    /// stats socket to snapshot while the server keeps running.
+    pub fn model_metrics_handles(&self) -> Vec<(String, Arc<Metrics>)> {
+        self.models
+            .iter()
+            .map(|p| (p.name.clone(), p.metrics.clone()))
+            .collect()
     }
 
     /// Current queue depth: requests accepted and not yet answered.
@@ -213,6 +319,7 @@ fn run_worker(
     rx: Receiver<Request>,
     backend: &mut dyn Backend,
     metrics: &Metrics,
+    ports: &[ModelPort],
     stop: &AtomicBool,
     inflight: &std::sync::atomic::AtomicUsize,
     config: ServerConfig,
@@ -221,14 +328,26 @@ fn run_worker(
         max_batch: config.max_batch,
         timeout: config.batch_timeout,
     });
+    // Batches are model-pure: an incoming request for a different
+    // model than the forming batch flushes the batch first (two
+    // models' vectors generally don't even share a dimension).
+    let mut admit =
+        |batcher: &mut Batcher<Request>, req: Request, be: &mut dyn Backend| {
+            if batcher.first().is_some_and(|p| p.model != req.model) {
+                if let Some(batch) = batcher.take() {
+                    execute(be, batch, metrics, ports, inflight);
+                }
+            }
+            if let Some(batch) = batcher.push(req) {
+                execute(be, batch, metrics, ports, inflight);
+            }
+        };
     loop {
         if stop.load(Ordering::Relaxed) && batcher.is_empty() {
             // Drain whatever is still queued, then exit.
             match rx.try_recv() {
                 Ok(req) => {
-                    if let Some(batch) = batcher.push(req) {
-                        execute(backend, batch, metrics, inflight);
-                    }
+                    admit(&mut batcher, req, backend);
                     continue;
                 }
                 Err(_) => break,
@@ -239,20 +358,18 @@ fn run_worker(
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(wait) {
             Ok(req) => {
-                if let Some(batch) = batcher.push(req) {
-                    execute(backend, batch, metrics, inflight);
-                }
+                admit(&mut batcher, req, backend);
             }
             Err(RecvTimeoutError::Timeout) => {
                 if batcher.expired() {
                     if let Some(batch) = batcher.take() {
-                        execute(backend, batch, metrics, inflight);
+                        execute(backend, batch, metrics, ports, inflight);
                     }
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
                 if let Some(batch) = batcher.take() {
-                    execute(backend, batch, metrics, inflight);
+                    execute(backend, batch, metrics, ports, inflight);
                 }
                 break;
             }
@@ -264,11 +381,22 @@ fn execute(
     backend: &mut dyn Backend,
     batch: Vec<Request>,
     metrics: &Metrics,
+    ports: &[ModelPort],
     inflight: &std::sync::atomic::AtomicUsize,
 ) {
     let Some(leader) = batch.first().map(|r| r.trace) else {
         return;
     };
+    // Model-pure by construction (see run_worker's admit): the
+    // leader's model is the batch's model.
+    let model = batch
+        .first()
+        .map(|r| r.model.clone())
+        .unwrap_or_default();
+    let model_metrics = ports
+        .iter()
+        .find(|p| p.name == model)
+        .map(|p| p.metrics.as_ref());
     // Dequeue: each member's queue wait, plus the formation span
     // (oldest member's enqueue → batch closed) under the leader.
     for r in &batch {
@@ -290,15 +418,18 @@ fn execute(
     let _trace = obs::with_trace(leader);
     let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
     let started = Instant::now();
-    match backend.forward_batch(&xs) {
+    match backend.forward_model_batch(&model, &xs) {
         Ok(ys) => {
             let batch_time = started.elapsed();
-            obs::span_for(leader, obs::SpanKind::Batch, "", batch_time);
+            obs::span_for(leader, obs::SpanKind::Batch, &model, batch_time);
             // Record metrics *before* releasing responses so a caller
             // that observed its reply always sees itself counted.
             let latencies: Vec<_> =
                 batch.iter().map(|r| r.enqueued.elapsed()).collect();
             metrics.record_batch(&latencies, batch_time);
+            if let Some(mm) = model_metrics {
+                mm.record_batch(&latencies, batch_time);
+            }
             for (req, y) in batch.into_iter().zip(ys) {
                 inflight.fetch_sub(1, Ordering::Relaxed);
                 let _ = req.resp.send(Ok(y));
@@ -310,6 +441,9 @@ fn execute(
             let msg = format!("backend error: {e:#}");
             for req in batch {
                 metrics.record_error();
+                if let Some(mm) = model_metrics {
+                    mm.record_error();
+                }
                 inflight.fetch_sub(1, Ordering::Relaxed);
                 let _ = req.resp.send(Err(anyhow!("{msg}")));
             }

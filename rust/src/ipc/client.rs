@@ -152,9 +152,22 @@ impl IpcShardStore {
     /// worker's decode spans stitch into the same timeline; the round
     /// trip itself is recorded as an `ipc_fetch` span on this side.
     pub fn fetch(&self, layer: &str) -> CallResult<ExecLayer> {
+        self.fetch_model("", layer)
+    }
+
+    /// [`fetch`](Self::fetch) scoped to one model of a zoo worker: the
+    /// model id rides the frame's trailing byte range and the worker
+    /// joins `{model}::{layer}` before its store lookup. `""` is the
+    /// unscoped single-model form (byte-identical frames to before).
+    pub fn fetch_model(
+        &self,
+        model: &str,
+        layer: &str,
+    ) -> CallResult<ExecLayer> {
         let start = std::time::Instant::now();
         let resp = self.call(&Request::Fetch {
             layer: layer.to_string(),
+            model: model.to_string(),
             trace: obs::current_trace(),
         })?;
         obs::span(SpanKind::IpcFetch, layer, start.elapsed());
@@ -165,9 +178,20 @@ impl IpcShardStore {
     /// Ask the worker to warm a layer asynchronously; returns whether
     /// the readahead was accepted.
     pub fn prefetch(&self, layer: &str) -> CallResult<bool> {
+        self.prefetch_model("", layer)
+    }
+
+    /// [`prefetch`](Self::prefetch) scoped to one model of a zoo
+    /// worker (`""` = unscoped).
+    pub fn prefetch_model(
+        &self,
+        model: &str,
+        layer: &str,
+    ) -> CallResult<bool> {
         let start = std::time::Instant::now();
         let resp = self.call(&Request::Prefetch {
             layer: layer.to_string(),
+            model: model.to_string(),
             trace: obs::current_trace(),
         })?;
         obs::span(SpanKind::IpcPrefetch, layer, start.elapsed());

@@ -139,11 +139,16 @@ pub enum Request {
     /// `trace` is the originating request's trace id
     /// ([`crate::obs::TRACE_NONE`] outside any), which the worker pins
     /// while handling so its decode/cache spans stitch cross-process.
-    Fetch { layer: String, trace: u64 },
+    /// `model` scopes the layer to one tenant of a model-zoo worker
+    /// (`""` = unscoped, the single-model wire form): the worker joins
+    /// `{model}::{layer}` before its store lookup. The model id rides
+    /// as an optional trailing byte range, so single-model peers emit
+    /// byte-identical frames to before.
+    Fetch { layer: String, model: String, trace: u64 },
     /// Warm one layer asynchronously ([`accepted`](Response::Ack)
     /// mirrors [`crate::store::ModelStore::prefetch_async`]); `trace`
-    /// as in [`Request::Fetch`].
-    Prefetch { layer: String, trace: u64 },
+    /// and `model` as in [`Request::Fetch`].
+    Prefetch { layer: String, model: String, trace: u64 },
     /// Snapshot the worker store's [`StoreMetrics`].
     Metrics,
     /// Snapshot the worker store's cost table as `CostProfile` JSON.
@@ -473,11 +478,14 @@ pub fn read_response(
 impl Request {
     fn encode(&self) -> (u8, Vec<u8>) {
         match self {
-            Request::Fetch { layer, trace } => {
-                (K_FETCH, encode_name_trace(layer, *trace))
+            Request::Fetch { layer, model, trace } => {
+                (K_FETCH, encode_name_trace_model(layer, model, *trace))
             }
-            Request::Prefetch { layer, trace } => {
-                (K_PREFETCH, encode_name_trace(layer, *trace))
+            Request::Prefetch { layer, model, trace } => {
+                (
+                    K_PREFETCH,
+                    encode_name_trace_model(layer, model, *trace),
+                )
             }
             Request::Metrics => (K_METRICS, Vec::new()),
             Request::CostProfile => (K_COST_PROFILE, Vec::new()),
@@ -493,19 +501,21 @@ impl Request {
     /// Parse a request payload. Errors (never panics) on truncation,
     /// trailing bytes, oversized names, non-utf8 names, and unknown
     /// kinds. `Fetch`/`Prefetch` accept the v1 form without the
-    /// trailing trace id (absent means [`obs::TRACE_NONE`]).
+    /// trailing trace id (absent means [`obs::TRACE_NONE`]) and the
+    /// single-model form without the trailing model id (absent means
+    /// `""`, unscoped).
     pub fn decode(kind: u8, payload: &[u8]) -> Result<Request> {
         let mut p = Cursor::new(payload);
         let req = match kind {
             K_FETCH => {
                 let layer = p.name()?;
-                let trace = p.optional_trace()?;
-                Request::Fetch { layer, trace }
+                let (trace, model) = p.optional_trace_model()?;
+                Request::Fetch { layer, model, trace }
             }
             K_PREFETCH => {
                 let layer = p.name()?;
-                let trace = p.optional_trace()?;
-                Request::Prefetch { layer, trace }
+                let (trace, model) = p.optional_trace_model()?;
+                Request::Prefetch { layer, model, trace }
             }
             K_METRICS => Request::Metrics,
             K_COST_PROFILE => Request::CostProfile,
@@ -813,9 +823,25 @@ fn encode_name(s: &str) -> Vec<u8> {
 
 /// `Fetch`/`Prefetch` payload: length-prefixed name plus the trailing
 /// trace id current peers always send (decoders accept its absence).
+#[cfg(test)]
 fn encode_name_trace(s: &str, trace: u64) -> Vec<u8> {
     let mut b = encode_name(s);
     b.extend_from_slice(&trace.to_le_bytes());
+    b
+}
+
+/// `Fetch`/`Prefetch` payload with an optional model-id byte range:
+/// `name | u64 trace | [u32 model_len | model]`. The model range is
+/// only emitted when non-empty, so a single-model peer's frames are
+/// byte-identical to the pre-zoo wire form and old decoders keep
+/// accepting them.
+fn encode_name_trace_model(s: &str, model: &str, trace: u64) -> Vec<u8> {
+    let mut b = encode_name(s);
+    b.extend_from_slice(&trace.to_le_bytes());
+    if !model.is_empty() {
+        b.extend_from_slice(&(model.len() as u32).to_le_bytes());
+        b.extend_from_slice(model.as_bytes());
+    }
     b
 }
 
@@ -919,16 +945,28 @@ impl<'a> Cursor<'a> {
         self.b.len().saturating_sub(self.i)
     }
 
-    /// The optional trailing trace id of `Fetch`/`Prefetch`: exactly
-    /// 8 bytes from a current peer, nothing from a v1 peer
-    /// ([`obs::TRACE_NONE`]); any other length is corruption.
-    fn optional_trace(&mut self) -> Result<u64> {
+    /// The optional trailing trace id and model id of
+    /// `Fetch`/`Prefetch`: nothing from a v1 peer
+    /// ([`obs::TRACE_NONE`], unscoped), exactly 8 bytes (trace only)
+    /// from a single-model peer, or the trace followed by a
+    /// length-prefixed model id (≥ 12 bytes) from a model-zoo peer;
+    /// any other length is corruption. The model name shares
+    /// [`MAX_NAME`] and the utf-8 requirement with layer names.
+    fn optional_trace_model(&mut self) -> Result<(u64, String)> {
         match self.remaining() {
-            0 => Ok(obs::TRACE_NONE),
-            8 => self.u64(),
+            0 => Ok((obs::TRACE_NONE, String::new())),
+            8 => Ok((self.u64()?, String::new())),
+            n if n >= 12 => {
+                let trace = self.u64()?;
+                let model = self.name()?;
+                if model.is_empty() {
+                    bail!("empty model id in a model-scoped frame");
+                }
+                Ok((trace, model))
+            }
             n => bail!(
-                "{n} trailing bytes where a trace id (8) or nothing \
-                 was expected"
+                "{n} trailing bytes where a trace id (8), a trace id \
+                 plus model id (>=12), or nothing was expected"
             ),
         }
     }
@@ -1033,10 +1071,22 @@ mod tests {
     fn every_message_kind_round_trips() {
         round_trip_request(Request::Fetch {
             layer: "mlp/fc0".into(),
+            model: String::new(),
+            trace: 0xABCD_0000_0042,
+        });
+        round_trip_request(Request::Fetch {
+            layer: "mlp/fc0".into(),
+            model: "tf-base".into(),
             trace: 0xABCD_0000_0042,
         });
         round_trip_request(Request::Prefetch {
             layer: "x".into(),
+            model: String::new(),
+            trace: obs::TRACE_NONE,
+        });
+        round_trip_request(Request::Prefetch {
+            layer: "x".into(),
+            model: "m".into(),
             trace: obs::TRACE_NONE,
         });
         round_trip_request(Request::Metrics);
@@ -1139,12 +1189,15 @@ mod tests {
         for kind in [K_FETCH, K_PREFETCH] {
             let payload = encode_name("fc0");
             let req = Request::decode(kind, &payload).unwrap();
-            let (layer, trace) = match req {
-                Request::Fetch { layer, trace }
-                | Request::Prefetch { layer, trace } => (layer, trace),
+            let (layer, model, trace) = match req {
+                Request::Fetch { layer, model, trace }
+                | Request::Prefetch { layer, model, trace } => {
+                    (layer, model, trace)
+                }
                 other => panic!("wrong variant: {other:?}"),
             };
             assert_eq!(layer, "fc0");
+            assert_eq!(model, "", "absent model range means unscoped");
             assert_eq!(trace, obs::TRACE_NONE);
             for extra in 1..8usize {
                 let mut bad = encode_name("fc0");
@@ -1154,9 +1207,47 @@ mod tests {
                     "{extra} trailing bytes must not parse"
                 );
             }
-            let mut too_long = encode_name_trace("fc0", 9);
-            too_long.push(0);
-            assert!(Request::decode(kind, &too_long).is_err());
+            // 9..11 trailing bytes: more than a trace, less than the
+            // smallest trace+model trailer — corruption.
+            for extra in 1..4usize {
+                let mut bad = encode_name_trace("fc0", 9);
+                bad.extend_from_slice(&vec![0u8; extra]);
+                assert!(
+                    Request::decode(kind, &bad).is_err(),
+                    "trace + {extra} stray bytes must not parse"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn model_scoped_fetch_trailer_is_validated() {
+        for kind in [K_FETCH, K_PREFETCH] {
+            // A model-id length lying past the payload is truncation.
+            let mut lying = encode_name_trace("fc0", 9);
+            lying.extend_from_slice(&u32::MAX.to_le_bytes());
+            assert!(Request::decode(kind, &lying).is_err());
+            // An explicit empty model id is corruption (the encoder
+            // omits the range entirely for unscoped frames).
+            let mut empty = encode_name_trace("fc0", 9);
+            empty.extend_from_slice(&0u32.to_le_bytes());
+            assert!(Request::decode(kind, &empty).is_err());
+            // Trailing bytes after the model id reject.
+            let mut trailing =
+                encode_name_trace_model("fc0", "zoo-a", 9);
+            trailing.push(0);
+            assert!(Request::decode(kind, &trailing).is_err());
+            // Non-utf8 model id is corruption.
+            let mut bad = encode_name_trace("fc0", 9);
+            bad.extend_from_slice(&2u32.to_le_bytes());
+            bad.extend_from_slice(&[0xFF, 0xFE]);
+            assert!(Request::decode(kind, &bad).is_err());
+            // The single-model frame is byte-identical to the pre-zoo
+            // form: no model range at all.
+            assert_eq!(
+                encode_name_trace_model("fc0", "", 9),
+                encode_name_trace("fc0", 9)
+            );
         }
     }
 
@@ -1375,7 +1466,11 @@ mod tests {
         let mut buf = Vec::new();
         send_request(
             &mut buf,
-            &Request::Fetch { layer: "layer0".into(), trace: 0 },
+            &Request::Fetch {
+                layer: "layer0".into(),
+                model: "zoo".into(),
+                trace: 0,
+            },
         )
         .unwrap();
         for cut in 1..buf.len() {

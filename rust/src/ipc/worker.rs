@@ -245,11 +245,14 @@ fn handle(
 ) -> (Reply, bool) {
     let msg = |resp| (Reply::Msg(resp), false);
     match req {
-        Request::Fetch { layer, trace } => {
+        Request::Fetch { layer, model, trace } => {
             // Pin the requester's trace to this thread: the cache
             // hit/miss events and any decode the get() triggers stitch
             // into the caller's cross-process timeline.
             let _trace = obs::with_trace(trace);
+            // A model-scoped fetch addresses a zoo worker, whose store
+            // holds the merged container's `{model}::{layer}` names.
+            let layer = crate::registry::scoped_or_bare(&model, &layer);
             match store.get(&layer) {
                 Ok(decoded) => {
                     // Error at the source when a layer cannot fit one
@@ -294,8 +297,9 @@ fn handle(
                 }
             }
         }
-        Request::Prefetch { layer, trace } => {
+        Request::Prefetch { layer, model, trace } => {
             let _trace = obs::with_trace(trace);
+            let layer = crate::registry::scoped_or_bare(&model, &layer);
             msg(Response::Ack {
                 accepted: store.prefetch_async(&layer),
             })
@@ -390,6 +394,7 @@ mod tests {
                 &mut stream,
                 &Request::Fetch {
                     layer: name.to_string(),
+                    model: String::new(),
                     trace: 7,
                 },
             )
@@ -401,7 +406,11 @@ mod tests {
         // Unknown layer: an error frame, and the connection survives.
         wire::send_request(
             &mut stream,
-            &Request::Fetch { layer: "ghost".into(), trace: 0 },
+            &Request::Fetch {
+                layer: "ghost".into(),
+                model: String::new(),
+                trace: 0,
+            },
         )
         .unwrap();
         match wire::read_response(&mut stream).unwrap() {
@@ -413,7 +422,11 @@ mod tests {
         // Prefetch dedups against the already-cached layer.
         wire::send_request(
             &mut stream,
-            &Request::Prefetch { layer: "fc0".into(), trace: 0 },
+            &Request::Prefetch {
+                layer: "fc0".into(),
+                model: String::new(),
+                trace: 0,
+            },
         )
         .unwrap();
         assert_eq!(
@@ -537,7 +550,11 @@ mod tests {
         };
         wire::send_request(
             &mut stream,
-            &Request::Fetch { layer: "fc0".into(), trace: 0 },
+            &Request::Fetch {
+                layer: "fc0".into(),
+                model: String::new(),
+                trace: 0,
+            },
         )
         .unwrap();
         let resp = wire::read_response(&mut stream).unwrap();
@@ -588,7 +605,11 @@ mod tests {
         let mut fresh = UnixStream::connect(&socket).unwrap();
         wire::send_request(
             &mut fresh,
-            &Request::Fetch { layer: "fc0".into(), trace: 0 },
+            &Request::Fetch {
+                layer: "fc0".into(),
+                model: String::new(),
+                trace: 0,
+            },
         )
         .unwrap();
         let resp = wire::read_response(&mut fresh).unwrap();

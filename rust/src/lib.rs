@@ -115,6 +115,14 @@
 //!   realistic FP32 bit-plane statistics.
 //! * [`pipeline`] — end-to-end compression pipeline over whole models.
 //! * [`coordinator`] — serving stack: router, dynamic batcher, workers.
+//! * [`registry`] — the multi-tenant model zoo: container v3
+//!   layer-kind chains compiled to executable step programs
+//!   ([`registry::CompiledChain`] — gemv, attention groups,
+//!   conv-as-GEMM, residual links), [`registry::merge_zoo`] folding N
+//!   models into one `{model}::{layer}`-named container, and
+//!   [`registry::ModelRegistry`] serving all of them from one shared
+//!   store / shard set / worker fleet under one byte budget (see
+//!   *Serving a model zoo* below).
 //! * [`runtime`] — PJRT (XLA) runtime that loads AOT-compiled artifacts.
 //! * [`report`] — textual table/figure rendering for the repro harness.
 //! * [`repro`] — one entry point per paper table/figure.
@@ -211,6 +219,54 @@
 //! `ipc::ProcRouter` walks the same chain over unix-socket IPC with
 //! cross-process readahead, still bit-identical to the single store.
 //!
+//! ## Serving a model zoo
+//!
+//! One process can serve *N* models from the same decode capacity and
+//! byte budget. Container **v3** (same `F2F2` magic, version 3)
+//! records each model's executable structure next to its weights —
+//! [`container::ChainSpec`] steps for plain gemv+activation ladders,
+//! attention Q/K/V/output groups (sequence length 1), conv-as-GEMM
+//! with im2col geometry, and residual/skip links — so a compressed
+//! Transformer or ResNet round-trips into something executable, not a
+//! naming convention. [`registry::merge_zoo`] folds the tenants into
+//! one container whose layers are named `{model}::{layer}`, and a
+//! [`registry::ModelRegistry`] serves them concurrently:
+//!
+//! ```no_run
+//! use f2f::coordinator::{InferenceServer, ServerConfig};
+//! use f2f::registry::{ModelRegistry, ZooModel};
+//! use f2f::store::StoreConfig;
+//!
+//! # fn demo(a: f2f::container::Container, b: f2f::container::Container) -> anyhow::Result<()> {
+//! // Two models, one store: a shared byte budget, one cross-model
+//! // LRU, one in-flight decode table, shared decode workers. A burst
+//! // on "chat" evicts cold "rank" layers — never pinned ones.
+//! let registry = ModelRegistry::new(
+//!     &[ZooModel::new("chat", a), ZooModel::new("rank", b)],
+//!     StoreConfig { cache_budget_bytes: 32 << 20, ..StoreConfig::default() },
+//! )?;
+//! let server = InferenceServer::start(ServerConfig::default(), move || {
+//!     Box::new(registry)
+//! })?;
+//! // Requests route by model id; batches never mix models.
+//! let dim = server.model_input_dim("chat").unwrap_or(0);
+//! let y = server.infer_model("chat", vec![0.0; dim])?;
+//! # let _ = y;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The registry is itself a [`coordinator::Backend`], so the batching
+//! server, per-model [`coordinator::MetricsSnapshot`] windows, and the
+//! live stats plane all apply per tenant. The same zoo serves from N
+//! in-process shard stores ([`registry::ModelRegistry::new_sharded`])
+//! or from `f2f shard-worker` processes
+//! ([`registry::ModelRegistry::over_ipc`]) — `Fetch`/`Prefetch` wire
+//! frames carry a model-id byte range, and `f2f serve --models
+//! a=a.f2f,b=b.f2f` drives all three paths from the CLI. Outputs are
+//! bit-identical to serving each model alone: same decode, same f32
+//! accumulation order, whatever the co-tenant traffic does.
+//!
 //! ## Observability
 //!
 //! Every stage of that path is traced. The inference server mints a
@@ -286,7 +342,8 @@
 //! dependency-free token-level scanner over `rust/src/`) forbids
 //! `unwrap`/`expect`/panicking macros and unchecked indexing in the
 //! serving modules (`ipc`, `container`, `store`, `shard`,
-//! `coordinator`, `sparse`, `kernels`), requires a `// SAFETY:`
+//! `coordinator`, `sparse`, `kernels`, `registry`), requires a
+//! `// SAFETY:`
 //! comment on every `unsafe`,
 //! and flags `.lock().unwrap()` everywhere — lock poisoning must be
 //! handled (see [`sync::lock_unpoisoned`]: a panicking worker must
@@ -318,6 +375,7 @@ pub mod models;
 pub mod obs;
 pub mod pipeline;
 pub mod pruning;
+pub mod registry;
 pub mod report;
 pub mod repro;
 pub mod rng;

@@ -7,8 +7,16 @@
 //!   table2 table3 s4 s5 s10 s12 s13 entropy beamcheck all).
 //! * `f2f compress --model <transformer|resnet50> [...]` — compress a
 //!   synthetic model to a container file (indexed v2 by default; pass
-//!   `--v1` for the legacy layout) and report per-layer stats.
-//! * `f2f inspect <container>` — print a container's inventory (v1/v2).
+//!   `--v1` for the legacy layout) and report per-layer stats. With
+//!   `--chain` compress a *full* tiny chain-valid layer table (no
+//!   subsampling/truncation — chain geometry must survive; `--model`
+//!   additionally accepts `mlp`, a uniform gemv+relu ladder sized by
+//!   `--width`/`--layers`) and write the v3 layout with the
+//!   executable chain recorded (`--blocks`, `--d-model`, `--d-ff`,
+//!   `--id <model-id>`), ready for `serve --models` and
+//!   [`f2f::registry`].
+//! * `f2f inspect <container>` — print a container's inventory
+//!   (v1/v2/v3; v3 also lists the recorded chains).
 //! * `f2f shard <container> --shards <n> [--by-bytes] [--out prefix]` —
 //!   split a v2 container into per-shard v2 files plus the `F2F3`
 //!   shard-map sidecar.
@@ -27,7 +35,12 @@
 //!   whichever is smaller — see [`f2f::kernels`]), `--shards <n>`
 //!   split across a multi-store shard router, `--shard-procs <n>`
 //!   split across that many supervised *worker processes* routed over
-//!   unix-socket IPC,
+//!   unix-socket IPC, `--models <id=path,...>` serve N pre-compressed
+//!   containers as a model zoo through one shared-budget
+//!   [`f2f::registry::ModelRegistry`] instead of compressing a
+//!   synthetic MLP — combines with `--shards` / `--shard-procs`, the
+//!   load interleaves tenants (batches stay model-pure), and the
+//!   stats socket / `f2f top` grow per-model rows,
 //!   `--timing` print the per-layer cost table plus the request /
 //!   batch / decode / GEMV latency histograms, `--profile-out [path]`
 //!   export it as `CostProfile` JSON — bare `--profile-out` writes the
@@ -102,6 +115,10 @@ fn cmd_compress(args: &Args) -> Result<()> {
     use f2f::models::{resnet50_layers, transformer_layers, SyntheticLayer, WeightGen};
     use f2f::pipeline::{CompressionConfig, Compressor};
     use f2f::pruning::PruneMethod;
+
+    if args.flag("chain") {
+        return cmd_compress_chain(args);
+    }
 
     let model = args.get_str("model", "transformer");
     let sparsity: f64 = args.get("s", 0.9)?;
@@ -179,13 +196,125 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `compress --chain`: compress a *full* tiny chain-valid layer table
+/// — the plain compress path subsamples (`step_by`) and truncates
+/// layers, which breaks attention/conv geometry — and write the v3
+/// container with the executable [`f2f::container::ChainSpec`]
+/// recorded, ready for `serve --models` and the registry.
+fn cmd_compress_chain(args: &Args) -> Result<()> {
+    use f2f::container::Dtype;
+    use f2f::models::{
+        resnet_chain, tiny_resnet_layers, tiny_transformer_layers,
+        transformer_chain, SyntheticLayer, WeightGen,
+    };
+    use f2f::pipeline::{CompressionConfig, Compressor};
+    use f2f::pruning::PruneMethod;
+
+    let model = args.get_str("model", "transformer");
+    let sparsity: f64 = args.get("s", 0.9)?;
+    let n_s: usize = args.get("ns", 1)?;
+    let seed: u64 = args.get("seed", 0xF2F)?;
+    let beam: i64 = args.get("beam", 8)?;
+    let out = args.get_str("out", "model.f2f");
+    let id = args.get_str("id", &model);
+    let blocks: usize = args.get("blocks", 2)?;
+
+    let (specs, chain) = match model.as_str() {
+        "transformer" => {
+            let d_model: usize = args.get("d-model", 32)?;
+            let d_ff: usize = args.get("d-ff", d_model * 2)?;
+            let specs =
+                tiny_transformer_layers(blocks, d_model, d_ff);
+            let chain = transformer_chain(id.as_str(), &specs)?;
+            (specs, chain)
+        }
+        "resnet50" | "resnet" => {
+            // One bottleneck per stage, widths doubling per stage —
+            // the tiny analogue of the ResNet-50 ladder.
+            let widths: Vec<(usize, usize)> =
+                (0..blocks.max(1)).map(|g| (4 << g, 16 << g)).collect();
+            let specs = tiny_resnet_layers(&widths);
+            let chain = resnet_chain(id.as_str(), &specs)?;
+            (specs, chain)
+        }
+        "mlp" => {
+            // The uniform gemv+relu ladder as an explicit chain — the
+            // chain-valid MLP tenant for zoo deployments.
+            let width: usize = args.get("width", 32)?;
+            let n_layers: usize = args.get("layers", 3)?;
+            let specs: Vec<f2f::models::LayerSpec> = (0..n_layers)
+                .map(|i| f2f::models::LayerSpec {
+                    name: format!("mlp/fc{i}"),
+                    rows: width,
+                    cols: width,
+                })
+                .collect();
+            let names: Vec<String> =
+                specs.iter().map(|s| s.name.clone()).collect();
+            let chain =
+                f2f::container::ChainSpec::uniform(id.as_str(), &names);
+            (specs, chain)
+        }
+        m => bail!("--chain supports transformer|resnet50|mlp, not {m}"),
+    };
+
+    let layers: Vec<SyntheticLayer> = specs
+        .iter()
+        .map(|s| SyntheticLayer::generate(s, WeightGen::default(), seed))
+        .collect();
+    let cfg = CompressionConfig {
+        sparsity,
+        n_s,
+        method: PruneMethod::Magnitude,
+        seed,
+        beam: if beam < 0 { None } else { Some(beam as u32) },
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let (container, reports) =
+        Compressor::new(cfg).compress_model(&layers, Dtype::I8);
+    let dt = t0.elapsed();
+
+    let mut table = f2f::report::Table::new(
+        &format!(
+            "compress --chain {model} S={sparsity} N_s={n_s} ({dt:?})"
+        ),
+        &["layer", "shape", "E%", "mem_reduction%"],
+    );
+    for (r, s) in reports.iter().zip(&specs) {
+        table.row(vec![
+            r.name.clone(),
+            format!("{}x{}", s.rows, s.cols),
+            format!("{:.2}", r.efficiency),
+            format!("{:.2}", r.memory_reduction),
+        ]);
+    }
+    print!("{}", table.render());
+    let n_chain_layers = chain.layer_names().len();
+    let n_steps = chain.steps.len();
+    let bytes =
+        f2f::container::write_container_v3(&container, &[chain]);
+    std::fs::write(&out, bytes)?;
+    println!(
+        "wrote {out} (v3, chain {id:?}: {n_steps} steps over \
+         {n_chain_layers} layers) — serve it with \
+         `f2f serve --models {id}={out}`"
+    );
+    Ok(())
+}
+
 fn cmd_inspect(args: &Args) -> Result<()> {
     let path = args.pos(1)?;
     let bytes = std::fs::read(path)?;
-    let layout = if bytes.len() >= 4 && &bytes[..4] == b"F2F2" {
-        "v2 indexed"
+    let version = if bytes.len() >= 8 && &bytes[..4] == b"F2F2" {
+        u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]])
     } else {
-        "v1"
+        1
+    };
+    let layout = match version {
+        1 => "v1",
+        3 => "v3 indexed+chains",
+        _ => "v2 indexed",
     };
     let c = f2f::container::read_container(&bytes)?;
     let mut table = f2f::report::Table::new(
@@ -206,6 +335,17 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", table.render());
+    if version >= 3 {
+        let index = f2f::container::ContainerIndex::parse(&bytes)?;
+        for chain in index.chains() {
+            println!(
+                "chain {:?}: {} steps over {} layers",
+                chain.model,
+                chain.steps.len(),
+                chain.layer_names().len()
+            );
+        }
+    }
     Ok(())
 }
 
@@ -455,6 +595,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         f2f::obs::events::set_sink_path(path)?;
         println!("event journal: {events_out} (JSONL, incremental)");
+    }
+
+    // `--models` switches serve into the zoo path: N pre-compressed
+    // containers behind one shared-budget registry, instead of
+    // compressing a synthetic MLP here.
+    let models_spec = args.get_str("models", "");
+    if !models_spec.is_empty() {
+        return serve_zoo(args, &models_spec);
     }
 
     // Compress a multi-layer MLP-shaped model into an indexed container.
@@ -847,6 +995,587 @@ fn run_load_for(
         run_load(server, requests, width, seed.wrapping_add(round))?;
         round += 1;
     }
+    Ok(())
+}
+
+/// Parse `--models id=path,…` (bare `path` entries take the file stem
+/// as id) and load each container as a zoo tenant. v3 containers
+/// bring their recorded chain; v1/v2 serve as the uniform gemv+relu
+/// ladder.
+fn load_zoo(spec: &str) -> Result<Vec<f2f::registry::ZooModel>> {
+    let mut zoo = Vec::new();
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let (id, path) = match part.split_once('=') {
+            Some((id, path)) => (id.to_string(), path),
+            None => {
+                let stem = std::path::Path::new(part)
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or(part);
+                (stem.to_string(), part)
+            }
+        };
+        zoo.push(f2f::registry::ZooModel::from_path(id, path)?);
+    }
+    if zoo.is_empty() {
+        bail!("--models needs at least one id=path entry");
+    }
+    Ok(zoo)
+}
+
+/// `serve --models`: the zoo serving path. One shared-budget
+/// [`f2f::registry::ModelRegistry`] executes every tenant's chain
+/// over the same store set (single store, or `--shards` in-process
+/// shards), the load interleaves tenants request by request (batches
+/// stay model-pure), and the ops plane gains per-model stats.
+fn serve_zoo(args: &Args, spec: &str) -> Result<()> {
+    use f2f::container::ShardAssignment;
+    use f2f::coordinator::{InferenceServer, ServerConfig};
+    use f2f::obs::stats::{LiveSources, ModelLiveStats};
+    use f2f::registry::{ModelRegistry, MODEL_SEP};
+    use f2f::shard::CostProfile;
+    use f2f::store::{ReadaheadPolicy, StoreConfig, StoreMetrics};
+    use std::sync::Arc;
+
+    let requests: usize = args.get("requests", 2000)?;
+    let max_batch: usize = args.get("batch", 16)?;
+    let seed: u64 = args.get("seed", 7)?;
+    let cache_kb: usize = args.get("cache-kb", 0)?;
+    let decode_threads: usize = args.get("decode-threads", 0)?;
+    let readahead: ReadaheadPolicy =
+        args.get_str("readahead", "on").parse()?;
+    let decode_mode: f2f::kernels::DecodeMode =
+        args.get_str("decode-mode", "materialized")
+            .parse()
+            .map_err(|e: String| anyhow::anyhow!(e))?;
+    let n_shards: usize = args.get("shards", 1)?;
+    let shard_procs: usize = args.get("shard-procs", 0)?;
+    let show_timing = args.flag("timing");
+    let trace_out = args.get_str("trace-out", "");
+    let metrics_out = args.get_str("metrics-out", "");
+    let stats_socket = args.get_str("stats-socket", "");
+    let duration_s: u64 = args.get("duration-s", 0)?;
+
+    let zoo = load_zoo(spec)?;
+    let ids: Vec<String> = zoo.iter().map(|m| m.id.clone()).collect();
+    let budget = if cache_kb == 0 { usize::MAX } else { cache_kb << 10 };
+    let store_config = StoreConfig {
+        cache_budget_bytes: budget,
+        decode_workers: decode_threads,
+        decode_mode,
+    };
+
+    if shard_procs > 0 {
+        #[cfg(unix)]
+        return serve_zoo_multiproc(args, zoo, shard_procs, store_config);
+        #[cfg(not(unix))]
+        bail!("--shard-procs requires unix domain sockets (unix only)");
+    }
+
+    let registry = if n_shards <= 1 {
+        ModelRegistry::new(&zoo, store_config)?
+    } else {
+        ModelRegistry::new_sharded(
+            &zoo,
+            n_shards,
+            ShardAssignment::ByBytes,
+            store_config,
+        )?
+    }
+    .with_readahead(readahead);
+    let stores = registry.stores().to_vec();
+    let budget_label = if budget == usize::MAX {
+        "unbounded".to_string()
+    } else {
+        format!("{} KiB", budget >> 10)
+    };
+    println!(
+        "zoo: {} models over {} shared store(s), budget {budget_label} \
+         per store, readahead {readahead}, decode-mode {decode_mode}",
+        ids.len(),
+        stores.len(),
+    );
+    let mut chain_counts: Vec<(String, u64)> = Vec::new();
+    for id in &ids {
+        let Some(chain) = registry.chain(id) else { continue };
+        println!(
+            "model {id}: {} steps over {} layers, {} -> {}",
+            chain.n_steps(),
+            chain.layers().len(),
+            chain.input_dim(),
+            chain.output_dim(),
+        );
+        chain_counts.push((id.clone(), chain.layers().len() as u64));
+    }
+
+    let server = InferenceServer::start(
+        ServerConfig { max_batch, ..Default::default() },
+        move || Box::new(registry),
+    )?;
+    let live = {
+        let s1 = stores.clone();
+        let s2 = stores.clone();
+        let s3 = stores.clone();
+        let metrics = server.metrics_handle();
+        let inflight = server.inflight_handle();
+        let capacity = server.queue_capacity();
+        let handles = server.model_metrics_handles();
+        LiveSources::new(
+            Arc::new(move || {
+                let n = s1.len();
+                s1.iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        let name = if n == 1 {
+                            "store".to_string()
+                        } else {
+                            format!("shard {i}")
+                        };
+                        (name, s.metrics())
+                    })
+                    .collect()
+            }),
+            Arc::new(move || {
+                CostProfile::from_stores(s2.iter().map(|s| s.costs()))
+                    .entries()
+            }),
+        )
+        .with_server(Arc::new(move || metrics.snapshot()))
+        .with_queue(Arc::new(move || {
+            (
+                inflight.load(std::sync::atomic::Ordering::Relaxed),
+                capacity,
+            )
+        }))
+        .with_models(Arc::new(move || {
+            handles
+                .iter()
+                .map(|(id, m)| {
+                    let snap = m.snapshot();
+                    let prefix = format!("{id}{MODEL_SEP}");
+                    let mut cached_layers = 0u64;
+                    let mut cached_bytes = 0u64;
+                    for s in &s3 {
+                        for (name, b) in s.cached_entries() {
+                            if name.starts_with(&prefix) {
+                                cached_layers += 1;
+                                cached_bytes += b as u64;
+                            }
+                        }
+                    }
+                    let chain_layers = chain_counts
+                        .iter()
+                        .find(|(cid, _)| cid == id)
+                        .map(|&(_, n)| n)
+                        .unwrap_or(0);
+                    (
+                        id.clone(),
+                        ModelLiveStats {
+                            completed: snap.completed,
+                            errors: snap.errors,
+                            p50: snap.p50,
+                            p99: snap.p99,
+                            mean_batch_size: snap.mean_batch_size(),
+                            chain_layers,
+                            cached_layers,
+                            cached_bytes,
+                        },
+                    )
+                })
+                .collect()
+        }))
+    };
+    let ops =
+        start_ops_plane(&stats_socket, &trace_out, &metrics_out, &live)?;
+    run_zoo_load(&server, &ids, requests, seed, duration_s)?;
+    // Let trailing cross-tenant readahead decodes land so the printed
+    // counters are stable run to run.
+    for s in &stores {
+        s.wait_for_idle();
+    }
+    let mut total = StoreMetrics::default();
+    let mut store_metrics = Vec::new();
+    for (i, s) in stores.iter().enumerate() {
+        let name = if stores.len() == 1 {
+            "store".to_string()
+        } else {
+            format!("shard {i}")
+        };
+        let sm = s.metrics();
+        print_store_metrics(&name, &sm);
+        total.merge(&sm);
+        store_metrics.push((name, sm));
+    }
+    if stores.len() > 1 {
+        print_store_metrics("all shards", &total);
+    }
+    let profile =
+        CostProfile::from_stores(stores.iter().map(|s| s.costs()));
+    for id in &ids {
+        if let Some(m) = server.model_metrics(id) {
+            println!(
+                "model {id}: completed={} errors={} p50={:?} p99={:?} \
+                 mean_batch={:.1}",
+                m.completed,
+                m.errors,
+                m.p50,
+                m.p99,
+                m.mean_batch_size(),
+            );
+        }
+        if show_timing {
+            let prefix = format!("{id}{MODEL_SEP}");
+            let costs: Vec<_> = profile
+                .entries()
+                .into_iter()
+                .filter_map(|(name, c)| {
+                    name.strip_prefix(&prefix)
+                        .map(|bare| (bare.to_string(), c))
+                })
+                .collect();
+            print_cost_table(&format!("model {id}"), &costs);
+        }
+    }
+    let snap = server.metrics();
+    drop(ops);
+    server.shutdown();
+    export_observability(
+        &trace_out,
+        &metrics_out,
+        show_timing,
+        &snap,
+        &store_metrics,
+        &profile.entries(),
+        Vec::new(),
+    );
+    Ok(())
+}
+
+/// `serve --models --shard-procs N`: shard the *merged* zoo container
+/// across N supervised worker processes and serve every tenant
+/// through [`f2f::registry::ModelRegistry::over_ipc`] — fetches ride
+/// model-scoped wire frames, one shard can hold layers of several
+/// tenants, and a killed worker heals through the supervisor's revive
+/// path mid-zoo.
+#[cfg(unix)]
+fn serve_zoo_multiproc(
+    args: &Args,
+    zoo: Vec<f2f::registry::ZooModel>,
+    shard_procs: usize,
+    store_config: f2f::store::StoreConfig,
+) -> Result<()> {
+    use f2f::container::{
+        split_container, write_container_v2, ShardAssignment,
+    };
+    use f2f::coordinator::{InferenceServer, ServerConfig};
+    use f2f::ipc::{ProcRouter, Supervisor, WorkerSpec};
+    use f2f::obs::stats::{LiveSources, ModelLiveStats};
+    use f2f::registry::{merge_zoo, ModelRegistry, MODEL_SEP};
+    use f2f::store::StoreMetrics;
+    use std::sync::Arc;
+
+    let requests: usize = args.get("requests", 2000)?;
+    let max_batch: usize = args.get("batch", 16)?;
+    let seed: u64 = args.get("seed", 7)?;
+    let readahead: f2f::store::ReadaheadPolicy =
+        args.get_str("readahead", "on").parse()?;
+    let show_timing = args.flag("timing");
+    let trace_out = args.get_str("trace-out", "");
+    let metrics_out = args.get_str("metrics-out", "");
+    let stats_socket = args.get_str("stats-socket", "");
+    let duration_s: u64 = args.get("duration-s", 0)?;
+    let workdir_arg = args.get_str("workdir", "");
+
+    let ids: Vec<String> = zoo.iter().map(|m| m.id.clone()).collect();
+    let merged = merge_zoo(&zoo)?;
+    let bytes = write_container_v2(&merged.container);
+
+    let (workdir, ephemeral) = if workdir_arg.is_empty() {
+        (
+            std::env::temp_dir().join(format!(
+                "f2f-serve-zoo-{}",
+                std::process::id()
+            )),
+            true,
+        )
+    } else {
+        (std::path::PathBuf::from(&workdir_arg), false)
+    };
+    std::fs::create_dir_all(&workdir)?;
+    std::fs::write(workdir.join("zoo.f2f"), &bytes)?;
+    let (map, shard_bytes) =
+        split_container(&bytes, shard_procs, ShardAssignment::ByBytes)?;
+    std::fs::write(workdir.join("zoo.shardmap"), map.to_bytes())?;
+
+    let binary = std::env::current_exe()?;
+    let mut specs = Vec::new();
+    for (i, b) in shard_bytes.iter().enumerate() {
+        let shard_path = workdir.join(format!("zoo.shard{i}.f2f"));
+        std::fs::write(&shard_path, b)?;
+        specs.push(WorkerSpec {
+            binary: binary.clone(),
+            shard_path,
+            socket_path: workdir.join(format!("shard{i}.sock")),
+            cache_kb: if store_config.cache_budget_bytes == usize::MAX {
+                0
+            } else {
+                store_config.cache_budget_bytes >> 10
+            },
+            decode_threads: store_config.decode_workers,
+            decode_mode: store_config.decode_mode,
+            flight_dir: Some(workdir.clone()),
+        });
+    }
+    let sup = Supervisor::spawn(specs)?;
+    println!(
+        "zoo: {} models across {} shard workers (merged container, \
+         cross-tenant shards)",
+        ids.len(),
+        sup.n_workers(),
+    );
+    for i in 0..sup.n_workers() {
+        let layers: Vec<&str> = map.layers_of(i).collect();
+        println!("worker {i}: layers [{}]", layers.join(","));
+    }
+
+    let registry =
+        ModelRegistry::over_ipc(&zoo, &map, sup.clients().to_vec())?
+            .with_supervisor(sup.clone())
+            .with_readahead(readahead);
+    let local_costs = registry.costs().clone();
+    let mut chain_counts: Vec<(String, u64)> = Vec::new();
+    for id in &ids {
+        if let Some(chain) = registry.chain(id) {
+            println!(
+                "model {id}: {} steps over {} layers, {} -> {}",
+                chain.n_steps(),
+                chain.layers().len(),
+                chain.input_dim(),
+                chain.output_dim(),
+            );
+            chain_counts
+                .push((id.clone(), chain.layers().len() as u64));
+        }
+    }
+    let clients: Vec<_> = sup.clients().to_vec();
+    let server = InferenceServer::start(
+        ServerConfig { max_batch, ..Default::default() },
+        move || Box::new(registry),
+    )?;
+    let live = {
+        let c1 = clients.clone();
+        let c2 = clients.clone();
+        let local = local_costs.clone();
+        let metrics = server.metrics_handle();
+        let inflight = server.inflight_handle();
+        let capacity = server.queue_capacity();
+        let handles = server.model_metrics_handles();
+        LiveSources::new(
+            Arc::new(move || {
+                c1.iter()
+                    .enumerate()
+                    .filter_map(|(i, c)| {
+                        c.metrics()
+                            .ok()
+                            .map(|m| (format!("worker {i}"), m))
+                    })
+                    .collect()
+            }),
+            Arc::new(move || {
+                let mut profile = f2f::shard::CostProfile::default();
+                for c in &c2 {
+                    if let Ok(p) = c.cost_profile() {
+                        for (name, cost) in p.entries() {
+                            profile.record(&name, cost);
+                        }
+                    }
+                }
+                for (name, cost) in local.snapshot() {
+                    profile.record(&name, cost);
+                }
+                profile.entries()
+            }),
+        )
+        .with_server(Arc::new(move || metrics.snapshot()))
+        .with_queue(Arc::new(move || {
+            (
+                inflight.load(std::sync::atomic::Ordering::Relaxed),
+                capacity,
+            )
+        }))
+        .with_models(Arc::new(move || {
+            handles
+                .iter()
+                .map(|(id, m)| {
+                    let snap = m.snapshot();
+                    let chain_layers = chain_counts
+                        .iter()
+                        .find(|(cid, _)| cid == id)
+                        .map(|&(_, n)| n)
+                        .unwrap_or(0);
+                    (
+                        id.clone(),
+                        ModelLiveStats {
+                            completed: snap.completed,
+                            errors: snap.errors,
+                            p50: snap.p50,
+                            p99: snap.p99,
+                            mean_batch_size: snap.mean_batch_size(),
+                            chain_layers,
+                            // Residency lives in the workers; the
+                            // per-worker shard rows carry it.
+                            cached_layers: 0,
+                            cached_bytes: 0,
+                        },
+                    )
+                })
+                .collect()
+        }))
+    };
+    let ops =
+        start_ops_plane(&stats_socket, &trace_out, &metrics_out, &live)?;
+    run_zoo_load(&server, &ids, requests, seed, duration_s)?;
+    let model_snaps: Vec<(String, f2f::coordinator::MetricsSnapshot)> =
+        ids.iter()
+            .filter_map(|id| {
+                server.model_metrics(id).map(|m| (id.clone(), m))
+            })
+            .collect();
+    let server_snap = server.metrics();
+    drop(ops);
+    server.shutdown();
+
+    let mut total = StoreMetrics::default();
+    let mut worker_metrics = Vec::new();
+    for (i, client) in clients.iter().enumerate() {
+        match client.metrics() {
+            Ok(m) => {
+                print_store_metrics(&format!("worker {i}"), &m);
+                total.merge(&m);
+                worker_metrics.push((format!("worker {i}"), m));
+            }
+            Err(e) => println!("worker {i}: metrics unavailable ({e})"),
+        }
+    }
+    print_store_metrics("all workers", &total);
+    println!("supervisor: {} worker restarts", sup.restarts());
+    for (id, m) in &model_snaps {
+        println!(
+            "model {id}: completed={} errors={} p50={:?} p99={:?} \
+             mean_batch={:.1}",
+            m.completed,
+            m.errors,
+            m.p50,
+            m.p99,
+            m.mean_batch_size(),
+        );
+    }
+    // Teardown reporting degrades per-worker, exactly like the
+    // single-model multiproc path.
+    let profile =
+        match ProcRouter::merged_profile(&clients, &local_costs) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                println!("cost profile unavailable ({e:#})");
+                None
+            }
+        };
+    if let Some(profile) = &profile {
+        if show_timing {
+            for id in &ids {
+                let prefix = format!("{id}{MODEL_SEP}");
+                let costs: Vec<_> = profile
+                    .entries()
+                    .into_iter()
+                    .filter_map(|(name, c)| {
+                        name.strip_prefix(&prefix)
+                            .map(|bare| (bare.to_string(), c))
+                    })
+                    .collect();
+                print_cost_table(&format!("model {id}"), &costs);
+            }
+        }
+    }
+    export_observability(
+        &trace_out,
+        &metrics_out,
+        show_timing,
+        &server_snap,
+        &worker_metrics,
+        &profile.as_ref().map(|p| p.entries()).unwrap_or_default(),
+        Vec::new(),
+    );
+    sup.shutdown();
+    if ephemeral {
+        let _ = std::fs::remove_dir_all(&workdir);
+    } else {
+        println!(
+            "kept workdir {} (merged zoo container + shards + map)",
+            workdir.display()
+        );
+    }
+    Ok(())
+}
+
+/// Interleave `requests` across the zoo's tenants round-robin —
+/// model-pure batches, cross-model cache pressure — then keep
+/// replaying until the `--duration-s` wall-clock budget is spent.
+fn run_zoo_load(
+    server: &f2f::coordinator::InferenceServer,
+    ids: &[String],
+    requests: usize,
+    seed: u64,
+    duration_s: u64,
+) -> Result<()> {
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(duration_s);
+    run_zoo_round(server, ids, requests, seed)?;
+    let mut round = 1u64;
+    while std::time::Instant::now() < deadline {
+        run_zoo_round(server, ids, requests, seed.wrapping_add(round))?;
+        round += 1;
+    }
+    Ok(())
+}
+
+/// One interleaved pass: request `r` goes to tenant `r % N`, sized to
+/// that tenant's input width.
+fn run_zoo_round(
+    server: &f2f::coordinator::InferenceServer,
+    ids: &[String],
+    requests: usize,
+    seed: u64,
+) -> Result<()> {
+    let dims = ids
+        .iter()
+        .map(|id| {
+            server.model_input_dim(id).ok_or_else(|| {
+                anyhow::anyhow!("server has no model {id:?}")
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut rng = f2f::rng::Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for r in 0..requests {
+        let i = r % ids.len();
+        let x: Vec<f32> =
+            (0..dims[i]).map(|_| rng.next_f32() - 0.5).collect();
+        pending.push(server.infer_model_async(&ids[i], x));
+    }
+    for p in pending {
+        p.recv()??;
+    }
+    let dt = t0.elapsed();
+    let m = server.metrics();
+    println!(
+        "{requests} requests across {} models in {dt:?} \
+         ({:.0} req/s), batches={} mean_batch={:.1}",
+        ids.len(),
+        requests as f64 / dt.as_secs_f64(),
+        m.batches,
+        m.mean_batch_size()
+    );
     Ok(())
 }
 

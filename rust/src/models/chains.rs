@@ -1,0 +1,355 @@
+//! Chain builders: executable [`ChainSpec`]s for the benchmark layer
+//! tables.
+//!
+//! The layer tables in [`super::layers`] follow the paper's naming
+//! conventions (`enc0/self_att/q`, `group1_layer0_conv2`, …); these
+//! builders turn a table into the chain the registry executes —
+//! attention Q/K/V/output groups with sublayer residuals for the
+//! Transformer, conv-as-GEMM bottlenecks with downsampled skip links
+//! for ResNet. Both are name-driven, so scaled-down tables with the
+//! same naming scheme ([`tiny_transformer_layers`],
+//! [`tiny_resnet_layers`]) produce valid chains too.
+
+use super::LayerSpec;
+use crate::container::{
+    Activation, ChainSpec, ChainStep, Residual, StepInput, StepKind,
+};
+use anyhow::{bail, Result};
+
+/// Build the Transformer chain from a layer table using the
+/// `{block}/self_att/{q,k,v,output}`, `{block}/enc_att/…`,
+/// `{block}/ffn1`, `{block}/ffn2` naming scheme.
+///
+/// Semantics (documented simplifications, all dimension-honest):
+/// sequence length 1, so each attention step runs all four matmuls
+/// and its single score softmaxes to 1; decoder cross-attention reads
+/// the running stream as its memory. Attention sublayers add their
+/// own input (`x + Att(x)`); the FFN pair adds the activation that
+/// entered `ffn1` after `ffn2` completes.
+pub fn transformer_chain(
+    model: impl Into<String>,
+    specs: &[LayerSpec],
+) -> Result<ChainSpec> {
+    let exists =
+        |name: &str| specs.iter().any(|s| s.name == name);
+    let mut steps: Vec<ChainStep> = Vec::new();
+    for spec in specs {
+        if let Some(prefix) = spec.name.strip_suffix("/q") {
+            let part = |m: &str| format!("{prefix}/{m}");
+            for m in ["k", "v", "output"] {
+                if !exists(&part(m)) {
+                    bail!(
+                        "attention group {prefix:?} is missing its \
+                         {m:?} projection"
+                    );
+                }
+            }
+            steps.push(ChainStep {
+                kind: StepKind::Attention {
+                    q: spec.name.clone(),
+                    k: part("k"),
+                    v: part("v"),
+                    output: part("output"),
+                },
+                input: StepInput::Prev,
+                residual: Residual::OwnInput,
+                activation: Activation::None,
+            });
+        } else if spec.name.ends_with("/ffn1") {
+            steps.push(ChainStep {
+                kind: StepKind::Gemv { layer: spec.name.clone() },
+                input: StepInput::Prev,
+                residual: Residual::None,
+                activation: Activation::Relu,
+            });
+        } else if spec.name.ends_with("/ffn2") {
+            // The FFN sublayer residual: add what entered ffn1 — the
+            // output of the step before it (the attention sublayer).
+            let Some(ffn1_idx) = steps.len().checked_sub(1) else {
+                bail!("{}: ffn2 with no preceding ffn1", spec.name);
+            };
+            let residual = match ffn1_idx.checked_sub(1) {
+                Some(att_idx) => Residual::Step(att_idx),
+                None => Residual::ChainInput,
+            };
+            steps.push(ChainStep {
+                kind: StepKind::Gemv { layer: spec.name.clone() },
+                input: StepInput::Prev,
+                residual,
+                activation: Activation::None,
+            });
+        } else if spec.name.contains("_att/") {
+            // k/v/output members: consumed by their group's /q entry.
+            continue;
+        } else {
+            bail!(
+                "layer {:?} does not follow the transformer naming \
+                 scheme",
+                spec.name
+            );
+        }
+    }
+    let chain = ChainSpec { model: model.into(), steps };
+    chain.validate(exists)?;
+    Ok(chain)
+}
+
+/// Build the ResNet chain from a layer table using the `conv1` stem /
+/// `group{g}_layer{l}_{conv1,conv2,conv3,downsample}` / `fc` naming
+/// scheme. Convs execute as GEMM over im2col patches at
+/// 1×1-feature-map semantics (the incoming channel vector is tiled
+/// `kh·kw` times); each bottleneck adds its block input (through the
+/// 1×1 downsample conv when the block has one) before the final ReLU
+/// — the post-add activation of He et al. 2016.
+pub fn resnet_chain(
+    model: impl Into<String>,
+    specs: &[LayerSpec],
+) -> Result<ChainSpec> {
+    let find = |name: &str| specs.iter().find(|s| s.name == name);
+    let conv = |spec: &LayerSpec, kh: usize, kw: usize| -> Result<StepKind> {
+        let patch = kh * kw;
+        if patch == 0 || spec.cols % patch != 0 {
+            bail!(
+                "{}: cols {} not divisible by the {kh}x{kw} kernel",
+                spec.name,
+                spec.cols
+            );
+        }
+        Ok(StepKind::Conv {
+            layer: spec.name.clone(),
+            kh,
+            kw,
+            in_ch: spec.cols / patch,
+            out_ch: spec.rows,
+        })
+    };
+    let mut steps: Vec<ChainStep> = Vec::new();
+    for spec in specs {
+        if spec.name == "conv1" {
+            steps.push(ChainStep {
+                kind: conv(spec, 7, 7)?,
+                input: StepInput::ChainInput,
+                residual: Residual::None,
+                activation: Activation::Relu,
+            });
+        } else if let Some(base) = spec.name.strip_suffix("_conv1") {
+            if !base.starts_with("group") {
+                bail!("layer {:?}: unexpected conv1 prefix", spec.name);
+            }
+            let Some(c2) = find(&format!("{base}_conv2")) else {
+                bail!("block {base:?} is missing conv2");
+            };
+            let Some(c3) = find(&format!("{base}_conv3")) else {
+                bail!("block {base:?} is missing conv3");
+            };
+            let ds = find(&format!("{base}_downsample"));
+            // The block input is whatever the chain produced so far.
+            let block_input = steps.len().checked_sub(1);
+            let input_of = |idx: Option<usize>| match idx {
+                Some(i) => StepInput::Step(i),
+                None => StepInput::ChainInput,
+            };
+            // Downsample first (when present) so conv3 can reference
+            // it as an earlier step; it reads the block input, not
+            // the main path.
+            let skip = if let Some(ds) = ds {
+                steps.push(ChainStep {
+                    kind: conv(ds, 1, 1)?,
+                    input: input_of(block_input),
+                    residual: Residual::None,
+                    activation: Activation::None,
+                });
+                Residual::Step(steps.len() - 1)
+            } else {
+                match block_input {
+                    Some(i) => Residual::Step(i),
+                    None => Residual::ChainInput,
+                }
+            };
+            steps.push(ChainStep {
+                kind: conv(spec, 1, 1)?,
+                input: input_of(block_input),
+                residual: Residual::None,
+                activation: Activation::Relu,
+            });
+            steps.push(ChainStep {
+                kind: conv(c2, 3, 3)?,
+                input: StepInput::Prev,
+                residual: Residual::None,
+                activation: Activation::Relu,
+            });
+            steps.push(ChainStep {
+                kind: conv(c3, 1, 1)?,
+                input: StepInput::Prev,
+                residual: skip,
+                activation: Activation::Relu,
+            });
+        } else if spec.name.ends_with("_conv2")
+            || spec.name.ends_with("_conv3")
+            || spec.name.ends_with("_downsample")
+        {
+            continue; // consumed by the block's conv1 entry
+        } else if spec.name == "fc" {
+            steps.push(ChainStep::gemv("fc", Activation::None));
+        } else {
+            bail!(
+                "layer {:?} does not follow the resnet naming scheme",
+                spec.name
+            );
+        }
+    }
+    let chain = ChainSpec { model: model.into(), steps };
+    chain.validate(|name| specs.iter().any(|s| s.name == name))?;
+    Ok(chain)
+}
+
+/// A scaled-down encoder-only Transformer table with the canonical
+/// naming scheme — chain-valid via [`transformer_chain`], small
+/// enough to compress in tests and CI.
+pub fn tiny_transformer_layers(
+    n_blocks: usize,
+    d_model: usize,
+    d_ff: usize,
+) -> Vec<LayerSpec> {
+    let mut layers = Vec::new();
+    for i in 0..n_blocks {
+        for m in ["q", "k", "v", "output"] {
+            layers.push(LayerSpec {
+                name: format!("enc{i}/self_att/{m}"),
+                rows: d_model,
+                cols: d_model,
+            });
+        }
+        layers.push(LayerSpec {
+            name: format!("enc{i}/ffn1"),
+            rows: d_ff,
+            cols: d_model,
+        });
+        layers.push(LayerSpec {
+            name: format!("enc{i}/ffn2"),
+            rows: d_model,
+            cols: d_ff,
+        });
+    }
+    layers
+}
+
+/// A scaled-down ResNet table (stem + one bottleneck per width stage
+/// + fc) with the canonical naming scheme — chain-valid via
+/// [`resnet_chain`].
+pub fn tiny_resnet_layers(widths: &[(usize, usize)]) -> Vec<LayerSpec> {
+    let mut layers = Vec::new();
+    let stem_out = widths.first().map_or(8, |&(mid, _)| mid.max(2));
+    layers.push(LayerSpec {
+        name: "conv1".into(),
+        rows: stem_out,
+        cols: 7 * 7 * 3,
+    });
+    let mut in_ch = stem_out;
+    for (g, &(mid, out)) in widths.iter().enumerate() {
+        let g1 = g + 1;
+        layers.push(LayerSpec {
+            name: format!("group{g1}_layer0_conv1"),
+            rows: mid,
+            cols: in_ch,
+        });
+        layers.push(LayerSpec {
+            name: format!("group{g1}_layer0_conv2"),
+            rows: mid,
+            cols: 3 * 3 * mid,
+        });
+        layers.push(LayerSpec {
+            name: format!("group{g1}_layer0_conv3"),
+            rows: out,
+            cols: mid,
+        });
+        layers.push(LayerSpec {
+            name: format!("group{g1}_layer0_downsample"),
+            rows: out,
+            cols: in_ch,
+        });
+        in_ch = out;
+    }
+    layers.push(LayerSpec { name: "fc".into(), rows: 10, cols: in_ch });
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{resnet50_layers, transformer_layers};
+    use super::*;
+
+    #[test]
+    fn full_transformer_table_builds_a_chain() {
+        let specs = transformer_layers();
+        let chain = transformer_chain("tf", &specs).unwrap();
+        // 6 enc blocks × (att + ffn1 + ffn2) + 6 dec × (2 att + 2 ffn).
+        assert_eq!(chain.steps.len(), 6 * 3 + 6 * 4);
+        // Every layer of the table is consumed exactly once.
+        let mut names = chain.layer_names();
+        names.sort_unstable();
+        let mut want: Vec<&str> =
+            specs.iter().map(|s| s.name.as_str()).collect();
+        want.sort_unstable();
+        assert_eq!(names, want);
+        // FFN residuals skip back to the attention sublayer output.
+        let ffn2 = chain
+            .steps
+            .iter()
+            .position(|s| {
+                matches!(&s.kind, StepKind::Gemv { layer } if layer == "enc0/ffn2")
+            })
+            .unwrap();
+        assert_eq!(chain.steps[ffn2].residual, Residual::Step(ffn2 - 2));
+    }
+
+    #[test]
+    fn full_resnet_table_builds_a_chain() {
+        let specs = resnet50_layers();
+        let chain = resnet_chain("rn", &specs).unwrap();
+        // stem + 16 blocks × 3 convs + 4 downsamples + fc = 54 steps.
+        assert_eq!(chain.steps.len(), 54);
+        let mut names = chain.layer_names();
+        names.sort_unstable();
+        let mut want: Vec<&str> =
+            specs.iter().map(|s| s.name.as_str()).collect();
+        want.sort_unstable();
+        assert_eq!(names, want);
+        // First block: downsample precedes conv1 and is the residual.
+        assert!(matches!(
+            &chain.steps[1].kind,
+            StepKind::Conv { layer, .. } if layer == "group1_layer0_downsample"
+        ));
+        assert_eq!(chain.steps[4].residual, Residual::Step(1));
+        // Identity blocks skip straight to the block input.
+        assert!(matches!(
+            &chain.steps[5].kind,
+            StepKind::Conv { layer, .. } if layer == "group1_layer1_conv1"
+        ));
+        assert_eq!(chain.steps[7].residual, Residual::Step(4));
+    }
+
+    #[test]
+    fn tiny_tables_are_chain_valid() {
+        let tf = tiny_transformer_layers(2, 32, 64);
+        assert_eq!(tf.len(), 12);
+        let chain = transformer_chain("t", &tf).unwrap();
+        assert_eq!(chain.steps.len(), 6);
+        let rn = tiny_resnet_layers(&[(4, 16), (8, 32)]);
+        let chain = resnet_chain("r", &rn).unwrap();
+        assert_eq!(chain.steps.len(), 1 + 2 * 4 + 1);
+    }
+
+    #[test]
+    fn malformed_tables_are_rejected() {
+        let mut tf = tiny_transformer_layers(1, 8, 16);
+        tf.retain(|s| s.name != "enc0/self_att/k");
+        let err = transformer_chain("t", &tf).unwrap_err();
+        assert!(format!("{err}").contains("missing"), "{err}");
+
+        let mut rn = tiny_resnet_layers(&[(4, 16)]);
+        rn.retain(|s| s.name != "group1_layer0_conv2");
+        let err = resnet_chain("r", &rn).unwrap_err();
+        assert!(format!("{err}").contains("missing conv2"), "{err}");
+    }
+}

@@ -11,12 +11,18 @@
 //! substitution argument; Table 2 of the paper itself validates that
 //! random vs trained weights compress near-identically.
 
+mod chains;
 mod layers;
 mod synth;
 
+pub use chains::{
+    resnet_chain, tiny_resnet_layers, tiny_transformer_layers,
+    transformer_chain,
+};
 pub use layers::{resnet50_layers, transformer_layers, LayerSpec};
 pub use synth::{
-    compressed_mlp, quantize_i8, MlpConfig, SyntheticLayer, WeightGen,
+    compressed_mlp, compressed_table, quantize_i8, MlpConfig,
+    SyntheticLayer, WeightGen,
 };
 
 #[cfg(test)]

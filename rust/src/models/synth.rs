@@ -130,6 +130,29 @@ pub fn compressed_mlp(cfg: &MlpConfig) -> (Container, Vec<LayerReport>) {
         cfg.dims.len() >= 2,
         "an MLP needs at least input and output dims"
     );
+    let specs: Vec<LayerSpec> = cfg
+        .dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| LayerSpec {
+            name: format!("{}{i}", cfg.name_prefix),
+            rows: w[1],
+            cols: w[0],
+        })
+        .collect();
+    compressed_table(&specs, cfg)
+}
+
+/// [`compressed_mlp`] generalized to an arbitrary layer table: the
+/// same synthetic-weight + INT8-quantize + fixed-to-fixed pipeline,
+/// geometry and names taken from `specs` (e.g. the Transformer /
+/// ResNet tables of [`super::layers`] or their `tiny_*` variants)
+/// instead of a uniform ladder. `cfg.dims` and `cfg.name_prefix` are
+/// ignored.
+pub fn compressed_table(
+    specs: &[LayerSpec],
+    cfg: &MlpConfig,
+) -> (Container, Vec<LayerReport>) {
     let compressor = Compressor::new(CompressionConfig {
         sparsity: cfg.sparsity,
         n_s: cfg.n_s,
@@ -139,19 +162,17 @@ pub fn compressed_mlp(cfg: &MlpConfig) -> (Container, Vec<LayerReport>) {
         ..Default::default()
     });
     let mut container = Container::default();
-    let mut reports = Vec::with_capacity(cfg.dims.len() - 1);
-    for (i, w) in cfg.dims.windows(2).enumerate() {
-        let (rows, cols) = (w[1], w[0]);
-        let name = format!("{}{i}", cfg.name_prefix);
-        let spec = LayerSpec { name: name.clone(), rows, cols };
+    let mut reports = Vec::with_capacity(specs.len());
+    for (i, spec) in specs.iter().enumerate() {
         let layer = SyntheticLayer::generate(
-            &spec,
+            spec,
             WeightGen::default(),
             cfg.seed.wrapping_add(i as u64),
         );
         let (q, scale) = quantize_i8(&layer.weights);
-        let (cl, rep) =
-            compressor.compress_i8(&name, rows, cols, &q, scale);
+        let (cl, rep) = compressor.compress_i8(
+            &spec.name, spec.rows, spec.cols, &q, scale,
+        );
         container.layers.push(cl);
         reports.push(rep);
     }

@@ -49,6 +49,32 @@ pub type StoresSource =
 pub type CostsSource =
     Arc<dyn Fn() -> Vec<(String, LayerCost)> + Send + Sync>;
 
+/// One zoo tenant's live view: its request window (per-model
+/// [`MetricsSnapshot`]) plus its slice of the shared cache.
+#[derive(Debug, Clone, Default)]
+pub struct ModelLiveStats {
+    /// Requests completed for this model.
+    pub completed: u64,
+    /// Requests failed for this model.
+    pub errors: u64,
+    /// Per-model request latency percentiles.
+    pub p50: std::time::Duration,
+    pub p99: std::time::Duration,
+    /// Mean executed batch size (batches never mix models).
+    pub mean_batch_size: f64,
+    /// Layers the model's chain fetches per pass.
+    pub chain_layers: u64,
+    /// This model's currently resident layers / bytes in the shared
+    /// store(s) (0 when residency is worker-side, i.e. over IPC).
+    pub cached_layers: u64,
+    pub cached_bytes: u64,
+}
+
+/// Source of per-model `(id, stats)` snapshots — attached when the
+/// process serves a [`crate::registry::ModelRegistry`] zoo.
+pub type ModelsSource =
+    Arc<dyn Fn() -> Vec<(String, ModelLiveStats)> + Send + Sync>;
+
 /// Live taps into a serving process. Every accessor snapshots *now* —
 /// nothing is cached, nothing waits for teardown. Cloning shares the
 /// underlying closures.
@@ -58,13 +84,20 @@ pub struct LiveSources {
     queue: Option<QueueSource>,
     stores: StoresSource,
     costs: CostsSource,
+    models: Option<ModelsSource>,
 }
 
 impl LiveSources {
     /// Sources over store metrics and a cost table (the minimum any
     /// serving process has).
     pub fn new(stores: StoresSource, costs: CostsSource) -> LiveSources {
-        LiveSources { server: None, queue: None, stores, costs }
+        LiveSources {
+            server: None,
+            queue: None,
+            stores,
+            costs,
+            models: None,
+        }
     }
 
     /// Add the coordinator's request-metrics source.
@@ -77,6 +110,18 @@ impl LiveSources {
     pub fn with_queue(mut self, queue: QueueSource) -> LiveSources {
         self.queue = Some(queue);
         self
+    }
+
+    /// Add the per-model source (zoo deployments).
+    pub fn with_models(mut self, models: ModelsSource) -> LiveSources {
+        self.models = Some(models);
+        self
+    }
+
+    /// Per-model snapshots, in registration order (empty when no
+    /// model source is attached — a single-model process).
+    pub fn models(&self) -> Vec<(String, ModelLiveStats)> {
+        self.models.as_ref().map(|m| m()).unwrap_or_default()
     }
 
     /// The coordinator's request metrics, when a server source is
@@ -241,8 +286,53 @@ impl LiveSources {
             push_num(&mut out, "gemv_samples", c.gemv_samples as f64);
             out.push('}');
         }
+        out.push('}');
+        if let Some(models) = self.models.as_ref() {
+            out.push_str(",\n \"models\": {");
+            for (i, (id, m)) in models().iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n   ");
+                }
+                out.push('"');
+                events::escape_into(id, &mut out);
+                out.push_str("\": {");
+                push_num(&mut out, "completed", m.completed as f64);
+                out.push_str(", ");
+                push_num(&mut out, "errors", m.errors as f64);
+                out.push_str(", ");
+                push_num(&mut out, "request_p50_us", dur_us(m.p50));
+                out.push_str(", ");
+                push_num(&mut out, "request_p99_us", dur_us(m.p99));
+                out.push_str(", ");
+                push_num(
+                    &mut out,
+                    "mean_batch_size",
+                    m.mean_batch_size,
+                );
+                out.push_str(", ");
+                push_num(
+                    &mut out,
+                    "chain_layers",
+                    m.chain_layers as f64,
+                );
+                out.push_str(", ");
+                push_num(
+                    &mut out,
+                    "cached_layers",
+                    m.cached_layers as f64,
+                );
+                out.push_str(", ");
+                push_num(
+                    &mut out,
+                    "cached_bytes",
+                    m.cached_bytes as f64,
+                );
+                out.push('}');
+            }
+            out.push('}');
+        }
         let totals = events::totals();
-        out.push_str("},\n \"events\": {");
+        out.push_str(",\n \"events\": {");
         push_num(&mut out, "emitted", totals.emitted as f64);
         out.push_str(", ");
         push_num(&mut out, "dropped", totals.dropped as f64);
@@ -310,6 +400,9 @@ pub struct StatsSnapshot {
     pub shards: Vec<(String, Fields)>,
     /// Per-layer cost estimates, keyed by layer name.
     pub layers: Vec<(String, Fields)>,
+    /// Per-model request/cache stats, keyed by model id (empty for
+    /// single-model processes).
+    pub models: Vec<(String, Fields)>,
     /// Journal counters (`emitted`, `dropped`).
     pub events: Fields,
 }
@@ -343,6 +436,9 @@ impl StatsSnapshot {
                 }
                 ("layers", Value::Object(groups)) => {
                     snap.layers = nested_fields(groups);
+                }
+                ("models", Value::Object(groups)) => {
+                    snap.models = nested_fields(groups);
                 }
                 _ => {} // schema/title/unknown: ignore
             }
@@ -416,6 +512,41 @@ impl StatsSnapshot {
             ]);
         }
         out.push_str(&shards.render());
+        if !self.models.is_empty() {
+            let mut models = Table::new(
+                "models",
+                &[
+                    "model",
+                    "done",
+                    "err",
+                    "batch",
+                    "p50/p99 µs",
+                    "chain",
+                    "cached",
+                    "cached KiB",
+                ],
+            );
+            for (id, f) in &self.models {
+                models.row(vec![
+                    id.clone(),
+                    format!("{:.0}", field(f, "completed")),
+                    format!("{:.0}", field(f, "errors")),
+                    format!("{:.1}", field(f, "mean_batch_size")),
+                    format!(
+                        "{:.0}/{:.0}",
+                        field(f, "request_p50_us"),
+                        field(f, "request_p99_us"),
+                    ),
+                    format!("{:.0}", field(f, "chain_layers")),
+                    format!("{:.0}", field(f, "cached_layers")),
+                    format!(
+                        "{:.0}",
+                        field(f, "cached_bytes") / 1024.0
+                    ),
+                ]);
+            }
+            out.push_str(&models.render());
+        }
         let mut layers = Table::new(
             "layers",
             &["layer", "decode µs", "gemv µs/item", "samples d/g"],
@@ -822,6 +953,54 @@ mod tests {
     }
 
     #[test]
+    fn models_section_round_trips_and_renders() {
+        let models: ModelsSource = Arc::new(|| {
+            vec![
+                (
+                    "chat".to_string(),
+                    ModelLiveStats {
+                        completed: 12,
+                        errors: 1,
+                        p50: Duration::from_micros(400),
+                        p99: Duration::from_micros(950),
+                        mean_batch_size: 2.5,
+                        chain_layers: 6,
+                        cached_layers: 4,
+                        cached_bytes: 8192,
+                    },
+                ),
+                ("rank".to_string(), ModelLiveStats::default()),
+            ]
+        });
+        let sources = fake_sources().with_models(models);
+        assert_eq!(sources.models().len(), 2);
+        let snap =
+            StatsSnapshot::parse_json(&sources.stats_json()).unwrap();
+        assert_eq!(snap.models.len(), 2);
+        let (id, f) = &snap.models[0];
+        assert_eq!(id, "chat");
+        assert_eq!(field(f, "completed"), 12.0);
+        assert_eq!(field(f, "errors"), 1.0);
+        assert_eq!(field(f, "request_p50_us"), 400.0);
+        assert_eq!(field(f, "request_p99_us"), 950.0);
+        assert_eq!(field(f, "mean_batch_size"), 2.5);
+        assert_eq!(field(f, "chain_layers"), 6.0);
+        assert_eq!(field(f, "cached_bytes"), 8192.0);
+        let view = snap.render();
+        assert!(view.contains("models"), "{view}");
+        assert!(view.contains("chat"), "{view}");
+        assert!(view.contains("rank"), "{view}");
+
+        // Without a model source the section is absent and the view
+        // unchanged — single-model processes emit byte-identical JSON.
+        let solo =
+            StatsSnapshot::parse_json(&fake_sources().stats_json())
+                .unwrap();
+        assert!(solo.models.is_empty());
+        assert!(!solo.render().contains("models"));
+    }
+
+    #[test]
     fn merged_metrics_fold_across_stores() {
         let stores: StoresSource = Arc::new(|| {
             let a = StoreMetrics { hits: 5, ..StoreMetrics::default() };
@@ -921,7 +1100,11 @@ mod tests {
         // A layer fetch is politely refused, connection stays usable.
         wire::send_request(
             &mut stream,
-            &Request::Fetch { layer: "x".into(), trace: 0 },
+            &Request::Fetch {
+                layer: "x".into(),
+                model: String::new(),
+                trace: 0,
+            },
         )
         .unwrap();
         assert!(matches!(

@@ -1,0 +1,593 @@
+//! Chain compilation: a wire [`ChainSpec`] resolved against real layer
+//! geometry into an executable step program.
+//!
+//! Compilation is where a chain stops being a description and starts
+//! being a contract: every referenced layer must exist, every step's
+//! input dimension must match what its source produces, residual adds
+//! must be shape-compatible, attention groups must agree on head
+//! geometry and conv steps on patch geometry. All of it is checked
+//! here, once, against the container index — nothing is decoded — so
+//! the serving hot path never discovers a shape bug mid-batch.
+
+use crate::container::{
+    Activation, ChainSpec, Residual, StepInput, StepKind,
+};
+use crate::kernels::ExecLayer;
+use anyhow::{bail, Context, Result};
+
+/// What one compiled step computes; layer references are implicit — a
+/// step consumes a contiguous run of the chain's flat layer list
+/// (`first_layer..=last_layer`), in [`StepKind::layer_names`] order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) enum StepOp {
+    /// `y = W·x` over the step's single layer.
+    Gemv,
+    /// Sequence-length-1 attention over `[q, k, v, output]`.
+    Attention,
+    /// Conv-as-GEMM: tile the incoming channel vector `kh·kw` times
+    /// into the im2col patch, then one GEMV.
+    Conv { kh: usize, kw: usize },
+}
+
+/// One step of a compiled chain: the operation, resolved data flow,
+/// and the flat-list span of layers it consumes.
+#[derive(Debug, Clone)]
+pub(crate) struct StepExec {
+    pub op: StepOp,
+    pub input: StepInput,
+    pub residual: Residual,
+    pub activation: Activation,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// First index into [`CompiledChain::layers`] this step consumes.
+    pub first_layer: usize,
+    /// Last (inclusive) index — readahead plans from here, so warming
+    /// looks past the whole step instead of at its own projections.
+    pub last_layer: usize,
+}
+
+/// A [`ChainSpec`] compiled against layer geometry: the flat fetch
+/// list (driving pinning and readahead) plus the validated step
+/// program the executor runs.
+#[derive(Debug, Clone)]
+pub struct CompiledChain {
+    model: String,
+    layers: Vec<String>,
+    steps: Vec<StepExec>,
+    input_dim: usize,
+    output_dim: usize,
+}
+
+impl CompiledChain {
+    /// Compile `spec`: resolve every layer name through `rename` (the
+    /// registry scopes to `{model}::{layer}` here; identity for a
+    /// plain container) and look up `(rows, cols)` through `dims`.
+    /// Errors name the model and step; nothing is decoded.
+    pub fn compile(
+        spec: &ChainSpec,
+        mut rename: impl FnMut(&str) -> String,
+        mut dims: impl FnMut(&str) -> Option<(usize, usize)>,
+    ) -> Result<Self> {
+        if spec.steps.is_empty() {
+            bail!("chain {:?} has no steps", spec.model);
+        }
+        let mut layers: Vec<String> = Vec::new();
+        let mut steps: Vec<StepExec> = Vec::new();
+        let mut out_dims: Vec<usize> = Vec::new();
+        // The chain's input dim is whatever the first step that reads
+        // the chain input demands; later readers must agree.
+        let mut chain_input: Option<usize> = None;
+        for (si, step) in spec.steps.iter().enumerate() {
+            let first_layer = layers.len();
+            let mut push = |name: &str| -> Result<(usize, usize)> {
+                let scoped = rename(name);
+                let Some(d) = dims(&scoped) else {
+                    bail!(
+                        "chain {:?} step {si}: layer {scoped:?} is not \
+                         in the store",
+                        spec.model
+                    );
+                };
+                layers.push(scoped);
+                Ok(d)
+            };
+            let (op, in_dim, out_dim) = match &step.kind {
+                StepKind::Gemv { layer } => {
+                    let (rows, cols) = push(layer)?;
+                    (StepOp::Gemv, cols, rows)
+                }
+                StepKind::Attention { q, k, v, output } => {
+                    let (qr, qc) = push(q)?;
+                    let (kr, kc) = push(k)?;
+                    let (vr, vc) = push(v)?;
+                    let (or_, oc) = push(output)?;
+                    if kc != qc || vc != qc {
+                        bail!(
+                            "chain {:?} step {si}: attention \
+                             projections disagree on input dim \
+                             (q {qc}, k {kc}, v {vc})",
+                            spec.model
+                        );
+                    }
+                    if kr != qr {
+                        bail!(
+                            "chain {:?} step {si}: q projects to {qr} \
+                             but k to {kr}",
+                            spec.model
+                        );
+                    }
+                    if oc != vr {
+                        bail!(
+                            "chain {:?} step {si}: output projection \
+                             expects {oc} but v produces {vr}",
+                            spec.model
+                        );
+                    }
+                    (StepOp::Attention, qc, or_)
+                }
+                StepKind::Conv { layer, kh, kw, in_ch, out_ch } => {
+                    let (rows, cols) = push(layer)?;
+                    let Some(patch) = kh
+                        .checked_mul(*kw)
+                        .and_then(|p| p.checked_mul(*in_ch))
+                        .filter(|p| *p > 0)
+                    else {
+                        bail!(
+                            "chain {:?} step {si}: degenerate conv \
+                             geometry {kh}x{kw}x{in_ch}",
+                            spec.model
+                        );
+                    };
+                    if cols != patch {
+                        bail!(
+                            "chain {:?} step {si}: conv layer has \
+                             {cols} cols but {kh}x{kw}x{in_ch} im2col \
+                             patches are {patch} wide",
+                            spec.model
+                        );
+                    }
+                    if rows != *out_ch {
+                        bail!(
+                            "chain {:?} step {si}: conv layer has \
+                             {rows} rows but declares {out_ch} output \
+                             channels",
+                            spec.model
+                        );
+                    }
+                    (StepOp::Conv { kh: *kh, kw: *kw }, *in_ch, rows)
+                }
+            };
+            // Bind the input dim against wherever the step reads from.
+            let mut bind_chain_input = |need: usize| -> Result<()> {
+                match chain_input {
+                    Some(have) if have != need => bail!(
+                        "chain {:?} step {si}: reads the chain input \
+                         as {need} values but an earlier step reads \
+                         it as {have}",
+                        spec.model
+                    ),
+                    Some(_) => Ok(()),
+                    None => {
+                        chain_input = Some(need);
+                        Ok(())
+                    }
+                }
+            };
+            match step.input {
+                StepInput::Prev if si == 0 => bind_chain_input(in_dim)?,
+                StepInput::Prev => {
+                    let have = out_dims.last().copied().unwrap_or(0);
+                    if have != in_dim {
+                        bail!(
+                            "chain {:?} step {si}: expects {in_dim} \
+                             values but the previous step produces \
+                             {have}",
+                            spec.model
+                        );
+                    }
+                }
+                StepInput::ChainInput => bind_chain_input(in_dim)?,
+                StepInput::Step(j) => {
+                    let Some(have) =
+                        (j < si).then(|| out_dims.get(j).copied()).flatten()
+                    else {
+                        bail!(
+                            "chain {:?} step {si}: input references \
+                             step {j} (must be strictly earlier)",
+                            spec.model
+                        );
+                    };
+                    if have != in_dim {
+                        bail!(
+                            "chain {:?} step {si}: expects {in_dim} \
+                             values but step {j} produces {have}",
+                            spec.model
+                        );
+                    }
+                }
+            }
+            // The residual is added to the step output — dims must
+            // match the output, not the input.
+            match step.residual {
+                Residual::None => {}
+                Residual::ChainInput => {
+                    bind_chain_input(out_dim).with_context(|| {
+                        format!(
+                            "chain {:?} step {si}: residual reads the \
+                             chain input",
+                            spec.model
+                        )
+                    })?;
+                }
+                Residual::OwnInput => {
+                    if in_dim != out_dim {
+                        bail!(
+                            "chain {:?} step {si}: x + f(x) residual \
+                             needs matching dims, got {in_dim} -> \
+                             {out_dim}",
+                            spec.model
+                        );
+                    }
+                }
+                Residual::Step(j) => {
+                    let Some(have) =
+                        (j < si).then(|| out_dims.get(j).copied()).flatten()
+                    else {
+                        bail!(
+                            "chain {:?} step {si}: residual references \
+                             step {j} (must be strictly earlier)",
+                            spec.model
+                        );
+                    };
+                    if have != out_dim {
+                        bail!(
+                            "chain {:?} step {si}: residual from step \
+                             {j} is {have} wide but the output is \
+                             {out_dim}",
+                            spec.model
+                        );
+                    }
+                }
+            }
+            let Some(last_layer) = layers.len().checked_sub(1) else {
+                bail!(
+                    "chain {:?} step {si} consumes no layers",
+                    spec.model
+                );
+            };
+            out_dims.push(out_dim);
+            steps.push(StepExec {
+                op,
+                input: step.input,
+                residual: step.residual,
+                activation: step.activation,
+                in_dim,
+                out_dim,
+                first_layer,
+                last_layer,
+            });
+        }
+        let Some(input_dim) = chain_input.or_else(|| {
+            steps.first().map(|s| s.in_dim)
+        }) else {
+            bail!("chain {:?} never binds an input", spec.model);
+        };
+        let Some(output_dim) = out_dims.last().copied() else {
+            bail!("chain {:?} produces no output", spec.model);
+        };
+        Ok(CompiledChain {
+            model: spec.model.clone(),
+            layers,
+            steps,
+            input_dim,
+            output_dim,
+        })
+    }
+
+    /// The model id this chain serves.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Every layer the chain fetches, in execution order, under the
+    /// names the compile-time `rename` produced (scoped names when the
+    /// registry compiled it against a merged store).
+    pub fn layers(&self) -> &[String] {
+        &self.layers
+    }
+
+    /// Number of executable steps.
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub(crate) fn steps(&self) -> &[StepExec] {
+        &self.steps
+    }
+
+    /// Input vector length the chain demands.
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    /// Output vector length the chain produces.
+    pub fn output_dim(&self) -> usize {
+        self.output_dim
+    }
+}
+
+/// Execute one step for one batch item. `fetched` is the step's layer
+/// span (in [`StepKind::layer_names`] order), `chain_x` the item's
+/// chain input, `prior` its earlier step outputs (so `prior.len()` is
+/// this step's index). Order is fixed: matmul(s), residual add,
+/// activation.
+pub(crate) fn run_step(
+    step: &StepExec,
+    fetched: &[&ExecLayer],
+    chain_x: &[f32],
+    prior: &[Vec<f32>],
+) -> Result<Vec<f32>> {
+    let x: &[f32] = match step.input {
+        StepInput::Prev => {
+            prior.last().map(Vec::as_slice).unwrap_or(chain_x)
+        }
+        StepInput::ChainInput => chain_x,
+        StepInput::Step(j) => {
+            let Some(v) = prior.get(j) else {
+                bail!("step input references missing step {j}");
+            };
+            v.as_slice()
+        }
+    };
+    if x.len() != step.in_dim {
+        bail!(
+            "step input is {} values, compiled for {}",
+            x.len(),
+            step.in_dim
+        );
+    }
+    let mut y = match step.op {
+        StepOp::Gemv => {
+            let Some(w) = fetched.first() else {
+                bail!("gemv step fetched no layer");
+            };
+            w.gemv(x)
+        }
+        StepOp::Attention => {
+            let [wq, wk, wv, wo] = fetched else {
+                bail!(
+                    "attention step fetched {} layers, expected 4",
+                    fetched.len()
+                );
+            };
+            let q = wq.gemv(x);
+            let k = wk.gemv(x);
+            let v = wv.gemv(x);
+            // Sequence length 1: the lone score softmaxes to exactly
+            // 1, so the context *is* v — but the score is still
+            // computed and sanity-checked, because a non-finite
+            // q·k/√d is a model bug worth failing loudly on rather
+            // than laundering through the softmax identity.
+            let scale = (q.len().max(1) as f32).sqrt();
+            let score = q
+                .iter()
+                .zip(&k)
+                .map(|(a, b)| a * b)
+                .sum::<f32>()
+                / scale;
+            if !score.is_finite() {
+                bail!("attention score is not finite ({score})");
+            }
+            wo.gemv(&v)
+        }
+        StepOp::Conv { kh, kw } => {
+            let Some(w) = fetched.first() else {
+                bail!("conv step fetched no layer");
+            };
+            let tiles = kh.saturating_mul(kw);
+            let mut patch =
+                Vec::with_capacity(tiles.saturating_mul(x.len()));
+            for _ in 0..tiles {
+                patch.extend_from_slice(x);
+            }
+            w.gemv(&patch)
+        }
+    };
+    let residual: Option<&[f32]> = match step.residual {
+        Residual::None => None,
+        Residual::ChainInput => Some(chain_x),
+        Residual::OwnInput => Some(x),
+        Residual::Step(j) => {
+            let Some(v) = prior.get(j) else {
+                bail!("residual references missing step {j}");
+            };
+            Some(v.as_slice())
+        }
+    };
+    if let Some(r) = residual {
+        if r.len() != y.len() {
+            bail!(
+                "residual is {} values but the step output is {}",
+                r.len(),
+                y.len()
+            );
+        }
+        for (a, b) in y.iter_mut().zip(r) {
+            *a += b;
+        }
+    }
+    step.activation.apply(&mut y);
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::ChainStep;
+
+    /// Dims table: fc0 8x4, fc1 2x8; attention block 4x4 each + conv.
+    fn dims_of(name: &str) -> Option<(usize, usize)> {
+        match name {
+            "m::fc0" => Some((8, 4)),
+            "m::fc1" => Some((2, 8)),
+            "m::q" | "m::k" | "m::v" | "m::o" => Some((4, 4)),
+            "m::conv" => Some((6, 2 * 2 * 4)),
+            _ => None,
+        }
+    }
+
+    fn scoped(name: &str) -> String {
+        format!("m::{name}")
+    }
+
+    #[test]
+    fn uniform_chain_compiles_with_flat_layout() {
+        let spec = ChainSpec::uniform("m", &["fc0", "fc1"]);
+        let c =
+            CompiledChain::compile(&spec, scoped, dims_of).unwrap();
+        assert_eq!(c.model(), "m");
+        assert_eq!(c.layers(), &["m::fc0".to_string(), "m::fc1".into()]);
+        assert_eq!((c.input_dim(), c.output_dim()), (4, 2));
+        assert_eq!(c.n_steps(), 2);
+        assert_eq!(c.steps()[0].last_layer, 0);
+        assert_eq!(c.steps()[1].first_layer, 1);
+    }
+
+    #[test]
+    fn attention_and_conv_geometry_is_validated() {
+        let spec = ChainSpec {
+            model: "m".into(),
+            steps: vec![
+                ChainStep {
+                    kind: StepKind::Attention {
+                        q: "q".into(),
+                        k: "k".into(),
+                        v: "v".into(),
+                        output: "o".into(),
+                    },
+                    input: StepInput::ChainInput,
+                    residual: Residual::OwnInput,
+                    activation: Activation::None,
+                },
+                ChainStep {
+                    kind: StepKind::Conv {
+                        layer: "conv".into(),
+                        kh: 2,
+                        kw: 2,
+                        in_ch: 4,
+                        out_ch: 6,
+                    },
+                    input: StepInput::Prev,
+                    residual: Residual::None,
+                    activation: Activation::Relu,
+                },
+            ],
+        };
+        let c =
+            CompiledChain::compile(&spec, scoped, dims_of).unwrap();
+        assert_eq!(c.layers().len(), 5);
+        assert_eq!((c.input_dim(), c.output_dim()), (4, 6));
+        // One attention step spans four flat layers.
+        assert_eq!(c.steps()[0].first_layer, 0);
+        assert_eq!(c.steps()[0].last_layer, 3);
+
+        // Wrong out_ch declaration.
+        let mut bad = spec.clone();
+        if let StepKind::Conv { out_ch, .. } = &mut bad.steps[1].kind {
+            *out_ch = 7;
+        }
+        let err = CompiledChain::compile(&bad, scoped, dims_of)
+            .unwrap_err();
+        assert!(format!("{err}").contains("output channels"), "{err}");
+
+        // Patch width mismatch.
+        let mut bad = spec.clone();
+        if let StepKind::Conv { kh, .. } = &mut bad.steps[1].kind {
+            *kh = 3;
+        }
+        let err = CompiledChain::compile(&bad, scoped, dims_of)
+            .unwrap_err();
+        assert!(format!("{err}").contains("im2col"), "{err}");
+    }
+
+    #[test]
+    fn dim_mismatches_are_rejected() {
+        // fc1 then fc0: fc1 outputs 2, fc0 expects 4.
+        let spec = ChainSpec::uniform("m", &["fc1", "fc0"]);
+        let err = CompiledChain::compile(&spec, scoped, dims_of)
+            .unwrap_err();
+        assert!(format!("{err}").contains("previous step"), "{err}");
+
+        // Missing layer.
+        let spec = ChainSpec::uniform("m", &["ghost"]);
+        let err = CompiledChain::compile(&spec, scoped, dims_of)
+            .unwrap_err();
+        assert!(format!("{err}").contains("not in the store"), "{err}");
+
+        // x + f(x) on a non-square step.
+        let mut spec = ChainSpec::uniform("m", &["fc0"]);
+        spec.steps[0].residual = Residual::OwnInput;
+        let err = CompiledChain::compile(&spec, scoped, dims_of)
+            .unwrap_err();
+        assert!(format!("{err}").contains("matching dims"), "{err}");
+
+        // Residual from a step of the wrong width.
+        let mut spec = ChainSpec::uniform("m", &["fc0", "fc1"]);
+        spec.steps[1].residual = Residual::Step(0);
+        let err = CompiledChain::compile(&spec, scoped, dims_of)
+            .unwrap_err();
+        assert!(format!("{err}").contains("residual"), "{err}");
+
+        // Conflicting chain-input readers.
+        let mut spec = ChainSpec::uniform("m", &["fc0", "fc1"]);
+        spec.steps[1].input = StepInput::ChainInput;
+        let err = CompiledChain::compile(&spec, scoped, dims_of)
+            .unwrap_err();
+        assert!(format!("{err}").contains("earlier step reads"), "{err}");
+
+        let empty = ChainSpec { model: "m".into(), steps: vec![] };
+        assert!(
+            CompiledChain::compile(&empty, scoped, dims_of).is_err()
+        );
+    }
+
+    #[test]
+    fn run_step_math_matches_hand_reference() {
+        use crate::sparse::DecodedLayer;
+        // A 2x3 layer with known weights via DecodedLayer.
+        let w = DecodedLayer {
+            rows: 2,
+            cols: 3,
+            weights: vec![1.0, 0.0, -1.0, 0.5, 0.5, 0.5],
+        };
+        let layer = ExecLayer::Materialized(w);
+        let step = StepExec {
+            op: StepOp::Gemv,
+            input: StepInput::Prev,
+            residual: Residual::None,
+            activation: Activation::Relu,
+            in_dim: 3,
+            out_dim: 2,
+            first_layer: 0,
+            last_layer: 0,
+        };
+        let y = run_step(&step, &[&layer], &[1.0, 2.0, 4.0], &[])
+            .unwrap();
+        // Row 0: 1 - 4 = -3 -> relu 0; row 1: 0.5*(1+2+4) = 3.5.
+        assert_eq!(y, vec![0.0, 3.5]);
+
+        // Residual add from the chain input, then no activation.
+        let step = StepExec {
+            residual: Residual::ChainInput,
+            activation: Activation::None,
+            in_dim: 3,
+            out_dim: 2,
+            ..step
+        };
+        // chain input must be out_dim-wide for this shape to work:
+        // use Step(0)-style prior instead.
+        let err =
+            run_step(&step, &[&layer], &[1.0, 2.0, 4.0], &[]).unwrap_err();
+        assert!(format!("{err}").contains("residual"), "{err}");
+    }
+}

@@ -1,0 +1,110 @@
+//! Multi-tenant model registry: N models, one process, one budget.
+//!
+//! The paper's fixed-to-fixed format prices every layer's decoded
+//! footprint up front, which is what makes *co-tenancy* tractable: a
+//! zoo of compressed models can share one byte-budgeted
+//! [`crate::store::ModelStore`] and its decode workers, with the LRU
+//! arbitrating between tenants instead of each model reserving its
+//! worst case. This module is that serving tier:
+//!
+//! * [`merge_zoo`] — fold per-model containers into one container
+//!   whose layers are named `{model}::{layer}` ([`MODEL_SEP`]), each
+//!   model keeping its own executable [`ChainSpec`] (explicit v3
+//!   chains, or the implicit uniform gemv+relu ladder of a chainless
+//!   container).
+//! * [`CompiledChain`] — a chain validated against real layer
+//!   geometry and lowered to a step program: gemv, attention at
+//!   sequence length 1 (four projections, single score softmaxes
+//!   to 1), conv-as-GEMM over tiled im2col patches, residual adds,
+//!   activations.
+//! * [`ModelRegistry`] — the multi-model
+//!   [`crate::coordinator::Backend`]: requests route by model id,
+//!   every tenant executes over the *shared* store(s) — one store,
+//!   N in-process shards, or IPC shard workers — so a burst on model
+//!   A evicts cold model B layers while pinned-while-executing layers
+//!   of any tenant survive. Per-model cost tables and cache views
+//!   come from filtering the shared state by the `{model}::` prefix.
+
+mod compile;
+mod zoo;
+
+pub use compile::CompiledChain;
+pub use zoo::{merge_zoo, MergedZoo, ModelRegistry, ZooModel};
+
+use crate::container::ChainSpec;
+use anyhow::{bail, Result};
+
+/// Separator between a model id and a layer name in a merged
+/// container. Model ids must not contain it (and must be non-empty),
+/// so scoped names parse unambiguously.
+pub const MODEL_SEP: &str = "::";
+
+/// The merged container's name for `layer` of `model`.
+pub fn scoped_name(model: &str, layer: &str) -> String {
+    format!("{model}{MODEL_SEP}{layer}")
+}
+
+/// Join a wire-level model id and layer name into a store key: the
+/// bare layer name when the model id is empty (the single-model wire
+/// form), else the merged container's `{model}::{layer}`.
+pub fn scoped_or_bare(model: &str, layer: &str) -> String {
+    if model.is_empty() {
+        layer.to_string()
+    } else {
+        scoped_name(model, layer)
+    }
+}
+
+/// Reject ids that cannot name a zoo tenant: empty (reserved for the
+/// unscoped single-model form) or containing the name separator.
+pub fn validate_model_id(id: &str) -> Result<()> {
+    if id.is_empty() {
+        bail!("model id must not be empty");
+    }
+    if id.contains(MODEL_SEP) {
+        bail!("model id {id:?} contains the reserved {MODEL_SEP:?}");
+    }
+    Ok(())
+}
+
+/// The chain a container serves for `id`: an explicit chain matching
+/// the id, the sole chain of a single-chain container (whatever id it
+/// was written under), or `None` — the caller falls back to the
+/// implicit [`ChainSpec::uniform`] ladder.
+pub(crate) fn select_chain<'a>(
+    chains: &'a [ChainSpec],
+    id: &str,
+) -> Option<&'a ChainSpec> {
+    match chains {
+        [only] => Some(only),
+        many => many.iter().find(|c| c.model == id),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoping_and_ids() {
+        assert_eq!(scoped_name("a", "fc0"), "a::fc0");
+        assert_eq!(scoped_or_bare("", "fc0"), "fc0");
+        assert_eq!(scoped_or_bare("a", "fc0"), "a::fc0");
+        assert!(validate_model_id("a").is_ok());
+        assert!(validate_model_id("").is_err());
+        assert!(validate_model_id("a::b").is_err());
+    }
+
+    #[test]
+    fn chain_selection_rules() {
+        let one = vec![ChainSpec::uniform("whatever", &["x"])];
+        assert!(select_chain(&one, "a").is_some());
+        let two = vec![
+            ChainSpec::uniform("a", &["x"]),
+            ChainSpec::uniform("b", &["y"]),
+        ];
+        assert_eq!(select_chain(&two, "b").map(|c| c.model.as_str()), Some("b"));
+        assert!(select_chain(&two, "c").is_none());
+        assert!(select_chain(&[], "a").is_none());
+    }
+}

@@ -1,0 +1,959 @@
+//! The model zoo: merged containers and the serving registry.
+
+use super::compile::{run_step, CompiledChain};
+use super::{scoped_name, select_chain, validate_model_id, MODEL_SEP};
+use crate::container::{
+    is_v2, read_container, read_layer_at, write_sharded, ChainSpec,
+    Container, ContainerIndex, ShardAssignment, ShardMap,
+};
+use crate::coordinator::Backend;
+use crate::ipc::{IpcCallError, IpcShardStore, Supervisor};
+use crate::kernels::ExecLayer;
+use crate::obs;
+use crate::store::{
+    planned_depth, wrapped_targets, LayerCost, LayerCosts, ModelStore,
+    ReadaheadPolicy, StoreConfig, StoreMetrics,
+};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One tenant of a zoo: its id, compressed container, and the chain it
+/// executes (explicit, or `None` for the implicit uniform ladder).
+pub struct ZooModel {
+    pub id: String,
+    pub container: Container,
+    pub chain: Option<ChainSpec>,
+}
+
+impl ZooModel {
+    /// A tenant from an in-memory container with no explicit chain
+    /// (serves as the uniform gemv+relu ladder).
+    pub fn new(id: impl Into<String>, container: Container) -> Self {
+        ZooModel { id: id.into(), container, chain: None }
+    }
+
+    /// Attach an explicit chain (builder style).
+    pub fn with_chain(mut self, chain: ChainSpec) -> Self {
+        self.chain = Some(chain);
+        self
+    }
+
+    /// A tenant from serialized container bytes — v1, v2, or v3. A v3
+    /// chains section is honored: the sole chain of a single-chain
+    /// container, else the chain recorded under `id`.
+    pub fn from_bytes(id: impl Into<String>, bytes: &[u8]) -> Result<Self> {
+        let id = id.into();
+        if !is_v2(bytes) {
+            // v1: flat layer list, no chains section.
+            let container = read_container(bytes)
+                .with_context(|| format!("parsing model {id:?}"))?;
+            return Ok(ZooModel { id, container, chain: None });
+        }
+        let index = ContainerIndex::parse(bytes)
+            .with_context(|| format!("parsing model {id:?}"))?;
+        let mut container = Container::default();
+        for entry in index.entries() {
+            container.layers.push(read_layer_at(bytes, entry)?);
+        }
+        let chain = select_chain(index.chains(), &id).cloned();
+        Ok(ZooModel { id, container, chain })
+    }
+
+    /// [`ZooModel::from_bytes`] over a container file.
+    pub fn from_path(
+        id: impl Into<String>,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path).with_context(|| {
+            format!("reading container {}", path.display())
+        })?;
+        Self::from_bytes(id, &bytes)
+    }
+}
+
+/// [`merge_zoo`]'s output: one container holding every tenant's layers
+/// under `{model}::{layer}` names, plus one chain per tenant (in bare
+/// layer names, `model` set to the tenant id).
+pub struct MergedZoo {
+    pub container: Container,
+    pub chains: Vec<ChainSpec>,
+}
+
+/// Fold N tenants into one container: every layer renamed to
+/// `{model}::{layer}`, every tenant's chain resolved (explicit or the
+/// implicit uniform ladder) and validated against its own layer set.
+/// One container means one [`ModelStore`] serves the whole zoo — one
+/// byte budget, one LRU, one in-flight decode table, shared decode
+/// workers — which is the entire point.
+pub fn merge_zoo(models: &[ZooModel]) -> Result<MergedZoo> {
+    if models.is_empty() {
+        bail!("model zoo is empty");
+    }
+    let mut container = Container::default();
+    let mut chains = Vec::with_capacity(models.len());
+    for (i, m) in models.iter().enumerate() {
+        validate_model_id(&m.id)?;
+        if models.iter().take(i).any(|o| o.id == m.id) {
+            bail!("duplicate model id {:?}", m.id);
+        }
+        if m.container.layers.is_empty() {
+            bail!("model {:?} has no layers", m.id);
+        }
+        let names: Vec<&str> =
+            m.container.layers.iter().map(|l| l.name.as_str()).collect();
+        let chain = match &m.chain {
+            Some(c) => {
+                let mut c = c.clone();
+                c.model = m.id.clone();
+                c
+            }
+            None => ChainSpec::uniform(&m.id, &names),
+        };
+        chain
+            .validate(|n| names.contains(&n))
+            .with_context(|| format!("chain of model {:?}", m.id))?;
+        for l in &m.container.layers {
+            let mut l = l.clone();
+            l.name = scoped_name(&m.id, &l.name);
+            container.layers.push(l);
+        }
+        chains.push(chain);
+    }
+    Ok(MergedZoo { container, chains })
+}
+
+/// One tenant's compiled chain plus the source-routing it needs:
+/// `owners[i]` is the store/client index holding flat layer `i`, and
+/// `bare[i]` its unscoped name (what rides the wire's model-scoped
+/// frames).
+struct ChainEntry {
+    chain: CompiledChain,
+    bare: Vec<String>,
+    owners: Vec<usize>,
+}
+
+/// Where the registry's layers come from.
+enum Source {
+    /// In-process byte-budgeted stores — one shared store, or N
+    /// in-process shards of the merged container.
+    Stores(Vec<Arc<ModelStore>>),
+    /// Per-worker IPC stubs over shard sockets; transport failures
+    /// route through the supervisor's revive path once, exactly like
+    /// [`crate::ipc::ProcRouter`].
+    Ipc {
+        clients: Vec<Arc<IpcShardStore>>,
+        supervisor: Option<Arc<Supervisor>>,
+    },
+}
+
+/// N models served from one process over shared decode capacity: the
+/// multi-model [`Backend`]. Every tenant's chain executes against the
+/// same store set, so the byte budget, LRU, pin table and in-flight
+/// dedup are all *cross-model* — a burst on one tenant evicts another
+/// tenant's cold layers, never anyone's pinned ones.
+pub struct ModelRegistry {
+    entries: Vec<ChainEntry>,
+    source: Source,
+    readahead: ReadaheadPolicy,
+    /// Registry-side GEMV telemetry for the IPC path (in-process
+    /// stores record into their own tables instead). Shared so the
+    /// serving CLI can keep reading it after the registry moves
+    /// behind the inference server.
+    costs: Arc<LayerCosts>,
+}
+
+impl ModelRegistry {
+    /// Serve `models` from **one shared store** under `config`'s byte
+    /// budget — the canonical zoo deployment.
+    pub fn new(models: &[ZooModel], config: StoreConfig) -> Result<Self> {
+        let merged = merge_zoo(models)?;
+        let store =
+            Arc::new(ModelStore::from_container(merged.container, config));
+        let entries = {
+            let store = &store;
+            compile_entries(
+                &merged.chains,
+                |name| store.layer_dims(name),
+                |_| Ok(0),
+            )?
+        };
+        Ok(ModelRegistry {
+            entries,
+            source: Source::Stores(vec![store]),
+            readahead: ReadaheadPolicy::default(),
+            costs: Arc::new(LayerCosts::new()),
+        })
+    }
+
+    /// Serve `models` from `n_shards` in-process shard stores: the
+    /// merged container splits exactly like a single model would
+    /// ([`write_sharded`]), so one shard can hold layers of several
+    /// tenants and cross-model sharing still applies per shard.
+    pub fn new_sharded(
+        models: &[ZooModel],
+        n_shards: usize,
+        strategy: ShardAssignment,
+        config: StoreConfig,
+    ) -> Result<Self> {
+        let merged = merge_zoo(models)?;
+        let (map, shard_bytes) =
+            write_sharded(&merged.container, n_shards, strategy)?;
+        let mut stores = Vec::with_capacity(shard_bytes.len());
+        for bytes in shard_bytes {
+            stores.push(Arc::new(ModelStore::open_bytes(bytes, config)?));
+        }
+        let entries = {
+            let stores = &stores;
+            compile_entries(
+                &merged.chains,
+                |name| {
+                    stores.iter().find_map(|s| s.layer_dims(name))
+                },
+                |name| {
+                    map.shard_of(name).ok_or_else(|| {
+                        anyhow!("layer {name:?} missing from shard map")
+                    })
+                },
+            )?
+        };
+        Ok(ModelRegistry {
+            entries,
+            source: Source::Stores(stores),
+            readahead: ReadaheadPolicy::default(),
+            costs: Arc::new(LayerCosts::new()),
+        })
+    }
+
+    /// Serve `models` over IPC worker stubs: `map` partitions the
+    /// *merged* container's `{model}::{layer}` names across
+    /// `clients[i]` (one per shard worker, each holding its shard of
+    /// the merged container). Fetches ride model-scoped wire frames.
+    pub fn over_ipc(
+        models: &[ZooModel],
+        map: &ShardMap,
+        clients: Vec<Arc<IpcShardStore>>,
+    ) -> Result<Self> {
+        if map.n_shards() != clients.len() {
+            bail!(
+                "shard map names {} shards but {} worker clients were \
+                 supplied",
+                map.n_shards(),
+                clients.len()
+            );
+        }
+        let merged = merge_zoo(models)?;
+        let dims: BTreeMap<String, (usize, usize)> = merged
+            .container
+            .layers
+            .iter()
+            .map(|l| (l.name.clone(), (l.rows, l.cols)))
+            .collect();
+        let entries = compile_entries(
+            &merged.chains,
+            |name| dims.get(name).copied(),
+            |name| {
+                map.shard_of(name).ok_or_else(|| {
+                    anyhow!("layer {name:?} missing from shard map")
+                })
+            },
+        )?;
+        Ok(ModelRegistry {
+            entries,
+            source: Source::Ipc { clients, supervisor: None },
+            readahead: ReadaheadPolicy::default(),
+            costs: Arc::new(LayerCosts::new()),
+        })
+    }
+
+    /// Attach the supervisor whose revive path repairs transport
+    /// failures on the IPC source (no-op over in-process stores).
+    pub fn with_supervisor(mut self, sup: Arc<Supervisor>) -> Self {
+        if let Source::Ipc { supervisor, .. } = &mut self.source {
+            *supervisor = Some(sup);
+        }
+        self
+    }
+
+    /// Replace the readahead policy (builder style).
+    pub fn with_readahead(mut self, policy: ReadaheadPolicy) -> Self {
+        self.readahead = policy;
+        self
+    }
+
+    /// Replace the readahead policy in place.
+    pub fn set_readahead(&mut self, policy: ReadaheadPolicy) {
+        self.readahead = policy;
+    }
+
+    /// The active readahead policy.
+    pub fn readahead(&self) -> ReadaheadPolicy {
+        self.readahead
+    }
+
+    /// The registry-local cost table: GEMV stamps recorded on the IPC
+    /// path, keyed by scoped `{model}::{layer}` name. Shared — clone
+    /// the `Arc` before moving the registry behind a server to keep
+    /// reading it (merge with worker tables via
+    /// [`crate::ipc::ProcRouter::merged_profile`]).
+    pub fn costs(&self) -> &Arc<LayerCosts> {
+        &self.costs
+    }
+
+    /// Tenant ids, in registration order.
+    pub fn model_ids(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .map(|e| e.chain.model().to_string())
+            .collect()
+    }
+
+    /// Number of tenants.
+    pub fn n_models(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// The compiled chain serving `model`.
+    pub fn chain(&self, model: &str) -> Option<&CompiledChain> {
+        self.entries
+            .iter()
+            .map(|e| &e.chain)
+            .find(|c| c.model() == model)
+    }
+
+    /// `model`'s layer names (bare, in fetch order) — what `f2f top`
+    /// and the examples print per tenant.
+    pub fn chain_layers(&self, model: &str) -> Option<Vec<String>> {
+        self.entry(model).map(|e| e.bare.clone())
+    }
+
+    /// The shared in-process stores (empty slice over IPC).
+    pub fn stores(&self) -> &[Arc<ModelStore>] {
+        match &self.source {
+            Source::Stores(stores) => stores,
+            Source::Ipc { .. } => &[],
+        }
+    }
+
+    /// Block until every in-process store's decode service drains
+    /// (no-op over IPC).
+    pub fn wait_for_idle(&self) {
+        for s in self.stores() {
+            s.wait_for_idle();
+        }
+    }
+
+    /// Merged store metrics across the shared source — the zoo-wide
+    /// cache view (`None` when a worker is unreachable over IPC).
+    pub fn store_metrics(&self) -> Option<StoreMetrics> {
+        let mut total = StoreMetrics::default();
+        match &self.source {
+            Source::Stores(stores) => {
+                for s in stores {
+                    total.merge(&s.metrics());
+                }
+            }
+            Source::Ipc { clients, .. } => {
+                for c in clients {
+                    total.merge(&c.metrics().ok()?);
+                }
+            }
+        }
+        Some(total)
+    }
+
+    /// `model`'s observed cost table, keyed by bare layer name: the
+    /// shared tables filtered to the tenant's `{model}::` prefix. Over
+    /// IPC, registry-side GEMV stamps merge with whatever worker
+    /// tables answer (best-effort — a dead worker just contributes
+    /// nothing).
+    pub fn model_costs(&self, model: &str) -> Vec<(String, LayerCost)> {
+        let prefix = format!("{model}{MODEL_SEP}");
+        let mut table: BTreeMap<String, LayerCost> = BTreeMap::new();
+        let mut add = |name: &str, cost: LayerCost| {
+            if let Some(bare) = name.strip_prefix(&prefix) {
+                table
+                    .entry(bare.to_string())
+                    .and_modify(|c| c.merge(&cost))
+                    .or_insert(cost);
+            }
+        };
+        match &self.source {
+            Source::Stores(stores) => {
+                for s in stores {
+                    for (name, cost) in s.costs().snapshot() {
+                        add(&name, cost);
+                    }
+                }
+            }
+            Source::Ipc { clients, .. } => {
+                for (name, cost) in self.costs.snapshot() {
+                    add(&name, cost);
+                }
+                for c in clients {
+                    if let Ok(profile) = c.cost_profile() {
+                        for (name, cost) in profile.entries() {
+                            add(&name, cost);
+                        }
+                    }
+                }
+            }
+        }
+        table.into_iter().collect()
+    }
+
+    /// `model`'s resident cache footprint, `(layers, bytes)`, from the
+    /// shared stores' cache views (`None` over IPC — residency lives
+    /// in the workers).
+    pub fn model_cache(&self, model: &str) -> Option<(usize, usize)> {
+        let Source::Stores(stores) = &self.source else {
+            return None;
+        };
+        let prefix = format!("{model}{MODEL_SEP}");
+        let mut layers = 0usize;
+        let mut bytes = 0usize;
+        for s in stores {
+            for (name, b) in s.cached_entries() {
+                if name.starts_with(&prefix) {
+                    layers += 1;
+                    bytes = bytes.saturating_add(b);
+                }
+            }
+        }
+        Some((layers, bytes))
+    }
+
+    fn entry(&self, model: &str) -> Option<&ChainEntry> {
+        self.entries.iter().find(|e| e.chain.model() == model)
+    }
+
+    /// One tenant's forward pass over the shared source.
+    fn forward_entry(
+        &self,
+        entry: &ChainEntry,
+        xs: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        for x in xs {
+            if x.len() != entry.chain.input_dim() {
+                bail!(
+                    "model {:?} expects {} values, got {}",
+                    entry.chain.model(),
+                    entry.chain.input_dim(),
+                    x.len()
+                );
+            }
+        }
+        match &self.source {
+            Source::Stores(stores) => {
+                self.forward_stores(entry, stores, xs)
+            }
+            Source::Ipc { clients, supervisor } => {
+                self.forward_ipc(entry, clients, supervisor.as_ref(), xs)
+            }
+        }
+    }
+
+    /// The in-process zoo inner loop — the multi-kind generalization
+    /// of [`crate::store::ModelBackend`]'s chain walk. Per step: pin
+    /// every layer the step consumes (a readahead install can never
+    /// evict mid-matmul, whichever tenant it belongs to), plan
+    /// readahead from the step's *last* flat layer (so warming looks
+    /// past the whole step, across shard stores and tenant
+    /// boundaries), run the step math per batch item, stamp the GEMV
+    /// phase into the owning store's cost table.
+    fn forward_stores(
+        &self,
+        entry: &ChainEntry,
+        stores: &[Arc<ModelStore>],
+        xs: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut links: Vec<(&ModelStore, &str)> =
+            Vec::with_capacity(entry.chain.layers().len());
+        for (name, &owner) in
+            entry.chain.layers().iter().zip(&entry.owners)
+        {
+            let Some(store) = stores.get(owner) else {
+                bail!("layer {name:?} routed to missing store {owner}");
+            };
+            links.push((store.as_ref(), name.as_str()));
+        }
+        let mut outs: Vec<Vec<Vec<f32>>> = xs
+            .iter()
+            .map(|_| Vec::with_capacity(entry.chain.n_steps()))
+            .collect();
+        for step in entry.chain.steps() {
+            let mut pinned = Vec::with_capacity(
+                step.last_layer - step.first_layer + 1,
+            );
+            for li in step.first_layer..=step.last_layer {
+                let Some((store, name)) = links.get(li) else {
+                    bail!("step layer index {li} out of range");
+                };
+                pinned.push(store.get_pinned(name).with_context(
+                    || format!("fetching layer {name:?}"),
+                )?);
+            }
+            let depth = planned_depth(
+                self.readahead,
+                &links,
+                step.last_layer,
+                xs.len(),
+            );
+            if let Some((_, last_name)) = links.get(step.last_layer) {
+                if depth > 0 {
+                    obs::event(obs::SpanKind::ReadaheadPlan, last_name);
+                }
+            }
+            for t in
+                wrapped_targets(step.last_layer, links.len(), depth)
+            {
+                if let Some((store, name)) = links.get(t) {
+                    store.prefetch_async(name);
+                }
+            }
+            let execs: Vec<&ExecLayer> =
+                pinned.iter().map(|p| p.layer().as_ref()).collect();
+            let start = Instant::now();
+            for (x, prior) in xs.iter().zip(outs.iter_mut()) {
+                let y = run_step(step, &execs, x, prior)?;
+                prior.push(y);
+            }
+            let took = start.elapsed();
+            if let Some((store, name)) = links.get(step.last_layer) {
+                obs::span(obs::SpanKind::Gemv, name, took);
+                store.costs().record_gemv(name, took, xs.len());
+            }
+        }
+        finalize(outs)
+    }
+
+    /// The IPC zoo inner loop: fetches ride model-scoped wire frames
+    /// (`model` id + bare layer name — the worker joins the scoped
+    /// name), warming is fixed-depth ahead of the step, and a
+    /// transport failure routes through the supervisor's revive path
+    /// once before giving up.
+    fn forward_ipc(
+        &self,
+        entry: &ChainEntry,
+        clients: &[Arc<IpcShardStore>],
+        supervisor: Option<&Arc<Supervisor>>,
+        xs: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let model = entry.chain.model();
+        let n_layers = entry.chain.layers().len();
+        let depth = self
+            .readahead
+            .max_depth()
+            .min(n_layers.saturating_sub(1));
+        let mut outs: Vec<Vec<Vec<f32>>> = xs
+            .iter()
+            .map(|_| Vec::with_capacity(entry.chain.n_steps()))
+            .collect();
+        for step in entry.chain.steps() {
+            let mut layers = Vec::with_capacity(
+                step.last_layer - step.first_layer + 1,
+            );
+            for li in step.first_layer..=step.last_layer {
+                layers.push(self.ipc_fetch(
+                    entry, clients, supervisor, model, li,
+                )?);
+            }
+            // Warm ahead of the step on whichever workers own the
+            // upcoming layers; admission is theirs to decline.
+            for t in
+                wrapped_targets(step.last_layer, n_layers, depth)
+            {
+                let (Some(&owner), Some(bare)) =
+                    (entry.owners.get(t), entry.bare.get(t))
+                else {
+                    continue;
+                };
+                if let Some(client) = clients.get(owner) {
+                    let _ = client.prefetch_model(model, bare);
+                }
+            }
+            let execs: Vec<&ExecLayer> = layers.iter().collect();
+            let start = Instant::now();
+            for (x, prior) in xs.iter().zip(outs.iter_mut()) {
+                let y = run_step(step, &execs, x, prior)?;
+                prior.push(y);
+            }
+            let took = start.elapsed();
+            if let Some(name) =
+                entry.chain.layers().get(step.last_layer)
+            {
+                obs::span(obs::SpanKind::Gemv, name, took);
+                self.costs.record_gemv(name, took, xs.len());
+            }
+        }
+        finalize(outs)
+    }
+
+    /// Fetch flat layer `li` of a tenant's chain from its worker,
+    /// repairing a transport failure through the supervisor once —
+    /// the [`crate::ipc::ProcRouter`] contract, per tenant.
+    fn ipc_fetch(
+        &self,
+        entry: &ChainEntry,
+        clients: &[Arc<IpcShardStore>],
+        supervisor: Option<&Arc<Supervisor>>,
+        model: &str,
+        li: usize,
+    ) -> Result<ExecLayer> {
+        let (Some(&owner), Some(bare)) =
+            (entry.owners.get(li), entry.bare.get(li))
+        else {
+            bail!("chain layer index {li} out of range");
+        };
+        let Some(client) = clients.get(owner) else {
+            bail!("layer {bare:?} routed to missing worker {owner}");
+        };
+        match client.fetch_model(model, bare) {
+            Ok(layer) => Ok(layer),
+            Err(IpcCallError::Remote(msg)) => Err(anyhow!(
+                "worker {owner} rejected {model}::{bare}: {msg}"
+            )),
+            Err(IpcCallError::Transport(msg)) => {
+                let Some(sup) = supervisor else {
+                    bail!(
+                        "worker {owner} unreachable fetching \
+                         {model}::{bare}: {msg}"
+                    );
+                };
+                sup.revive(owner)?;
+                client.fetch_model(model, bare).map_err(|e| {
+                    anyhow!(
+                        "worker {owner} still failing after restart \
+                         fetching {model}::{bare}: {e}"
+                    )
+                })
+            }
+        }
+    }
+}
+
+/// Pop each item's final step output (every earlier output was only
+/// ever scratch for step/residual references).
+fn finalize(outs: Vec<Vec<Vec<f32>>>) -> Result<Vec<Vec<f32>>> {
+    outs.into_iter()
+        .map(|mut o| {
+            o.pop().ok_or_else(|| anyhow!("chain produced no output"))
+        })
+        .collect()
+}
+
+/// Compile every tenant chain against the shared source: `dims` looks
+/// up scoped-name geometry, `owner_of` routes a scoped name to its
+/// store/client index.
+fn compile_entries(
+    chains: &[ChainSpec],
+    mut dims: impl FnMut(&str) -> Option<(usize, usize)>,
+    mut owner_of: impl FnMut(&str) -> Result<usize>,
+) -> Result<Vec<ChainEntry>> {
+    let mut entries = Vec::with_capacity(chains.len());
+    for spec in chains {
+        let chain = CompiledChain::compile(
+            spec,
+            |bare| scoped_name(&spec.model, bare),
+            &mut dims,
+        )?;
+        let prefix = format!("{}{}", spec.model, MODEL_SEP);
+        let mut bare = Vec::with_capacity(chain.layers().len());
+        let mut owners = Vec::with_capacity(chain.layers().len());
+        for scoped in chain.layers() {
+            bare.push(
+                scoped
+                    .strip_prefix(&prefix)
+                    .unwrap_or(scoped)
+                    .to_string(),
+            );
+            owners.push(owner_of(scoped)?);
+        }
+        entries.push(ChainEntry { chain, bare, owners });
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::write_container_v3;
+    use crate::models::{
+        compressed_table, tiny_transformer_layers, transformer_chain,
+        MlpConfig,
+    };
+    use crate::store::test_model;
+
+    fn zoo_pair() -> (Container, Container) {
+        (test_model(&[12, 10, 8], 11), test_model(&[12, 9, 6], 23))
+    }
+
+    fn big() -> StoreConfig {
+        StoreConfig {
+            cache_budget_bytes: usize::MAX,
+            decode_workers: 2,
+            ..StoreConfig::default()
+        }
+    }
+
+    fn probe_batch(dim: usize) -> Vec<Vec<f32>> {
+        (0..3)
+            .map(|i| {
+                (0..dim)
+                    .map(|j| ((i * dim + j) as f32 * 0.37).sin())
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn merge_zoo_rejects_bad_zoos() {
+        let (a, b) = zoo_pair();
+        assert!(merge_zoo(&[]).is_err());
+        let dup =
+            [ZooModel::new("m", a.clone()), ZooModel::new("m", b)];
+        assert!(merge_zoo(&dup).is_err());
+        assert!(merge_zoo(&[ZooModel::new("a::b", a.clone())]).is_err());
+        assert!(merge_zoo(&[ZooModel::new("", a)]).is_err());
+        let hollow = [ZooModel::new("empty", Container::default())];
+        assert!(merge_zoo(&hollow).is_err());
+    }
+
+    #[test]
+    fn merge_scopes_layer_names_and_resolves_chains() {
+        let (a, b) = zoo_pair();
+        let merged = merge_zoo(&[
+            ZooModel::new("chat", a),
+            ZooModel::new("rank", b),
+        ])
+        .unwrap();
+        let names: Vec<&str> = merged
+            .container
+            .layers
+            .iter()
+            .map(|l| l.name.as_str())
+            .collect();
+        assert!(names.contains(&"chat::fc0"));
+        assert!(names.contains(&"chat::fc1"));
+        assert!(names.contains(&"rank::fc1"));
+        assert_eq!(merged.chains.len(), 2);
+        assert_eq!(merged.chains[0].model, "chat");
+        assert_eq!(merged.chains[1].model, "rank");
+        // Chains stay in bare names — they are per-tenant programs,
+        // scoping happens at compile time.
+        assert_eq!(merged.chains[0].steps.len(), 2);
+    }
+
+    #[test]
+    fn shared_budget_serves_bit_exact_with_cross_model_eviction() {
+        let (a, b) = zoo_pair();
+        let xs = probe_batch(12);
+
+        // Reference: each tenant served alone, unlimited budget.
+        let mut solo_a =
+            ModelRegistry::new(&[ZooModel::new("a", a.clone())], big())
+                .unwrap();
+        let mut solo_b =
+            ModelRegistry::new(&[ZooModel::new("b", b.clone())], big())
+                .unwrap();
+        let ra = solo_a.forward_model_batch("a", &xs).unwrap();
+        let rb = solo_b.forward_model_batch("b", &xs).unwrap();
+
+        // Shared store under a budget smaller than the combined
+        // working set (a: 800 B decoded, b: 648 B): a burst on one
+        // tenant must evict the other's cold layers, yet outputs stay
+        // bit-identical to solo serving.
+        let zoo = [ZooModel::new("a", a), ZooModel::new("b", b)];
+        let mut reg = ModelRegistry::new(
+            &zoo,
+            StoreConfig {
+                cache_budget_bytes: 700,
+                decode_workers: 2,
+                ..StoreConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(reg.model_ids(), vec!["a", "b"]);
+        assert_eq!(reg.n_models(), 2);
+        for _ in 0..3 {
+            assert_eq!(reg.forward_model_batch("a", &xs).unwrap(), ra);
+            assert_eq!(reg.forward_model_batch("b", &xs).unwrap(), rb);
+        }
+        reg.wait_for_idle();
+        let m = reg.store_metrics().unwrap();
+        assert_eq!(m.redundant_decodes, 0);
+        assert!(
+            m.evictions > 0,
+            "budget below the combined working set must evict \
+             cross-model: {m:?}"
+        );
+
+        // Per-tenant views filter the shared state by prefix.
+        let (layers, bytes) = reg.model_cache("a").unwrap();
+        assert!(layers <= 2, "tenant a caches at most its own chain");
+        assert!(bytes <= 800);
+        let costs = reg.model_costs("a");
+        assert!(costs
+            .iter()
+            .any(|(name, c)| name == "fc0" && c.gemv_samples > 0));
+        assert!(
+            costs.iter().all(|(name, _)| !name.contains(MODEL_SEP)),
+            "cost tables are keyed by bare layer name"
+        );
+    }
+
+    #[test]
+    fn sharded_zoo_matches_the_single_store() {
+        let (a, b) = zoo_pair();
+        let xs = probe_batch(12);
+        let mut single = ModelRegistry::new(
+            &[
+                ZooModel::new("a", a.clone()),
+                ZooModel::new("b", b.clone()),
+            ],
+            big(),
+        )
+        .unwrap();
+        let mut sharded = ModelRegistry::new_sharded(
+            &[ZooModel::new("a", a), ZooModel::new("b", b)],
+            2,
+            ShardAssignment::RoundRobin,
+            big(),
+        )
+        .unwrap();
+        assert_eq!(sharded.stores().len(), 2);
+        assert_eq!(
+            single.forward_model_batch("b", &xs).unwrap(),
+            sharded.forward_model_batch("b", &xs).unwrap()
+        );
+        assert_eq!(
+            single.forward_model_batch("a", &xs).unwrap(),
+            sharded.forward_model_batch("a", &xs).unwrap()
+        );
+    }
+
+    #[test]
+    fn transformer_tenant_serves_next_to_an_mlp() {
+        let specs = tiny_transformer_layers(1, 8, 16);
+        let cfg = MlpConfig {
+            seed: 5,
+            sparsity: 0.75,
+            n_s: 0,
+            beam: None,
+            ..MlpConfig::new(&[8, 8])
+        };
+        let (container, _) = compressed_table(&specs, &cfg);
+        let chain = transformer_chain("tx", &specs).unwrap();
+        let zoo = [
+            ZooModel::new("tx", container).with_chain(chain),
+            ZooModel::new("mlp", test_model(&[8, 6, 4], 3)),
+        ];
+        let mut reg = ModelRegistry::new(&zoo, big()).unwrap();
+        assert_eq!(reg.model_input_dim("tx"), Some(8));
+        assert_eq!(reg.model_output_dim("tx"), Some(8));
+        assert!(reg.chain_layers("tx").unwrap().len() >= 6);
+        let y = reg
+            .forward_model_batch("tx", &[vec![0.3_f32; 8]])
+            .unwrap();
+        assert_eq!(y[0].len(), 8);
+        assert!(y[0].iter().all(|v| v.is_finite()));
+        let ym = reg
+            .forward_model_batch("mlp", &[vec![0.1_f32; 8]])
+            .unwrap();
+        assert_eq!(ym[0].len(), 4);
+        // Dim validation names the tenant.
+        let err = reg
+            .forward_model_batch("mlp", &[vec![0.0_f32; 5]])
+            .unwrap_err();
+        assert!(err.to_string().contains("mlp"), "{err}");
+        assert!(reg
+            .forward_model_batch("ghost", &[vec![0.0_f32; 8]])
+            .is_err());
+        // The anonymous single-model path refuses a multi-tenant zoo.
+        assert!(reg.forward_batch(&[vec![0.0_f32; 8]]).is_err());
+    }
+
+    #[test]
+    fn zoo_model_reads_a_v3_chain_from_bytes() {
+        let specs = tiny_transformer_layers(1, 8, 16);
+        let cfg = MlpConfig {
+            seed: 9,
+            sparsity: 0.75,
+            n_s: 0,
+            beam: None,
+            ..MlpConfig::new(&[8, 8])
+        };
+        let (container, _) = compressed_table(&specs, &cfg);
+        let chain = transformer_chain("orig-id", &specs).unwrap();
+        let bytes = write_container_v3(&container, &[chain]);
+        let m = ZooModel::from_bytes("tx", &bytes).unwrap();
+        // The sole chain of a single-chain container is honored no
+        // matter what id it was written under.
+        assert!(m.chain.is_some());
+        assert_eq!(m.container.layers.len(), specs.len());
+        let mut reg = ModelRegistry::new(&[m], big()).unwrap();
+        assert_eq!(reg.model_ids(), vec!["tx"]);
+        let y = reg
+            .forward_model_batch("tx", &[vec![0.2_f32; 8]])
+            .unwrap();
+        assert_eq!(y[0].len(), 8);
+    }
+}
+
+impl Backend for ModelRegistry {
+    /// The anonymous single-model path: only meaningful when the
+    /// registry serves exactly one tenant.
+    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let _trace = obs::ensure_trace();
+        match self.entries.as_slice() {
+            [only] => self.forward_entry(only, xs),
+            many => bail!(
+                "registry serves {} models; address one by id",
+                many.len()
+            ),
+        }
+    }
+
+    fn input_dim(&self) -> usize {
+        self.entries
+            .first()
+            .map(|e| e.chain.input_dim())
+            .unwrap_or(0)
+    }
+
+    fn output_dim(&self) -> usize {
+        self.entries
+            .first()
+            .map(|e| e.chain.output_dim())
+            .unwrap_or(0)
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.model_ids()
+    }
+
+    fn forward_model_batch(
+        &mut self,
+        model: &str,
+        xs: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        if model.is_empty() {
+            return self.forward_batch(xs);
+        }
+        let _trace = obs::ensure_trace();
+        let Some(entry) = self.entry(model) else {
+            bail!("registry serves no model {model:?}");
+        };
+        self.forward_entry(entry, xs)
+    }
+
+    fn model_input_dim(&self, model: &str) -> Option<usize> {
+        self.entry(model).map(|e| e.chain.input_dim())
+    }
+
+    fn model_output_dim(&self, model: &str) -> Option<usize> {
+        self.entry(model).map(|e| e.chain.output_dim())
+    }
+}

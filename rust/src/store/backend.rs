@@ -113,9 +113,12 @@ pub(crate) fn forward_chain(
 /// order, the predicted decode cost from *its own* store's table
 /// (zero for already-cached targets) plus a budget-fit check that
 /// tracks the bytes the plan has committed per store, seeded with the
-/// executing layer's pinned bytes. The store's admission control
-/// remains the final gatekeeper; the plan only decides how far to try.
-fn planned_depth(
+/// store's whole committed set — every tenant's pinned and in-flight
+/// bytes, not just the executing layer's own pin, so concurrent
+/// chains sharing one store don't each plan as if they owned the full
+/// budget. The store's admission control remains the final
+/// gatekeeper; the plan only decides how far to try.
+pub(crate) fn planned_depth(
     policy: ReadaheadPolicy,
     links: &[(&ModelStore, &str)],
     i: usize,
@@ -138,8 +141,12 @@ fn planned_depth(
         .get(name)
         .and_then(|c| c.gemv_estimate())
         .map(|per_item| per_item * batch_items as f64);
+    // Seed with everything the store is already holding for anyone —
+    // other tenants' pins and in-flight decodes included. The old
+    // seeding (just this layer's planned bytes) let every concurrent
+    // chain plan against the full budget at once.
     let mut committed: Vec<(&ModelStore, usize)> =
-        vec![(store, store.layer_planned_bytes(name).unwrap_or(0))];
+        vec![(store, store.committed_bytes())];
     let mut candidates = Vec::with_capacity(cap);
     for d in 1..=cap {
         let (ahead_store, ahead_name) = links[(i + d) % len];

@@ -52,7 +52,7 @@ mod source;
 mod timing;
 
 pub use backend::ModelBackend;
-pub(crate) use backend::{forward_chain, validate_chain};
+pub(crate) use backend::{forward_chain, planned_depth, validate_chain};
 pub use model_store::{
     cost_sidecar_path, ModelStore, PinnedLayer, StoreConfig,
     StoreMetrics,

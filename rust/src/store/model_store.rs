@@ -655,6 +655,16 @@ impl ModelStore {
         self.inner.budget
     }
 
+    /// Bytes the store cannot currently give up: pinned entries plus
+    /// registered-but-uninstalled decodes. Readahead *planning* seeds
+    /// its committed-bytes ledger with this, so a plan drawn up by one
+    /// tenant of a shared store counts every other tenant's executing
+    /// and in-flight layers against the budget — not just its own.
+    pub fn committed_bytes(&self) -> usize {
+        let st = lock_unpoisoned(&self.inner.state);
+        st.pinned_bytes.saturating_add(st.in_flight_bytes)
+    }
+
     /// True when the compressed records live behind a file mapping
     /// (paged in on demand) rather than owned in-memory bytes.
     pub fn source_mapped(&self) -> bool {
@@ -668,6 +678,17 @@ impl ModelStore {
     /// recency).
     pub fn is_cached(&self, name: &str) -> bool {
         lock_unpoisoned(&self.inner.state).entries.contains_key(name)
+    }
+
+    /// `(name, resident bytes)` of every currently cached layer, in no
+    /// particular order; does not touch recency. The registry's
+    /// per-model cache views filter this by their `{model}::` prefix.
+    pub fn cached_entries(&self) -> Vec<(String, usize)> {
+        lock_unpoisoned(&self.inner.state)
+            .entries
+            .iter()
+            .map(|(name, e)| (name.clone(), e.bytes))
+            .collect()
     }
 
     /// Fetch a decoded layer (in this store's decode-mode

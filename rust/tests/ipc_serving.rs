@@ -282,7 +282,11 @@ fn corrupt_frames_error_on_both_sides_and_never_kill_the_worker() {
     let mut frame = Vec::new();
     wire::send_request(
         &mut frame,
-        &wire::Request::Fetch { layer: first_layer, trace: 1 },
+        &wire::Request::Fetch {
+            layer: first_layer,
+            model: String::new(),
+            trace: 1,
+        },
     )
     .unwrap();
     for cut in 0..frame.len() {

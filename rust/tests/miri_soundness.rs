@@ -53,8 +53,16 @@ mod wire_frames {
     #[test]
     fn every_request_variant_roundtrips_in_memory() {
         let reqs = [
-            Request::Fetch { layer: "layer0".into(), trace: 7 },
-            Request::Prefetch { layer: "blk.3/ffn".into(), trace: 0 },
+            Request::Fetch {
+                layer: "layer0".into(),
+                model: "zoo-a".into(),
+                trace: 7,
+            },
+            Request::Prefetch {
+                layer: "blk.3/ffn".into(),
+                model: String::new(),
+                trace: 0,
+            },
             Request::Metrics,
             Request::CostProfile,
             Request::TraceDump,
@@ -131,6 +139,7 @@ mod wire_frames {
         let frames = [
             request_frame(&Request::Fetch {
                 layer: "w".into(),
+                model: String::new(),
                 trace: 1,
             }),
             response_frame(&Response::Layer {

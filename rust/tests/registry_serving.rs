@@ -1,0 +1,344 @@
+//! Multi-tenant registry serving end to end: N models with layer-kind
+//! chains behind one `ModelRegistry`, sharing decode workers and one
+//! global byte budget. Interleaved cross-tenant traffic must stay
+//! bit-exact vs serving each model alone — under a budget small
+//! enough to force cross-model eviction — with zero redundant decodes
+//! and nothing pinned at rest; the same zoo behind the batching
+//! `InferenceServer` must complete concurrent per-tenant bursts with
+//! zero errors; and the zoo served through real shard-worker
+//! processes (the `--shard-procs` path) must match the in-process
+//! answers across a worker kill/revive.
+//!
+//! The store's budget/pinning invariants (`check_invariants`) assert
+//! on every cache transition in debug builds, so the interleaved
+//! passes here double as an invariant stress under multiple tenants.
+
+use f2f::container::{write_container_v3, Dtype};
+use f2f::coordinator::Backend;
+use f2f::models::{
+    compressed_mlp, tiny_transformer_layers, transformer_chain,
+    transformer_layers, MlpConfig, SyntheticLayer, WeightGen,
+};
+use f2f::pipeline::{CompressionConfig, Compressor};
+use f2f::pruning::PruneMethod;
+use f2f::registry::{CompiledChain, ModelRegistry, ZooModel};
+use f2f::store::StoreConfig;
+
+/// A Transformer tenant: the canonical attention + FFN table at test
+/// scale, compressed with its chain riding in a v3 container. (The
+/// full 512-d `transformer_layers()` table builds the *same* chain —
+/// see `the_real_transformer_table_compiles_into_an_executable_chain`
+/// below — it is only too large to compress per test run.)
+fn transformer_model(id: &str, d_model: usize, d_ff: usize) -> ZooModel {
+    let specs = tiny_transformer_layers(2, d_model, d_ff);
+    let chain = transformer_chain(id, &specs).unwrap();
+    let layers: Vec<SyntheticLayer> = specs
+        .iter()
+        .map(|s| SyntheticLayer::generate(s, WeightGen::default(), 0x7A))
+        .collect();
+    let cfg = CompressionConfig {
+        sparsity: 0.85,
+        n_s: 0,
+        method: PruneMethod::Magnitude,
+        beam: None,
+        ..Default::default()
+    };
+    let (container, _) =
+        Compressor::new(cfg).compress_model(&layers, Dtype::I8);
+    let bytes = write_container_v3(&container, &[chain]);
+    ZooModel::from_bytes(id, &bytes).unwrap()
+}
+
+/// An MLP tenant with no explicit chain — served as the implicit
+/// uniform gemv+relu ladder, like every pre-zoo container.
+fn mlp_model(id: &str, dims: &[usize], seed: u64) -> ZooModel {
+    let (c, _) = compressed_mlp(&MlpConfig {
+        seed,
+        sparsity: 0.75,
+        ..MlpConfig::new(dims)
+    });
+    ZooModel::new(id, c)
+}
+
+fn probes(dim: usize, n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            (0..dim)
+                .map(|j| (((i * dim + j) as f32) * 0.23).sin())
+                .collect()
+        })
+        .collect()
+}
+
+fn unbounded() -> StoreConfig {
+    StoreConfig {
+        cache_budget_bytes: usize::MAX,
+        decode_workers: 2,
+        ..Default::default()
+    }
+}
+
+/// Reference outputs: the tenant served from its own registry with
+/// nothing else contending for the budget.
+fn serve_alone(model: ZooModel, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let id = model.id.clone();
+    let zoo = [model];
+    let mut reg = ModelRegistry::new(&zoo, unbounded()).unwrap();
+    reg.forward_model_batch(&id, xs).unwrap()
+}
+
+#[test]
+fn interleaved_tenants_stay_bit_exact_under_cross_model_eviction() {
+    let make_tx = || transformer_model("tx", 16, 32);
+    let make_a = || mlp_model("mlp-a", &[24, 20, 16, 12], 31);
+    let make_b = || mlp_model("mlp-b", &[12, 10, 8], 32);
+    let tx_xs = probes(16, 4);
+    let a_xs = probes(24, 4);
+    let b_xs = probes(12, 4);
+    let want_tx = serve_alone(make_tx(), &tx_xs);
+    let want_a = serve_alone(make_a(), &a_xs);
+    let want_b = serve_alone(make_b(), &b_xs);
+
+    // Measure the combined decoded working set, then rebuild the zoo
+    // under a budget well below it.
+    let zoo = [make_tx(), make_a(), make_b()];
+    let reg = ModelRegistry::new(&zoo, unbounded()).unwrap();
+    let combined: usize = reg
+        .stores()
+        .iter()
+        .map(|s| s.total_decoded_bytes())
+        .sum();
+    drop(reg);
+
+    let budget = combined * 3 / 5;
+    let zoo = [make_tx(), make_a(), make_b()];
+    let mut reg = ModelRegistry::new(
+        &zoo,
+        StoreConfig {
+            cache_budget_bytes: budget,
+            decode_workers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for round in 0..3 {
+        assert_eq!(
+            reg.forward_model_batch("tx", &tx_xs).unwrap(),
+            want_tx,
+            "tx diverged under contention (round {round})"
+        );
+        assert_eq!(
+            reg.forward_model_batch("mlp-a", &a_xs).unwrap(),
+            want_a,
+            "mlp-a diverged under contention (round {round})"
+        );
+        assert_eq!(
+            reg.forward_model_batch("mlp-b", &b_xs).unwrap(),
+            want_b,
+            "mlp-b diverged under contention (round {round})"
+        );
+    }
+    reg.wait_for_idle();
+    let m = reg.store_metrics().unwrap();
+    assert_eq!(
+        m.redundant_decodes, 0,
+        "in-flight dedup must hold across tenants: {m:?}"
+    );
+    assert!(
+        m.evictions > 0,
+        "budget {budget} of {combined} must force cross-model \
+         eviction: {m:?}"
+    );
+    assert!(
+        m.cached_bytes <= budget,
+        "cache over budget: {} > {budget}",
+        m.cached_bytes
+    );
+    assert_eq!(m.pinned_bytes, 0, "nothing pinned at rest: {m:?}");
+}
+
+#[test]
+fn concurrent_tenant_bursts_behind_the_server_complete_exactly() {
+    use f2f::coordinator::{InferenceServer, ServerConfig};
+    use std::time::Duration;
+
+    let make_tx = || transformer_model("tx", 16, 32);
+    let make_mlp = || mlp_model("mlp", &[24, 20, 16, 12], 31);
+    let tx_xs = probes(16, 4);
+    let mlp_xs = probes(24, 4);
+    let want_tx = serve_alone(make_tx(), &tx_xs);
+    let want_mlp = serve_alone(make_mlp(), &mlp_xs);
+
+    let zoo = [make_tx(), make_mlp()];
+    let reg = ModelRegistry::new(&zoo, unbounded()).unwrap();
+    let combined: usize = reg
+        .stores()
+        .iter()
+        .map(|s| s.total_decoded_bytes())
+        .sum();
+    drop(reg);
+    let zoo = [make_tx(), make_mlp()];
+    let reg = ModelRegistry::new(
+        &zoo,
+        StoreConfig {
+            cache_budget_bytes: combined * 3 / 5,
+            decode_workers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let server = InferenceServer::start(
+        ServerConfig {
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        },
+        move || Box::new(reg),
+    )
+    .unwrap();
+
+    // 24 in-flight requests alternating tenants: batches stay
+    // model-pure, both tenants' pinned layers must survive the
+    // other's bursts mid-execution.
+    let mut pending = Vec::new();
+    for r in 0..24usize {
+        let (id, xs, want) = if r % 2 == 0 {
+            ("tx", &tx_xs, &want_tx)
+        } else {
+            ("mlp", &mlp_xs, &want_mlp)
+        };
+        let k = (r / 2) % xs.len();
+        pending.push((
+            server.infer_model_async(id, xs[k].clone()),
+            want[k].clone(),
+            id,
+            r,
+        ));
+    }
+    for (rx, want, id, r) in pending {
+        assert_eq!(
+            rx.recv().unwrap().unwrap(),
+            want,
+            "{id} request {r} diverged"
+        );
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, 24);
+    assert_eq!(m.errors, 0);
+    for id in ["tx", "mlp"] {
+        let pm = server.model_metrics(id).unwrap();
+        assert_eq!(pm.completed, 12, "{id} per-model window");
+        assert_eq!(pm.errors, 0, "{id} per-model window");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn the_real_transformer_table_compiles_into_an_executable_chain() {
+    // The acceptance shape: Transformer-base (Vaswani et al.), real
+    // `transformer_layers()` dims, attention + FFN kind records. The
+    // chain compiles into an executable plan without decoding a byte.
+    let specs = transformer_layers();
+    let chain = transformer_chain("transformer-base", &specs).unwrap();
+    let compiled = CompiledChain::compile(
+        &chain,
+        |name| name.to_string(),
+        |name| {
+            specs
+                .iter()
+                .find(|s| s.name == name)
+                .map(|s| (s.rows, s.cols))
+        },
+    )
+    .unwrap();
+    assert_eq!(compiled.input_dim(), 512);
+    assert_eq!(compiled.output_dim(), 512);
+    // 6 enc × (att + ffn1 + ffn2) + 6 dec × (2 att + 2 ffn).
+    assert_eq!(compiled.n_steps(), 6 * 3 + 6 * 4);
+    assert_eq!(compiled.layers().len(), specs.len());
+}
+
+#[cfg(unix)]
+mod multiproc {
+    use super::*;
+    use f2f::container::{
+        split_container, write_container_v2, ShardAssignment,
+    };
+    use f2f::ipc::{Supervisor, WorkerSpec};
+    use f2f::registry::merge_zoo;
+    use std::path::PathBuf;
+
+    #[test]
+    fn zoo_over_worker_processes_matches_in_process_serving() {
+        let make_tx = || transformer_model("tx", 16, 32);
+        let make_mlp = || mlp_model("mlp", &[24, 20, 16, 12], 31);
+        let tx_xs = probes(16, 3);
+        let mlp_xs = probes(24, 3);
+
+        let zoo = [make_tx(), make_mlp()];
+        let mut inproc = ModelRegistry::new(&zoo, unbounded()).unwrap();
+        let want_tx = inproc.forward_model_batch("tx", &tx_xs).unwrap();
+        let want_mlp =
+            inproc.forward_model_batch("mlp", &mlp_xs).unwrap();
+        drop(inproc);
+
+        // The `serve --models --shard-procs` deployment shape: merge
+        // the zoo into one scoped container, shard it across 2 real
+        // worker processes (a shard can hold layers of both tenants),
+        // and route fetches by model-scoped name over the wire.
+        let dir = std::env::temp_dir().join(format!(
+            "f2f-registry-ipc-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let merged = merge_zoo(&zoo).unwrap();
+        let bytes = write_container_v2(&merged.container);
+        let (map, shard_bytes) =
+            split_container(&bytes, 2, ShardAssignment::ByBytes)
+                .unwrap();
+        let binary = PathBuf::from(env!("CARGO_BIN_EXE_f2f"));
+        let mut specs = Vec::new();
+        for (i, b) in shard_bytes.iter().enumerate() {
+            let shard_path = dir.join(format!("shard{i}.f2f"));
+            std::fs::write(&shard_path, b).unwrap();
+            specs.push(WorkerSpec::new(
+                &binary,
+                shard_path,
+                dir.join(format!("shard{i}.sock")),
+            ));
+        }
+        let sup = Supervisor::spawn(specs).unwrap();
+        let mut reg =
+            ModelRegistry::over_ipc(&zoo, &map, sup.clients().to_vec())
+                .unwrap()
+                .with_supervisor(sup.clone());
+        assert_eq!(
+            reg.forward_model_batch("tx", &tx_xs).unwrap(),
+            want_tx,
+            "tx over worker processes diverged from in-process"
+        );
+        assert_eq!(
+            reg.forward_model_batch("mlp", &mlp_xs).unwrap(),
+            want_mlp,
+            "mlp over worker processes diverged from in-process"
+        );
+
+        // A worker killed mid-zoo is revived with its cross-tenant
+        // shard intact; both tenants keep serving bit-exact.
+        sup.kill_worker(0).unwrap();
+        assert_eq!(
+            reg.forward_model_batch("mlp", &mlp_xs).unwrap(),
+            want_mlp,
+            "mlp must survive a worker restart"
+        );
+        assert_eq!(
+            reg.forward_model_batch("tx", &tx_xs).unwrap(),
+            want_tx,
+            "tx must survive a worker restart"
+        );
+        assert!(sup.restarts() >= 1, "supervisor must have restarted");
+
+        sup.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
